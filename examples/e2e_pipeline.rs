@@ -1,0 +1,221 @@
+//! End-to-end driver — the full system on a real small workload, proving
+//! all layers compose (recorded in EXPERIMENTS.md §End-to-end):
+//!
+//! 1. generate a labeled pubmed-sim corpus,
+//! 2. stream it through the backpressured ingestion pipeline,
+//! 3. factorize concurrently under several configurations via the job
+//!    manager (native sparse backend),
+//! 4. cross-check the XLA/PJRT artifact backend on a fitted subproblem,
+//! 5. serve the best model over TCP and run batched queries, reporting
+//!    latency and throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline -- [scale]
+//! ```
+
+use esnmf::backend::{AlsBackend, XlaBackend};
+use esnmf::coordinator::ingest::{ingest_stream, IngestConfig, RawDoc};
+use esnmf::coordinator::{JobManager, JobSpec, MetricsRegistry, TopicModel, TopicServer};
+use esnmf::corpus::{self, Scale};
+use esnmf::eval::mean_topic_accuracy;
+use esnmf::eval::topics::format_topic_table;
+use esnmf::eval::topics::topic_term_table;
+use esnmf::nmf::{NmfOptions, SequentialOptions, SparsityMode};
+use esnmf::runtime::{self, ProgramKind, XlaExecutor};
+use esnmf::util::stats;
+use esnmf::util::timer::Timer;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let scale = std::env::args()
+        .nth(1)
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Small);
+    let metrics = MetricsRegistry::new();
+    let total = Timer::start();
+
+    // ---- 1+2. streaming ingestion with backpressure --------------------
+    let spec = corpus::pubmed_sim(scale);
+    let docs = corpus::generate(&spec, 42);
+    let n_raw = docs.len();
+    let ingest_timer = Timer::start();
+    let stream = docs.into_iter().map(|d| RawDoc {
+        text: d.tokens.join(" "),
+        label: Some(spec.topics[d.label as usize].name.clone()),
+    });
+    let (tdm, count) = ingest_stream(
+        stream,
+        &IngestConfig {
+            workers: 4,
+            capacity: 128,
+        },
+    );
+    let ingest_s = ingest_timer.elapsed_s();
+    metrics.counter("ingest.docs").add(count as u64);
+    println!(
+        "[ingest] {count}/{n_raw} docs → {} terms × {} docs ({:.2}% sparse) in {ingest_s:.2}s ({:.0} docs/s)",
+        tdm.n_terms(),
+        tdm.n_docs(),
+        tdm.a.sparsity() * 100.0,
+        count as f64 / ingest_s
+    );
+
+    // ---- 3. concurrent factorization jobs ------------------------------
+    let tdm = Arc::new(tdm);
+    let labels = tdm.doc_labels.clone().expect("labeled corpus");
+    let n_journals = tdm.label_names.len();
+    let mgr = JobManager::new(4);
+    let fact_timer = Timer::start();
+    let configs: Vec<(String, JobSpec)> = vec![
+        (
+            "dense ALS (Alg.1)".into(),
+            JobSpec::Als(NmfOptions::new(5).with_iters(50).with_seed(42).with_track_error(false)),
+        ),
+        (
+            "enforced both t=200 (Alg.2)".into(),
+            JobSpec::Als(
+                NmfOptions::new(5)
+                    .with_iters(50)
+                    .with_seed(42)
+                    .with_sparsity(SparsityMode::both(200, 2000.min(tdm.n_docs() * 5)))
+                    .with_track_error(false),
+            ),
+        ),
+        (
+            "column-wise 40/topic".into(),
+            JobSpec::Als(
+                NmfOptions::new(5)
+                    .with_iters(50)
+                    .with_seed(42)
+                    .with_sparsity(SparsityMode::PerColumn {
+                        t_u_col: Some(40),
+                        t_v_col: Some(400.min(tdm.n_docs())),
+                    })
+                    .with_track_error(false),
+            ),
+        ),
+        (
+            "sequential (Alg.3)".into(),
+            JobSpec::Sequential(
+                SequentialOptions::new(5, 10)
+                    .with_budgets(40, 400.min(tdm.n_docs()))
+                    .with_seed(42),
+            ),
+        ),
+    ];
+    let ids: Vec<_> = configs
+        .iter()
+        .map(|(_, spec)| mgr.submit(Arc::clone(&tdm), spec.clone()))
+        .collect();
+    println!("\n[factorize] {} concurrent jobs on 4 workers:", ids.len());
+    println!("config | iters | time | error | acc | nnz(U) | nnz(V) | peak nnz");
+    let mut best: Option<(f64, Arc<esnmf::nmf::NmfResult>)> = None;
+    for ((name, _), id) in configs.iter().zip(&ids) {
+        let r = mgr.wait_result(*id)?;
+        let acc = mean_topic_accuracy(&r.v, &labels, n_journals);
+        let err = esnmf::nmf::rel_error_sparse(&tdm.a, &r.u, &r.v, tdm.a.fro_norm_sq());
+        println!(
+            "{name} | {} | {:.2}s | {err:.4} | {acc:.4} | {} | {} | {}",
+            r.iterations,
+            r.elapsed_s,
+            r.u.nnz(),
+            r.v.nnz(),
+            r.memory.max_combined_nnz
+        );
+        metrics.counter("jobs.completed").inc();
+        if best.as_ref().map(|(a, _)| acc > *a).unwrap_or(true) {
+            best = Some((acc, r));
+        }
+    }
+    println!("[factorize] wall-clock for all jobs: {:.2}s", fact_timer.elapsed_s());
+
+    // ---- 4. XLA artifact backend cross-check ---------------------------
+    if runtime::artifacts_available() {
+        let dir = runtime::artifact_dir();
+        let manifest = esnmf::runtime::Manifest::load(&dir)?;
+        // fit a subcorpus to the largest compiled artifact
+        if let Some(prog) = manifest.best_fit(ProgramKind::AlsIter, 1, 1, 8) {
+            let sub_spec = corpus::CorpusSpec {
+                n_docs: (prog.m / 2).min(1200),
+                doc_len_mean: 60,
+                topic_tail: 60,
+                background_tail: 40,
+                ..corpus::pubmed_sim(Scale::Tiny)
+            };
+            let sub = corpus::generate_tdm(&sub_spec, 7);
+            if sub.n_terms() <= prog.n && sub.n_docs() <= prog.m {
+                let guard = XlaExecutor::spawn(dir)?;
+                let opts = NmfOptions::new(prog.k)
+                    .with_iters(10)
+                    .with_seed(7)
+                    .with_sparsity(SparsityMode::both(300, 900));
+                let xr = XlaBackend::new(guard.handle.clone(), prog.n, prog.m, prog.k)
+                    .factorize(&sub, &opts)?;
+                let nr = esnmf::nmf::factorize(&sub, &opts);
+                println!(
+                    "\n[xla] artifact {} on {} terms × {} docs: error xla {:.4} vs native {:.4} (Δ {:.1e}), {:.0} ms/iter",
+                    prog.name,
+                    sub.n_terms(),
+                    sub.n_docs(),
+                    xr.final_error(),
+                    nr.final_error(),
+                    (xr.final_error() - nr.final_error()).abs(),
+                    xr.elapsed_s * 1000.0 / xr.iterations as f64
+                );
+            } else {
+                println!("\n[xla] skipped: subcorpus larger than artifact shape");
+            }
+        }
+    } else {
+        println!("\n[xla] artifacts not built — skipping cross-check (run `make artifacts`)");
+    }
+
+    // ---- 5. serve and query --------------------------------------------
+    let (best_acc, best_result) = best.expect("at least one job");
+    let model = Arc::new(TopicModel::new(
+        best_result.u.clone(),
+        best_result.v.clone(),
+        tdm.terms.clone(),
+    ));
+    println!("\n[serve] best model (accuracy {best_acc:.4}) topics:");
+    print!("{}", format_topic_table(&topic_term_table(&model.u, &tdm.terms, 5), model.k()));
+    let server = TopicServer::start("127.0.0.1:0", Arc::clone(&model), metrics.clone())?;
+    let addr = server.addr();
+
+    let query_timer = Timer::start();
+    let mut latencies_ms = Vec::new();
+    let n_queries = 500;
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let queries = [
+        "CLASSIFY stroke seizure brain imaging",
+        "CLASSIFY students curriculum teaching",
+        "CLASSIFY allele genotype marker",
+        "TOPTERMS 0 5",
+        "TOPICS",
+    ];
+    for i in 0..n_queries {
+        let q = queries[i % queries.len()];
+        let t = Timer::start();
+        writeln!(writer, "{q}")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        anyhow::ensure!(line.starts_with("OK"), "query failed: {line}");
+        latencies_ms.push(t.elapsed_s() * 1e3);
+    }
+    writeln!(writer, "QUIT")?;
+    let qps = n_queries as f64 / query_timer.elapsed_s();
+    println!(
+        "\n[serve] {n_queries} queries: {qps:.0} qps, latency p50 {:.3} ms p99 {:.3} ms",
+        stats::median(&latencies_ms),
+        stats::quantile(&latencies_ms, 0.99)
+    );
+    println!("[metrics] {}", metrics.format());
+    server.stop();
+    println!("\n[e2e] total wall-clock {:.2}s — all layers composed ✓", total.elapsed_s());
+    Ok(())
+}

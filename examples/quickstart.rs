@@ -1,0 +1,43 @@
+//! Quickstart: build a small corpus, factorize it with enforced-sparsity
+//! ALS, and print the topics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use esnmf::corpus::{generate_tdm, reuters_sim, Scale};
+use esnmf::eval::topics::{format_topic_table, topic_term_table};
+use esnmf::nmf::{factorize, NmfOptions, SparsityMode};
+
+fn main() {
+    // 1. A corpus: ~100 synthetic newswire documents (swap in
+    //    `corpus::loader::load_dir` for your own directory of .txt files).
+    let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 42);
+    println!(
+        "corpus: {} terms × {} docs, {:.2}% sparse",
+        tdm.n_terms(),
+        tdm.n_docs(),
+        tdm.a.sparsity() * 100.0
+    );
+
+    // 2. Factorize: 5 topics, keep U to 55 nonzeros (Algorithm 2).
+    let opts = NmfOptions::new(5)
+        .with_iters(50)
+        .with_seed(42)
+        .with_sparsity(SparsityMode::u_only(55));
+    let result = factorize(&tdm, &opts);
+
+    // 3. Inspect.
+    println!(
+        "finished in {:.3}s; residual {:.2e}, error {:.4}, nnz(U) = {}",
+        result.elapsed_s,
+        result.final_residual(),
+        result.final_error(),
+        result.u.nnz()
+    );
+    println!("\nTop terms per topic:");
+    print!(
+        "{}",
+        format_topic_table(&topic_term_table(&result.u, &tdm.terms, 5), 5)
+    );
+}

@@ -1,0 +1,84 @@
+//! XLA/PJRT backend demo: run the same enforced-sparsity ALS through the
+//! AOT-compiled JAX/Pallas artifact and cross-check against the native
+//! sparse engine.
+//!
+//! Requires `make artifacts` to have produced `artifacts/manifest.json`.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example xla_offload
+//! ```
+
+use esnmf::backend::{AlsBackend, NativeBackend, XlaBackend};
+use esnmf::corpus::{generate_tdm, CorpusSpec, TopicSpec};
+use esnmf::corpus::words;
+use esnmf::nmf::{NmfOptions, SparsityMode};
+use esnmf::runtime::{self, ProgramKind, XlaExecutor};
+
+fn main() -> anyhow::Result<()> {
+    if !runtime::artifacts_available() {
+        eprintln!("artifacts/manifest.json not found — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let dir = runtime::artifact_dir();
+    let manifest = esnmf::runtime::Manifest::load(&dir)?;
+
+    // a corpus sized to fit the (256 × 512, k=5) compiled artifact
+    let spec = CorpusSpec {
+        name: "xla-demo".into(),
+        topics: vec![
+            TopicSpec { name: "coffee".into(), seeds: words::COFFEE.to_vec() },
+            TopicSpec { name: "science".into(), seeds: words::SCIENCE.to_vec() },
+            TopicSpec { name: "music".into(), seeds: words::MUSIC.to_vec() },
+            TopicSpec { name: "sport".into(), seeds: words::SPORT.to_vec() },
+            TopicSpec { name: "religion".into(), seeds: words::RELIGION.to_vec() },
+        ],
+        n_docs: 400,
+        doc_len_mean: 40,
+        topic_tail: 8,
+        background_tail: 6,
+        background_frac: 0.25,
+        mixture: 0.1,
+        zipf_s: 1.05,
+    };
+    let tdm = generate_tdm(&spec, 7);
+    let k = 5;
+    let prog = manifest
+        .best_fit(ProgramKind::AlsIter, tdm.n_terms(), tdm.n_docs(), k)
+        .ok_or_else(|| anyhow::anyhow!(
+            "no artifact fits {} terms × {} docs k={k}",
+            tdm.n_terms(), tdm.n_docs()
+        ))?;
+    println!(
+        "corpus {} terms × {} docs → artifact {} ({}, {}, {})",
+        tdm.n_terms(), tdm.n_docs(), prog.name, prog.n, prog.m, prog.k
+    );
+
+    let guard = XlaExecutor::spawn(dir)?;
+    println!("PJRT platform: {}", guard.handle.platform()?);
+
+    let opts = NmfOptions::new(k)
+        .with_iters(15)
+        .with_seed(11)
+        .with_sparsity(SparsityMode::both(60, 120));
+
+    let xla_result = XlaBackend::new(guard.handle.clone(), prog.n, prog.m, prog.k)
+        .factorize(&tdm, &opts)?;
+    let native_result = NativeBackend::new().factorize(&tdm, &opts)?;
+
+    println!("\nbackend | iters | time | final error | nnz(U) | nnz(V)");
+    for (name, r) in [("xla", &xla_result), ("native", &native_result)] {
+        println!(
+            "{name:>7} | {:>5} | {:>6.3}s | {:.5} | {:>6} | {:>6}",
+            r.iterations,
+            r.elapsed_s,
+            r.final_error(),
+            r.u.nnz(),
+            r.v.nnz()
+        );
+    }
+    let diff = (xla_result.final_error() - native_result.final_error()).abs();
+    println!("\n|error(xla) − error(native)| = {diff:.2e}");
+    anyhow::ensure!(diff < 1e-2, "backends diverged");
+    println!("backends agree ✓  (python was never on this path)");
+    Ok(())
+}

@@ -1,0 +1,142 @@
+"""AOT lowering: JAX/Pallas model -> HLO *text* artifacts + manifest.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``); the rust binary is then fully
+self-contained.  Python is never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (n, m, k) dense-block configurations compiled by default.  n = terms,
+# m = documents, k = topics.  Keep in sync with rust/src/runtime tests and
+# examples/xla_offload.rs.
+DEFAULT_CONFIGS = [
+    (64, 96, 4),  # tiny: integration tests
+    (256, 512, 5),  # small: quickstart / unit benches
+    (1024, 2048, 8),  # e2e pipeline block size
+]
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_als_iter(n: int, m: int, k: int) -> str:
+    a = jax.ShapeDtypeStruct((n, m), jnp.float32)
+    u = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    return to_hlo_text(jax.jit(model.aot_als_iter).lower(a, u, t, t))
+
+
+def lower_rel_error(n: int, m: int, k: int) -> str:
+    a = jax.ShapeDtypeStruct((n, m), jnp.float32)
+    u = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    v = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    return to_hlo_text(jax.jit(model.aot_rel_error).lower(a, u, v))
+
+
+def program_entries(n: int, m: int, k: int):
+    """Manifest records for one (n, m, k) config."""
+    shape = lambda dims: list(dims)
+    return [
+        {
+            "name": f"als_iter_{n}x{m}x{k}",
+            "kind": "als_iter",
+            "n": n,
+            "m": m,
+            "k": k,
+            "file": f"als_iter_{n}x{m}x{k}.hlo.txt",
+            "inputs": [
+                ["a", shape((n, m)), "f32"],
+                ["u", shape((n, k)), "f32"],
+                ["t_u", [], "i32"],
+                ["t_v", [], "i32"],
+            ],
+            "outputs": [
+                ["u_new", shape((n, k)), "f32"],
+                ["v", shape((m, k)), "f32"],
+            ],
+        },
+        {
+            "name": f"rel_error_{n}x{m}x{k}",
+            "kind": "rel_error",
+            "n": n,
+            "m": m,
+            "k": k,
+            "file": f"rel_error_{n}x{m}x{k}.hlo.txt",
+            "inputs": [
+                ["a", shape((n, m)), "f32"],
+                ["u", shape((n, k)), "f32"],
+                ["v", shape((m, k)), "f32"],
+            ],
+            "outputs": [["err", [], "f32"]],
+        },
+    ]
+
+
+def parse_configs(spec: str):
+    configs = []
+    for part in spec.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        n, m, k = (int(x) for x in part.split(","))
+        configs.append((n, m, k))
+    return configs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default=None,
+        help='semicolon-separated "n,m,k" triples (default: built-in list)',
+    )
+    args = ap.parse_args()
+
+    configs = parse_configs(args.configs) if args.configs else DEFAULT_CONFIGS
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    programs = []
+    for n, m, k in configs:
+        for entry, text_fn in zip(
+            program_entries(n, m, k), (lower_als_iter, lower_rel_error)
+        ):
+            path = os.path.join(args.out_dir, entry["file"])
+            text = text_fn(n, m, k)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {entry['name']}: {len(text)} chars -> {path}")
+            programs.append(entry)
+
+    manifest = {"version": MANIFEST_VERSION, "programs": programs}
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(programs)} programs -> {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

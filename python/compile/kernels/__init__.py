@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for ES-NMF.
+
+All kernels are authored for the TPU mental model (VMEM tiles feeding the
+MXU) but are lowered with ``interpret=True`` so the resulting HLO runs on
+any PJRT backend, including the rust CPU client. See DESIGN.md
+§Hardware-Adaptation for the GPU/MATLAB→TPU mapping.
+"""
+
+from .atb import matmul_atb
+from .gram import gram
+from .project import project_threshold
+
+__all__ = ["matmul_atb", "gram", "project_threshold"]

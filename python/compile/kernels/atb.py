@@ -1,0 +1,66 @@
+"""Tiled ``B = A^T U`` Pallas kernel — the ALS hot spot.
+
+ALS spends nearly all of its FLOPs in the two factor-update products
+``A^T U`` (n,m)x(n,k) -> (m,k) and ``A V`` (n,m)x(m,k) -> (n,k); the second
+is this same kernel applied to ``A^T``.  The grid walks ``(m/bm)`` output
+row-tiles (parallel) by ``(n/bn)`` reduction steps (arbitrary): each step
+loads one ``(bn, bm)`` tile of ``A`` and the matching ``(bn, k)`` slab of
+``U`` into VMEM and accumulates a ``(bm, k)`` output tile — the BlockSpec
+schedule that replaces the paper's "keep it sparse so it fits in RAM" on a
+scratchpad machine.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import grid_steps, pick_block
+
+
+def _atb_kernel(a_ref, u_ref, o_ref):
+    """One grid step: o[i] += a[j,i]^T @ u[j] (j = reduction index)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]  # (bn, bm)
+    u = u_ref[...]  # (bn, k)
+    # MXU-shaped accumulate in f32 regardless of input dtype.
+    o_ref[...] += jax.lax.dot_general(
+        a,
+        u,
+        dimension_numbers=(((0,), (0,)), ((), ())),  # contract over bn
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m"))
+def matmul_atb(a, u, *, block_n: int | None = None, block_m: int | None = None):
+    """Compute ``a.T @ u`` with a tiled Pallas kernel (interpret mode).
+
+    a: (n, m), u: (n, k) -> (m, k) f32.
+    """
+    n, m = a.shape
+    n2, k = u.shape
+    if n != n2:
+        raise ValueError(f"contraction mismatch: a {a.shape} vs u {u.shape}")
+    bn = block_n or pick_block(n)
+    bm = block_m or pick_block(m)
+    grid = (grid_steps(m, bm), grid_steps(n, bn))
+    return pl.pallas_call(
+        _atb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j: (j, i)),  # tile of A
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),  # slab of U
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,  # CPU-PJRT execution; Mosaic is TPU-only
+    )(a, u)

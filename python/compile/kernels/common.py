@@ -1,0 +1,45 @@
+"""Shared helpers for the Pallas kernels: block-size selection and padding.
+
+The ALS hot loop is dominated by two products, ``B = A^T U`` and
+``S = U^T U``.  On a real TPU each grid step should hold one ``(bn, bm)``
+tile of ``A`` plus the matching ``(bn, k)`` slab of ``U`` in VMEM and feed
+``(bm, k)`` MXU accumulations; the helpers here pick tile sizes that are
+MXU-friendly (multiples of 8/128 where the array allows it) while exactly
+dividing the operand so BlockSpecs never need masking.
+"""
+
+from __future__ import annotations
+
+# Upper bound on a tile edge. 256 keeps the fp32 VMEM footprint of one
+# grid step of matmul_atb under ~1 MB for k<=64 (see DESIGN.md §Perf):
+#   A tile 256*256*4 = 256 KiB, U slab 256*64*4 = 64 KiB, out 256*64*4.
+MAX_BLOCK = 256
+
+# Candidate tile edges, MXU/VPU friendly first.
+_CANDIDATES = (256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def pick_block(dim: int, cap: int = MAX_BLOCK) -> int:
+    """Largest candidate tile edge that divides ``dim`` and is <= cap.
+
+    Falls back to ``dim`` itself when the dimension is small.
+    """
+    if dim <= 0:
+        raise ValueError(f"dimension must be positive, got {dim}")
+    if dim <= cap:
+        return dim
+    for c in _CANDIDATES:
+        if c <= cap and dim % c == 0:
+            return c
+    return 1  # always divides
+
+
+def grid_steps(dim: int, block: int) -> int:
+    if dim % block != 0:
+        raise ValueError(f"block {block} does not divide dim {dim}")
+    return dim // block
+
+
+def vmem_bytes_atb(bn: int, bm: int, k: int, itemsize: int = 4) -> int:
+    """Estimated VMEM working set of one matmul_atb grid step."""
+    return itemsize * (bn * bm + bn * k + bm * k)

@@ -1,0 +1,48 @@
+"""Tiled Gram matrix ``S = U^T U`` Pallas kernel.
+
+The Gram matrix of a factor is tiny ((k,k), k <= 64) but its reduction runs
+over the long axis (n = vocabulary or corpus size), so it is tiled the same
+way as :mod:`atb`: a 1-D reduction grid where each step holds one ``(bn, k)``
+slab of ``U`` in VMEM and accumulates the full ``(k, k)`` output.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import grid_steps, pick_block
+
+
+def _gram_kernel(u_ref, o_ref):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    u = u_ref[...]  # (bn, k)
+    o_ref[...] += jax.lax.dot_general(
+        u,
+        u,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def gram(u, *, block_n: int | None = None):
+    """Compute ``u.T @ u`` -> (k, k) f32 with a tiled Pallas kernel."""
+    n, k = u.shape
+    bn = block_n or pick_block(n)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(grid_steps(n, bn),),
+        in_specs=[pl.BlockSpec((bn, k), lambda j: (j, 0))],
+        out_specs=pl.BlockSpec((k, k), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        interpret=True,
+    )(u)

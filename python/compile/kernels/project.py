@@ -1,0 +1,51 @@
+"""Fused project+threshold Pallas kernel — enforced sparsity, dense form.
+
+Algorithm 2's inner step is "clamp negatives to zero, then zero everything
+strictly below the magnitude of the t-th largest entry".  On a dense tile
+machine that is a single fused elementwise pass ``max(x, 0) * (x >= tau)``
+with the threshold ``tau`` precomputed at L2 (sort + dynamic slice).  The
+kernel runs a 1-D grid over row tiles so arbitrarily tall factors stream
+through VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import grid_steps, pick_block
+
+
+def _project_kernel(x_ref, tau_ref, o_ref):
+    x = x_ref[...]
+    tau = tau_ref[0]
+    pos = jnp.maximum(x, 0.0)
+    # Keep entries >= tau (paper keeps ties of the t-th largest); entries
+    # that were negative are already zero and tau > 0 removes them too.
+    o_ref[...] = jnp.where(pos >= tau, pos, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def project_threshold(x, tau, *, block_r: int | None = None):
+    """``max(x,0)`` with entries strictly below ``tau`` zeroed.
+
+    x: (r, c) f32, tau: () or (1,) f32 scalar threshold (tau <= 0 keeps all
+    positive entries). Returns (r, c) f32.
+    """
+    r, c = x.shape
+    br = block_r or pick_block(r)
+    tau_arr = jnp.reshape(jnp.asarray(tau, jnp.float32), (1,))
+    return pl.pallas_call(
+        _project_kernel,
+        grid=(grid_steps(r, br),),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(x, tau_arr)

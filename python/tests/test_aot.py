@@ -1,0 +1,58 @@
+"""AOT pipeline tests: HLO text emission + manifest round-trip."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from compile import aot
+
+
+def test_parse_configs():
+    assert aot.parse_configs("8,12,2; 16,16,3;") == [(8, 12, 2), (16, 16, 3)]
+
+
+def test_program_entries_shapes():
+    entries = aot.program_entries(8, 12, 2)
+    assert [e["kind"] for e in entries] == ["als_iter", "rel_error"]
+    it = entries[0]
+    assert it["inputs"][0][1] == [8, 12]
+    assert it["outputs"] == [["u_new", [8, 2], "f32"], ["v", [12, 2], "f32"]]
+
+
+def test_lower_als_iter_emits_entry_hlo():
+    text = aot.lower_als_iter(8, 12, 2)
+    assert "ENTRY" in text and "HloModule" in text
+    # tuple return convention for the rust loader (to_tuple on our side)
+    assert "f32[8,2]" in text and "f32[12,2]" in text
+
+
+def test_lower_rel_error_emits_scalar():
+    text = aot.lower_rel_error(8, 12, 2)
+    assert "ENTRY" in text
+    assert "f32[]" in text
+
+
+@pytest.mark.slow
+def test_cli_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--configs",
+            "8,12,2",
+        ],
+        cwd=Path(__file__).resolve().parents[1],
+        check=True,
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    assert len(manifest["programs"]) == 2
+    for prog in manifest["programs"]:
+        assert (out / prog["file"]).exists()

@@ -1,0 +1,179 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and the block-size knobs) so every BlockSpec
+branch of the kernels is exercised, not just the happy divisible path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, matmul_atb, project_threshold
+from compile.kernels.common import pick_block, grid_steps, vmem_bytes_atb
+from compile.kernels.ref import (
+    ref_atb,
+    ref_enforce_top_t,
+    ref_gram,
+    ref_project_threshold,
+    ref_topt_tau,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+DIMS = st.sampled_from([1, 2, 3, 4, 7, 8, 16, 17, 32, 64])
+KS = st.sampled_from([1, 2, 3, 5, 8, 16])
+
+
+def rand(rng, *shape, negatives=True):
+    x = rng.standard_normal(shape).astype(np.float32)
+    if not negatives:
+        x = np.abs(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# matmul_atb
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=DIMS, m=DIMS, k=KS, seed=st.integers(0, 2**31 - 1))
+def test_atb_matches_ref(n, m, k, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, n, m)
+    u = rand(rng, n, k)
+    got = matmul_atb(a, u)
+    want = ref_atb(a, u)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bn,bm", [(1, 1), (2, 4), (4, 2), (8, 8)])
+def test_atb_explicit_blocks(bn, bm):
+    rng = np.random.default_rng(0)
+    a = rand(rng, 16, 8)
+    u = rand(rng, 16, 3)
+    got = matmul_atb(a, u, block_n=bn, block_m=bm)
+    np.testing.assert_allclose(got, ref_atb(a, u), rtol=1e-5, atol=1e-5)
+
+
+def test_atb_rejects_mismatched_contraction():
+    a = jnp.zeros((4, 4))
+    u = jnp.zeros((5, 2))
+    with pytest.raises(ValueError):
+        matmul_atb(a, u)
+
+
+def test_atb_accumulates_in_f32_from_bf16():
+    rng = np.random.default_rng(1)
+    a = rand(rng, 32, 16).astype(jnp.bfloat16)
+    u = rand(rng, 32, 4).astype(jnp.bfloat16)
+    got = matmul_atb(a, u)
+    assert got.dtype == jnp.float32
+    want = np.asarray(a, np.float32).T @ np.asarray(u, np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=DIMS, k=KS, seed=st.integers(0, 2**31 - 1))
+def test_gram_matches_ref(n, k, seed):
+    rng = np.random.default_rng(seed)
+    u = rand(rng, n, k)
+    got = gram(u)
+    np.testing.assert_allclose(got, ref_gram(u), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=DIMS, k=KS, seed=st.integers(0, 2**31 - 1))
+def test_gram_is_symmetric_psd(n, k, seed):
+    rng = np.random.default_rng(seed)
+    g = np.asarray(gram(rand(rng, n, k)))
+    np.testing.assert_allclose(g, g.T, atol=1e-6)
+    eig = np.linalg.eigvalsh(g)
+    assert eig.min() >= -1e-4 * max(1.0, abs(eig).max())
+
+
+# ---------------------------------------------------------------------------
+# project_threshold
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    r=DIMS,
+    c=KS,
+    tau=st.floats(-1.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_project_matches_ref(r, c, tau, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, r, c)
+    got = project_threshold(x, tau)
+    want = ref_project_threshold(x, tau)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_project_clamps_negatives():
+    x = jnp.array([[-1.0, 0.5], [2.0, -3.0]])
+    out = np.asarray(project_threshold(x, 0.0))
+    assert (out >= 0).all()
+    np.testing.assert_allclose(out, [[0.0, 0.5], [2.0, 0.0]])
+
+
+# ---------------------------------------------------------------------------
+# top-t enforcement (composite, sort + kernel)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(r=DIMS, c=KS, t=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_enforce_top_t_nnz_bound(r, c, t, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, r, c)
+    out = np.asarray(ref_enforce_top_t(x, t))
+    # continuous random data: ties have measure zero -> exactly min(t, #pos)
+    pos = int((x > 0).sum())
+    assert int((out > 0).sum()) == min(t, pos)
+    # kept set dominates dropped set
+    kept = out[out > 0]
+    if kept.size and kept.size < pos:
+        dropped = np.maximum(x, 0)[(np.maximum(x, 0) > 0) & (out == 0)]
+        assert kept.min() >= dropped.max()
+
+
+def test_topt_tau_handles_all_negative():
+    x = -np.abs(np.random.default_rng(2).standard_normal((4, 3))).astype(np.float32)
+    tau = float(ref_topt_tau(x, 5))
+    out = np.asarray(ref_project_threshold(x, tau))
+    assert (out == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# block-size helpers
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(dim=st.integers(1, 10_000))
+def test_pick_block_divides(dim):
+    b = pick_block(dim)
+    assert 1 <= b <= max(dim, 1)
+    assert dim % b == 0
+    assert grid_steps(dim, b) * b == dim
+
+
+def test_pick_block_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        pick_block(0)
+
+
+def test_vmem_estimate_monotone():
+    assert vmem_bytes_atb(256, 256, 8) < vmem_bytes_atb(256, 256, 64)
+    # the DESIGN.md §Perf budget: default tiles stay under 1 MiB at k=64
+    assert vmem_bytes_atb(256, 256, 64) * 1.0 < (1 << 20) * 1.5

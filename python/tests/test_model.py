@@ -1,0 +1,133 @@
+"""L2 model tests: ALS iteration semantics, solve correctness, error math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import ref_als_iteration, ref_rel_error
+
+jax.config.update("jax_enable_x64", False)
+
+
+def low_rank_data(rng, n, m, k, noise=0.0):
+    u = np.abs(rng.standard_normal((n, k))).astype(np.float32)
+    v = np.abs(rng.standard_normal((m, k))).astype(np.float32)
+    a = u @ v.T
+    if noise:
+        a += noise * np.abs(rng.standard_normal((n, m))).astype(np.float32)
+    return a.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# gauss_inverse
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+def test_gauss_inverse_matches_numpy(k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((k + 3, k)).astype(np.float32)
+    s = (x.T @ x).astype(np.float32)  # SPD with overwhelming probability
+    inv = np.asarray(model.gauss_inverse(jnp.asarray(s)))
+    # the ridge perturbs S slightly; compare against the ridged inverse
+    eps = model.RIDGE_SCALE * np.trace(s) / k + 1e-10
+    want = np.linalg.inv(s + eps * np.eye(k, dtype=np.float32))
+    np.testing.assert_allclose(inv, want, rtol=5e-3, atol=5e-3)
+
+
+def test_gauss_inverse_survives_rank_deficiency():
+    s = np.zeros((4, 4), np.float32)
+    s[0, 0] = 1.0  # rank 1: three zero topics
+    inv = np.asarray(model.gauss_inverse(jnp.asarray(s)))
+    assert np.isfinite(inv).all()
+
+
+# ---------------------------------------------------------------------------
+# als_iteration
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_als_iteration_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    a = low_rank_data(rng, 16, 24, 3, noise=0.1)
+    u0 = np.abs(rng.standard_normal((16, 3))).astype(np.float32)
+    got_u, got_v = model.als_iteration(jnp.asarray(a), jnp.asarray(u0), 20, 30)
+    want_u, want_v = ref_als_iteration(jnp.asarray(a), jnp.asarray(u0), 20, 30)
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_u, want_u, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t_u=st.integers(1, 48),
+    t_v=st.integers(1, 72),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_als_iteration_respects_nnz_caps(t_u, t_v, seed):
+    rng = np.random.default_rng(seed)
+    a = low_rank_data(rng, 16, 24, 3, noise=0.3)
+    u0 = np.abs(rng.standard_normal((16, 3))).astype(np.float32)
+    u1, v1 = model.als_iteration(jnp.asarray(a), jnp.asarray(u0), t_u, t_v)
+    u1, v1 = np.asarray(u1), np.asarray(v1)
+    assert (u1 >= 0).all() and (v1 >= 0).all()
+    assert int((u1 > 0).sum()) <= t_u
+    assert int((v1 > 0).sum()) <= t_v
+
+
+def test_disabled_enforcement_is_projected_als():
+    rng = np.random.default_rng(7)
+    a = low_rank_data(rng, 16, 24, 3, noise=0.3)
+    u0 = np.abs(rng.standard_normal((16, 3))).astype(np.float32)
+    # t <= 0 => plain projected ALS: more nonzeros than any small cap
+    u1, v1 = model.als_iteration(jnp.asarray(a), jnp.asarray(u0), 0, 0)
+    assert int((np.asarray(v1) > 0).sum()) > 24
+
+
+def test_error_decreases_over_iterations():
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(low_rank_data(rng, 32, 48, 4, noise=0.05))
+    u = jnp.asarray(np.abs(rng.standard_normal((32, 4))).astype(np.float32))
+    v = None
+    errs = []
+    for _ in range(6):
+        u, v = model.als_iteration(a, u, 0, 0)
+        errs.append(float(model.rel_error(a, u, v)))
+    assert errs[-1] <= errs[0] + 1e-6
+    assert errs[-1] < 0.25  # rank-4 data, rank-4 factorization: near-exact
+
+
+# ---------------------------------------------------------------------------
+# error / residual
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rel_error_matches_dense_formula(seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(np.abs(rng.standard_normal((12, 20))).astype(np.float32))
+    u = jnp.asarray(np.abs(rng.standard_normal((12, 3))).astype(np.float32))
+    v = jnp.asarray(np.abs(rng.standard_normal((20, 3))).astype(np.float32))
+    got = float(model.rel_error(a, u, v))
+    want = float(ref_rel_error(a, u, v))
+    assert abs(got - want) < 1e-4
+
+
+def test_rel_error_zero_for_exact_factorization():
+    rng = np.random.default_rng(11)
+    u = jnp.asarray(np.abs(rng.standard_normal((10, 3))).astype(np.float32))
+    v = jnp.asarray(np.abs(rng.standard_normal((14, 3))).astype(np.float32))
+    a = jnp.matmul(u, v.T)
+    assert float(model.rel_error(a, u, v)) < 1e-3
+
+
+def test_rel_residual():
+    u1 = jnp.ones((4, 2))
+    assert float(model.rel_residual(u1, u1)) == 0.0
+    u0 = jnp.zeros((4, 2))
+    assert abs(float(model.rel_residual(u1, u0)) - 1.0) < 1e-6

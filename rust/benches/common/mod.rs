@@ -1,0 +1,37 @@
+#![allow(dead_code)] // each bench target uses a subset of these helpers
+
+//! Shared bench-target plumbing.
+//!
+//! Pattern for every paper bench: (1) regenerate the figure's rows once
+//! via the experiment harness, (2) time the figure's core solver
+//! configuration directly (no printing inside the timed region).
+
+use esnmf::corpus::Scale;
+use esnmf::experiments::{self, ExpConfig};
+use esnmf::text::TermDocMatrix;
+
+/// Scale for bench runs: `ESNMF_BENCH_SCALE=tiny|small|paper` (default
+/// tiny so `cargo bench` completes quickly; use small/paper for the
+/// numbers recorded in EXPERIMENTS.md).
+pub fn bench_config() -> ExpConfig {
+    let scale = std::env::var("ESNMF_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Tiny);
+    ExpConfig {
+        scale,
+        seed: 42,
+        fast: esnmf::util::bench::fast_mode(),
+    }
+}
+
+/// Print the paper rows for `id` once.
+pub fn print_paper_rows(id: &str) -> ExpConfig {
+    let cfg = bench_config();
+    experiments::run(id, &cfg).expect("experiment failed");
+    cfg
+}
+
+pub fn corpus(name: &str, cfg: &ExpConfig) -> TermDocMatrix {
+    experiments::corpus_tdm(name, cfg).expect("corpus preset")
+}

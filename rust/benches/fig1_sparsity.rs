@@ -1,0 +1,22 @@
+//! Bench for Fig. 1: the dense-ALS run whose factor sparsity the figure
+//! tabulates (motivation table).
+
+mod common;
+
+use esnmf::nmf::{factorize, NmfOptions};
+use esnmf::util::bench::BenchSuite;
+
+fn main() {
+    let cfg = common::print_paper_rows("fig1");
+    let mut suite = BenchSuite::new("fig1: dense projected ALS (motivation)");
+    for name in ["reuters", "wikipedia"] {
+        let tdm = common::corpus(name, &cfg);
+        let opts = NmfOptions::new(5)
+            .with_iters(cfg.iters(30))
+            .with_seed(cfg.seed)
+            .with_track_error(false);
+        suite.bench(&format!("dense_als({name}-sim, k=5)"), || {
+            factorize(&tdm, &opts)
+        });
+    }
+}

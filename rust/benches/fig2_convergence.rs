@@ -1,0 +1,20 @@
+//! Bench for Fig. 2: sparse-U(55) vs dense projected ALS on reuters-sim.
+
+mod common;
+
+use esnmf::nmf::{factorize, NmfOptions, SparsityMode};
+use esnmf::util::bench::BenchSuite;
+
+fn main() {
+    let cfg = common::print_paper_rows("fig2");
+    let tdm = common::corpus("reuters", &cfg);
+    let iters = cfg.iters(75);
+    let mut suite = BenchSuite::new("fig2: convergence runs");
+    let sparse = NmfOptions::new(5)
+        .with_iters(iters)
+        .with_seed(cfg.seed)
+        .with_sparsity(SparsityMode::u_only(55));
+    suite.bench("als(sparse U=55)", || factorize(&tdm, &sparse));
+    let dense = NmfOptions::new(5).with_iters(iters).with_seed(cfg.seed);
+    suite.bench("als(dense)", || factorize(&tdm, &dense));
+}

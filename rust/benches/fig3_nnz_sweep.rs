@@ -1,0 +1,29 @@
+//! Bench for Fig. 3: enforced-sparsity ALS across the NNZ sweep (time per
+//! enforcement variant at a representative budget).
+
+mod common;
+
+use esnmf::nmf::{factorize, NmfOptions, SparsityMode};
+use esnmf::util::bench::BenchSuite;
+
+fn main() {
+    let cfg = common::print_paper_rows("fig3");
+    let tdm = common::corpus("reuters", &cfg);
+    let iters = cfg.iters(75);
+    let t = 200;
+    let mut suite = BenchSuite::new("fig3: enforcement variants");
+    for (name, mode) in [
+        ("U only", SparsityMode::u_only(t)),
+        ("V only", SparsityMode::v_only(t)),
+        ("both", SparsityMode::both(t, t)),
+    ] {
+        let opts = NmfOptions::new(5)
+            .with_iters(iters)
+            .with_seed(cfg.seed)
+            .with_sparsity(mode)
+            .with_track_error(false);
+        suite.bench(&format!("als(enforce {name}, t={t})"), || {
+            factorize(&tdm, &opts)
+        });
+    }
+}

@@ -1,0 +1,27 @@
+//! Bench for Fig. 4: accuracy-vs-NNZ runs on pubmed-sim (time of one
+//! sweep point per enforcement variant, plus the accuracy evaluation).
+
+mod common;
+
+use esnmf::eval::mean_topic_accuracy;
+use esnmf::nmf::{factorize, NmfOptions, SparsityMode};
+use esnmf::util::bench::BenchSuite;
+
+fn main() {
+    let cfg = common::print_paper_rows("fig4");
+    let tdm = common::corpus("pubmed", &cfg);
+    let labels = tdm.doc_labels.clone().unwrap();
+    let iters = cfg.iters(50);
+    let t = 100;
+    let mut suite = BenchSuite::new("fig4: accuracy sweep point");
+    let opts = NmfOptions::new(5)
+        .with_iters(iters)
+        .with_seed(cfg.seed)
+        .with_sparsity(SparsityMode::both(t, t))
+        .with_track_error(false);
+    let result = factorize(&tdm, &opts);
+    suite.bench("als(both, t=100)", || factorize(&tdm, &opts));
+    suite.bench("eq3.3 accuracy eval", || {
+        mean_topic_accuracy(&result.v, &labels, tdm.label_names.len())
+    });
+}

@@ -1,0 +1,34 @@
+//! Bench for Fig. 5: enforce-during (Algorithm 2) vs enforce-after
+//! (Algorithm 1 + one post-hoc top-t).
+
+mod common;
+
+use esnmf::nmf::{factorize, NmfOptions, SparsityMode};
+use esnmf::sparse::{topk, TieMode};
+use esnmf::util::bench::BenchSuite;
+
+fn main() {
+    let cfg = common::print_paper_rows("fig5");
+    let tdm = common::corpus("pubmed", &cfg);
+    let iters = cfg.iters(50);
+    let t = 100;
+    let mut suite = BenchSuite::new("fig5: during vs after");
+    let during = NmfOptions::new(5)
+        .with_iters(iters)
+        .with_seed(cfg.seed)
+        .with_sparsity(SparsityMode::both(t, t))
+        .with_track_error(false);
+    suite.bench("enforce during ALS", || factorize(&tdm, &during));
+    let dense = NmfOptions::new(5)
+        .with_iters(iters)
+        .with_seed(cfg.seed)
+        .with_track_error(false);
+    suite.bench("dense ALS + enforce after", || {
+        let r = factorize(&tdm, &dense);
+        let mut u = r.u;
+        let mut v = r.v;
+        topk::enforce_top_t_csr(&mut u, t, TieMode::KeepTies);
+        topk::enforce_top_t_csr(&mut v, t, TieMode::KeepTies);
+        (u, v)
+    });
+}

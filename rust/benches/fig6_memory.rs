@@ -1,0 +1,32 @@
+//! Bench for Fig. 6: max-stored-NNZ runs under sparse and dense initial
+//! guesses (memory is the figure's metric; time shown for context).
+
+mod common;
+
+use esnmf::nmf::{factorize, NmfOptions, SparsityMode};
+use esnmf::util::bench::BenchSuite;
+
+fn main() {
+    let cfg = common::print_paper_rows("fig6");
+    let tdm = common::corpus("pubmed", &cfg);
+    let iters = cfg.iters(30);
+    let t = 100;
+    let mut suite = BenchSuite::new("fig6: memory-tracked runs");
+    let sparse_init = NmfOptions::new(5)
+        .with_iters(iters)
+        .with_seed(cfg.seed)
+        .with_sparsity(SparsityMode::both(t, t))
+        .with_init_nnz(tdm.n_terms() / 10)
+        .with_track_error(false);
+    suite.bench("als(both t=100, sparse init)", || {
+        factorize(&tdm, &sparse_init)
+    });
+    let dense_init = NmfOptions::new(5)
+        .with_iters(iters)
+        .with_seed(cfg.seed)
+        .with_sparsity(SparsityMode::both(t, t))
+        .with_track_error(false);
+    suite.bench("als(both t=100, dense init)", || {
+        factorize(&tdm, &dense_init)
+    });
+}

@@ -1,0 +1,29 @@
+//! Bench for Fig. 8: sequential and column-wise accuracy runs on
+//! pubmed-sim.
+
+mod common;
+
+use esnmf::nmf::{
+    factorize, factorize_sequential, NmfOptions, SequentialOptions, SparsityMode,
+};
+use esnmf::util::bench::BenchSuite;
+
+fn main() {
+    let cfg = common::print_paper_rows("fig8");
+    let tdm = common::corpus("pubmed", &cfg);
+    let t_col = (tdm.n_docs() / 10).max(2);
+    let mut suite = BenchSuite::new("fig8: per-topic budget runs");
+    let colwise = NmfOptions::new(5)
+        .with_iters(cfg.iters(50))
+        .with_seed(cfg.seed)
+        .with_sparsity(SparsityMode::PerColumn {
+            t_u_col: None,
+            t_v_col: Some(t_col),
+        })
+        .with_track_error(false);
+    suite.bench("column-wise V budget", || factorize(&tdm, &colwise));
+    let seq = SequentialOptions::new(5, cfg.iters(10))
+        .with_budgets(tdm.n_terms(), t_col)
+        .with_seed(cfg.seed);
+    suite.bench("sequential V budget", || factorize_sequential(&tdm, &seq));
+}

@@ -1,0 +1,45 @@
+//! Bench for Fig. 9 — the paper's timing figure: 100 ALS iterations under
+//! whole-matrix, column-wise and sequential enforcement. This is the
+//! headline performance comparison; EXPERIMENTS.md records the ratios.
+
+mod common;
+
+use esnmf::nmf::{
+    factorize, factorize_sequential, NmfOptions, SequentialOptions, SparsityMode,
+};
+use esnmf::util::bench::BenchSuite;
+
+fn main() {
+    let cfg = common::print_paper_rows("fig9");
+    let tdm = common::corpus("pubmed", &cfg);
+    let k = 5;
+    let iters = cfg.iters(100);
+    let t_u = 50;
+    let t_v = 500.min(tdm.n_docs());
+    let mut suite = BenchSuite::new("fig9: 100-iteration timing");
+    let normal = NmfOptions::new(k)
+        .with_iters(iters)
+        .with_seed(cfg.seed)
+        .with_sparsity(SparsityMode::both(t_u, t_v))
+        .with_track_error(false);
+    suite.bench("normal (whole-matrix)", || factorize(&tdm, &normal));
+    let colwise = NmfOptions::new(k)
+        .with_iters(iters)
+        .with_seed(cfg.seed)
+        .with_sparsity(SparsityMode::PerColumn {
+            t_u_col: Some(t_u / k),
+            t_v_col: Some(t_v / k),
+        })
+        .with_track_error(false);
+    suite.bench("column-wise", || factorize(&tdm, &colwise));
+    let seq = SequentialOptions::new(k, iters / k)
+        .with_budgets(t_u / k, t_v / k)
+        .with_seed(cfg.seed);
+    suite.bench("sequential", || factorize_sequential(&tdm, &seq));
+
+    // ratios the paper reports (sequential fastest)
+    let ns = suite.results[0].median_s();
+    let cs = suite.results[1].median_s();
+    let ss = suite.results[2].median_s();
+    println!("\nFig. 9 ratios: column-wise/normal = {:.2}x, sequential/normal = {:.2}x", cs / ns, ss / ns);
+}

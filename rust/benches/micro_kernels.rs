@@ -1,0 +1,58 @@
+//! Micro-benchmarks of the sparse hot-path kernels — the profile targets
+//! of the L3 performance pass (EXPERIMENTS.md §Perf).
+
+mod common;
+
+use esnmf::nmf::init;
+use esnmf::sparse::{ops, topk, TieMode};
+use esnmf::util::bench::BenchSuite;
+use esnmf::util::rng::Rng;
+
+fn main() {
+    let cfg = common::bench_config();
+    let tdm = common::corpus("pubmed", &cfg);
+    let k = 5;
+    let mut rng = Rng::new(cfg.seed);
+    let u = init::dense_random(tdm.n_terms(), k, &mut rng);
+    let u_sparse = init::sparse_random(tdm.n_terms(), k, tdm.n_terms() / 5, &mut rng);
+    let v = init::dense_random(tdm.n_docs(), k, &mut rng);
+
+    let mut suite = BenchSuite::new("micro: sparse kernels");
+    suite.bench("atb(A^T·U dense-U)", || ops::atb(&tdm.a_csc, &u));
+    suite.bench("atb(A^T·U sparse-U)", || ops::atb(&tdm.a_csc, &u_sparse));
+    suite.bench("ab(A·V)", || ops::ab(&tdm.a, &v));
+    for threads in [2usize, 4, 8] {
+        suite.bench(&format!("atb_par(threads={threads})"), || {
+            ops::atb_par(&tdm.a_csc, &u, threads)
+        });
+        suite.bench(&format!("ab_par(threads={threads})"), || {
+            ops::ab_par(&tdm.a, &v, threads)
+        });
+    }
+    suite.bench("gram(U)", || ops::gram(&u));
+    suite.bench("tr_cross(A,U,V)", || ops::tr_cross(&tdm.a, &u, &v));
+
+    // top-t selection: quickselect vs the paper's full sort
+    let vals: Vec<f32> = (0..200_000).map(|_| rng.f32()).collect();
+    let t = 5_000;
+    suite.bench("nth_largest(quickselect)", || {
+        let mut copy = vals.clone();
+        topk::nth_largest(&mut copy, t)
+    });
+    suite.bench("nth_largest(full sort)", || {
+        topk::nth_largest_by_sort(&vals, t)
+    });
+
+    // enforcement on a factor-sized matrix
+    let big = init::dense_random(tdm.n_docs(), k, &mut rng);
+    suite.bench("enforce_top_t_csr", || {
+        let mut m = big.clone();
+        topk::enforce_top_t_csr(&mut m, t, TieMode::KeepTies);
+        m
+    });
+    suite.bench("enforce_top_t_per_column", || {
+        let mut m = big.clone();
+        topk::enforce_top_t_per_column(&mut m, t / k, TieMode::KeepTies);
+        m
+    });
+}

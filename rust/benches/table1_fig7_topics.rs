@@ -1,0 +1,36 @@
+//! Bench for Table 1 + Fig. 7: global vs column-wise vs sequential topic
+//! generation on wikipedia-sim.
+
+mod common;
+
+use esnmf::nmf::{
+    factorize, factorize_sequential, NmfOptions, SequentialOptions, SparsityMode,
+};
+use esnmf::util::bench::BenchSuite;
+
+fn main() {
+    let cfg = common::print_paper_rows("table1");
+    esnmf::experiments::run("fig7", &cfg).expect("fig7");
+    let tdm = common::corpus("wikipedia", &cfg);
+    let iters = cfg.iters(50);
+    let mut suite = BenchSuite::new("table1/fig7: topic generation variants");
+    let global = NmfOptions::new(5)
+        .with_iters(iters)
+        .with_seed(cfg.seed)
+        .with_sparsity(SparsityMode::u_only(50))
+        .with_track_error(false);
+    suite.bench("global top-50 U", || factorize(&tdm, &global));
+    let colwise = NmfOptions::new(5)
+        .with_iters(iters)
+        .with_seed(cfg.seed)
+        .with_sparsity(SparsityMode::PerColumn {
+            t_u_col: Some(10),
+            t_v_col: None,
+        })
+        .with_track_error(false);
+    suite.bench("column-wise 10/topic", || factorize(&tdm, &colwise));
+    let seq = SequentialOptions::new(5, cfg.iters(20))
+        .with_budgets(10, tdm.n_docs())
+        .with_seed(cfg.seed);
+    suite.bench("sequential 10/topic", || factorize_sequential(&tdm, &seq));
+}

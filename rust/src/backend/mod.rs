@@ -1,0 +1,52 @@
+//! ALS backends behind one trait: the sparse native engine (the paper's
+//! system) and the dense-block XLA/PJRT engine (the AOT three-layer path).
+//!
+//! Both run *the same algorithm* — identical projection, identical top-t
+//! semantics (ties kept), identical Gram ridge — so on tie-free data their
+//! iterates agree to float tolerance; `rust/tests/integration_runtime.rs`
+//! asserts exactly that.
+
+pub mod native;
+pub mod xla_backend;
+
+use crate::nmf::{NmfOptions, NmfResult};
+use crate::text::TermDocMatrix;
+use crate::Result;
+
+pub use native::NativeBackend;
+pub use xla_backend::XlaBackend;
+
+/// A factorization engine.
+pub trait AlsBackend {
+    fn name(&self) -> &'static str;
+    fn factorize(&mut self, tdm: &TermDocMatrix, opts: &NmfOptions) -> Result<NmfResult>;
+}
+
+/// Backend selection for CLI/config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "sparse" | "rust" => Some(BackendKind::Native),
+            "xla" | "pjrt" | "dense" => Some(BackendKind::Xla),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parse() {
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("XLA"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::parse("gpu"), None);
+    }
+}

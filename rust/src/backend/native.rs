@@ -1,0 +1,47 @@
+//! The native sparse backend — a thin adapter over [`crate::nmf::als`].
+
+use super::AlsBackend;
+use crate::nmf::{self, NmfOptions, NmfResult};
+use crate::text::TermDocMatrix;
+use crate::Result;
+
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl AlsBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn factorize(&mut self, tdm: &TermDocMatrix, opts: &NmfOptions) -> Result<NmfResult> {
+        Ok(nmf::factorize(tdm, opts))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::TdmBuilder;
+
+    #[test]
+    fn native_backend_runs() {
+        let mut b = TdmBuilder::new();
+        for _ in 0..4 {
+            b.add_text("coffee crop coffee quotas brazil", Some("econ"));
+            b.add_text("electrons atoms electrons hydrogen", Some("sci"));
+        }
+        let tdm = b.freeze();
+        let mut backend = NativeBackend::new();
+        let r = backend
+            .factorize(&tdm, &NmfOptions::new(2).with_iters(10).with_seed(4))
+            .unwrap();
+        assert_eq!(r.iterations, 10);
+        assert_eq!(backend.name(), "native");
+    }
+}

@@ -1,0 +1,176 @@
+//! The XLA/PJRT dense-block backend.
+//!
+//! Each ALS iteration is ONE device execution of the fused Layer-2 graph
+//! (`als_iter_{n}x{m}x{k}.hlo.txt`): both half-steps, projection and top-t
+//! enforcement happen inside the artifact; rust only marshals buffers and
+//! tracks convergence between iterations. Problems smaller than the
+//! compiled shape are zero-padded (zero rows/columns are fixed points of
+//! every ALS step, so padding does not perturb the iterates).
+
+use super::AlsBackend;
+use crate::nmf::memory::MemoryStats;
+use crate::nmf::{init, NmfOptions, NmfResult, SparsityMode};
+use crate::runtime::XlaExecutor;
+use crate::sparse::Csr;
+use crate::text::TermDocMatrix;
+use crate::util::timer::Timer;
+use crate::Result;
+use anyhow::bail;
+
+pub struct XlaBackend {
+    exec: XlaExecutor,
+    /// compiled program shape (from the manifest)
+    n: usize,
+    m: usize,
+    k: usize,
+}
+
+impl XlaBackend {
+    /// Wrap an executor handle targeting the artifact shape (n, m, k).
+    pub fn new(exec: XlaExecutor, n: usize, m: usize, k: usize) -> Self {
+        XlaBackend { exec, n, m, k }
+    }
+
+    /// Dense row-major zero-padded copy of the term-document matrix.
+    fn densify_padded(&self, tdm: &TermDocMatrix) -> Vec<f32> {
+        let mut a = vec![0.0f32; self.n * self.m];
+        for r in 0..tdm.n_terms() {
+            let (idx, val) = tdm.a.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                a[r * self.m + c as usize] = v;
+            }
+        }
+        a
+    }
+
+    fn budgets(&self, opts: &NmfOptions) -> Result<(i32, i32)> {
+        match opts.sparsity {
+            SparsityMode::None => Ok((0, 0)),
+            SparsityMode::Global { t_u, t_v } => Ok((
+                t_u.map(|t| t as i32).unwrap_or(0),
+                t_v.map(|t| t as i32).unwrap_or(0),
+            )),
+            SparsityMode::PerColumn { .. } => {
+                bail!("per-column enforcement is native-only (see DESIGN.md)")
+            }
+            SparsityMode::Threshold { .. } => {
+                bail!("threshold enforcement is native-only (ablation mode)")
+            }
+        }
+    }
+}
+
+/// Dense row-major (rows, k) buffer → CSR, dropping zeros/subnormals that
+/// the artifact's MIN_TAU floor treats as zero.
+fn dense_to_csr(padded_rows: usize, k: usize, data: &[f32], keep_rows: usize) -> Csr {
+    debug_assert!(keep_rows <= padded_rows);
+    debug_assert_eq!(data.len(), padded_rows * k);
+    Csr::from_dense(keep_rows, k, &data[..keep_rows * k])
+}
+
+impl AlsBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn factorize(&mut self, tdm: &TermDocMatrix, opts: &NmfOptions) -> Result<NmfResult> {
+        if tdm.n_terms() > self.n || tdm.n_docs() > self.m {
+            bail!(
+                "corpus ({} terms × {} docs) exceeds artifact shape ({} × {})",
+                tdm.n_terms(),
+                tdm.n_docs(),
+                self.n,
+                self.m
+            );
+        }
+        if opts.k != self.k {
+            bail!("k = {} does not match artifact k = {}", opts.k, self.k);
+        }
+        let (t_u, t_v) = self.budgets(opts)?;
+        let timer = Timer::start();
+
+        let a = self.densify_padded(tdm);
+        // pad the initial guess into the artifact's row count
+        let u0 = init::initial_u(tdm.n_terms(), self.k, opts.init_nnz, opts.seed);
+        let mut u_dense = vec![0.0f32; self.n * self.k];
+        for r in 0..u0.rows {
+            let (idx, val) = u0.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                u_dense[r * self.k + c as usize] = v;
+            }
+        }
+
+        let norm_a_sq = tdm.a.fro_norm_sq();
+        let mut residuals = Vec::with_capacity(opts.max_iters);
+        let mut errors = Vec::new();
+        let mut iterations = 0;
+        let mut v_dense: Vec<f32> = vec![0.0; self.m * self.k];
+
+        for _ in 0..opts.max_iters {
+            let out = self.exec.als_iter(
+                self.n,
+                self.m,
+                self.k,
+                a.clone(),
+                u_dense.clone(),
+                t_u,
+                t_v,
+            )?;
+            // relative residual ‖U_i − U_{i−1}‖/‖U_i‖ over the dense buffers
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for (new, old) in out.u_new.iter().zip(&u_dense) {
+                let d = (*new - *old) as f64;
+                num += d * d;
+                den += (*new as f64) * (*new as f64);
+            }
+            let r = if den > 0.0 {
+                (num / den).sqrt()
+            } else if num == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            };
+            residuals.push(r);
+            u_dense = out.u_new;
+            v_dense = out.v;
+            iterations += 1;
+
+            if opts.track_error {
+                let u_csr = dense_to_csr(self.n, self.k, &u_dense, tdm.n_terms());
+                let v_csr = dense_to_csr(self.m, self.k, &v_dense, tdm.n_docs());
+                errors.push(crate::nmf::rel_error_sparse(
+                    &tdm.a, &u_csr, &v_csr, norm_a_sq,
+                ));
+            }
+            if opts.tol > 0.0 && r < opts.tol {
+                break;
+            }
+        }
+
+        let u = dense_to_csr(self.n, self.k, &u_dense, tdm.n_terms());
+        let v = dense_to_csr(self.m, self.k, &v_dense, tdm.n_docs());
+        // dense backend: the device stores full (n+m)·k scalars throughout
+        let memory = MemoryStats {
+            max_combined_nnz: (self.n + self.m) * self.k,
+            max_intermediate_nnz: self.m * self.k,
+            final_u_nnz: u.nnz(),
+            final_v_nnz: v.nnz(),
+        };
+        Ok(NmfResult {
+            u,
+            v,
+            iterations,
+            residuals,
+            errors,
+            memory,
+            elapsed_s: timer.elapsed_s(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end in rust/tests/integration_runtime.rs (requires
+    // compiled artifacts).
+}

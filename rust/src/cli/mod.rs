@@ -1,0 +1,170 @@
+//! Argument-parsing substrate (clap is not in the offline vendor set).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [positional...]`
+//! with typed getters and an unknown-flag check.
+
+use std::collections::{HashMap, HashSet};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: HashSet<String>,
+    consumed: HashSet<String>,
+}
+
+impl Args {
+    /// Parse raw arguments (excluding argv[0]). `--key value`, `--key=value`
+    /// and bare `--flag` are all accepted; the first non-option token is
+    /// the subcommand, later ones are positional.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err("bare -- is not supported".into());
+                }
+                if let Some((key, value)) = stripped.split_once('=') {
+                    args.options.insert(key.to_string(), value.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let value = iter.next().unwrap();
+                    args.options.insert(stripped.to_string(), value);
+                } else {
+                    args.flags.insert(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Boolean flag lookup. `--flag value` is greedily parsed as an option
+    /// at parse time (the parser cannot know which names are flags);
+    /// calling `flag()` on such a name reclassifies the captured token as
+    /// positional — so only call `flag()` on genuinely boolean names.
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.insert(name.to_string());
+        if self.flags.contains(name) {
+            return true;
+        }
+        if let Some(v) = self.options.remove(name) {
+            self.positional.push(v);
+            return true;
+        }
+        false
+    }
+
+    pub fn opt_str(&mut self, name: &str) -> Option<String> {
+        self.consumed.insert(name.to_string());
+        self.options.get(name).cloned()
+    }
+
+    pub fn str_or(&mut self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&mut self, name: &str) -> Result<Option<T>, String> {
+        match self.opt_str(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("invalid value {v:?} for --{name}")),
+        }
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&mut self, name: &str, default: T) -> Result<T, String> {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+
+    /// Error on any option/flag never looked at (catches typos).
+    pub fn check_unknown(&self) -> Result<(), String> {
+        let mut unknown: Vec<&String> = self
+            .options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !self.consumed.contains(*k))
+            .collect();
+        unknown.sort();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown option(s): {}",
+                unknown
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let mut a = parse("factorize --k 5 --iters 75 --verbose pos1");
+        assert_eq!(a.subcommand.as_deref(), Some("factorize"));
+        assert_eq!(a.parse_or("k", 0usize).unwrap(), 5);
+        assert_eq!(a.parse_or("iters", 0usize).unwrap(), 75);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        a.check_unknown().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let mut a = parse("run --seed=42 --scale=tiny");
+        assert_eq!(a.parse_or("seed", 0u64).unwrap(), 42);
+        assert_eq!(a.str_or("scale", "x"), "tiny");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let mut a = parse("run --fast");
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let mut a = parse("run --k 5 --oops 3");
+        let _ = a.parse_or("k", 0usize);
+        let err = a.check_unknown().unwrap_err();
+        assert!(err.contains("--oops"));
+    }
+
+    #[test]
+    fn invalid_value_errors() {
+        let mut a = parse("run --k five");
+        assert!(a.opt_parse::<usize>("k").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = parse("run");
+        assert_eq!(a.str_or("corpus", "reuters"), "reuters");
+        assert_eq!(a.parse_or("k", 7usize).unwrap(), 7);
+    }
+}

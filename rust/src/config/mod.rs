@@ -1,0 +1,12 @@
+//! Run configuration: a TOML-subset file format plus the typed
+//! [`RunConfig`] the CLI builds (from file and/or flags).
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (quoted), integer, float and boolean values, `#` comments. That covers
+//! every knob the system exposes without a serde dependency.
+
+pub mod parse;
+pub mod run;
+
+pub use parse::{ConfigFile, Value};
+pub use run::{Algorithm, RunConfig};

@@ -1,0 +1,215 @@
+//! The TOML-subset parser.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed file: `section.key` → value ("" section for top-level keys).
+#[derive(Clone, Debug, Default)]
+pub struct ConfigFile {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile, String> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(value.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            entries.insert(full_key, value);
+        }
+        Ok(ConfigFile { entries })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ConfigFile, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        ConfigFile::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn u64(&self, key: &str) -> Option<u64> {
+        self.get(key).and_then(|v| v.as_u64())
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(|v| v.as_bool())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a # inside a quoted string is preserved
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare words count as strings (convenient for presets: corpus = reuters)
+    if s.chars().all(|c| c.is_alphanumeric() || "-_.:".contains(c)) {
+        return Ok(Value::Str(s.to_string()));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run configuration
+corpus = reuters
+scale = "tiny"
+
+[nmf]
+k = 5
+iters = 75
+tol = 1e-8
+track_error = true
+
+[sparsity]
+mode = both
+t_u = 55
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("corpus"), Some("reuters"));
+        assert_eq!(c.str("scale"), Some("tiny"));
+        assert_eq!(c.usize("nmf.k"), Some(5));
+        assert_eq!(c.f64("nmf.tol"), Some(1e-8));
+        assert_eq!(c.bool("nmf.track_error"), Some(true));
+        assert_eq!(c.usize("sparsity.t_u"), Some(55));
+        assert_eq!(c.str("sparsity.mode"), Some("both"));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let c = ConfigFile::parse("a = 1 # trailing\n\n# full line\nb = \"x # y\"\n").unwrap();
+        assert_eq!(c.usize("a"), Some(1));
+        assert_eq!(c.str("b"), Some("x # y"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(ConfigFile::parse("[]\n").is_err());
+        assert!(ConfigFile::parse("novalue\n").is_err());
+        assert!(ConfigFile::parse("x = @@@\n").is_err());
+        assert!(ConfigFile::parse(" = 5\n").is_err());
+    }
+
+    #[test]
+    fn negative_and_float_values() {
+        let c = ConfigFile::parse("x = -3\ny = 2.5\n").unwrap();
+        assert_eq!(c.get("x"), Some(&Value::Int(-3)));
+        assert_eq!(c.f64("y"), Some(2.5));
+        assert_eq!(c.usize("x"), None); // negative rejects usize view
+    }
+}

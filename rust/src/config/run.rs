@@ -1,0 +1,260 @@
+//! Typed run configuration assembled from a config file and/or CLI flags
+//! (flags win).
+
+use super::parse::ConfigFile;
+use crate::backend::BackendKind;
+use crate::corpus::Scale;
+use crate::nmf::{NmfOptions, SequentialOptions, SparsityMode};
+use crate::sparse::TieMode;
+use anyhow::{bail, Result};
+
+/// Which algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Algorithm 1 / 2 (+ per-column variant) via SparsityMode
+    Als,
+    /// Algorithm 3
+    Sequential,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub corpus: String,
+    pub scale: Scale,
+    pub seed: u64,
+    pub algorithm: Algorithm,
+    pub backend: BackendKind,
+    pub k: usize,
+    pub iters: usize,
+    pub tol: f64,
+    pub sparsity_mode: String,
+    pub t_u: Option<usize>,
+    pub t_v: Option<usize>,
+    /// threshold-mode cutoffs (ablation)
+    pub tau_u: Option<f32>,
+    pub tau_v: Option<f32>,
+    pub init_nnz: Option<usize>,
+    pub track_error: bool,
+    /// row-parallelism for the ALS products
+    pub threads: usize,
+    /// sequential-only: topics per block and iterations per block
+    pub block_topics: usize,
+    pub iters_per_block: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            corpus: "reuters".into(),
+            scale: Scale::Small,
+            seed: 0x5eed,
+            algorithm: Algorithm::Als,
+            backend: BackendKind::Native,
+            k: 5,
+            iters: 75,
+            tol: 0.0,
+            sparsity_mode: "none".into(),
+            t_u: None,
+            t_v: None,
+            tau_u: None,
+            tau_v: None,
+            init_nnz: None,
+            track_error: true,
+            threads: 1,
+            block_topics: 1,
+            iters_per_block: 20,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Overlay values from a parsed config file.
+    pub fn apply_file(&mut self, f: &ConfigFile) -> Result<()> {
+        if let Some(v) = f.str("corpus") {
+            self.corpus = v.to_string();
+        }
+        if let Some(v) = f.str("scale") {
+            self.scale = Scale::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("bad scale {v:?} in config"))?;
+        }
+        if let Some(v) = f.u64("seed") {
+            self.seed = v;
+        }
+        if let Some(v) = f.str("algorithm") {
+            self.algorithm = match v {
+                "als" => Algorithm::Als,
+                "sequential" | "seq" => Algorithm::Sequential,
+                other => bail!("bad algorithm {other:?}"),
+            };
+        }
+        if let Some(v) = f.str("backend") {
+            self.backend = BackendKind::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("bad backend {v:?}"))?;
+        }
+        if let Some(v) = f.usize("nmf.k") {
+            self.k = v;
+        }
+        if let Some(v) = f.usize("nmf.iters") {
+            self.iters = v;
+        }
+        if let Some(v) = f.f64("nmf.tol") {
+            self.tol = v;
+        }
+        if let Some(v) = f.bool("nmf.track_error") {
+            self.track_error = v;
+        }
+        if let Some(v) = f.usize("nmf.init_nnz") {
+            self.init_nnz = Some(v);
+        }
+        if let Some(v) = f.usize("nmf.threads") {
+            self.threads = v.max(1);
+        }
+        if let Some(v) = f.str("sparsity.mode") {
+            self.sparsity_mode = v.to_string();
+        }
+        if let Some(v) = f.usize("sparsity.t_u") {
+            self.t_u = Some(v);
+        }
+        if let Some(v) = f.usize("sparsity.t_v") {
+            self.t_v = Some(v);
+        }
+        if let Some(v) = f.f64("sparsity.tau_u") {
+            self.tau_u = Some(v as f32);
+        }
+        if let Some(v) = f.f64("sparsity.tau_v") {
+            self.tau_v = Some(v as f32);
+        }
+        if let Some(v) = f.usize("sequential.block_topics") {
+            self.block_topics = v;
+        }
+        if let Some(v) = f.usize("sequential.iters_per_block") {
+            self.iters_per_block = v;
+        }
+        Ok(())
+    }
+
+    /// Resolve the sparsity mode string + budgets into the typed enum.
+    pub fn sparsity(&self) -> Result<SparsityMode> {
+        Ok(match self.sparsity_mode.as_str() {
+            "none" | "dense" => SparsityMode::None,
+            "both" => SparsityMode::Global {
+                t_u: self.t_u,
+                t_v: self.t_v,
+            },
+            "u" => SparsityMode::Global {
+                t_u: Some(self.t_u.ok_or_else(|| anyhow::anyhow!("--t-u required for mode u"))?),
+                t_v: None,
+            },
+            "v" => SparsityMode::Global {
+                t_u: None,
+                t_v: Some(self.t_v.ok_or_else(|| anyhow::anyhow!("--t-v required for mode v"))?),
+            },
+            "percol" | "per-column" => SparsityMode::PerColumn {
+                t_u_col: self.t_u,
+                t_v_col: self.t_v,
+            },
+            "threshold" => {
+                anyhow::ensure!(
+                    self.tau_u.is_some() || self.tau_v.is_some(),
+                    "--tau-u and/or --tau-v required for mode threshold"
+                );
+                SparsityMode::Threshold {
+                    tau_u: self.tau_u,
+                    tau_v: self.tau_v,
+                }
+            }
+            other => bail!("unknown sparsity mode {other:?} (none|both|u|v|percol|threshold)"),
+        })
+    }
+
+    pub fn nmf_options(&self) -> Result<NmfOptions> {
+        let mut opts = NmfOptions::new(self.k)
+            .with_iters(self.iters)
+            .with_seed(self.seed)
+            .with_tol(self.tol)
+            .with_sparsity(self.sparsity()?)
+            .with_track_error(self.track_error)
+            .with_threads(self.threads);
+        opts.tie_mode = TieMode::KeepTies;
+        opts.init_nnz = self.init_nnz;
+        Ok(opts)
+    }
+
+    pub fn sequential_options(&self) -> SequentialOptions {
+        let blocks = self.k / self.block_topics.max(1);
+        let mut s = SequentialOptions::new(blocks.max(1), self.iters_per_block);
+        s.block_topics = self.block_topics.max(1);
+        s.seed = self.seed;
+        s.init_nnz = self.init_nnz;
+        s.t_u = self.t_u;
+        s.t_v = self.t_v;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_overlay() {
+        let f = ConfigFile::parse(
+            "corpus = pubmed\nscale = tiny\nseed = 7\nalgorithm = seq\n[nmf]\nk = 3\n[sparsity]\nmode = both\nt_u = 40\nt_v = 80\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.corpus, "pubmed");
+        assert_eq!(cfg.scale, Scale::Tiny);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.algorithm, Algorithm::Sequential);
+        assert_eq!(cfg.k, 3);
+        assert_eq!(
+            cfg.sparsity().unwrap(),
+            SparsityMode::Global {
+                t_u: Some(40),
+                t_v: Some(80)
+            }
+        );
+    }
+
+    #[test]
+    fn sparsity_mode_validation() {
+        let mut cfg = RunConfig::default();
+        cfg.sparsity_mode = "u".into();
+        assert!(cfg.sparsity().is_err()); // missing t_u
+        cfg.t_u = Some(10);
+        assert_eq!(
+            cfg.sparsity().unwrap(),
+            SparsityMode::Global {
+                t_u: Some(10),
+                t_v: None
+            }
+        );
+        cfg.sparsity_mode = "bogus".into();
+        assert!(cfg.sparsity().is_err());
+    }
+
+    #[test]
+    fn nmf_options_roundtrip() {
+        let mut cfg = RunConfig::default();
+        cfg.k = 4;
+        cfg.iters = 10;
+        cfg.init_nnz = Some(20);
+        let o = cfg.nmf_options().unwrap();
+        assert_eq!(o.k, 4);
+        assert_eq!(o.max_iters, 10);
+        assert_eq!(o.init_nnz, Some(20));
+    }
+
+    #[test]
+    fn sequential_options_blocks() {
+        let mut cfg = RunConfig::default();
+        cfg.k = 6;
+        cfg.block_topics = 2;
+        cfg.iters_per_block = 5;
+        let s = cfg.sequential_options();
+        assert_eq!(s.blocks, 3);
+        assert_eq!(s.total_k(), 6);
+    }
+}

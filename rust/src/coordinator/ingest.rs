@@ -1,0 +1,184 @@
+//! Streaming corpus ingestion with backpressure.
+//!
+//! Documents flow  producer → [bounded channel] → tokenizer workers →
+//! [bounded channel] → single-threaded TDM builder.  The bounded channels
+//! (`sync_channel`) are the backpressure: a slow builder stalls the
+//! tokenizers, which stall the producer, so memory stays O(capacity)
+//! regardless of corpus size. Documents are resequenced at the builder so
+//! ids/labels match arrival order deterministically.
+
+use crate::text::{TdmBuilder, TermDocMatrix};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+#[derive(Clone, Debug)]
+pub struct IngestConfig {
+    /// tokenizer worker threads
+    pub workers: usize,
+    /// bounded-channel capacity (documents in flight per stage)
+    pub capacity: usize,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig {
+            workers: 4,
+            capacity: 64,
+        }
+    }
+}
+
+/// One raw document entering the pipeline.
+pub struct RawDoc {
+    pub text: String,
+    pub label: Option<String>,
+}
+
+struct TokenizedDoc {
+    seq: usize,
+    tokens: Vec<String>,
+    label: Option<String>,
+}
+
+/// Stream `docs` through the pipeline into a frozen term-document matrix.
+/// Returns the matrix and the number of documents ingested.
+pub fn ingest_stream(
+    docs: impl Iterator<Item = RawDoc>,
+    config: &IngestConfig,
+) -> (TermDocMatrix, usize) {
+    let workers = config.workers.max(1);
+    let cap = config.capacity.max(1);
+
+    let (raw_tx, raw_rx) = mpsc::sync_channel::<(usize, RawDoc)>(cap);
+    let raw_rx = Arc::new(Mutex::new(raw_rx));
+    let (tok_tx, tok_rx) = mpsc::sync_channel::<TokenizedDoc>(cap);
+
+    let handles: Vec<_> = (0..workers)
+        .map(|i| {
+            let raw_rx = Arc::clone(&raw_rx);
+            let tok_tx = tok_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("esnmf-tokenize-{i}"))
+                .spawn(move || loop {
+                    let item = { raw_rx.lock().unwrap().recv() };
+                    match item {
+                        Ok((seq, doc)) => {
+                            let tokens = crate::text::tokenize(&doc.text);
+                            if tok_tx
+                                .send(TokenizedDoc {
+                                    seq,
+                                    tokens,
+                                    label: doc.label,
+                                })
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                })
+                .expect("spawn tokenizer")
+        })
+        .collect();
+    drop(tok_tx);
+
+    // builder thread: resequence + build
+    let builder_handle = std::thread::Builder::new()
+        .name("esnmf-tdm-builder".into())
+        .spawn(move || {
+            let mut builder = TdmBuilder::new();
+            let mut next_seq = 0usize;
+            let mut pending: BTreeMap<usize, TokenizedDoc> = BTreeMap::new();
+            for doc in tok_rx {
+                pending.insert(doc.seq, doc);
+                while let Some(doc) = pending.remove(&next_seq) {
+                    builder.add_tokens(&doc.tokens, doc.label.as_deref());
+                    next_seq += 1;
+                }
+            }
+            // drain any stragglers (possible only if seqs were skipped)
+            for (_, doc) in pending {
+                builder.add_tokens(&doc.tokens, doc.label.as_deref());
+            }
+            (builder.n_docs(), builder.freeze())
+        })
+        .expect("spawn builder");
+
+    // producer: the calling thread feeds the pipeline (and is throttled
+    // by the bounded channel when the pipeline is saturated)
+    let mut count = 0usize;
+    for doc in docs {
+        raw_tx.send((count, doc)).expect("pipeline died");
+        count += 1;
+    }
+    drop(raw_tx);
+    for h in handles {
+        let _ = h.join();
+    }
+    let (n_docs, tdm) = builder_handle.join().expect("builder panicked");
+    debug_assert_eq!(n_docs, count);
+    (tdm, count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn docs(n: usize) -> Vec<RawDoc> {
+        (0..n)
+            .map(|i| RawDoc {
+                text: if i % 2 == 0 {
+                    format!("coffee crop quotas coffee doc{i} coffee")
+                } else {
+                    format!("electrons atoms hydrogen electrons doc{i}")
+                },
+                label: Some(if i % 2 == 0 { "econ" } else { "sci" }.to_string()),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pipeline_matches_sequential_build() {
+        let raw = docs(40);
+        let mut builder = TdmBuilder::new();
+        for d in &raw {
+            builder.add_text(&d.text, d.label.as_deref());
+        }
+        let sequential = builder.freeze();
+
+        let (streamed, count) = ingest_stream(
+            docs(40).into_iter(),
+            &IngestConfig {
+                workers: 4,
+                capacity: 8,
+            },
+        );
+        assert_eq!(count, 40);
+        assert_eq!(streamed.n_docs(), sequential.n_docs());
+        assert_eq!(streamed.n_terms(), sequential.n_terms());
+        assert_eq!(streamed.a, sequential.a); // resequencing ⇒ identical
+        assert_eq!(streamed.doc_labels, sequential.doc_labels);
+    }
+
+    #[test]
+    fn tiny_capacity_still_completes() {
+        let (tdm, count) = ingest_stream(
+            docs(100).into_iter(),
+            &IngestConfig {
+                workers: 2,
+                capacity: 1, // maximal backpressure
+            },
+        );
+        assert_eq!(count, 100);
+        assert_eq!(tdm.n_docs(), 100);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let (tdm, count) = ingest_stream(std::iter::empty(), &IngestConfig::default());
+        assert_eq!(count, 0);
+        assert_eq!(tdm.n_docs(), 0);
+    }
+}

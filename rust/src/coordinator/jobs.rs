@@ -1,0 +1,199 @@
+//! Factorization job management: submit → queue → run on the pool →
+//! poll/wait for a summarized result.
+
+use super::pool::ThreadPool;
+use crate::backend::{AlsBackend, NativeBackend};
+use crate::nmf::{factorize_sequential, NmfOptions, NmfResult, SequentialOptions};
+use crate::text::TermDocMatrix;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+pub type JobId = u64;
+
+/// What to run.
+#[derive(Clone, Debug)]
+pub enum JobSpec {
+    Als(NmfOptions),
+    Sequential(SequentialOptions),
+}
+
+/// Lifecycle of a job.
+#[derive(Clone, Debug)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done(Arc<NmfResult>),
+    Failed(String),
+}
+
+impl JobStatus {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Done(_) | JobStatus::Failed(_))
+    }
+}
+
+struct Inner {
+    statuses: Mutex<HashMap<JobId, JobStatus>>,
+    cv: Condvar,
+}
+
+/// Shared job manager. Cloning shares the same job table and pool.
+#[derive(Clone)]
+pub struct JobManager {
+    pool: Arc<ThreadPool>,
+    inner: Arc<Inner>,
+    next_id: Arc<Mutex<JobId>>,
+}
+
+impl JobManager {
+    pub fn new(workers: usize) -> Self {
+        JobManager {
+            pool: Arc::new(ThreadPool::new(workers)),
+            inner: Arc::new(Inner {
+                statuses: Mutex::new(HashMap::new()),
+                cv: Condvar::new(),
+            }),
+            next_id: Arc::new(Mutex::new(1)),
+        }
+    }
+
+    fn set_status(&self, id: JobId, status: JobStatus) {
+        let mut map = self.inner.statuses.lock().unwrap();
+        map.insert(id, status);
+        self.inner.cv.notify_all();
+    }
+
+    /// Submit a factorization of `tdm` under `spec`; returns immediately.
+    pub fn submit(&self, tdm: Arc<TermDocMatrix>, spec: JobSpec) -> JobId {
+        let id = {
+            let mut next = self.next_id.lock().unwrap();
+            let id = *next;
+            *next += 1;
+            id
+        };
+        self.set_status(id, JobStatus::Queued);
+        let this = self.clone();
+        self.pool.execute(move || {
+            this.set_status(id, JobStatus::Running);
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                match &spec {
+                    JobSpec::Als(opts) => NativeBackend::new().factorize(&tdm, opts),
+                    JobSpec::Sequential(opts) => Ok(factorize_sequential(&tdm, opts)),
+                }
+            }));
+            match outcome {
+                Ok(Ok(result)) => this.set_status(id, JobStatus::Done(Arc::new(result))),
+                Ok(Err(e)) => this.set_status(id, JobStatus::Failed(e.to_string())),
+                Err(_) => this.set_status(id, JobStatus::Failed("job panicked".into())),
+            }
+        });
+        id
+    }
+
+    pub fn status(&self, id: JobId) -> Option<JobStatus> {
+        self.inner.statuses.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Block until the job reaches a terminal state.
+    pub fn wait(&self, id: JobId) -> JobStatus {
+        let mut map = self.inner.statuses.lock().unwrap();
+        loop {
+            match map.get(&id) {
+                Some(s) if s.is_terminal() => return s.clone(),
+                Some(_) => {
+                    map = self.inner.cv.wait(map).unwrap();
+                }
+                None => return JobStatus::Failed(format!("unknown job {id}")),
+            }
+        }
+    }
+
+    /// Convenience: wait and unwrap the result.
+    pub fn wait_result(&self, id: JobId) -> crate::Result<Arc<NmfResult>> {
+        match self.wait(id) {
+            JobStatus::Done(r) => Ok(r),
+            JobStatus::Failed(e) => anyhow::bail!("job {id} failed: {e}"),
+            _ => unreachable!("wait returned non-terminal status"),
+        }
+    }
+
+    pub fn job_ids(&self) -> Vec<JobId> {
+        let mut ids: Vec<JobId> =
+            self.inner.statuses.lock().unwrap().keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmf::SparsityMode;
+    use crate::text::TdmBuilder;
+
+    fn tdm() -> Arc<TermDocMatrix> {
+        let mut b = TdmBuilder::new();
+        for _ in 0..5 {
+            b.add_text("coffee crop coffee quotas brazil crop", Some("econ"));
+            b.add_text("electrons atoms electrons hydrogen atoms", Some("sci"));
+        }
+        Arc::new(b.freeze())
+    }
+
+    #[test]
+    fn submit_and_wait() {
+        let mgr = JobManager::new(2);
+        let id = mgr.submit(
+            tdm(),
+            JobSpec::Als(NmfOptions::new(2).with_iters(5).with_seed(1)),
+        );
+        let result = mgr.wait_result(id).unwrap();
+        assert_eq!(result.iterations, 5);
+    }
+
+    #[test]
+    fn concurrent_jobs_all_complete() {
+        let mgr = JobManager::new(4);
+        let corpus = tdm();
+        let ids: Vec<JobId> = (0..8)
+            .map(|i| {
+                let spec = if i % 2 == 0 {
+                    JobSpec::Als(
+                        NmfOptions::new(2)
+                            .with_iters(4)
+                            .with_seed(i)
+                            .with_sparsity(SparsityMode::both(20, 20)),
+                    )
+                } else {
+                    JobSpec::Sequential(SequentialOptions::new(2, 4).with_seed(i))
+                };
+                mgr.submit(Arc::clone(&corpus), spec)
+            })
+            .collect();
+        for id in ids {
+            assert!(matches!(mgr.wait(id), JobStatus::Done(_)));
+        }
+        assert_eq!(mgr.job_ids().len(), 8);
+    }
+
+    #[test]
+    fn unknown_job_fails_cleanly() {
+        let mgr = JobManager::new(1);
+        assert!(matches!(mgr.wait(999), JobStatus::Failed(_)));
+        assert!(mgr.status(999).is_none());
+    }
+
+    #[test]
+    fn panicking_job_reports_failure() {
+        let mgr = JobManager::new(1);
+        // k larger than terms triggers internal panic via assert in init?
+        // use an empty corpus with k>0: gram of empty factors is fine, so
+        // force failure with an impossible initial guess instead
+        let empty = Arc::new(TdmBuilder::new().freeze());
+        let id = mgr.submit(empty, JobSpec::Als(NmfOptions::new(3).with_iters(2)));
+        // empty corpus: factorize should still complete (degenerate) or
+        // fail — either way it must reach a terminal state
+        let s = mgr.wait(id);
+        assert!(s.is_terminal());
+    }
+}

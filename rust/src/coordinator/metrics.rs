@@ -1,0 +1,125 @@
+//! Process-wide metrics: named atomic counters and gauges with a
+//! printable snapshot. Lock-free on the hot path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Registry handing out shared counters/gauges by name.
+#[derive(Clone, Default)]
+pub struct MetricsRegistry {
+    counters: Arc<Mutex<BTreeMap<String, Arc<Counter>>>>,
+    gauges: Arc<Mutex<BTreeMap<String, Arc<Gauge>>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Stable-ordered snapshot for logging / the STATS server command.
+    pub fn snapshot(&self) -> Vec<(String, i64)> {
+        let mut out = Vec::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push((name.clone(), c.get() as i64));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push((name.clone(), g.get()));
+        }
+        out
+    }
+
+    pub fn format(&self) -> String {
+        self.snapshot()
+            .into_iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_shared_by_name() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("requests");
+        let b = reg.counter("requests");
+        a.inc();
+        b.add(2);
+        assert_eq!(reg.counter("requests").get(), 3);
+    }
+
+    #[test]
+    fn gauges_and_snapshot() {
+        let reg = MetricsRegistry::new();
+        reg.counter("x").inc();
+        reg.gauge("queue_depth").set(-5);
+        let snap = reg.snapshot();
+        assert!(snap.contains(&("x".to_string(), 1)));
+        assert!(snap.contains(&("queue_depth".to_string(), -5)));
+        assert!(reg.format().contains("queue_depth=-5"));
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("hits");
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+    }
+}

@@ -1,0 +1,23 @@
+//! Layer-3 coordination: thread pool, streaming ingestion with
+//! backpressure, job management, metrics, and the topic-query server.
+//!
+//! The paper's contribution is an algorithm, so the coordinator is the
+//! production harness around it: documents stream through a bounded
+//! pipeline into the term-document matrix, factorization jobs run on a
+//! worker pool (one corpus can be factorized under many configurations
+//! concurrently — exactly what the experiment harness does), and the
+//! resulting topic models are served over a line protocol.
+
+pub mod ingest;
+pub mod jobs;
+pub mod metrics;
+pub mod model;
+pub mod pool;
+pub mod server;
+
+pub use ingest::{ingest_stream, IngestConfig};
+pub use jobs::{JobId, JobManager, JobSpec, JobStatus};
+pub use metrics::MetricsRegistry;
+pub use model::TopicModel;
+pub use pool::ThreadPool;
+pub use server::TopicServer;

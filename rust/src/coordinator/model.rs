@@ -1,0 +1,141 @@
+//! A servable topic model: the frozen factors plus vocabulary, with the
+//! query operations the topic server exposes.
+
+use crate::eval::topics::top_terms;
+use crate::sparse::Csr;
+
+#[derive(Clone, Debug)]
+pub struct TopicModel {
+    /// term/topic factor (terms × k)
+    pub u: Csr,
+    /// document/topic factor (docs × k)
+    pub v: Csr,
+    pub terms: Vec<String>,
+    /// term → row id (built once at construction)
+    term_ids: std::collections::HashMap<String, usize>,
+}
+
+impl TopicModel {
+    pub fn new(u: Csr, v: Csr, terms: Vec<String>) -> Self {
+        assert_eq!(u.rows, terms.len());
+        let term_ids = terms
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i))
+            .collect();
+        TopicModel {
+            u,
+            v,
+            terms,
+            term_ids,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.u.cols
+    }
+
+    /// Top `n` terms of a topic, as (term, weight).
+    pub fn topic_terms(&self, topic: usize, n: usize) -> Vec<(String, f32)> {
+        if topic >= self.k() {
+            return Vec::new();
+        }
+        top_terms(&self.u, &self.terms, topic, n)
+    }
+
+    /// Classify a bag of words: per-topic score `Σ_w U[w, c]`, normalized
+    /// to sum 1 over topics (all-zero → uniform). Returns (topic, score)
+    /// descending.
+    pub fn classify<S: AsRef<str>>(&self, words: &[S]) -> Vec<(usize, f32)> {
+        let k = self.k();
+        let mut scores = vec![0.0f32; k];
+        for w in words {
+            if let Some(&row) = self.term_ids.get(&w.as_ref().to_lowercase()) {
+                let (idx, val) = self.u.row(row);
+                for (&c, &v) in idx.iter().zip(val) {
+                    scores[c as usize] += v;
+                }
+            }
+        }
+        let total: f32 = scores.iter().sum();
+        if total > 0.0 {
+            for s in &mut scores {
+                *s /= total;
+            }
+        } else if k > 0 {
+            for s in &mut scores {
+                *s = 1.0 / k as f32;
+            }
+        }
+        let mut ranked: Vec<(usize, f32)> = scores.into_iter().enumerate().collect();
+        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        ranked
+    }
+
+    /// Documents most associated with a topic: (doc id, weight) descending.
+    pub fn topic_documents(&self, topic: usize, n: usize) -> Vec<(usize, f32)> {
+        let mut docs: Vec<(usize, f32)> = (0..self.v.rows)
+            .filter_map(|d| {
+                let w = self.v.get(d, topic);
+                (w != 0.0).then_some((d, w))
+            })
+            .collect();
+        docs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        docs.truncate(n);
+        docs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> TopicModel {
+        let u = Csr::from_dense(4, 2, &[
+            0.9, 0.0, //
+            0.6, 0.0, //
+            0.0, 0.8, //
+            0.0, 0.5,
+        ]);
+        let v = Csr::from_dense(3, 2, &[0.7, 0.0, 0.0, 0.9, 0.2, 0.1]);
+        let terms = ["coffee", "crop", "electrons", "atoms"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        TopicModel::new(u, v, terms)
+    }
+
+    #[test]
+    fn topic_terms_sorted() {
+        let m = model();
+        let t = m.topic_terms(0, 5);
+        assert_eq!(t[0].0, "coffee");
+        assert_eq!(t.len(), 2);
+        assert!(m.topic_terms(7, 5).is_empty());
+    }
+
+    #[test]
+    fn classify_picks_right_topic() {
+        let m = model();
+        let r = m.classify(&["coffee", "crop"]);
+        assert_eq!(r[0].0, 0);
+        assert!(r[0].1 > 0.99);
+        let r = m.classify(&["Electrons"]); // case-insensitive
+        assert_eq!(r[0].0, 1);
+    }
+
+    #[test]
+    fn classify_unknown_words_uniform() {
+        let m = model();
+        let r = m.classify(&["zzzz"]);
+        assert!((r[0].1 - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topic_documents_ranked() {
+        let m = model();
+        let d = m.topic_documents(1, 10);
+        assert_eq!(d[0], (1, 0.9));
+        assert_eq!(d.len(), 2);
+    }
+}

@@ -1,0 +1,230 @@
+//! Topic-query server: a line-oriented TCP protocol over a frozen
+//! [`TopicModel`].
+//!
+//! ```text
+//! TOPICS                      → "OK k=<k>"
+//! TOPTERMS <topic> <n>        → "OK term:weight term:weight ..."
+//! CLASSIFY <word> <word> ...  → "OK topic:<id> score:<s> ..."
+//! DOCS <topic> <n>            → "OK doc:weight ..."
+//! STATS                       → "OK <metrics snapshot>"
+//! PING                        → "OK pong"
+//! QUIT                        → closes the connection
+//! ```
+//!
+//! Unknown commands answer `ERR ...`; every request is newline-delimited.
+
+use super::metrics::MetricsRegistry;
+use super::model::TopicModel;
+use crate::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+pub struct TopicServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Handle one protocol line. Public for direct unit testing.
+pub fn handle_command(model: &TopicModel, metrics: &MetricsRegistry, line: &str) -> String {
+    let mut parts = line.split_whitespace();
+    let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
+    match cmd.as_str() {
+        "TOPICS" => format!("OK k={}", model.k()),
+        "TOPTERMS" => {
+            let topic: usize = match parts.next().and_then(|s| s.parse().ok()) {
+                Some(t) => t,
+                None => return "ERR usage: TOPTERMS <topic> <n>".into(),
+            };
+            let n: usize = parts.next().and_then(|s| s.parse().ok()).unwrap_or(5);
+            if topic >= model.k() {
+                return format!("ERR topic {topic} out of range (k={})", model.k());
+            }
+            let terms = model.topic_terms(topic, n);
+            let body: Vec<String> = terms
+                .iter()
+                .map(|(t, w)| format!("{t}:{w:.4}"))
+                .collect();
+            format!("OK {}", body.join(" "))
+        }
+        "CLASSIFY" => {
+            let words: Vec<&str> = parts.collect();
+            if words.is_empty() {
+                return "ERR usage: CLASSIFY <word> ...".into();
+            }
+            let ranked = model.classify(&words);
+            let body: Vec<String> = ranked
+                .iter()
+                .take(3)
+                .map(|(t, s)| format!("topic:{t} score:{s:.4}"))
+                .collect();
+            format!("OK {}", body.join(" "))
+        }
+        "DOCS" => {
+            let topic: usize = match parts.next().and_then(|s| s.parse().ok()) {
+                Some(t) => t,
+                None => return "ERR usage: DOCS <topic> <n>".into(),
+            };
+            let n: usize = parts.next().and_then(|s| s.parse().ok()).unwrap_or(5);
+            if topic >= model.k() {
+                return format!("ERR topic {topic} out of range (k={})", model.k());
+            }
+            let docs = model.topic_documents(topic, n);
+            let body: Vec<String> =
+                docs.iter().map(|(d, w)| format!("{d}:{w:.4}")).collect();
+            format!("OK {}", body.join(" "))
+        }
+        "STATS" => format!("OK {}", metrics.format()),
+        "PING" => "OK pong".into(),
+        "" => "ERR empty command".into(),
+        other => format!("ERR unknown command {other:?}"),
+    }
+}
+
+fn serve_conn(stream: TcpStream, model: Arc<TopicModel>, metrics: MetricsRegistry) {
+    // line-oriented request/response: Nagle+delayed-ACK would add ~40 ms
+    // per round trip otherwise
+    let _ = stream.set_nodelay(true);
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    let requests = metrics.counter("server.requests");
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().eq_ignore_ascii_case("QUIT") {
+            let _ = writeln!(writer, "OK bye");
+            break;
+        }
+        requests.inc();
+        let response = handle_command(&model, &metrics, &line);
+        if writeln!(writer, "{response}").is_err() {
+            break;
+        }
+    }
+    crate::log_debug!("server", "connection from {peer:?} closed");
+}
+
+impl TopicServer {
+    /// Bind and start serving on `addr` (e.g. "127.0.0.1:0" for an
+    /// ephemeral port). Connections are handled on spawned threads.
+    pub fn start(addr: &str, model: Arc<TopicModel>, metrics: MetricsRegistry) -> Result<TopicServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("esnmf-server".into())
+            .spawn(move || {
+                let mut conns: Vec<JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let _ = stream.set_nonblocking(false);
+                            let model = Arc::clone(&model);
+                            let metrics = metrics.clone();
+                            conns.push(std::thread::spawn(move || {
+                                serve_conn(stream, model, metrics)
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })?;
+        Ok(TopicServer {
+            addr: local,
+            stop,
+            join: Some(join),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for TopicServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+
+    fn model() -> TopicModel {
+        let u = Csr::from_dense(3, 2, &[0.9, 0.0, 0.4, 0.0, 0.0, 0.7]);
+        let v = Csr::from_dense(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        TopicModel::new(
+            u,
+            v,
+            vec!["coffee".into(), "crop".into(), "electrons".into()],
+        )
+    }
+
+    #[test]
+    fn command_topics() {
+        let m = model();
+        let reg = MetricsRegistry::new();
+        assert_eq!(handle_command(&m, &reg, "TOPICS"), "OK k=2");
+    }
+
+    #[test]
+    fn command_topterms() {
+        let m = model();
+        let reg = MetricsRegistry::new();
+        let r = handle_command(&m, &reg, "TOPTERMS 0 2");
+        assert!(r.starts_with("OK coffee:0.9000"), "{r}");
+        assert!(handle_command(&m, &reg, "TOPTERMS 9 2").starts_with("ERR"));
+        assert!(handle_command(&m, &reg, "TOPTERMS").starts_with("ERR"));
+    }
+
+    #[test]
+    fn command_classify_and_docs() {
+        let m = model();
+        let reg = MetricsRegistry::new();
+        let r = handle_command(&m, &reg, "CLASSIFY electrons");
+        assert!(r.contains("topic:1"), "{r}");
+        let r = handle_command(&m, &reg, "DOCS 0 5");
+        assert!(r.starts_with("OK 0:1.0000"), "{r}");
+        assert!(handle_command(&m, &reg, "CLASSIFY").starts_with("ERR"));
+    }
+
+    #[test]
+    fn command_errors() {
+        let m = model();
+        let reg = MetricsRegistry::new();
+        assert!(handle_command(&m, &reg, "FLY me to the moon").starts_with("ERR"));
+        assert!(handle_command(&m, &reg, "").starts_with("ERR"));
+        assert_eq!(handle_command(&m, &reg, "PING"), "OK pong");
+    }
+
+    // Full TCP round-trip lives in rust/tests/integration_server.rs.
+}

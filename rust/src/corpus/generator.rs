@@ -1,0 +1,233 @@
+//! Planted-topic bag-of-words corpus generator.
+//!
+//! Each document draws a primary (and, with probability `mixture`, a
+//! secondary) planted topic; tokens come from the topic's Zipf-distributed
+//! vocabulary or a shared background vocabulary. Ground-truth topic labels
+//! ride along for the Eq. 3.3 accuracy measure.
+
+use super::words::{topic_vocab, BACKGROUND};
+use crate::text::{TdmBuilder, TermDocMatrix};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TopicSpec {
+    pub name: String,
+    pub seeds: Vec<&'static str>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub name: String,
+    pub topics: Vec<TopicSpec>,
+    pub n_docs: usize,
+    /// mean document length in tokens (lognormal-ish spread)
+    pub doc_len_mean: usize,
+    /// synthetic tail words added to each topic vocabulary
+    pub topic_tail: usize,
+    /// synthetic tail words added to the background vocabulary
+    pub background_tail: usize,
+    /// probability a token is drawn from the background vocabulary
+    pub background_frac: f64,
+    /// probability a document mixes in a secondary topic
+    pub mixture: f64,
+    /// Zipf exponent for within-vocabulary rank weights
+    pub zipf_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Document {
+    pub tokens: Vec<String>,
+    /// planted primary topic index
+    pub label: u32,
+}
+
+/// Precomputed Zipf CDF over a vocabulary.
+struct ZipfTable<'a> {
+    vocab: &'a [String],
+    cdf: Vec<f64>,
+}
+
+impl<'a> ZipfTable<'a> {
+    fn new(vocab: &'a [String], s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(vocab.len());
+        let mut acc = 0.0;
+        for rank in 1..=vocab.len() {
+            acc += 1.0 / (rank as f64).powf(s);
+            cdf.push(acc);
+        }
+        ZipfTable { vocab, cdf }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> &'a str {
+        let total = *self.cdf.last().expect("empty vocabulary");
+        let x = rng.f64() * total;
+        let idx = self.cdf.partition_point(|&c| c < x);
+        &self.vocab[idx.min(self.vocab.len() - 1)]
+    }
+}
+
+/// Generate the documents of `spec` deterministically from `seed`.
+pub fn generate(spec: &CorpusSpec, seed: u64) -> Vec<Document> {
+    assert!(!spec.topics.is_empty(), "corpus needs at least one topic");
+    let mut rng = Rng::new(seed ^ 0x00e5_0000_0000_0001);
+
+    let topic_vocabs: Vec<Vec<String>> = spec
+        .topics
+        .iter()
+        .map(|t| topic_vocab(&t.name, &t.seeds, spec.topic_tail))
+        .collect();
+    let background_vocab = topic_vocab("background", BACKGROUND, spec.background_tail);
+
+    let topic_tables: Vec<ZipfTable> = topic_vocabs
+        .iter()
+        .map(|v| ZipfTable::new(v, spec.zipf_s))
+        .collect();
+    let background_table = ZipfTable::new(&background_vocab, spec.zipf_s);
+
+    let mut docs = Vec::with_capacity(spec.n_docs);
+    for _ in 0..spec.n_docs {
+        let primary = rng.below(spec.topics.len());
+        let secondary = if spec.topics.len() > 1 && rng.f64() < spec.mixture {
+            let mut s = rng.below(spec.topics.len() - 1);
+            if s >= primary {
+                s += 1;
+            }
+            Some(s)
+        } else {
+            None
+        };
+        // lognormal-ish length, clamped to at least 8 tokens
+        let len = ((spec.doc_len_mean as f64) * (0.35 * rng.normal()).exp())
+            .round()
+            .max(8.0) as usize;
+        let mut tokens = Vec::with_capacity(len);
+        for _ in 0..len {
+            let word = if rng.f64() < spec.background_frac {
+                background_table.sample(&mut rng)
+            } else {
+                let topic = match secondary {
+                    Some(s) if rng.f64() < 0.4 => s,
+                    _ => primary,
+                };
+                topic_tables[topic].sample(&mut rng)
+            };
+            tokens.push(word.to_string());
+        }
+        docs.push(Document {
+            tokens,
+            label: primary as u32,
+        });
+    }
+    docs
+}
+
+/// Generate and freeze straight to a term-document matrix.
+pub fn generate_tdm(spec: &CorpusSpec, seed: u64) -> TermDocMatrix {
+    let docs = generate(spec, seed);
+    let mut builder = TdmBuilder::new();
+    for doc in &docs {
+        let label = &spec.topics[doc.label as usize].name;
+        builder.add_tokens(&doc.tokens, Some(label));
+    }
+    builder.freeze()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::words;
+
+    fn tiny_spec() -> CorpusSpec {
+        CorpusSpec {
+            name: "tiny".into(),
+            topics: vec![
+                TopicSpec {
+                    name: "coffee".into(),
+                    seeds: words::COFFEE.to_vec(),
+                },
+                TopicSpec {
+                    name: "science".into(),
+                    seeds: words::SCIENCE.to_vec(),
+                },
+            ],
+            n_docs: 60,
+            doc_len_mean: 50,
+            topic_tail: 30,
+            background_tail: 30,
+            background_frac: 0.3,
+            mixture: 0.1,
+            zipf_s: 1.05,
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = tiny_spec();
+        let a = generate(&spec, 42);
+        let b = generate(&spec, 42);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[0].tokens, b[0].tokens);
+        let c = generate(&spec, 43);
+        assert_ne!(a[0].tokens, c[0].tokens);
+    }
+
+    #[test]
+    fn documents_have_plausible_lengths_and_labels() {
+        let spec = tiny_spec();
+        let docs = generate(&spec, 1);
+        assert_eq!(docs.len(), 60);
+        for d in &docs {
+            assert!(d.tokens.len() >= 8);
+            assert!((d.label as usize) < spec.topics.len());
+        }
+        // both topics appear
+        let labels: std::collections::HashSet<u32> =
+            docs.iter().map(|d| d.label).collect();
+        assert_eq!(labels.len(), 2);
+    }
+
+    #[test]
+    fn topic_words_dominate_their_topic() {
+        let spec = tiny_spec();
+        let docs = generate(&spec, 7);
+        let mut coffee_in_coffee = 0usize;
+        let mut coffee_in_science = 0usize;
+        for d in &docs {
+            let hits = d.tokens.iter().filter(|t| t.as_str() == "coffee").count();
+            if d.label == 0 {
+                coffee_in_coffee += hits;
+            } else {
+                coffee_in_science += hits;
+            }
+        }
+        assert!(
+            coffee_in_coffee > coffee_in_science * 3,
+            "planted structure too weak: {coffee_in_coffee} vs {coffee_in_science}"
+        );
+    }
+
+    #[test]
+    fn tdm_pipeline_produces_sparse_labeled_matrix() {
+        let tdm = generate_tdm(&tiny_spec(), 3);
+        assert_eq!(tdm.n_docs(), 60);
+        assert!(tdm.n_terms() > 40, "only {} terms", tdm.n_terms());
+        assert!(tdm.a.sparsity() > 0.5, "sparsity {}", tdm.a.sparsity());
+        let labels = tdm.doc_labels.as_ref().unwrap();
+        assert_eq!(labels.len(), 60);
+        assert_eq!(tdm.label_names.len(), 2);
+    }
+
+    #[test]
+    fn zipf_head_is_most_frequent() {
+        let vocab: Vec<String> = (0..50).map(|i| format!("w{i}")).collect();
+        let table = ZipfTable::new(&vocab, 1.1);
+        let mut rng = Rng::new(9);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..20_000 {
+            let w = table.sample(&mut rng);
+            let idx: usize = w[1..].parse().unwrap();
+            counts[idx] += 1;
+        }
+        assert!(counts[0] > counts[10] && counts[10] > counts[40]);
+    }
+}

@@ -1,0 +1,88 @@
+//! Load a real corpus from disk: a directory of `.txt` files, optionally
+//! nested one level where the subdirectory name is the ground-truth label
+//! (`corpus/econ/doc1.txt` → label "econ").
+
+use crate::text::{TdmBuilder, TermDocMatrix};
+use anyhow::{Context, Result};
+use std::fs;
+use std::path::Path;
+
+/// Read every `*.txt` under `dir` (one level of label subdirectories
+/// supported) into a term-document matrix.
+pub fn load_dir(dir: &Path) -> Result<TermDocMatrix> {
+    let mut builder = TdmBuilder::new();
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .with_context(|| format!("reading corpus dir {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            let label = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .map(|s| s.to_string());
+            let mut files: Vec<_> = fs::read_dir(&path)?
+                .collect::<std::io::Result<Vec<_>>>()?;
+            files.sort_by_key(|e| e.path());
+            for f in files {
+                let fp = f.path();
+                if fp.extension().is_some_and(|e| e == "txt") {
+                    let text = fs::read_to_string(&fp)
+                        .with_context(|| format!("reading {}", fp.display()))?;
+                    builder.add_text(&text, label.as_deref());
+                }
+            }
+        } else if path.extension().is_some_and(|e| e == "txt") {
+            let text = fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            builder.add_text(&text, None);
+        }
+    }
+    anyhow::ensure!(builder.n_docs() > 0, "no .txt documents under {}", dir.display());
+    Ok(builder.freeze())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write(path: &Path, content: &str) {
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(path, content).unwrap();
+    }
+
+    #[test]
+    fn loads_flat_directory() {
+        let dir = std::env::temp_dir().join("esnmf_loader_flat");
+        let _ = fs::remove_dir_all(&dir);
+        write(&dir.join("a.txt"), "coffee crop coffee");
+        write(&dir.join("b.txt"), "coffee quotas market");
+        write(&dir.join("ignored.md"), "not loaded");
+        let tdm = load_dir(&dir).unwrap();
+        assert_eq!(tdm.n_docs(), 2);
+        assert!(tdm.doc_labels.is_none());
+    }
+
+    #[test]
+    fn loads_labeled_subdirectories() {
+        let dir = std::env::temp_dir().join("esnmf_loader_labeled");
+        let _ = fs::remove_dir_all(&dir);
+        write(&dir.join("econ/a.txt"), "coffee crop coffee market");
+        write(&dir.join("econ/b.txt"), "coffee futures market");
+        write(&dir.join("sci/c.txt"), "electrons atoms electrons");
+        let tdm = load_dir(&dir).unwrap();
+        assert_eq!(tdm.n_docs(), 3);
+        let labels = tdm.doc_labels.as_ref().unwrap();
+        assert_eq!(labels.len(), 3);
+        assert_eq!(tdm.label_names.len(), 2);
+    }
+
+    #[test]
+    fn empty_dir_errors() {
+        let dir = std::env::temp_dir().join("esnmf_loader_empty");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        assert!(load_dir(&dir).is_err());
+    }
+}

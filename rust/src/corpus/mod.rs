@@ -1,0 +1,17 @@
+//! Synthetic corpora standing in for the paper's datasets.
+//!
+//! The paper evaluates on Reuters-21578, a Wikipedia dump, and abstracts
+//! from five PubMed journals — none redistributable here. Per DESIGN.md
+//! §Substitutions we generate planted-topic bag-of-words corpora whose
+//! *structure* (document/term counts, Zipfian term use, distinct topical
+//! clusters, ground-truth labels) matches what the algorithms actually
+//! exercise; the convergence / sparsity / accuracy behaviour of ALS
+//! depends on that structure, not on the specific English words.
+
+pub mod generator;
+pub mod loader;
+pub mod presets;
+pub mod words;
+
+pub use generator::{CorpusSpec, Document, TopicSpec, generate, generate_tdm};
+pub use presets::{pubmed_sim, reuters_sim, wikipedia_sim, Scale};

@@ -1,0 +1,171 @@
+//! Corpus presets matched (structurally) to the paper's three datasets.
+//!
+//! Each preset accepts a [`Scale`] so tests run in milliseconds while the
+//! `Paper` scale approaches the dataset sizes reported in §3:
+//! Reuters-21578 (1,985 docs / 6,424 terms), Wikipedia (12,439 pages),
+//! PubMed 5-journal abstracts (7,510 docs / 20,112 terms).
+
+use super::generator::{CorpusSpec, TopicSpec};
+use super::words;
+
+/// How large to make a preset corpus.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// unit tests: hundreds of docs
+    Tiny,
+    /// benches/examples: ~1/4 of paper size
+    Small,
+    /// matches the paper's reported dataset sizes
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s.to_ascii_lowercase().as_str() {
+            "tiny" => Some(Scale::Tiny),
+            "small" => Some(Scale::Small),
+            "paper" | "full" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+
+    fn docs(self, paper: usize) -> usize {
+        match self {
+            Scale::Tiny => (paper / 20).max(100),
+            Scale::Small => paper / 4,
+            Scale::Paper => paper,
+        }
+    }
+
+    fn tail(self, paper: usize) -> usize {
+        match self {
+            Scale::Tiny => (paper / 10).max(40),
+            Scale::Small => paper / 3,
+            Scale::Paper => paper,
+        }
+    }
+}
+
+fn topics(specs: &[(&str, &'static [&'static str])]) -> Vec<TopicSpec> {
+    specs
+        .iter()
+        .map(|(name, seeds)| TopicSpec {
+            name: name.to_string(),
+            seeds: seeds.to_vec(),
+        })
+        .collect()
+}
+
+/// Newswire-like corpus standing in for Reuters-21578: five financial /
+/// commodity themes, short wire-story documents.
+pub fn reuters_sim(scale: Scale) -> CorpusSpec {
+    CorpusSpec {
+        name: "reuters-sim".into(),
+        topics: topics(&[
+            ("transport", words::TRANSPORT),
+            ("futures", words::FUTURES),
+            ("coffee", words::COFFEE),
+            ("buyback", words::BUYBACK),
+            ("currency", words::CURRENCY),
+        ]),
+        n_docs: scale.docs(1985),
+        doc_len_mean: 80,
+        // tails kept well below the doc count so each tail word occurs in
+        // many documents: the paper's row normalization (divide by row
+        // nnz) would otherwise let topic-pure rare words displace the
+        // seed vocabulary in every topic table (see DESIGN.md
+        // §Substitutions)
+        topic_tail: scale.tail(180),
+        background_tail: scale.tail(120),
+        background_frac: 0.35,
+        mixture: 0.15,
+        zipf_s: 1.05,
+    }
+}
+
+/// Encyclopedia-like corpus standing in for the Wikipedia dump: five
+/// broad themes with longer articles and a wide vocabulary tail.
+pub fn wikipedia_sim(scale: Scale) -> CorpusSpec {
+    CorpusSpec {
+        name: "wikipedia-sim".into(),
+        topics: topics(&[
+            ("government", words::GOVERNMENT),
+            ("science", words::SCIENCE),
+            ("music", words::MUSIC),
+            ("religion", words::RELIGION),
+            ("geography", words::GEOGRAPHY),
+        ]),
+        n_docs: scale.docs(12_439),
+        doc_len_mean: 160,
+        topic_tail: scale.tail(500),
+        background_tail: scale.tail(350),
+        background_frac: 0.40,
+        mixture: 0.20,
+        zipf_s: 1.02,
+    }
+}
+
+/// Abstract corpus standing in for the five PubMed journals; the topic
+/// name doubles as the ground-truth journal label for Eq. 3.3 accuracy.
+pub fn pubmed_sim(scale: Scale) -> CorpusSpec {
+    CorpusSpec {
+        name: "pubmed-sim".into(),
+        topics: topics(&[
+            ("bmc-bioinformatics", words::BIOINFORMATICS),
+            ("bmc-genetics", words::GENETICS),
+            ("bmc-medical-education", words::MEDICAL_EDUCATION),
+            ("bmc-neurology", words::NEUROLOGY),
+            ("bmc-psychiatry", words::PSYCHIATRY),
+        ]),
+        n_docs: scale.docs(7510),
+        doc_len_mean: 120,
+        topic_tail: scale.tail(380),
+        background_tail: scale.tail(280),
+        background_frac: 0.45,
+        mixture: 0.10,
+        zipf_s: 1.05,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generator::generate_tdm;
+
+    #[test]
+    fn scales_order() {
+        let spec_t = reuters_sim(Scale::Tiny);
+        let spec_s = reuters_sim(Scale::Small);
+        let spec_p = reuters_sim(Scale::Paper);
+        assert!(spec_t.n_docs < spec_s.n_docs && spec_s.n_docs < spec_p.n_docs);
+        assert_eq!(spec_p.n_docs, 1985);
+    }
+
+    #[test]
+    fn presets_have_five_topics() {
+        for spec in [
+            reuters_sim(Scale::Tiny),
+            wikipedia_sim(Scale::Tiny),
+            pubmed_sim(Scale::Tiny),
+        ] {
+            assert_eq!(spec.topics.len(), 5, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn tiny_reuters_matrix_is_very_sparse() {
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 42);
+        // the paper's data matrices are ~99.6% sparse; tiny scale is less
+        // extreme but must still be clearly sparse
+        assert!(tdm.a.sparsity() > 0.85, "sparsity {}", tdm.a.sparsity());
+        assert!(tdm.n_terms() > 200);
+        assert_eq!(tdm.label_names.len(), 5);
+    }
+
+    #[test]
+    fn scale_parse() {
+        assert_eq!(Scale::parse("tiny"), Some(Scale::Tiny));
+        assert_eq!(Scale::parse("PAPER"), Some(Scale::Paper));
+        assert_eq!(Scale::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,214 @@
+//! Seed vocabularies for the planted topics, plus a deterministic
+//! pronounceable-word generator for the long Zipf tail.
+//!
+//! Seed words sit at the head of each topic's Zipf distribution so the
+//! topic tables printed by the figure-7/table-1 experiments read like the
+//! paper's (coffee/quotas/…, electrons/atoms/…), while the synthetic tail
+//! provides realistic vocabulary breadth.
+
+use crate::util::rng::Rng;
+
+const ONSETS: &[&str] = &[
+    "b", "c", "d", "f", "g", "h", "j", "k", "l", "m", "n", "p", "r", "s",
+    "t", "v", "w", "z", "br", "cr", "dr", "fr", "gr", "pr", "tr", "st",
+    "sp", "sl", "pl", "cl", "th", "sh", "ch",
+];
+const NUCLEI: &[&str] = &["a", "e", "i", "o", "u", "ai", "ea", "ou", "io"];
+const CODAS: &[&str] = &["", "n", "r", "s", "t", "l", "m", "nd", "st", "rm", "ck"];
+
+/// Deterministic pronounceable pseudo-word for (namespace, index).
+pub fn synth_word(namespace: &str, index: usize) -> String {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in namespace.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+    }
+    h = (h ^ index as u64).wrapping_mul(0x1000_0000_01b3);
+    let mut rng = Rng::new(h);
+    let syllables = 2 + rng.below(2);
+    let mut w = String::new();
+    for _ in 0..syllables {
+        w.push_str(ONSETS[rng.below(ONSETS.len())]);
+        w.push_str(NUCLEI[rng.below(NUCLEI.len())]);
+    }
+    w.push_str(CODAS[rng.below(CODAS.len())]);
+    // disambiguate rare collisions across namespaces deterministically
+    if index % 7 == 3 {
+        w.push_str(match index % 3 {
+            0 => "ia",
+            1 => "or",
+            _ => "um",
+        });
+    }
+    w
+}
+
+/// Build a topic vocabulary: seeds first (Zipf head), then synthetic tail.
+pub fn topic_vocab(name: &str, seeds: &[&str], tail: usize) -> Vec<String> {
+    let mut v: Vec<String> = seeds.iter().map(|s| s.to_string()).collect();
+    let mut i = 0usize;
+    while v.len() < seeds.len() + tail {
+        let w = synth_word(name, i);
+        i += 1;
+        if !v.contains(&w) {
+            v.push(w);
+        }
+    }
+    v
+}
+
+// --- seed word lists per planted theme -------------------------------------
+
+pub const TRANSPORT: &[&str] = &[
+    "miles", "load", "factor", "revenue", "passenger", "airline", "traffic",
+    "cargo", "flights", "carriers", "fleet", "routes", "freight", "aviation",
+    "airports", "travel", "fares", "jet", "fuel", "capacity",
+];
+
+pub const FUTURES: &[&str] = &[
+    "risk", "contracts", "paper", "proposals", "futures", "exchange",
+    "trading", "options", "hedge", "margin", "settlement", "clearing",
+    "commodity", "speculators", "volume", "delivery", "positions", "brokers",
+    "regulators", "volatility",
+];
+
+pub const COFFEE: &[&str] = &[
+    "coffee", "quotas", "ico", "crop", "colombia", "producer", "brazil",
+    "export", "bags", "harvest", "beans", "prices", "growers", "roasters",
+    "stocks", "quota", "agreement", "market", "season", "output",
+];
+
+pub const BUYBACK: &[&str] = &[
+    "repurchase", "motors", "class", "spending", "buyback", "shares",
+    "shareholders", "dividend", "stock", "board", "equity", "outstanding",
+    "capital", "treasury", "common", "authorized", "program", "earnings",
+    "quarter", "split",
+];
+
+pub const CURRENCY: &[&str] = &[
+    "yen", "firms", "plaza", "currencies", "movements", "dollar", "exchange",
+    "intervention", "monetary", "rates", "central", "banks", "trade",
+    "deficit", "surplus", "accord", "stability", "depreciation", "mark",
+    "treasury",
+];
+
+pub const GOVERNMENT: &[&str] = &[
+    "government", "party", "war", "elections", "president", "election",
+    "parliament", "minister", "military", "soviet", "policy", "state",
+    "congress", "senate", "legislation", "vote", "coalition", "treaty",
+    "constitution", "democracy",
+];
+
+pub const SCIENCE: &[&str] = &[
+    "electrons", "electron", "atoms", "hydrogen", "isotopes", "atom",
+    "nucleus", "protons", "neutrons", "energy", "quantum", "particles",
+    "elements", "chemistry", "physics", "orbital", "molecules", "charge",
+    "mass", "radiation",
+];
+
+pub const MUSIC: &[&str] = &[
+    "album", "band", "albums", "music", "songs", "song", "guitar", "rock",
+    "released", "tour", "singer", "vocals", "records", "chart", "studio",
+    "label", "drums", "bass", "recording", "single",
+];
+
+pub const RELIGION: &[&str] = &[
+    "jewish", "jews", "judaism", "israel", "hebrew", "torah", "rabbi",
+    "synagogue", "holiday", "tradition", "community", "religious", "temple",
+    "faith", "scripture", "prayer", "covenant", "festival", "diaspora",
+    "kosher",
+];
+
+pub const SPORT: &[&str] = &[
+    "league", "game", "games", "players", "team", "season", "teams",
+    "championship", "coach", "football", "played", "club", "cup", "match",
+    "tournament", "stadium", "scored", "goals", "defense", "victory",
+];
+
+pub const GEOGRAPHY: &[&str] = &[
+    "city", "population", "airport", "census", "county", "region", "river",
+    "capital", "district", "area", "north", "south", "municipality", "town",
+    "border", "province", "coast", "climate", "settlement", "highway",
+];
+
+pub const FILM: &[&str] = &[
+    "film", "church", "empire", "country", "united", "movie", "director",
+    "actor", "cinema", "scene", "screen", "producer", "script", "awards",
+    "drama", "cast", "premiere", "studio", "role", "audience",
+];
+
+pub const BIOINFORMATICS: &[&str] = &[
+    "algorithm", "sequence", "genome", "protein", "alignment", "database",
+    "software", "annotation", "expression", "microarray", "clustering",
+    "prediction", "sequences", "computational", "gene", "analysis", "tool",
+    "dataset", "classifier", "pipeline",
+];
+
+pub const GENETICS: &[&str] = &[
+    "allele", "polymorphism", "linkage", "locus", "genotype", "inheritance",
+    "mutation", "chromosome", "marker", "snp", "haplotype", "pedigree",
+    "heritability", "phenotype", "variant", "recombination", "association",
+    "loci", "genomic", "alleles",
+];
+
+pub const MEDICAL_EDUCATION: &[&str] = &[
+    "students", "curriculum", "teaching", "education", "learning",
+    "training", "skills", "assessment", "medical", "faculty", "course",
+    "examination", "competence", "residents", "clinical", "feedback",
+    "simulation", "undergraduate", "lecture", "mentoring",
+];
+
+pub const NEUROLOGY: &[&str] = &[
+    "stroke", "seizure", "epilepsy", "migraine", "neurological", "brain",
+    "lesion", "cognitive", "dementia", "parkinson", "sclerosis", "motor",
+    "neuropathy", "cortex", "imaging", "mri", "symptoms", "headache",
+    "cerebral", "neurons",
+];
+
+pub const PSYCHIATRY: &[&str] = &[
+    "depression", "anxiety", "schizophrenia", "psychiatric", "disorder",
+    "symptoms", "mental", "therapy", "antidepressant", "mood", "bipolar",
+    "psychosis", "treatment", "suicide", "cognitive", "behavioral",
+    "diagnosis", "patients", "intervention", "stress",
+];
+
+pub const BACKGROUND: &[&str] = &[
+    "time", "people", "year", "years", "new", "first", "last", "world",
+    "report", "group", "number", "part", "case", "high", "long", "early",
+    "later", "major", "small", "large", "found", "called", "known", "used",
+    "made", "based", "including", "according", "results", "study", "work",
+    "system", "form", "three", "several", "important", "general", "common",
+    "recent", "total", "level", "order", "way", "end", "day", "week",
+    "month", "points", "data", "change",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_word_deterministic() {
+        assert_eq!(synth_word("coffee", 7), synth_word("coffee", 7));
+        assert_ne!(synth_word("coffee", 7), synth_word("coffee", 8));
+        assert_ne!(synth_word("coffee", 7), synth_word("music", 7));
+    }
+
+    #[test]
+    fn synth_words_are_tokenizable() {
+        for i in 0..50 {
+            let w = synth_word("test", i);
+            assert!(w.len() >= 2, "{w}");
+            assert!(w.chars().all(|c| c.is_ascii_lowercase()), "{w}");
+        }
+    }
+
+    #[test]
+    fn topic_vocab_has_requested_size_and_seeds_first() {
+        let v = topic_vocab("coffee", COFFEE, 100);
+        assert_eq!(v.len(), COFFEE.len() + 100);
+        assert_eq!(v[0], "coffee");
+        let mut dedup = v.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), v.len(), "vocabulary has duplicates");
+    }
+}

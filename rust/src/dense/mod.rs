@@ -1,0 +1,12 @@
+//! Small dense linear algebra: the (k, k) normal-equation solves of ALS.
+//!
+//! k is the topic count (≤ 64 in every experiment), so these are tiny
+//! matrices — no BLAS needed, but correctness and the exact regularization
+//! must match the Layer-2 JAX graph (`python/compile/model.py`) so the
+//! native and XLA backends produce interchangeable iterates.
+
+pub mod matrix;
+pub mod solve;
+
+pub use matrix::Mat;
+pub use solve::{inverse_spd, RIDGE_SCALE};

@@ -1,0 +1,158 @@
+//! SPD inverse for the (k, k) Gram matrices, with the same trace-scaled
+//! ridge as the Layer-2 JAX graph.
+//!
+//! `python/compile/model.py` inverts `S + εI` with
+//! `ε = RIDGE_SCALE·tr(S)/k + 1e-10`; we invert the identical matrix (via
+//! Cholesky, which is exact for SPD inputs), so the two backends produce
+//! the same ALS iterates to float tolerance. Keep `RIDGE_SCALE` in sync.
+
+use super::matrix::Mat;
+
+/// Must equal `model.RIDGE_SCALE` on the python side.
+pub const RIDGE_SCALE: f64 = 1e-6;
+
+/// Cholesky factorization of an SPD matrix: returns lower-triangular L
+/// with A = L·Lᵀ, or None if a pivot is non-positive.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for p in 0..j {
+                sum -= l.at(i, p) as f64 * l.at(j, p) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = sum.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (sum / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L·y = b then Lᵀ·x = y in place of b.
+fn cholesky_solve_vec(l: &Mat, b: &mut [f32]) {
+    let n = l.rows;
+    // forward substitution
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for p in 0..i {
+            sum -= l.at(i, p) as f64 * b[p] as f64;
+        }
+        b[i] = (sum / l.at(i, i) as f64) as f32;
+    }
+    // backward substitution with Lᵀ
+    for i in (0..n).rev() {
+        let mut sum = b[i] as f64;
+        for p in i + 1..n {
+            sum -= l.at(p, i) as f64 * b[p] as f64;
+        }
+        b[i] = (sum / l.at(i, i) as f64) as f32;
+    }
+}
+
+/// Inverse of the ridged Gram matrix `S + εI` (row-major (k,k) input and
+/// output). Never fails: the ridge makes the matrix strictly SPD even when
+/// topics are empty (S singular or zero).
+pub fn inverse_spd(s: &[f32], k: usize) -> Vec<f32> {
+    assert_eq!(s.len(), k * k);
+    let trace: f64 = (0..k).map(|i| s[i * k + i] as f64).sum();
+    let eps = (RIDGE_SCALE * trace / k as f64 + 1e-10) as f32;
+    let mut a = Mat::from_vec(k, k, s.to_vec());
+    for i in 0..k {
+        *a.at_mut(i, i) += eps;
+    }
+    let l = cholesky(&a).unwrap_or_else(|| {
+        // pathological float cancellation: fall back to a heavier ridge
+        let mut a2 = a.clone();
+        let bump = (trace / k as f64 * 1e-3 + 1e-6) as f32;
+        for i in 0..k {
+            *a2.at_mut(i, i) += bump;
+        }
+        cholesky(&a2).expect("Cholesky failed even with heavy ridge")
+    });
+    let mut inv = vec![0.0f32; k * k];
+    let mut col = vec![0.0f32; k];
+    for j in 0..k {
+        col.iter_mut().for_each(|x| *x = 0.0);
+        col[j] = 1.0;
+        cholesky_solve_vec(&l, &mut col);
+        for i in 0..k {
+            inv[i * k + j] = col[i];
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_spd(rng: &mut Rng, k: usize) -> Vec<f32> {
+        // X (k+3, k) → XᵀX is SPD almost surely
+        let n = k + 3;
+        let x: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let mut s = vec![0.0f32; k * k];
+        for r in 0..n {
+            for i in 0..k {
+                for j in 0..k {
+                    s[i * k + j] += x[r * k + i] * x[r * k + j];
+                }
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn inverse_times_original_is_identity() {
+        prop::check("spd-inverse", 1000, 48, |rng: &mut Rng| {
+            let k = rng.range(1, 10);
+            let s = random_spd(rng, k);
+            let inv = inverse_spd(&s, k);
+            // (S + eps I) * inv ≈ I; eps is tiny relative to trace
+            let trace: f64 = (0..k).map(|i| s[i * k + i] as f64).sum();
+            let eps = (RIDGE_SCALE * trace / k as f64 + 1e-10) as f32;
+            let mut sr = s.clone();
+            for i in 0..k {
+                sr[i * k + i] += eps;
+            }
+            let prod = Mat::from_vec(k, k, sr).matmul(&Mat::from_vec(k, k, inv));
+            let err = prod.max_abs_diff(&Mat::eye(k));
+            assert!(err < 1e-2, "k={k} err={err}");
+        });
+    }
+
+    #[test]
+    fn survives_zero_matrix() {
+        let inv = inverse_spd(&[0.0; 9], 3);
+        assert!(inv.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn survives_rank_deficiency() {
+        // rank-1: s = v vᵀ with v = (1, 2)
+        let s = [1.0, 2.0, 2.0, 4.0];
+        let inv = inverse_spd(&s, 2);
+        assert!(inv.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn scalar_case() {
+        let inv = inverse_spd(&[4.0], 1);
+        assert!((inv[0] - 0.25).abs() < 1e-3);
+    }
+}

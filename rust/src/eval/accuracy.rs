@@ -1,0 +1,162 @@
+//! Eq. 3.3 document-clustering accuracy.
+//!
+//! A document "belongs" to a topic when its entry in that column of V is
+//! nonzero. A topic's accuracy is the count of same-journal document
+//! pairs, affinely rescaled so that 1 = all documents from one journal
+//! and 0 = documents uniformly spread over the `n_J` journals:
+//!
+//! ```text
+//! Acc = (Σ_{i<k} Jnl(i,k) − α) / (β − α)
+//! α   = ⌊n_D/n_J⌋ · ( n_J(⌊n_D/n_J⌋−1)/2 + n_D mod n_J )
+//! β   = n_D(n_D−1)/2
+//! ```
+//!
+//! Topics with ≤ 1 member are defined to have Acc = 1.
+
+use crate::sparse::Csr;
+
+/// α of Eq. 3.4: same-journal pairs under the most-uniform assignment of
+/// `n_d` documents to `n_j` journals.
+pub fn alpha(n_d: usize, n_j: usize) -> f64 {
+    assert!(n_j > 0);
+    let q = n_d / n_j;
+    let r = n_d % n_j;
+    q as f64 * ((n_j * (q.saturating_sub(1))) as f64 / 2.0 + r as f64)
+}
+
+/// β of Eq. 3.4: all document pairs.
+pub fn beta(n_d: usize) -> f64 {
+    (n_d * n_d.saturating_sub(1)) as f64 / 2.0
+}
+
+/// Accuracy of one topic given the journal labels of its member docs.
+pub fn accuracy_from_members(member_labels: &[u32], n_journals: usize) -> f64 {
+    let n_d = member_labels.len();
+    if n_d <= 1 {
+        return 1.0;
+    }
+    // count same-journal pairs via per-journal membership counts
+    let mut counts = std::collections::HashMap::new();
+    for &l in member_labels {
+        *counts.entry(l).or_insert(0usize) += 1;
+    }
+    let same: f64 = counts
+        .values()
+        .map(|&c| (c * (c - 1)) as f64 / 2.0)
+        .sum();
+    let a = alpha(n_d, n_journals);
+    let b = beta(n_d);
+    if (b - a).abs() < f64::EPSILON {
+        return 1.0; // degenerate: uniform == clustered (e.g. n_d < n_j small cases)
+    }
+    (same - a) / (b - a)
+}
+
+/// Accuracy of topic `col` of `v` (docs × topics) against `labels`.
+pub fn topic_accuracy(v: &Csr, col: usize, labels: &[u32], n_journals: usize) -> f64 {
+    assert_eq!(v.rows, labels.len(), "labels must cover every document");
+    let mut members = Vec::new();
+    for doc in 0..v.rows {
+        if v.get(doc, col) != 0.0 {
+            members.push(labels[doc]);
+        }
+    }
+    accuracy_from_members(&members, n_journals)
+}
+
+/// Mean over all topic columns — the quantity plotted in Figs. 4/5/8.
+pub fn mean_topic_accuracy(v: &Csr, labels: &[u32], n_journals: usize) -> f64 {
+    if v.cols == 0 {
+        return 0.0;
+    }
+    // column membership via one CSR scan instead of v.cols point lookups
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); v.cols];
+    for doc in 0..v.rows {
+        let (idx, _) = v.row(doc);
+        for &c in idx {
+            members[c as usize].push(labels[doc]);
+        }
+    }
+    members
+        .iter()
+        .map(|m| accuracy_from_members(m, n_journals))
+        .sum::<f64>()
+        / v.cols as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_beta_formulas() {
+        // 6 docs, 3 journals: uniform = 2 per journal → 3 pairs
+        assert_eq!(alpha(6, 3), 3.0);
+        assert_eq!(beta(6), 15.0);
+        // 7 docs, 3 journals: (3,2,2) → 3+1+1 = 5... Eq 3.4: q=2, r=1:
+        // 2*((3*1)/2 + 1) = 2*(1.5+1) = 5
+        assert_eq!(alpha(7, 3), 5.0);
+    }
+
+    #[test]
+    fn perfect_cluster_scores_one() {
+        let labels = vec![2u32; 10];
+        assert!((accuracy_from_members(&labels, 5) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_spread_scores_zero() {
+        // 10 docs over 5 journals, 2 each
+        let labels: Vec<u32> = (0..10).map(|i| (i % 5) as u32).collect();
+        assert!(accuracy_from_members(&labels, 5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singleton_and_empty_topics_score_one() {
+        assert_eq!(accuracy_from_members(&[], 5), 1.0);
+        assert_eq!(accuracy_from_members(&[3], 5), 1.0);
+    }
+
+    #[test]
+    fn accuracy_is_bounded() {
+        use crate::util::prop;
+        use crate::util::rng::Rng;
+        prop::check("accuracy-bounds", 1500, 64, |rng: &mut Rng| {
+            let n_j = rng.range(1, 6);
+            let n_d = rng.range(0, 40);
+            let labels: Vec<u32> = (0..n_d).map(|_| rng.below(n_j) as u32).collect();
+            let acc = accuracy_from_members(&labels, n_j);
+            assert!(
+                (-1.0..=1.0 + 1e-9).contains(&acc),
+                "acc {acc} out of range for labels {labels:?} n_j {n_j}"
+            );
+        });
+    }
+
+    #[test]
+    fn topic_accuracy_reads_column_membership() {
+        // V: 4 docs × 2 topics; docs 0,1 in topic 0; docs 2,3 in topic 1
+        let v = Csr::from_dense(4, 2, &[
+            0.5, 0.0, //
+            0.3, 0.0, //
+            0.0, 0.9, //
+            0.0, 0.1,
+        ]);
+        let labels = vec![0, 0, 1, 0];
+        assert_eq!(topic_accuracy(&v, 0, &labels, 2), 1.0);
+        // topic 1 members have labels {1, 0}: 0 same pairs of 1 total,
+        // α(2,2)=0, β=1 → 0
+        assert_eq!(topic_accuracy(&v, 1, &labels, 2), 0.0);
+        assert_eq!(mean_topic_accuracy(&v, &labels, 2), 0.5);
+    }
+
+    #[test]
+    fn mean_accuracy_matches_per_topic() {
+        let v = Csr::from_dense(3, 2, &[1.0, 1.0, 1.0, 0.0, 0.0, 1.0]);
+        let labels = vec![0, 0, 1];
+        let want = (topic_accuracy(&v, 0, &labels, 2)
+            + topic_accuracy(&v, 1, &labels, 2))
+            / 2.0;
+        assert!((mean_topic_accuracy(&v, &labels, 2) - want).abs() < 1e-12);
+    }
+}

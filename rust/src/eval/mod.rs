@@ -1,0 +1,15 @@
+//! Evaluation: the paper's §3 measures.
+//!
+//! * [`accuracy`] — Eq. 3.3 document-clustering accuracy against
+//!   ground-truth journal labels.
+//! * [`topics`] — top-magnitude terms per topic (the Fig. 2/7 and Table 1
+//!   topic tables) and nonzero-distribution statistics.
+//! * [`sparsity`] — the Fig. 1 sparsity table for A, U, V and U·Vᵀ.
+
+pub mod accuracy;
+pub mod sparsity;
+pub mod topics;
+
+pub use accuracy::{mean_topic_accuracy, topic_accuracy};
+pub use sparsity::SparsityReport;
+pub use topics::{top_terms, topic_term_table};

@@ -1,0 +1,107 @@
+//! The Fig. 1 sparsity report: how dense the factors (and their product)
+//! become under plain projected ALS versus enforced sparsity.
+
+use crate::sparse::{ops, Csr};
+
+#[derive(Clone, Debug)]
+pub struct SparsityReport {
+    pub a_sparsity: f64,
+    pub u_sparsity: f64,
+    pub v_sparsity: f64,
+    pub uvt_sparsity: f64,
+    pub a_nnz: usize,
+    pub u_nnz: usize,
+    pub v_nnz: usize,
+    pub uvt_nnz: usize,
+}
+
+impl SparsityReport {
+    /// Compute the Fig. 1 rows. `U·Vᵀ`'s *structural* sparsity is computed
+    /// from the factor supports without materializing the dense product.
+    pub fn compute(a: &Csr, u: &Csr, v: &Csr) -> SparsityReport {
+        let uvt = ops::spmm(u, &v.transpose());
+        SparsityReport {
+            a_sparsity: a.sparsity(),
+            u_sparsity: u.sparsity(),
+            v_sparsity: v.sparsity(),
+            uvt_sparsity: uvt.sparsity(),
+            a_nnz: a.nnz(),
+            u_nnz: u.nnz(),
+            v_nnz: v.nnz(),
+            uvt_nnz: uvt.nnz(),
+        }
+    }
+
+    /// Markdown rows in the paper's Fig. 1 layout.
+    pub fn format(&self, dataset: &str) -> String {
+        format!(
+            "{dataset}\nMatrix | Sparsity | NNZ\n--- | --- | ---\nA | {:.2}% | {}\nU | {:.2}% | {}\nV | {:.2}% | {}\nUV^T | {:.2}% | {}\n",
+            self.a_sparsity * 100.0,
+            self.a_nnz,
+            self.u_sparsity * 100.0,
+            self.u_nnz,
+            self.v_sparsity * 100.0,
+            self.v_nnz,
+            self.uvt_sparsity * 100.0,
+            self.uvt_nnz,
+        )
+    }
+}
+
+/// Hoyer's sparsity measure (the constraint used by [10] in the paper):
+/// `(√n − ‖x‖₁/‖x‖₂) / (√n − 1)` over the matrix entries. 1 = a single
+/// nonzero, 0 = all entries equal. Complements the exact-zero fraction —
+/// it also sees "soft" sparsity in the value distribution.
+pub fn hoyer_sparsity(m: &Csr) -> f64 {
+    let n = (m.rows * m.cols) as f64;
+    if n <= 1.0 {
+        return 0.0;
+    }
+    let l1: f64 = m.values.iter().map(|&v| v.abs() as f64).sum();
+    let l2 = m.fro_norm();
+    if l2 == 0.0 {
+        return 0.0; // all-zero matrix: measure undefined; report 0
+    }
+    let root_n = n.sqrt();
+    ((root_n - l1 / l2) / (root_n - 1.0)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hoyer_extremes() {
+        // single nonzero → 1
+        let single = Csr::from_dense(2, 2, &[3.0, 0.0, 0.0, 0.0]);
+        assert!((hoyer_sparsity(&single) - 1.0).abs() < 1e-9);
+        // all equal → 0
+        let flat = Csr::from_dense(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        assert!(hoyer_sparsity(&flat).abs() < 1e-9);
+        // zero matrix → 0 by convention
+        assert_eq!(hoyer_sparsity(&Csr::zeros(3, 3)), 0.0);
+    }
+
+    #[test]
+    fn hoyer_monotone_in_concentration() {
+        let spread = Csr::from_dense(1, 4, &[1.0, 1.0, 1.0, 1.0]);
+        let peaked = Csr::from_dense(1, 4, &[10.0, 0.1, 0.1, 0.1]);
+        assert!(hoyer_sparsity(&peaked) > hoyer_sparsity(&spread));
+    }
+
+    #[test]
+    fn report_values() {
+        let a = Csr::from_dense(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let u = Csr::from_dense(2, 1, &[1.0, 0.0]);
+        let v = Csr::from_dense(2, 1, &[1.0, 1.0]);
+        let r = SparsityReport::compute(&a, &u, &v);
+        assert_eq!(r.a_sparsity, 0.5);
+        assert_eq!(r.u_sparsity, 0.5);
+        assert_eq!(r.v_sparsity, 0.0);
+        // u vᵀ = [[1,1],[0,0]] → sparsity 0.5
+        assert_eq!(r.uvt_sparsity, 0.5);
+        let s = r.format("test-data");
+        assert!(s.contains("test-data"));
+        assert!(s.contains("50.00%"));
+    }
+}

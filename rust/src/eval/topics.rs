@@ -1,0 +1,118 @@
+//! Topic inspection: the top-magnitude terms per topic (the tables of
+//! Fig. 2, Table 1 and Fig. 7) and per-column nonzero distribution.
+
+use crate::sparse::Csr;
+
+/// The `top` highest-magnitude terms of topic `col` of `u`
+/// (terms × topics), as (term string, weight), descending.
+pub fn top_terms(u: &Csr, terms: &[String], col: usize, top: usize) -> Vec<(String, f32)> {
+    assert_eq!(u.rows, terms.len(), "terms must cover every row of U");
+    let mut entries: Vec<(String, f32)> = Vec::new();
+    for r in 0..u.rows {
+        let v = u.get(r, col);
+        if v != 0.0 {
+            entries.push((terms[r].clone(), v));
+        }
+    }
+    entries.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+    entries.truncate(top);
+    entries
+}
+
+/// A printable table: one row per rank, one column per topic (the paper's
+/// topic-table layout). Topics with fewer terms get blank cells.
+pub fn topic_term_table(u: &Csr, terms: &[String], top: usize) -> Vec<Vec<String>> {
+    let per_topic: Vec<Vec<(String, f32)>> = (0..u.cols)
+        .map(|c| top_terms(u, terms, c, top))
+        .collect();
+    (0..top)
+        .map(|rank| {
+            per_topic
+                .iter()
+                .map(|t| t.get(rank).map(|(w, _)| w.clone()).unwrap_or_default())
+                .collect()
+        })
+        .collect()
+}
+
+/// Render the table with a header row, markdown-ish.
+pub fn format_topic_table(table: &[Vec<String>], k: usize) -> String {
+    let mut out = String::new();
+    let header: Vec<String> = (1..=k).map(|i| format!("Topic {i}")).collect();
+    out.push_str(&header.join(" | "));
+    out.push('\n');
+    out.push_str(&vec!["---"; k].join(" | "));
+    out.push('\n');
+    for row in table {
+        out.push_str(&row.join(" | "));
+        out.push('\n');
+    }
+    out
+}
+
+/// Coefficient of variation of per-column nnz — the Table-1 "uneven
+/// distribution" statistic (0 = perfectly even).
+pub fn column_nnz_cv(m: &Csr) -> f64 {
+    let counts: Vec<f64> = m.col_nnz().iter().map(|&c| c as f64).collect();
+    let mean = crate::util::stats::mean(&counts);
+    if mean == 0.0 {
+        return 0.0;
+    }
+    crate::util::stats::stddev(&counts) / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (Csr, Vec<String>) {
+        let u = Csr::from_dense(4, 2, &[
+            0.9, 0.0, //
+            0.5, 0.1, //
+            0.0, 0.8, //
+            0.7, 0.0,
+        ]);
+        let terms = ["coffee", "crop", "electrons", "quotas"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        (u, terms)
+    }
+
+    #[test]
+    fn top_terms_ordered_by_magnitude() {
+        let (u, terms) = sample();
+        let t0 = top_terms(&u, &terms, 0, 5);
+        assert_eq!(
+            t0.iter().map(|(w, _)| w.as_str()).collect::<Vec<_>>(),
+            vec!["coffee", "quotas", "crop"]
+        );
+        let t1 = top_terms(&u, &terms, 1, 1);
+        assert_eq!(t1[0].0, "electrons");
+    }
+
+    #[test]
+    fn table_has_blank_cells_for_short_topics() {
+        let (u, terms) = sample();
+        let table = topic_term_table(&u, &terms, 3);
+        assert_eq!(table.len(), 3);
+        assert_eq!(table[0], vec!["coffee", "electrons"]);
+        assert_eq!(table[2], vec!["crop", ""]); // topic 2 has only 2 terms
+    }
+
+    #[test]
+    fn format_includes_header() {
+        let (u, terms) = sample();
+        let s = format_topic_table(&topic_term_table(&u, &terms, 2), 2);
+        assert!(s.starts_with("Topic 1 | Topic 2"));
+        assert!(s.contains("coffee"));
+    }
+
+    #[test]
+    fn cv_zero_for_even_distribution() {
+        let m = Csr::from_dense(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(column_nnz_cv(&m), 0.0);
+        let skew = Csr::from_dense(3, 2, &[1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+        assert!(column_nnz_cv(&skew) > 0.9);
+    }
+}

@@ -1,0 +1,81 @@
+//! Figure 2: error/residual per iteration with a 55-nonzero U versus fully
+//! dense, plus the two 5-term topic tables, on reuters-sim (k=5).
+
+use super::{corpus_tdm, fmt, print_table, ExpConfig};
+use crate::eval::topics::{format_topic_table, topic_term_table};
+use crate::nmf::{factorize, NmfOptions, SparsityMode};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::Result;
+
+pub fn run(cfg: &ExpConfig) -> Result<Json> {
+    let tdm = corpus_tdm("reuters", cfg)?;
+    let iters = cfg.iters(75);
+    let base = NmfOptions::new(5).with_iters(iters).with_seed(cfg.seed);
+
+    let sparse = factorize(
+        &tdm,
+        &base.clone().with_sparsity(SparsityMode::u_only(55)),
+    );
+    let dense = factorize(&tdm, &base);
+
+    let rows: Vec<Vec<String>> = (0..iters)
+        .map(|i| {
+            vec![
+                (i + 1).to_string(),
+                fmt(sparse.residuals[i]),
+                fmt(sparse.errors[i]),
+                fmt(dense.residuals[i]),
+                fmt(dense.errors[i]),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig. 2 — reuters-sim k=5: sparse-U(55) vs dense, per ALS iteration",
+        &["iter", "residual(sparse U)", "error(sparse U)", "residual(dense)", "error(dense)"],
+        &rows,
+    );
+
+    println!("\nSparsity-enforced U (55 nonzeros, 5 topics):");
+    print!("{}", format_topic_table(&topic_term_table(&sparse.u, &tdm.terms, 5), 5));
+    println!("\nFully dense U:");
+    print!("{}", format_topic_table(&topic_term_table(&dense.u, &tdm.terms, 5), 5));
+
+    let to_json = |xs: &[f64]| arr(xs.iter().map(|&x| num(x)).collect());
+    Ok(obj(vec![
+        ("experiment", s("fig2")),
+        ("sparse_residuals", to_json(&sparse.residuals)),
+        ("sparse_errors", to_json(&sparse.errors)),
+        ("dense_residuals", to_json(&dense.residuals)),
+        ("dense_errors", to_json(&dense.errors)),
+        ("sparse_u_nnz", num(sparse.u.nnz() as f64)),
+        ("dense_u_nnz", num(dense.u.nnz() as f64)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Scale;
+
+    #[test]
+    fn fig2_sparse_u_converges_no_slower_and_errs_higher() {
+        let cfg = ExpConfig {
+            scale: Scale::Tiny,
+            seed: 5,
+            fast: false,
+        };
+        // use a short but not smoke-short run for a meaningful comparison
+        let cfg = ExpConfig { fast: true, ..cfg };
+        let out = run(&cfg).unwrap();
+        let sparse_nnz = out.get("sparse_u_nnz").unwrap().as_f64().unwrap();
+        let dense_nnz = out.get("dense_u_nnz").unwrap().as_f64().unwrap();
+        assert!(sparse_nnz <= 55.0);
+        assert!(dense_nnz > sparse_nnz);
+        // paper shape: the enforced run's final error ≥ dense final error
+        let se = out.get("sparse_errors").unwrap().as_arr().unwrap();
+        let de = out.get("dense_errors").unwrap().as_arr().unwrap();
+        let s_last = se.last().unwrap().as_f64().unwrap();
+        let d_last = de.last().unwrap().as_f64().unwrap();
+        assert!(s_last >= d_last - 0.05, "sparse {s_last} vs dense {d_last}");
+    }
+}

@@ -1,0 +1,158 @@
+//! The experiment harness: one module per paper figure/table, shared by
+//! the CLI (`esnmf experiment <id>`) and the `cargo bench` targets.
+//!
+//! Every experiment prints the paper-shaped rows to stdout and returns a
+//! machine-readable [`Json`] blob (written to `results/` by the CLI).
+//! DESIGN.md maps each id to the paper artifact and the expected shape.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+
+use crate::corpus::{self, Scale};
+use crate::text::TermDocMatrix;
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::bail;
+
+/// Experiment ids in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "table1", "fig4", "fig5", "fig6", "fig7", "fig8",
+    "fig9",
+];
+
+/// Common knobs for every experiment.
+#[derive(Clone, Copy, Debug)]
+pub struct ExpConfig {
+    pub scale: Scale,
+    pub seed: u64,
+    /// shrink sweeps/iterations for CI smoke runs
+    pub fast: bool,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            scale: Scale::Small,
+            seed: 42,
+            fast: false,
+        }
+    }
+}
+
+impl ExpConfig {
+    pub fn iters(&self, full: usize) -> usize {
+        if self.fast {
+            (full / 10).max(2)
+        } else {
+            full
+        }
+    }
+}
+
+/// Run one experiment by id.
+pub fn run(id: &str, cfg: &ExpConfig) -> Result<Json> {
+    match id {
+        "fig1" => fig1::run(cfg),
+        "fig2" => fig2::run(cfg),
+        "fig3" => fig3::run(cfg),
+        "table1" => fig7::run_table1(cfg),
+        "fig4" => fig4::run(cfg),
+        "fig5" => fig5::run(cfg),
+        "fig6" => fig6::run(cfg),
+        "fig7" => fig7::run(cfg),
+        "fig8" => fig8::run(cfg),
+        "fig9" => fig9::run(cfg),
+        other => bail!("unknown experiment {other:?}; available: {ALL:?}"),
+    }
+}
+
+/// Build the preset corpus used by an experiment.
+pub fn corpus_tdm(name: &str, cfg: &ExpConfig) -> Result<TermDocMatrix> {
+    let spec = match name {
+        "reuters" => corpus::reuters_sim(cfg.scale),
+        "wikipedia" => corpus::wikipedia_sim(cfg.scale),
+        "pubmed" => corpus::pubmed_sim(cfg.scale),
+        other => bail!("unknown corpus preset {other:?}"),
+    };
+    Ok(corpus::generate_tdm(&spec, cfg.seed))
+}
+
+/// A geometric sweep of nonzero budgets from `lo` up to `hi`
+/// (inclusive-ish), `points` entries.
+pub fn nnz_sweep(lo: usize, hi: usize, points: usize) -> Vec<usize> {
+    assert!(lo >= 1 && hi >= lo && points >= 2);
+    let ratio = (hi as f64 / lo as f64).powf(1.0 / (points - 1) as f64);
+    let mut out: Vec<usize> = (0..points)
+        .map(|i| (lo as f64 * ratio.powi(i as i32)).round() as usize)
+        .collect();
+    out.dedup();
+    out
+}
+
+/// Print a markdown-ish table.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n### {title}");
+    println!("{}", header.join(" | "));
+    println!("{}", vec!["---"; header.len()].join(" | "));
+    for row in rows {
+        println!("{}", row.join(" | "));
+    }
+}
+
+pub fn fmt(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 0.01 && x.abs() < 10000.0 {
+        format!("{x:.4}")
+    } else {
+        format!("{x:.3e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_is_geometric_and_monotone() {
+        let s = nnz_sweep(10, 10_000, 7);
+        assert_eq!(s.first(), Some(&10));
+        assert!(*s.last().unwrap() >= 9_900);
+        for w in s.windows(2) {
+            assert!(w[0] < w[1], "{s:?}");
+        }
+    }
+
+    #[test]
+    fn sweep_handles_tight_range() {
+        let s = nnz_sweep(5, 6, 4);
+        assert!(!s.is_empty());
+        assert!(s.iter().all(|&x| (5..=6).contains(&x)));
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run("fig99", &ExpConfig::default()).is_err());
+    }
+
+    #[test]
+    fn corpus_presets_resolve() {
+        let cfg = ExpConfig {
+            scale: Scale::Tiny,
+            seed: 1,
+            fast: true,
+        };
+        for name in ["reuters", "wikipedia", "pubmed"] {
+            let tdm = corpus_tdm(name, &cfg).unwrap();
+            assert!(tdm.n_docs() > 0, "{name}");
+        }
+        assert!(corpus_tdm("nope", &cfg).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! # esnmf — Enforced Sparse Non-Negative Matrix Factorization
+//!
+//! A production-shaped reproduction of *"Enforced Sparse Non-Negative
+//! Matrix Factorization"* (Gavin, Gadepally, Kepner; IPDPSW 2016,
+//! DOI 10.1109/IPDPSW.2016.58) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: corpus ingestion, the
+//!   sparse-matrix substrate, the four NMF solvers of the paper
+//!   (projected ALS, enforced-sparsity ALS, column-wise enforcement,
+//!   sequential ALS), evaluation, job scheduling, a topic-query server,
+//!   and the experiment harness that regenerates every figure/table.
+//! * **Layer 2** — a JAX compute graph (one fused ALS iteration) lowered
+//!   once at build time to HLO text artifacts (`python/compile/`).
+//! * **Layer 1** — Pallas kernels for the ALS hot spots, embedded in the
+//!   Layer-2 graph (`python/compile/kernels/`).
+//!
+//! Python never runs on the request path: [`runtime`] loads the AOT
+//! artifacts through PJRT and [`backend::XlaBackend`] drives them from
+//! rust. The [`backend::NativeBackend`] implements the same iteration over
+//! the sparse substrate — that is where the paper's memory claims live.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod backend;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod dense;
+pub mod eval;
+pub mod experiments;
+pub mod nmf;
+pub mod runtime;
+pub mod sparse;
+pub mod text;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

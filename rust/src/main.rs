@@ -1,0 +1,332 @@
+//! esnmf — CLI for the Enforced Sparse NMF system.
+//!
+//! Subcommands:
+//! * `factorize`  — run one factorization (native or XLA backend) and
+//!                  print convergence + topic tables.
+//! * `experiment` — regenerate a paper figure/table (`fig1`..`fig9`,
+//!                  `table1`, or `all`).
+//! * `serve`      — factorize a corpus, then serve topic queries over TCP.
+//! * `gen-corpus` — write a synthetic preset corpus to disk as .txt files.
+//! * `artifacts`  — inspect/smoke-test the compiled XLA artifacts.
+
+use esnmf::backend::{AlsBackend, BackendKind, NativeBackend, XlaBackend};
+use esnmf::cli::Args;
+use esnmf::config::{Algorithm, ConfigFile, RunConfig};
+use esnmf::coordinator::{MetricsRegistry, TopicModel, TopicServer};
+use esnmf::corpus::{self, Scale};
+use esnmf::eval::topics::{format_topic_table, topic_term_table};
+use esnmf::eval::{mean_topic_accuracy, SparsityReport};
+use esnmf::experiments::{self, ExpConfig};
+use esnmf::nmf::factorize_sequential;
+use esnmf::runtime::{self, ProgramKind, XlaExecutor};
+use esnmf::text::TermDocMatrix;
+use esnmf::util::logging;
+use esnmf::{log_info, Result};
+use std::sync::Arc;
+
+const USAGE: &str = r#"esnmf — Enforced Sparse Non-Negative Matrix Factorization
+
+USAGE:
+  esnmf factorize  [--corpus reuters|wikipedia|pubmed|dir:<path>] [--scale tiny|small|paper]
+                   [--k N] [--iters N] [--sparsity none|both|u|v|percol] [--t-u N] [--t-v N]
+                   [--algorithm als|seq] [--backend native|xla] [--seed N] [--init-nnz N]
+                   [--config file.toml] [--top N]
+  esnmf experiment <fig1|fig2|fig3|table1|fig4|fig5|fig6|fig7|fig8|fig9|all>
+                   [--scale ...] [--seed N] [--fast] [--out results/]
+  esnmf serve      [--addr 127.0.0.1:7878] [factorize flags]
+  esnmf gen-corpus [--corpus ...] [--scale ...] [--seed N] --out <dir>
+  esnmf artifacts  [--dir artifacts/]
+  esnmf help
+"#;
+
+fn main() {
+    logging::level_from_env();
+    let exit = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(exit);
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env().map_err(anyhow::Error::msg)?;
+    if args.flag("verbose") {
+        logging::set_level(logging::Level::Debug);
+    }
+    if args.flag("quiet") {
+        logging::set_level(logging::Level::Warn);
+    }
+    match args.subcommand.clone().as_deref() {
+        Some("factorize") => cmd_factorize(&mut args),
+        Some("experiment") => cmd_experiment(&mut args),
+        Some("serve") => cmd_serve(&mut args),
+        Some("gen-corpus") => cmd_gen_corpus(&mut args),
+        Some("artifacts") => cmd_artifacts(&mut args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn build_run_config(args: &mut Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    if let Some(path) = args.opt_str("config") {
+        let file = ConfigFile::load(std::path::Path::new(&path))
+            .map_err(anyhow::Error::msg)?;
+        cfg.apply_file(&file)?;
+    }
+    if let Some(v) = args.opt_str("corpus") {
+        cfg.corpus = v;
+    }
+    if let Some(v) = args.opt_str("scale") {
+        cfg.scale = Scale::parse(&v).ok_or_else(|| anyhow::anyhow!("bad --scale {v}"))?;
+    }
+    if let Some(v) = args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.opt_str("algorithm") {
+        cfg.algorithm = match v.as_str() {
+            "als" => Algorithm::Als,
+            "seq" | "sequential" => Algorithm::Sequential,
+            other => anyhow::bail!("bad --algorithm {other}"),
+        };
+    }
+    if let Some(v) = args.opt_str("backend") {
+        cfg.backend =
+            BackendKind::parse(&v).ok_or_else(|| anyhow::anyhow!("bad --backend {v}"))?;
+    }
+    if let Some(v) = args.opt_parse::<usize>("k").map_err(anyhow::Error::msg)? {
+        cfg.k = v;
+    }
+    if let Some(v) = args.opt_parse::<usize>("iters").map_err(anyhow::Error::msg)? {
+        cfg.iters = v;
+    }
+    if let Some(v) = args.opt_parse::<f64>("tol").map_err(anyhow::Error::msg)? {
+        cfg.tol = v;
+    }
+    if let Some(v) = args.opt_str("sparsity") {
+        cfg.sparsity_mode = v;
+    }
+    if let Some(v) = args.opt_parse::<usize>("t-u").map_err(anyhow::Error::msg)? {
+        cfg.t_u = Some(v);
+    }
+    if let Some(v) = args.opt_parse::<usize>("t-v").map_err(anyhow::Error::msg)? {
+        cfg.t_v = Some(v);
+    }
+    if let Some(v) = args
+        .opt_parse::<usize>("init-nnz")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.init_nnz = Some(v);
+    }
+    if let Some(v) = args.opt_parse::<f32>("tau-u").map_err(anyhow::Error::msg)? {
+        cfg.tau_u = Some(v);
+    }
+    if let Some(v) = args.opt_parse::<f32>("tau-v").map_err(anyhow::Error::msg)? {
+        cfg.tau_v = Some(v);
+    }
+    if let Some(v) = args.opt_parse::<usize>("threads").map_err(anyhow::Error::msg)? {
+        cfg.threads = v.max(1);
+    }
+    Ok(cfg)
+}
+
+fn load_corpus(cfg: &RunConfig) -> Result<TermDocMatrix> {
+    if let Some(dir) = cfg.corpus.strip_prefix("dir:") {
+        return corpus::loader::load_dir(std::path::Path::new(dir));
+    }
+    let spec = match cfg.corpus.as_str() {
+        "reuters" => corpus::reuters_sim(cfg.scale),
+        "wikipedia" => corpus::wikipedia_sim(cfg.scale),
+        "pubmed" => corpus::pubmed_sim(cfg.scale),
+        other => anyhow::bail!("unknown corpus {other:?} (reuters|wikipedia|pubmed|dir:<path>)"),
+    };
+    log_info!("corpus", "generating {} at {:?} scale", spec.name, cfg.scale);
+    Ok(corpus::generate_tdm(&spec, cfg.seed))
+}
+
+fn run_factorization(cfg: &RunConfig, tdm: &TermDocMatrix) -> Result<esnmf::nmf::NmfResult> {
+    match cfg.algorithm {
+        Algorithm::Sequential => Ok(factorize_sequential(tdm, &cfg.sequential_options())),
+        Algorithm::Als => {
+            let opts = cfg.nmf_options()?;
+            match cfg.backend {
+                BackendKind::Native => NativeBackend::new().factorize(tdm, &opts),
+                BackendKind::Xla => {
+                    let dir = runtime::artifact_dir();
+                    let guard = XlaExecutor::spawn(dir)?;
+                    let manifest_fit = {
+                        // pick the smallest artifact that contains the corpus
+                        let engine_manifest =
+                            esnmf::runtime::Manifest::load(&runtime::artifact_dir())?;
+                        engine_manifest
+                            .best_fit(
+                                ProgramKind::AlsIter,
+                                tdm.n_terms(),
+                                tdm.n_docs(),
+                                opts.k,
+                            )
+                            .map(|p| (p.n, p.m, p.k))
+                            .ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "no artifact fits ({} terms, {} docs, k={}); re-run `make artifacts`",
+                                    tdm.n_terms(),
+                                    tdm.n_docs(),
+                                    opts.k
+                                )
+                            })?
+                    };
+                    let (n, m, k) = manifest_fit;
+                    log_info!("backend", "xla artifact shape ({n}, {m}, {k})");
+                    XlaBackend::new(guard.handle.clone(), n, m, k).factorize(tdm, &opts)
+                }
+            }
+        }
+    }
+}
+
+fn cmd_factorize(args: &mut Args) -> Result<()> {
+    let cfg = build_run_config(args)?;
+    let top = args.parse_or("top", 5usize).map_err(anyhow::Error::msg)?;
+    args.check_unknown().map_err(anyhow::Error::msg)?;
+
+    let tdm = load_corpus(&cfg)?;
+    log_info!(
+        "factorize",
+        "{} terms × {} docs, nnz(A) = {} ({:.2}% sparse)",
+        tdm.n_terms(),
+        tdm.n_docs(),
+        tdm.a.nnz(),
+        tdm.a.sparsity() * 100.0
+    );
+    let r = run_factorization(&cfg, &tdm)?;
+
+    println!(
+        "completed {} iterations in {:.3}s  final residual {:.3e}  final error {:.4}",
+        r.iterations,
+        r.elapsed_s,
+        r.final_residual(),
+        r.final_error()
+    );
+    println!(
+        "nnz(U) = {}  nnz(V) = {}  peak stored = {}",
+        r.u.nnz(),
+        r.v.nnz(),
+        r.memory.max_combined_nnz
+    );
+    let report = SparsityReport::compute(&tdm.a, &r.u, &r.v);
+    print!("{}", report.format(&cfg.corpus));
+    println!("\nTop {top} terms per topic:");
+    print!(
+        "{}",
+        format_topic_table(&topic_term_table(&r.u, &tdm.terms, top), cfg.k)
+    );
+    if let Some(labels) = &tdm.doc_labels {
+        let acc = mean_topic_accuracy(&r.v, labels, tdm.label_names.len());
+        println!("\nmean clustering accuracy (Eq. 3.3): {acc:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &mut Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("experiment id required\n{USAGE}"))?;
+    let scale = Scale::parse(&args.str_or("scale", "small"))
+        .ok_or_else(|| anyhow::anyhow!("bad --scale"))?;
+    let seed = args.parse_or("seed", 42u64).map_err(anyhow::Error::msg)?;
+    let fast = args.flag("fast");
+    let out_dir = args.opt_str("out");
+    args.check_unknown().map_err(anyhow::Error::msg)?;
+
+    let cfg = ExpConfig { scale, seed, fast };
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        log_info!("experiment", "running {id}");
+        let result = experiments::run(id, &cfg)?;
+        if let Some(dir) = &out_dir {
+            std::fs::create_dir_all(dir)?;
+            let path = std::path::Path::new(dir).join(format!("{id}.json"));
+            std::fs::write(&path, result.to_string())?;
+            log_info!("experiment", "wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &mut Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let cfg = build_run_config(args)?;
+    args.check_unknown().map_err(anyhow::Error::msg)?;
+
+    let tdm = load_corpus(&cfg)?;
+    let r = run_factorization(&cfg, &tdm)?;
+    let model = Arc::new(TopicModel::new(r.u, r.v, tdm.terms.clone()));
+    let metrics = MetricsRegistry::new();
+    let server = TopicServer::start(&addr, model, metrics)?;
+    println!("serving topic queries on {} (QUIT to close a session, Ctrl-C to stop)", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_gen_corpus(args: &mut Args) -> Result<()> {
+    let cfg = build_run_config(args)?;
+    let out = args
+        .opt_str("out")
+        .ok_or_else(|| anyhow::anyhow!("--out <dir> required"))?;
+    args.check_unknown().map_err(anyhow::Error::msg)?;
+    let spec = match cfg.corpus.as_str() {
+        "reuters" => corpus::reuters_sim(cfg.scale),
+        "wikipedia" => corpus::wikipedia_sim(cfg.scale),
+        "pubmed" => corpus::pubmed_sim(cfg.scale),
+        other => anyhow::bail!("unknown corpus preset {other:?}"),
+    };
+    let docs = corpus::generate(&spec, cfg.seed);
+    let base = std::path::Path::new(&out);
+    for (i, doc) in docs.iter().enumerate() {
+        let label = &spec.topics[doc.label as usize].name;
+        let dir = base.join(label);
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join(format!("doc{i:06}.txt")), doc.tokens.join(" "))?;
+    }
+    println!("wrote {} documents under {}", docs.len(), base.display());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &mut Args) -> Result<()> {
+    let dir = args
+        .opt_str("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(runtime::artifact_dir);
+    args.check_unknown().map_err(anyhow::Error::msg)?;
+    let manifest = esnmf::runtime::Manifest::load(&dir)?;
+    println!("artifact dir: {}", dir.display());
+    for p in &manifest.programs {
+        println!(
+            "  {:<28} kind={:?} shape=({}, {}, {}) file={}",
+            p.name,
+            p.kind,
+            p.n,
+            p.m,
+            p.k,
+            p.file.file_name().unwrap_or_default().to_string_lossy()
+        );
+    }
+    let guard = XlaExecutor::spawn(dir)?;
+    println!("platform: {}", guard.handle.platform()?);
+    let compiled = guard.handle.warmup()?;
+    println!("compiled {compiled} programs OK");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Factor initialization.
+//!
+//! The paper seeds ALS with a random nonnegative `U₀`; Figure 6 varies the
+//! *sparsity* of that guess, so the sparse initializer takes an explicit
+//! nonzero budget placed uniformly at random.
+
+use crate::sparse::{Coo, Csr};
+use crate::util::rng::Rng;
+
+/// Fully dense random nonnegative (n, k) factor: |N(0,1)| entries.
+pub fn dense_random(n: usize, k: usize, rng: &mut Rng) -> Csr {
+    let data: Vec<f32> = (0..n * k).map(|_| rng.abs_normal_f32() + 1e-6).collect();
+    Csr::from_dense(n, k, &data)
+}
+
+/// Sparse random nonnegative (n, k) factor with exactly
+/// `min(nnz, n·k)` nonzeros at distinct uniform positions.
+pub fn sparse_random(n: usize, k: usize, nnz: usize, rng: &mut Rng) -> Csr {
+    let total = n * k;
+    let nnz = nnz.min(total);
+    let positions = rng.sample_distinct(total, nnz);
+    let mut coo = Coo::new(n, k);
+    for pos in positions {
+        coo.push(pos / k, pos % k, rng.abs_normal_f32() + 1e-6);
+    }
+    coo.to_csr()
+}
+
+/// The initializer used by the solvers: dense unless a budget is given.
+pub fn initial_u(n: usize, k: usize, init_nnz: Option<usize>, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    match init_nnz {
+        None => dense_random(n, k, &mut rng),
+        Some(nnz) => sparse_random(n, k, nnz, &mut rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_has_all_entries() {
+        let mut rng = Rng::new(1);
+        let u = dense_random(10, 4, &mut rng);
+        assert_eq!(u.nnz(), 40);
+        assert!(u.values.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn sparse_has_exact_budget() {
+        let mut rng = Rng::new(2);
+        let u = sparse_random(20, 5, 17, &mut rng);
+        assert_eq!(u.nnz(), 17);
+        assert!(u.values.iter().all(|&v| v > 0.0));
+        u.validate().unwrap();
+    }
+
+    #[test]
+    fn sparse_budget_clamped() {
+        let mut rng = Rng::new(3);
+        let u = sparse_random(3, 3, 100, &mut rng);
+        assert_eq!(u.nnz(), 9);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        assert_eq!(initial_u(8, 3, Some(10), 7), initial_u(8, 3, Some(10), 7));
+        assert_ne!(initial_u(8, 3, Some(10), 7), initial_u(8, 3, Some(10), 8));
+    }
+}

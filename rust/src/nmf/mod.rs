@@ -1,0 +1,24 @@
+//! The NMF engine: every algorithm of the paper over the sparse substrate.
+//!
+//! * [`als`] — Algorithm 1 (projected ALS) and Algorithm 2 (enforced
+//!   sparsity ALS, global top-t for U / V / both) plus the §4 column-wise
+//!   enforcement variant; all share one driver.
+//! * [`sequential`] — Algorithm 3 (sequential ALS: topics converged one
+//!   block at a time with deflation, rank-1 fast path).
+//! * [`init`] — factor initialization (dense random / sparse random with a
+//!   chosen nonzero budget, the Fig. 6 knob).
+//! * [`convergence`] — relative residual and sparse-safe relative error.
+//! * [`memory`] — max-stored-nonzeros tracking (Fig. 6).
+
+pub mod als;
+pub mod convergence;
+pub mod init;
+pub mod memory;
+pub mod options;
+pub mod sequential;
+
+pub use als::{factorize, half_step_u, half_step_v};
+pub use convergence::{rel_error_sparse, rel_residual};
+pub use memory::MemoryTracker;
+pub use options::{NmfOptions, NmfResult, SparsityMode};
+pub use sequential::{factorize_sequential, SequentialOptions};

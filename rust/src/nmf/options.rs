@@ -1,0 +1,197 @@
+//! Solver configuration and result types.
+
+use crate::sparse::{Csr, TieMode};
+
+use super::memory::MemoryStats;
+
+/// How (and whether) sparsity is enforced each iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum SparsityMode {
+    /// Algorithm 1: projection only, factors may densify.
+    #[default]
+    None,
+    /// Algorithm 2: keep the `t` largest entries of the whole matrix.
+    /// `None` for a side leaves that factor unenforced (the Fig. 3
+    /// "U only" / "V only" variants).
+    Global {
+        t_u: Option<usize>,
+        t_v: Option<usize>,
+    },
+    /// §4 column-wise: keep the `t` largest entries of *each column*.
+    PerColumn {
+        t_u_col: Option<usize>,
+        t_v_col: Option<usize>,
+    },
+    /// The "simpler method" the paper §2 contrasts against: zero every
+    /// entry below a fixed magnitude. Cheaper than top-t (no selection)
+    /// but gives no control over the resulting NNZ — kept as an ablation
+    /// (see `benches/ablation_enforcement.rs`).
+    Threshold {
+        tau_u: Option<f32>,
+        tau_v: Option<f32>,
+    },
+}
+
+impl SparsityMode {
+    /// Convenience: enforce both factors globally.
+    pub fn both(t_u: usize, t_v: usize) -> Self {
+        SparsityMode::Global {
+            t_u: Some(t_u),
+            t_v: Some(t_v),
+        }
+    }
+
+    pub fn u_only(t_u: usize) -> Self {
+        SparsityMode::Global {
+            t_u: Some(t_u),
+            t_v: None,
+        }
+    }
+
+    pub fn v_only(t_v: usize) -> Self {
+        SparsityMode::Global {
+            t_u: None,
+            t_v: Some(t_v),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct NmfOptions {
+    /// factorization rank (number of topics)
+    pub k: usize,
+    pub max_iters: usize,
+    /// stop when the relative residual drops below this (0.0 = never)
+    pub tol: f64,
+    pub sparsity: SparsityMode,
+    pub tie_mode: TieMode,
+    /// RNG seed for the initial guess
+    pub seed: u64,
+    /// nonzeros in the initial guess U₀ (None = fully dense random)
+    pub init_nnz: Option<usize>,
+    /// compute the relative error every iteration (costs O(nnz(A)·k))
+    pub track_error: bool,
+    /// row-parallelism for the two ALS products (1 = serial; results are
+    /// bit-identical at any setting)
+    pub threads: usize,
+}
+
+impl NmfOptions {
+    pub fn new(k: usize) -> Self {
+        NmfOptions {
+            k,
+            max_iters: 75,
+            tol: 0.0,
+            sparsity: SparsityMode::None,
+            tie_mode: TieMode::KeepTies,
+            seed: 0x5eed,
+            init_nnz: None,
+            track_error: true,
+            threads: 1,
+        }
+    }
+
+    pub fn with_sparsity(mut self, s: SparsityMode) -> Self {
+        self.sparsity = s;
+        self
+    }
+
+    pub fn with_iters(mut self, it: usize) -> Self {
+        self.max_iters = it;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_init_nnz(mut self, nnz: usize) -> Self {
+        self.init_nnz = Some(nnz);
+        self
+    }
+
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    pub fn with_track_error(mut self, track: bool) -> Self {
+        self.track_error = track;
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+}
+
+/// A completed factorization with its convergence telemetry.
+#[derive(Clone, Debug)]
+pub struct NmfResult {
+    /// term/topic factor (n × k)
+    pub u: Csr,
+    /// document/topic factor (m × k)
+    pub v: Csr,
+    pub iterations: usize,
+    /// relative residual ‖Uᵢ−Uᵢ₋₁‖/‖Uᵢ‖ per iteration
+    pub residuals: Vec<f64>,
+    /// relative error ‖A−UVᵀ‖/‖A‖ per iteration (empty if untracked)
+    pub errors: Vec<f64>,
+    pub memory: MemoryStats,
+    pub elapsed_s: f64,
+}
+
+impl NmfResult {
+    pub fn final_residual(&self) -> f64 {
+        self.residuals.last().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn final_error(&self) -> f64 {
+        self.errors.last().copied().unwrap_or(f64::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders() {
+        let o = NmfOptions::new(5)
+            .with_iters(10)
+            .with_seed(1)
+            .with_init_nnz(50)
+            .with_tol(1e-9)
+            .with_sparsity(SparsityMode::both(40, 60));
+        assert_eq!(o.k, 5);
+        assert_eq!(o.max_iters, 10);
+        assert_eq!(o.init_nnz, Some(50));
+        assert_eq!(
+            o.sparsity,
+            SparsityMode::Global {
+                t_u: Some(40),
+                t_v: Some(60)
+            }
+        );
+    }
+
+    #[test]
+    fn sparsity_helpers() {
+        assert_eq!(
+            SparsityMode::u_only(9),
+            SparsityMode::Global {
+                t_u: Some(9),
+                t_v: None
+            }
+        );
+        assert_eq!(
+            SparsityMode::v_only(9),
+            SparsityMode::Global {
+                t_u: None,
+                t_v: Some(9)
+            }
+        );
+    }
+}

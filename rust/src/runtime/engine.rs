@@ -1,0 +1,150 @@
+//! The PJRT engine: compile artifacts once, execute many times.
+//!
+//! Mirrors `/opt/xla-example/load_hlo`: HLO *text* → `HloModuleProto` →
+//! `XlaComputation` → `PjRtClient::compile` → `execute`. Executables are
+//! cached by program name; inputs/outputs are flat `f32`/`i32` slices so
+//! callers never touch `xla::Literal` directly.
+
+use super::manifest::{Manifest, ProgramKind, ProgramSpec};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Outputs of one fused ALS iteration on the device.
+#[derive(Clone, Debug)]
+pub struct AlsIterOut {
+    pub u_new: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the manifest (compilation is
+    /// lazy per program; call [`Engine::warmup`] to pre-compile).
+    pub fn load(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&mut self, spec: &ProgramSpec) -> Result<()> {
+        if self.executables.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+        self.executables.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile every program in the manifest.
+    pub fn warmup(&mut self) -> Result<usize> {
+        let specs: Vec<ProgramSpec> = self.manifest.programs.clone();
+        for spec in &specs {
+            self.compile(spec)
+                .with_context(|| format!("warmup {}", spec.name))?;
+        }
+        Ok(specs.len())
+    }
+
+    fn find(&self, kind: ProgramKind, n: usize, m: usize, k: usize) -> Result<ProgramSpec> {
+        self.manifest
+            .exact(kind, n, m, k)
+            .cloned()
+            .ok_or_else(|| anyhow!("no artifact for {kind:?} ({n}, {m}, {k}); re-run `make artifacts` with a matching config"))
+    }
+
+    /// Run one fused enforced-sparsity ALS iteration (Algorithm 2) on the
+    /// device. `a` is row-major (n, m); `u` row-major (n, k); `t ≤ 0`
+    /// disables enforcement for that side.
+    pub fn als_iter(
+        &mut self,
+        n: usize,
+        m: usize,
+        k: usize,
+        a: &[f32],
+        u: &[f32],
+        t_u: i32,
+        t_v: i32,
+    ) -> Result<AlsIterOut> {
+        if a.len() != n * m {
+            bail!("a has {} elements, want {}", a.len(), n * m);
+        }
+        if u.len() != n * k {
+            bail!("u has {} elements, want {}", u.len(), n * k);
+        }
+        let spec = self.find(ProgramKind::AlsIter, n, m, k)?;
+        self.compile(&spec)?;
+        let exe = &self.executables[&spec.name];
+        let a_lit = xla::Literal::vec1(a).reshape(&[n as i64, m as i64])?;
+        let u_lit = xla::Literal::vec1(u).reshape(&[n as i64, k as i64])?;
+        let tu_lit = xla::Literal::scalar(t_u);
+        let tv_lit = xla::Literal::scalar(t_v);
+        let result = exe.execute::<xla::Literal>(&[a_lit, u_lit, tu_lit, tv_lit])?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 2 {
+            bail!("als_iter returned {} outputs, want 2", outs.len());
+        }
+        Ok(AlsIterOut {
+            u_new: outs[0].to_vec::<f32>()?,
+            v: outs[1].to_vec::<f32>()?,
+        })
+    }
+
+    /// Relative Frobenius error ‖A − U Vᵀ‖/‖A‖ on the device.
+    pub fn rel_error(
+        &mut self,
+        n: usize,
+        m: usize,
+        k: usize,
+        a: &[f32],
+        u: &[f32],
+        v: &[f32],
+    ) -> Result<f32> {
+        let spec = self.find(ProgramKind::RelError, n, m, k)?;
+        self.compile(&spec)?;
+        let exe = &self.executables[&spec.name];
+        let a_lit = xla::Literal::vec1(a).reshape(&[n as i64, m as i64])?;
+        let u_lit = xla::Literal::vec1(u).reshape(&[n as i64, k as i64])?;
+        let v_lit = xla::Literal::vec1(v).reshape(&[m as i64, k as i64])?;
+        let result = exe.execute::<xla::Literal>(&[a_lit, u_lit, v_lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.get_first_element::<f32>()?)
+    }
+}
+
+// Engine owns raw PJRT pointers; it is confined to one thread by the
+// executor wrapper (see executor.rs), never shared.
+
+#[cfg(test)]
+mod tests {
+    // Engine tests live in rust/tests/integration_runtime.rs because they
+    // need compiled artifacts; unit scope here covers only error paths
+    // that don't require a client. (Creating a client is cheap but loads
+    // the PJRT plugin; keep that to the integration suite.)
+}

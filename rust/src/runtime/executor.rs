@@ -1,0 +1,190 @@
+//! A dedicated executor thread owning the PJRT engine.
+//!
+//! `xla::PjRtClient` wraps raw pointers without `Send`/`Sync`, so the
+//! engine is confined to one thread; the coordinator talks to it through
+//! a channel. Requests carry a reply sender — the calling thread blocks
+//! only on its own reply, and independent callers interleave naturally.
+
+use super::engine::{AlsIterOut, Engine};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+enum Request {
+    AlsIter {
+        n: usize,
+        m: usize,
+        k: usize,
+        a: Vec<f32>,
+        u: Vec<f32>,
+        t_u: i32,
+        t_v: i32,
+        reply: mpsc::Sender<Result<AlsIterOut>>,
+    },
+    RelError {
+        n: usize,
+        m: usize,
+        k: usize,
+        a: Vec<f32>,
+        u: Vec<f32>,
+        v: Vec<f32>,
+        reply: mpsc::Sender<Result<f32>>,
+    },
+    Warmup {
+        reply: mpsc::Sender<Result<usize>>,
+    },
+    Platform {
+        reply: mpsc::Sender<String>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the executor thread.
+#[derive(Clone)]
+pub struct XlaExecutor {
+    tx: mpsc::Sender<Request>,
+}
+
+pub struct XlaExecutorGuard {
+    pub handle: XlaExecutor,
+    join: Option<JoinHandle<()>>,
+}
+
+impl XlaExecutor {
+    /// Spawn the executor thread; fails fast if the manifest is missing.
+    pub fn spawn(artifact_dir: PathBuf) -> Result<XlaExecutorGuard> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("xla-executor".into())
+            .spawn(move || {
+                let mut engine = match Engine::load(&artifact_dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::AlsIter {
+                            n,
+                            m,
+                            k,
+                            a,
+                            u,
+                            t_u,
+                            t_v,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.als_iter(n, m, k, &a, &u, t_u, t_v));
+                        }
+                        Request::RelError {
+                            n,
+                            m,
+                            k,
+                            a,
+                            u,
+                            v,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.rel_error(n, m, k, &a, &u, &v));
+                        }
+                        Request::Warmup { reply } => {
+                            let _ = reply.send(engine.warmup());
+                        }
+                        Request::Platform { reply } => {
+                            let _ = reply.send(engine.platform());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(XlaExecutorGuard {
+            handle: XlaExecutor { tx },
+            join: Some(join),
+        })
+    }
+
+    pub fn als_iter(
+        &self,
+        n: usize,
+        m: usize,
+        k: usize,
+        a: Vec<f32>,
+        u: Vec<f32>,
+        t_u: i32,
+        t_v: i32,
+    ) -> Result<AlsIterOut> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::AlsIter {
+                n,
+                m,
+                k,
+                a,
+                u,
+                t_u,
+                t_v,
+                reply,
+            })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    pub fn rel_error(
+        &self,
+        n: usize,
+        m: usize,
+        k: usize,
+        a: Vec<f32>,
+        u: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Result<f32> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::RelError {
+                n,
+                m,
+                k,
+                a,
+                u,
+                v,
+                reply,
+            })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    pub fn warmup(&self) -> Result<usize> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Warmup { reply })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    pub fn platform(&self) -> Result<String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Platform { reply })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))
+    }
+}
+
+impl Drop for XlaExecutorGuard {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+pub const SUPPORTED_VERSION: usize = 2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProgramKind {
+    AlsIter,
+    RelError,
+}
+
+impl ProgramKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "als_iter" => Ok(ProgramKind::AlsIter),
+            "rel_error" => Ok(ProgramKind::RelError),
+            other => bail!("unknown program kind {other:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub kind: ProgramKind,
+    pub n: usize,
+    pub m: usize,
+    pub k: usize,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub programs: Vec<ProgramSpec>,
+}
+
+fn tensor_specs(v: &Json, what: &str) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("{what} is not an array"))?
+        .iter()
+        .map(|t| {
+            let t = t.as_arr().ok_or_else(|| anyhow!("{what} entry not an array"))?;
+            if t.len() != 3 {
+                bail!("{what} entry should be [name, dims, dtype]");
+            }
+            Ok(TensorSpec {
+                name: t[0].as_str().ok_or_else(|| anyhow!("tensor name"))?.to_string(),
+                dims: t[1]
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("tensor dims"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("tensor dim")))
+                    .collect::<Result<_>>()?,
+                dtype: t[2].as_str().ok_or_else(|| anyhow!("tensor dtype"))?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str, base_dir: &Path) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let version = root
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != SUPPORTED_VERSION {
+            bail!("manifest version {version} != supported {SUPPORTED_VERSION}; re-run `make artifacts`");
+        }
+        let progs = root
+            .get("programs")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing programs"))?;
+        let mut programs = Vec::with_capacity(progs.len());
+        for p in progs {
+            let get_usize = |key: &str| {
+                p.get(key)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("program missing {key}"))
+            };
+            programs.push(ProgramSpec {
+                name: p
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("program missing name"))?
+                    .to_string(),
+                kind: ProgramKind::parse(
+                    p.get("kind").and_then(|v| v.as_str()).unwrap_or(""),
+                )?,
+                n: get_usize("n")?,
+                m: get_usize("m")?,
+                k: get_usize("k")?,
+                file: base_dir.join(
+                    p.get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("program missing file"))?,
+                ),
+                inputs: tensor_specs(
+                    p.get("inputs").ok_or_else(|| anyhow!("missing inputs"))?,
+                    "inputs",
+                )?,
+                outputs: tensor_specs(
+                    p.get("outputs").ok_or_else(|| anyhow!("missing outputs"))?,
+                    "outputs",
+                )?,
+            });
+        }
+        Ok(Manifest { programs })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    /// Smallest program of `kind` whose (n, m, k) can contain the request.
+    pub fn best_fit(&self, kind: ProgramKind, n: usize, m: usize, k: usize) -> Option<&ProgramSpec> {
+        self.programs
+            .iter()
+            .filter(|p| p.kind == kind && p.n >= n && p.m >= m && p.k == k)
+            .min_by_key(|p| p.n * p.m)
+    }
+
+    /// Exact-shape lookup.
+    pub fn exact(&self, kind: ProgramKind, n: usize, m: usize, k: usize) -> Option<&ProgramSpec> {
+        self.programs
+            .iter()
+            .find(|p| p.kind == kind && p.n == n && p.m == m && p.k == k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 2,
+      "programs": [
+        {"name": "als_iter_8x12x2", "kind": "als_iter", "n": 8, "m": 12, "k": 2,
+         "file": "als_iter_8x12x2.hlo.txt",
+         "inputs": [["a", [8, 12], "f32"], ["u", [8, 2], "f32"],
+                    ["t_u", [], "i32"], ["t_v", [], "i32"]],
+         "outputs": [["u_new", [8, 2], "f32"], ["v", [12, 2], "f32"]]},
+        {"name": "als_iter_64x96x2", "kind": "als_iter", "n": 64, "m": 96, "k": 2,
+         "file": "als_iter_64x96x2.hlo.txt",
+         "inputs": [["a", [64, 96], "f32"]],
+         "outputs": [["u_new", [64, 2], "f32"]]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.programs.len(), 2);
+        let p = &m.programs[0];
+        assert_eq!(p.kind, ProgramKind::AlsIter);
+        assert_eq!((p.n, p.m, p.k), (8, 12, 2));
+        assert_eq!(p.inputs[2].dims, Vec::<usize>::new());
+        assert_eq!(p.inputs[0].element_count(), 96);
+        assert!(p.file.ends_with("als_iter_8x12x2.hlo.txt"));
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_containing() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        let p = m.best_fit(ProgramKind::AlsIter, 8, 10, 2).unwrap();
+        assert_eq!(p.n, 8);
+        let p = m.best_fit(ProgramKind::AlsIter, 20, 20, 2).unwrap();
+        assert_eq!(p.n, 64);
+        assert!(m.best_fit(ProgramKind::AlsIter, 100, 10, 2).is_none());
+        assert!(m.best_fit(ProgramKind::AlsIter, 8, 10, 3).is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"version\": 2", "\"version\": 1");
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let bad = SAMPLE.replace("als_iter\"", "mystery\"");
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from rust. Python is never on this path — the HLO text
+//! files plus `manifest.json` are the entire interface.
+//!
+//! * [`manifest`] — parse the artifact manifest (shapes, dtypes, kinds).
+//! * [`engine`] — `PjRtClient` wrapper: compile once, execute many.
+//! * [`executor`] — a dedicated thread owning the engine, exposed through
+//!   a channel API so the multithreaded coordinator can share it.
+
+pub mod engine;
+pub mod executor;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use executor::XlaExecutor;
+pub use manifest::{Manifest, ProgramKind, ProgramSpec};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$ESNMF_ARTIFACTS`, else `artifacts/`
+/// relative to the current dir, else relative to the crate manifest dir
+/// (so `cargo test` works from anywhere in the tree).
+pub fn artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("ESNMF_ARTIFACTS") {
+        return dir.into();
+    }
+    let cwd = std::path::Path::new(DEFAULT_ARTIFACT_DIR);
+    if cwd.join("manifest.json").exists() {
+        return cwd.to_path_buf();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT_DIR)
+}
+
+/// Are compiled artifacts available? (Tests skip XLA paths when not.)
+pub fn artifacts_available() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}

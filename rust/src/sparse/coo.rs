@@ -1,0 +1,122 @@
+//! Coordinate-format sparse matrix: the mutable builder format.
+//!
+//! Ingestion (the term-document pipeline) appends triplets as documents
+//! stream in; [`Coo::to_csr`] sorts, merges duplicates and freezes into
+//! compressed storage.
+
+use super::csr::Csr;
+
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(u32, u32, f32)>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo {
+            rows,
+            cols,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Append one entry. Duplicates are summed on freeze.
+    #[inline]
+    pub fn push(&mut self, row: usize, col: usize, val: f32) {
+        debug_assert!(row < self.rows && col < self.cols, "({row},{col}) out of bounds");
+        if val != 0.0 {
+            self.entries.push((row as u32, col as u32, val));
+        }
+    }
+
+    pub fn nnz_upper_bound(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Freeze into CSR: sort by (row, col), merge duplicate coordinates by
+    /// summation, drop entries that cancel to exactly zero.
+    pub fn to_csr(&self) -> Csr {
+        let mut entries = self.entries.clone();
+        entries.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices: Vec<u32> = Vec::with_capacity(entries.len());
+        let mut values: Vec<f32> = Vec::with_capacity(entries.len());
+
+        let mut i = 0;
+        while i < entries.len() {
+            let (r, c, mut v) = entries[i];
+            let mut j = i + 1;
+            while j < entries.len() && entries[j].0 == r && entries[j].1 == c {
+                v += entries[j].2;
+                j += 1;
+            }
+            if v != 0.0 {
+                indices.push(c);
+                values.push(v);
+                indptr[r as usize + 1] += 1;
+            }
+            i = j;
+        }
+        for r in 0..self.rows {
+            indptr[r + 1] += indptr[r];
+        }
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_freezes() {
+        let mut c = Coo::new(3, 4);
+        c.push(0, 1, 1.0);
+        c.push(2, 3, 2.0);
+        c.push(0, 1, 0.5); // duplicate, summed
+        c.push(1, 0, 0.0); // dropped
+        let m = c.to_csr();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.get(0, 1), 1.5);
+        assert_eq!(m.get(2, 3), 2.0);
+        assert_eq!(m.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn cancelling_duplicates_are_dropped() {
+        let mut c = Coo::new(2, 2);
+        c.push(1, 1, 3.0);
+        c.push(1, 1, -3.0);
+        assert_eq!(c.to_csr().nnz(), 0);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Coo::new(5, 7).to_csr();
+        assert_eq!(m.rows, 5);
+        assert_eq!(m.cols, 7);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.indptr.len(), 6);
+    }
+
+    #[test]
+    fn unsorted_input_sorts() {
+        let mut c = Coo::new(3, 3);
+        c.push(2, 2, 1.0);
+        c.push(0, 0, 2.0);
+        c.push(1, 2, 3.0);
+        c.push(1, 0, 4.0);
+        let m = c.to_csr();
+        assert_eq!(m.row(1).0, &[0, 2]);
+        assert_eq!(m.row(1).1, &[4.0, 3.0]);
+    }
+}

@@ -1,0 +1,84 @@
+//! Compressed sparse column storage.
+//!
+//! The data matrix keeps a CSC twin of its CSR form so the `Aᵀ·U` half of
+//! ALS walks columns of `A` (= rows of `Aᵀ`) contiguously. MATLAB's native
+//! sparse format — the paper's substrate — is CSC.
+
+use super::csr::Csr;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc {
+    pub rows: usize,
+    pub cols: usize,
+    /// `indptr[c]..indptr[c+1]` indexes column c's entries. len = cols+1.
+    pub indptr: Vec<usize>,
+    /// Row index per entry, ascending within a column.
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csc {
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (row indices, values) of column c.
+    #[inline]
+    pub fn col(&self, c: usize) -> (&[u32], &[f32]) {
+        let lo = self.indptr[c];
+        let hi = self.indptr[c + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    pub fn to_csr(&self) -> Csr {
+        // CSC of M == CSR of Mᵀ; transposing that CSR yields CSR of M.
+        let as_csr_of_t = Csr {
+            rows: self.cols,
+            cols: self.rows,
+            indptr: self.indptr.clone(),
+            indices: self.indices.clone(),
+            values: self.values.clone(),
+        };
+        as_csr_of_t.transpose()
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        let (idx, val) = self.col(c);
+        match idx.binary_search(&(r as u32)) {
+            Ok(pos) => val[pos],
+            Err(_) => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_csc_roundtrip() {
+        let m = Csr::from_dense(3, 4, &[
+            1.0, 0.0, 2.0, 0.0, //
+            0.0, 3.0, 0.0, 0.0, //
+            4.0, 0.0, 0.0, 5.0,
+        ]);
+        let csc = m.to_csc();
+        assert_eq!(csc.nnz(), m.nnz());
+        assert_eq!(csc.get(0, 2), 2.0);
+        assert_eq!(csc.get(2, 3), 5.0);
+        assert_eq!(csc.get(1, 0), 0.0);
+        assert_eq!(csc.to_csr(), m);
+    }
+
+    #[test]
+    fn column_access() {
+        let m = Csr::from_dense(3, 2, &[1.0, 0.0, 0.0, 2.0, 3.0, 0.0]).to_csc();
+        let (idx, val) = m.col(0);
+        assert_eq!(idx, &[0, 2]);
+        assert_eq!(val, &[1.0, 3.0]);
+        let (idx, val) = m.col(1);
+        assert_eq!(idx, &[1]);
+        assert_eq!(val, &[2.0]);
+    }
+}

@@ -1,0 +1,310 @@
+//! Compressed sparse row storage — the workhorse format.
+//!
+//! Factor matrices (`U`: terms×topics, `V`: docs×topics) and the data
+//! matrix `A` all live in CSR; `A` additionally keeps a CSC twin (built
+//! once) so both ALS half-products stream contiguously.
+
+use super::coo::Coo;
+use super::csc::Csc;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// `indptr[r]..indptr[r+1]` indexes row r's entries. len = rows+1.
+    pub indptr: Vec<usize>,
+    /// Column index per entry, ascending within a row.
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Csr {
+            rows,
+            cols,
+            indptr: vec![0; rows + 1],
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Build from a dense row-major slice, dropping exact zeros.
+    pub fn from_dense(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        let mut coo = Coo::new(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                coo.push(r, c, data[r * cols + c]);
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of entries that are exactly zero (the paper's "sparsity").
+    pub fn sparsity(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 1.0;
+        }
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// (column indices, values) of row r.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Point lookup by binary search within the row. O(log nnz_row).
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        let (idx, val) = self.row(r);
+        match idx.binary_search(&(c as u32)) {
+            Ok(pos) => val[pos],
+            Err(_) => 0.0,
+        }
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (idx, val) = self.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                out[r * self.cols + c as usize] = v;
+            }
+        }
+        out
+    }
+
+    /// Transpose via counting sort — O(nnz + rows + cols).
+    pub fn transpose(&self) -> Csr {
+        let mut indptr = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            indptr[c as usize + 1] += 1;
+        }
+        for c in 0..self.cols {
+            indptr[c + 1] += indptr[c];
+        }
+        let mut cursor = indptr.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0f32; self.nnz()];
+        for r in 0..self.rows {
+            let (idx, val) = self.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                let pos = cursor[c as usize];
+                indices[pos] = r as u32;
+                values[pos] = v;
+                cursor[c as usize] += 1;
+            }
+        }
+        Csr {
+            rows: self.cols,
+            cols: self.rows,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Reinterpret the transpose as CSC of the same logical matrix.
+    pub fn to_csc(&self) -> Csc {
+        let t = self.transpose();
+        Csc {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: t.indptr,
+            indices: t.indices,
+            values: t.values,
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.values.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.values.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// ||self - other||_F without materializing the difference.
+    pub fn fro_diff(&self, other: &Csr) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut acc = 0.0f64;
+        for r in 0..self.rows {
+            let (ia, va) = self.row(r);
+            let (ib, vb) = other.row(r);
+            let (mut p, mut q) = (0usize, 0usize);
+            while p < ia.len() || q < ib.len() {
+                let d = if q >= ib.len() || (p < ia.len() && ia[p] < ib[q]) {
+                    let d = va[p] as f64;
+                    p += 1;
+                    d
+                } else if p >= ia.len() || ib[q] < ia[p] {
+                    let d = -(vb[q] as f64);
+                    q += 1;
+                    d
+                } else {
+                    let d = va[p] as f64 - vb[q] as f64;
+                    p += 1;
+                    q += 1;
+                    d
+                };
+                acc += d * d;
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// Count nonzeros in each column.
+    pub fn col_nnz(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.cols];
+        for &c in &self.indices {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+
+    /// Keep only entries satisfying the predicate (in-place refilter).
+    pub fn retain(&mut self, mut keep: impl FnMut(usize, u32, f32) -> bool) {
+        let mut w = 0usize;
+        let mut new_indptr = vec![0usize; self.rows + 1];
+        for r in 0..self.rows {
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            for p in lo..hi {
+                if keep(r, self.indices[p], self.values[p]) {
+                    self.indices[w] = self.indices[p];
+                    self.values[w] = self.values[p];
+                    w += 1;
+                }
+            }
+            new_indptr[r + 1] = w;
+        }
+        self.indices.truncate(w);
+        self.values.truncate(w);
+        self.indptr = new_indptr;
+    }
+
+    /// Structural validation — used by property tests and debug assertions.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.rows + 1 {
+            return Err("indptr length".into());
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() != self.values.len() {
+            return Err("indptr bounds".into());
+        }
+        if self.indices.len() != self.values.len() {
+            return Err("indices/values length mismatch".into());
+        }
+        for r in 0..self.rows {
+            if self.indptr[r] > self.indptr[r + 1] {
+                return Err(format!("indptr not monotone at row {r}"));
+            }
+            let (idx, _) = self.row(r);
+            for w in idx.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} columns not strictly ascending"));
+                }
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= self.cols {
+                    return Err(format!("row {r} column out of bounds"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [1 0 2]
+        // [0 0 0]
+        // [3 4 0]
+        Csr::from_dense(3, 3, &[1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0, 4.0, 0.0])
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(
+            m.to_dense(),
+            vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0, 4.0, 0.0]
+        );
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = sample();
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt);
+        m.transpose().validate().unwrap();
+    }
+
+    #[test]
+    fn transpose_values() {
+        let t = sample().transpose();
+        assert_eq!(t.get(0, 2), 3.0);
+        assert_eq!(t.get(2, 0), 2.0);
+        assert_eq!(t.get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn sparsity_measure() {
+        assert!((sample().sparsity() - (1.0 - 4.0 / 9.0)).abs() < 1e-12);
+        assert_eq!(Csr::zeros(0, 0).sparsity(), 1.0);
+    }
+
+    #[test]
+    fn fro_norms() {
+        let m = sample();
+        let want = (1.0f64 + 4.0 + 9.0 + 16.0).sqrt();
+        assert!((m.fro_norm() - want).abs() < 1e-6);
+        assert!(m.fro_diff(&m) < 1e-12);
+        let z = Csr::zeros(3, 3);
+        assert!((m.fro_diff(&z) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fro_diff_disjoint_patterns() {
+        let a = Csr::from_dense(1, 3, &[1.0, 0.0, 0.0]);
+        let b = Csr::from_dense(1, 3, &[0.0, 2.0, 0.0]);
+        assert!((a.fro_diff(&b) - (5.0f64).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn retain_filters() {
+        let mut m = sample();
+        m.retain(|_r, _c, v| v > 2.5);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.get(2, 0), 3.0);
+        assert_eq!(m.get(2, 1), 4.0);
+        assert_eq!(m.get(0, 0), 0.0);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn col_nnz_counts() {
+        assert_eq!(sample().col_nnz(), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut m = sample();
+        m.indices[0] = 99;
+        assert!(m.validate().is_err());
+    }
+}

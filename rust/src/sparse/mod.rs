@@ -1,0 +1,22 @@
+//! Sparse-matrix substrate: COO / CSR / CSC storage, products, norms and
+//! the top-t selection primitives that implement the paper's enforced
+//! sparsity.
+//!
+//! The paper's experiments run on MATLAB's sparse format (CSC); we provide
+//! CSR and CSC (the term-document matrix is kept in both, built once, so
+//! both `A·V` and `Aᵀ·U` stream through contiguous memory) plus
+//! [`rowblock::RowBlock`], the natural shape of an ALS half-step
+//! intermediate: sparse row support with dense `k`-wide rows.
+
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod ops;
+pub mod rowblock;
+pub mod topk;
+
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use rowblock::RowBlock;
+pub use topk::TieMode;

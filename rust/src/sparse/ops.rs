@@ -1,0 +1,603 @@
+//! Sparse products for the ALS hot path.
+//!
+//! All three products of an ALS iteration are here:
+//! * `atb`: `B = Aᵀ·U`   (update-V half, streams columns of CSC `A`)
+//! * `ab`:  `C = A·V`    (update-U half, streams rows of CSR `A`)
+//! * `gram`: `Xᵀ·X`      (the small (k,k) normal matrix)
+//! plus `tr_cross` (the sparse-safe error trace) and a general Gustavson
+//! `spmm` used by tests and the evaluation code.
+
+use super::csc::Csc;
+use super::csr::Csr;
+use super::rowblock::RowBlock;
+
+/// Dense row-major copy of a factor when it is dense enough that the
+/// sparse row iteration's index indirection costs more than it saves.
+/// The dense inner loop is branch-free over k and auto-vectorizes.
+fn maybe_dense_factor(x: &Csr) -> Option<Vec<f32>> {
+    let total = x.rows * x.cols;
+    if total == 0 || (x.nnz() as f64) < 0.5 * total as f64 {
+        return None;
+    }
+    Some(x.to_dense())
+}
+
+/// `B = Aᵀ · U` restricted to output rows `lo..hi` (columns of `a`).
+/// `u_dense` is the optional dense fast-path copy of `u`.
+fn atb_range(a: &Csc, u: &Csr, u_dense: Option<&[f32]>, lo: usize, hi: usize) -> RowBlock {
+    let k = u.cols;
+    let mut out = RowBlock::new(a.cols, k);
+    let mut acc = vec![0.0f32; k];
+    for j in lo..hi {
+        let (rows, vals) = a.col(j);
+        if rows.is_empty() {
+            continue;
+        }
+        acc.iter_mut().for_each(|x| *x = 0.0);
+        let mut any = false;
+        match u_dense {
+            Some(ud) => {
+                for (&i, &aij) in rows.iter().zip(vals) {
+                    let urow = &ud[i as usize * k..(i as usize + 1) * k];
+                    for (s, &uv) in acc.iter_mut().zip(urow) {
+                        *s += aij * uv;
+                    }
+                }
+                any = acc.iter().any(|&x| x != 0.0);
+            }
+            None => {
+                for (&i, &aij) in rows.iter().zip(vals) {
+                    let (uidx, uval) = u.row(i as usize);
+                    for (&c, &uv) in uidx.iter().zip(uval) {
+                        acc[c as usize] += aij * uv;
+                        any = true;
+                    }
+                }
+            }
+        }
+        if any {
+            out.push_row(j, &acc);
+        }
+    }
+    out
+}
+
+/// `B = Aᵀ · U` where `a` is (n, m) in CSC and `u` is (n, k) CSR.
+/// Returns the (m, k) intermediate with only active rows materialized.
+pub fn atb(a: &Csc, u: &Csr) -> RowBlock {
+    assert_eq!(a.rows, u.rows, "Aᵀ·U contraction mismatch");
+    let ud = maybe_dense_factor(u);
+    atb_range(a, u, ud.as_deref(), 0, a.cols)
+}
+
+/// Parallel [`atb`]: contiguous output-row ranges across `threads` scoped
+/// workers, concatenated in order — bit-identical to the serial result.
+pub fn atb_par(a: &Csc, u: &Csr, threads: usize) -> RowBlock {
+    assert_eq!(a.rows, u.rows, "Aᵀ·U contraction mismatch");
+    let ud = maybe_dense_factor(u);
+    if threads <= 1 || a.cols < 2 * threads {
+        return atb_range(a, u, ud.as_deref(), 0, a.cols);
+    }
+    let parts = split_ranges(a.cols, threads);
+    let ud_ref = ud.as_deref();
+    let blocks: Vec<RowBlock> = std::thread::scope(|s| {
+        let handles: Vec<_> = parts
+            .iter()
+            .map(|&(lo, hi)| s.spawn(move || atb_range(a, u, ud_ref, lo, hi)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("atb worker")).collect()
+    });
+    concat_rowblocks(a.cols, u.cols, blocks)
+}
+
+/// `C = A · V` restricted to output rows `lo..hi` (rows of `a`).
+/// `v_dense` is the optional dense fast-path copy of `v`.
+fn ab_range(a: &Csr, v: &Csr, v_dense: Option<&[f32]>, lo: usize, hi: usize) -> RowBlock {
+    let k = v.cols;
+    let mut out = RowBlock::new(a.rows, k);
+    let mut acc = vec![0.0f32; k];
+    for i in lo..hi {
+        let (cols, vals) = a.row(i);
+        if cols.is_empty() {
+            continue;
+        }
+        acc.iter_mut().for_each(|x| *x = 0.0);
+        let mut any = false;
+        match v_dense {
+            Some(vd) => {
+                for (&j, &aij) in cols.iter().zip(vals) {
+                    let vrow = &vd[j as usize * k..(j as usize + 1) * k];
+                    for (s, &vv) in acc.iter_mut().zip(vrow) {
+                        *s += aij * vv;
+                    }
+                }
+                any = acc.iter().any(|&x| x != 0.0);
+            }
+            None => {
+                for (&j, &aij) in cols.iter().zip(vals) {
+                    let (vidx, vval) = v.row(j as usize);
+                    for (&c, &vv) in vidx.iter().zip(vval) {
+                        acc[c as usize] += aij * vv;
+                        any = true;
+                    }
+                }
+            }
+        }
+        if any {
+            out.push_row(i, &acc);
+        }
+    }
+    out
+}
+
+/// `C = A · V` where `a` is (n, m) in CSR and `v` is (m, k) CSR.
+/// Returns the (n, k) intermediate with only active rows materialized.
+pub fn ab(a: &Csr, v: &Csr) -> RowBlock {
+    assert_eq!(a.cols, v.rows, "A·V contraction mismatch");
+    let vd = maybe_dense_factor(v);
+    ab_range(a, v, vd.as_deref(), 0, a.rows)
+}
+
+/// Parallel [`ab`], same contract as [`atb_par`].
+pub fn ab_par(a: &Csr, v: &Csr, threads: usize) -> RowBlock {
+    assert_eq!(a.cols, v.rows, "A·V contraction mismatch");
+    let vd = maybe_dense_factor(v);
+    if threads <= 1 || a.rows < 2 * threads {
+        return ab_range(a, v, vd.as_deref(), 0, a.rows);
+    }
+    let parts = split_ranges(a.rows, threads);
+    let vd_ref = vd.as_deref();
+    let blocks: Vec<RowBlock> = std::thread::scope(|s| {
+        let handles: Vec<_> = parts
+            .iter()
+            .map(|&(lo, hi)| s.spawn(move || ab_range(a, v, vd_ref, lo, hi)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("ab worker")).collect()
+    });
+    concat_rowblocks(a.rows, v.cols, blocks)
+}
+
+/// Contiguous near-equal ranges covering `0..total`.
+fn split_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.min(total).max(1);
+    let base = total / parts;
+    let rem = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+/// Concatenate per-range RowBlocks (disjoint ascending row ranges).
+fn concat_rowblocks(rows: usize, k: usize, blocks: Vec<RowBlock>) -> RowBlock {
+    let total_rows: usize = blocks.iter().map(|b| b.row_ids.len()).sum();
+    let mut out = RowBlock::new(rows, k);
+    out.row_ids.reserve(total_rows);
+    out.data.reserve(total_rows * k);
+    for b in blocks {
+        debug_assert!(out
+            .row_ids
+            .last()
+            .zip(b.row_ids.first())
+            .map_or(true, |(&last, &first)| last < first));
+        out.row_ids.extend_from_slice(&b.row_ids);
+        out.data.extend_from_slice(&b.data);
+    }
+    out
+}
+
+/// Gram matrix `Xᵀ·X` of a CSR factor (rows, k) → dense row-major (k, k).
+/// Accumulates in f64 for stability over long reductions.
+pub fn gram(x: &Csr) -> Vec<f32> {
+    let k = x.cols;
+    let mut g = vec![0.0f64; k * k];
+    for r in 0..x.rows {
+        let (idx, val) = x.row(r);
+        for p in 0..idx.len() {
+            let (ci, vi) = (idx[p] as usize, val[p] as f64);
+            for q in p..idx.len() {
+                g[ci * k + idx[q] as usize] += vi * val[q] as f64;
+            }
+        }
+    }
+    // mirror the upper triangle
+    for i in 0..k {
+        for j in 0..i {
+            g[i * k + j] = g[j * k + i];
+        }
+    }
+    g.into_iter().map(|x| x as f32).collect()
+}
+
+/// `tr(Uᵀ A V) = Σ_{(i,j) ∈ nnz(A)} a_ij · ⟨U_i, V_j⟩` — the cross term of
+/// the sparse-safe relative error (never materializes U·Vᵀ).
+pub fn tr_cross(a: &Csr, u: &Csr, v: &Csr) -> f64 {
+    assert_eq!(a.rows, u.rows);
+    assert_eq!(a.cols, v.rows);
+    assert_eq!(u.cols, v.cols);
+    let k = u.cols;
+    let mut scratch = vec![0.0f32; k];
+    let mut acc = 0.0f64;
+    for i in 0..a.rows {
+        let (acols, avals) = a.row(i);
+        if acols.is_empty() {
+            continue;
+        }
+        let (uidx, uval) = u.row(i);
+        if uidx.is_empty() {
+            continue;
+        }
+        scratch.iter_mut().for_each(|x| *x = 0.0);
+        for (&c, &uv) in uidx.iter().zip(uval) {
+            scratch[c as usize] = uv;
+        }
+        for (&j, &aij) in acols.iter().zip(avals) {
+            let (vidx, vval) = v.row(j as usize);
+            let mut dot = 0.0f64;
+            for (&c, &vv) in vidx.iter().zip(vval) {
+                dot += scratch[c as usize] as f64 * vv as f64;
+            }
+            acc += aij as f64 * dot;
+        }
+    }
+    acc
+}
+
+/// `tr(Gᵤ · Gᵥ)` for two dense row-major (k, k) Gram matrices.
+pub fn tr_gram_product(gu: &[f32], gv: &[f32], k: usize) -> f64 {
+    assert_eq!(gu.len(), k * k);
+    assert_eq!(gv.len(), k * k);
+    let mut acc = 0.0f64;
+    // tr(Gu Gv) = Σ_ij Gu[i,j] Gv[j,i]; both symmetric → elementwise product.
+    for i in 0..k * k {
+        acc += gu[i] as f64 * gv[i] as f64;
+    }
+    acc
+}
+
+/// Cross-Gram `Xᵀ·Y` of two CSR factors sharing their row dimension:
+/// (rows, kx)ᵀ · (rows, ky) → dense row-major (kx, ky). Needed by the
+/// sequential-ALS deflation terms `U₁ᵀU₂` and `V₁ᵀV₂` (Eqs. 4.7/4.8).
+pub fn cross_gram(x: &Csr, y: &Csr) -> Vec<f32> {
+    assert_eq!(x.rows, y.rows, "cross_gram row mismatch");
+    let (kx, ky) = (x.cols, y.cols);
+    let mut g = vec![0.0f64; kx * ky];
+    for r in 0..x.rows {
+        let (xi, xv) = x.row(r);
+        if xi.is_empty() {
+            continue;
+        }
+        let (yi, yv) = y.row(r);
+        for (&cx, &vx) in xi.iter().zip(xv) {
+            let base = cx as usize * ky;
+            for (&cy, &vy) in yi.iter().zip(yv) {
+                g[base + cy as usize] += vx as f64 * vy as f64;
+            }
+        }
+    }
+    g.into_iter().map(|x| x as f32).collect()
+}
+
+/// `X · M` where `x` is a sparse (rows, kx) CSR factor and `m` a small
+/// dense row-major (kx, kout) matrix → RowBlock with x's row support.
+pub fn csr_times_small(x: &Csr, m: &[f32], kout: usize) -> RowBlock {
+    assert_eq!(m.len(), x.cols * kout, "csr_times_small shape mismatch");
+    let mut out = RowBlock::new(x.rows, kout);
+    let mut acc = vec![0.0f32; kout];
+    for r in 0..x.rows {
+        let (idx, val) = x.row(r);
+        if idx.is_empty() {
+            continue;
+        }
+        acc.iter_mut().for_each(|a| *a = 0.0);
+        for (&c, &v) in idx.iter().zip(val) {
+            let mrow = &m[c as usize * kout..(c as usize + 1) * kout];
+            for (a, &mv) in acc.iter_mut().zip(mrow) {
+                *a += v * mv;
+            }
+        }
+        out.push_row(r, &acc);
+    }
+    out
+}
+
+/// `a - b` over two RowBlocks with the same logical shape: union of the
+/// active row sets, elementwise subtraction.
+pub fn rowblock_sub(a: &RowBlock, b: &RowBlock) -> RowBlock {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!(a.k, b.k);
+    let k = a.k;
+    let mut out = RowBlock::new(a.rows, k);
+    let (mut p, mut q) = (0usize, 0usize);
+    let mut scratch = vec![0.0f32; k];
+    while p < a.row_ids.len() || q < b.row_ids.len() {
+        let ra = a.row_ids.get(p).copied().unwrap_or(u32::MAX);
+        let rb = b.row_ids.get(q).copied().unwrap_or(u32::MAX);
+        if ra < rb {
+            out.push_row(ra as usize, a.row_data(p));
+            p += 1;
+        } else if rb < ra {
+            for (s, &v) in scratch.iter_mut().zip(b.row_data(q)) {
+                *s = -v;
+            }
+            out.push_row(rb as usize, &scratch);
+            q += 1;
+        } else {
+            for ((s, &x), &y) in scratch.iter_mut().zip(a.row_data(p)).zip(b.row_data(q)) {
+                *s = x - y;
+            }
+            out.push_row(ra as usize, &scratch);
+            p += 1;
+            q += 1;
+        }
+    }
+    out
+}
+
+/// General sparse × sparse product (Gustavson): (p, q)·(q, r) → (p, r) CSR.
+pub fn spmm(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.cols, b.rows, "spmm contraction mismatch");
+    let mut indptr = vec![0usize; a.rows + 1];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    let mut acc = vec![0.0f32; b.cols];
+    let mut touched: Vec<u32> = Vec::new();
+    for i in 0..a.rows {
+        let (acols, avals) = a.row(i);
+        for (&j, &aij) in acols.iter().zip(avals) {
+            let (bcols, bvals) = b.row(j as usize);
+            for (&c, &bv) in bcols.iter().zip(bvals) {
+                if acc[c as usize] == 0.0 {
+                    touched.push(c);
+                }
+                acc[c as usize] += aij * bv;
+            }
+        }
+        touched.sort_unstable();
+        for &c in &touched {
+            let v = acc[c as usize];
+            if v != 0.0 {
+                indices.push(c);
+                values.push(v);
+            }
+            acc[c as usize] = 0.0;
+        }
+        touched.clear();
+        indptr[i + 1] = values.len();
+    }
+    Csr {
+        rows: a.rows,
+        cols: b.cols,
+        indptr,
+        indices,
+        values,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn dense_mm(a: &[f32], (ar, ac): (usize, usize), b: &[f32], bc: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; ar * bc];
+        for i in 0..ar {
+            for l in 0..ac {
+                let av = a[i * ac + l];
+                if av != 0.0 {
+                    for j in 0..bc {
+                        out[i * bc + j] += av * b[l * bc + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn transpose_dense(a: &[f32], r: usize, c: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = a[i * c + j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn atb_matches_dense_reference() {
+        prop::check("atb-vs-dense", 100, 48, |rng: &mut Rng| {
+            let n = rng.range(1, 12);
+            let m = rng.range(1, 12);
+            let k = rng.range(1, 6);
+            let a_d = prop::gen_sparse_dense(rng, n, m, 0.4);
+            let u_d = prop::gen_sparse_dense(rng, n, k, 0.5);
+            let a = Csr::from_dense(n, m, &a_d);
+            let u = Csr::from_dense(n, k, &u_d);
+            let got = atb(&a.to_csc(), &u).to_csr().to_dense();
+            let want = dense_mm(&transpose_dense(&a_d, n, m), (m, n), &u_d, k);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "atb mismatch {g} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn ab_matches_dense_reference() {
+        prop::check("ab-vs-dense", 200, 48, |rng: &mut Rng| {
+            let n = rng.range(1, 12);
+            let m = rng.range(1, 12);
+            let k = rng.range(1, 6);
+            let a_d = prop::gen_sparse_dense(rng, n, m, 0.4);
+            let v_d = prop::gen_sparse_dense(rng, m, k, 0.5);
+            let a = Csr::from_dense(n, m, &a_d);
+            let v = Csr::from_dense(m, k, &v_d);
+            let got = ab(&a, &v).to_csr().to_dense();
+            let want = dense_mm(&a_d, (n, m), &v_d, k);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "ab mismatch {g} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn gram_matches_dense_reference() {
+        prop::check("gram-vs-dense", 300, 48, |rng: &mut Rng| {
+            let n = rng.range(1, 20);
+            let k = rng.range(1, 6);
+            let x_d = prop::gen_sparse_dense(rng, n, k, 0.6);
+            let x = Csr::from_dense(n, k, &x_d);
+            let got = gram(&x);
+            let want = dense_mm(&transpose_dense(&x_d, n, k), (k, n), &x_d, k);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3, "gram mismatch {g} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn spmm_matches_dense_reference() {
+        prop::check("spmm-vs-dense", 400, 48, |rng: &mut Rng| {
+            let p = rng.range(1, 10);
+            let q = rng.range(1, 10);
+            let r = rng.range(1, 10);
+            let a_d = prop::gen_sparse_dense(rng, p, q, 0.4);
+            let b_d = prop::gen_sparse_dense(rng, q, r, 0.4);
+            let a = Csr::from_dense(p, q, &a_d);
+            let b = Csr::from_dense(q, r, &b_d);
+            let c = spmm(&a, &b);
+            c.validate().unwrap();
+            let want = dense_mm(&a_d, (p, q), &b_d, r);
+            let got = c.to_dense();
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "spmm mismatch {g} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn tr_cross_matches_dense() {
+        prop::check("tr-cross-vs-dense", 500, 32, |rng: &mut Rng| {
+            let n = rng.range(1, 10);
+            let m = rng.range(1, 10);
+            let k = rng.range(1, 5);
+            let a_d = prop::gen_sparse_dense(rng, n, m, 0.5);
+            let u_d = prop::gen_sparse_dense(rng, n, k, 0.6);
+            let v_d = prop::gen_sparse_dense(rng, m, k, 0.6);
+            let a = Csr::from_dense(n, m, &a_d);
+            let u = Csr::from_dense(n, k, &u_d);
+            let v = Csr::from_dense(m, k, &v_d);
+            // dense: tr(Uᵀ A V) = Σ_ij A_ij (U V^T)_ij
+            let uvt = dense_mm(&u_d, (n, k), &transpose_dense(&v_d, m, k), m);
+            let want: f64 = (0..n * m).map(|p| a_d[p] as f64 * uvt[p] as f64).sum();
+            let got = tr_cross(&a, &u, &v);
+            assert!(
+                (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "tr_cross {got} vs {want}"
+            );
+        });
+    }
+
+    #[test]
+    fn tr_gram_product_symmetric() {
+        let gu = vec![1.0, 2.0, 2.0, 5.0];
+        let gv = vec![3.0, 1.0, 1.0, 4.0];
+        // tr([[1,2],[2,5]]·[[3,1],[1,4]]) = tr([[5,9],[11,22]]) = 27
+        assert!((tr_gram_product(&gu, &gv, 2) - 27.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_products_bit_identical_to_serial() {
+        prop::check("par-vs-serial", 1600, 24, |rng: &mut Rng| {
+            let n = rng.range(1, 40);
+            let m = rng.range(1, 40);
+            let k = rng.range(1, 6);
+            let threads = rng.range(1, 6);
+            let a = Csr::from_dense(n, m, &prop::gen_sparse_dense(rng, n, m, 0.2));
+            let u = Csr::from_dense(n, k, &prop::gen_sparse_dense(rng, n, k, 0.5));
+            let v = Csr::from_dense(m, k, &prop::gen_sparse_dense(rng, m, k, 0.5));
+            let a_csc = a.to_csc();
+            assert_eq!(atb_par(&a_csc, &u, threads), atb(&a_csc, &u));
+            assert_eq!(ab_par(&a, &v, threads), ab(&a, &v));
+        });
+    }
+
+    #[test]
+    fn split_ranges_covers_everything() {
+        for (total, parts) in [(10usize, 3usize), (1, 4), (0, 2), (7, 7), (100, 8)] {
+            let ranges = split_ranges(total, parts);
+            let mut covered = 0;
+            let mut prev_hi = 0;
+            for &(lo, hi) in &ranges {
+                assert_eq!(lo, prev_hi);
+                covered += hi - lo;
+                prev_hi = hi;
+            }
+            assert_eq!(covered, total, "total {total} parts {parts}");
+        }
+    }
+
+    #[test]
+    fn cross_gram_matches_dense() {
+        prop::check("cross-gram-vs-dense", 1100, 32, |rng: &mut Rng| {
+            let n = rng.range(1, 15);
+            let kx = rng.range(1, 5);
+            let ky = rng.range(1, 5);
+            let x_d = prop::gen_sparse_dense(rng, n, kx, 0.5);
+            let y_d = prop::gen_sparse_dense(rng, n, ky, 0.5);
+            let x = Csr::from_dense(n, kx, &x_d);
+            let y = Csr::from_dense(n, ky, &y_d);
+            let got = cross_gram(&x, &y);
+            let want = dense_mm(&transpose_dense(&x_d, n, kx), (kx, n), &y_d, ky);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3, "cross_gram {g} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn csr_times_small_matches_dense() {
+        prop::check("csr-times-small", 1200, 32, |rng: &mut Rng| {
+            let n = rng.range(1, 15);
+            let kx = rng.range(1, 5);
+            let ko = rng.range(1, 5);
+            let x_d = prop::gen_sparse_dense(rng, n, kx, 0.5);
+            let m: Vec<f32> = (0..kx * ko).map(|_| rng.normal() as f32).collect();
+            let x = Csr::from_dense(n, kx, &x_d);
+            let got = csr_times_small(&x, &m, ko).to_csr().to_dense();
+            let want = dense_mm(&x_d, (n, kx), &m, ko);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "csr_times_small {g} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn rowblock_sub_union_of_rows() {
+        let mut a = RowBlock::new(5, 2);
+        a.push_row(1, &[1.0, 2.0]);
+        a.push_row(3, &[5.0, 6.0]);
+        let mut b = RowBlock::new(5, 2);
+        b.push_row(0, &[1.0, 1.0]);
+        b.push_row(3, &[2.0, 9.0]);
+        let d = rowblock_sub(&a, &b);
+        assert_eq!(d.row_ids, vec![0, 1, 3]);
+        assert_eq!(d.row_data(0), &[-1.0, -1.0]);
+        assert_eq!(d.row_data(1), &[1.0, 2.0]);
+        assert_eq!(d.row_data(2), &[3.0, -3.0]);
+    }
+
+    #[test]
+    fn empty_operands() {
+        let a = Csr::zeros(3, 4);
+        let u = Csr::zeros(3, 2);
+        assert_eq!(atb(&a.to_csc(), &u).active_rows(), 0);
+        assert_eq!(ab(&a, &Csr::zeros(4, 2)).active_rows(), 0);
+        assert_eq!(gram(&u), vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,240 @@
+//! [`RowBlock`]: sparse row support with dense `k`-wide rows.
+//!
+//! This is the natural shape of an ALS half-step intermediate:
+//! `B = Aᵀ U` has a nonzero row for every document that shares a term with
+//! the current factor, and the subsequent `B · (UᵀU)⁻¹` fills each active
+//! row densely (k ≤ 64). Keeping inactive rows unmaterialized is exactly
+//! the paper's "intermediates stay sparse" memory win; the active rows
+//! being dense keeps the small solve vectorizable.
+
+use super::csr::Csr;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowBlock {
+    pub rows: usize,
+    pub k: usize,
+    /// Active row ids, strictly ascending.
+    pub row_ids: Vec<u32>,
+    /// Dense row data, `row_ids.len() * k`, row-major.
+    pub data: Vec<f32>,
+}
+
+impl RowBlock {
+    pub fn new(rows: usize, k: usize) -> Self {
+        RowBlock {
+            rows,
+            k,
+            row_ids: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn active_rows(&self) -> usize {
+        self.row_ids.len()
+    }
+
+    /// Stored scalar count — what the memory tracker charges for this
+    /// intermediate (active rows × k, regardless of exact zeros inside).
+    #[inline]
+    pub fn stored_len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn row_data(&self, slot: usize) -> &[f32] {
+        &self.data[slot * self.k..(slot + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn row_data_mut(&mut self, slot: usize) -> &mut [f32] {
+        let k = self.k;
+        &mut self.data[slot * k..(slot + 1) * k]
+    }
+
+    pub fn push_row(&mut self, row_id: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.k);
+        debug_assert!(
+            self.row_ids.last().map_or(true, |&last| (last as usize) < row_id),
+            "rows must be pushed in ascending order"
+        );
+        self.row_ids.push(row_id as u32);
+        self.data.extend_from_slice(row);
+    }
+
+    /// In-place right-multiplication by a dense (k, k) row-major matrix:
+    /// each active row r becomes `r · m`. This is the `B · G⁻¹` solve step.
+    pub fn matmul_small(&mut self, m: &[f32]) {
+        let k = self.k;
+        assert_eq!(m.len(), k * k);
+        let mut scratch = vec![0.0f32; k];
+        for slot in 0..self.active_rows() {
+            let row = self.row_data_mut(slot);
+            scratch.iter_mut().for_each(|x| *x = 0.0);
+            for (i, &ri) in row.iter().enumerate() {
+                if ri != 0.0 {
+                    let mrow = &m[i * k..(i + 1) * k];
+                    for (s, &mv) in scratch.iter_mut().zip(mrow) {
+                        *s += ri * mv;
+                    }
+                }
+            }
+            row.copy_from_slice(&scratch);
+        }
+    }
+
+    /// Project to the nonnegative orthant (negatives → 0) in place.
+    pub fn project_nonneg(&mut self) {
+        for v in &mut self.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Gram matrix Xᵀ X of the logical (rows, k) matrix, dense (k, k).
+    pub fn gram(&self) -> Vec<f32> {
+        let k = self.k;
+        let mut g = vec![0.0f64; k * k];
+        for slot in 0..self.active_rows() {
+            let row = self.row_data(slot);
+            for i in 0..k {
+                let ri = row[i] as f64;
+                if ri != 0.0 {
+                    for j in i..k {
+                        g[i * k + j] += ri * row[j] as f64;
+                    }
+                }
+            }
+        }
+        for i in 0..k {
+            for j in 0..i {
+                g[i * k + j] = g[j * k + i];
+            }
+        }
+        g.into_iter().map(|x| x as f32).collect()
+    }
+
+    /// Freeze into CSR, dropping exact zeros.
+    pub fn to_csr(&self) -> Csr {
+        let k = self.k;
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut prev_row = 0usize;
+        for (slot, &rid) in self.row_ids.iter().enumerate() {
+            let rid = rid as usize;
+            for r in prev_row..rid {
+                indptr[r + 1] = values.len();
+                let _ = r;
+            }
+            let row = self.row_data(slot);
+            for (c, &v) in row.iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            indptr[rid + 1] = values.len();
+            prev_row = rid + 1;
+        }
+        for r in prev_row..self.rows {
+            indptr[r + 1] = values.len();
+        }
+        Csr {
+            rows: self.rows,
+            cols: k,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    pub fn from_csr(m: &Csr) -> RowBlock {
+        let mut rb = RowBlock::new(m.rows, m.cols);
+        let mut scratch = vec![0.0f32; m.cols];
+        for r in 0..m.rows {
+            let (idx, val) = m.row(r);
+            if idx.is_empty() {
+                continue;
+            }
+            scratch.iter_mut().for_each(|x| *x = 0.0);
+            for (&c, &v) in idx.iter().zip(val) {
+                scratch[c as usize] = v;
+            }
+            rb.push_row(r, &scratch);
+        }
+        rb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RowBlock {
+        let mut rb = RowBlock::new(5, 2);
+        rb.push_row(1, &[1.0, -2.0]);
+        rb.push_row(3, &[0.0, 4.0]);
+        rb
+    }
+
+    #[test]
+    fn push_and_freeze() {
+        let m = sample().to_csr();
+        assert_eq!(m.rows, 5);
+        assert_eq!(m.cols, 2);
+        assert_eq!(m.get(1, 0), 1.0);
+        assert_eq!(m.get(1, 1), -2.0);
+        assert_eq!(m.get(3, 1), 4.0);
+        assert_eq!(m.nnz(), 3);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let rb = sample();
+        let rb2 = RowBlock::from_csr(&rb.to_csr());
+        assert_eq!(rb2.row_ids, rb.row_ids);
+        // -2.0 survives; the explicit 0.0 in slot 1 is dropped then refilled
+        assert_eq!(rb2.to_csr(), rb.to_csr());
+    }
+
+    #[test]
+    fn project_nonneg() {
+        let mut rb = sample();
+        rb.project_nonneg();
+        assert!(rb.data.iter().all(|&v| v >= 0.0));
+        assert_eq!(rb.row_data(0), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn matmul_small_identity() {
+        let mut rb = sample();
+        let before = rb.data.clone();
+        rb.matmul_small(&[1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(rb.data, before);
+    }
+
+    #[test]
+    fn matmul_small_values() {
+        let mut rb = RowBlock::new(2, 2);
+        rb.push_row(0, &[1.0, 2.0]);
+        // m = [[0, 1], [1, 0]] swaps coordinates
+        rb.matmul_small(&[0.0, 1.0, 1.0, 0.0]);
+        assert_eq!(rb.row_data(0), &[2.0, 1.0]);
+    }
+
+    #[test]
+    fn gram_matches_dense() {
+        let rb = sample();
+        let g = rb.gram();
+        // X = [[1,-2],[0,4]] => XtX = [[1,-2],[-2,20]]
+        assert_eq!(g, vec![1.0, -2.0, -2.0, 20.0]);
+    }
+
+    #[test]
+    fn stored_len_counts_active_rows() {
+        assert_eq!(sample().stored_len(), 4); // 2 active rows × k=2
+    }
+}

@@ -1,0 +1,328 @@
+//! Top-t selection — the enforced-sparsity primitive (Algorithm 2, steps
+//! 2 and 4).
+//!
+//! The paper "finds the magnitude of the t-th largest entry and sets all
+//! entries with magnitudes lower than that to zero" — i.e. ties at the
+//! threshold are *kept* ([`TieMode::KeepTies`]). [`TieMode::Exact`] instead
+//! guarantees `nnz ≤ t` by breaking threshold ties by position, which is
+//! what a hard memory budget wants. On continuous data the two coincide.
+//!
+//! Selection uses quickselect (O(nnz) expected) rather than the paper's
+//! full sort — see EXPERIMENTS.md §Perf for the measured win; a sort-based
+//! reference implementation is kept for property tests.
+
+use super::csr::Csr;
+use super::rowblock::RowBlock;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TieMode {
+    /// Paper semantics: keep every entry ≥ the t-th largest value.
+    #[default]
+    KeepTies,
+    /// Keep exactly min(t, nnz) entries; threshold ties kept left-to-right.
+    Exact,
+}
+
+/// Value of the t-th largest element (1-indexed) of `vals`, via iterative
+/// quickselect with a deterministic median-of-three pivot. `t == 0` or an
+/// empty slice yields +inf (nothing passes); `t >= len` yields the minimum
+/// (everything passes).
+pub fn nth_largest(vals: &mut [f32], t: usize) -> f32 {
+    if t == 0 || vals.is_empty() {
+        return f32::INFINITY;
+    }
+    if t >= vals.len() {
+        return vals.iter().copied().fold(f32::INFINITY, f32::min);
+    }
+    // select index t-1 in descending order == index len-t ascending
+    let target = vals.len() - t;
+    let (mut lo, mut hi) = (0usize, vals.len() - 1);
+    loop {
+        if lo == hi {
+            return vals[lo];
+        }
+        let pivot = median_of_three(vals, lo, hi);
+        let (lt, gt) = three_way_partition(vals, lo, hi, pivot);
+        if target < lt {
+            hi = lt - 1;
+        } else if target > gt {
+            lo = gt + 1;
+        } else {
+            return pivot;
+        }
+    }
+}
+
+fn median_of_three(vals: &[f32], lo: usize, hi: usize) -> f32 {
+    let mid = lo + (hi - lo) / 2;
+    let (a, b, c) = (vals[lo], vals[mid], vals[hi]);
+    if (a <= b) == (b <= c) {
+        b
+    } else if (b <= a) == (a <= c) {
+        a
+    } else {
+        c
+    }
+}
+
+/// Dutch-flag partition of vals[lo..=hi] around `pivot`; returns the index
+/// range [lt, gt] that equals the pivot after partitioning.
+fn three_way_partition(vals: &mut [f32], lo: usize, hi: usize, pivot: f32) -> (usize, usize) {
+    let (mut lt, mut i, mut gt) = (lo, lo, hi);
+    while i <= gt {
+        if vals[i] < pivot {
+            vals.swap(lt, i);
+            lt += 1;
+            i += 1;
+        } else if vals[i] > pivot {
+            vals.swap(i, gt);
+            if gt == 0 {
+                break;
+            }
+            gt -= 1;
+        } else {
+            i += 1;
+        }
+    }
+    (lt, gt)
+}
+
+/// Sort-based reference for `nth_largest` (the paper's stated method).
+pub fn nth_largest_by_sort(vals: &[f32], t: usize) -> f32 {
+    if t == 0 || vals.is_empty() {
+        return f32::INFINITY;
+    }
+    let mut sorted = vals.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sorted[t.min(sorted.len()) - 1]
+}
+
+/// Keep only the `t` largest stored values of a CSR matrix (all values are
+/// assumed positive — factors are projected before enforcement).
+pub fn enforce_top_t_csr(m: &mut Csr, t: usize, mode: TieMode) {
+    if m.nnz() <= t {
+        return;
+    }
+    let mut scratch = m.values.clone();
+    let tau = nth_largest(&mut scratch, t);
+    match mode {
+        TieMode::KeepTies => m.retain(|_, _, v| v >= tau),
+        TieMode::Exact => {
+            let above = m.values.iter().filter(|&&v| v > tau).count();
+            let mut tie_budget = t - above;
+            m.retain(|_, _, v| {
+                if v > tau {
+                    true
+                } else if v == tau && tie_budget > 0 {
+                    tie_budget -= 1;
+                    true
+                } else {
+                    false
+                }
+            });
+        }
+    }
+}
+
+/// Keep only the `t` largest *positive* entries of a RowBlock in place
+/// (zeroing the rest). This is the hot-path form used inside ALS, before
+/// the intermediate is frozen to CSR.
+pub fn enforce_top_t_rowblock(rb: &mut RowBlock, t: usize, mode: TieMode) {
+    let mut positives: Vec<f32> = rb.data.iter().copied().filter(|&v| v > 0.0).collect();
+    if positives.len() <= t {
+        return;
+    }
+    let tau = nth_largest(&mut positives, t);
+    match mode {
+        TieMode::KeepTies => {
+            for v in &mut rb.data {
+                if *v < tau {
+                    *v = 0.0;
+                }
+            }
+        }
+        TieMode::Exact => {
+            let above = rb.data.iter().filter(|&&v| v > tau).count();
+            let mut tie_budget = t - above;
+            for v in &mut rb.data {
+                if *v > tau {
+                    continue;
+                }
+                if *v == tau && tie_budget > 0 {
+                    tie_budget -= 1;
+                } else {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Per-column enforcement (§4 of the paper): keep the `t_per_col` largest
+/// entries of each column independently. Deliberately goes through a
+/// column gather — the same access-pattern penalty the paper reports for
+/// column-wise enforcement on compressed row/column formats.
+pub fn enforce_top_t_per_column(m: &mut Csr, t_per_col: usize, mode: TieMode) {
+    let k = m.cols;
+    // gather each column's values (column access in CSR = full scan)
+    let mut col_vals: Vec<Vec<f32>> = vec![Vec::new(); k];
+    for r in 0..m.rows {
+        let (idx, val) = m.row(r);
+        for (&c, &v) in idx.iter().zip(val) {
+            col_vals[c as usize].push(v);
+        }
+    }
+    let mut taus = vec![f32::NEG_INFINITY; k];
+    let mut tie_budgets = vec![usize::MAX; k];
+    for c in 0..k {
+        if col_vals[c].len() > t_per_col {
+            let tau = nth_largest(&mut col_vals[c], t_per_col);
+            taus[c] = tau;
+            if mode == TieMode::Exact {
+                let above = col_vals[c].iter().filter(|&&v| v > tau).count();
+                tie_budgets[c] = t_per_col - above;
+            }
+        }
+    }
+    match mode {
+        TieMode::KeepTies => m.retain(|_, c, v| v >= taus[c as usize]),
+        TieMode::Exact => m.retain(|_, c, v| {
+            let c = c as usize;
+            if v > taus[c] {
+                true
+            } else if v == taus[c] && tie_budgets[c] > 0 {
+                tie_budgets[c] -= 1;
+                true
+            } else {
+                false
+            }
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn nth_largest_agrees_with_sort() {
+        prop::check("quickselect-vs-sort", 600, 96, |rng: &mut Rng| {
+            let n = rng.range(1, 200);
+            let mut vals: Vec<f32> = (0..n)
+                .map(|_| {
+                    if rng.f64() < 0.2 {
+                        // force ties
+                        (rng.below(5) as f32) * 0.5
+                    } else {
+                        rng.f32() * 10.0
+                    }
+                })
+                .collect();
+            let t = rng.range(1, n + 2);
+            let want = nth_largest_by_sort(&vals, t);
+            let got = nth_largest(&mut vals, t);
+            assert_eq!(got, want, "t={t} n={n}");
+        });
+    }
+
+    #[test]
+    fn nth_largest_edges() {
+        assert_eq!(nth_largest(&mut [], 3), f32::INFINITY);
+        assert_eq!(nth_largest(&mut [1.0, 2.0], 0), f32::INFINITY);
+        assert_eq!(nth_largest(&mut [1.0, 2.0], 5), 1.0);
+        assert_eq!(nth_largest(&mut [7.0], 1), 7.0);
+    }
+
+    fn positive_csr(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Csr {
+        let data = prop::gen_sparse_dense(rng, rows, cols, density);
+        Csr::from_dense(rows, cols, &data)
+    }
+
+    #[test]
+    fn enforce_exact_keeps_exactly_t() {
+        prop::check("exact-top-t", 700, 64, |rng: &mut Rng| {
+            let (rows, cols) = (rng.range(1, 15), rng.range(1, 8));
+            let mut m = positive_csr(rng, rows, cols, 0.6);
+            let nnz0 = m.nnz();
+            let t = rng.range(0, nnz0 + 3);
+            let kept_expected = t.min(nnz0);
+            let mut m2 = m.clone();
+            enforce_top_t_csr(&mut m2, t, TieMode::Exact);
+            assert_eq!(m2.nnz(), kept_expected);
+            m2.validate().unwrap();
+            // kept set dominates dropped set
+            if m2.nnz() > 0 && m2.nnz() < nnz0 {
+                let min_kept = m2.values.iter().copied().fold(f32::INFINITY, f32::min);
+                enforce_top_t_csr(&mut m, t, TieMode::KeepTies);
+                let dropped_max_bound = min_kept;
+                assert!(m.values.iter().all(|&v| v >= dropped_max_bound * 0.999));
+            }
+        });
+    }
+
+    #[test]
+    fn keep_ties_keeps_all_ties() {
+        let mut m = Csr::from_dense(1, 5, &[3.0, 1.0, 3.0, 2.0, 3.0]);
+        enforce_top_t_csr(&mut m, 2, TieMode::KeepTies);
+        assert_eq!(m.nnz(), 3); // all three 3.0s survive
+        let mut m = Csr::from_dense(1, 5, &[3.0, 1.0, 3.0, 2.0, 3.0]);
+        enforce_top_t_csr(&mut m, 2, TieMode::Exact);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn enforce_noop_when_under_budget() {
+        let mut m = Csr::from_dense(2, 2, &[1.0, 0.0, 0.0, 2.0]);
+        let before = m.clone();
+        enforce_top_t_csr(&mut m, 10, TieMode::Exact);
+        assert_eq!(m, before);
+    }
+
+    #[test]
+    fn rowblock_enforcement_matches_csr() {
+        prop::check("rowblock-vs-csr-top-t", 800, 48, |rng: &mut Rng| {
+            let rows = rng.range(1, 12);
+            let k = rng.range(1, 6);
+            let data = prop::gen_sparse_dense(rng, rows, k, 0.7);
+            let csr = Csr::from_dense(rows, k, &data);
+            let mut rb = RowBlock::from_csr(&csr);
+            let t = rng.range(0, csr.nnz() + 2);
+            let mut csr2 = csr.clone();
+            enforce_top_t_csr(&mut csr2, t, TieMode::KeepTies);
+            enforce_top_t_rowblock(&mut rb, t, TieMode::KeepTies);
+            assert_eq!(rb.to_csr(), csr2);
+        });
+    }
+
+    #[test]
+    fn per_column_enforcement_bounds_each_column() {
+        prop::check("per-column-top-t", 900, 48, |rng: &mut Rng| {
+            let (rows, cols) = (rng.range(1, 20), rng.range(1, 6));
+            let mut m = positive_csr(rng, rows, cols, 0.7);
+            let t = rng.range(1, 6);
+            enforce_top_t_per_column(&mut m, t, TieMode::Exact);
+            m.validate().unwrap();
+            for (c, &count) in m.col_nnz().iter().enumerate() {
+                assert!(count <= t, "column {c} has {count} > {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn per_column_keeps_largest_per_column() {
+        let mut m = Csr::from_dense(4, 2, &[
+            5.0, 1.0, //
+            4.0, 2.0, //
+            3.0, 8.0, //
+            2.0, 9.0,
+        ]);
+        enforce_top_t_per_column(&mut m, 2, TieMode::Exact);
+        assert_eq!(m.get(0, 0), 5.0);
+        assert_eq!(m.get(1, 0), 4.0);
+        assert_eq!(m.get(2, 1), 8.0);
+        assert_eq!(m.get(3, 1), 9.0);
+        assert_eq!(m.nnz(), 4);
+    }
+}

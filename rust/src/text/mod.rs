@@ -1,0 +1,14 @@
+//! Text-processing substrate: tokenizer → stop-word filter → vocabulary →
+//! term-document matrix, with the paper's exact preprocessing (§3):
+//! discard stop words, discard terms that occur only once in the corpus,
+//! and divide each row of the data matrix by its nonzero count so common
+//! terms do not dominate.
+
+pub mod stopwords;
+pub mod tdm;
+pub mod tokenizer;
+pub mod vocab;
+
+pub use tdm::{TdmBuilder, TermDocMatrix};
+pub use tokenizer::tokenize;
+pub use vocab::Vocab;

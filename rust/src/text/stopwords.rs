@@ -1,0 +1,75 @@
+//! English stop-word list (the paper discards stop words before building
+//! the term-document matrix). Derived from the classic SMART/Glasgow lists,
+//! trimmed to common function words.
+
+use std::collections::HashSet;
+use std::sync::OnceLock;
+
+const STOPWORDS: &[&str] = &[
+    "about", "above", "after", "again", "against", "all", "also", "am", "an",
+    "and", "any", "are", "aren't", "as", "at", "be", "because", "been",
+    "before", "being", "below", "between", "both", "but", "by", "can",
+    "cannot", "could", "couldn't", "did", "didn't", "do", "does", "doesn't",
+    "doing", "don't", "down", "during", "each", "few", "for", "from",
+    "further", "had", "hadn't", "has", "hasn't", "have", "haven't", "having",
+    "he", "her", "here", "hers", "herself", "him", "himself", "his", "how",
+    "if", "in", "into", "is", "isn't", "it", "its", "itself", "just", "me",
+    "more", "most", "my", "myself", "no", "nor", "not", "now", "of", "off",
+    "on", "once", "only", "or", "other", "ought", "our", "ours", "ourselves",
+    "out", "over", "own", "said", "same", "she", "should", "shouldn't", "so",
+    "some", "such", "than", "that", "the", "their", "theirs", "them",
+    "themselves", "then", "there", "these", "they", "this", "those",
+    "through", "to", "too", "under", "until", "up", "upon", "very", "was",
+    "wasn't", "we", "were", "weren't", "what", "when", "where", "which",
+    "while", "who", "whom", "why", "will", "with", "won't", "would",
+    "wouldn't", "you", "your", "yours", "yourself", "yourselves", "mr",
+    "mrs", "ms", "one", "two", "may", "many", "much", "us", "however",
+    "since", "within", "without", "among", "between", "per", "via",
+];
+
+fn set() -> &'static HashSet<&'static str> {
+    static SET: OnceLock<HashSet<&'static str>> = OnceLock::new();
+    SET.get_or_init(|| STOPWORDS.iter().copied().collect())
+}
+
+/// Is this (already lowercased) term a stop word?
+pub fn is_stopword(term: &str) -> bool {
+    set().contains(term)
+}
+
+/// Remove stop words in place.
+pub fn filter_stopwords(terms: &mut Vec<String>) {
+    terms.retain(|t| !is_stopword(t));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn common_words_stopped() {
+        for w in ["the", "and", "of", "is", "wouldn't"] {
+            assert!(is_stopword(w), "{w} should be a stop word");
+        }
+    }
+
+    #[test]
+    fn content_words_pass() {
+        for w in ["coffee", "electrons", "government", "yen"] {
+            assert!(!is_stopword(w), "{w} should pass");
+        }
+    }
+
+    #[test]
+    fn filter_in_place() {
+        let mut v = vec!["the".to_string(), "coffee".to_string(), "of".to_string()];
+        filter_stopwords(&mut v);
+        assert_eq!(v, vec!["coffee"]);
+    }
+
+    #[test]
+    fn list_is_deduplicated_enough() {
+        // the OnceLock set drops duplicates; sanity-check size is plausible
+        assert!(set().len() > 100);
+    }
+}

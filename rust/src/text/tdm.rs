@@ -1,0 +1,223 @@
+//! Term-document matrix builder — the paper's §3 preprocessing.
+//!
+//! Rows are terms, columns are documents, `a_ij` = occurrences of term i
+//! in document j. Stop words are dropped at ingest; terms occurring only
+//! once in the whole corpus are dropped at freeze; each surviving row is
+//! divided by its nonzero count so common terms don't dominate topics.
+
+use super::stopwords::is_stopword;
+use super::tokenizer::tokenize;
+use super::vocab::Vocab;
+use crate::sparse::{Coo, Csc, Csr};
+use std::collections::HashMap;
+
+/// The frozen corpus matrix plus the metadata evaluation needs.
+#[derive(Clone, Debug)]
+pub struct TermDocMatrix {
+    /// (terms × docs), row-normalized counts, CSR.
+    pub a: Csr,
+    /// CSC twin of `a` (built once; the Aᵀ·U product streams columns).
+    pub a_csc: Csc,
+    /// Term strings, indexed by row id.
+    pub terms: Vec<String>,
+    /// Ground-truth label per document (e.g. journal id), if known.
+    pub doc_labels: Option<Vec<u32>>,
+    /// Human names for label ids.
+    pub label_names: Vec<String>,
+}
+
+impl TermDocMatrix {
+    pub fn n_terms(&self) -> usize {
+        self.a.rows
+    }
+
+    pub fn n_docs(&self) -> usize {
+        self.a.cols
+    }
+}
+
+/// Streaming builder: feed documents one at a time (possibly from the
+/// coordinator's ingestion pipeline), then freeze.
+#[derive(Debug, Default)]
+pub struct TdmBuilder {
+    vocab: Vocab,
+    /// per-document sparse term counts: (term_id, count)
+    docs: Vec<Vec<(u32, u32)>>,
+    labels: Vec<u32>,
+    label_names: Vec<String>,
+    label_ids: HashMap<String, u32>,
+    any_label: bool,
+}
+
+impl TdmBuilder {
+    pub fn new() -> Self {
+        TdmBuilder::default()
+    }
+
+    pub fn n_docs(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn n_terms_seen(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Add a raw-text document. `label` is the optional ground-truth
+    /// cluster (journal) used by the accuracy measure.
+    pub fn add_text(&mut self, text: &str, label: Option<&str>) {
+        let tokens = tokenize(text);
+        self.add_tokens(&tokens, label);
+    }
+
+    /// Add a pre-tokenized document.
+    pub fn add_tokens<S: AsRef<str>>(&mut self, tokens: &[S], label: Option<&str>) {
+        let mut counts: HashMap<u32, u32> = HashMap::new();
+        for tok in tokens {
+            let t = tok.as_ref();
+            if is_stopword(t) {
+                continue;
+            }
+            let id = self.vocab.intern(t);
+            *counts.entry(id).or_insert(0) += 1;
+        }
+        let mut doc: Vec<(u32, u32)> = counts.into_iter().collect();
+        doc.sort_unstable_by_key(|&(id, _)| id);
+        for &(id, c) in &doc {
+            self.vocab.bump(id, c as u64);
+        }
+        self.docs.push(doc);
+        let label_id = match label {
+            Some(name) => {
+                self.any_label = true;
+                match self.label_ids.get(name) {
+                    Some(&id) => id,
+                    None => {
+                        let id = self.label_names.len() as u32;
+                        self.label_ids.insert(name.to_string(), id);
+                        self.label_names.push(name.to_string());
+                        id
+                    }
+                }
+            }
+            None => u32::MAX,
+        };
+        self.labels.push(label_id);
+    }
+
+    /// Freeze: drop singleton terms, remap ids, build the CSR/CSC pair,
+    /// row-normalize by nonzero count.
+    pub fn freeze(self) -> TermDocMatrix {
+        let keep = self.vocab.non_singleton_ids();
+        let mut remap = vec![u32::MAX; self.vocab.len()];
+        for (new_id, &old_id) in keep.iter().enumerate() {
+            remap[old_id as usize] = new_id as u32;
+        }
+        let n_terms = keep.len();
+        let n_docs = self.docs.len();
+
+        let mut coo = Coo::new(n_terms, n_docs);
+        for (j, doc) in self.docs.iter().enumerate() {
+            for &(old_id, count) in doc {
+                let new_id = remap[old_id as usize];
+                if new_id != u32::MAX {
+                    coo.push(new_id as usize, j, count as f32);
+                }
+            }
+        }
+        let mut a = coo.to_csr();
+
+        // row normalization: divide each row by its nonzero count
+        for r in 0..a.rows {
+            let lo = a.indptr[r];
+            let hi = a.indptr[r + 1];
+            let nnz_row = (hi - lo) as f32;
+            if nnz_row > 0.0 {
+                for v in &mut a.values[lo..hi] {
+                    *v /= nnz_row;
+                }
+            }
+        }
+
+        let terms: Vec<String> = keep.iter().map(|&id| self.vocab.term(id).to_string()).collect();
+        let a_csc = a.to_csc();
+        TermDocMatrix {
+            a,
+            a_csc,
+            terms,
+            doc_labels: if self.any_label { Some(self.labels) } else { None },
+            label_names: self.label_names,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_corpus() -> TermDocMatrix {
+        let mut b = TdmBuilder::new();
+        b.add_text("coffee crop coffee quotas", Some("econ"));
+        b.add_text("the coffee market and crop reports", Some("econ"));
+        b.add_text("electrons atoms electrons", Some("sci"));
+        b.freeze()
+    }
+
+    #[test]
+    fn shapes_and_labels() {
+        let tdm = tiny_corpus();
+        assert_eq!(tdm.n_docs(), 3);
+        // singletons dropped: quotas, market, reports, atoms occur once
+        assert!(tdm.terms.contains(&"coffee".to_string()));
+        assert!(tdm.terms.contains(&"crop".to_string()));
+        assert!(tdm.terms.contains(&"electrons".to_string()));
+        assert!(!tdm.terms.contains(&"quotas".to_string()));
+        assert!(!tdm.terms.contains(&"atoms".to_string()));
+        assert!(!tdm.terms.contains(&"the".to_string())); // stop word
+        assert_eq!(tdm.n_terms(), 3);
+        assert_eq!(tdm.doc_labels.as_ref().unwrap().len(), 3);
+        assert_eq!(tdm.label_names, vec!["econ", "sci"]);
+    }
+
+    #[test]
+    fn row_normalization() {
+        let tdm = tiny_corpus();
+        let coffee = tdm.terms.iter().position(|t| t == "coffee").unwrap();
+        // coffee appears in docs 0 (×2) and 1 (×1): nnz=2 → values 1.0, 0.5
+        let (_, vals) = tdm.a.row(coffee);
+        assert_eq!(vals.len(), 2);
+        assert!((vals[0] - 1.0).abs() < 1e-6);
+        assert!((vals[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csc_twin_matches() {
+        let tdm = tiny_corpus();
+        assert_eq!(tdm.a_csc.to_csr(), tdm.a);
+    }
+
+    #[test]
+    fn unlabeled_corpus_has_no_labels() {
+        let mut b = TdmBuilder::new();
+        b.add_text("alpha beta alpha beta", None);
+        b.add_text("beta gamma beta", None);
+        let tdm = b.freeze();
+        assert!(tdm.doc_labels.is_none());
+    }
+
+    #[test]
+    fn empty_corpus() {
+        let tdm = TdmBuilder::new().freeze();
+        assert_eq!(tdm.n_docs(), 0);
+        assert_eq!(tdm.n_terms(), 0);
+    }
+
+    #[test]
+    fn tokens_api() {
+        let mut b = TdmBuilder::new();
+        b.add_tokens(&["alpha", "beta", "alpha"], Some("x"));
+        b.add_tokens(&["alpha"], Some("x"));
+        let tdm = b.freeze();
+        assert_eq!(tdm.n_terms(), 1); // beta is a singleton
+        assert_eq!(tdm.terms[0], "alpha");
+    }
+}

@@ -1,0 +1,66 @@
+//! Unicode-ish tokenizer: lowercase, split on non-alphanumerics, keep
+//! alphabetic tokens of length ≥ 2 (single characters and pure numbers
+//! carry no topical signal and the paper filters singletons anyway).
+
+/// Tokenize one document into lowercase terms.
+pub fn tokenize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        if ch.is_alphanumeric() || ch == '\'' {
+            for lc in ch.to_lowercase() {
+                cur.push(lc);
+            }
+        } else if !cur.is_empty() {
+            push_token(&mut out, &mut cur);
+        }
+    }
+    if !cur.is_empty() {
+        push_token(&mut out, &mut cur);
+    }
+    out
+}
+
+fn push_token(out: &mut Vec<String>, cur: &mut String) {
+    // strip possessives: "market's" -> "market"
+    let stripped = cur.trim_end_matches("'s").trim_matches('\'');
+    if stripped.len() >= 2 && stripped.chars().any(|c| c.is_alphabetic()) {
+        out.push(stripped.to_string());
+    }
+    cur.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_split_and_lowercase() {
+        assert_eq!(
+            tokenize("The quick, Brown FOX!"),
+            vec!["the", "quick", "brown", "fox"]
+        );
+    }
+
+    #[test]
+    fn drops_single_chars_and_numbers() {
+        assert_eq!(tokenize("a 1 22 b2 xy"), vec!["b2", "xy"]);
+    }
+
+    #[test]
+    fn strips_possessives() {
+        assert_eq!(tokenize("market's"), vec!["market"]);
+        assert_eq!(tokenize("'quoted'"), vec!["quoted"]);
+    }
+
+    #[test]
+    fn empty_and_punctuation_only() {
+        assert!(tokenize("").is_empty());
+        assert!(tokenize("... !!! ---").is_empty());
+    }
+
+    #[test]
+    fn unicode_lowercases() {
+        assert_eq!(tokenize("Zürich Ärzte"), vec!["zürich", "ärzte"]);
+    }
+}

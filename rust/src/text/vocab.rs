@@ -1,0 +1,106 @@
+//! Vocabulary: bidirectional term ↔ id mapping with corpus frequencies.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Vocab {
+    term_to_id: HashMap<String, u32>,
+    id_to_term: Vec<String>,
+    /// total corpus occurrences per term id
+    counts: Vec<u64>,
+    /// number of documents containing the term
+    doc_counts: Vec<u64>,
+}
+
+impl Vocab {
+    pub fn new() -> Self {
+        Vocab::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.id_to_term.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_to_term.is_empty()
+    }
+
+    /// Intern a term, returning its id.
+    pub fn intern(&mut self, term: &str) -> u32 {
+        if let Some(&id) = self.term_to_id.get(term) {
+            return id;
+        }
+        let id = self.id_to_term.len() as u32;
+        self.term_to_id.insert(term.to_string(), id);
+        self.id_to_term.push(term.to_string());
+        self.counts.push(0);
+        self.doc_counts.push(0);
+        id
+    }
+
+    pub fn id(&self, term: &str) -> Option<u32> {
+        self.term_to_id.get(term).copied()
+    }
+
+    pub fn term(&self, id: u32) -> &str {
+        &self.id_to_term[id as usize]
+    }
+
+    pub fn count(&self, id: u32) -> u64 {
+        self.counts[id as usize]
+    }
+
+    pub fn doc_count(&self, id: u32) -> u64 {
+        self.doc_counts[id as usize]
+    }
+
+    pub(crate) fn bump(&mut self, id: u32, occurrences: u64) {
+        self.counts[id as usize] += occurrences;
+        self.doc_counts[id as usize] += 1;
+    }
+
+    /// Ids of terms occurring more than once in the corpus (the paper
+    /// discards singletons), in id order.
+    pub fn non_singleton_ids(&self) -> Vec<u32> {
+        (0..self.len() as u32)
+            .filter(|&id| self.counts[id as usize] > 1)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let mut v = Vocab::new();
+        let a = v.intern("coffee");
+        let b = v.intern("coffee");
+        assert_eq!(a, b);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v.term(a), "coffee");
+        assert_eq!(v.id("coffee"), Some(a));
+        assert_eq!(v.id("tea"), None);
+    }
+
+    #[test]
+    fn counts_accumulate() {
+        let mut v = Vocab::new();
+        let id = v.intern("yen");
+        v.bump(id, 3);
+        v.bump(id, 2);
+        assert_eq!(v.count(id), 5);
+        assert_eq!(v.doc_count(id), 2);
+    }
+
+    #[test]
+    fn singleton_filter() {
+        let mut v = Vocab::new();
+        let a = v.intern("rare");
+        let b = v.intern("common");
+        v.bump(a, 1);
+        v.bump(b, 4);
+        assert_eq!(v.non_singleton_ids(), vec![b]);
+    }
+}

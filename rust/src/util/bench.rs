@@ -1,0 +1,110 @@
+//! A miniature benchmark harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target builds a [`BenchSuite`], registers closures,
+//! and calls [`BenchSuite::run`], which warms up, measures a configurable
+//! number of timed samples, and prints a criterion-style summary line plus
+//! the paper-table rows the target exists to regenerate. Honors
+//! `ESNMF_BENCH_SAMPLES` and `ESNMF_BENCH_FAST=1` (CI smoke mode).
+
+use super::stats;
+use super::timer::fmt_seconds;
+use std::hint::black_box;
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub samples_s: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples_s)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} median {:>12}  mean {:>12}  sd {:>10}  (n={})",
+            self.name,
+            fmt_seconds(stats::median(&self.samples_s)),
+            fmt_seconds(stats::mean(&self.samples_s)),
+            fmt_seconds(stats::stddev(&self.samples_s)),
+            self.samples_s.len()
+        )
+    }
+}
+
+pub struct BenchSuite {
+    pub title: String,
+    pub samples: usize,
+    pub warmup: usize,
+    pub results: Vec<BenchResult>,
+}
+
+pub fn fast_mode() -> bool {
+    std::env::var("ESNMF_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        let mut samples = std::env::var("ESNMF_BENCH_SAMPLES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(10);
+        let mut warmup = 2;
+        if fast_mode() {
+            samples = 2;
+            warmup = 0;
+        }
+        println!("=== bench: {title} (samples={samples}) ===");
+        BenchSuite {
+            title: title.to_string(),
+            samples,
+            warmup,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f` (the closure's result is black-boxed).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples_s = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            black_box(f());
+            samples_s.push(t.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            samples_s,
+        };
+        println!("{}", result.summary());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print a markdown-ish table header for paper rows.
+    pub fn table(&self, header: &str) {
+        println!("\n--- {}: {header} ---", self.title);
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        println!("{}", cells.join(" | "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        std::env::set_var("ESNMF_BENCH_FAST", "1");
+        let mut suite = BenchSuite::new("selftest");
+        let r = suite.bench("noop-ish", || (0..1000u64).sum::<u64>());
+        assert_eq!(r.samples_s.len(), 2);
+        assert!(r.median_s() >= 0.0);
+        std::env::remove_var("ESNMF_BENCH_FAST");
+    }
+}

@@ -1,0 +1,17 @@
+//! Small self-contained substrates: PRNG, statistics, timing, logging,
+//! JSON, and a mini property-testing harness.
+//!
+//! The build is fully offline (only `xla` + `anyhow` are vendored), so the
+//! usual ecosystem crates (`rand`, `serde_json`, `proptest`, `criterion`)
+//! are reimplemented here at the scale this project needs.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

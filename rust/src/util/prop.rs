@@ -1,0 +1,97 @@
+//! A miniature property-testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`Rng`]; [`check`] runs it for a
+//! fixed number of deterministic cases, reporting the failing seed so the
+//! case can be replayed with `check_one`. Generators are free functions on
+//! `Rng` (see `util::rng`) plus the helpers here for common shapes.
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: u32 = 64;
+
+/// Run `prop` for `cases` deterministic seeds derived from `base_seed`.
+/// Panics with the failing seed embedded so the case is reproducible.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, base_seed: u64, cases: u32, mut prop: F) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (for debugging failures).
+pub fn check_one<F: FnOnce(&mut Rng)>(seed: u64, prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+/// Random dense nonnegative matrix entries (row-major), sparsity in [0,1].
+pub fn gen_sparse_dense(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Vec<f32> {
+    (0..rows * cols)
+        .map(|_| {
+            if rng.f64() < density {
+                rng.abs_normal_f32() + 1e-4
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// A random (rows, cols) pair with both dims in [1, max_dim].
+pub fn gen_dims(rng: &mut Rng, max_dim: usize) -> (usize, usize) {
+    (rng.range(1, max_dim + 1), rng.range(1, max_dim + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 1, 16, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 2, 4, |_rng| panic!("boom"));
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn gen_sparse_density_extremes() {
+        let mut rng = Rng::new(3);
+        assert!(gen_sparse_dense(&mut rng, 5, 5, 0.0).iter().all(|&x| x == 0.0));
+        assert!(gen_sparse_dense(&mut rng, 5, 5, 1.0).iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn gen_dims_in_range() {
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let (r, c) = gen_dims(&mut rng, 7);
+            assert!((1..=7).contains(&r) && (1..=7).contains(&c));
+        }
+    }
+}

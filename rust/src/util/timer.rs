@@ -1,0 +1,88 @@
+//! Wall-clock timing helpers.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/lap timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Timer { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Seconds since the previous `lap()` (or construction).
+    pub fn lap_s(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Human formatting: 1.2345 s / 12.3 ms / 45.6 µs.
+pub fn fmt_seconds(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let mut t = Timer::start();
+        let a = t.lap_s();
+        let b = t.elapsed_s();
+        assert!(a >= 0.0 && b >= a);
+    }
+
+    #[test]
+    fn time_returns_value() {
+        let (v, s) = time(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_seconds(2.0), "2.000 s");
+        assert_eq!(fmt_seconds(0.0123), "12.30 ms");
+        assert_eq!(fmt_seconds(12.3e-6), "12.30 µs");
+        assert_eq!(fmt_seconds(5e-9), "5 ns");
+    }
+}

@@ -1,0 +1,148 @@
+//! End-to-end CLI tests: spawn the real `esnmf` binary (cargo builds it
+//! for integration tests and exposes the path via CARGO_BIN_EXE_esnmf).
+
+use std::process::Command;
+
+fn esnmf(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_esnmf"))
+        .args(args)
+        .env("ESNMF_LOG", "warn")
+        .output()
+        .expect("spawning esnmf")
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = esnmf(&["help"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"), "{text}");
+    assert!(text.contains("experiment"), "{text}");
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = esnmf(&["frobnicate"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn unknown_flag_fails() {
+    let out = esnmf(&["factorize", "--corpus", "reuters", "--scale", "tiny", "--oops", "1"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--oops"));
+}
+
+#[test]
+fn factorize_tiny_reuters() {
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "5",
+        "--iters", "10", "--sparsity", "u", "--t-u", "55", "--seed", "1",
+    ]);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("completed 10 iterations"), "{text}");
+    assert!(text.contains("Topic 1"), "{text}");
+    assert!(text.contains("mean clustering accuracy"), "{text}");
+}
+
+#[test]
+fn factorize_sequential_algorithm() {
+    let out = esnmf(&[
+        "factorize", "--corpus", "pubmed", "--scale", "tiny", "--k", "5",
+        "--algorithm", "seq", "--t-u", "10", "--t-v", "50", "--seed", "2",
+    ]);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("iterations"));
+}
+
+#[test]
+fn factorize_threshold_ablation_mode() {
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--iters", "5", "--sparsity", "threshold", "--tau-u", "0.05", "--seed", "3",
+    ]);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn threshold_mode_without_tau_errors() {
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny",
+        "--sparsity", "threshold",
+    ]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("tau"));
+}
+
+#[test]
+fn experiment_fig1_writes_json() {
+    let out_dir = std::env::temp_dir().join("esnmf_cli_results");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let out = esnmf(&[
+        "experiment", "fig1", "--scale", "tiny", "--fast", "--seed", "4",
+        "--out", out_dir.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let json = std::fs::read_to_string(out_dir.join("fig1.json")).unwrap();
+    assert!(json.contains("\"experiment\":\"fig1\""), "{json}");
+}
+
+#[test]
+fn gen_corpus_roundtrips_through_loader() {
+    let dir = std::env::temp_dir().join("esnmf_cli_corpus");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = esnmf(&[
+        "gen-corpus", "--corpus", "reuters", "--scale", "tiny", "--seed", "5",
+        "--out", dir.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // factorize the written corpus through the dir: loader
+    let out = esnmf(&[
+        "factorize", "--corpus", &format!("dir:{}", dir.display()),
+        "--k", "3", "--iters", "5", "--seed", "6",
+    ]);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn config_file_drives_factorization() {
+    let path = std::env::temp_dir().join("esnmf_cli_config.toml");
+    std::fs::write(
+        &path,
+        "corpus = reuters\nscale = tiny\nseed = 7\n[nmf]\nk = 4\niters = 6\n[sparsity]\nmode = both\nt_u = 40\nt_v = 80\n",
+    )
+    .unwrap();
+    let out = esnmf(&["factorize", "--config", path.to_str().unwrap()]);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("completed 6 iterations"));
+}

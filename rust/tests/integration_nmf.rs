@@ -1,0 +1,189 @@
+//! NMF-engine integration: full factorizations on preset corpora,
+//! validating the paper's qualitative claims at test scale.
+
+use esnmf::corpus::{generate_tdm, pubmed_sim, reuters_sim, wikipedia_sim, Scale};
+use esnmf::eval::topics::column_nnz_cv;
+use esnmf::eval::{mean_topic_accuracy, SparsityReport};
+use esnmf::nmf::{
+    factorize, factorize_sequential, NmfOptions, SequentialOptions, SparsityMode,
+};
+
+#[test]
+fn dense_als_densifies_factors_fig1_claim() {
+    let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 42);
+    let r = factorize(
+        &tdm,
+        &NmfOptions::new(5).with_iters(25).with_seed(42).with_track_error(false),
+    );
+    let report = SparsityReport::compute(&tdm.a, &r.u, &r.v);
+    assert!(report.a_sparsity > 0.85, "A sparsity {}", report.a_sparsity);
+    assert!(
+        report.u_sparsity < report.a_sparsity,
+        "dense ALS should densify U: {} vs {}",
+        report.u_sparsity,
+        report.a_sparsity
+    );
+    assert!(
+        report.uvt_sparsity < report.a_sparsity,
+        "UVᵀ should densify: {} vs {}",
+        report.uvt_sparsity,
+        report.a_sparsity
+    );
+}
+
+#[test]
+fn enforced_sparsity_converges_with_bounded_memory_fig6_claim() {
+    let tdm = generate_tdm(&pubmed_sim(Scale::Tiny), 42);
+    let k = 5;
+    let t = 150;
+    let sparse_init = factorize(
+        &tdm,
+        &NmfOptions::new(k)
+            .with_iters(20)
+            .with_seed(1)
+            .with_sparsity(SparsityMode::both(t, t))
+            .with_init_nnz(200)
+            .with_track_error(false),
+    );
+    let dense_init = factorize(
+        &tdm,
+        &NmfOptions::new(k)
+            .with_iters(20)
+            .with_seed(1)
+            .with_sparsity(SparsityMode::both(t, t))
+            .with_track_error(false),
+    );
+    let dense_storage = (tdm.n_terms() + tdm.n_docs()) * k;
+    assert!(
+        sparse_init.memory.max_combined_nnz < dense_storage / 2,
+        "peak {} should be far below dense {}",
+        sparse_init.memory.max_combined_nnz,
+        dense_storage
+    );
+    assert!(sparse_init.memory.max_combined_nnz <= dense_init.memory.max_combined_nnz);
+    // both still converge to a usable model
+    assert!(sparse_init.final_residual().is_finite());
+}
+
+#[test]
+fn accuracy_improves_with_sparsity_fig4_claim() {
+    let tdm = generate_tdm(&pubmed_sim(Scale::Tiny), 7);
+    let labels = tdm.doc_labels.clone().unwrap();
+    let nj = tdm.label_names.len();
+    let dense = factorize(
+        &tdm,
+        &NmfOptions::new(5).with_iters(30).with_seed(3).with_track_error(false),
+    );
+    let sparse = factorize(
+        &tdm,
+        &NmfOptions::new(5)
+            .with_iters(30)
+            .with_seed(3)
+            .with_sparsity(SparsityMode::v_only(tdm.n_docs()))
+            .with_track_error(false),
+    );
+    let acc_dense = mean_topic_accuracy(&dense.v, &labels, nj);
+    let acc_sparse = mean_topic_accuracy(&sparse.v, &labels, nj);
+    assert!(
+        acc_sparse >= acc_dense - 0.05,
+        "sparse acc {acc_sparse} vs dense {acc_dense}"
+    );
+    // planted clusters should be findable at all
+    assert!(acc_sparse > 0.2, "accuracy {acc_sparse} too low for planted data");
+}
+
+#[test]
+fn global_enforcement_skews_columnwise_fixes_table1_fig7_claim() {
+    let tdm = generate_tdm(&wikipedia_sim(Scale::Tiny), 11);
+    let global = factorize(
+        &tdm,
+        &NmfOptions::new(5)
+            .with_iters(30)
+            .with_seed(5)
+            .with_sparsity(SparsityMode::u_only(50))
+            .with_track_error(false),
+    );
+    let colwise = factorize(
+        &tdm,
+        &NmfOptions::new(5)
+            .with_iters(30)
+            .with_seed(5)
+            .with_sparsity(SparsityMode::PerColumn {
+                t_u_col: Some(10),
+                t_v_col: None,
+            })
+            .with_track_error(false),
+    );
+    let cv_global = column_nnz_cv(&global.u);
+    let cv_col = column_nnz_cv(&colwise.u);
+    assert!(
+        cv_col <= cv_global + 1e-9,
+        "column-wise cv {cv_col} vs global {cv_global}"
+    );
+    for &c in &colwise.u.col_nnz() {
+        assert!(c <= 10);
+    }
+}
+
+#[test]
+fn sequential_matches_rank_and_is_fast_fig9_claim() {
+    let tdm = generate_tdm(&pubmed_sim(Scale::Tiny), 13);
+    let k = 5;
+    let iters = 50;
+    let normal = factorize(
+        &tdm,
+        &NmfOptions::new(k)
+            .with_iters(iters)
+            .with_seed(7)
+            .with_sparsity(SparsityMode::both(50, 250))
+            .with_track_error(false),
+    );
+    let seq = factorize_sequential(
+        &tdm,
+        &SequentialOptions::new(k, iters / k)
+            .with_budgets(10, 50)
+            .with_seed(7),
+    );
+    assert_eq!(seq.u.cols, k);
+    assert_eq!(normal.u.cols, k);
+    // same total iteration count; sequential should not be slower by much
+    // (it is typically much faster; allow generous slack for CI noise)
+    assert!(
+        seq.elapsed_s <= normal.elapsed_s * 2.0,
+        "sequential {:.3}s vs normal {:.3}s",
+        seq.elapsed_s,
+        normal.elapsed_s
+    );
+}
+
+#[test]
+fn residual_definition_matches_history() {
+    // residual at iteration i uses U_i and U_{i-1}: re-run two configs
+    // differing only in max_iters and confirm the shared prefix agrees
+    let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 17);
+    let a = factorize(
+        &tdm,
+        &NmfOptions::new(3).with_iters(4).with_seed(9).with_track_error(false),
+    );
+    let b = factorize(
+        &tdm,
+        &NmfOptions::new(3).with_iters(8).with_seed(9).with_track_error(false),
+    );
+    for (x, y) in a.residuals.iter().zip(&b.residuals) {
+        assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn error_history_monotone_for_dense_als() {
+    let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 19);
+    let r = factorize(&tdm, &NmfOptions::new(4).with_iters(15).with_seed(11));
+    for w in r.errors.windows(2) {
+        assert!(
+            w[1] <= w[0] + 1e-3,
+            "dense ALS error increased: {} -> {}",
+            w[0],
+            w[1]
+        );
+    }
+}

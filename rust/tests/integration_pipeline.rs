@@ -1,0 +1,106 @@
+//! Full-pipeline integration: corpus → streaming ingestion → jobs →
+//! topic model → classification, plus the disk loader round-trip.
+
+use esnmf::coordinator::ingest::{ingest_stream, IngestConfig, RawDoc};
+use esnmf::coordinator::{JobManager, JobSpec, TopicModel};
+use esnmf::corpus::{self, Scale};
+use esnmf::nmf::{NmfOptions, SparsityMode};
+use std::sync::Arc;
+
+#[test]
+fn stream_ingest_factorize_classify() {
+    let spec = corpus::pubmed_sim(Scale::Tiny);
+    let docs = corpus::generate(&spec, 21);
+    let n = docs.len();
+    let stream = docs.into_iter().map(|d| RawDoc {
+        text: d.tokens.join(" "),
+        label: Some(spec.topics[d.label as usize].name.clone()),
+    });
+    let (tdm, count) = ingest_stream(
+        stream,
+        &IngestConfig {
+            workers: 3,
+            capacity: 16,
+        },
+    );
+    assert_eq!(count, n);
+
+    let tdm = Arc::new(tdm);
+    let mgr = JobManager::new(2);
+    let id = mgr.submit(
+        Arc::clone(&tdm),
+        JobSpec::Als(
+            NmfOptions::new(5)
+                .with_iters(30)
+                .with_seed(4)
+                .with_sparsity(SparsityMode::both(150, 800))
+                .with_track_error(false),
+        ),
+    );
+    let r = mgr.wait_result(id).unwrap();
+    let model = TopicModel::new(r.u.clone(), r.v.clone(), tdm.terms.clone());
+
+    // classification should route domain vocabulary to distinct topics
+    let neuro = model.classify(&["stroke", "seizure", "brain", "migraine"]);
+    let edu = model.classify(&["students", "curriculum", "teaching", "learning"]);
+    assert!(neuro[0].1 > 0.2, "no confident neuro topic: {neuro:?}");
+    assert!(edu[0].1 > 0.2, "no confident edu topic: {edu:?}");
+    assert_ne!(
+        neuro[0].0, edu[0].0,
+        "neurology and education mapped to the same topic"
+    );
+}
+
+#[test]
+fn disk_loader_roundtrip_matches_generator() {
+    let dir = std::env::temp_dir().join("esnmf_it_corpus");
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = corpus::CorpusSpec {
+        n_docs: 60,
+        ..corpus::reuters_sim(Scale::Tiny)
+    };
+    let docs = corpus::generate(&spec, 23);
+    for (i, d) in docs.iter().enumerate() {
+        let label = &spec.topics[d.label as usize].name;
+        let subdir = dir.join(label);
+        std::fs::create_dir_all(&subdir).unwrap();
+        std::fs::write(subdir.join(format!("d{i:04}.txt")), d.tokens.join(" ")).unwrap();
+    }
+    let tdm = corpus::loader::load_dir(&dir).unwrap();
+    assert_eq!(tdm.n_docs(), 60);
+    assert!(tdm.doc_labels.is_some());
+    assert_eq!(tdm.label_names.len(), 5);
+    // loaded corpus factorizes cleanly
+    let r = esnmf::nmf::factorize(
+        &tdm,
+        &NmfOptions::new(3).with_iters(10).with_seed(1).with_track_error(false),
+    );
+    assert!(r.final_residual().is_finite());
+}
+
+#[test]
+fn many_concurrent_jobs_on_shared_corpus() {
+    let tdm = Arc::new(corpus::generate_tdm(
+        &corpus::reuters_sim(Scale::Tiny),
+        25,
+    ));
+    let mgr = JobManager::new(4);
+    let ids: Vec<_> = (0..12)
+        .map(|i| {
+            mgr.submit(
+                Arc::clone(&tdm),
+                JobSpec::Als(
+                    NmfOptions::new(3)
+                        .with_iters(6)
+                        .with_seed(i as u64)
+                        .with_sparsity(SparsityMode::both(30 + i * 10, 100))
+                        .with_track_error(false),
+                ),
+            )
+        })
+        .collect();
+    for (i, id) in ids.iter().enumerate() {
+        let r = mgr.wait_result(*id).unwrap();
+        assert!(r.u.nnz() <= 30 + i * 10, "job {i} violated its budget");
+    }
+}

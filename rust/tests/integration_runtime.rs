@@ -1,0 +1,205 @@
+//! Runtime + XLA backend integration — requires compiled artifacts
+//! (`make artifacts`); every test is skipped gracefully when absent so
+//! `cargo test` stays green on a fresh checkout.
+
+use esnmf::backend::{AlsBackend, NativeBackend, XlaBackend};
+use esnmf::corpus::{self, Scale};
+use esnmf::nmf::{NmfOptions, SparsityMode};
+use esnmf::runtime::{self, Engine, ProgramKind, XlaExecutor};
+use esnmf::util::rng::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    if runtime::artifacts_available() {
+        Some(runtime::artifact_dir())
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_engine_compiles() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    assert!(!engine.manifest().programs.is_empty());
+    assert!(engine.platform().to_lowercase().contains("cpu") || !engine.platform().is_empty());
+    let compiled = engine.warmup().unwrap();
+    assert_eq!(compiled, engine.manifest().programs.len());
+}
+
+#[test]
+fn als_iter_artifact_matches_native_math() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    let Some(spec) = engine
+        .manifest()
+        .programs
+        .iter()
+        .find(|p| p.kind == ProgramKind::AlsIter && p.n == 64)
+        .cloned()
+    else {
+        eprintln!("skipping: no 64x96 artifact");
+        return;
+    };
+    let (n, m, k) = (spec.n, spec.m, spec.k);
+
+    // random nonneg dense A, U (no ties with probability 1)
+    let mut rng = Rng::new(99);
+    let a: Vec<f32> = (0..n * m)
+        .map(|_| if rng.f64() < 0.1 { rng.abs_normal_f32() } else { 0.0 })
+        .collect();
+    let u: Vec<f32> = (0..n * k).map(|_| rng.abs_normal_f32() + 1e-4).collect();
+    let (t_u, t_v) = (40i32, 60i32);
+
+    let out = engine.als_iter(n, m, k, &a, &u, t_u, t_v).unwrap();
+    assert_eq!(out.u_new.len(), n * k);
+    assert_eq!(out.v.len(), m * k);
+    // enforcement held on-device
+    let nnz_u = out.u_new.iter().filter(|&&x| x > 0.0).count();
+    let nnz_v = out.v.iter().filter(|&&x| x > 0.0).count();
+    assert!(nnz_u <= t_u as usize, "u nnz {nnz_u} > {t_u}");
+    assert!(nnz_v <= t_v as usize, "v nnz {nnz_v} > {t_v}");
+    assert!(out.u_new.iter().all(|&x| x >= 0.0));
+
+    // native reference on the same inputs
+    use esnmf::dense::inverse_spd;
+    use esnmf::sparse::{ops, topk, Csr, TieMode};
+    let a_csr = Csr::from_dense(n, m, &a);
+    let u_csr = Csr::from_dense(n, k, &u);
+    let mut mem = esnmf::nmf::MemoryTracker::new();
+    let opts = NmfOptions::new(k)
+        .with_sparsity(SparsityMode::Global {
+            t_u: Some(t_u as usize),
+            t_v: Some(t_v as usize),
+        });
+    let v_native = esnmf::nmf::half_step_v(&a_csr.to_csc(), &u_csr, &opts, &mut mem);
+    let u_native = esnmf::nmf::half_step_u(&a_csr, &v_native, &opts, &mut mem);
+    let _ = (inverse_spd, ops::gram, topk::nth_largest, TieMode::KeepTies); // api smoke
+
+    let v_dev = Csr::from_dense(m, k, &out.v);
+    let u_dev = Csr::from_dense(n, k, &out.u_new);
+    // same support and close values
+    assert_eq!(v_dev.nnz(), v_native.nnz(), "V support size");
+    assert_eq!(u_dev.nnz(), u_native.nnz(), "U support size");
+    let dv = v_dev.fro_diff(&v_native) / v_native.fro_norm().max(1e-12);
+    let du = u_dev.fro_diff(&u_native) / u_native.fro_norm().max(1e-12);
+    assert!(dv < 1e-3, "V relative diff {dv}");
+    assert!(du < 1e-3, "U relative diff {du}");
+}
+
+#[test]
+fn rel_error_artifact_matches_sparse_formula() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::load(&dir).unwrap();
+    let Some(spec) = engine
+        .manifest()
+        .programs
+        .iter()
+        .find(|p| p.kind == ProgramKind::RelError && p.n == 64)
+        .cloned()
+    else {
+        return;
+    };
+    let (n, m, k) = (spec.n, spec.m, spec.k);
+    let mut rng = Rng::new(7);
+    let a: Vec<f32> = (0..n * m)
+        .map(|_| if rng.f64() < 0.15 { rng.abs_normal_f32() } else { 0.0 })
+        .collect();
+    let u: Vec<f32> = (0..n * k).map(|_| rng.abs_normal_f32()).collect();
+    let v: Vec<f32> = (0..m * k).map(|_| rng.abs_normal_f32()).collect();
+    let dev = engine.rel_error(n, m, k, &a, &u, &v).unwrap() as f64;
+
+    use esnmf::sparse::Csr;
+    let a_csr = Csr::from_dense(n, m, &a);
+    let u_csr = Csr::from_dense(n, k, &u);
+    let v_csr = Csr::from_dense(m, k, &v);
+    let host = esnmf::nmf::rel_error_sparse(&a_csr, &u_csr, &v_csr, a_csr.fro_norm_sq());
+    assert!(
+        (dev - host).abs() < 1e-3 * (1.0 + host),
+        "device {dev} vs host {host}"
+    );
+}
+
+#[test]
+fn xla_backend_agrees_with_native_over_full_run() {
+    let Some(dir) = artifacts() else { return };
+    let guard = XlaExecutor::spawn(dir.clone()).unwrap();
+    let manifest = esnmf::runtime::Manifest::load(&dir).unwrap();
+    let Some(prog) = manifest
+        .programs
+        .iter()
+        .find(|p| p.kind == ProgramKind::AlsIter && p.n == 64)
+    else {
+        return;
+    };
+
+    // corpus that fits the 64 × 96 artifact
+    let spec = corpus::CorpusSpec {
+        n_docs: 90,
+        doc_len_mean: 30,
+        topic_tail: 4,
+        background_tail: 4,
+        ..corpus::reuters_sim(Scale::Tiny)
+    };
+    let mut tdm = corpus::generate_tdm(&spec, 31);
+    // the generator may exceed 64 terms; trim rows to fit by retaining the
+    // most frequent terms
+    if tdm.n_terms() > prog.n {
+        let mut idx: Vec<usize> = (0..tdm.n_terms()).collect();
+        idx.sort_by_key(|&r| std::cmp::Reverse(tdm.a.row(r).0.len()));
+        idx.truncate(prog.n);
+        idx.sort_unstable();
+        let mut coo = esnmf::sparse::Coo::new(prog.n, tdm.n_docs());
+        let mut terms = Vec::with_capacity(prog.n);
+        for (new_r, &old_r) in idx.iter().enumerate() {
+            terms.push(tdm.terms[old_r].clone());
+            let (cols, vals) = tdm.a.row(old_r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                coo.push(new_r, c as usize, v);
+            }
+        }
+        let a = coo.to_csr();
+        let a_csc = a.to_csc();
+        tdm = esnmf::text::TermDocMatrix {
+            a,
+            a_csc,
+            terms,
+            doc_labels: tdm.doc_labels.clone(),
+            label_names: tdm.label_names.clone(),
+        };
+    }
+    assert!(tdm.n_terms() <= prog.n && tdm.n_docs() <= prog.m);
+
+    let opts = NmfOptions::new(prog.k)
+        .with_iters(8)
+        .with_seed(5)
+        .with_sparsity(SparsityMode::both(50, 80));
+    let xr = XlaBackend::new(guard.handle.clone(), prog.n, prog.m, prog.k)
+        .factorize(&tdm, &opts)
+        .unwrap();
+    let nr = NativeBackend::new().factorize(&tdm, &opts).unwrap();
+
+    assert_eq!(xr.iterations, nr.iterations);
+    for (i, (x, n)) in xr.residuals.iter().zip(&nr.residuals).enumerate() {
+        assert!(
+            (x - n).abs() < 1e-3 * (1.0 + n),
+            "iteration {i}: residual {x} vs {n}"
+        );
+    }
+    let de = (xr.final_error() - nr.final_error()).abs();
+    assert!(de < 1e-3, "final error diff {de}");
+    assert_eq!(xr.u.nnz(), nr.u.nnz(), "U support");
+}
+
+#[test]
+fn xla_backend_rejects_oversized_corpus() {
+    let Some(dir) = artifacts() else { return };
+    let guard = XlaExecutor::spawn(dir).unwrap();
+    let tdm = corpus::generate_tdm(&corpus::reuters_sim(Scale::Tiny), 3);
+    // deliberately tiny artifact shape
+    let mut backend = XlaBackend::new(guard.handle.clone(), 8, 8, 2);
+    let err = backend
+        .factorize(&tdm, &NmfOptions::new(2).with_iters(1))
+        .unwrap_err();
+    assert!(err.to_string().contains("exceeds artifact shape"), "{err}");
+}

@@ -1,0 +1,78 @@
+//! TCP round-trip test of the topic-query server.
+
+use esnmf::coordinator::{MetricsRegistry, TopicModel, TopicServer};
+use esnmf::sparse::Csr;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn model() -> Arc<TopicModel> {
+    let u = Csr::from_dense(4, 2, &[
+        0.9, 0.0, //
+        0.5, 0.0, //
+        0.0, 0.8, //
+        0.0, 0.3,
+    ]);
+    let v = Csr::from_dense(3, 2, &[1.0, 0.0, 0.0, 0.9, 0.4, 0.0]);
+    Arc::new(TopicModel::new(
+        u,
+        v,
+        vec![
+            "coffee".into(),
+            "crop".into(),
+            "electrons".into(),
+            "atoms".into(),
+        ],
+    ))
+}
+
+fn query(reader: &mut impl BufRead, writer: &mut impl Write, q: &str) -> String {
+    writeln!(writer, "{q}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim_end().to_string()
+}
+
+#[test]
+fn tcp_protocol_roundtrip() {
+    let metrics = MetricsRegistry::new();
+    let server = TopicServer::start("127.0.0.1:0", model(), metrics.clone()).unwrap();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    assert_eq!(query(&mut reader, &mut writer, "TOPICS"), "OK k=2");
+    assert!(query(&mut reader, &mut writer, "TOPTERMS 0 2").contains("coffee"));
+    assert!(query(&mut reader, &mut writer, "CLASSIFY electrons atoms").contains("topic:1"));
+    assert!(query(&mut reader, &mut writer, "DOCS 1 5").starts_with("OK 1:0.9000"));
+    assert!(query(&mut reader, &mut writer, "BOGUS").starts_with("ERR"));
+    let stats = query(&mut reader, &mut writer, "STATS");
+    assert!(stats.contains("server.requests"), "{stats}");
+    assert_eq!(query(&mut reader, &mut writer, "QUIT"), "OK bye");
+    assert!(metrics.counter("server.requests").get() >= 5);
+    server.stop();
+}
+
+#[test]
+fn multiple_concurrent_clients() {
+    let server =
+        TopicServer::start("127.0.0.1:0", model(), MetricsRegistry::new()).unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..6)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                for _ in 0..20 {
+                    let r = query(&mut reader, &mut writer, "CLASSIFY coffee");
+                    assert!(r.contains("topic:0"), "{r}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.stop();
+}

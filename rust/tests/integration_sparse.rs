@@ -1,0 +1,134 @@
+//! Cross-module sparse-substrate integration: larger randomized matrices
+//! through the full conversion/product/enforcement pipeline.
+
+use esnmf::sparse::{ops, topk, Coo, Csr, RowBlock, TieMode};
+use esnmf::util::prop;
+use esnmf::util::rng::Rng;
+
+fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Csr {
+    let mut coo = Coo::new(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.f64() < density {
+                coo.push(r, c, rng.abs_normal_f32() + 1e-4);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn conversion_roundtrips_at_scale() {
+    let mut rng = Rng::new(1);
+    let m = random_csr(&mut rng, 500, 300, 0.02);
+    assert_eq!(m.to_csc().to_csr(), m);
+    assert_eq!(m.transpose().transpose(), m);
+    let rb = RowBlock::from_csr(&m);
+    assert_eq!(rb.to_csr(), m);
+    m.validate().unwrap();
+}
+
+#[test]
+fn product_associativity_with_identity() {
+    let mut rng = Rng::new(2);
+    let a = random_csr(&mut rng, 80, 60, 0.05);
+    let eye = {
+        let mut coo = Coo::new(60, 60);
+        for i in 0..60 {
+            coo.push(i, i, 1.0);
+        }
+        coo.to_csr()
+    };
+    let prod = ops::spmm(&a, &eye);
+    assert_eq!(prod, a);
+}
+
+#[test]
+fn atb_equals_spmm_of_transpose() {
+    prop::check("atb-vs-spmm", 77, 24, |rng| {
+        let n = rng.range(2, 40);
+        let m = rng.range(2, 40);
+        let k = rng.range(1, 6);
+        let a = random_csr(rng, n, m, 0.1);
+        let u = random_csr(rng, n, k, 0.4);
+        let fast = ops::atb(&a.to_csc(), &u).to_csr();
+        let slow = ops::spmm(&a.transpose(), &u);
+        assert_eq!(fast.rows, slow.rows);
+        for r in 0..fast.rows {
+            let (fi, fv) = fast.row(r);
+            let (si, sv) = slow.row(r);
+            assert_eq!(fi, si, "row {r} pattern");
+            for (a, b) in fv.iter().zip(sv) {
+                assert!((a - b).abs() < 1e-4, "row {r}: {a} vs {b}");
+            }
+        }
+    });
+}
+
+#[test]
+fn gram_psd_at_scale() {
+    let mut rng = Rng::new(3);
+    let u = random_csr(&mut rng, 1000, 8, 0.1);
+    let g = ops::gram(&u);
+    // diagonal dominance of a Gram matrix: g[i][i] >= 0 and
+    // |g[i][j]| <= sqrt(g[i][i] g[j][j]) (Cauchy-Schwarz)
+    for i in 0..8 {
+        assert!(g[i * 8 + i] >= 0.0);
+        for j in 0..8 {
+            let bound = (g[i * 8 + i] as f64 * g[j * 8 + j] as f64).sqrt() + 1e-4;
+            assert!(
+                (g[i * 8 + j] as f64).abs() <= bound,
+                "CS violated at ({i},{j})"
+            );
+        }
+    }
+}
+
+#[test]
+fn enforcement_pipeline_preserves_invariants() {
+    prop::check("enforce-pipeline", 99, 32, |rng| {
+        let rows = rng.range(2, 60);
+        let k = rng.range(1, 8);
+        let m = random_csr(rng, rows, k, 0.5);
+        let nnz0 = m.nnz();
+        let t = rng.range(0, nnz0 + 5);
+
+        let mut exact = m.clone();
+        topk::enforce_top_t_csr(&mut exact, t, TieMode::Exact);
+        assert_eq!(exact.nnz(), t.min(nnz0));
+        exact.validate().unwrap();
+
+        let mut ties = m.clone();
+        topk::enforce_top_t_csr(&mut ties, t, TieMode::KeepTies);
+        assert!(ties.nnz() >= exact.nnz());
+        // keep-ties result is a superset of some exact-t result: every
+        // kept value must be >= the smallest kept value of exact
+        if exact.nnz() > 0 && t > 0 {
+            let min_exact = exact.values.iter().copied().fold(f32::INFINITY, f32::min);
+            assert!(ties.values.iter().all(|&v| v >= min_exact));
+        }
+    });
+}
+
+#[test]
+fn per_column_and_global_agree_when_budget_is_loose() {
+    let mut rng = Rng::new(5);
+    let m = random_csr(&mut rng, 40, 4, 0.5);
+    let mut a = m.clone();
+    let mut b = m.clone();
+    // budgets larger than any column/matrix nnz → both no-ops
+    topk::enforce_top_t_csr(&mut a, m.nnz() + 10, TieMode::KeepTies);
+    topk::enforce_top_t_per_column(&mut b, m.nnz() + 10, TieMode::KeepTies);
+    assert_eq!(a, m);
+    assert_eq!(b, m);
+}
+
+#[test]
+fn fro_norms_consistent_across_formats() {
+    let mut rng = Rng::new(6);
+    let m = random_csr(&mut rng, 200, 100, 0.03);
+    let dense = m.to_dense();
+    let want: f64 = dense.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+    assert!((m.fro_norm() - want).abs() < 1e-6 * (1.0 + want));
+    assert!((m.transpose().fro_norm() - want).abs() < 1e-6 * (1.0 + want));
+}

@@ -1,0 +1,221 @@
+//! System-level property tests (mini-prop harness): coordinator routing /
+//! batching / state invariants and NMF solver invariants under random
+//! configurations.
+
+use esnmf::coordinator::{JobManager, JobSpec};
+use esnmf::corpus::{generate_tdm, CorpusSpec, TopicSpec};
+use esnmf::corpus::words;
+use esnmf::nmf::{factorize, NmfOptions, SparsityMode};
+use esnmf::sparse::TieMode;
+use esnmf::util::prop;
+use esnmf::util::rng::Rng;
+use std::sync::Arc;
+
+fn random_corpus(rng: &mut Rng) -> esnmf::text::TermDocMatrix {
+    let spec = CorpusSpec {
+        name: "prop".into(),
+        topics: vec![
+            TopicSpec { name: "coffee".into(), seeds: words::COFFEE.to_vec() },
+            TopicSpec { name: "science".into(), seeds: words::SCIENCE.to_vec() },
+            TopicSpec { name: "music".into(), seeds: words::MUSIC.to_vec() },
+        ],
+        n_docs: rng.range(30, 120),
+        doc_len_mean: rng.range(20, 60),
+        topic_tail: rng.range(10, 60),
+        background_tail: rng.range(10, 40),
+        background_frac: 0.2 + rng.f64() * 0.4,
+        mixture: rng.f64() * 0.3,
+        zipf_s: 1.0 + rng.f64() * 0.2,
+    };
+    generate_tdm(&spec, rng.next_u64())
+}
+
+#[test]
+fn solver_invariants_under_random_configs() {
+    prop::check("solver-invariants", 0xA15, 12, |rng| {
+        let tdm = random_corpus(rng);
+        let k = rng.range(2, 7);
+        let nnz_total = tdm.a.nnz();
+        let t_u = rng.range(k, (tdm.n_terms() * k).max(k + 1));
+        let t_v = rng.range(k, (tdm.n_docs() * k).max(k + 1));
+        let mode = match rng.below(4) {
+            0 => SparsityMode::None,
+            1 => SparsityMode::u_only(t_u),
+            2 => SparsityMode::v_only(t_v),
+            _ => SparsityMode::both(t_u, t_v),
+        };
+        let mut opts = NmfOptions::new(k)
+            .with_iters(rng.range(2, 8))
+            .with_seed(rng.next_u64())
+            .with_sparsity(mode)
+            .with_track_error(true);
+        opts.tie_mode = if rng.below(2) == 0 {
+            TieMode::KeepTies
+        } else {
+            TieMode::Exact
+        };
+        if rng.below(2) == 0 {
+            opts = opts.with_init_nnz(rng.range(k, t_u.max(k + 1)));
+        }
+        let r = factorize(&tdm, &opts);
+
+        // invariant 1: non-negativity of both factors
+        assert!(r.u.values.iter().all(|&x| x >= 0.0));
+        assert!(r.v.values.iter().all(|&x| x >= 0.0));
+        // invariant 2: structural validity
+        r.u.validate().unwrap();
+        r.v.validate().unwrap();
+        // invariant 3: budgets honored strictly in Exact mode (KeepTies
+        // may legitimately exceed the budget when weights tie — synthetic
+        // corpora produce duplicate document profiles surprisingly often)
+        if opts.tie_mode == TieMode::Exact {
+            if let SparsityMode::Global { t_u: Some(t), .. } = opts.sparsity {
+                assert!(r.u.nnz() <= t, "u {} > {t}", r.u.nnz());
+            }
+            if let SparsityMode::Global { t_v: Some(t), .. } = opts.sparsity {
+                assert!(r.v.nnz() <= t, "v {} > {t}", r.v.nnz());
+            }
+        }
+        // invariant 4: histories have full length
+        assert_eq!(r.residuals.len(), r.iterations);
+        assert_eq!(r.errors.len(), r.iterations);
+        // invariant 5: errors are valid relative magnitudes
+        for &e in &r.errors {
+            assert!(e.is_finite() && e >= 0.0, "error {e}");
+        }
+        // invariant 6: memory peak ≥ final footprint
+        assert!(r.memory.max_combined_nnz >= r.u.nnz() + r.v.nnz() || nnz_total == 0);
+    });
+}
+
+#[test]
+fn job_manager_state_machine_invariants() {
+    prop::check("job-state-machine", 0xB22, 6, |rng| {
+        let tdm = Arc::new(random_corpus(rng));
+        let workers = rng.range(1, 5);
+        let mgr = JobManager::new(workers);
+        let n_jobs = rng.range(1, 9);
+        let ids: Vec<_> = (0..n_jobs)
+            .map(|_| {
+                mgr.submit(
+                    Arc::clone(&tdm),
+                    JobSpec::Als(
+                        NmfOptions::new(rng.range(2, 5))
+                            .with_iters(rng.range(1, 5))
+                            .with_seed(rng.next_u64())
+                            .with_track_error(false),
+                    ),
+                )
+            })
+            .collect();
+        // ids are unique and dense
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len());
+        // every job reaches a terminal state and stays there
+        for &id in &ids {
+            let s = mgr.wait(id);
+            assert!(s.is_terminal());
+            let again = mgr.status(id).unwrap();
+            assert!(again.is_terminal(), "terminal state regressed");
+        }
+        assert_eq!(mgr.job_ids().len(), n_jobs);
+    });
+}
+
+#[test]
+fn server_command_handler_never_panics_on_garbage() {
+    use esnmf::coordinator::server::handle_command;
+    use esnmf::coordinator::{MetricsRegistry, TopicModel};
+    use esnmf::sparse::Csr;
+
+    let model = TopicModel::new(
+        Csr::from_dense(2, 2, &[1.0, 0.0, 0.0, 1.0]),
+        Csr::from_dense(2, 2, &[1.0, 0.0, 0.0, 1.0]),
+        vec!["alpha".into(), "beta".into()],
+    );
+    let metrics = MetricsRegistry::new();
+    prop::check("server-fuzz", 0xD44, 128, |rng| {
+        // random printable garbage, random lengths, occasional real verbs
+        let verbs = ["TOPICS", "TOPTERMS", "CLASSIFY", "DOCS", "STATS", "PING", "XYZZY"];
+        let mut line = String::new();
+        if rng.below(2) == 0 {
+            line.push_str(verbs[rng.below(verbs.len())]);
+            line.push(' ');
+        }
+        let len = rng.below(40);
+        for _ in 0..len {
+            let c = match rng.below(5) {
+                0 => ' ',
+                1 => (b'0' + rng.below(10) as u8) as char,
+                2 => (b'a' + rng.below(26) as u8) as char,
+                3 => (b'A' + rng.below(26) as u8) as char,
+                _ => ['-', '_', ':', '!', '\t', '\u{7f}', 'é'][rng.below(7)],
+            };
+            line.push(c);
+        }
+        let response = handle_command(&model, &metrics, &line);
+        assert!(
+            response.starts_with("OK") || response.starts_with("ERR"),
+            "bad response {response:?} for {line:?}"
+        );
+        assert!(!response.contains('\n'), "multi-line response");
+    });
+}
+
+#[test]
+fn threshold_mode_never_violates_nonnegativity() {
+    prop::check("threshold-mode", 0xE55, 8, |rng| {
+        let tdm = random_corpus(rng);
+        let tau = (rng.f64() * 0.2) as f32;
+        let r = factorize(
+            &tdm,
+            &NmfOptions::new(3)
+                .with_iters(4)
+                .with_seed(rng.next_u64())
+                .with_sparsity(SparsityMode::Threshold {
+                    tau_u: Some(tau),
+                    tau_v: Some(tau),
+                })
+                .with_track_error(false),
+        );
+        assert!(r.u.values.iter().all(|&x| x >= tau || x == 0.0));
+        assert!(r.u.values.iter().all(|&x| x >= 0.0));
+        r.u.validate().unwrap();
+    });
+}
+
+#[test]
+fn deterministic_end_to_end_given_seed() {
+    prop::check("determinism", 0xC33, 6, |rng| {
+        let seed = rng.next_u64();
+        let spec = CorpusSpec {
+            name: "det".into(),
+            topics: vec![
+                TopicSpec { name: "coffee".into(), seeds: words::COFFEE.to_vec() },
+                TopicSpec { name: "sport".into(), seeds: words::SPORT.to_vec() },
+            ],
+            n_docs: 40,
+            doc_len_mean: 30,
+            topic_tail: 20,
+            background_tail: 10,
+            background_frac: 0.3,
+            mixture: 0.1,
+            zipf_s: 1.05,
+        };
+        let tdm1 = generate_tdm(&spec, seed);
+        let tdm2 = generate_tdm(&spec, seed);
+        assert_eq!(tdm1.a, tdm2.a);
+        let opts = NmfOptions::new(2)
+            .with_iters(4)
+            .with_seed(seed)
+            .with_sparsity(SparsityMode::both(30, 60));
+        let r1 = factorize(&tdm1, &opts);
+        let r2 = factorize(&tdm2, &opts);
+        assert_eq!(r1.u, r2.u);
+        assert_eq!(r1.v, r2.v);
+        assert_eq!(r1.residuals, r2.residuals);
+        assert_eq!(r1.memory, r2.memory);
+    });
+}
