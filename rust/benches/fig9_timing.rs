@@ -17,12 +17,22 @@ fn main() {
     let t_u = 50;
     let t_v = 500.min(tdm.n_docs());
     let mut suite = BenchSuite::new("fig9: 100-iteration timing");
+    // pin thread counts explicitly: the paper's figure is single-core,
+    // the parallel rows show the same run saturating the worker pool
+    // (bit-identical output — see the determinism contract in als)
     let normal = NmfOptions::new(k)
         .with_iters(iters)
         .with_seed(cfg.seed)
         .with_sparsity(SparsityMode::both(t_u, t_v))
-        .with_track_error(false);
-    suite.bench("normal (whole-matrix)", || factorize(&tdm, &normal));
+        .with_track_error(false)
+        .with_threads(1);
+    suite.bench("normal (whole-matrix, serial)", || factorize(&tdm, &normal));
+    for threads in [2usize, 4] {
+        let par = normal.clone().with_threads(threads);
+        suite.bench(&format!("normal (whole-matrix, threads={threads})"), || {
+            factorize(&tdm, &par)
+        });
+    }
     let colwise = NmfOptions::new(k)
         .with_iters(iters)
         .with_seed(cfg.seed)
@@ -30,16 +40,21 @@ fn main() {
             t_u_col: Some(t_u / k),
             t_v_col: Some(t_v / k),
         })
-        .with_track_error(false);
+        .with_track_error(false)
+        .with_threads(1);
     suite.bench("column-wise", || factorize(&tdm, &colwise));
     let seq = SequentialOptions::new(k, iters / k)
         .with_budgets(t_u / k, t_v / k)
         .with_seed(cfg.seed);
     suite.bench("sequential", || factorize_sequential(&tdm, &seq));
 
-    // ratios the paper reports (sequential fastest)
+    // ratios the paper reports (sequential fastest), plus the parallel
+    // speedup of the same whole-matrix configuration
     let ns = suite.results[0].median_s();
-    let cs = suite.results[1].median_s();
-    let ss = suite.results[2].median_s();
+    let p2 = suite.results[1].median_s();
+    let p4 = suite.results[2].median_s();
+    let cs = suite.results[3].median_s();
+    let ss = suite.results[4].median_s();
     println!("\nFig. 9 ratios: column-wise/normal = {:.2}x, sequential/normal = {:.2}x", cs / ns, ss / ns);
+    println!("parallel speedup (whole-matrix): 2 threads = {:.2}x, 4 threads = {:.2}x", ns / p2, ns / p4);
 }

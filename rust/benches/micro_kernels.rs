@@ -4,7 +4,7 @@
 mod common;
 
 use esnmf::nmf::init;
-use esnmf::sparse::{ops, topk, TieMode};
+use esnmf::sparse::{ops, topk, RowBlock, TieMode};
 use esnmf::util::bench::BenchSuite;
 use esnmf::util::rng::Rng;
 
@@ -18,18 +18,33 @@ fn main() {
     let v = init::dense_random(tdm.n_docs(), k, &mut rng);
 
     let mut suite = BenchSuite::new("micro: sparse kernels");
-    suite.bench("atb(A^T·U dense-U)", || ops::atb(&tdm.a_csc, &u));
+    let atb_serial = suite
+        .bench("atb(A^T·U dense-U)", || ops::atb(&tdm.a_csc, &u))
+        .median_s();
     suite.bench("atb(A^T·U sparse-U)", || ops::atb(&tdm.a_csc, &u_sparse));
-    suite.bench("ab(A·V)", || ops::ab(&tdm.a, &v));
+    let ab_serial = suite.bench("ab(A·V)", || ops::ab(&tdm.a, &v)).median_s();
+    let mut atb_par4 = f64::NAN;
+    let mut ab_par4 = f64::NAN;
     for threads in [2usize, 4, 8] {
-        suite.bench(&format!("atb_par(threads={threads})"), || {
-            ops::atb_par(&tdm.a_csc, &u, threads)
-        });
-        suite.bench(&format!("ab_par(threads={threads})"), || {
-            ops::ab_par(&tdm.a, &v, threads)
-        });
+        let a = suite
+            .bench(&format!("atb_par(threads={threads})"), || {
+                ops::atb_par(&tdm.a_csc, &u, threads)
+            })
+            .median_s();
+        let b = suite
+            .bench(&format!("ab_par(threads={threads})"), || {
+                ops::ab_par(&tdm.a, &v, threads)
+            })
+            .median_s();
+        if threads == 4 {
+            atb_par4 = a;
+            ab_par4 = b;
+        }
     }
-    suite.bench("gram(U)", || ops::gram(&u));
+    let gram_serial = suite.bench("gram(U)", || ops::gram(&u)).median_s();
+    let gram_par4 = suite
+        .bench("gram_par(U, threads=4)", || ops::gram_par(&u, 4))
+        .median_s();
     suite.bench("tr_cross(A,U,V)", || ops::tr_cross(&tdm.a, &u, &v));
 
     // top-t selection: quickselect vs the paper's full sort
@@ -55,4 +70,36 @@ fn main() {
         topk::enforce_top_t_per_column(&mut m, t / k, TieMode::KeepTies);
         m
     });
+    let big_rb = RowBlock::from_csr(&big);
+    let enforce_serial = suite
+        .bench("enforce_top_t_rowblock(serial)", || {
+            let mut rb = big_rb.clone();
+            topk::enforce_top_t_rowblock(&mut rb, t, TieMode::KeepTies);
+            rb
+        })
+        .median_s();
+    let mut enforce_par4 = f64::NAN;
+    for threads in [2usize, 4, 8] {
+        let s = suite
+            .bench(&format!("enforce_top_t_rowblock(threads={threads})"), || {
+                let mut rb = big_rb.clone();
+                topk::enforce_top_t_rowblock_par(&mut rb, t, TieMode::KeepTies, threads);
+                rb
+            })
+            .median_s();
+        if threads == 4 {
+            enforce_par4 = s;
+        }
+    }
+
+    // serial/parallel speedups at 4 workers — the numbers the parallel
+    // hot path exists for (>1.5x expected on the SpMM and enforcement
+    // kernels at the PubMed preset size)
+    println!(
+        "\nspeedup at 4 threads: atb {:.2}x  ab {:.2}x  gram {:.2}x  enforce {:.2}x",
+        atb_serial / atb_par4,
+        ab_serial / ab_par4,
+        gram_serial / gram_par4,
+        enforce_serial / enforce_par4
+    );
 }

@@ -118,6 +118,15 @@ impl ConfigFile {
     pub fn bool(&self, key: &str) -> Option<bool> {
         self.get(key).and_then(|v| v.as_bool())
     }
+
+    /// A worker-count knob: a non-negative integer, or the bare word
+    /// `auto` (→ 0, "use every available core").
+    pub fn threads(&self, key: &str) -> Option<usize> {
+        match self.get(key)? {
+            Value::Str(s) if s == "auto" => Some(0),
+            v => v.as_usize(),
+        }
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -203,6 +212,14 @@ t_u = 55
         assert!(ConfigFile::parse("novalue\n").is_err());
         assert!(ConfigFile::parse("x = @@@\n").is_err());
         assert!(ConfigFile::parse(" = 5\n").is_err());
+    }
+
+    #[test]
+    fn threads_accepts_auto_and_integers() {
+        let c = ConfigFile::parse("[nmf]\nthreads = auto\n[other]\nthreads = 4\n").unwrap();
+        assert_eq!(c.threads("nmf.threads"), Some(0));
+        assert_eq!(c.threads("other.threads"), Some(4));
+        assert_eq!(c.threads("missing.threads"), None);
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub struct RunConfig {
     pub tau_v: Option<f32>,
     pub init_nnz: Option<usize>,
     pub track_error: bool,
-    /// row-parallelism for the ALS products
+    /// row-parallelism for the ALS hot path; 0 = auto (all cores)
     pub threads: usize,
     /// sequential-only: topics per block and iterations per block
     pub block_topics: usize,
@@ -60,7 +60,7 @@ impl Default for RunConfig {
             tau_v: None,
             init_nnz: None,
             track_error: true,
-            threads: 1,
+            threads: 0,
             block_topics: 1,
             iters_per_block: 20,
         }
@@ -106,8 +106,8 @@ impl RunConfig {
         if let Some(v) = f.usize("nmf.init_nnz") {
             self.init_nnz = Some(v);
         }
-        if let Some(v) = f.usize("nmf.threads") {
-            self.threads = v.max(1);
+        if let Some(v) = f.threads("nmf.threads") {
+            self.threads = v;
         }
         if let Some(v) = f.str("sparsity.mode") {
             self.sparsity_mode = v.to_string();
@@ -245,6 +245,24 @@ mod tests {
         assert_eq!(o.k, 4);
         assert_eq!(o.max_iters, 10);
         assert_eq!(o.init_nnz, Some(20));
+        // default threads = auto → all available cores
+        assert_eq!(o.threads, crate::coordinator::pool::default_threads());
+    }
+
+    #[test]
+    fn threads_knob_from_file() {
+        let f = ConfigFile::parse("[nmf]\nthreads = 3\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.nmf_options().unwrap().threads, 3);
+        let f = ConfigFile::parse("[nmf]\nthreads = auto\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.threads = 5; // overridden back to auto by the file
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(
+            cfg.nmf_options().unwrap().threads,
+            crate::coordinator::pool::default_threads()
+        );
     }
 
     #[test]

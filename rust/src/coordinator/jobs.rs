@@ -1,7 +1,7 @@
 //! Factorization job management: submit → queue → run on the pool →
 //! poll/wait for a summarized result.
 
-use super::pool::ThreadPool;
+use super::pool::{self, ThreadPool};
 use crate::backend::{AlsBackend, NativeBackend};
 use crate::nmf::{factorize_sequential, NmfOptions, NmfResult, SequentialOptions};
 use crate::text::TermDocMatrix;
@@ -63,6 +63,18 @@ impl JobManager {
         self.inner.cv.notify_all();
     }
 
+    /// Jobs queued or running right now — the divisor for sharing the
+    /// machine's cores between concurrent factorizations.
+    fn active_jobs(&self) -> usize {
+        self.inner
+            .statuses
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| !s.is_terminal())
+            .count()
+    }
+
     /// Submit a factorization of `tdm` under `spec`; returns immediately.
     pub fn submit(&self, tdm: Arc<TermDocMatrix>, spec: JobSpec) -> JobId {
         let id = {
@@ -77,7 +89,16 @@ impl JobManager {
             this.set_status(id, JobStatus::Running);
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 match &spec {
-                    JobSpec::Als(opts) => NativeBackend::new().factorize(&tdm, opts),
+                    JobSpec::Als(opts) => {
+                        // divide the machine between whatever is live right
+                        // now: an idle pool gives one job every core, a busy
+                        // pool shares them. Results are bit-identical at any
+                        // thread count, so this only shifts wall-clock.
+                        let share = pool::default_threads() / this.active_jobs().max(1);
+                        let mut opts = opts.clone();
+                        opts.threads = opts.threads.min(share.max(1));
+                        NativeBackend::new().factorize(&tdm, &opts)
+                    }
                     JobSpec::Sequential(opts) => Ok(factorize_sequential(&tdm, opts)),
                 }
             }));

@@ -19,5 +19,5 @@ pub use ingest::{ingest_stream, IngestConfig};
 pub use jobs::{JobId, JobManager, JobSpec, JobStatus};
 pub use metrics::MetricsRegistry;
 pub use model::TopicModel;
-pub use pool::ThreadPool;
+pub use pool::{default_threads, ThreadPool};
 pub use server::TopicServer;

@@ -1,12 +1,199 @@
-//! A fixed-size worker pool over `std::sync::mpsc` (tokio is not in the
-//! offline vendor set; the coordinator's needs are fully met by threads).
+//! Worker-pool and scoped parallel-for primitives.
+//!
+//! Two execution substrates live here, sharing one partitioning scheme:
+//!
+//! * [`ThreadPool`] — a fixed-size pool of persistent workers over
+//!   `std::sync::mpsc` (tokio is not in the offline vendor set). The job
+//!   manager uses it for whole factorizations, which are `'static` jobs.
+//! * [`scoped_map_ranges`] / [`scoped_partition_map_mut`] — scoped
+//!   parallel-for over index ranges, used *inside* a single factorization
+//!   to row-partition the ALS hot-path kernels (SpMM products, gram
+//!   accumulations, projection, top-t enforcement). Scoped threads borrow
+//!   the operands directly, so the kernels need no `Arc`/clone plumbing.
+//!
+//! # Partitioning scheme
+//!
+//! All kernels partition their *output* rows (or flat scalar ranges) into
+//! contiguous pieces via [`split_ranges`] (one near-equal piece per
+//! worker) or [`fixed_chunks`] (fixed-width pieces independent of the
+//! worker count — the unit of deterministic reductions). Each piece is
+//! computed independently; results are merged strictly in piece order.
+//!
+//! # Determinism contract
+//!
+//! Parallel execution is **bit-for-bit identical to serial** at any
+//! thread count:
+//!
+//! * Row-local kernels (SpMM, projection, the small solve) compute each
+//!   output row with the same instruction sequence regardless of which
+//!   worker owns it, so any contiguous partition concatenates to the
+//!   serial result.
+//! * Reductions (gram matrices, tie counts) accumulate per *fixed-width
+//!   chunk* ([`fixed_chunks`] boundaries do not depend on the thread
+//!   count) and merge partial results in ascending chunk order, so the
+//!   floating-point rounding sequence is the same for every thread count
+//!   — including 1: the serial paths run the identical chunked
+//!   computation.
+//! * Order-sensitive tie-breaking (top-t `Exact` mode) is split by
+//!   prefix-counting ties per piece, reproducing the serial
+//!   left-to-right budget scan exactly.
+//!
+//! The property tests in `tests/prop_invariants.rs` pin this contract for
+//! thread counts {1, 2, 4, 7}.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+/// Number of workers to use when the caller does not say: the machine's
+/// available parallelism (≥ 1).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Items-per-worker floor for flat elementwise work: below this, scoped
+/// thread spawn overhead dominates the work itself.
+pub const MIN_ITEMS_PER_WORKER: usize = 4096;
+
+/// Clamp a requested worker count so each worker gets at least
+/// [`MIN_ITEMS_PER_WORKER`] items (never below 1). Purely a speed
+/// decision — results are bit-identical at any worker count — so hot
+/// paths apply it at their entry point while the `_par` kernels honor
+/// whatever count they are handed (the equivalence tests rely on that).
+pub fn effective_workers(items: usize, threads: usize) -> usize {
+    threads.clamp(1, (items / MIN_ITEMS_PER_WORKER).max(1))
+}
+
+/// Contiguous near-equal ranges covering `0..total` (at most `parts`
+/// pieces, never an empty piece unless `total == 0`).
+pub fn split_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.min(total).max(1);
+    let base = total / parts;
+    let rem = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+/// Fixed-width chunk boundaries covering `0..total`. Unlike
+/// [`split_ranges`] the boundaries depend only on `chunk`, never on the
+/// worker count — deterministic reductions accumulate per chunk and merge
+/// in chunk order so every thread count rounds identically.
+pub fn fixed_chunks(total: usize, chunk: usize) -> Vec<(usize, usize)> {
+    let chunk = chunk.max(1);
+    let mut out = Vec::with_capacity(total / chunk + 1);
+    let mut lo = 0;
+    while lo < total {
+        let hi = (lo + chunk).min(total);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Apply `f` to every `(lo, hi)` range on up to `threads` scoped workers,
+/// returning the results in range order. Ranges are claimed dynamically
+/// (atomic cursor) so uneven pieces still balance; the merge order is
+/// fixed, so the output does not depend on scheduling.
+pub fn scoped_map_ranges<R, F>(threads: usize, ranges: &[(usize, usize)], f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, usize) -> R + Sync,
+{
+    let n = ranges.len();
+    if threads <= 1 || n <= 1 {
+        return ranges.iter().map(|&(lo, hi)| f(lo, hi)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let workers = threads.min(n);
+    let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let (lo, hi) = ranges[i];
+                        local.push((i, f(lo, hi)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel-for worker panicked"))
+            .collect()
+    });
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for pairs in per_worker {
+        for (i, r) in pairs {
+            slots[i] = Some(r);
+        }
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("range not executed"))
+        .collect()
+}
+
+/// Partition `data` into up to `threads` contiguous pieces whose lengths
+/// are multiples of `granule` (so a logical row is never split), run `f`
+/// on each piece concurrently, and return the per-piece results in piece
+/// order. `f` receives the piece's element offset into `data`.
+pub fn scoped_partition_map_mut<T, R, F>(
+    threads: usize,
+    data: &mut [T],
+    granule: usize,
+    f: F,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut [T]) -> R + Sync,
+{
+    let granule = granule.max(1);
+    debug_assert_eq!(data.len() % granule, 0, "granule must divide data");
+    let n_granules = data.len() / granule;
+    let parts = split_ranges(n_granules, threads.max(1));
+    if threads <= 1 || parts.len() <= 1 {
+        return vec![f(0, data)];
+    }
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(parts.len());
+        let mut rest = data;
+        let mut offset = 0usize;
+        for &(lo, hi) in &parts {
+            let len = (hi - lo) * granule;
+            let (piece, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            let at = offset;
+            let f = &f;
+            handles.push(s.spawn(move || f(at, piece)));
+            offset += len;
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("partition worker panicked"))
+            .collect()
+    })
+}
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Fixed-size pool of persistent workers for `'static` jobs (the job
+/// manager's unit of work is a whole factorization).
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
@@ -41,10 +228,7 @@ impl ThreadPool {
 
     /// Default pool sized to the machine.
     pub fn with_default_size() -> ThreadPool {
-        let n = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4);
-        ThreadPool::new(n.min(16))
+        ThreadPool::new(default_threads().min(16))
     }
 
     pub fn size(&self) -> usize {
@@ -144,5 +328,70 @@ mod tests {
         }
         drop(pool); // must join, so all jobs complete
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn split_ranges_covers_everything() {
+        for (total, parts) in [(10usize, 3usize), (1, 4), (0, 2), (7, 7), (100, 8)] {
+            let ranges = split_ranges(total, parts);
+            let mut covered = 0;
+            let mut prev_hi = 0;
+            for &(lo, hi) in &ranges {
+                assert_eq!(lo, prev_hi);
+                covered += hi - lo;
+                prev_hi = hi;
+            }
+            assert_eq!(covered, total, "total {total} parts {parts}");
+        }
+    }
+
+    #[test]
+    fn effective_workers_floors_small_work() {
+        assert_eq!(effective_workers(100, 8), 1);
+        assert_eq!(effective_workers(MIN_ITEMS_PER_WORKER, 8), 1);
+        assert_eq!(effective_workers(2 * MIN_ITEMS_PER_WORKER, 8), 2);
+        assert_eq!(effective_workers(10 * MIN_ITEMS_PER_WORKER, 8), 8);
+        assert_eq!(effective_workers(0, 0), 1);
+        // every worker is guaranteed the documented minimum
+        for items in [1usize, 4095, 4096, 10_000, 1 << 20] {
+            let w = effective_workers(items, 64);
+            assert!(w == 1 || items / w >= MIN_ITEMS_PER_WORKER, "items={items} w={w}");
+        }
+    }
+
+    #[test]
+    fn fixed_chunks_independent_of_parts() {
+        let chunks = fixed_chunks(2500, 1024);
+        assert_eq!(chunks, vec![(0, 1024), (1024, 2048), (2048, 2500)]);
+        assert_eq!(fixed_chunks(0, 1024), vec![]);
+        assert_eq!(fixed_chunks(3, 0), vec![(0, 1), (1, 2), (2, 3)]); // clamped
+    }
+
+    #[test]
+    fn scoped_map_ranges_ordered_at_any_thread_count() {
+        let ranges = fixed_chunks(97, 10);
+        let serial = scoped_map_ranges(1, &ranges, |lo, hi| (lo, hi));
+        for threads in [2, 4, 7, 16] {
+            let par = scoped_map_ranges(threads, &ranges, |lo, hi| (lo, hi));
+            assert_eq!(par, serial, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn scoped_partition_map_mut_covers_disjoint_pieces() {
+        for threads in [1usize, 2, 4, 7] {
+            let mut data = vec![0u32; 6 * 5]; // 6 logical rows of width 5
+            let offsets = scoped_partition_map_mut(threads, &mut data, 5, |offset, piece| {
+                assert_eq!(offset % 5, 0, "piece must align to the granule");
+                for v in piece.iter_mut() {
+                    *v += 1;
+                }
+                offset
+            });
+            assert!(data.iter().all(|&v| v == 1), "threads {threads}");
+            let mut sorted = offsets.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, offsets, "results must be in piece order");
+        }
     }
 }

@@ -17,14 +17,18 @@ pub fn run(cfg: &ExpConfig) -> Result<Json> {
     let t_u = 50;
     let t_v = 500.min(tdm.n_docs());
 
-    // normal: whole-matrix enforcement (Algorithm 2)
+    // normal: whole-matrix enforcement (Algorithm 2). The paper's figure
+    // is single-core and the sequential solver below is serial, so the
+    // ALS runs are pinned to 1 thread for an apples-to-apples ratio
+    // (benches/fig9_timing.rs carries the multicore comparison points).
     let normal = factorize(
         &tdm,
         &NmfOptions::new(k)
             .with_iters(total_iters)
             .with_seed(cfg.seed)
             .with_sparsity(SparsityMode::both(t_u, t_v))
-            .with_track_error(false),
+            .with_track_error(false)
+            .with_threads(1),
     );
 
     // column-wise enforcement
@@ -37,7 +41,8 @@ pub fn run(cfg: &ExpConfig) -> Result<Json> {
                 t_u_col: Some(t_u / k),
                 t_v_col: Some(t_v / k),
             })
-            .with_track_error(false),
+            .with_track_error(false)
+            .with_threads(1),
     );
 
     // sequential: total_iters split over k single-topic blocks

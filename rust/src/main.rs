@@ -30,7 +30,10 @@ USAGE:
   esnmf factorize  [--corpus reuters|wikipedia|pubmed|dir:<path>] [--scale tiny|small|paper]
                    [--k N] [--iters N] [--sparsity none|both|u|v|percol] [--t-u N] [--t-v N]
                    [--algorithm als|seq] [--backend native|xla] [--seed N] [--init-nnz N]
-                   [--config file.toml] [--top N]
+                   [--threads N|auto] [--config file.toml] [--top N]
+
+  --threads row-partitions the ALS hot path across N workers (default:
+  auto = all cores). Results are bit-identical at any thread count.
   esnmf experiment <fig1|fig2|fig3|table1|fig4|fig5|fig6|fig7|fig8|fig9|all>
                    [--scale ...] [--seed N] [--fast] [--out results/]
   esnmf serve      [--addr 127.0.0.1:7878] [factorize flags]
@@ -130,8 +133,13 @@ fn build_run_config(args: &mut Args) -> Result<RunConfig> {
     if let Some(v) = args.opt_parse::<f32>("tau-v").map_err(anyhow::Error::msg)? {
         cfg.tau_v = Some(v);
     }
-    if let Some(v) = args.opt_parse::<usize>("threads").map_err(anyhow::Error::msg)? {
-        cfg.threads = v.max(1);
+    if let Some(v) = args.opt_str("threads") {
+        cfg.threads = if v == "auto" {
+            0
+        } else {
+            v.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("invalid value {v:?} for --threads (N or auto)"))?
+        };
     }
     Ok(cfg)
 }

@@ -14,6 +14,31 @@
 //! The half-step intermediates are [`RowBlock`]s: only rows reachable from
 //! the current factor's support are ever materialized, which is the
 //! paper's memory claim; the [`MemoryTracker`] records the peak.
+//!
+//! # Parallel execution
+//!
+//! Every stage of a half-step is row-partitioned across
+//! `NmfOptions::threads` scoped workers (see
+//! [`crate::coordinator::pool`] for the primitives): the SpMM product
+//! (`Aᵀ·U` / `A·V`), the gram accumulation, the small solve
+//! (`B · G⁻¹`), the non-negative projection, and the top-t enforcement.
+//!
+//! # Determinism contract
+//!
+//! The result is **bit-for-bit identical at every thread count**,
+//! so `threads` is purely a speed knob:
+//!
+//! * row-local stages concatenate per-range outputs in range order;
+//! * the gram reduction accumulates per fixed-width row chunk
+//!   ([`crate::sparse::ops::GRAM_CHUNK_ROWS`]) and merges partials in
+//!   ascending chunk order, independent of the thread count;
+//! * top-t tie-breaking splits the `Exact`-mode budget by prefix-counted
+//!   ties per range, reproducing the serial left-to-right scan;
+//! * the memory tracker observes logical stored sizes (identical by the
+//!   above), so `MemoryStats` peaks match exactly too.
+//!
+//! `tests/prop_invariants.rs` and `tests/integration_nmf.rs` pin this
+//! for thread counts {1, 2, 4, 7}.
 
 use crate::dense::inverse_spd;
 use crate::sparse::{ops, topk, Csc, Csr, RowBlock, TieMode};
@@ -59,32 +84,38 @@ fn enforcement_for(mode: SparsityMode, is_u: bool) -> Enforce {
 }
 
 /// Solve + project + enforce one candidate RowBlock into a CSR factor.
+/// Every stage is row-partitioned across `threads` workers.
 fn finish_half_step(
     mut cand: RowBlock,
     gram_other: &[f32],
     k: usize,
     enforce: Enforce,
     tie: TieMode,
+    threads: usize,
     mem: &mut MemoryTracker,
 ) -> Csr {
     // candidates are tracked separately (max_intermediate_nnz); the
     // paper's Fig. 6 metric (max_combined_nnz) counts the stored factor
     // matrices at step boundaries, matching the MATLAB implementation
     mem.observe_intermediate(cand.stored_len());
+    // below the per-worker floor, spawn overhead beats the work; the
+    // clamp changes nothing but speed (results are thread-count
+    // independent)
+    let threads = crate::coordinator::pool::effective_workers(cand.stored_len(), threads);
     let g_inv = inverse_spd(gram_other, k);
-    cand.matmul_small(&g_inv);
-    cand.project_nonneg();
+    cand.matmul_small_par(&g_inv, threads);
+    cand.project_nonneg_par(threads);
     match enforce {
         Enforce::No => cand.to_csr(),
         Enforce::Global(t) => {
-            topk::enforce_top_t_rowblock(&mut cand, t, tie);
+            topk::enforce_top_t_rowblock_par(&mut cand, t, tie, threads);
             cand.to_csr()
         }
         Enforce::PerColumn(t) => {
             // deliberately via the CSR column gather — the access-pattern
             // cost the paper attributes to column-wise enforcement
             let mut csr = cand.to_csr();
-            topk::enforce_top_t_per_column(&mut csr, t, tie);
+            topk::enforce_top_t_per_column_par(&mut csr, t, tie, threads);
             csr
         }
         Enforce::Threshold(tau) => {
@@ -105,7 +136,7 @@ pub fn half_step_v(
     opts: &NmfOptions,
     mem: &mut MemoryTracker,
 ) -> Csr {
-    let g = ops::gram(u);
+    let g = ops::gram_par(u, opts.threads);
     let cand = ops::atb_par(a_csc, u, opts.threads);
     finish_half_step(
         cand,
@@ -113,6 +144,7 @@ pub fn half_step_v(
         opts.k,
         enforcement_for(opts.sparsity, false),
         opts.tie_mode,
+        opts.threads,
         mem,
     )
 }
@@ -124,7 +156,7 @@ pub fn half_step_u(
     opts: &NmfOptions,
     mem: &mut MemoryTracker,
 ) -> Csr {
-    let g = ops::gram(v);
+    let g = ops::gram_par(v, opts.threads);
     let cand = ops::ab_par(a, v, opts.threads);
     finish_half_step(
         cand,
@@ -132,6 +164,7 @@ pub fn half_step_u(
         opts.k,
         enforcement_for(opts.sparsity, true),
         opts.tie_mode,
+        opts.threads,
         mem,
     )
 }
@@ -327,6 +360,25 @@ mod tests {
         let r = factorize(&tdm, &opts);
         assert!(r.iterations < 500, "never converged");
         assert!(r.final_residual() < 1e-4);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_result() {
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 23);
+        let mut base = NmfOptions::new(3)
+            .with_iters(6)
+            .with_seed(29)
+            .with_sparsity(SparsityMode::both(40, 80))
+            .with_threads(1);
+        base.tie_mode = crate::sparse::TieMode::Exact;
+        let serial = factorize(&tdm, &base);
+        for threads in [2usize, 4, 7] {
+            let r = factorize(&tdm, &base.clone().with_threads(threads));
+            assert_eq!(r.u, serial.u, "threads {threads}");
+            assert_eq!(r.v, serial.v, "threads {threads}");
+            assert_eq!(r.residuals, serial.residuals, "threads {threads}");
+            assert_eq!(r.memory, serial.memory, "threads {threads}");
+        }
     }
 
     #[test]

@@ -71,8 +71,12 @@ pub struct NmfOptions {
     pub init_nnz: Option<usize>,
     /// compute the relative error every iteration (costs O(nnz(A)·k))
     pub track_error: bool,
-    /// row-parallelism for the two ALS products (1 = serial; results are
-    /// bit-identical at any setting)
+    /// row-parallelism for the ALS hot path — the SpMM products, gram
+    /// accumulations, projection and top-t enforcement all partition
+    /// across this many workers. Defaults to the machine's available
+    /// cores; results are bit-identical at any setting (see the
+    /// determinism contract in `crate::coordinator::pool`), so this is
+    /// purely a speed knob.
     pub threads: usize,
 }
 
@@ -87,7 +91,7 @@ impl NmfOptions {
             seed: 0x5eed,
             init_nnz: None,
             track_error: true,
-            threads: 1,
+            threads: crate::coordinator::pool::default_threads(),
         }
     }
 
@@ -121,8 +125,13 @@ impl NmfOptions {
         self
     }
 
+    /// Set the worker count; `0` means "auto" (all available cores).
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
+        self.threads = if threads == 0 {
+            crate::coordinator::pool::default_threads()
+        } else {
+            threads
+        };
         self
     }
 }
@@ -175,6 +184,14 @@ mod tests {
                 t_v: Some(60)
             }
         );
+    }
+
+    #[test]
+    fn threads_default_to_available_cores_and_zero_means_auto() {
+        let auto = crate::coordinator::pool::default_threads();
+        assert_eq!(NmfOptions::new(2).threads, auto);
+        assert_eq!(NmfOptions::new(2).with_threads(0).threads, auto);
+        assert_eq!(NmfOptions::new(2).with_threads(3).threads, 3);
     }
 
     #[test]

@@ -10,6 +10,13 @@
 use super::csc::Csc;
 use super::csr::Csr;
 use super::rowblock::RowBlock;
+use crate::coordinator::pool;
+
+/// Rows per partial gram accumulation. Fixed (never derived from the
+/// thread count) so the f64 rounding sequence of the ordered merge is
+/// identical at every thread count — see the determinism contract in
+/// [`crate::coordinator::pool`].
+pub const GRAM_CHUNK_ROWS: usize = 1024;
 
 /// Dense row-major copy of a factor when it is dense enough that the
 /// sparse row iteration's index indirection costs more than it saves.
@@ -78,14 +85,10 @@ pub fn atb_par(a: &Csc, u: &Csr, threads: usize) -> RowBlock {
     if threads <= 1 || a.cols < 2 * threads {
         return atb_range(a, u, ud.as_deref(), 0, a.cols);
     }
-    let parts = split_ranges(a.cols, threads);
+    let parts = pool::split_ranges(a.cols, threads);
     let ud_ref = ud.as_deref();
-    let blocks: Vec<RowBlock> = std::thread::scope(|s| {
-        let handles: Vec<_> = parts
-            .iter()
-            .map(|&(lo, hi)| s.spawn(move || atb_range(a, u, ud_ref, lo, hi)))
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("atb worker")).collect()
+    let blocks = pool::scoped_map_ranges(threads, &parts, |lo, hi| {
+        atb_range(a, u, ud_ref, lo, hi)
     });
     concat_rowblocks(a.cols, u.cols, blocks)
 }
@@ -145,31 +148,12 @@ pub fn ab_par(a: &Csr, v: &Csr, threads: usize) -> RowBlock {
     if threads <= 1 || a.rows < 2 * threads {
         return ab_range(a, v, vd.as_deref(), 0, a.rows);
     }
-    let parts = split_ranges(a.rows, threads);
+    let parts = pool::split_ranges(a.rows, threads);
     let vd_ref = vd.as_deref();
-    let blocks: Vec<RowBlock> = std::thread::scope(|s| {
-        let handles: Vec<_> = parts
-            .iter()
-            .map(|&(lo, hi)| s.spawn(move || ab_range(a, v, vd_ref, lo, hi)))
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("ab worker")).collect()
+    let blocks = pool::scoped_map_ranges(threads, &parts, |lo, hi| {
+        ab_range(a, v, vd_ref, lo, hi)
     });
     concat_rowblocks(a.rows, v.cols, blocks)
-}
-
-/// Contiguous near-equal ranges covering `0..total`.
-fn split_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
-    let parts = parts.min(total).max(1);
-    let base = total / parts;
-    let rem = total % parts;
-    let mut out = Vec::with_capacity(parts);
-    let mut lo = 0;
-    for p in 0..parts {
-        let len = base + usize::from(p < rem);
-        out.push((lo, lo + len));
-        lo += len;
-    }
-    out
 }
 
 /// Concatenate per-range RowBlocks (disjoint ascending row ranges).
@@ -190,12 +174,11 @@ fn concat_rowblocks(rows: usize, k: usize, blocks: Vec<RowBlock>) -> RowBlock {
     out
 }
 
-/// Gram matrix `Xᵀ·X` of a CSR factor (rows, k) → dense row-major (k, k).
-/// Accumulates in f64 for stability over long reductions.
-pub fn gram(x: &Csr) -> Vec<f32> {
+/// Upper-triangle gram accumulation of rows `lo..hi` in f64.
+fn gram_chunk(x: &Csr, lo: usize, hi: usize) -> Vec<f64> {
     let k = x.cols;
     let mut g = vec![0.0f64; k * k];
-    for r in 0..x.rows {
+    for r in lo..hi {
         let (idx, val) = x.row(r);
         for p in 0..idx.len() {
             let (ci, vi) = (idx[p] as usize, val[p] as f64);
@@ -204,13 +187,40 @@ pub fn gram(x: &Csr) -> Vec<f32> {
             }
         }
     }
-    // mirror the upper triangle
+    g
+}
+
+/// Ordered merge of per-chunk upper triangles → mirrored f32 (k, k).
+fn gram_merge(partials: Vec<Vec<f64>>, k: usize) -> Vec<f32> {
+    let mut g = vec![0.0f64; k * k];
+    for part in partials {
+        for (acc, v) in g.iter_mut().zip(part) {
+            *acc += v;
+        }
+    }
     for i in 0..k {
         for j in 0..i {
             g[i * k + j] = g[j * k + i];
         }
     }
     g.into_iter().map(|x| x as f32).collect()
+}
+
+/// Gram matrix `Xᵀ·X` of a CSR factor (rows, k) → dense row-major (k, k).
+/// Accumulates in f64 for stability over long reductions, per fixed
+/// [`GRAM_CHUNK_ROWS`]-row chunk merged in chunk order (the same
+/// computation [`gram_par`] distributes, so results agree bit-for-bit).
+pub fn gram(x: &Csr) -> Vec<f32> {
+    gram_par(x, 1)
+}
+
+/// Parallel [`gram`]: fixed-width row chunks across `threads` scoped
+/// workers, partial (k, k) triangles merged in ascending chunk order —
+/// bit-identical to the serial result at any thread count.
+pub fn gram_par(x: &Csr, threads: usize) -> Vec<f32> {
+    let chunks = pool::fixed_chunks(x.rows, GRAM_CHUNK_ROWS);
+    let partials = pool::scoped_map_ranges(threads, &chunks, |lo, hi| gram_chunk(x, lo, hi));
+    gram_merge(partials, x.cols)
 }
 
 /// `tr(Uᵀ A V) = Σ_{(i,j) ∈ nnz(A)} a_ij · ⟨U_i, V_j⟩` — the cross term of
@@ -524,21 +534,22 @@ mod tests {
             let a_csc = a.to_csc();
             assert_eq!(atb_par(&a_csc, &u, threads), atb(&a_csc, &u));
             assert_eq!(ab_par(&a, &v, threads), ab(&a, &v));
+            assert_eq!(gram_par(&u, threads), gram(&u));
+            assert_eq!(gram_par(&v, threads), gram(&v));
         });
     }
 
     #[test]
-    fn split_ranges_covers_everything() {
-        for (total, parts) in [(10usize, 3usize), (1, 4), (0, 2), (7, 7), (100, 8)] {
-            let ranges = split_ranges(total, parts);
-            let mut covered = 0;
-            let mut prev_hi = 0;
-            for &(lo, hi) in &ranges {
-                assert_eq!(lo, prev_hi);
-                covered += hi - lo;
-                prev_hi = hi;
-            }
-            assert_eq!(covered, total, "total {total} parts {parts}");
+    fn gram_par_spans_chunk_boundaries() {
+        // more rows than one GRAM_CHUNK_ROWS chunk, exercising the ordered
+        // merge of several partial triangles
+        let mut rng = Rng::new(0x6AA);
+        let rows = GRAM_CHUNK_ROWS + 37;
+        let x_d = prop::gen_sparse_dense(&mut rng, rows, 3, 0.3);
+        let x = Csr::from_dense(rows, 3, &x_d);
+        let serial = gram(&x);
+        for threads in [2usize, 4, 7] {
+            assert_eq!(gram_par(&x, threads), serial, "threads {threads}");
         }
     }
 

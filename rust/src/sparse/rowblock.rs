@@ -8,6 +8,8 @@
 //! being dense keeps the small solve vectorizable.
 
 use super::csr::Csr;
+use super::ops::GRAM_CHUNK_ROWS;
+use crate::coordinator::pool;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct RowBlock {
@@ -65,46 +67,85 @@ impl RowBlock {
     /// In-place right-multiplication by a dense (k, k) row-major matrix:
     /// each active row r becomes `r · m`. This is the `B · G⁻¹` solve step.
     pub fn matmul_small(&mut self, m: &[f32]) {
+        self.matmul_small_par(m, 1);
+    }
+
+    /// Parallel [`Self::matmul_small`]: contiguous slot ranges across
+    /// `threads` scoped workers. Each row's product is computed with the
+    /// same instruction sequence on any worker, so the result is
+    /// bit-identical to serial at every thread count.
+    pub fn matmul_small_par(&mut self, m: &[f32], threads: usize) {
         let k = self.k;
         assert_eq!(m.len(), k * k);
-        let mut scratch = vec![0.0f32; k];
-        for slot in 0..self.active_rows() {
-            let row = self.row_data_mut(slot);
-            scratch.iter_mut().for_each(|x| *x = 0.0);
-            for (i, &ri) in row.iter().enumerate() {
-                if ri != 0.0 {
-                    let mrow = &m[i * k..(i + 1) * k];
-                    for (s, &mv) in scratch.iter_mut().zip(mrow) {
-                        *s += ri * mv;
+        if k == 0 {
+            return;
+        }
+        pool::scoped_partition_map_mut(threads, &mut self.data, k, |_, piece| {
+            let mut scratch = vec![0.0f32; k];
+            for row in piece.chunks_exact_mut(k) {
+                scratch.iter_mut().for_each(|x| *x = 0.0);
+                for (i, &ri) in row.iter().enumerate() {
+                    if ri != 0.0 {
+                        let mrow = &m[i * k..(i + 1) * k];
+                        for (s, &mv) in scratch.iter_mut().zip(mrow) {
+                            *s += ri * mv;
+                        }
                     }
                 }
+                row.copy_from_slice(&scratch);
             }
-            row.copy_from_slice(&scratch);
-        }
+        });
     }
 
     /// Project to the nonnegative orthant (negatives → 0) in place.
     pub fn project_nonneg(&mut self) {
-        for v in &mut self.data {
-            if *v < 0.0 {
-                *v = 0.0;
+        self.project_nonneg_par(1);
+    }
+
+    /// Parallel [`Self::project_nonneg`] — elementwise, so trivially
+    /// bit-identical to serial at every thread count.
+    pub fn project_nonneg_par(&mut self, threads: usize) {
+        pool::scoped_partition_map_mut(threads, &mut self.data, 1, |_, piece| {
+            for v in piece {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
             }
-        }
+        });
     }
 
     /// Gram matrix Xᵀ X of the logical (rows, k) matrix, dense (k, k).
+    /// Same fixed-chunk accumulation as [`Self::gram_par`], so the two
+    /// agree bit-for-bit.
     pub fn gram(&self) -> Vec<f32> {
+        self.gram_par(1)
+    }
+
+    /// Parallel gram: fixed-width slot chunks, f64 partial triangles
+    /// merged in ascending chunk order (see the determinism contract in
+    /// [`crate::coordinator::pool`]).
+    pub fn gram_par(&self, threads: usize) -> Vec<f32> {
         let k = self.k;
-        let mut g = vec![0.0f64; k * k];
-        for slot in 0..self.active_rows() {
-            let row = self.row_data(slot);
-            for i in 0..k {
-                let ri = row[i] as f64;
-                if ri != 0.0 {
-                    for j in i..k {
-                        g[i * k + j] += ri * row[j] as f64;
+        let chunks = pool::fixed_chunks(self.active_rows(), GRAM_CHUNK_ROWS);
+        let partials = pool::scoped_map_ranges(threads, &chunks, |lo, hi| {
+            let mut g = vec![0.0f64; k * k];
+            for slot in lo..hi {
+                let row = self.row_data(slot);
+                for i in 0..k {
+                    let ri = row[i] as f64;
+                    if ri != 0.0 {
+                        for j in i..k {
+                            g[i * k + j] += ri * row[j] as f64;
+                        }
                     }
                 }
+            }
+            g
+        });
+        let mut g = vec![0.0f64; k * k];
+        for part in partials {
+            for (acc, v) in g.iter_mut().zip(part) {
+                *acc += v;
             }
         }
         for i in 0..k {
@@ -236,5 +277,28 @@ mod tests {
     #[test]
     fn stored_len_counts_active_rows() {
         assert_eq!(sample().stored_len(), 4); // 2 active rows × k=2
+    }
+
+    #[test]
+    fn parallel_ops_bit_identical_to_serial() {
+        use crate::util::prop;
+        use crate::util::rng::Rng;
+        prop::check("rowblock-par-vs-serial", 1300, 24, |rng: &mut Rng| {
+            let rows = rng.range(1, 40);
+            let k = rng.range(1, 6);
+            let threads = rng.range(1, 8);
+            let data = prop::gen_sparse_dense(rng, rows, k, 0.5);
+            let base = RowBlock::from_csr(&Csr::from_dense(rows, k, &data));
+            let m: Vec<f32> = (0..k * k).map(|_| rng.normal() as f32).collect();
+
+            let mut serial = base.clone();
+            serial.matmul_small(&m);
+            serial.project_nonneg();
+            let mut par = base.clone();
+            par.matmul_small_par(&m, threads);
+            par.project_nonneg_par(threads);
+            assert_eq!(serial, par, "threads {threads}");
+            assert_eq!(base.gram(), base.gram_par(threads));
+        });
     }
 }

@@ -13,6 +13,7 @@
 
 use super::csr::Csr;
 use super::rowblock::RowBlock;
+use crate::coordinator::pool;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum TieMode {
@@ -128,32 +129,96 @@ pub fn enforce_top_t_csr(m: &mut Csr, t: usize, mode: TieMode) {
 /// (zeroing the rest). This is the hot-path form used inside ALS, before
 /// the intermediate is frozen to CSR.
 pub fn enforce_top_t_rowblock(rb: &mut RowBlock, t: usize, mode: TieMode) {
-    let mut positives: Vec<f32> = rb.data.iter().copied().filter(|&v| v > 0.0).collect();
+    enforce_top_t_rowblock_par(rb, t, mode, 1);
+}
+
+/// Parallel [`enforce_top_t_rowblock`], bit-identical to serial at any
+/// thread count:
+///
+/// * the positive entries are gathered per contiguous range and
+///   concatenated in range order, reproducing the serial left-to-right
+///   gather for any partition, so quickselect sees the same sequence and
+///   returns the same threshold `tau`;
+/// * the `KeepTies` zeroing pass is elementwise;
+/// * the `Exact` tie budget is split by prefix-counting `== tau` entries
+///   per range, reproducing the serial left-to-right budget scan.
+pub fn enforce_top_t_rowblock_par(rb: &mut RowBlock, t: usize, mode: TieMode, threads: usize) {
+    let ranges = pool::split_ranges(rb.data.len(), threads);
+    let data = &rb.data;
+    let mut gathered = pool::scoped_map_ranges(threads, &ranges, |lo, hi| {
+        data[lo..hi]
+            .iter()
+            .copied()
+            .filter(|&v| v > 0.0)
+            .collect::<Vec<f32>>()
+    });
+    let mut positives: Vec<f32> = if gathered.len() == 1 {
+        gathered.pop().unwrap()
+    } else {
+        let mut all = Vec::with_capacity(gathered.iter().map(Vec::len).sum());
+        for part in gathered {
+            all.extend_from_slice(&part);
+        }
+        all
+    };
     if positives.len() <= t {
         return;
     }
     let tau = nth_largest(&mut positives, t);
     match mode {
         TieMode::KeepTies => {
-            for v in &mut rb.data {
-                if *v < tau {
-                    *v = 0.0;
+            pool::scoped_partition_map_mut(threads, &mut rb.data, 1, |_, piece| {
+                for v in piece {
+                    if *v < tau {
+                        *v = 0.0;
+                    }
                 }
-            }
+            });
         }
         TieMode::Exact => {
-            let above = rb.data.iter().filter(|&&v| v > tau).count();
-            let mut tie_budget = t - above;
-            for v in &mut rb.data {
-                if *v > tau {
-                    continue;
+            // per-range (above, ties) counts on the same boundaries as the
+            // mutate pass below (both come from split_ranges)
+            let data = &rb.data;
+            let counts = pool::scoped_map_ranges(threads, &ranges, |lo, hi| {
+                let mut above = 0usize;
+                let mut ties = 0usize;
+                for &v in &data[lo..hi] {
+                    if v > tau {
+                        above += 1;
+                    } else if v == tau {
+                        ties += 1;
+                    }
                 }
-                if *v == tau && tie_budget > 0 {
-                    tie_budget -= 1;
-                } else {
-                    *v = 0.0;
+                (above, ties)
+            });
+            let total_above: usize = counts.iter().map(|c| c.0).sum();
+            // tau is the t-th largest positive, so at most t-1 entries
+            // exceed it and the subtraction cannot underflow
+            let mut remaining = t - total_above;
+            let budgets: Vec<usize> = counts
+                .iter()
+                .map(|&(_, ties)| {
+                    let take = remaining.min(ties);
+                    remaining -= take;
+                    take
+                })
+                .collect();
+            pool::scoped_partition_map_mut(threads, &mut rb.data, 1, |offset, piece| {
+                let part = ranges
+                    .binary_search_by_key(&offset, |&(lo, _)| lo)
+                    .expect("partition boundaries must match split_ranges");
+                let mut tie_budget = budgets[part];
+                for v in piece {
+                    if *v > tau {
+                        continue;
+                    }
+                    if *v == tau && tie_budget > 0 {
+                        tie_budget -= 1;
+                    } else {
+                        *v = 0.0;
+                    }
                 }
-            }
+            });
         }
     }
 }
@@ -163,27 +228,72 @@ pub fn enforce_top_t_rowblock(rb: &mut RowBlock, t: usize, mode: TieMode) {
 /// column gather — the same access-pattern penalty the paper reports for
 /// column-wise enforcement on compressed row/column formats.
 pub fn enforce_top_t_per_column(m: &mut Csr, t_per_col: usize, mode: TieMode) {
+    enforce_top_t_per_column_par(m, t_per_col, mode, 1);
+}
+
+/// Parallel [`enforce_top_t_per_column`], bit-identical to serial at any
+/// thread count: the column gather is row-range partitioned and merged in
+/// range order (same per-column value sequence as the serial scan), the
+/// per-column thresholds are computed on independent column partitions,
+/// and the final retain pass stays sequential (CSR compaction moves
+/// entries across row boundaries, so its write cursor cannot be split;
+/// selection dominates the cost).
+pub fn enforce_top_t_per_column_par(
+    m: &mut Csr,
+    t_per_col: usize,
+    mode: TieMode,
+    threads: usize,
+) {
     let k = m.cols;
-    // gather each column's values (column access in CSR = full scan)
-    let mut col_vals: Vec<Vec<f32>> = vec![Vec::new(); k];
-    for r in 0..m.rows {
-        let (idx, val) = m.row(r);
-        for (&c, &v) in idx.iter().zip(val) {
-            col_vals[c as usize].push(v);
-        }
+    if k == 0 {
+        return;
     }
-    let mut taus = vec![f32::NEG_INFINITY; k];
-    let mut tie_budgets = vec![usize::MAX; k];
-    for c in 0..k {
-        if col_vals[c].len() > t_per_col {
-            let tau = nth_largest(&mut col_vals[c], t_per_col);
-            taus[c] = tau;
-            if mode == TieMode::Exact {
-                let above = col_vals[c].iter().filter(|&&v| v > tau).count();
-                tie_budgets[c] = t_per_col - above;
+    // gather each column's values (column access in CSR = full scan),
+    // one partial gather per row range, appended in range order
+    let row_ranges = pool::split_ranges(m.rows, threads);
+    let shared: &Csr = m;
+    let gathered = pool::scoped_map_ranges(threads, &row_ranges, |lo, hi| {
+        let mut cols: Vec<Vec<f32>> = vec![Vec::new(); k];
+        for r in lo..hi {
+            let (idx, val) = shared.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                cols[c as usize].push(v);
             }
         }
+        cols
+    });
+    let mut col_vals: Vec<Vec<f32>> = vec![Vec::new(); k];
+    for mut part in gathered {
+        for (c, vals) in part.iter_mut().enumerate() {
+            col_vals[c].append(vals);
+        }
     }
+    // per-column thresholds: columns are independent, so a contiguous
+    // column partition needs no merge discipline beyond ordering
+    let thresholds: Vec<(f32, usize)> =
+        pool::scoped_partition_map_mut(threads, &mut col_vals, 1, |_, piece| {
+            piece
+                .iter_mut()
+                .map(|vals| {
+                    if vals.len() > t_per_col {
+                        let tau = nth_largest(vals, t_per_col);
+                        let budget = if mode == TieMode::Exact {
+                            t_per_col - vals.iter().filter(|&&v| v > tau).count()
+                        } else {
+                            usize::MAX
+                        };
+                        (tau, budget)
+                    } else {
+                        (f32::NEG_INFINITY, usize::MAX)
+                    }
+                })
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+    let taus: Vec<f32> = thresholds.iter().map(|t| t.0).collect();
+    let mut tie_budgets: Vec<usize> = thresholds.iter().map(|t| t.1).collect();
     match mode {
         TieMode::KeepTies => m.retain(|_, c, v| v >= taus[c as usize]),
         TieMode::Exact => m.retain(|_, c, v| {
@@ -306,6 +416,111 @@ mod tests {
             m.validate().unwrap();
             for (c, &count) in m.col_nnz().iter().enumerate() {
                 assert!(count <= t, "column {c} has {count} > {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn ties_straddling_partition_boundaries() {
+        // 12 entries, many duplicated magnitudes; at 4 threads the ranges
+        // are 3 entries wide, so the 2.0-ties straddle every boundary
+        let data = [2.0f32, 1.0, 2.0, 2.0, 5.0, 2.0, 2.0, 3.0, 2.0, 2.0, 1.0, 2.0];
+        for t in [0usize, 1, 3, 5, 8, 11, 12, 20] {
+            for mode in [TieMode::KeepTies, TieMode::Exact] {
+                let mut serial = RowBlock::new(4, 3);
+                for (r, row) in data.chunks(3).enumerate() {
+                    serial.push_row(r, row);
+                }
+                let mut par = serial.clone();
+                enforce_top_t_rowblock(&mut serial, t, mode);
+                for threads in [2usize, 4, 7] {
+                    let mut rb = par.clone();
+                    enforce_top_t_rowblock_par(&mut rb, t, mode, threads);
+                    assert_eq!(rb, serial, "t={t} mode={mode:?} threads={threads}");
+                }
+                if mode == TieMode::Exact {
+                    let kept = serial.data.iter().filter(|&&v| v > 0.0).count();
+                    assert_eq!(kept, t.min(data.len()), "t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn t_at_least_nnz_is_identity() {
+        let mut rb = RowBlock::new(2, 3);
+        rb.push_row(0, &[1.0, 2.0, 3.0]);
+        rb.push_row(1, &[4.0, 0.0, 5.0]);
+        for t in [5usize, 6, 100] {
+            for mode in [TieMode::KeepTies, TieMode::Exact] {
+                for threads in [1usize, 2, 4, 7] {
+                    let mut m = rb.clone();
+                    enforce_top_t_rowblock_par(&mut m, t, mode, threads);
+                    assert_eq!(m, rb, "t={t} mode={mode:?} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn t_zero_clears_everything() {
+        for mode in [TieMode::KeepTies, TieMode::Exact] {
+            for threads in [1usize, 2, 4, 7] {
+                let mut rb = RowBlock::new(2, 2);
+                rb.push_row(0, &[1.0, 3.0]);
+                rb.push_row(1, &[2.0, 4.0]);
+                enforce_top_t_rowblock_par(&mut rb, 0, mode, threads);
+                assert!(rb.data.iter().all(|&v| v == 0.0), "mode={mode:?}");
+                let mut m = Csr::from_dense(2, 2, &[1.0, 3.0, 2.0, 4.0]);
+                enforce_top_t_csr(&mut m, 0, mode);
+                assert_eq!(m.nnz(), 0, "mode={mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_columns_survive_per_column_enforcement() {
+        // columns 1 and 3 hold no entries at all
+        let mut m = Csr::from_dense(3, 4, &[
+            5.0, 0.0, 1.0, 0.0, //
+            4.0, 0.0, 2.0, 0.0, //
+            3.0, 0.0, 6.0, 0.0,
+        ]);
+        let want_cols = vec![2usize, 0, 2, 0];
+        for threads in [1usize, 2, 4, 7] {
+            let mut got = m.clone();
+            enforce_top_t_per_column_par(&mut got, 2, TieMode::Exact, threads);
+            got.validate().unwrap();
+            assert_eq!(got.col_nnz(), want_cols, "threads={threads}");
+        }
+        // degenerate shapes: no columns / no rows are no-ops, not panics
+        let mut empty_cols = Csr::zeros(3, 0);
+        enforce_top_t_per_column_par(&mut empty_cols, 1, TieMode::Exact, 4);
+        assert_eq!(empty_cols.nnz(), 0);
+        let mut empty_rows = Csr::zeros(0, 3);
+        enforce_top_t_per_column_par(&mut empty_rows, 1, TieMode::KeepTies, 4);
+        assert_eq!(empty_rows.nnz(), 0);
+        enforce_top_t_per_column(&mut m, 0, TieMode::Exact);
+        assert_eq!(m.nnz(), 0, "t_per_col = 0 clears every column");
+    }
+
+    #[test]
+    fn per_column_parallel_matches_serial() {
+        prop::check("per-column-par-vs-serial", 1000, 48, |rng: &mut Rng| {
+            let (rows, cols) = (rng.range(1, 25), rng.range(1, 7));
+            let m = positive_csr(rng, rows, cols, 0.6);
+            let t = rng.range(0, 7);
+            let mode = if rng.below(2) == 0 {
+                TieMode::KeepTies
+            } else {
+                TieMode::Exact
+            };
+            let mut serial = m.clone();
+            enforce_top_t_per_column(&mut serial, t, mode);
+            for threads in [2usize, 4, 7] {
+                let mut par = m.clone();
+                enforce_top_t_per_column_par(&mut par, t, mode, threads);
+                assert_eq!(par, serial, "t={t} mode={mode:?} threads={threads}");
             }
         });
     }

@@ -136,7 +136,10 @@ fn sequential_matches_rank_and_is_fast_fig9_claim() {
             .with_iters(iters)
             .with_seed(7)
             .with_sparsity(SparsityMode::both(50, 250))
-            .with_track_error(false),
+            .with_track_error(false)
+            // the sequential solver is serial; pin ALS to one thread so
+            // the elapsed-time comparison below stays apples-to-apples
+            .with_threads(1),
     );
     let seq = factorize_sequential(
         &tdm,
@@ -154,6 +157,36 @@ fn sequential_matches_rank_and_is_fast_fig9_claim() {
         seq.elapsed_s,
         normal.elapsed_s
     );
+}
+
+#[test]
+fn full_pipeline_identical_at_one_and_many_threads() {
+    // the whole NmfOptions path, config file included: a run configured
+    // with threads = 1 and the same run at N threads must produce an
+    // identical NmfResult — factors, iteration count, convergence trace,
+    // error history and memory-tracker peaks
+    use esnmf::config::{ConfigFile, RunConfig};
+
+    let file = ConfigFile::parse(
+        "corpus = pubmed\nscale = tiny\nseed = 31\n[nmf]\nk = 4\niters = 8\ntrack_error = true\ninit_nnz = 150\n[sparsity]\nmode = both\nt_u = 120\nt_v = 240\n",
+    )
+    .unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.apply_file(&file).unwrap();
+    let tdm = generate_tdm(&pubmed_sim(Scale::Tiny), cfg.seed);
+
+    cfg.threads = 1;
+    let serial = factorize(&tdm, &cfg.nmf_options().unwrap());
+    for threads in [2usize, 4, 7] {
+        cfg.threads = threads;
+        let par = factorize(&tdm, &cfg.nmf_options().unwrap());
+        assert_eq!(par.u, serial.u, "U differs at {threads} threads");
+        assert_eq!(par.v, serial.v, "V differs at {threads} threads");
+        assert_eq!(par.iterations, serial.iterations);
+        assert_eq!(par.residuals, serial.residuals, "trace differs at {threads} threads");
+        assert_eq!(par.errors, serial.errors, "errors differ at {threads} threads");
+        assert_eq!(par.memory, serial.memory, "memory peaks differ at {threads} threads");
+    }
 }
 
 #[test]

@@ -6,10 +6,30 @@ use esnmf::coordinator::{JobManager, JobSpec};
 use esnmf::corpus::{generate_tdm, CorpusSpec, TopicSpec};
 use esnmf::corpus::words;
 use esnmf::nmf::{factorize, NmfOptions, SparsityMode};
-use esnmf::sparse::TieMode;
+use esnmf::sparse::{ops, topk, Coo, Csr, TieMode};
 use esnmf::util::prop;
 use esnmf::util::rng::Rng;
 use std::sync::Arc;
+
+/// Thread counts the serial≡parallel contract is pinned at: serial, even
+/// split, typical small machine, and a prime that leaves ragged ranges.
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+/// A random COO matrix (duplicates included — freeze merges them) with a
+/// mix of positive and negative values.
+fn random_coo_csr(rng: &mut Rng, rows: usize, cols: usize, negatives: bool) -> Csr {
+    let mut coo = Coo::new(rows, cols);
+    let nnz = rng.below(rows * cols + 1);
+    for _ in 0..nnz {
+        let sign = if negatives && rng.below(3) == 0 { -1.0 } else { 1.0 };
+        coo.push(
+            rng.below(rows),
+            rng.below(cols),
+            sign * (rng.f32() + 1e-4),
+        );
+    }
+    coo.to_csr()
+}
 
 fn random_corpus(rng: &mut Rng) -> esnmf::text::TermDocMatrix {
     let spec = CorpusSpec {
@@ -85,6 +105,117 @@ fn solver_invariants_under_random_configs() {
         }
         // invariant 6: memory peak ≥ final footprint
         assert!(r.memory.max_combined_nnz >= r.u.nnz() + r.v.nnz() || nnz_total == 0);
+    });
+}
+
+#[test]
+fn parallel_kernels_byte_identical_to_serial() {
+    // the determinism contract of coordinator::pool, pinned kernel by
+    // kernel: SpMM (both orientations), gram, solve, projection, and
+    // top-t enforcement under each TieMode — serial output must be
+    // byte-identical at thread counts {1, 2, 4, 7}
+    prop::check("serial-vs-parallel-kernels", 0xF66, 24, |rng| {
+        let n = rng.range(1, 50);
+        let m = rng.range(1, 50);
+        let k = rng.range(1, 7);
+        let a = random_coo_csr(rng, n, m, true);
+        let u = random_coo_csr(rng, n, k, false);
+        let v = random_coo_csr(rng, m, k, false);
+        let a_csc = a.to_csc();
+
+        let atb_serial = ops::atb(&a_csc, &u);
+        let ab_serial = ops::ab(&a, &v);
+        let gram_serial = ops::gram(&u);
+        for &threads in &THREAD_COUNTS {
+            assert_eq!(ops::atb_par(&a_csc, &u, threads), atb_serial, "atb threads={threads}");
+            assert_eq!(ops::ab_par(&a, &v, threads), ab_serial, "ab threads={threads}");
+            assert_eq!(ops::gram_par(&u, threads), gram_serial, "gram threads={threads}");
+        }
+
+        // solve + projection on a half-step-shaped candidate (negatives
+        // present so the projection actually bites)
+        let cand = ops::atb(&a_csc, &u);
+        let small: Vec<f32> = (0..k * k).map(|_| rng.normal() as f32).collect();
+        let mut serial_rb = cand.clone();
+        serial_rb.matmul_small(&small);
+        serial_rb.project_nonneg();
+        for &threads in &THREAD_COUNTS {
+            let mut par = cand.clone();
+            par.matmul_small_par(&small, threads);
+            par.project_nonneg_par(threads);
+            assert_eq!(par, serial_rb, "solve+project threads={threads}");
+            assert_eq!(cand.gram_par(threads), cand.gram(), "rb gram threads={threads}");
+        }
+
+        // top-t enforcement: force duplicate magnitudes so tie-breaking
+        // is exercised, then check both modes at every thread count
+        let mut quantized = serial_rb.clone();
+        for val in &mut quantized.data {
+            *val = (*val * 4.0).round() / 4.0;
+        }
+        let t = rng.below(quantized.data.len() + 2);
+        for mode in [TieMode::KeepTies, TieMode::Exact] {
+            let mut want = quantized.clone();
+            topk::enforce_top_t_rowblock(&mut want, t, mode);
+            for &threads in &THREAD_COUNTS {
+                let mut got = quantized.clone();
+                topk::enforce_top_t_rowblock_par(&mut got, t, mode, threads);
+                assert_eq!(got, want, "top-t t={t} mode={mode:?} threads={threads}");
+            }
+        }
+
+        // per-column enforcement on a frozen positive factor
+        let frozen = {
+            let mut rb = serial_rb.clone();
+            rb.project_nonneg();
+            rb.to_csr()
+        };
+        let t_col = rng.range(1, 5);
+        for mode in [TieMode::KeepTies, TieMode::Exact] {
+            let mut want = frozen.clone();
+            topk::enforce_top_t_per_column(&mut want, t_col, mode);
+            for &threads in &THREAD_COUNTS {
+                let mut got = frozen.clone();
+                topk::enforce_top_t_per_column_par(&mut got, t_col, mode, threads);
+                assert_eq!(got, want, "per-col t={t_col} mode={mode:?} threads={threads}");
+            }
+        }
+    });
+}
+
+#[test]
+fn factorization_byte_identical_across_thread_counts() {
+    prop::check("serial-vs-parallel-solver", 0xF77, 6, |rng| {
+        let tdm = random_corpus(rng);
+        let k = rng.range(2, 6);
+        let mode = match rng.below(3) {
+            0 => SparsityMode::None,
+            1 => SparsityMode::both(rng.range(k, 200), rng.range(k, 400)),
+            _ => SparsityMode::PerColumn {
+                t_u_col: Some(rng.range(1, 30)),
+                t_v_col: Some(rng.range(1, 60)),
+            },
+        };
+        let mut base = NmfOptions::new(k)
+            .with_iters(rng.range(2, 5))
+            .with_seed(rng.next_u64())
+            .with_sparsity(mode)
+            .with_threads(1);
+        base.tie_mode = if rng.below(2) == 0 {
+            TieMode::KeepTies
+        } else {
+            TieMode::Exact
+        };
+        let serial = factorize(&tdm, &base);
+        for &threads in &THREAD_COUNTS[1..] {
+            let r = factorize(&tdm, &base.clone().with_threads(threads));
+            assert_eq!(r.u, serial.u, "threads {threads}");
+            assert_eq!(r.v, serial.v, "threads {threads}");
+            assert_eq!(r.iterations, serial.iterations);
+            assert_eq!(r.residuals, serial.residuals);
+            assert_eq!(r.errors, serial.errors);
+            assert_eq!(r.memory, serial.memory);
+        }
     });
 }
 
