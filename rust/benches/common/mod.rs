@@ -12,8 +12,16 @@ use esnmf::text::TermDocMatrix;
 
 /// Scale for bench runs: `ESNMF_BENCH_SCALE=tiny|small|paper` (default
 /// tiny so `cargo bench` completes quickly; use small/paper for the
-/// numbers recorded in EXPERIMENTS.md).
+/// numbers recorded in EXPERIMENTS.md). `BENCH_SMOKE=1` overrides to
+/// tiny + fast regardless, so CI's bench-smoke job stays quick.
 pub fn bench_config() -> ExpConfig {
+    if esnmf::util::bench::smoke_mode() {
+        return ExpConfig {
+            scale: Scale::Tiny,
+            seed: 42,
+            fast: true,
+        };
+    }
     let scale = std::env::var("ESNMF_BENCH_SCALE")
         .ok()
         .and_then(|s| Scale::parse(&s))

@@ -90,6 +90,20 @@ impl Args {
         Ok(self.opt_parse(name)?.unwrap_or(default))
     }
 
+    /// A worker-count option accepting `N` or the bare word `auto`
+    /// (→ `Some(0)`, "use every available core") — the CLI twin of
+    /// `ConfigFile::threads`.
+    pub fn opt_threads(&mut self, name: &str) -> Result<Option<usize>, String> {
+        match self.opt_str(name) {
+            None => Ok(None),
+            Some(v) if v == "auto" => Ok(Some(0)),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("invalid value {v:?} for --{name} (N or auto)")),
+        }
+    }
+
     /// Error on any option/flag never looked at (catches typos).
     pub fn check_unknown(&self) -> Result<(), String> {
         let mut unknown: Vec<&String> = self
@@ -159,6 +173,16 @@ mod tests {
     fn invalid_value_errors() {
         let mut a = parse("run --k five");
         assert!(a.opt_parse::<usize>("k").is_err());
+    }
+
+    #[test]
+    fn threads_option_accepts_auto_and_integers() {
+        let mut a = parse("serve --serve-threads auto --threads 4");
+        assert_eq!(a.opt_threads("serve-threads").unwrap(), Some(0));
+        assert_eq!(a.opt_threads("threads").unwrap(), Some(4));
+        assert_eq!(a.opt_threads("missing").unwrap(), None);
+        let mut a = parse("serve --serve-threads lots");
+        assert!(a.opt_threads("serve-threads").is_err());
     }
 
     #[test]

@@ -185,6 +185,11 @@ track_error = true
 [sparsity]
 mode = both
 t_u = 55
+
+[serve]
+threads = auto
+cache_size = 512
+foldin_t = 10
 "#;
 
     #[test]
@@ -197,6 +202,9 @@ t_u = 55
         assert_eq!(c.bool("nmf.track_error"), Some(true));
         assert_eq!(c.usize("sparsity.t_u"), Some(55));
         assert_eq!(c.str("sparsity.mode"), Some("both"));
+        assert_eq!(c.threads("serve.threads"), Some(0)); // auto
+        assert_eq!(c.usize("serve.cache_size"), Some(512));
+        assert_eq!(c.usize("serve.foldin_t"), Some(10));
     }
 
     #[test]

@@ -40,10 +40,20 @@ pub struct RunConfig {
     /// sequential-only: topics per block and iterations per block
     pub block_topics: usize,
     pub iters_per_block: usize,
+    /// topic-server connection workers (`esnmf serve`); 0 = auto (all cores)
+    pub serve_threads: usize,
+    /// topic-server LRU entries for CLASSIFY/FOLDIN responses; 0 disables
+    pub serve_cache: usize,
+    /// nonzero budget for folded-in document rows; None falls back to
+    /// `t_v` (the training-time V budget), and if that is unset too,
+    /// fold-in rows are unenforced
+    pub foldin_t: Option<usize>,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
+        // single source of truth for the server knobs
+        let serve_defaults = crate::coordinator::ServeOptions::default();
         RunConfig {
             corpus: "reuters".into(),
             scale: Scale::Small,
@@ -63,6 +73,9 @@ impl Default for RunConfig {
             threads: 0,
             block_topics: 1,
             iters_per_block: 20,
+            serve_threads: serve_defaults.threads,
+            serve_cache: serve_defaults.cache_size,
+            foldin_t: None,
         }
     }
 }
@@ -130,7 +143,34 @@ impl RunConfig {
         if let Some(v) = f.usize("sequential.iters_per_block") {
             self.iters_per_block = v;
         }
+        if let Some(v) = f.threads("serve.threads") {
+            self.serve_threads = v;
+        }
+        if let Some(v) = f.usize("serve.cache_size") {
+            self.serve_cache = v;
+        }
+        if let Some(v) = f.usize("serve.foldin_t") {
+            self.foldin_t = Some(v);
+        }
         Ok(())
+    }
+
+    /// Resolve the topic-server knobs (`0` serve threads = all cores).
+    pub fn serve_options(&self) -> crate::coordinator::ServeOptions {
+        crate::coordinator::ServeOptions {
+            threads: if self.serve_threads == 0 {
+                crate::coordinator::pool::default_threads()
+            } else {
+                self.serve_threads
+            },
+            cache_size: self.serve_cache,
+        }
+    }
+
+    /// The fold-in nonzero budget the served model should enforce:
+    /// explicit `foldin_t`, else the training-time `t_v` budget.
+    pub fn foldin_budget(&self) -> Option<usize> {
+        self.foldin_t.or(self.t_v)
     }
 
     /// Resolve the sparsity mode string + budgets into the typed enum.
@@ -263,6 +303,47 @@ mod tests {
             cfg.nmf_options().unwrap().threads,
             crate::coordinator::pool::default_threads()
         );
+    }
+
+    #[test]
+    fn serve_knobs_from_file() {
+        let f = ConfigFile::parse(
+            "[serve]\nthreads = 4\ncache_size = 128\nfoldin_t = 3\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        let opts = cfg.serve_options();
+        assert_eq!(opts.threads, 4);
+        assert_eq!(opts.cache_size, 128);
+        assert_eq!(cfg.foldin_budget(), Some(3));
+        // threads = auto resolves to the machine's cores
+        let f = ConfigFile::parse("[serve]\nthreads = auto\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(
+            cfg.serve_options().threads,
+            crate::coordinator::pool::default_threads()
+        );
+    }
+
+    #[test]
+    fn foldin_budget_falls_back_to_t_v() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.foldin_budget(), None);
+        cfg.t_v = Some(40);
+        assert_eq!(cfg.foldin_budget(), Some(40));
+        cfg.foldin_t = Some(7);
+        assert_eq!(cfg.foldin_budget(), Some(7));
+    }
+
+    #[test]
+    fn serve_defaults_track_serve_options() {
+        let cfg = RunConfig::default();
+        let opts = cfg.serve_options();
+        let want = crate::coordinator::ServeOptions::default();
+        assert_eq!(opts.threads, want.threads);
+        assert_eq!(opts.cache_size, want.cache_size);
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! A fixed-capacity LRU map for server responses.
+//!
+//! The topic server keys this by *normalized query* (see
+//! `server::normalize_query`), so permutations of the same CLASSIFY /
+//! FOLDIN bag of words share one entry. Implemented as a HashMap over an
+//! index-linked doubly-linked list (no pointer juggling, no external
+//! crates): every operation is O(1) expected.
+
+use std::collections::HashMap;
+
+const NIL: usize = usize::MAX;
+
+#[derive(Debug)]
+struct Entry {
+    key: String,
+    val: String,
+    prev: usize,
+    next: usize,
+}
+
+/// Least-recently-used string→string cache. Capacity 0 disables it:
+/// `get` always misses and `insert` is a no-op.
+#[derive(Debug)]
+pub struct LruCache {
+    cap: usize,
+    map: HashMap<String, usize>,
+    entries: Vec<Entry>,
+    /// most recently used entry (NIL when empty)
+    head: usize,
+    /// least recently used entry (NIL when empty)
+    tail: usize,
+    free: Vec<usize>,
+}
+
+impl LruCache {
+    pub fn new(cap: usize) -> Self {
+        LruCache {
+            cap,
+            map: HashMap::with_capacity(cap.min(1024)),
+            entries: Vec::with_capacity(cap.min(1024)),
+            head: NIL,
+            tail: NIL,
+            free: Vec::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (p, n) = (self.entries[i].prev, self.entries[i].next);
+        if p != NIL {
+            self.entries[p].next = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.entries[n].prev = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.entries[i].prev = NIL;
+        self.entries[i].next = self.head;
+        if self.head != NIL {
+            self.entries[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Look up `key`, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        let &i = self.map.get(key)?;
+        self.detach(i);
+        self.push_front(i);
+        Some(self.entries[i].val.clone())
+    }
+
+    /// Insert or refresh `key`, evicting the least-recently-used entry
+    /// when at capacity.
+    pub fn insert(&mut self, key: String, val: String) {
+        if self.cap == 0 {
+            return;
+        }
+        if let Some(&i) = self.map.get(&key) {
+            self.entries[i].val = val;
+            self.detach(i);
+            self.push_front(i);
+            return;
+        }
+        if self.map.len() >= self.cap {
+            let evict = self.tail;
+            self.detach(evict);
+            let old_key = std::mem::take(&mut self.entries[evict].key);
+            self.map.remove(&old_key);
+            self.free.push(evict);
+        }
+        let entry = Entry {
+            key: key.clone(),
+            val,
+            prev: NIL,
+            next: NIL,
+        };
+        let i = match self.free.pop() {
+            Some(slot) => {
+                self.entries[slot] = entry;
+                slot
+            }
+            None => {
+                self.entries.push(entry);
+                self.entries.len() - 1
+            }
+        };
+        self.map.insert(key, i);
+        self.push_front(i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys_mru_to_lru(c: &LruCache) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut i = c.head;
+        while i != NIL {
+            out.push(c.entries[i].key.clone());
+            i = c.entries[i].next;
+        }
+        out
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let mut c = LruCache::new(4);
+        c.insert("a".into(), "1".into());
+        c.insert("b".into(), "2".into());
+        assert_eq!(c.get("a"), Some("1".into()));
+        assert_eq!(c.get("b"), Some("2".into()));
+        assert_eq!(c.get("zz"), None);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(2);
+        c.insert("a".into(), "1".into());
+        c.insert("b".into(), "2".into());
+        // touch a, so b is now the LRU
+        assert!(c.get("a").is_some());
+        c.insert("c".into(), "3".into());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get("b"), None, "b was LRU and must be evicted");
+        assert_eq!(c.get("a"), Some("1".into()));
+        assert_eq!(c.get("c"), Some("3".into()));
+    }
+
+    #[test]
+    fn reinsert_refreshes_value_and_recency() {
+        let mut c = LruCache::new(2);
+        c.insert("a".into(), "1".into());
+        c.insert("b".into(), "2".into());
+        c.insert("a".into(), "1'".into()); // refresh, b becomes LRU
+        c.insert("c".into(), "3".into());
+        assert_eq!(c.get("a"), Some("1'".into()));
+        assert_eq!(c.get("b"), None);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = LruCache::new(0);
+        c.insert("a".into(), "1".into());
+        assert_eq!(c.get("a"), None);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn capacity_one_churns_correctly() {
+        let mut c = LruCache::new(1);
+        for i in 0..10 {
+            c.insert(format!("k{i}"), format!("v{i}"));
+            assert_eq!(c.len(), 1);
+            assert_eq!(c.get(&format!("k{i}")), Some(format!("v{i}")));
+            if i > 0 {
+                assert_eq!(c.get(&format!("k{}", i - 1)), None);
+            }
+        }
+    }
+
+    #[test]
+    fn recency_list_stays_consistent_under_churn() {
+        let mut c = LruCache::new(3);
+        for i in 0..50 {
+            c.insert(format!("k{}", i % 7), format!("v{i}"));
+            let _ = c.get(&format!("k{}", (i + 3) % 7));
+            let keys = keys_mru_to_lru(&c);
+            assert_eq!(keys.len(), c.len());
+            assert!(c.len() <= 3);
+            for k in &keys {
+                assert!(c.map.contains_key(k), "list key {k} missing from map");
+            }
+        }
+    }
+}

@@ -1,9 +1,10 @@
-//! Process-wide metrics: named atomic counters and gauges with a
-//! printable snapshot. Lock-free on the hot path.
+//! Process-wide metrics: named atomic counters, gauges, and latency
+//! histograms with a printable snapshot. Lock-free on the hot path.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 #[derive(Default)]
 pub struct Counter(AtomicU64);
@@ -30,16 +31,87 @@ impl Gauge {
         self.0.store(v, Ordering::Relaxed);
     }
 
+    /// Relative update — safe under concurrent writers, unlike get+set.
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
     pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
 }
 
-/// Registry handing out shared counters/gauges by name.
+/// Upper bucket bounds in microseconds (10µs … 10s); one extra overflow
+/// bucket catches everything slower.
+pub const HISTOGRAM_BOUNDS_US: [u64; 7] =
+    [10, 100, 1_000, 10_000, 100_000, 1_000_000, 10_000_000];
+
+/// Fixed log-scale latency histogram. Observations are bucketed by
+/// microsecond bounds; the exported counts are cumulative (every bucket
+/// includes all faster ones), so downstream consumers can difference
+/// adjacent buckets without re-reading the bound table.
+pub struct Histogram {
+    buckets: [AtomicU64; HISTOGRAM_BOUNDS_US.len() + 1],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe_us(&self, us: u64) {
+        let idx = HISTOGRAM_BOUNDS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(HISTOGRAM_BOUNDS_US.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn observe(&self, elapsed: Duration) {
+        self.observe_us(elapsed.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative counts, one per bound plus the overflow bucket.
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut total = 0u64;
+        self.buckets
+            .iter()
+            .map(|b| {
+                total += b.load(Ordering::Relaxed);
+                total
+            })
+            .collect()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Registry handing out shared counters/gauges/histograms by name.
 #[derive(Clone, Default)]
 pub struct MetricsRegistry {
     counters: Arc<Mutex<BTreeMap<String, Arc<Counter>>>>,
     gauges: Arc<Mutex<BTreeMap<String, Arc<Gauge>>>>,
+    histograms: Arc<Mutex<BTreeMap<String, Arc<Histogram>>>>,
 }
 
 impl MetricsRegistry {
@@ -57,7 +129,14 @@ impl MetricsRegistry {
         Arc::clone(map.entry(name.to_string()).or_default())
     }
 
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
     /// Stable-ordered snapshot for logging / the STATS server command.
+    /// Histograms export `<name>.count`, `<name>.sum_us`, and cumulative
+    /// `<name>.le_<bound>us` / `<name>.inf` bucket counts.
     pub fn snapshot(&self) -> Vec<(String, i64)> {
         let mut out = Vec::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
@@ -65,6 +144,17 @@ impl MetricsRegistry {
         }
         for (name, g) in self.gauges.lock().unwrap().iter() {
             out.push((name.clone(), g.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push((format!("{name}.count"), h.count() as i64));
+            out.push((format!("{name}.sum_us"), h.sum_us() as i64));
+            for (i, cum) in h.cumulative().into_iter().enumerate() {
+                let label = match HISTOGRAM_BOUNDS_US.get(i) {
+                    Some(bound) => format!("{name}.le_{bound}us"),
+                    None => format!("{name}.inf"),
+                };
+                out.push((label, cum as i64));
+            }
         }
         out
     }
@@ -101,6 +191,47 @@ mod tests {
         assert!(snap.contains(&("x".to_string(), 1)));
         assert!(snap.contains(&("queue_depth".to_string(), -5)));
         assert!(reg.format().contains("queue_depth=-5"));
+    }
+
+    #[test]
+    fn gauge_add_is_relative() {
+        let reg = MetricsRegistry::new();
+        let g = reg.gauge("inflight");
+        g.add(3);
+        g.add(-1);
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn histogram_buckets_and_snapshot() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("server.latency.classify");
+        h.observe_us(5); // ≤ 10µs
+        h.observe_us(10); // boundary: still ≤ 10µs
+        h.observe_us(50_000); // ≤ 100ms
+        h.observe_us(99_000_000); // overflow bucket
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum_us(), 5 + 10 + 50_000 + 99_000_000);
+        let cum = h.cumulative();
+        assert_eq!(cum.len(), HISTOGRAM_BOUNDS_US.len() + 1);
+        assert_eq!(cum[0], 2); // the two ≤10µs observations
+        assert_eq!(cum[4], 3); // ≤100ms includes everything but overflow
+        assert_eq!(*cum.last().unwrap(), 4);
+        let snap = reg.snapshot();
+        assert!(snap.contains(&("server.latency.classify.count".to_string(), 4)));
+        assert!(snap.contains(&("server.latency.classify.le_10us".to_string(), 2)));
+        assert!(snap.contains(&("server.latency.classify.inf".to_string(), 4)));
+        assert!(reg.format().contains("server.latency.classify.count=4"));
+    }
+
+    #[test]
+    fn histogram_observe_duration() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("lat");
+        h.observe(Duration::from_micros(500));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.cumulative()[2], 1); // ≤ 1ms
+        assert_eq!(h.cumulative()[1], 0); // not ≤ 100µs
     }
 
     #[test]

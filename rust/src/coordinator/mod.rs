@@ -8,6 +8,7 @@
 //! concurrently — exactly what the experiment harness does), and the
 //! resulting topic models are served over a line protocol.
 
+pub mod cache;
 pub mod ingest;
 pub mod jobs;
 pub mod metrics;
@@ -15,9 +16,10 @@ pub mod model;
 pub mod pool;
 pub mod server;
 
+pub use cache::LruCache;
 pub use ingest::{ingest_stream, IngestConfig};
 pub use jobs::{JobId, JobManager, JobSpec, JobStatus};
 pub use metrics::MetricsRegistry;
 pub use model::TopicModel;
 pub use pool::{default_threads, ThreadPool};
-pub use server::TopicServer;
+pub use server::{ServeOptions, ServerState, TopicServer};

@@ -1,8 +1,10 @@
 //! A servable topic model: the frozen factors plus vocabulary, with the
-//! query operations the topic server exposes.
+//! query operations the topic server exposes (including fold-in of
+//! documents never seen at training time).
 
 use crate::eval::topics::top_terms;
-use crate::sparse::Csr;
+use crate::nmf::FoldIn;
+use crate::sparse::{Csr, TieMode};
 
 #[derive(Clone, Debug)]
 pub struct TopicModel {
@@ -13,6 +15,9 @@ pub struct TopicModel {
     pub terms: Vec<String>,
     /// term → row id (built once at construction)
     term_ids: std::collections::HashMap<String, usize>,
+    /// single-document solver over the frozen `u` (Gram inverse
+    /// precomputed once at construction)
+    foldin: FoldIn,
 }
 
 impl TopicModel {
@@ -23,12 +28,26 @@ impl TopicModel {
             .enumerate()
             .map(|(i, t)| (t.clone(), i))
             .collect();
+        let foldin = FoldIn::new(&u, None, TieMode::Exact);
         TopicModel {
             u,
             v,
             terms,
             term_ids,
+            foldin,
         }
+    }
+
+    /// Cap the nonzeros of every folded-in document row (None leaves
+    /// fold-in unenforced). Uses `Exact` tie mode: a hard budget is what
+    /// a serving-side memory contract wants.
+    pub fn with_foldin_budget(mut self, t: Option<usize>) -> Self {
+        self.foldin.t = t;
+        self
+    }
+
+    pub fn foldin_budget(&self) -> Option<usize> {
+        self.foldin.t
     }
 
     pub fn k(&self) -> usize {
@@ -70,6 +89,32 @@ impl TopicModel {
         let mut ranked: Vec<(usize, f32)> = scores.into_iter().enumerate().collect();
         ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         ranked
+    }
+
+    /// Fold an unseen document into topic space: one enforced-sparse
+    /// non-negative least-squares half-step against the frozen `U` (the
+    /// same Algorithm-2 update the training loop runs per document row).
+    /// Input is (word, count) pairs; unknown words are ignored with the
+    /// same case-insensitive lookup as [`Self::classify`]. Returns the
+    /// nonzero (topic, weight) entries, weight-descending (ties broken by
+    /// topic id).
+    pub fn fold_in<S: AsRef<str>>(&self, doc: &[(S, f32)]) -> Vec<(usize, f32)> {
+        let pairs: Vec<(usize, f32)> = doc
+            .iter()
+            .filter_map(|(w, c)| {
+                self.term_ids
+                    .get(&w.as_ref().to_lowercase())
+                    .map(|&row| (row, *c))
+            })
+            .collect();
+        let x = self.foldin.solve(&self.u, &pairs);
+        let mut out: Vec<(usize, f32)> = x
+            .into_iter()
+            .enumerate()
+            .filter(|&(_, w)| w > 0.0)
+            .collect();
+        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        out
     }
 
     /// Documents most associated with a topic: (doc id, weight) descending.
@@ -129,6 +174,37 @@ mod tests {
         let m = model();
         let r = m.classify(&["zzzz"]);
         assert!((r[0].1 - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fold_in_ranks_like_classify() {
+        let m = model();
+        let folded = m.fold_in(&[("coffee", 2.0), ("crop", 1.0)]);
+        assert!(!folded.is_empty());
+        assert_eq!(folded[0].0, m.classify(&["coffee", "crop"])[0].0);
+        // case-insensitive like classify
+        let folded_upper = m.fold_in(&[("Coffee", 2.0), ("CROP", 1.0)]);
+        assert_eq!(folded, folded_upper);
+    }
+
+    #[test]
+    fn fold_in_unknown_words_empty() {
+        let m = model();
+        assert!(m.fold_in(&[("zzzz", 3.0)]).is_empty());
+        assert!(m.fold_in::<&str>(&[]).is_empty());
+    }
+
+    #[test]
+    fn fold_in_budget_caps_nnz() {
+        let m = model().with_foldin_budget(Some(1));
+        assert_eq!(m.foldin_budget(), Some(1));
+        // both topics get mass without a budget; with t=1 only one survives
+        let folded = m.fold_in(&[("coffee", 1.0), ("electrons", 1.0)]);
+        assert_eq!(folded.len(), 1);
+        let unbudgeted = model().fold_in(&[("coffee", 1.0), ("electrons", 1.0)]);
+        assert!(unbudgeted.len() >= 2);
+        // the survivor is the highest-weight topic of the unbudgeted row
+        assert_eq!(folded[0].0, unbudgeted[0].0);
     }
 
     #[test]

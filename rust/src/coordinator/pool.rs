@@ -202,6 +202,13 @@ pub struct ThreadPool {
 impl ThreadPool {
     /// Spawn `size` workers (clamped to ≥ 1).
     pub fn new(size: usize) -> ThreadPool {
+        ThreadPool::named(size, "esnmf-worker")
+    }
+
+    /// As [`ThreadPool::new`] with a thread-name prefix, so different
+    /// pools (factorization jobs vs. served connections) are tellable
+    /// apart in a debugger or thread dump.
+    pub fn named(size: usize, prefix: &str) -> ThreadPool {
         let size = size.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -209,7 +216,7 @@ impl ThreadPool {
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 std::thread::Builder::new()
-                    .name(format!("esnmf-worker-{i}"))
+                    .name(format!("{prefix}-{i}"))
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
@@ -313,6 +320,7 @@ mod tests {
     #[test]
     fn pool_clamps_to_one() {
         assert_eq!(ThreadPool::new(0).size(), 1);
+        assert_eq!(ThreadPool::named(0, "t").size(), 1);
     }
 
     #[test]

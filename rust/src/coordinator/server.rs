@@ -1,48 +1,200 @@
-//! Topic-query server: a line-oriented TCP protocol over a frozen
-//! [`TopicModel`].
+//! Topic-query server: a concurrent line-oriented TCP protocol over a
+//! frozen [`TopicModel`].
 //!
 //! ```text
 //! TOPICS                      → "OK k=<k>"
-//! TOPTERMS <topic> <n>        → "OK term:weight term:weight ..."
+//! TOPTERMS <topic> [n]        → "OK term:weight term:weight ..."
 //! CLASSIFY <word> <word> ...  → "OK topic:<id> score:<s> ..."
-//! DOCS <topic> <n>            → "OK doc:weight ..."
+//! FOLDIN <word:count> ...     → "OK nnz=<n> topic:<id>:<w> ..."
+//! DOCS <topic> [n]            → "OK doc:weight ..."
+//! BATCH <n>                   → "OK batch=<n>" + the next n lines'
+//!                               responses, in order
 //! STATS                       → "OK <metrics snapshot>"
 //! PING                        → "OK pong"
 //! QUIT                        → closes the connection
 //! ```
 //!
-//! Unknown commands answer `ERR ...`; every request is newline-delimited.
+//! Unknown or malformed commands answer `ERR ...` (never a panic, never a
+//! silently-defaulted argument); blank lines are ignored. Every request
+//! and response is newline-delimited. See `rust/README.md` for the full
+//! wire-protocol contract.
+//!
+//! # Concurrency model
+//!
+//! The accept loop dispatches each connection onto a fixed
+//! [`ThreadPool`] ([`ServeOptions::threads`] workers), which **bounds**
+//! the number of simultaneously-served connections — excess accepts queue
+//! on the pool channel and are picked up as workers free. Shutdown is
+//! graceful: the accept loop stops, in-flight requests finish, and every
+//! connection handler observes the stop flag within its read-poll
+//! interval and closes.
+//!
+//! CLASSIFY / FOLDIN responses are memoized in a shared LRU keyed by
+//! [`normalize_query`]; hits/misses and per-command latency histograms
+//! land in the [`MetricsRegistry`] and are visible through `STATS`.
 
-use super::metrics::MetricsRegistry;
+use super::cache::LruCache;
+use super::metrics::{Counter, Gauge, Histogram, MetricsRegistry};
 use super::model::TopicModel;
+use super::pool::ThreadPool;
 use crate::Result;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-pub struct TopicServer {
-    addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    join: Option<JoinHandle<()>>,
+/// Upper bound on `BATCH <n>` so one line cannot pin a worker forever.
+pub const MAX_BATCH: usize = 256;
+
+/// Reject lines longer than this (a connection streaming garbage without
+/// a newline would otherwise grow the buffer unboundedly).
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// How often a blocked connection handler wakes to poll the stop flag.
+const READ_POLL: Duration = Duration::from_millis(50);
+
+/// Upper bound on a blocking response write: a client that stops reading
+/// gets its connection closed instead of pinning a worker (and blocking
+/// shutdown) forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Consecutive hard `accept` failures tolerated before the listener gives
+/// up. Transient errors (EMFILE under fd pressure, ECONNABORTED) must not
+/// kill the accept loop.
+const MAX_ACCEPT_ERRORS: u32 = 100;
+
+/// Serving knobs (`esnmf serve --serve-threads --cache-size`).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Connection-worker count = max simultaneously served connections.
+    pub threads: usize,
+    /// LRU entries for CLASSIFY/FOLDIN responses (0 disables caching).
+    pub cache_size: usize,
 }
 
-/// Handle one protocol line. Public for direct unit testing.
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            threads: 8,
+            cache_size: 1024,
+        }
+    }
+}
+
+/// The histogram labels, one per command plus the unknown-command bucket.
+const LATENCY_LABELS: [&str; 8] = [
+    "topics", "topterms", "classify", "foldin", "docs", "stats", "ping", "other",
+];
+
+/// Everything a connection handler needs, shared across the pool. The
+/// request-path metric handles (counters, per-command histograms) are
+/// resolved once here so [`respond`] never touches the registry's name
+/// maps — the hot path is lock-free except for the LRU itself.
+pub struct ServerState {
+    pub model: Arc<TopicModel>,
+    pub metrics: MetricsRegistry,
+    cache: Mutex<LruCache>,
+    cache_enabled: bool,
+    requests: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    /// parallel to [`LATENCY_LABELS`]
+    latency: Vec<Arc<Histogram>>,
+}
+
+impl ServerState {
+    pub fn new(model: Arc<TopicModel>, metrics: MetricsRegistry, cache_size: usize) -> Self {
+        let latency = LATENCY_LABELS
+            .iter()
+            .map(|l| metrics.histogram(&format!("server.latency.{l}")))
+            .collect();
+        ServerState {
+            model,
+            requests: metrics.counter("server.requests"),
+            cache_hits: metrics.counter("server.cache.hits"),
+            cache_misses: metrics.counter("server.cache.misses"),
+            latency,
+            metrics,
+            cache: Mutex::new(LruCache::new(cache_size)),
+            cache_enabled: cache_size > 0,
+        }
+    }
+
+    /// Current number of cached responses (for tests / introspection).
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Canonical cache key for the cacheable commands (CLASSIFY / FOLDIN):
+/// command uppercased, arguments lowercased and sorted — both commands
+/// are order-independent sums over their arguments, so permutations of
+/// one bag of words share an entry. `None` = not cacheable.
+pub fn normalize_query(line: &str) -> Option<String> {
+    let mut parts = line.split_whitespace();
+    let cmd = parts.next()?.to_ascii_uppercase();
+    if cmd != "CLASSIFY" && cmd != "FOLDIN" {
+        return None;
+    }
+    let mut args: Vec<String> = parts.map(|t| t.to_lowercase()).collect();
+    args.sort_unstable();
+    Some(format!("{cmd} {}", args.join(" ")))
+}
+
+/// Index into [`LATENCY_LABELS`] for a command line.
+fn latency_label_idx(line: &str) -> usize {
+    let cmd = line.split_whitespace().next().unwrap_or("");
+    LATENCY_LABELS
+        .iter()
+        .position(|l| cmd.eq_ignore_ascii_case(l))
+        .unwrap_or(LATENCY_LABELS.len() - 1)
+}
+
+/// Strictly parse `<topic> [n]`: malformed numerics, `n = 0`, trailing
+/// garbage, and out-of-range topics all answer ERR (never a default).
+fn parse_topic_n(
+    parts: &mut std::str::SplitWhitespace,
+    usage: &str,
+    k: usize,
+) -> std::result::Result<(usize, usize), String> {
+    let topic = match parts.next() {
+        None => return Err(format!("ERR usage: {usage}")),
+        Some(tok) => match tok.parse::<usize>() {
+            Ok(t) => t,
+            Err(_) => return Err(format!("ERR bad topic {tok:?} (usage: {usage})")),
+        },
+    };
+    let n = match parts.next() {
+        None => 5,
+        Some(tok) => match tok.parse::<usize>() {
+            Ok(0) => return Err(format!("ERR n must be >= 1 (usage: {usage})")),
+            Ok(n) => n,
+            Err(_) => return Err(format!("ERR bad count {tok:?} (usage: {usage})")),
+        },
+    };
+    if parts.next().is_some() {
+        return Err(format!("ERR trailing arguments (usage: {usage})"));
+    }
+    if topic >= k {
+        return Err(format!("ERR topic {topic} out of range (k={k})"));
+    }
+    Ok((topic, n))
+}
+
+/// Handle one protocol line (no caching, no framing — see [`respond`]).
+/// Public for direct unit testing.
 pub fn handle_command(model: &TopicModel, metrics: &MetricsRegistry, line: &str) -> String {
     let mut parts = line.split_whitespace();
     let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
     match cmd.as_str() {
         "TOPICS" => format!("OK k={}", model.k()),
         "TOPTERMS" => {
-            let topic: usize = match parts.next().and_then(|s| s.parse().ok()) {
-                Some(t) => t,
-                None => return "ERR usage: TOPTERMS <topic> <n>".into(),
+            let (topic, n) = match parse_topic_n(&mut parts, "TOPTERMS <topic> [n]", model.k()) {
+                Ok(t) => t,
+                Err(e) => return e,
             };
-            let n: usize = parts.next().and_then(|s| s.parse().ok()).unwrap_or(5);
-            if topic >= model.k() {
-                return format!("ERR topic {topic} out of range (k={})", model.k());
-            }
             let terms = model.topic_terms(topic, n);
             let body: Vec<String> = terms
                 .iter()
@@ -63,15 +215,34 @@ pub fn handle_command(model: &TopicModel, metrics: &MetricsRegistry, line: &str)
                 .collect();
             format!("OK {}", body.join(" "))
         }
-        "DOCS" => {
-            let topic: usize = match parts.next().and_then(|s| s.parse().ok()) {
-                Some(t) => t,
-                None => return "ERR usage: DOCS <topic> <n>".into(),
-            };
-            let n: usize = parts.next().and_then(|s| s.parse().ok()).unwrap_or(5);
-            if topic >= model.k() {
-                return format!("ERR topic {topic} out of range (k={})", model.k());
+        "FOLDIN" => {
+            const USAGE: &str = "ERR usage: FOLDIN <word:count> ...";
+            let mut doc: Vec<(&str, f32)> = Vec::new();
+            for tok in parts {
+                let Some((word, count)) = tok.rsplit_once(':') else {
+                    return format!("{USAGE} (bad pair {tok:?})");
+                };
+                if word.is_empty() {
+                    return format!("{USAGE} (bad pair {tok:?})");
+                }
+                match count.parse::<f32>() {
+                    Ok(c) if c.is_finite() && c > 0.0 => doc.push((word, c)),
+                    _ => return format!("{USAGE} (bad count {count:?} in {tok:?})"),
+                }
             }
+            if doc.is_empty() {
+                return USAGE.into();
+            }
+            let ranked = model.fold_in(&doc);
+            let mut body = vec![format!("nnz={}", ranked.len())];
+            body.extend(ranked.iter().map(|(t, w)| format!("topic:{t}:{w:.4}")));
+            format!("OK {}", body.join(" "))
+        }
+        "DOCS" => {
+            let (topic, n) = match parse_topic_n(&mut parts, "DOCS <topic> [n]", model.k()) {
+                Ok(t) => t,
+                Err(e) => return e,
+            };
             let docs = model.topic_documents(topic, n);
             let body: Vec<String> =
                 docs.iter().map(|(d, w)| format!("{d}:{w:.4}")).collect();
@@ -79,33 +250,232 @@ pub fn handle_command(model: &TopicModel, metrics: &MetricsRegistry, line: &str)
         }
         "STATS" => format!("OK {}", metrics.format()),
         "PING" => "OK pong".into(),
+        // connection control never reaches this handler on its own line;
+        // inside a BATCH body it is rejected so the response count holds
+        "QUIT" => "ERR QUIT not allowed inside BATCH".into(),
+        "BATCH" => "ERR BATCH cannot be nested".into(),
         "" => "ERR empty command".into(),
         other => format!("ERR unknown command {other:?}"),
     }
 }
 
-fn serve_conn(stream: TcpStream, model: Arc<TopicModel>, metrics: MetricsRegistry) {
+/// Handle one line through the full request path: request counter, LRU
+/// cache for CLASSIFY/FOLDIN (hit/miss counters), and the per-command
+/// latency histogram. Public so tests can drive the exact serving path
+/// without a socket.
+pub fn respond(state: &ServerState, line: &str) -> String {
+    let start = Instant::now();
+    let line = line.trim();
+    state.requests.inc();
+    // normalization is pure overhead when the cache is off, so gate first
+    let key = if state.cache_enabled {
+        normalize_query(line)
+    } else {
+        None
+    };
+    let response = match key {
+        Some(key) => {
+            let cached = state.cache.lock().unwrap().get(&key);
+            match cached {
+                Some(hit) => {
+                    state.cache_hits.inc();
+                    hit
+                }
+                None => {
+                    state.cache_misses.inc();
+                    let fresh = handle_command(&state.model, &state.metrics, line);
+                    // never cache ERR: malformed lines must not be able to
+                    // evict legitimate entries
+                    if fresh.starts_with("OK") {
+                        state.cache.lock().unwrap().insert(key, fresh.clone());
+                    }
+                    fresh
+                }
+            }
+        }
+        None => handle_command(&state.model, &state.metrics, line),
+    };
+    state.latency[latency_label_idx(line)].observe(start.elapsed());
+    response
+}
+
+fn parse_batch_n(tok: Option<&str>, extra: Option<&str>) -> std::result::Result<usize, String> {
+    if extra.is_some() {
+        return Err(format!("ERR trailing arguments (usage: BATCH <n>, 1..={MAX_BATCH})"));
+    }
+    match tok.and_then(|s| s.parse::<usize>().ok()) {
+        Some(n) if (1..=MAX_BATCH).contains(&n) => Ok(n),
+        _ => Err(format!("ERR usage: BATCH <n> (1..={MAX_BATCH})")),
+    }
+}
+
+/// Minimal buffered line reader that survives read timeouts: a partial
+/// line stays buffered across `WouldBlock`/`TimedOut`, so the connection
+/// loop can poll the stop flag between read attempts. (`BufReader` makes
+/// no such guarantee for `read_line` under errors.)
+struct LineReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl<R: Read> LineReader<R> {
+    fn new(inner: R) -> Self {
+        LineReader {
+            inner,
+            buf: Vec::new(),
+            start: 0,
+        }
+    }
+
+    /// Next newline-terminated line without the terminator (a trailing
+    /// `\r` is stripped). `Ok(None)` = clean EOF; timeouts bubble up as
+    /// errors with any partial line preserved for the next call.
+    fn read_line(&mut self) -> std::io::Result<Option<String>> {
+        loop {
+            if let Some(pos) = self.buf[self.start..].iter().position(|&b| b == b'\n') {
+                let end = self.start + pos;
+                let mut slice = &self.buf[self.start..end];
+                if slice.last() == Some(&b'\r') {
+                    slice = &slice[..slice.len() - 1];
+                }
+                let line = String::from_utf8_lossy(slice).into_owned();
+                self.start = end + 1;
+                if self.start >= self.buf.len() {
+                    self.buf.clear();
+                    self.start = 0;
+                }
+                return Ok(Some(line));
+            }
+            if self.start > 0 {
+                self.buf.drain(..self.start);
+                self.start = 0;
+            }
+            if self.buf.len() > MAX_LINE_BYTES {
+                return Err(std::io::Error::new(
+                    ErrorKind::InvalidData,
+                    "request line too long",
+                ));
+            }
+            let mut chunk = [0u8; 4096];
+            match self.inner.read(&mut chunk) {
+                Ok(0) => {
+                    if self.buf.is_empty() {
+                        return Ok(None);
+                    }
+                    // final unterminated line before EOF
+                    let mut slice = &self.buf[..];
+                    if slice.last() == Some(&b'\r') {
+                        slice = &slice[..slice.len() - 1];
+                    }
+                    let line = String::from_utf8_lossy(slice).into_owned();
+                    self.buf.clear();
+                    return Ok(Some(line));
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Decrements the active-connections gauge on scope exit — including an
+/// unwind out of the handler, so a panicking connection cannot leak the
+/// gauge.
+struct ActiveGuard(Arc<Gauge>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.add(-1);
+    }
+}
+
+fn serve_conn(stream: TcpStream, state: Arc<ServerState>, stop: Arc<AtomicBool>) {
     // line-oriented request/response: Nagle+delayed-ACK would add ~40 ms
     // per round trip otherwise
     let _ = stream.set_nodelay(true);
+    // short read timeout = the stop-flag poll interval for graceful drain
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    // bounded writes: a client that never reads cannot pin this worker
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let peer = stream.peer_addr().ok();
-    let reader = BufReader::new(match stream.try_clone() {
+    let mut reader = LineReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     });
     let mut writer = stream;
-    let requests = metrics.counter("server.requests");
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
+    state.metrics.counter("server.connections.total").inc();
+    let active = state.metrics.gauge("server.connections.active");
+    active.add(1);
+    let _active = ActiveGuard(active);
+
+    'conn: loop {
+        let line = loop {
+            if stop.load(Ordering::Relaxed) {
+                break 'conn;
+            }
+            match reader.read_line() {
+                Ok(Some(l)) => break l,
+                Ok(None) => break 'conn,
+                Err(e) if is_timeout(&e) => continue,
+                Err(_) => break 'conn,
+            }
         };
-        if line.trim().eq_ignore_ascii_case("QUIT") {
+        let line = line.trim();
+        if line.is_empty() {
+            continue; // blank lines are ignored, not answered
+        }
+        if line.eq_ignore_ascii_case("QUIT") {
             let _ = writeln!(writer, "OK bye");
             break;
         }
-        requests.inc();
-        let response = handle_command(&model, &metrics, &line);
+        let mut parts = line.split_whitespace();
+        let first = parts.next().unwrap_or("");
+        if first.eq_ignore_ascii_case("BATCH") {
+            match parse_batch_n(parts.next(), parts.next()) {
+                Err(e) => {
+                    if writeln!(writer, "{e}").is_err() {
+                        break;
+                    }
+                }
+                Ok(n) => {
+                    // collect the n pipelined lines; a shutdown mid-batch
+                    // drops the connection rather than waiting on a slow
+                    // client forever
+                    let mut queued = Vec::with_capacity(n);
+                    while queued.len() < n {
+                        if stop.load(Ordering::Relaxed) {
+                            break 'conn;
+                        }
+                        match reader.read_line() {
+                            Ok(Some(l)) => queued.push(l),
+                            Ok(None) => break 'conn,
+                            Err(e) if is_timeout(&e) => continue,
+                            Err(_) => break 'conn,
+                        }
+                    }
+                    // answer in order, as one write (that is the whole
+                    // point of the framing: one round trip); every body
+                    // line — QUIT and nested BATCH included — goes
+                    // through respond(), so the request/latency metrics
+                    // count every answered line exactly once
+                    let mut out = format!("OK batch={n}\n");
+                    for q in &queued {
+                        out.push_str(&respond(&state, q));
+                        out.push('\n');
+                    }
+                    if writer.write_all(out.as_bytes()).is_err() {
+                        break;
+                    }
+                }
+            }
+            continue;
+        }
+        let response = respond(&state, line);
         if writeln!(writer, "{response}").is_err() {
             break;
         }
@@ -113,38 +483,84 @@ fn serve_conn(stream: TcpStream, model: Arc<TopicModel>, metrics: MetricsRegistr
     crate::log_debug!("server", "connection from {peer:?} closed");
 }
 
+pub struct TopicServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
 impl TopicServer {
     /// Bind and start serving on `addr` (e.g. "127.0.0.1:0" for an
-    /// ephemeral port). Connections are handled on spawned threads.
-    pub fn start(addr: &str, model: Arc<TopicModel>, metrics: MetricsRegistry) -> Result<TopicServer> {
+    /// ephemeral port) with default [`ServeOptions`].
+    pub fn start(
+        addr: &str,
+        model: Arc<TopicModel>,
+        metrics: MetricsRegistry,
+    ) -> Result<TopicServer> {
+        TopicServer::start_with(addr, model, metrics, ServeOptions::default())
+    }
+
+    /// As [`TopicServer::start`] with explicit serving knobs. Connections
+    /// are dispatched onto a fixed worker pool of `opts.threads`
+    /// handlers; accepts beyond that queue until a worker frees.
+    pub fn start_with(
+        addr: &str,
+        model: Arc<TopicModel>,
+        metrics: MetricsRegistry,
+        opts: ServeOptions,
+    ) -> Result<TopicServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let state = Arc::new(ServerState::new(model, metrics, opts.cache_size));
+        let pool_size = opts.threads.max(1);
         let join = std::thread::Builder::new()
             .name("esnmf-server".into())
             .spawn(move || {
-                let mut conns: Vec<JoinHandle<()>> = Vec::new();
+                let pool = ThreadPool::named(pool_size, "esnmf-serve");
+                let mut accept_errors = 0u32;
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            accept_errors = 0;
                             let _ = stream.set_nonblocking(false);
-                            let model = Arc::clone(&model);
-                            let metrics = metrics.clone();
-                            conns.push(std::thread::spawn(move || {
-                                serve_conn(stream, model, metrics)
-                            }));
+                            let state = Arc::clone(&state);
+                            let stop = Arc::clone(&stop2);
+                            pool.execute(move || {
+                                // isolate handler panics: a poisoned
+                                // connection must cost one connection,
+                                // not one pool worker forever
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(move || {
+                                        serve_conn(stream, state, stop)
+                                    }),
+                                );
+                            });
                         }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
                             std::thread::sleep(std::time::Duration::from_millis(10));
                         }
-                        Err(_) => break,
+                        Err(e) => {
+                            // transient failures (EMFILE under fd pressure,
+                            // ECONNABORTED) must not kill the listener
+                            accept_errors += 1;
+                            if accept_errors >= MAX_ACCEPT_ERRORS {
+                                crate::log_warn!(
+                                    "server",
+                                    "accept failing persistently, giving up: {e}"
+                                );
+                                break;
+                            }
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
                     }
                 }
-                for c in conns {
-                    let _ = c.join();
-                }
+                // graceful drain: dropping the pool joins every worker;
+                // in-flight requests finish, then each handler sees the
+                // stop flag within READ_POLL and closes its connection
+                drop(pool);
             })?;
         Ok(TopicServer {
             addr: local,
@@ -157,6 +573,7 @@ impl TopicServer {
         self.addr
     }
 
+    /// Stop accepting, drain in-flight requests, and join every worker.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(j) = self.join.take() {
@@ -187,6 +604,10 @@ mod tests {
             v,
             vec!["coffee".into(), "crop".into(), "electrons".into()],
         )
+    }
+
+    fn state(cache_size: usize) -> ServerState {
+        ServerState::new(Arc::new(model()), MetricsRegistry::new(), cache_size)
     }
 
     #[test]
@@ -226,5 +647,173 @@ mod tests {
         assert_eq!(handle_command(&m, &reg, "PING"), "OK pong");
     }
 
-    // Full TCP round-trip lives in rust/tests/integration_server.rs.
+    #[test]
+    fn malformed_numerics_answer_err_not_defaults() {
+        let m = model();
+        let reg = MetricsRegistry::new();
+        // previously `TOPTERMS 0 abc` silently defaulted n to 5
+        for bad in [
+            "TOPTERMS 0 abc",
+            "TOPTERMS 0 0",
+            "TOPTERMS -1 2",
+            "TOPTERMS 0 2 junk",
+            "DOCS 0 abc",
+            "DOCS 0 0",
+            "DOCS 1.5 2",
+            "DOCS 0 2 junk",
+        ] {
+            let r = handle_command(&m, &reg, bad);
+            assert!(r.starts_with("ERR"), "{bad:?} answered {r:?}");
+        }
+        // n stays optional with a documented default
+        assert!(handle_command(&m, &reg, "TOPTERMS 0").starts_with("OK"));
+        assert!(handle_command(&m, &reg, "DOCS 0").starts_with("OK"));
+    }
+
+    #[test]
+    fn foldin_command_output_and_errors() {
+        let m = model();
+        let reg = MetricsRegistry::new();
+        let r = handle_command(&m, &reg, "FOLDIN coffee:2 crop:1");
+        assert!(r.starts_with("OK nnz="), "{r}");
+        assert!(r.contains("topic:0:"), "{r}");
+        // unknown-only bags fold to the empty row, not an error
+        assert_eq!(handle_command(&m, &reg, "FOLDIN zzzz:3"), "OK nnz=0");
+        for bad in [
+            "FOLDIN",
+            "FOLDIN coffee",
+            "FOLDIN :3",
+            "FOLDIN coffee:abc",
+            "FOLDIN coffee:-1",
+            "FOLDIN coffee:0",
+            "FOLDIN coffee:inf",
+        ] {
+            let r = handle_command(&m, &reg, bad);
+            assert!(r.starts_with("ERR"), "{bad:?} answered {r:?}");
+        }
+    }
+
+    #[test]
+    fn normalize_query_canonicalizes() {
+        assert_eq!(
+            normalize_query("classify Crop  COFFEE"),
+            Some("CLASSIFY coffee crop".into())
+        );
+        assert_eq!(
+            normalize_query("FOLDIN b:2 a:1"),
+            Some("FOLDIN a:1 b:2".into())
+        );
+        assert_eq!(normalize_query("TOPICS"), None);
+        assert_eq!(normalize_query("STATS"), None);
+        assert_eq!(normalize_query(""), None);
+    }
+
+    #[test]
+    fn respond_caches_classify_and_counts() {
+        let s = state(16);
+        let a = respond(&s, "CLASSIFY coffee crop");
+        let b = respond(&s, "classify CROP coffee"); // same bag, permuted
+        assert_eq!(a, b);
+        assert_eq!(s.metrics.counter("server.cache.misses").get(), 1);
+        assert_eq!(s.metrics.counter("server.cache.hits").get(), 1);
+        assert_eq!(s.metrics.counter("server.requests").get(), 2);
+        assert_eq!(s.cache_len(), 1);
+        // non-cacheable commands never touch the cache
+        let _ = respond(&s, "TOPICS");
+        assert_eq!(s.metrics.counter("server.cache.misses").get(), 1);
+        assert_eq!(s.cache_len(), 1);
+        // latency histograms appear per command label
+        assert_eq!(s.metrics.histogram("server.latency.classify").count(), 2);
+        assert_eq!(s.metrics.histogram("server.latency.topics").count(), 1);
+    }
+
+    #[test]
+    fn err_responses_are_never_cached() {
+        let s = state(16);
+        let a = respond(&s, "FOLDIN coffee:abc");
+        assert!(a.starts_with("ERR"), "{a}");
+        assert_eq!(s.cache_len(), 0, "malformed lines must not occupy the LRU");
+        // still accounted as a (missed) cacheable request
+        assert_eq!(s.metrics.counter("server.cache.misses").get(), 1);
+        let b = respond(&s, "FOLDIN coffee:abc");
+        assert_eq!(a, b);
+        assert_eq!(s.metrics.counter("server.cache.misses").get(), 2);
+        assert_eq!(s.metrics.counter("server.cache.hits").get(), 0);
+    }
+
+    #[test]
+    fn respond_with_cache_disabled_counts_nothing() {
+        let s = state(0);
+        let _ = respond(&s, "CLASSIFY coffee");
+        let _ = respond(&s, "CLASSIFY coffee");
+        assert_eq!(s.metrics.counter("server.cache.hits").get(), 0);
+        assert_eq!(s.metrics.counter("server.cache.misses").get(), 0);
+        assert_eq!(s.metrics.counter("server.requests").get(), 2);
+    }
+
+    #[test]
+    fn batch_header_parses_strictly() {
+        assert_eq!(parse_batch_n(Some("3"), None), Ok(3));
+        assert!(parse_batch_n(Some("0"), None).is_err());
+        assert!(parse_batch_n(Some("abc"), None).is_err());
+        assert!(parse_batch_n(None, None).is_err());
+        assert!(parse_batch_n(Some("3"), Some("x")).is_err());
+        let too_big = (MAX_BATCH + 1).to_string();
+        assert!(parse_batch_n(Some(too_big.as_str()), None).is_err());
+        let max = MAX_BATCH.to_string();
+        assert_eq!(parse_batch_n(Some(max.as_str()), None), Ok(MAX_BATCH));
+    }
+
+    #[test]
+    fn line_reader_splits_and_survives_partial_input() {
+        struct Chunks(Vec<Vec<u8>>);
+        impl Read for Chunks {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if self.0.is_empty() {
+                    return Ok(0);
+                }
+                let chunk = self.0.remove(0);
+                out[..chunk.len()].copy_from_slice(&chunk);
+                Ok(chunk.len())
+            }
+        }
+        let mut r = LineReader::new(Chunks(vec![
+            b"PI".to_vec(),
+            b"NG\r\nTOP".to_vec(),
+            b"ICS\nlast".to_vec(),
+        ]));
+        assert_eq!(r.read_line().unwrap(), Some("PING".into()));
+        assert_eq!(r.read_line().unwrap(), Some("TOPICS".into()));
+        assert_eq!(r.read_line().unwrap(), Some("last".into()));
+        assert_eq!(r.read_line().unwrap(), None);
+    }
+
+    #[test]
+    fn line_reader_preserves_partial_line_across_timeouts() {
+        struct TimeoutThen(Vec<Option<Vec<u8>>>);
+        impl Read for TimeoutThen {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if self.0.is_empty() {
+                    return Ok(0);
+                }
+                match self.0.remove(0) {
+                    None => Err(std::io::Error::new(ErrorKind::WouldBlock, "timeout")),
+                    Some(chunk) => {
+                        out[..chunk.len()].copy_from_slice(&chunk);
+                        Ok(chunk.len())
+                    }
+                }
+            }
+        }
+        let mut r = LineReader::new(TimeoutThen(vec![
+            Some(b"STA".to_vec()),
+            None,
+            Some(b"TS\n".to_vec()),
+        ]));
+        assert!(is_timeout(&r.read_line().unwrap_err()));
+        assert_eq!(r.read_line().unwrap(), Some("STATS".into()));
+    }
+
+    // Full TCP round-trips (concurrency, BATCH, FOLDIN, shutdown) live in
+    // rust/tests/integration_server.rs.
 }

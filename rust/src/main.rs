@@ -36,7 +36,13 @@ USAGE:
   auto = all cores). Results are bit-identical at any thread count.
   esnmf experiment <fig1|fig2|fig3|table1|fig4|fig5|fig6|fig7|fig8|fig9|all>
                    [--scale ...] [--seed N] [--fast] [--out results/]
-  esnmf serve      [--addr 127.0.0.1:7878] [factorize flags]
+  esnmf serve      [--addr 127.0.0.1:7878] [--serve-threads N|auto]
+                   [--cache-size N] [--foldin-t N] [factorize flags]
+
+  --serve-threads bounds the simultaneously served connections (default 8),
+  --cache-size sizes the CLASSIFY/FOLDIN response LRU (0 disables), and
+  --foldin-t caps the nonzeros of folded-in document rows (defaults to
+  --t-v when set). Wire protocol: rust/README.md.
   esnmf gen-corpus [--corpus ...] [--scale ...] [--seed N] --out <dir>
   esnmf artifacts  [--dir artifacts/]
   esnmf help
@@ -133,13 +139,8 @@ fn build_run_config(args: &mut Args) -> Result<RunConfig> {
     if let Some(v) = args.opt_parse::<f32>("tau-v").map_err(anyhow::Error::msg)? {
         cfg.tau_v = Some(v);
     }
-    if let Some(v) = args.opt_str("threads") {
-        cfg.threads = if v == "auto" {
-            0
-        } else {
-            v.parse::<usize>()
-                .map_err(|_| anyhow::anyhow!("invalid value {v:?} for --threads (N or auto)"))?
-        };
+    if let Some(v) = args.opt_threads("threads").map_err(anyhow::Error::msg)? {
+        cfg.threads = v;
     }
     Ok(cfg)
 }
@@ -275,15 +276,41 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
 
 fn cmd_serve(args: &mut Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7878");
-    let cfg = build_run_config(args)?;
+    let mut cfg = build_run_config(args)?;
+    if let Some(v) = args
+        .opt_threads("serve-threads")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.serve_threads = v;
+    }
+    if let Some(v) = args
+        .opt_parse::<usize>("cache-size")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.serve_cache = v;
+    }
+    if let Some(v) = args
+        .opt_parse::<usize>("foldin-t")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.foldin_t = Some(v);
+    }
     args.check_unknown().map_err(anyhow::Error::msg)?;
 
     let tdm = load_corpus(&cfg)?;
     let r = run_factorization(&cfg, &tdm)?;
-    let model = Arc::new(TopicModel::new(r.u, r.v, tdm.terms.clone()));
+    let model = Arc::new(
+        TopicModel::new(r.u, r.v, tdm.terms.clone()).with_foldin_budget(cfg.foldin_budget()),
+    );
     let metrics = MetricsRegistry::new();
-    let server = TopicServer::start(&addr, model, metrics)?;
-    println!("serving topic queries on {} (QUIT to close a session, Ctrl-C to stop)", server.addr());
+    let opts = cfg.serve_options();
+    let workers = opts.threads;
+    let cache = opts.cache_size;
+    let server = TopicServer::start_with(&addr, model, metrics, opts)?;
+    println!(
+        "serving topic queries on {} ({workers} connection workers, cache {cache} entries; QUIT closes a session, Ctrl-C stops)",
+        server.addr()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

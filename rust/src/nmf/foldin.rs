@@ -1,0 +1,169 @@
+//! Fold-in of unseen documents — Algorithm 2's V half-step specialized to
+//! one document at inference time.
+//!
+//! Given the frozen term factor `U`, projecting a new document `a`
+//! (a sparse bag-of-words column) onto topic space is the same
+//! one-factor-fixed non-negative least-squares step the training loop
+//! runs for every document row:
+//!
+//! ```text
+//! x = enforce_top_t( proj₊( aᵀ U (UᵀU + εI)⁻¹ ) )
+//! ```
+//!
+//! The (k, k) ridged Gram inverse depends only on `U`, so [`FoldIn`]
+//! computes it once at construction; each document then costs
+//! O(nnz(a)·k + k²), which is what makes fold-in servable at request
+//! rates. The enforcement operator is the same single-column top-t
+//! primitive the training loop uses ([`topk::enforce_top_t_vec`]), so a
+//! served model's fold-in rows obey the identical nonzero budget
+//! discipline as its stored `V` rows.
+
+use crate::dense::inverse_spd;
+use crate::sparse::{ops, topk, Csr, TieMode};
+
+/// A reusable single-document solver over a frozen `U`.
+#[derive(Clone, Debug)]
+pub struct FoldIn {
+    k: usize,
+    /// (UᵀU + εI)⁻¹, row-major (k, k)
+    g_inv: Vec<f32>,
+    /// per-document nonzero budget (None = unenforced)
+    pub t: Option<usize>,
+    pub tie: TieMode,
+}
+
+impl FoldIn {
+    /// Precompute the ridged Gram inverse of `u`. `t` caps the nonzeros
+    /// of every folded-in row (None leaves rows unenforced).
+    pub fn new(u: &Csr, t: Option<usize>, tie: TieMode) -> FoldIn {
+        let g = ops::gram(u);
+        let g_inv = inverse_spd(&g, u.cols);
+        FoldIn {
+            k: u.cols,
+            g_inv,
+            t,
+            tie,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// One enforced-sparse half-step for a single document. `doc` is the
+    /// sparse bag-of-words as (term row id, count) pairs; out-of-range
+    /// term ids and non-positive counts are ignored. Returns the dense
+    /// length-k topic row (nonnegative, at most `t` nonzeros when
+    /// enforced).
+    pub fn solve(&self, u: &Csr, doc: &[(usize, f32)]) -> Vec<f32> {
+        let k = self.k;
+        debug_assert_eq!(u.cols, k, "U changed shape under the solver");
+        // b = aᵀ U — same accumulation order as ops::atb's sparse path
+        let mut b = vec![0.0f32; k];
+        for &(term, count) in doc {
+            if term >= u.rows || !count.is_finite() || count <= 0.0 {
+                continue;
+            }
+            let (idx, val) = u.row(term);
+            for (&c, &uv) in idx.iter().zip(val) {
+                b[c as usize] += count * uv;
+            }
+        }
+        // x = b · G⁻¹ (the 1-row form of RowBlock::matmul_small)
+        let mut x = vec![0.0f32; k];
+        for (i, &bi) in b.iter().enumerate() {
+            if bi != 0.0 {
+                let g_row = &self.g_inv[i * k..(i + 1) * k];
+                for (xj, &gij) in x.iter_mut().zip(g_row) {
+                    *xj += bi * gij;
+                }
+            }
+        }
+        for v in &mut x {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        if let Some(t) = self.t {
+            topk::enforce_top_t_vec(&mut x, t, self.tie);
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmf::{factorize, half_step_v, MemoryTracker, NmfOptions};
+    use crate::text::TdmBuilder;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn tiny_tdm() -> crate::text::TermDocMatrix {
+        let mut b = TdmBuilder::new();
+        for _ in 0..6 {
+            b.add_text("coffee crop quotas coffee brazil crop", Some("econ"));
+            b.add_text("electrons atoms hydrogen electrons atoms", Some("sci"));
+        }
+        b.freeze()
+    }
+
+    #[test]
+    fn foldin_matches_unenforced_half_step_rows() {
+        // fold-in of every training column must reproduce the same
+        // algebra half_step_v runs over the whole matrix
+        let tdm = tiny_tdm();
+        let opts = NmfOptions::new(2).with_iters(10).with_seed(3).with_threads(1);
+        let r = factorize(&tdm, &opts);
+        let mut mem = MemoryTracker::new();
+        let v_full = half_step_v(&tdm.a_csc, &r.u, &opts, &mut mem);
+        let solver = FoldIn::new(&r.u, None, TieMode::KeepTies);
+        for d in 0..tdm.n_docs() {
+            let (idx, val) = tdm.a_csc.col(d);
+            let doc: Vec<(usize, f32)> = idx
+                .iter()
+                .zip(val)
+                .map(|(&t, &c)| (t as usize, c))
+                .collect();
+            let x = solver.solve(&r.u, &doc);
+            for (c, &xc) in x.iter().enumerate() {
+                let want = v_full.get(d, c);
+                assert!(
+                    (xc - want).abs() <= 1e-5 * want.abs().max(1.0),
+                    "doc {d} topic {c}: fold-in {xc} vs half-step {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn budget_respected_on_random_bags() {
+        prop::check("foldin-topt-budget", 1400, 96, |rng: &mut Rng| {
+            let rows = rng.range(4, 40);
+            let k = rng.range(1, 8);
+            let dense = prop::gen_sparse_dense(rng, rows, k, 0.5);
+            let u = Csr::from_dense(rows, k, &dense);
+            let t = rng.range(0, k + 2);
+            let solver = FoldIn::new(&u, Some(t), TieMode::Exact);
+            let n_words = rng.range(1, 12);
+            let doc: Vec<(usize, f32)> = (0..n_words)
+                .map(|_| (rng.below(rows + 2), rng.below(5) as f32))
+                .collect();
+            let x = solver.solve(&u, &doc);
+            assert_eq!(x.len(), k);
+            let nnz = x.iter().filter(|&&v| v > 0.0).count();
+            assert!(nnz <= t, "nnz {nnz} > budget {t}");
+            assert!(x.iter().all(|v| v.is_finite() && *v >= 0.0));
+        });
+    }
+
+    #[test]
+    fn empty_and_unknown_docs_fold_to_zero() {
+        let u = Csr::from_dense(3, 2, &[1.0, 0.0, 0.5, 0.5, 0.0, 1.0]);
+        let solver = FoldIn::new(&u, Some(1), TieMode::Exact);
+        assert!(solver.solve(&u, &[]).iter().all(|&v| v == 0.0));
+        // out-of-range ids and non-positive counts are ignored
+        let x = solver.solve(&u, &[(99, 1.0), (0, 0.0), (1, -3.0), (0, f32::NAN)]);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+}

@@ -9,15 +9,20 @@
 //!   chosen nonzero budget, the Fig. 6 knob).
 //! * [`convergence`] — relative residual and sparse-safe relative error.
 //! * [`memory`] — max-stored-nonzeros tracking (Fig. 6).
+//! * [`foldin`] — inference-time projection of unseen documents (one
+//!   enforced-sparse half-step against the frozen `U`, used by the topic
+//!   server's FOLDIN command).
 
 pub mod als;
 pub mod convergence;
+pub mod foldin;
 pub mod init;
 pub mod memory;
 pub mod options;
 pub mod sequential;
 
 pub use als::{factorize, half_step_u, half_step_v};
+pub use foldin::FoldIn;
 pub use convergence::{rel_error_sparse, rel_residual};
 pub use memory::MemoryTracker;
 pub use options::{NmfOptions, NmfResult, SparsityMode};

@@ -223,6 +223,44 @@ pub fn enforce_top_t_rowblock_par(rb: &mut RowBlock, t: usize, mode: TieMode, th
     }
 }
 
+/// Keep only the `t` largest *positive* entries of a single dense
+/// column/vector in place, zeroing the rest — the single-column form of
+/// the paper's enforcement operator. This is the inference-time entry
+/// point: fold-in ([`crate::nmf::foldin`]) applies it to the one projected
+/// row it produces per unseen document, with the same tie semantics as
+/// the training-time operators above.
+pub fn enforce_top_t_vec(vals: &mut [f32], t: usize, mode: TieMode) {
+    let mut positives: Vec<f32> = vals.iter().copied().filter(|&v| v > 0.0).collect();
+    if positives.len() <= t {
+        return;
+    }
+    let tau = nth_largest(&mut positives, t);
+    match mode {
+        TieMode::KeepTies => {
+            for v in vals.iter_mut() {
+                if *v < tau {
+                    *v = 0.0;
+                }
+            }
+        }
+        TieMode::Exact => {
+            let above = vals.iter().filter(|&&v| v > tau).count();
+            // tau is the t-th largest positive, so above ≤ t-1
+            let mut tie_budget = t - above;
+            for v in vals.iter_mut() {
+                if *v > tau {
+                    continue;
+                }
+                if *v == tau && tie_budget > 0 {
+                    tie_budget -= 1;
+                } else {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
 /// Per-column enforcement (§4 of the paper): keep the `t_per_col` largest
 /// entries of each column independently. Deliberately goes through a
 /// column gather — the same access-pattern penalty the paper reports for
@@ -523,6 +561,59 @@ mod tests {
                 assert_eq!(par, serial, "t={t} mode={mode:?} threads={threads}");
             }
         });
+    }
+
+    #[test]
+    fn vec_enforcement_matches_single_column_csr() {
+        // the single-column entry point is the same operator as per-column
+        // enforcement on a 1-column matrix — pin that, ties included
+        prop::check("vec-vs-per-column", 1100, 64, |rng: &mut Rng| {
+            let n = rng.range(1, 30);
+            let dense: Vec<f32> = (0..n)
+                .map(|_| {
+                    if rng.f64() < 0.3 {
+                        0.0
+                    } else if rng.f64() < 0.3 {
+                        (rng.below(4) as f32 + 1.0) * 0.5 // force ties
+                    } else {
+                        rng.abs_normal_f32() + 1e-4
+                    }
+                })
+                .collect();
+            let t = rng.range(0, n + 2);
+            let mode = if rng.below(2) == 0 {
+                TieMode::KeepTies
+            } else {
+                TieMode::Exact
+            };
+            let mut vec_form = dense.clone();
+            enforce_top_t_vec(&mut vec_form, t, mode);
+            let mut csr_form = Csr::from_dense(n, 1, &dense);
+            enforce_top_t_per_column(&mut csr_form, t, mode);
+            assert_eq!(
+                Csr::from_dense(n, 1, &vec_form),
+                csr_form,
+                "n={n} t={t} mode={mode:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn vec_enforcement_edges() {
+        // t = 0 clears, t ≥ positives is the identity, Exact caps exactly
+        let mut v = vec![1.0f32, 0.0, 3.0, 2.0];
+        enforce_top_t_vec(&mut v, 0, TieMode::Exact);
+        assert!(v.iter().all(|&x| x == 0.0));
+        let mut v = vec![1.0f32, 0.0, 3.0];
+        let before = v.clone();
+        enforce_top_t_vec(&mut v, 2, TieMode::KeepTies);
+        assert_eq!(v, before);
+        let mut v = vec![2.0f32, 2.0, 2.0, 1.0];
+        enforce_top_t_vec(&mut v, 2, TieMode::Exact);
+        assert_eq!(v.iter().filter(|&&x| x > 0.0).count(), 2);
+        let mut v = vec![2.0f32, 2.0, 2.0, 1.0];
+        enforce_top_t_vec(&mut v, 2, TieMode::KeepTies);
+        assert_eq!(v.iter().filter(|&&x| x > 0.0).count(), 3); // ties kept
     }
 
     #[test]

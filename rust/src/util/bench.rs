@@ -1,13 +1,24 @@
 //! A miniature benchmark harness (criterion is unavailable offline).
 //!
 //! Each `cargo bench` target builds a [`BenchSuite`], registers closures,
-//! and calls [`BenchSuite::run`], which warms up, measures a configurable
-//! number of timed samples, and prints a criterion-style summary line plus
-//! the paper-table rows the target exists to regenerate. Honors
-//! `ESNMF_BENCH_SAMPLES` and `ESNMF_BENCH_FAST=1` (CI smoke mode).
+//! and calls [`BenchSuite::bench`], which warms up, measures a
+//! configurable number of timed samples, and prints a criterion-style
+//! summary line plus the paper-table rows the target exists to
+//! regenerate. Environment knobs:
+//!
+//! * `ESNMF_BENCH_SAMPLES=N` — timed samples per bench (default 10).
+//! * `ESNMF_BENCH_FAST=1` — 2 samples, no warmup, tiny problem sizes.
+//! * `BENCH_SMOKE=1` — CI smoke mode: 1 sample, no warmup, forces tiny
+//!   sizes (implies fast mode), so every bench target doubles as a
+//!   can-it-still-run regression check.
+//! * `ESNMF_BENCH_JSON=<dir>` — on drop, each suite writes its results
+//!   as `<dir>/<slug-of-title>.json` (machine-readable; CI uploads these
+//!   as workflow artifacts).
 
+use super::json::Json;
 use super::stats;
 use super::timer::fmt_seconds;
+use std::collections::BTreeMap;
 use std::hint::black_box;
 use std::time::Instant;
 
@@ -40,8 +51,14 @@ pub struct BenchSuite {
     pub results: Vec<BenchResult>,
 }
 
+/// CI smoke mode: a single rep over tiny sizes (see the module docs).
+pub fn smoke_mode() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
 pub fn fast_mode() -> bool {
-    std::env::var("ESNMF_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+    smoke_mode()
+        || std::env::var("ESNMF_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
 }
 
 impl BenchSuite {
@@ -51,7 +68,10 @@ impl BenchSuite {
             .and_then(|v| v.parse().ok())
             .unwrap_or(10);
         let mut warmup = 2;
-        if fast_mode() {
+        if smoke_mode() {
+            samples = 1;
+            warmup = 0;
+        } else if fast_mode() {
             samples = 2;
             warmup = 0;
         }
@@ -92,6 +112,84 @@ impl BenchSuite {
     pub fn row(&self, cells: &[String]) {
         println!("{}", cells.join(" | "));
     }
+
+    /// Machine-readable form of every result in this suite.
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut obj = BTreeMap::new();
+                obj.insert("name".to_string(), Json::Str(r.name.clone()));
+                obj.insert("median_s".to_string(), Json::Num(r.median_s()));
+                obj.insert(
+                    "mean_s".to_string(),
+                    Json::Num(stats::mean(&r.samples_s)),
+                );
+                obj.insert(
+                    "samples_s".to_string(),
+                    Json::Arr(r.samples_s.iter().map(|&s| Json::Num(s)).collect()),
+                );
+                Json::Obj(obj)
+            })
+            .collect();
+        let mut obj = BTreeMap::new();
+        obj.insert("title".to_string(), Json::Str(self.title.clone()));
+        obj.insert("samples".to_string(), Json::Num(self.samples as f64));
+        obj.insert(
+            "smoke".to_string(),
+            Json::Bool(smoke_mode()),
+        );
+        obj.insert("results".to_string(), Json::Arr(results));
+        Json::Obj(obj)
+    }
+
+    /// Filesystem-safe slug of the suite title.
+    pub fn slug(&self) -> String {
+        let mut out = String::with_capacity(self.title.len());
+        let mut last_sep = true; // trim leading separators
+        for c in self.title.chars() {
+            if c.is_ascii_alphanumeric() {
+                out.push(c.to_ascii_lowercase());
+                last_sep = false;
+            } else if !last_sep {
+                out.push('_');
+                last_sep = true;
+            }
+        }
+        while out.ends_with('_') {
+            out.pop();
+        }
+        if out.is_empty() {
+            "bench".to_string()
+        } else {
+            out
+        }
+    }
+
+    fn emit_json(&self) {
+        let Ok(dir) = std::env::var("ESNMF_BENCH_JSON") else {
+            return;
+        };
+        if dir.is_empty() || self.results.is_empty() {
+            return;
+        }
+        if std::fs::create_dir_all(&dir).is_err() {
+            eprintln!("bench: cannot create {dir}; skipping JSON emission");
+            return;
+        }
+        let path = std::path::Path::new(&dir).join(format!("{}.json", self.slug()));
+        match std::fs::write(&path, self.to_json().to_string()) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("bench: writing {}: {e}", path.display()),
+        }
+    }
+}
+
+impl Drop for BenchSuite {
+    fn drop(&mut self) {
+        self.emit_json();
+    }
 }
 
 #[cfg(test)]
@@ -103,8 +201,46 @@ mod tests {
         std::env::set_var("ESNMF_BENCH_FAST", "1");
         let mut suite = BenchSuite::new("selftest");
         let r = suite.bench("noop-ish", || (0..1000u64).sum::<u64>());
-        assert_eq!(r.samples_s.len(), 2);
+        assert!(!r.samples_s.is_empty() && r.samples_s.len() <= 2);
         assert!(r.median_s() >= 0.0);
         std::env::remove_var("ESNMF_BENCH_FAST");
+    }
+
+    #[test]
+    fn slug_is_filesystem_safe() {
+        let mut s = BenchSuite::new("micro: sparse kernels");
+        assert_eq!(s.slug(), "micro_sparse_kernels");
+        s.title = "  --weird?? title!  ".into();
+        assert_eq!(s.slug(), "weird_title");
+        s.title = "???".into();
+        assert_eq!(s.slug(), "bench");
+        s.results.clear(); // nothing to emit on drop
+    }
+
+    #[test]
+    fn json_shape_round_trips() {
+        let mut suite = BenchSuite::new("jsontest");
+        suite.results.push(BenchResult {
+            name: "a".into(),
+            samples_s: vec![0.25, 0.5, 0.75],
+        });
+        let j = suite.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("title").and_then(Json::as_str), Some("jsontest"));
+        let results = parsed.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").and_then(Json::as_str), Some("a"));
+        assert_eq!(
+            results[0].get("median_s").and_then(Json::as_f64),
+            Some(0.5)
+        );
+        assert_eq!(
+            results[0]
+                .get("samples_s")
+                .and_then(Json::as_arr)
+                .map(|a| a.len()),
+            Some(3)
+        );
+        suite.results.clear(); // keep the drop hook from writing files
     }
 }

@@ -1,10 +1,16 @@
-//! TCP round-trip test of the topic-query server.
+//! TCP round-trip tests of the concurrent topic-query server: protocol
+//! correctness, BATCH framing, FOLDIN inference, cache/metrics
+//! accounting, ≥8 simultaneous connections, and graceful shutdown.
 
-use esnmf::coordinator::{MetricsRegistry, TopicModel, TopicServer};
+use esnmf::coordinator::{MetricsRegistry, ServeOptions, TopicModel, TopicServer};
 use esnmf::sparse::Csr;
-use std::io::{BufRead, BufReader, Write};
+use esnmf::text::TdmBuilder;
+use esnmf::util::prop;
+use esnmf::util::rng::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
 
 fn model() -> Arc<TopicModel> {
     let u = Csr::from_dense(4, 2, &[
@@ -33,13 +39,17 @@ fn query(reader: &mut impl BufRead, writer: &mut impl Write, q: &str) -> String 
     line.trim_end().to_string()
 }
 
+fn connect(addr: std::net::SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (reader, stream)
+}
+
 #[test]
 fn tcp_protocol_roundtrip() {
     let metrics = MetricsRegistry::new();
     let server = TopicServer::start("127.0.0.1:0", model(), metrics.clone()).unwrap();
-    let stream = TcpStream::connect(server.addr()).unwrap();
-    let mut reader = BufReader::new(stream.try_clone().unwrap());
-    let mut writer = stream;
+    let (mut reader, mut writer) = connect(server.addr());
 
     assert_eq!(query(&mut reader, &mut writer, "TOPICS"), "OK k=2");
     assert!(query(&mut reader, &mut writer, "TOPTERMS 0 2").contains("coffee"));
@@ -48,26 +58,378 @@ fn tcp_protocol_roundtrip() {
     assert!(query(&mut reader, &mut writer, "BOGUS").starts_with("ERR"));
     let stats = query(&mut reader, &mut writer, "STATS");
     assert!(stats.contains("server.requests"), "{stats}");
+    assert!(stats.contains("server.connections.active"), "{stats}");
+    assert!(stats.contains("server.latency.topics.count"), "{stats}");
     assert_eq!(query(&mut reader, &mut writer, "QUIT"), "OK bye");
     assert!(metrics.counter("server.requests").get() >= 5);
     server.stop();
 }
 
 #[test]
-fn multiple_concurrent_clients() {
+fn malformed_lines_answer_err_and_blanks_are_ignored() {
     let server =
         TopicServer::start("127.0.0.1:0", model(), MetricsRegistry::new()).unwrap();
+    let (mut reader, mut writer) = connect(server.addr());
+
+    for bad in [
+        "TOPTERMS 0 abc",
+        "TOPTERMS 0 0",
+        "DOCS 0 0",
+        "DOCS xyz",
+        "TOPTERMS 0 2 junk",
+        "FOLDIN coffee",
+        "FOLDIN coffee:-2",
+    ] {
+        let r = query(&mut reader, &mut writer, bad);
+        assert!(r.starts_with("ERR"), "{bad:?} answered {r:?}");
+    }
+    // blank and whitespace-only lines get no response at all: the next
+    // response on the wire belongs to the PING
+    writer.write_all(b"\n   \nPING\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "OK pong");
+    server.stop();
+}
+
+#[test]
+fn batch_framing_answers_in_order() {
+    let server =
+        TopicServer::start("127.0.0.1:0", model(), MetricsRegistry::new()).unwrap();
+    let (mut reader, mut writer) = connect(server.addr());
+
+    // pipelined: header + three commands in a single write, one round trip
+    writer
+        .write_all(b"BATCH 3\nTOPICS\nCLASSIFY coffee\nPING\n")
+        .unwrap();
+    let mut lines = Vec::new();
+    for _ in 0..4 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        lines.push(line.trim_end().to_string());
+    }
+    assert_eq!(lines[0], "OK batch=3");
+    assert_eq!(lines[1], "OK k=2");
+    assert!(lines[2].starts_with("OK topic:0"), "{}", lines[2]);
+    assert_eq!(lines[3], "OK pong");
+
+    // nested BATCH and QUIT are rejected per-line, keeping the count
+    writer.write_all(b"BATCH 2\nBATCH 1\nQUIT\n").unwrap();
+    let mut lines = Vec::new();
+    for _ in 0..3 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        lines.push(line.trim_end().to_string());
+    }
+    assert_eq!(lines[0], "OK batch=2");
+    assert!(lines[1].starts_with("ERR"), "{}", lines[1]);
+    assert!(lines[2].starts_with("ERR"), "{}", lines[2]);
+
+    // blank lines inside a batch are answered (the count was promised)
+    writer.write_all(b"BATCH 2\n\nTOPICS\n").unwrap();
+    let mut lines = Vec::new();
+    for _ in 0..3 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        lines.push(line.trim_end().to_string());
+    }
+    assert_eq!(lines[0], "OK batch=2");
+    assert!(lines[1].starts_with("ERR empty"), "{}", lines[1]);
+    assert_eq!(lines[2], "OK k=2");
+
+    // malformed headers answer exactly one ERR line
+    for bad in ["BATCH", "BATCH 0", "BATCH zero", "BATCH 99999", "BATCH 1 x"] {
+        let r = query(&mut reader, &mut writer, bad);
+        assert!(r.starts_with("ERR"), "{bad:?} answered {r:?}");
+    }
+    assert_eq!(query(&mut reader, &mut writer, "QUIT"), "OK bye");
+    server.stop();
+}
+
+#[test]
+fn foldin_over_tcp_with_budget() {
+    let m = Arc::new(
+        TopicModel::new(
+            Csr::from_dense(4, 2, &[
+                0.9, 0.0, //
+                0.5, 0.0, //
+                0.0, 0.8, //
+                0.0, 0.3,
+            ]),
+            Csr::from_dense(3, 2, &[1.0, 0.0, 0.0, 0.9, 0.4, 0.0]),
+            vec![
+                "coffee".into(),
+                "crop".into(),
+                "electrons".into(),
+                "atoms".into(),
+            ],
+        )
+        .with_foldin_budget(Some(1)),
+    );
+    let server = TopicServer::start("127.0.0.1:0", m, MetricsRegistry::new()).unwrap();
+    let (mut reader, mut writer) = connect(server.addr());
+
+    // a mixed bag touches both topics, but the budget keeps exactly one
+    let r = query(&mut reader, &mut writer, "FOLDIN coffee:2 electrons:1");
+    assert!(r.starts_with("OK nnz=1 topic:"), "{r}");
+    // unknown words fold to the empty row
+    assert_eq!(query(&mut reader, &mut writer, "FOLDIN zzz:4"), "OK nnz=0");
+    server.stop();
+}
+
+/// Parse `OK nnz=<n> topic:<id>:<w> ...`, checking internal consistency.
+fn parse_foldin_nnz(resp: &str) -> usize {
+    let rest = resp.strip_prefix("OK nnz=").unwrap_or_else(|| {
+        panic!("malformed FOLDIN response {resp:?}");
+    });
+    let mut toks = rest.split_whitespace();
+    let nnz: usize = toks.next().unwrap().parse().unwrap();
+    let pairs = toks.filter(|t| t.starts_with("topic:")).count();
+    assert_eq!(pairs, nnz, "pair count disagrees with nnz in {resp:?}");
+    nnz
+}
+
+#[test]
+fn foldin_budget_property_over_random_bags() {
+    // a larger random model, served with a hard per-document budget
+    let mut rng = Rng::new(0xf01d);
+    let rows = 30;
+    let k = 5;
+    let t = 2usize;
+    let dense = prop::gen_sparse_dense(&mut rng, rows, k, 0.5);
+    let u = Csr::from_dense(rows, k, &dense);
+    let v = Csr::from_dense(1, k, &vec![1.0; k]);
+    let terms: Vec<String> = (0..rows).map(|i| format!("w{i}")).collect();
+    let m = Arc::new(TopicModel::new(u, v, terms).with_foldin_budget(Some(t)));
+    let server = TopicServer::start("127.0.0.1:0", m, MetricsRegistry::new()).unwrap();
+    let (mut reader, mut writer) = connect(server.addr());
+
+    prop::check("foldin-budget-over-tcp", 0xbead, 64, |rng: &mut Rng| {
+        let n_words = rng.range(1, 10);
+        let bag: Vec<String> = (0..n_words)
+            .map(|_| {
+                // mostly known words, some unknown
+                if rng.f64() < 0.85 {
+                    format!("w{}:{}", rng.below(rows), rng.range(1, 6))
+                } else {
+                    format!("zzz{}:{}", rng.below(5), rng.range(1, 6))
+                }
+            })
+            .collect();
+        let resp = query(&mut reader, &mut writer, &format!("FOLDIN {}", bag.join(" ")));
+        let nnz = parse_foldin_nnz(&resp);
+        assert!(nnz <= t, "nnz {nnz} exceeds budget {t}: {resp:?}");
+    });
+    server.stop();
+}
+
+#[test]
+fn foldin_of_training_doc_ranks_like_stored_v_row() {
+    // train on a cleanly separable corpus, then fold each training
+    // document's exact bag-of-words back in: the top topic must agree
+    // with the stored V row
+    let mut b = TdmBuilder::new();
+    for _ in 0..6 {
+        b.add_text("coffee crop quotas coffee brazil crop", Some("econ"));
+        b.add_text("electrons atoms hydrogen electrons atoms", Some("sci"));
+    }
+    let tdm = b.freeze();
+    let opts = esnmf::nmf::NmfOptions::new(2).with_iters(30).with_seed(7);
+    let r = esnmf::nmf::factorize(&tdm, &opts);
+    let model = TopicModel::new(r.u, r.v, tdm.terms.clone());
+    let mut checked = 0;
+    for d in 0..tdm.n_docs() {
+        let (term_ids, counts) = tdm.a_csc.col(d);
+        let doc: Vec<(String, f32)> = term_ids
+            .iter()
+            .zip(counts)
+            .map(|(&t, &c)| (tdm.terms[t as usize].clone(), c))
+            .collect();
+        let (v_cols, v_vals) = model.v.row(d);
+        if doc.is_empty() || v_cols.is_empty() {
+            continue;
+        }
+        let stored_top = v_cols
+            .iter()
+            .zip(v_vals)
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(&c, _)| c as usize)
+            .unwrap();
+        let folded = model.fold_in(&doc);
+        assert!(!folded.is_empty(), "training doc {d} folded to empty");
+        assert_eq!(
+            folded[0].0, stored_top,
+            "doc {d}: fold-in top topic {} != stored V row top {stored_top}",
+            folded[0].0
+        );
+        checked += 1;
+    }
+    assert!(checked >= 10, "only {checked} docs checked");
+}
+
+#[test]
+fn eight_simultaneous_connections() {
+    let metrics = MetricsRegistry::new();
+    let server = TopicServer::start_with(
+        "127.0.0.1:0",
+        model(),
+        metrics.clone(),
+        ServeOptions {
+            threads: 8,
+            cache_size: 0,
+        },
+    )
+    .unwrap();
     let addr = server.addr();
-    let handles: Vec<_> = (0..6)
+    const N: usize = 8;
+    // all_connected: every client has been answered (so its handler is
+    // live); release: main has inspected the gauge, clients may QUIT
+    let all_connected = Arc::new(Barrier::new(N + 1));
+    let release = Arc::new(Barrier::new(N + 1));
+    let handles: Vec<_> = (0..N)
+        .map(|_| {
+            let all_connected = Arc::clone(&all_connected);
+            let release = Arc::clone(&release);
+            std::thread::spawn(move || {
+                let (mut reader, mut writer) = connect(addr);
+                assert_eq!(query(&mut reader, &mut writer, "PING"), "OK pong");
+                all_connected.wait();
+                release.wait();
+                assert_eq!(query(&mut reader, &mut writer, "QUIT"), "OK bye");
+            })
+        })
+        .collect();
+    all_connected.wait();
+    // every handler incremented the gauge before answering its PING and
+    // none has exited: all 8 connections are being served right now
+    assert_eq!(metrics.gauge("server.connections.active").get(), 8);
+    assert_eq!(metrics.counter("server.connections.total").get(), 8);
+    release.wait();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.stop();
+}
+
+#[test]
+fn concurrent_clients_hammer_and_counters_add_up() {
+    let metrics = MetricsRegistry::new();
+    let server = TopicServer::start_with(
+        "127.0.0.1:0",
+        model(),
+        metrics.clone(),
+        ServeOptions {
+            threads: 8,
+            cache_size: 64,
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 30;
+    let cacheable_sent = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            let cacheable_sent = Arc::clone(&cacheable_sent);
+            std::thread::spawn(move || {
+                let (mut reader, mut writer) = connect(addr);
+                for j in 0..PER_CLIENT {
+                    let (cmd, cacheable): (String, bool) = match j % 4 {
+                        0 => ("TOPICS".into(), false),
+                        // a shared bag (cache hits across clients) …
+                        1 => ("CLASSIFY coffee crop".into(), true),
+                        // … and per-client bags (mostly misses)
+                        2 => (format!("CLASSIFY electrons atoms coffee{i}"), true),
+                        _ => (format!("FOLDIN coffee:{} atoms:1", (j % 3) + 1), true),
+                    };
+                    if cacheable {
+                        cacheable_sent.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let r = query(&mut reader, &mut writer, &cmd);
+                    assert!(r.starts_with("OK"), "{cmd:?} answered {r:?}");
+                }
+                assert_eq!(query(&mut reader, &mut writer, "QUIT"), "OK bye");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(metrics.counter("server.requests").get(), total);
+    // every cacheable command is exactly one hit or one miss
+    let hits = metrics.counter("server.cache.hits").get();
+    let misses = metrics.counter("server.cache.misses").get();
+    assert_eq!(
+        hits + misses,
+        cacheable_sent.load(Ordering::Relaxed) as u64
+    );
+    // the shared bag guarantees real hits once warmed
+    assert!(hits > 0, "no cache hits at all");
+    // latency histograms partition the requests by command
+    let by_label: u64 = ["topics", "classify", "foldin"]
+        .iter()
+        .map(|l| metrics.histogram(&format!("server.latency.{l}")).count())
+        .sum();
+    assert_eq!(by_label, total);
+    assert_eq!(
+        metrics.counter("server.connections.total").get(),
+        CLIENTS as u64
+    );
+    server.stop();
+    assert_eq!(metrics.gauge("server.connections.active").get(), 0);
+}
+
+#[test]
+fn graceful_shutdown_drains_open_connections() {
+    let server =
+        TopicServer::start("127.0.0.1:0", model(), MetricsRegistry::new()).unwrap();
+    let (mut reader, mut writer) = connect(server.addr());
+    assert_eq!(query(&mut reader, &mut writer, "PING"), "OK pong");
+
+    // stop() must return even though a client connection is still open:
+    // the handler notices the stop flag at its next read poll
+    let start = std::time::Instant::now();
+    server.stop();
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(5),
+        "shutdown took {:?}",
+        start.elapsed()
+    );
+    // the server closed our connection: the next read sees EOF
+    reader
+        .get_ref()
+        .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+        .unwrap();
+    let mut buf = [0u8; 16];
+    assert_eq!(reader.get_mut().read(&mut buf).unwrap(), 0);
+}
+
+#[test]
+fn queued_connections_are_served_when_workers_free() {
+    // 2 workers, 4 sequential client sessions each holding then releasing
+    // a worker: later connects queue on the pool and still get served
+    let server = TopicServer::start_with(
+        "127.0.0.1:0",
+        model(),
+        MetricsRegistry::new(),
+        ServeOptions {
+            threads: 2,
+            cache_size: 0,
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..4)
         .map(|_| {
             std::thread::spawn(move || {
-                let stream = TcpStream::connect(addr).unwrap();
-                let mut reader = BufReader::new(stream.try_clone().unwrap());
-                let mut writer = stream;
-                for _ in 0..20 {
+                let (mut reader, mut writer) = connect(addr);
+                for _ in 0..10 {
                     let r = query(&mut reader, &mut writer, "CLASSIFY coffee");
                     assert!(r.contains("topic:0"), "{r}");
                 }
+                assert_eq!(query(&mut reader, &mut writer, "QUIT"), "OK bye");
             })
         })
         .collect();

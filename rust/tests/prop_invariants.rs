@@ -269,7 +269,10 @@ fn server_command_handler_never_panics_on_garbage() {
     let metrics = MetricsRegistry::new();
     prop::check("server-fuzz", 0xD44, 128, |rng| {
         // random printable garbage, random lengths, occasional real verbs
-        let verbs = ["TOPICS", "TOPTERMS", "CLASSIFY", "DOCS", "STATS", "PING", "XYZZY"];
+        let verbs = [
+            "TOPICS", "TOPTERMS", "CLASSIFY", "FOLDIN", "DOCS", "STATS", "PING", "BATCH",
+            "XYZZY",
+        ];
         let mut line = String::new();
         if rng.below(2) == 0 {
             line.push_str(verbs[rng.below(verbs.len())]);
