@@ -160,8 +160,9 @@ fn parse_value(s: &str) -> Result<Value, String> {
     if let Ok(f) = s.parse::<f64>() {
         return Ok(Value::Float(f));
     }
-    // bare words count as strings (convenient for presets: corpus = reuters)
-    if s.chars().all(|c| c.is_alphanumeric() || "-_.:".contains(c)) {
+    // bare words count as strings (convenient for presets — corpus =
+    // reuters — and for paths: resume = checkpoints/run1.esnmf)
+    if s.chars().all(|c| c.is_alphanumeric() || "-_.:/".contains(c)) {
         return Ok(Value::Str(s.to_string()));
     }
     Err(format!("cannot parse value {s:?}"))
@@ -228,6 +229,16 @@ foldin_t = 10
         assert_eq!(c.threads("nmf.threads"), Some(0));
         assert_eq!(c.threads("other.threads"), Some(4));
         assert_eq!(c.threads("missing.threads"), None);
+    }
+
+    #[test]
+    fn bare_paths_parse_as_strings() {
+        let c = ConfigFile::parse(
+            "[snapshot]\nsave = models/run1.esnmf\nresume = ../ck/iter40.esnmf\n",
+        )
+        .unwrap();
+        assert_eq!(c.str("snapshot.save"), Some("models/run1.esnmf"));
+        assert_eq!(c.str("snapshot.resume"), Some("../ck/iter40.esnmf"));
     }
 
     #[test]

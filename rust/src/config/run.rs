@@ -48,6 +48,22 @@ pub struct RunConfig {
     /// `t_v` (the training-time V budget), and if that is unset too,
     /// fold-in rows are unenforced
     pub foldin_t: Option<usize>,
+    /// write a `.esnmf` model snapshot here after factorization
+    /// (`--save-model`)
+    pub save_model: Option<String>,
+    /// serve a persisted snapshot instead of factorizing
+    /// (`esnmf serve --model`)
+    pub model: Option<String>,
+    /// checkpoint the ALS run every N completed iterations
+    /// (`--checkpoint-every`, 0 = off; requires a checkpoint destination —
+    /// `--save-model`)
+    pub checkpoint_every: usize,
+    /// resume a checkpointed run from this snapshot (`--resume`); refuses
+    /// on corpus-digest or k mismatch
+    pub resume: Option<String>,
+    /// seed `U₀` from this snapshot's factors, aligned by term string
+    /// (`--warm-start`); the corpus may differ — that is the point
+    pub warm_start: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -76,6 +92,11 @@ impl Default for RunConfig {
             serve_threads: serve_defaults.threads,
             serve_cache: serve_defaults.cache_size,
             foldin_t: None,
+            save_model: None,
+            model: None,
+            checkpoint_every: 0,
+            resume: None,
+            warm_start: None,
         }
     }
 }
@@ -152,6 +173,21 @@ impl RunConfig {
         if let Some(v) = f.usize("serve.foldin_t") {
             self.foldin_t = Some(v);
         }
+        if let Some(v) = f.str("serve.model") {
+            self.model = Some(v.to_string());
+        }
+        if let Some(v) = f.str("snapshot.save") {
+            self.save_model = Some(v.to_string());
+        }
+        if let Some(v) = f.usize("snapshot.checkpoint_every") {
+            self.checkpoint_every = v;
+        }
+        if let Some(v) = f.str("snapshot.resume") {
+            self.resume = Some(v.to_string());
+        }
+        if let Some(v) = f.str("snapshot.warm_start") {
+            self.warm_start = Some(v.to_string());
+        }
         Ok(())
     }
 
@@ -217,6 +253,12 @@ impl RunConfig {
             .with_threads(self.threads);
         opts.tie_mode = TieMode::KeepTies;
         opts.init_nnz = self.init_nnz;
+        if self.checkpoint_every > 0 {
+            let path = self.save_model.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("--checkpoint-every requires --save-model <path> (the checkpoint destination)")
+            })?;
+            opts = opts.with_checkpoint(path, self.checkpoint_every);
+        }
         Ok(opts)
     }
 
@@ -344,6 +386,37 @@ mod tests {
         let want = crate::coordinator::ServeOptions::default();
         assert_eq!(opts.threads, want.threads);
         assert_eq!(opts.cache_size, want.cache_size);
+    }
+
+    #[test]
+    fn snapshot_knobs_from_file() {
+        let f = ConfigFile::parse(
+            "[snapshot]\nsave = model.esnmf\ncheckpoint_every = 10\nresume = ck.esnmf\nwarm_start = old.esnmf\n[serve]\nmodel = served.esnmf\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.save_model.as_deref(), Some("model.esnmf"));
+        assert_eq!(cfg.checkpoint_every, 10);
+        assert_eq!(cfg.resume.as_deref(), Some("ck.esnmf"));
+        assert_eq!(cfg.warm_start.as_deref(), Some("old.esnmf"));
+        assert_eq!(cfg.model.as_deref(), Some("served.esnmf"));
+        let opts = cfg.nmf_options().unwrap();
+        assert_eq!(opts.checkpoint_every, 10);
+        assert_eq!(
+            opts.checkpoint_path.as_deref(),
+            Some(std::path::Path::new("model.esnmf"))
+        );
+    }
+
+    #[test]
+    fn checkpoint_without_destination_is_an_error() {
+        let mut cfg = RunConfig::default();
+        cfg.checkpoint_every = 5;
+        let err = cfg.nmf_options().unwrap_err();
+        assert!(format!("{err:#}").contains("--save-model"), "{err:#}");
+        cfg.save_model = Some("x.esnmf".into());
+        assert!(cfg.nmf_options().is_ok());
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //! documents never seen at training time).
 
 use crate::eval::topics::top_terms;
+use crate::io::Snapshot;
 use crate::nmf::FoldIn;
 use crate::sparse::{Csr, TieMode};
+use crate::text::normalize_term;
 
 #[derive(Clone, Debug)]
 pub struct TopicModel {
@@ -38,6 +40,17 @@ impl TopicModel {
         }
     }
 
+    /// Build a servable model straight from a persisted [`Snapshot`] —
+    /// the `esnmf serve --model` cold-start path: no factorization, just
+    /// the (bit-exact) stored factors plus the one-time Gram-inverse
+    /// precompute. The fold-in budget defaults to the snapshot's
+    /// training-time `t_v` (override with
+    /// [`TopicModel::with_foldin_budget`]).
+    pub fn from_snapshot(snap: Snapshot) -> Self {
+        let budget = snap.t_v();
+        TopicModel::new(snap.u, snap.v, snap.terms).with_foldin_budget(budget)
+    }
+
     /// Cap the nonzeros of every folded-in document row (None leaves
     /// fold-in unenforced). Uses `Exact` tie mode: a hard budget is what
     /// a serving-side memory contract wants.
@@ -69,7 +82,7 @@ impl TopicModel {
         let k = self.k();
         let mut scores = vec![0.0f32; k];
         for w in words {
-            if let Some(&row) = self.term_ids.get(&w.as_ref().to_lowercase()) {
+            if let Some(&row) = self.term_ids.get(&normalize_term(w.as_ref())) {
                 let (idx, val) = self.u.row(row);
                 for (&c, &v) in idx.iter().zip(val) {
                     scores[c as usize] += v;
@@ -87,7 +100,9 @@ impl TopicModel {
             }
         }
         let mut ranked: Vec<(usize, f32)> = scores.into_iter().enumerate().collect();
-        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        // total_cmp: a NaN weight (degenerate Gram inverse) must rank, not
+        // panic the serving thread
+        ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
         ranked
     }
 
@@ -103,7 +118,7 @@ impl TopicModel {
             .iter()
             .filter_map(|(w, c)| {
                 self.term_ids
-                    .get(&w.as_ref().to_lowercase())
+                    .get(&normalize_term(w.as_ref()))
                     .map(|&row| (row, *c))
             })
             .collect();
@@ -113,7 +128,7 @@ impl TopicModel {
             .enumerate()
             .filter(|&(_, w)| w > 0.0)
             .collect();
-        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        out.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
         out
     }
 
@@ -125,7 +140,7 @@ impl TopicModel {
                 (w != 0.0).then_some((d, w))
             })
             .collect();
-        docs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        docs.sort_by(|a, b| b.1.total_cmp(&a.1));
         docs.truncate(n);
         docs
     }
@@ -213,5 +228,91 @@ mod tests {
         let d = m.topic_documents(1, 10);
         assert_eq!(d[0], (1, 0.9));
         assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn nan_weights_rank_instead_of_panicking() {
+        // a degenerate Gram inverse can leak NaN into the factors; every
+        // ranking sort must stay total (previously partial_cmp().unwrap()
+        // panicked the serving thread)
+        let u = Csr::from_dense(4, 2, &[
+            f32::NAN, 0.0, //
+            0.6, 0.0, //
+            0.0, 0.8, //
+            0.0, 0.5,
+        ]);
+        let v = Csr::from_dense(3, 2, &[0.7, 0.0, 0.0, f32::NAN, 0.2, 0.1]);
+        let terms = ["coffee", "crop", "electrons", "atoms"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let m = TopicModel::new(u, v, terms);
+        // classify with a NaN-tainted term: no panic, all topics ranked
+        let r = m.classify(&["coffee", "crop"]);
+        assert_eq!(r.len(), 2);
+        // doc ranking over a NaN weight: no panic, every nonzero doc listed
+        let d = m.topic_documents(1, 10);
+        assert_eq!(d.len(), 2);
+        // fold-in against the NaN-tainted U: no panic
+        let _ = m.fold_in(&[("coffee", 1.0), ("electrons", 2.0)]);
+        // finite weights still rank correctly among themselves
+        let clean = m.topic_documents(0, 10);
+        assert_eq!(clean, vec![(0, 0.7), (2, 0.2)]);
+    }
+
+    #[test]
+    fn lookup_normalization_matches_the_tokenizer() {
+        // Greek ΟΔΟΣ: str::to_lowercase gives final sigma "οδος", but the
+        // tokenizer stores the char-wise "οδοσ" — the lookup must agree
+        // with the tokenizer or served answers silently miss the term
+        let toks = crate::text::tokenize("ΟΔΟΣ ΟΔΟΣ");
+        assert_eq!(toks[0], "οδοσ");
+        let u = Csr::from_dense(2, 2, &[0.9, 0.0, 0.0, 0.8]);
+        let v = Csr::from_dense(1, 2, &[1.0, 0.0]);
+        let m = TopicModel::new(u, v, vec![toks[0].clone(), "coffee".into()]);
+        let r = m.classify(&["ΟΔΟΣ"]);
+        assert_eq!(r[0].0, 0);
+        assert!(r[0].1 > 0.99, "uppercase query missed the vocabulary: {r:?}");
+        let folded = m.fold_in(&[("ΟΔΟΣ", 2.0)]);
+        assert!(!folded.is_empty(), "fold-in missed the vocabulary");
+    }
+
+    #[test]
+    fn from_snapshot_serves_identically_to_the_source_model() {
+        use crate::nmf::{factorize, NmfOptions, SparsityMode};
+        use crate::text::TdmBuilder;
+        let mut b = TdmBuilder::new();
+        for _ in 0..5 {
+            b.add_text("coffee crop quotas coffee brazil crop", Some("econ"));
+            b.add_text("electrons atoms hydrogen electrons atoms", Some("sci"));
+        }
+        let tdm = b.freeze();
+        let opts = NmfOptions::new(2)
+            .with_iters(10)
+            .with_seed(11)
+            .with_sparsity(SparsityMode::both(30, 40));
+        let r = factorize(&tdm, &opts);
+        let fresh = TopicModel::new(r.u.clone(), r.v.clone(), tdm.terms.clone())
+            .with_foldin_budget(Some(40));
+        let snap = crate::io::Snapshot::new(
+            opts,
+            r.u,
+            r.v,
+            &tdm,
+            crate::io::Progress::default(),
+        );
+        let loaded =
+            TopicModel::from_snapshot(crate::io::Snapshot::from_bytes(&snap.to_bytes()).unwrap());
+        // fold-in budget defaulted from the snapshot's t_v
+        assert_eq!(loaded.foldin_budget(), Some(40));
+        // classify + fold-in answers are bit-identical
+        let words = ["coffee", "crop", "electrons"];
+        assert_eq!(fresh.classify(&words), loaded.classify(&words));
+        let doc = [("coffee", 2.0f32), ("atoms", 1.0)];
+        assert_eq!(fresh.fold_in(&doc), loaded.fold_in(&doc));
+        for t in 0..2 {
+            assert_eq!(fresh.topic_terms(t, 5), loaded.topic_terms(t, 5));
+            assert_eq!(fresh.topic_documents(t, 5), loaded.topic_documents(t, 5));
+        }
     }
 }

@@ -129,16 +129,23 @@ impl ServerState {
 }
 
 /// Canonical cache key for the cacheable commands (CLASSIFY / FOLDIN):
-/// command uppercased, arguments lowercased and sorted — both commands
-/// are order-independent sums over their arguments, so permutations of
-/// one bag of words share an entry. `None` = not cacheable.
+/// command uppercased, arguments case-folded with
+/// [`crate::text::normalize_term`] — the *same* normalization the
+/// tokenizer applied while building the vocabulary and the model applies
+/// on lookup — then sorted. Both commands are order-independent sums over
+/// their arguments, so permutations of one bag of words share an entry;
+/// sharing the normalization function is what guarantees two queries get
+/// one cache entry **iff** the model answers them identically (an
+/// independent lowercasing that disagreed with the tokenizer on any word
+/// would serve wrong cached CLASSIFY/FOLDIN answers). `None` = not
+/// cacheable.
 pub fn normalize_query(line: &str) -> Option<String> {
     let mut parts = line.split_whitespace();
     let cmd = parts.next()?.to_ascii_uppercase();
     if cmd != "CLASSIFY" && cmd != "FOLDIN" {
         return None;
     }
-    let mut args: Vec<String> = parts.map(|t| t.to_lowercase()).collect();
+    let mut args: Vec<String> = parts.map(crate::text::normalize_term).collect();
     args.sort_unstable();
     Some(format!("{cmd} {}", args.join(" ")))
 }
@@ -706,6 +713,35 @@ mod tests {
         assert_eq!(normalize_query("TOPICS"), None);
         assert_eq!(normalize_query("STATS"), None);
         assert_eq!(normalize_query(""), None);
+    }
+
+    #[test]
+    fn cache_key_normalization_matches_the_tokenizer() {
+        // ΟΔΟΣ: str::to_lowercase gives "οδος" (final sigma) but the
+        // tokenizer's vocabulary stores the char-wise "οδοσ". The cache
+        // key must fold case exactly like the model's lookup, or the two
+        // spellings would collapse onto one entry while the model answers
+        // them differently (wrong cached answers).
+        let key_upper = normalize_query("CLASSIFY ΟΔΟΣ").unwrap();
+        let key_tokenized = normalize_query("CLASSIFY οδοσ").unwrap();
+        assert_eq!(key_upper, key_tokenized);
+        assert_eq!(key_upper, "CLASSIFY οδοσ");
+        // and the full serving path agrees: a model whose vocabulary
+        // holds the tokenizer form answers the uppercase query from cache
+        // with the identical (hit-the-vocabulary) response
+        let u = Csr::from_dense(2, 2, &[0.9, 0.0, 0.0, 0.8]);
+        let v = Csr::from_dense(1, 2, &[1.0, 0.0]);
+        let m = TopicModel::new(
+            u,
+            v,
+            vec![crate::text::tokenize("ΟΔΟΣ")[0].clone(), "coffee".into()],
+        );
+        let s = ServerState::new(Arc::new(m), MetricsRegistry::new(), 16);
+        let fresh = respond(&s, "CLASSIFY ΟΔΟΣ");
+        let cached = respond(&s, "CLASSIFY οδοσ");
+        assert_eq!(fresh, cached);
+        assert!(fresh.contains("topic:0 score:1.0000"), "{fresh}");
+        assert_eq!(s.metrics.counter("server.cache.hits").get(), 1);
     }
 
     #[test]

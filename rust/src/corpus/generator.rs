@@ -121,6 +121,24 @@ pub fn generate(spec: &CorpusSpec, seed: u64) -> Vec<Document> {
     docs
 }
 
+/// Parse the numeric index out of a synthetic `<prefix><digits>` word
+/// token (e.g. `"w13"` → 13), as produced by rank-indexed test
+/// vocabularies. Returns a descriptive `Err` naming the offending token
+/// instead of panicking on malformed input (the old
+/// `token[1..].parse().unwrap()` crashed on any token without a valid
+/// numeric tail — including multi-byte UTF-8 prefixes, where the `[1..]`
+/// slice itself panicked).
+pub fn synthetic_word_index(token: &str) -> Result<usize, String> {
+    let start = token
+        .char_indices()
+        .find(|&(_, c)| c.is_ascii_digit())
+        .map(|(i, _)| i)
+        .ok_or_else(|| format!("synthetic word token {token:?} has no numeric index"))?;
+    token[start..]
+        .parse::<usize>()
+        .map_err(|e| format!("synthetic word token {token:?}: bad index ({e})"))
+}
+
 /// Generate and freeze straight to a term-document matrix.
 pub fn generate_tdm(spec: &CorpusSpec, seed: u64) -> TermDocMatrix {
     let docs = generate(spec, seed);
@@ -225,9 +243,24 @@ mod tests {
         let mut counts = vec![0usize; 50];
         for _ in 0..20_000 {
             let w = table.sample(&mut rng);
-            let idx: usize = w[1..].parse().unwrap();
+            let idx = synthetic_word_index(w).expect("rank-indexed vocab");
             counts[idx] += 1;
         }
         assert!(counts[0] > counts[10] && counts[10] > counts[40]);
+    }
+
+    #[test]
+    fn synthetic_word_index_parses_and_reports_bad_tokens() {
+        assert_eq!(synthetic_word_index("w13"), Ok(13));
+        assert_eq!(synthetic_word_index("word7"), Ok(7));
+        assert_eq!(synthetic_word_index("w0"), Ok(0));
+        // malformed tokens return Err naming the token instead of panicking
+        for bad in ["w", "", "coffee", "übercrash"] {
+            let err = synthetic_word_index(bad).unwrap_err();
+            assert!(err.contains(&format!("{bad:?}")), "{err}");
+        }
+        // a digit tail longer than usize overflows into Err, not a panic
+        let huge = format!("w{}", "9".repeat(40));
+        assert!(synthetic_word_index(&huge).is_err());
     }
 }

@@ -1,6 +1,11 @@
 //! Load a real corpus from disk: a directory of `.txt` files, optionally
 //! nested one level where the subdirectory name is the ground-truth label
 //! (`corpus/econ/doc1.txt` → label "econ").
+//!
+//! A directory mixing flat `.txt` files with labeled subdirectories is
+//! well-defined: the flat documents get the
+//! [`crate::text::tdm::UNLABELED`] sentinel label at freeze, so
+//! `doc_labels` never carries out-of-range ids into the eval paths.
 
 use crate::text::{TdmBuilder, TermDocMatrix};
 use anyhow::{Context, Result};
@@ -76,6 +81,36 @@ mod tests {
         let labels = tdm.doc_labels.as_ref().unwrap();
         assert_eq!(labels.len(), 3);
         assert_eq!(tdm.label_names.len(), 2);
+    }
+
+    #[test]
+    fn mixed_flat_and_labeled_corpus_is_well_defined() {
+        // regression: this layout used to yield doc_labels containing a
+        // u32::MAX sentinel that downstream eval indexed out of bounds
+        let dir = std::env::temp_dir().join("esnmf_loader_mixed");
+        let _ = fs::remove_dir_all(&dir);
+        write(&dir.join("stray.txt"), "coffee crop coffee crop");
+        write(&dir.join("econ/a.txt"), "coffee crop coffee market");
+        write(&dir.join("econ/b.txt"), "coffee futures market crop");
+        write(&dir.join("sci/c.txt"), "electrons atoms electrons atoms");
+        let tdm = load_dir(&dir).unwrap();
+        assert_eq!(tdm.n_docs(), 4);
+        let labels = tdm.doc_labels.as_ref().expect("mixed corpus keeps labels");
+        assert_eq!(labels.len(), 4);
+        for &l in labels {
+            assert!(
+                (l as usize) < tdm.label_names.len(),
+                "label {l} out of range for {:?}",
+                tdm.label_names
+            );
+        }
+        assert!(tdm.label_names.iter().any(|n| n == crate::text::tdm::UNLABELED));
+        // entries sort by path (econ/ < sci/ < stray.txt), so the flat
+        // document is the last one added and must carry the sentinel
+        assert_eq!(
+            tdm.label_names[*labels.last().unwrap() as usize],
+            crate::text::tdm::UNLABELED
+        );
     }
 
     #[test]

@@ -13,5 +13,5 @@ pub mod loader;
 pub mod presets;
 pub mod words;
 
-pub use generator::{CorpusSpec, Document, TopicSpec, generate, generate_tdm};
+pub use generator::{CorpusSpec, Document, TopicSpec, generate, generate_tdm, synthetic_word_index};
 pub use presets::{pubmed_sim, reuters_sim, wikipedia_sim, Scale};

@@ -1,0 +1,17 @@
+//! Model persistence: the versioned `.esnmf` binary snapshot format and
+//! its checkpoint/resume plumbing.
+//!
+//! The paper's algorithms make NMF viable on *large* corpora — but a
+//! large factorization that cannot be saved must be recomputed on every
+//! process start, and a crashed run loses every iteration. [`snapshot`]
+//! makes a completed (or in-flight) factorization a single portable
+//! file: both CSR factors bit-exact, the vocabulary, document labels,
+//! the [`crate::nmf::NmfOptions`] used, a corpus digest that pins which
+//! data the factors belong to, and the convergence telemetry needed to
+//! resume mid-run.
+
+pub mod snapshot;
+
+pub use snapshot::{
+    corpus_digest, Progress, Snapshot, SnapshotError, MAX_SNAPSHOT_K, SNAPSHOT_VERSION,
+};

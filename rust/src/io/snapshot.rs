@@ -1,0 +1,931 @@
+//! The `.esnmf` model snapshot: one self-describing binary file holding a
+//! factorization and everything needed to serve or continue it.
+//!
+//! # File layout (all integers little-endian)
+//!
+//! ```text
+//! magic    6 bytes   b"ESNMF\0"
+//! version  u16       SNAPSHOT_VERSION (readers refuse newer files)
+//! length   u64       payload byte count
+//! crc32    u32       CRC-32 (IEEE) of the payload
+//! payload  length bytes
+//! ```
+//!
+//! The payload is a flat sequence of sections: solver options, corpus
+//! digest, the `U` and `V` factors ([`Csr::write_bytes`] — value *bits*
+//! round-trip, so a loaded model answers queries bit-identically),
+//! vocabulary terms, optional document labels + label names, and the
+//! convergence progress (iteration count, residual/error history, memory
+//! peaks, accumulated wall time) that lets `--resume` reproduce an
+//! uninterrupted run.
+//!
+//! Every load path is total: truncated files, bit flips (CRC), absurd
+//! section sizes and structurally invalid factors all surface as a typed
+//! [`SnapshotError`], never a panic or an unbounded allocation.
+
+use crate::nmf::memory::MemoryStats;
+use crate::nmf::{NmfOptions, SparsityMode};
+use crate::sparse::{Csr, TieMode};
+use crate::text::TermDocMatrix;
+use std::fmt;
+use std::path::Path;
+
+/// Current format version. Bump on any layout change.
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+/// Hard ceiling on a snapshot's rank. Serving precomputes a dense k×k
+/// Gram inverse, so an absurd `k` in an otherwise well-formed file would
+/// be an unbounded allocation at load time — exactly what the format
+/// promises cannot happen. 2¹⁴ topics is far beyond any real model and
+/// keeps the Gram under a gigabyte.
+pub const MAX_SNAPSHOT_K: usize = 1 << 14;
+
+const MAGIC: &[u8; 6] = b"ESNMF\0";
+
+/// Everything that can go wrong reading or validating a snapshot.
+#[derive(Debug)]
+pub enum SnapshotError {
+    Io(std::io::Error),
+    /// Not an `.esnmf` file at all.
+    BadMagic,
+    /// Written by a newer esnmf than this reader.
+    UnsupportedVersion(u16),
+    /// File ends before the declared payload does.
+    Truncated { expected: usize, have: usize },
+    /// Payload bytes do not match the stored checksum (bit rot / flip).
+    CrcMismatch { stored: u32, computed: u32 },
+    /// Checksum passes but a section does not parse.
+    Corrupt(String),
+    /// The snapshot is valid but does not belong to this corpus/config
+    /// (digest or shape refusal at a wiring layer).
+    Mismatch(String),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "snapshot i/o: {e}"),
+            SnapshotError::BadMagic => write!(f, "not an .esnmf snapshot (bad magic)"),
+            SnapshotError::UnsupportedVersion(v) => write!(
+                f,
+                "snapshot version {v} is newer than this build (max {SNAPSHOT_VERSION})"
+            ),
+            SnapshotError::Truncated { expected, have } => {
+                write!(f, "snapshot truncated: expected {expected} bytes, have {have}")
+            }
+            SnapshotError::CrcMismatch { stored, computed } => write!(
+                f,
+                "snapshot checksum mismatch (stored {stored:#010x}, computed {computed:#010x}) — file is corrupt"
+            ),
+            SnapshotError::Corrupt(msg) => write!(f, "snapshot corrupt: {msg}"),
+            SnapshotError::Mismatch(msg) => write!(f, "snapshot mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+impl From<std::io::Error> for SnapshotError {
+    fn from(e: std::io::Error) -> Self {
+        SnapshotError::Io(e)
+    }
+}
+
+/// Convergence state carried by a snapshot so `--resume` can reproduce an
+/// uninterrupted run's [`crate::nmf::NmfResult`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Progress {
+    /// completed ALS iterations
+    pub iterations: usize,
+    /// relative residual per completed iteration
+    pub residuals: Vec<f64>,
+    /// relative error per completed iteration (empty if untracked)
+    pub errors: Vec<f64>,
+    /// memory peaks observed so far
+    pub memory: MemoryStats,
+    /// training wall time accumulated before this snapshot was written
+    pub elapsed_s: f64,
+}
+
+/// A persisted model: factors, vocabulary, labels, options, digest, and
+/// resume state.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub options: NmfOptions,
+    /// term/topic factor (terms × k)
+    pub u: Csr,
+    /// document/topic factor (docs × k)
+    pub v: Csr,
+    pub terms: Vec<String>,
+    pub doc_labels: Option<Vec<u32>>,
+    pub label_names: Vec<String>,
+    /// [`corpus_digest`] of the term-document matrix the factors were
+    /// trained on — load paths that continue training refuse on mismatch
+    pub corpus_digest: u64,
+    pub progress: Progress,
+}
+
+/// Order-sensitive FNV-1a digest over everything that defines the
+/// training input: matrix shape, sparsity structure, value bits, and the
+/// vocabulary strings. Two corpora digest equal iff ALS would walk the
+/// same data.
+pub fn corpus_digest(tdm: &TermDocMatrix) -> u64 {
+    let mut h = Fnv::new();
+    h.usize(tdm.a.rows);
+    h.usize(tdm.a.cols);
+    h.usize(tdm.a.nnz());
+    for &p in &tdm.a.indptr {
+        h.usize(p);
+    }
+    for &i in &tdm.a.indices {
+        h.u32(i);
+    }
+    for &v in &tdm.a.values {
+        h.u32(v.to_bits());
+    }
+    for t in &tdm.terms {
+        h.bytes(t.as_bytes());
+        h.u32(0xffff_ffff); // term separator
+    }
+    h.finish()
+}
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn u32(&mut self, x: u32) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    fn usize(&mut self, x: usize) {
+        self.bytes(&(x as u64).to_le_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Snapshot {
+    /// Assemble a snapshot of a completed (or checkpointed) factorization.
+    pub fn new(
+        options: NmfOptions,
+        u: Csr,
+        v: Csr,
+        tdm: &TermDocMatrix,
+        progress: Progress,
+    ) -> Snapshot {
+        Snapshot {
+            options,
+            u,
+            v,
+            terms: tdm.terms.clone(),
+            doc_labels: tdm.doc_labels.clone(),
+            label_names: tdm.label_names.clone(),
+            corpus_digest: corpus_digest(tdm),
+            progress,
+        }
+    }
+
+    /// Serialize to the `.esnmf` wire form.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        write_options(&mut payload, &self.options);
+        payload.extend_from_slice(&self.corpus_digest.to_le_bytes());
+        self.u.write_bytes(&mut payload);
+        self.v.write_bytes(&mut payload);
+        write_strings(&mut payload, &self.terms);
+        match &self.doc_labels {
+            None => payload.push(0),
+            Some(labels) => {
+                payload.push(1);
+                payload.extend_from_slice(&(labels.len() as u64).to_le_bytes());
+                for &l in labels {
+                    payload.extend_from_slice(&l.to_le_bytes());
+                }
+            }
+        }
+        write_strings(&mut payload, &self.label_names);
+        let p = &self.progress;
+        payload.extend_from_slice(&(p.iterations as u64).to_le_bytes());
+        write_f64s(&mut payload, &p.residuals);
+        write_f64s(&mut payload, &p.errors);
+        for m in [
+            p.memory.max_combined_nnz,
+            p.memory.max_intermediate_nnz,
+            p.memory.final_u_nnz,
+            p.memory.final_v_nnz,
+        ] {
+            payload.extend_from_slice(&(m as u64).to_le_bytes());
+        }
+        payload.extend_from_slice(&p.elapsed_s.to_bits().to_le_bytes());
+
+        let mut out = Vec::with_capacity(payload.len() + 20);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&crc32(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Parse the `.esnmf` wire form.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Snapshot, SnapshotError> {
+        if bytes.len() < MAGIC.len() + 2 + 8 + 4 {
+            return Err(SnapshotError::Truncated {
+                expected: MAGIC.len() + 2 + 8 + 4,
+                have: bytes.len(),
+            });
+        }
+        if &bytes[..MAGIC.len()] != MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        let version = u16::from_le_bytes(bytes[6..8].try_into().unwrap());
+        if version == 0 || version > SNAPSHOT_VERSION {
+            return Err(SnapshotError::UnsupportedVersion(version));
+        }
+        let len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let stored_crc = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        let have = bytes.len() - 20;
+        if have < len {
+            return Err(SnapshotError::Truncated {
+                expected: len,
+                have,
+            });
+        }
+        if have > len {
+            return Err(SnapshotError::Corrupt(format!(
+                "{} trailing bytes after payload",
+                have - len
+            )));
+        }
+        let payload = &bytes[20..20 + len];
+        let computed = crc32(payload);
+        if computed != stored_crc {
+            return Err(SnapshotError::CrcMismatch {
+                stored: stored_crc,
+                computed,
+            });
+        }
+
+        let mut r = Reader {
+            bytes: payload,
+            pos: 0,
+        };
+        let options = read_options(&mut r)?;
+        let corpus_digest = r.u64()?;
+        let u = Csr::read_bytes(r.bytes, &mut r.pos).map_err(SnapshotError::Corrupt)?;
+        let v = Csr::read_bytes(r.bytes, &mut r.pos).map_err(SnapshotError::Corrupt)?;
+        let terms = read_strings(&mut r)?;
+        let doc_labels = match r.u8()? {
+            0 => None,
+            1 => {
+                let n = r.len("doc labels", 4)?;
+                let mut labels = Vec::with_capacity(n);
+                for _ in 0..n {
+                    labels.push(r.u32()?);
+                }
+                Some(labels)
+            }
+            other => {
+                return Err(SnapshotError::Corrupt(format!(
+                    "bad doc-label flag {other}"
+                )))
+            }
+        };
+        let label_names = read_strings(&mut r)?;
+        let iterations = r.u64()? as usize;
+        let residuals = read_f64s(&mut r)?;
+        let errors = read_f64s(&mut r)?;
+        let memory = MemoryStats {
+            max_combined_nnz: r.u64()? as usize,
+            max_intermediate_nnz: r.u64()? as usize,
+            final_u_nnz: r.u64()? as usize,
+            final_v_nnz: r.u64()? as usize,
+        };
+        let elapsed_s = f64::from_bits(r.u64()?);
+        if r.pos != r.bytes.len() {
+            return Err(SnapshotError::Corrupt(format!(
+                "{} unparsed payload bytes",
+                r.bytes.len() - r.pos
+            )));
+        }
+
+        let snap = Snapshot {
+            options,
+            u,
+            v,
+            terms,
+            doc_labels,
+            label_names,
+            corpus_digest,
+            progress: Progress {
+                iterations,
+                residuals,
+                errors,
+                memory,
+                elapsed_s,
+            },
+        };
+        snap.validate_shapes()?;
+        Ok(snap)
+    }
+
+    /// Internal consistency: factor shapes agree with k, the vocabulary,
+    /// and each other; labels (if present) cover every document.
+    fn validate_shapes(&self) -> Result<(), SnapshotError> {
+        let k = self.options.k;
+        if k == 0 || k > MAX_SNAPSHOT_K {
+            return Err(SnapshotError::Corrupt(format!(
+                "rank k={k} outside 1..={MAX_SNAPSHOT_K}"
+            )));
+        }
+        if k > self.u.rows.max(self.v.rows) {
+            return Err(SnapshotError::Corrupt(format!(
+                "rank k={k} exceeds both factor heights ({} terms, {} docs)",
+                self.u.rows, self.v.rows
+            )));
+        }
+        if self.u.cols != k || self.v.cols != k {
+            return Err(SnapshotError::Corrupt(format!(
+                "factor widths ({}, {}) disagree with k={k}",
+                self.u.cols, self.v.cols
+            )));
+        }
+        if self.u.rows != self.terms.len() {
+            return Err(SnapshotError::Corrupt(format!(
+                "U has {} rows but the vocabulary has {} terms",
+                self.u.rows,
+                self.terms.len()
+            )));
+        }
+        if let Some(labels) = &self.doc_labels {
+            if labels.len() != self.v.rows {
+                return Err(SnapshotError::Corrupt(format!(
+                    "{} doc labels for {} documents",
+                    labels.len(),
+                    self.v.rows
+                )));
+            }
+            let n = self.label_names.len() as u32;
+            if let Some(&bad) = labels.iter().find(|&&l| l >= n) {
+                return Err(SnapshotError::Corrupt(format!(
+                    "doc label id {bad} out of range ({n} label names)"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether this snapshot's progress can seed `--resume`: the ALS
+    /// driver records exactly one residual per completed iteration, so a
+    /// snapshot whose history disagrees (e.g. one saved from a sequential
+    /// run, which is servable but not ALS-resumable) is refused.
+    pub fn check_resumable(&self) -> Result<(), SnapshotError> {
+        if self.progress.residuals.len() != self.progress.iterations {
+            return Err(SnapshotError::Mismatch(format!(
+                "not an ALS checkpoint: {} residuals for {} iterations \
+                 (snapshots from other solvers serve but cannot resume)",
+                self.progress.residuals.len(),
+                self.progress.iterations
+            )));
+        }
+        Ok(())
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over
+    /// `path`, so a crash mid-write never leaves a torn snapshot where a
+    /// good one (e.g. the previous checkpoint) used to be.
+    pub fn save(&self, path: &Path) -> Result<(), SnapshotError> {
+        let bytes = self.to_bytes();
+        let tmp = path.with_extension("esnmf.tmp");
+        std::fs::write(&tmp, &bytes)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Snapshot, SnapshotError> {
+        let bytes = std::fs::read(path)?;
+        Snapshot::from_bytes(&bytes)
+    }
+
+    /// Refuse to continue training against `tdm` unless it is the exact
+    /// corpus this snapshot was trained on.
+    pub fn check_corpus(&self, tdm: &TermDocMatrix) -> Result<(), SnapshotError> {
+        let digest = corpus_digest(tdm);
+        if digest != self.corpus_digest {
+            return Err(SnapshotError::Mismatch(format!(
+                "corpus digest {digest:#018x} does not match the snapshot's {:#018x} \
+                 ({} terms × {} docs vs {} × {}); use warm-start for a changed corpus",
+                self.corpus_digest,
+                tdm.n_terms(),
+                tdm.n_docs(),
+                self.u.rows,
+                self.v.rows,
+            )));
+        }
+        Ok(())
+    }
+
+    /// Refuse a rank mismatch (e.g. `serve --model snap --k 7` against a
+    /// k=5 snapshot).
+    pub fn check_k(&self, k: usize) -> Result<(), SnapshotError> {
+        if self.options.k != k {
+            return Err(SnapshotError::Mismatch(format!(
+                "requested k={k} but the snapshot was trained with k={}",
+                self.options.k
+            )));
+        }
+        Ok(())
+    }
+
+    /// The training-time `t_v` budget, if sparsity enforcement was on —
+    /// the natural default fold-in budget for a served snapshot.
+    pub fn t_v(&self) -> Option<usize> {
+        match self.options.sparsity {
+            SparsityMode::Global { t_v, .. } => t_v,
+            SparsityMode::PerColumn { t_v_col, .. } => t_v_col,
+            _ => None,
+        }
+    }
+}
+
+// --- payload section codecs -------------------------------------------------
+
+/// Bounds-checked little-endian payload reader.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or(SnapshotError::Truncated {
+                expected: self.pos.saturating_add(n),
+                have: self.bytes.len(),
+            })?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// An element count for a section of `elem_size`-byte items, rejected
+    /// up front when the remaining payload cannot possibly hold it (so a
+    /// corrupt length cannot trigger a huge allocation).
+    fn len(&mut self, what: &str, elem_size: usize) -> Result<usize, SnapshotError> {
+        let n = self.u64()? as usize;
+        let need = n
+            .checked_mul(elem_size)
+            .ok_or_else(|| SnapshotError::Corrupt(format!("absurd {what} count {n}")))?;
+        if self.bytes.len() - self.pos < need {
+            return Err(SnapshotError::Corrupt(format!(
+                "{what} section claims {need} bytes, {} remain",
+                self.bytes.len() - self.pos
+            )));
+        }
+        Ok(n)
+    }
+}
+
+fn write_opt_usize(out: &mut Vec<u8>, v: Option<usize>) {
+    match v {
+        None => out.push(0),
+        Some(x) => {
+            out.push(1);
+            out.extend_from_slice(&(x as u64).to_le_bytes());
+        }
+    }
+}
+
+fn read_opt_usize(r: &mut Reader) -> Result<Option<usize>, SnapshotError> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(r.u64()? as usize)),
+        other => Err(SnapshotError::Corrupt(format!("bad option flag {other}"))),
+    }
+}
+
+fn write_opt_f32(out: &mut Vec<u8>, v: Option<f32>) {
+    match v {
+        None => out.push(0),
+        Some(x) => {
+            out.push(1);
+            out.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+}
+
+fn read_opt_f32(r: &mut Reader) -> Result<Option<f32>, SnapshotError> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(f32::from_bits(r.u32()?))),
+        other => Err(SnapshotError::Corrupt(format!("bad option flag {other}"))),
+    }
+}
+
+fn write_options(out: &mut Vec<u8>, o: &NmfOptions) {
+    out.extend_from_slice(&(o.k as u64).to_le_bytes());
+    out.extend_from_slice(&(o.max_iters as u64).to_le_bytes());
+    out.extend_from_slice(&o.tol.to_bits().to_le_bytes());
+    out.extend_from_slice(&o.seed.to_le_bytes());
+    write_opt_usize(out, o.init_nnz);
+    out.push(o.track_error as u8);
+    out.push(match o.tie_mode {
+        TieMode::KeepTies => 0,
+        TieMode::Exact => 1,
+    });
+    match o.sparsity {
+        SparsityMode::None => out.push(0),
+        SparsityMode::Global { t_u, t_v } => {
+            out.push(1);
+            write_opt_usize(out, t_u);
+            write_opt_usize(out, t_v);
+        }
+        SparsityMode::PerColumn { t_u_col, t_v_col } => {
+            out.push(2);
+            write_opt_usize(out, t_u_col);
+            write_opt_usize(out, t_v_col);
+        }
+        SparsityMode::Threshold { tau_u, tau_v } => {
+            out.push(3);
+            write_opt_f32(out, tau_u);
+            write_opt_f32(out, tau_v);
+        }
+    }
+}
+
+fn read_options(r: &mut Reader) -> Result<NmfOptions, SnapshotError> {
+    let k = r.u64()? as usize;
+    let max_iters = r.u64()? as usize;
+    let tol = f64::from_bits(r.u64()?);
+    let seed = r.u64()?;
+    let init_nnz = read_opt_usize(r)?;
+    let track_error = match r.u8()? {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(SnapshotError::Corrupt(format!(
+                "bad track_error flag {other}"
+            )))
+        }
+    };
+    let tie_mode = match r.u8()? {
+        0 => TieMode::KeepTies,
+        1 => TieMode::Exact,
+        other => return Err(SnapshotError::Corrupt(format!("bad tie mode {other}"))),
+    };
+    let sparsity = match r.u8()? {
+        0 => SparsityMode::None,
+        1 => SparsityMode::Global {
+            t_u: read_opt_usize(r)?,
+            t_v: read_opt_usize(r)?,
+        },
+        2 => SparsityMode::PerColumn {
+            t_u_col: read_opt_usize(r)?,
+            t_v_col: read_opt_usize(r)?,
+        },
+        3 => SparsityMode::Threshold {
+            tau_u: read_opt_f32(r)?,
+            tau_v: read_opt_f32(r)?,
+        },
+        other => return Err(SnapshotError::Corrupt(format!("bad sparsity tag {other}"))),
+    };
+    // threads is a machine-local speed knob with a bit-identical
+    // determinism contract, so it is deliberately not persisted: a loaded
+    // model uses this machine's default
+    let mut opts = NmfOptions::new(k)
+        .with_iters(max_iters)
+        .with_tol(tol)
+        .with_seed(seed)
+        .with_sparsity(sparsity)
+        .with_track_error(track_error);
+    opts.tie_mode = tie_mode;
+    opts.init_nnz = init_nnz;
+    Ok(opts)
+}
+
+fn write_strings(out: &mut Vec<u8>, strings: &[String]) {
+    out.extend_from_slice(&(strings.len() as u64).to_le_bytes());
+    for s in strings {
+        out.extend_from_slice(&(s.len() as u64).to_le_bytes());
+        out.extend_from_slice(s.as_bytes());
+    }
+}
+
+fn read_strings(r: &mut Reader) -> Result<Vec<String>, SnapshotError> {
+    // each string costs at least its 8-byte length prefix
+    let n = r.len("string table", 8)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = r.len("string", 1)?;
+        let bytes = r.take(len)?;
+        out.push(
+            std::str::from_utf8(bytes)
+                .map_err(|e| SnapshotError::Corrupt(format!("bad UTF-8 string: {e}")))?
+                .to_string(),
+        );
+    }
+    Ok(out)
+}
+
+fn write_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn read_f64s(r: &mut Reader) -> Result<Vec<f64>, SnapshotError> {
+    let n = r.len("f64 series", 8)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(f64::from_bits(r.u64()?));
+    }
+    Ok(out)
+}
+
+/// CRC-32 (IEEE 802.3, reflected, init/xorout `0xffffffff`) — the common
+/// `crc32` of zlib/PNG. Table built once.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut crc = 0xffff_ffffu32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xff) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xffff_ffff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::TdmBuilder;
+
+    fn tiny_tdm() -> TermDocMatrix {
+        let mut b = TdmBuilder::new();
+        for _ in 0..4 {
+            b.add_text("coffee crop quotas coffee brazil crop", Some("econ"));
+            b.add_text("electrons atoms hydrogen electrons atoms", Some("sci"));
+        }
+        b.freeze()
+    }
+
+    fn sample() -> Snapshot {
+        let tdm = tiny_tdm();
+        let opts = NmfOptions::new(2)
+            .with_iters(7)
+            .with_seed(3)
+            .with_sparsity(SparsityMode::both(20, 30))
+            .with_tol(1e-6);
+        let r = crate::nmf::factorize(&tdm, &opts);
+        Snapshot::new(
+            opts,
+            r.u.clone(),
+            r.v.clone(),
+            &tdm,
+            Progress {
+                iterations: r.iterations,
+                residuals: r.residuals.clone(),
+                errors: r.errors.clone(),
+                memory: r.memory,
+                elapsed_s: r.elapsed_s,
+            },
+        )
+    }
+
+    fn assert_equal(a: &Snapshot, b: &Snapshot) {
+        assert_eq!(a.u, b.u);
+        assert_eq!(a.v, b.v);
+        assert_eq!(a.terms, b.terms);
+        assert_eq!(a.doc_labels, b.doc_labels);
+        assert_eq!(a.label_names, b.label_names);
+        assert_eq!(a.corpus_digest, b.corpus_digest);
+        assert_eq!(a.progress, b.progress);
+        assert_eq!(a.options.k, b.options.k);
+        assert_eq!(a.options.max_iters, b.options.max_iters);
+        assert_eq!(a.options.tol, b.options.tol);
+        assert_eq!(a.options.seed, b.options.seed);
+        assert_eq!(a.options.init_nnz, b.options.init_nnz);
+        assert_eq!(a.options.track_error, b.options.track_error);
+        assert_eq!(a.options.tie_mode, b.options.tie_mode);
+        assert_eq!(a.options.sparsity, b.options.sparsity);
+    }
+
+    #[test]
+    fn byte_roundtrip_is_identity() {
+        let snap = sample();
+        let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_equal(&snap, &back);
+    }
+
+    #[test]
+    fn file_roundtrip_is_identity() {
+        let snap = sample();
+        let path = std::env::temp_dir().join("esnmf_snapshot_unit.esnmf");
+        snap.save(&path).unwrap();
+        let back = Snapshot::load(&path).unwrap();
+        assert_equal(&snap, &back);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn every_sparsity_mode_roundtrips() {
+        let modes = [
+            SparsityMode::None,
+            SparsityMode::u_only(5),
+            SparsityMode::v_only(9),
+            SparsityMode::PerColumn {
+                t_u_col: Some(3),
+                t_v_col: None,
+            },
+            SparsityMode::Threshold {
+                tau_u: Some(0.25),
+                tau_v: None,
+            },
+        ];
+        for mode in modes {
+            let mut snap = sample();
+            snap.options = snap.options.with_sparsity(mode);
+            let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+            assert_eq!(back.options.sparsity, mode);
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(matches!(
+            Snapshot::from_bytes(&bytes),
+            Err(SnapshotError::BadMagic)
+        ));
+    }
+
+    #[test]
+    fn future_version_refused() {
+        let mut bytes = sample().to_bytes();
+        bytes[6..8].copy_from_slice(&(SNAPSHOT_VERSION + 1).to_le_bytes());
+        assert!(matches!(
+            Snapshot::from_bytes(&bytes),
+            Err(SnapshotError::UnsupportedVersion(_))
+        ));
+    }
+
+    #[test]
+    fn truncation_is_typed_at_every_length() {
+        let bytes = sample().to_bytes();
+        for cut in [0, 5, 19, 20, bytes.len() / 2, bytes.len() - 1] {
+            match Snapshot::from_bytes(&bytes[..cut]) {
+                Err(SnapshotError::Truncated { .. }) => {}
+                other => panic!("prefix of {cut} bytes: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_payload_bit_flip_is_caught_by_crc() {
+        let bytes = sample().to_bytes();
+        // flip one bit in a spread of payload positions
+        let n = bytes.len();
+        for pos in [20, 21, 20 + (n - 20) / 3, 20 + (n - 20) / 2, n - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x10;
+            match Snapshot::from_bytes(&bad) {
+                Err(SnapshotError::CrcMismatch { .. }) => {}
+                other => panic!("flip at {pos}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_corrupt() {
+        let mut bytes = sample().to_bytes();
+        bytes.push(0);
+        assert!(matches!(
+            Snapshot::from_bytes(&bytes),
+            Err(SnapshotError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn digest_pins_the_corpus() {
+        let tdm = tiny_tdm();
+        let snap = sample();
+        snap.check_corpus(&tdm).unwrap();
+        let mut b = TdmBuilder::new();
+        b.add_text("entirely different words here different words", None);
+        b.add_text("entirely different other words again here", None);
+        let other = b.freeze();
+        match snap.check_corpus(&other) {
+            Err(SnapshotError::Mismatch(msg)) => {
+                assert!(msg.contains("digest"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_ne!(corpus_digest(&tdm), corpus_digest(&other));
+    }
+
+    #[test]
+    fn k_mismatch_refused() {
+        let snap = sample();
+        snap.check_k(2).unwrap();
+        assert!(matches!(snap.check_k(7), Err(SnapshotError::Mismatch(_))));
+    }
+
+    #[test]
+    fn t_v_extraction() {
+        let mut snap = sample();
+        assert_eq!(snap.t_v(), Some(30));
+        snap.options = snap.options.with_sparsity(SparsityMode::None);
+        assert_eq!(snap.t_v(), None);
+        snap.options = snap.options.with_sparsity(SparsityMode::PerColumn {
+            t_u_col: None,
+            t_v_col: Some(4),
+        });
+        assert_eq!(snap.t_v(), Some(4));
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // standard test vector: "123456789" → 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn shape_validation_catches_internal_disagreement() {
+        let mut snap = sample();
+        snap.terms.pop(); // vocabulary no longer matches U's rows
+        assert!(matches!(
+            Snapshot::from_bytes(&snap.to_bytes()),
+            Err(SnapshotError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn absurd_rank_is_rejected_before_any_gram_allocation() {
+        // a well-formed, CRC-correct file whose options claim a huge k
+        // (and whose 0-row factors trivially satisfy the width checks)
+        // must be refused at load — serving would otherwise allocate a
+        // dense k×k Gram
+        let mut snap = sample();
+        let k = MAX_SNAPSHOT_K + 1;
+        snap.options = NmfOptions::new(k);
+        snap.u = Csr::zeros(0, k);
+        snap.v = Csr::zeros(0, k);
+        snap.terms.clear();
+        snap.doc_labels = None;
+        match Snapshot::from_bytes(&snap.to_bytes()) {
+            Err(SnapshotError::Corrupt(msg)) => assert!(msg.contains("rank"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        // a rank exceeding both factor heights is equally meaningless
+        let mut snap = sample();
+        snap.options = NmfOptions::new(64);
+        snap.u = Csr::zeros(3, 64);
+        snap.v = Csr::zeros(5, 64);
+        snap.terms = vec!["a".into(), "b".into(), "c".into()];
+        snap.doc_labels = None;
+        assert!(matches!(
+            Snapshot::from_bytes(&snap.to_bytes()),
+            Err(SnapshotError::Corrupt(_))
+        ));
+    }
+}

@@ -30,6 +30,7 @@ pub mod corpus;
 pub mod dense;
 pub mod eval;
 pub mod experiments;
+pub mod io;
 pub mod nmf;
 pub mod runtime;
 pub mod sparse;

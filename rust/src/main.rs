@@ -5,7 +5,8 @@
 //!                  print convergence + topic tables.
 //! * `experiment` — regenerate a paper figure/table (`fig1`..`fig9`,
 //!                  `table1`, or `all`).
-//! * `serve`      — factorize a corpus, then serve topic queries over TCP.
+//! * `serve`      — factorize a corpus (or load a `.esnmf` snapshot),
+//!                  then serve topic queries over TCP.
 //! * `gen-corpus` — write a synthetic preset corpus to disk as .txt files.
 //! * `artifacts`  — inspect/smoke-test the compiled XLA artifacts.
 
@@ -31,18 +32,30 @@ USAGE:
                    [--k N] [--iters N] [--sparsity none|both|u|v|percol] [--t-u N] [--t-v N]
                    [--algorithm als|seq] [--backend native|xla] [--seed N] [--init-nnz N]
                    [--threads N|auto] [--config file.toml] [--top N]
+                   [--save-model m.esnmf] [--checkpoint-every N]
+                   [--resume ck.esnmf] [--warm-start old.esnmf]
 
   --threads row-partitions the ALS hot path across N workers (default:
   auto = all cores). Results are bit-identical at any thread count.
+  --save-model persists the factorization as a versioned .esnmf snapshot
+  (factors, vocabulary, labels, options, corpus digest).
+  --checkpoint-every N writes that snapshot every N iterations mid-run;
+  --resume continues a checkpoint (refuses on corpus/k mismatch) and
+  reaches the same result as an uninterrupted run. --warm-start seeds U
+  from a prior snapshot aligned by term, for incremental corpora.
   esnmf experiment <fig1|fig2|fig3|table1|fig4|fig5|fig6|fig7|fig8|fig9|all>
                    [--scale ...] [--seed N] [--fast] [--out results/]
-  esnmf serve      [--addr 127.0.0.1:7878] [--serve-threads N|auto]
-                   [--cache-size N] [--foldin-t N] [factorize flags]
+  esnmf serve      [--addr 127.0.0.1:7878] [--model m.esnmf]
+                   [--serve-threads N|auto] [--cache-size N] [--foldin-t N]
+                   [factorize flags]
 
-  --serve-threads bounds the simultaneously served connections (default 8),
-  --cache-size sizes the CLASSIFY/FOLDIN response LRU (0 disables), and
-  --foldin-t caps the nonzeros of folded-in document rows (defaults to
-  --t-v when set). Wire protocol: rust/README.md.
+  --model serves a saved snapshot without factorizing (cold start = one
+  file read; refuses on k mismatch, and on digest mismatch when an
+  explicit --corpus is also given). --serve-threads bounds the
+  simultaneously served connections (default 8), --cache-size sizes the
+  CLASSIFY/FOLDIN response LRU (0 disables), and --foldin-t caps the
+  nonzeros of folded-in document rows (defaults to --t-v, else the
+  snapshot's training budget). Wire protocol: rust/README.md.
   esnmf gen-corpus [--corpus ...] [--scale ...] [--seed N] --out <dir>
   esnmf artifacts  [--dir artifacts/]
   esnmf help
@@ -142,7 +155,62 @@ fn build_run_config(args: &mut Args) -> Result<RunConfig> {
     if let Some(v) = args.opt_threads("threads").map_err(anyhow::Error::msg)? {
         cfg.threads = v;
     }
+    if let Some(v) = args.opt_str("save-model") {
+        cfg.save_model = Some(v);
+    }
+    if let Some(v) = args
+        .opt_parse::<usize>("checkpoint-every")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.checkpoint_every = v;
+    }
+    if let Some(v) = args.opt_str("resume") {
+        cfg.resume = Some(v);
+    }
+    if let Some(v) = args.opt_str("warm-start") {
+        cfg.warm_start = Some(v);
+    }
     Ok(cfg)
+}
+
+/// Load a snapshot with path context on the error.
+fn load_snapshot(path: &str) -> Result<esnmf::io::Snapshot> {
+    esnmf::io::Snapshot::load(std::path::Path::new(path))
+        .map_err(|e| anyhow::Error::from(e).context(format!("loading snapshot {path}")))
+}
+
+/// Persist the finished factorization as a `.esnmf` snapshot. `used` is
+/// the options the run *actually* trained with when they differ from the
+/// CLI's (a resumed run takes its solver math from the snapshot, and the
+/// saved model must record that, not the flag defaults).
+fn save_model(
+    path: &str,
+    cfg: &RunConfig,
+    tdm: &TermDocMatrix,
+    r: &esnmf::nmf::NmfResult,
+    used: Option<&esnmf::nmf::NmfOptions>,
+) -> Result<()> {
+    let options = match used {
+        Some(o) => o.clone(),
+        None => cfg.nmf_options()?,
+    };
+    let snap = esnmf::io::Snapshot::new(
+        options,
+        r.u.clone(),
+        r.v.clone(),
+        tdm,
+        esnmf::io::Progress {
+            iterations: r.iterations,
+            residuals: r.residuals.clone(),
+            errors: r.errors.clone(),
+            memory: r.memory,
+            elapsed_s: r.elapsed_s,
+        },
+    );
+    snap.save(std::path::Path::new(path))
+        .map_err(|e| anyhow::Error::from(e).context(format!("saving snapshot {path}")))?;
+    log_info!("snapshot", "wrote model snapshot to {path}");
+    Ok(())
 }
 
 fn load_corpus(cfg: &RunConfig) -> Result<TermDocMatrix> {
@@ -159,12 +227,59 @@ fn load_corpus(cfg: &RunConfig) -> Result<TermDocMatrix> {
     Ok(corpus::generate_tdm(&spec, cfg.seed))
 }
 
-fn run_factorization(cfg: &RunConfig, tdm: &TermDocMatrix) -> Result<esnmf::nmf::NmfResult> {
+/// Run the configured factorization. The second return is the options
+/// the run actually trained with when they differ from the CLI's (a
+/// resumed run takes its solver math from the snapshot) — `--save-model`
+/// must record those.
+fn run_factorization(
+    cfg: &RunConfig,
+    tdm: &TermDocMatrix,
+) -> Result<(esnmf::nmf::NmfResult, Option<esnmf::nmf::NmfOptions>)> {
+    // checkpoint continuation / warm start run on the native ALS driver
+    if cfg.resume.is_some() || cfg.warm_start.is_some() {
+        anyhow::ensure!(
+            cfg.resume.is_none() || cfg.warm_start.is_none(),
+            "--resume and --warm-start are mutually exclusive (resume continues the exact run; warm-start begins a new one)"
+        );
+        anyhow::ensure!(
+            cfg.algorithm == Algorithm::Als && cfg.backend == BackendKind::Native,
+            "--resume/--warm-start require --algorithm als --backend native"
+        );
+        let opts = cfg.nmf_options()?;
+        if let Some(path) = &cfg.resume {
+            let snap = load_snapshot(path)?;
+            log_info!(
+                "snapshot",
+                "resuming from {path} at iteration {}",
+                snap.progress.iterations
+            );
+            let used = esnmf::nmf::resume_options(&opts, &snap);
+            let r = esnmf::nmf::resume(tdm, &opts, &snap)?;
+            return Ok((r, Some(used)));
+        }
+        let path = cfg.warm_start.as_ref().unwrap();
+        let snap = load_snapshot(path)?;
+        snap.check_k(opts.k)
+            .map_err(|e| anyhow::Error::from(e).context("warm start"))?;
+        let u0 =
+            esnmf::nmf::init::warm_start_u(&snap.u, &snap.terms, &tdm.terms, opts.k, opts.seed);
+        let old: std::collections::HashSet<&str> =
+            snap.terms.iter().map(|t| t.as_str()).collect();
+        let carried = tdm.terms.iter().filter(|t| old.contains(t.as_str())).count();
+        log_info!(
+            "snapshot",
+            "warm start from {path}: {carried}/{} terms carried over",
+            tdm.n_terms()
+        );
+        return Ok((esnmf::nmf::factorize_from(tdm, &opts, u0), None));
+    }
     match cfg.algorithm {
-        Algorithm::Sequential => Ok(factorize_sequential(tdm, &cfg.sequential_options())),
+        Algorithm::Sequential => {
+            Ok((factorize_sequential(tdm, &cfg.sequential_options()), None))
+        }
         Algorithm::Als => {
             let opts = cfg.nmf_options()?;
-            match cfg.backend {
+            let r = match cfg.backend {
                 BackendKind::Native => NativeBackend::new().factorize(tdm, &opts),
                 BackendKind::Xla => {
                     let dir = runtime::artifact_dir();
@@ -194,7 +309,8 @@ fn run_factorization(cfg: &RunConfig, tdm: &TermDocMatrix) -> Result<esnmf::nmf:
                     log_info!("backend", "xla artifact shape ({n}, {m}, {k})");
                     XlaBackend::new(guard.handle.clone(), n, m, k).factorize(tdm, &opts)
                 }
-            }
+            };
+            Ok((r?, None))
         }
     }
 }
@@ -213,7 +329,11 @@ fn cmd_factorize(args: &mut Args) -> Result<()> {
         tdm.a.nnz(),
         tdm.a.sparsity() * 100.0
     );
-    let r = run_factorization(&cfg, &tdm)?;
+    let (r, used_opts) = run_factorization(&cfg, &tdm)?;
+    if let Some(path) = &cfg.save_model {
+        save_model(path, &cfg, &tdm, &r, used_opts.as_ref())?;
+        println!("saved model snapshot to {path}");
+    }
 
     println!(
         "completed {} iterations in {:.3}s  final residual {:.3e}  final error {:.4}",
@@ -276,6 +396,10 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
 
 fn cmd_serve(args: &mut Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7878");
+    // flags the snapshot path must cross-check (option reads don't
+    // consume the value, so build_run_config still sees them)
+    let explicit_k = args.opt_parse::<usize>("k").map_err(anyhow::Error::msg)?;
+    let explicit_corpus = args.opt_str("corpus");
     let mut cfg = build_run_config(args)?;
     if let Some(v) = args
         .opt_threads("serve-threads")
@@ -295,13 +419,53 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     {
         cfg.foldin_t = Some(v);
     }
+    if let Some(v) = args.opt_str("model") {
+        cfg.model = Some(v);
+    }
     args.check_unknown().map_err(anyhow::Error::msg)?;
 
-    let tdm = load_corpus(&cfg)?;
-    let r = run_factorization(&cfg, &tdm)?;
-    let model = Arc::new(
-        TopicModel::new(r.u, r.v, tdm.terms.clone()).with_foldin_budget(cfg.foldin_budget()),
-    );
+    let model = match cfg.model.clone() {
+        Some(path) => {
+            // cold start from disk: no corpus generation, no factorization
+            let snap = load_snapshot(&path)?;
+            if let Some(k) = explicit_k {
+                snap.check_k(k)
+                    .map_err(|e| anyhow::Error::from(e).context("serve --model"))?;
+            }
+            if explicit_corpus.is_some() {
+                // an explicit corpus alongside --model is a request to
+                // verify the snapshot actually belongs to that corpus
+                let tdm = load_corpus(&cfg)?;
+                snap.check_corpus(&tdm)
+                    .map_err(|e| anyhow::Error::from(e).context("serve --model"))?;
+            }
+            log_info!(
+                "serve",
+                "loaded snapshot {path}: {} terms × {} docs, k={}",
+                snap.u.rows,
+                snap.v.rows,
+                snap.options.k
+            );
+            // from_snapshot already defaults the fold-in budget to the
+            // snapshot's t_v; only an explicit --foldin-t overrides it
+            let mut model = TopicModel::from_snapshot(snap);
+            if cfg.foldin_t.is_some() {
+                model = model.with_foldin_budget(cfg.foldin_t);
+            }
+            Arc::new(model)
+        }
+        None => {
+            let tdm = load_corpus(&cfg)?;
+            let (r, used_opts) = run_factorization(&cfg, &tdm)?;
+            if let Some(path) = &cfg.save_model {
+                save_model(path, &cfg, &tdm, &r, used_opts.as_ref())?;
+            }
+            Arc::new(
+                TopicModel::new(r.u, r.v, tdm.terms.clone())
+                    .with_foldin_budget(cfg.foldin_budget()),
+            )
+        }
+    };
     let metrics = MetricsRegistry::new();
     let opts = cfg.serve_options();
     let workers = opts.threads;

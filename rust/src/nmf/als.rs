@@ -175,24 +175,122 @@ pub fn factorize(tdm: &TermDocMatrix, opts: &NmfOptions) -> NmfResult {
 }
 
 /// As [`factorize`] but with an explicit initial guess (used by the
-/// backend-agreement tests and by warm restarts).
+/// backend-agreement tests and by warm starts, see
+/// [`crate::nmf::init::warm_start_u`]).
 pub fn factorize_from(tdm: &TermDocMatrix, opts: &NmfOptions, u0: Csr) -> NmfResult {
     assert_eq!(u0.rows, tdm.n_terms(), "U₀ row count != vocabulary size");
     assert_eq!(u0.cols, opts.k, "U₀ column count != k");
+    let mut mem = MemoryTracker::new();
+    mem.observe_pair(u0.nnz(), 0); // the initial guess is stored too
+    let state = LoopState {
+        u: u0,
+        v: Csr::zeros(tdm.n_docs(), opts.k),
+        start_iter: 0,
+        residuals: Vec::with_capacity(opts.max_iters),
+        errors: Vec::new(),
+        mem,
+        elapsed_base_s: 0.0,
+    };
+    run_loop(tdm, opts, state)
+}
+
+/// Continue a checkpointed run. The solver math (k, sparsity, tie mode,
+/// tolerance, error tracking) comes from the *snapshot's* recorded
+/// options so the continued trajectory is exactly the uninterrupted one;
+/// only `max_iters`, `threads` and the checkpoint knobs are taken from
+/// `opts` (a resumed run may extend the iteration budget, use a
+/// different machine, and keep checkpointing). Refuses with a typed
+/// [`SnapshotError`](crate::io::SnapshotError) when the corpus digest or
+/// the requested `k` do not match the snapshot.
+pub fn resume(
+    tdm: &TermDocMatrix,
+    opts: &NmfOptions,
+    snap: &crate::io::Snapshot,
+) -> crate::Result<NmfResult> {
+    snap.check_k(opts.k)?;
+    snap.check_corpus(tdm)?;
+    snap.check_resumable()?;
+    let effective = resume_options(opts, snap);
+
+    let p = &snap.progress;
+    let state = LoopState {
+        u: snap.u.clone(),
+        v: snap.v.clone(),
+        start_iter: p.iterations,
+        residuals: p.residuals.clone(),
+        errors: p.errors.clone(),
+        mem: MemoryTracker::from_stats(p.memory),
+        elapsed_base_s: p.elapsed_s,
+    };
+    // already converged (or the budget is already spent): the stored
+    // result IS the final result — do not run an extra iteration the
+    // uninterrupted run would not have run
+    let done_by_tol = effective.tol > 0.0
+        && p.residuals.last().is_some_and(|&r| r < effective.tol);
+    if done_by_tol || p.iterations >= effective.max_iters {
+        let memory = state.mem.finish(state.u.nnz(), state.v.nnz());
+        return Ok(NmfResult {
+            u: state.u,
+            v: state.v,
+            iterations: state.start_iter,
+            residuals: state.residuals,
+            errors: state.errors,
+            memory,
+            elapsed_s: state.elapsed_base_s,
+        });
+    }
+    Ok(run_loop(tdm, &effective, state))
+}
+
+/// The options a resumed run actually trains with: the snapshot's
+/// recorded solver math, with only the iteration budget, thread count
+/// and checkpoint knobs taken from the caller. Public so a
+/// `--save-model` after `--resume` records the options the run really
+/// used instead of the CLI defaults.
+pub fn resume_options(opts: &NmfOptions, snap: &crate::io::Snapshot) -> NmfOptions {
+    let mut effective = snap.options.clone();
+    effective.max_iters = opts.max_iters;
+    effective.threads = opts.threads;
+    effective.checkpoint_every = opts.checkpoint_every;
+    effective.checkpoint_path = opts.checkpoint_path.clone();
+    effective
+}
+
+/// Mid-run solver state — everything an iteration boundary carries.
+struct LoopState {
+    u: Csr,
+    v: Csr,
+    /// completed iterations before this (re)start
+    start_iter: usize,
+    residuals: Vec<f64>,
+    errors: Vec<f64>,
+    mem: MemoryTracker,
+    /// wall time accumulated by previous (checkpointed) segments
+    elapsed_base_s: f64,
+}
+
+fn run_loop(tdm: &TermDocMatrix, opts: &NmfOptions, state: LoopState) -> NmfResult {
     let timer = Timer::start();
     let a = &tdm.a;
     let a_csc = &tdm.a_csc;
     let norm_a_sq = a.fro_norm_sq();
+    // the corpus is immutable for the whole run, so hash it once up
+    // front instead of once per checkpoint (it is O(nnz))
+    let checkpoint_digest = (opts.checkpoint_every > 0 && opts.checkpoint_path.is_some())
+        .then(|| crate::io::corpus_digest(tdm));
 
-    let mut mem = MemoryTracker::new();
-    let mut u = u0;
-    let mut v = Csr::zeros(tdm.n_docs(), opts.k);
-    mem.observe_pair(u.nnz(), 0); // the initial guess is stored too
-    let mut residuals = Vec::with_capacity(opts.max_iters);
-    let mut errors = Vec::new();
-    let mut iterations = 0;
+    let LoopState {
+        mut u,
+        mut v,
+        start_iter,
+        mut residuals,
+        mut errors,
+        mut mem,
+        elapsed_base_s,
+    } = state;
+    let mut iterations = start_iter;
 
-    for _ in 0..opts.max_iters {
+    for it in start_iter..opts.max_iters {
         v = half_step_v(a_csc, &u, opts, &mut mem);
         mem.observe_pair(u.nnz(), v.nnz());
         let u_new = half_step_u(a, &v, opts, &mut mem);
@@ -201,12 +299,52 @@ pub fn factorize_from(tdm: &TermDocMatrix, opts: &NmfOptions, u0: Csr) -> NmfRes
         let r = rel_residual(&u_new, &u);
         residuals.push(r);
         u = u_new;
-        iterations += 1;
+        iterations = it + 1;
 
         if opts.track_error {
             errors.push(rel_error_sparse(a, &u, &v, norm_a_sq));
         }
-        if opts.tol > 0.0 && r < opts.tol {
+        let stopping = opts.tol > 0.0 && r < opts.tol;
+        // checkpoint cadence counts absolute iterations so a resumed run
+        // checkpoints at the same boundaries the uninterrupted one did;
+        // nothing is written on the stopping iteration (the final model
+        // is the caller's --save-model, not a checkpoint)
+        if !stopping && opts.checkpoint_every > 0 && iterations % opts.checkpoint_every == 0 {
+            if let Some(path) = &opts.checkpoint_path {
+                let progress = crate::io::Progress {
+                    iterations,
+                    residuals: residuals.clone(),
+                    errors: errors.clone(),
+                    memory: *mem.peek(),
+                    elapsed_s: elapsed_base_s + timer.elapsed_s(),
+                };
+                let snap = crate::io::Snapshot {
+                    options: opts.clone(),
+                    u: u.clone(),
+                    v: v.clone(),
+                    terms: tdm.terms.clone(),
+                    doc_labels: tdm.doc_labels.clone(),
+                    label_names: tdm.label_names.clone(),
+                    corpus_digest: checkpoint_digest.unwrap_or_default(),
+                    progress,
+                };
+                if let Err(e) = snap.save(path) {
+                    // a failing checkpoint disk must not abort hours of
+                    // training — warn and keep iterating
+                    crate::log_warn!(
+                        "als",
+                        "checkpoint at iteration {iterations} failed: {e}"
+                    );
+                } else {
+                    crate::log_debug!(
+                        "als",
+                        "checkpointed iteration {iterations} to {}",
+                        path.display()
+                    );
+                }
+            }
+        }
+        if stopping {
             break;
         }
     }
@@ -219,7 +357,7 @@ pub fn factorize_from(tdm: &TermDocMatrix, opts: &NmfOptions, u0: Csr) -> NmfRes
         residuals,
         errors,
         memory,
-        elapsed_s: timer.elapsed_s(),
+        elapsed_s: elapsed_base_s + timer.elapsed_s(),
     }
 }
 
@@ -399,5 +537,96 @@ mod tests {
         let opts = NmfOptions::new(2);
         let bad = Csr::zeros(3, 2);
         factorize_from(&tdm, &opts, bad);
+    }
+
+    fn assert_same_result(a: &NmfResult, b: &NmfResult) {
+        assert_eq!(a.u, b.u);
+        assert_eq!(a.v, b.v);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.residuals, b.residuals);
+        assert_eq!(a.errors, b.errors);
+        assert_eq!(a.memory, b.memory);
+    }
+
+    #[test]
+    fn resume_from_checkpoint_matches_uninterrupted_run() {
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 31);
+        let ck = std::env::temp_dir().join("esnmf_als_resume_test.esnmf");
+        let _ = std::fs::remove_file(&ck);
+
+        let mut opts = NmfOptions::new(3)
+            .with_iters(9)
+            .with_seed(17)
+            .with_sparsity(SparsityMode::both(40, 90));
+        opts.tie_mode = crate::sparse::TieMode::Exact;
+        let uninterrupted = factorize(&tdm, &opts);
+
+        // same run, checkpointing every 4 iterations, "crashing" at 8
+        let ck_opts = opts.clone().with_iters(8).with_checkpoint(&ck, 4);
+        let _partial = factorize(&tdm, &ck_opts);
+        let snap = crate::io::Snapshot::load(&ck).unwrap();
+        assert_eq!(snap.progress.iterations, 8);
+
+        // resume to the full budget: bit-identical to never crashing
+        let resumed = super::resume(&tdm, &opts, &snap).unwrap();
+        assert_same_result(&resumed, &uninterrupted);
+        std::fs::remove_file(&ck).unwrap();
+    }
+
+    #[test]
+    fn resume_refuses_wrong_corpus_and_wrong_k() {
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 37);
+        let other = generate_tdm(&reuters_sim(Scale::Tiny), 38);
+        let opts = NmfOptions::new(3).with_iters(4).with_seed(5);
+        let r = factorize(&tdm, &opts);
+        let snap = crate::io::Snapshot::new(
+            opts.clone(),
+            r.u,
+            r.v,
+            &tdm,
+            crate::io::Progress {
+                iterations: r.iterations,
+                residuals: r.residuals,
+                errors: r.errors,
+                memory: r.memory,
+                elapsed_s: 0.0,
+            },
+        );
+        // wrong corpus → digest refusal
+        let err = super::resume(&other, &opts, &snap).unwrap_err();
+        assert!(format!("{err:#}").contains("digest"), "{err:#}");
+        // wrong k → typed refusal
+        let bad_k = NmfOptions::new(7).with_iters(8);
+        let err = super::resume(&tdm, &bad_k, &snap).unwrap_err();
+        assert!(format!("{err:#}").contains("k="), "{err:#}");
+    }
+
+    #[test]
+    fn resume_past_budget_or_tolerance_returns_the_stored_result() {
+        let tdm = tiny_tdm();
+        let opts = NmfOptions::new(2).with_iters(6).with_seed(3);
+        let r = factorize(&tdm, &opts);
+        let snap = crate::io::Snapshot::new(
+            opts.clone(),
+            r.u.clone(),
+            r.v.clone(),
+            &tdm,
+            crate::io::Progress {
+                iterations: r.iterations,
+                residuals: r.residuals.clone(),
+                errors: r.errors.clone(),
+                memory: r.memory,
+                elapsed_s: r.elapsed_s,
+            },
+        );
+        // same budget: nothing left to do, stored result comes back
+        let same = super::resume(&tdm, &opts, &snap).unwrap();
+        assert_same_result(&same, &r);
+        // extended budget: runs exactly the extra iterations
+        let more = super::resume(&tdm, &opts.clone().with_iters(9), &snap).unwrap();
+        assert_eq!(more.iterations, 9);
+        assert_eq!(more.residuals[..6], r.residuals[..]);
+        let full = factorize(&tdm, &opts.clone().with_iters(9));
+        assert_same_result(&more, &full);
     }
 }

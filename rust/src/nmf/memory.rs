@@ -29,6 +29,13 @@ impl MemoryTracker {
         MemoryTracker::default()
     }
 
+    /// Resume tracking from previously-recorded peaks (checkpoint
+    /// restore): the resumed run's peaks continue from the checkpointed
+    /// ones, so the final [`MemoryStats`] matches an uninterrupted run.
+    pub fn from_stats(stats: MemoryStats) -> Self {
+        MemoryTracker { stats }
+    }
+
     /// Record a snapshot of the two live factor-side objects (stored
     /// scalar counts; for a frozen CSR that is its nnz, for a RowBlock
     /// candidate its active_rows × k).

@@ -21,7 +21,7 @@ pub mod memory;
 pub mod options;
 pub mod sequential;
 
-pub use als::{factorize, half_step_u, half_step_v};
+pub use als::{factorize, factorize_from, half_step_u, half_step_v, resume, resume_options};
 pub use foldin::FoldIn;
 pub use convergence::{rel_error_sparse, rel_residual};
 pub use memory::MemoryTracker;

@@ -78,6 +78,13 @@ pub struct NmfOptions {
     /// determinism contract in `crate::coordinator::pool`), so this is
     /// purely a speed knob.
     pub threads: usize,
+    /// write a `.esnmf` checkpoint to `checkpoint_path` every N completed
+    /// iterations (0 = never). The driver skips the write on the final
+    /// iteration's tol-break so resuming a checkpoint never overshoots an
+    /// uninterrupted run.
+    pub checkpoint_every: usize,
+    /// where periodic checkpoints go (required when `checkpoint_every > 0`)
+    pub checkpoint_path: Option<std::path::PathBuf>,
 }
 
 impl NmfOptions {
@@ -92,6 +99,8 @@ impl NmfOptions {
             init_nnz: None,
             track_error: true,
             threads: crate::coordinator::pool::default_threads(),
+            checkpoint_every: 0,
+            checkpoint_path: None,
         }
     }
 
@@ -122,6 +131,14 @@ impl NmfOptions {
 
     pub fn with_track_error(mut self, track: bool) -> Self {
         self.track_error = track;
+        self
+    }
+
+    /// Checkpoint to `path` every `every` completed iterations
+    /// (`every = 0` disables).
+    pub fn with_checkpoint(mut self, path: impl Into<std::path::PathBuf>, every: usize) -> Self {
+        self.checkpoint_path = Some(path.into());
+        self.checkpoint_every = every;
         self
     }
 

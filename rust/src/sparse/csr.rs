@@ -193,6 +193,81 @@ impl Csr {
         self.indptr = new_indptr;
     }
 
+    /// Append the raw little-endian serialization of this matrix:
+    /// `rows u64 · cols u64 · nnz u64 · indptr (rows+1 × u64) ·
+    /// indices (nnz × u32) · values (nnz × f32 bit patterns)`.
+    /// Exact inverse of [`Csr::read_bytes`]; value bits round-trip
+    /// unchanged, so a deserialized factor is bit-identical.
+    pub fn write_bytes(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.rows as u64).to_le_bytes());
+        out.extend_from_slice(&(self.cols as u64).to_le_bytes());
+        out.extend_from_slice(&(self.nnz() as u64).to_le_bytes());
+        for &p in &self.indptr {
+            out.extend_from_slice(&(p as u64).to_le_bytes());
+        }
+        for &i in &self.indices {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        for &v in &self.values {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Parse a matrix previously written by [`Csr::write_bytes`], advancing
+    /// `pos` past the consumed bytes. Bounds are checked before any
+    /// allocation and the result is structurally validated, so corrupt or
+    /// truncated input yields an error, never a panic or an OOM.
+    pub fn read_bytes(bytes: &[u8], pos: &mut usize) -> Result<Csr, String> {
+        fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], String> {
+            let end = pos
+                .checked_add(n)
+                .filter(|&e| e <= bytes.len())
+                .ok_or_else(|| format!("truncated CSR: need {n} bytes at offset {pos}"))?;
+            let s = &bytes[*pos..end];
+            *pos = end;
+            Ok(s)
+        }
+        fn u64_at(bytes: &[u8], pos: &mut usize) -> Result<u64, String> {
+            Ok(u64::from_le_bytes(take(bytes, pos, 8)?.try_into().unwrap()))
+        }
+        let rows = u64_at(bytes, pos)? as usize;
+        let cols = u64_at(bytes, pos)? as usize;
+        let nnz = u64_at(bytes, pos)? as usize;
+        // reject impossible sizes before allocating
+        let need = rows
+            .checked_add(1)
+            .and_then(|r| r.checked_mul(8))
+            .and_then(|a| nnz.checked_mul(8).and_then(|b| a.checked_add(b)))
+            .ok_or_else(|| "CSR header claims absurd sizes".to_string())?;
+        if bytes.len() - *pos < need {
+            return Err(format!(
+                "truncated CSR: header claims {need} payload bytes, {} remain",
+                bytes.len() - *pos
+            ));
+        }
+        let mut indptr = Vec::with_capacity(rows + 1);
+        for _ in 0..rows + 1 {
+            indptr.push(u64_at(bytes, pos)? as usize);
+        }
+        let mut indices = Vec::with_capacity(nnz);
+        for chunk in take(bytes, pos, nnz * 4)?.chunks_exact(4) {
+            indices.push(u32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        let mut values = Vec::with_capacity(nnz);
+        for chunk in take(bytes, pos, nnz * 4)?.chunks_exact(4) {
+            values.push(f32::from_bits(u32::from_le_bytes(chunk.try_into().unwrap())));
+        }
+        let m = Csr {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+        };
+        m.validate().map_err(|e| format!("corrupt CSR: {e}"))?;
+        Ok(m)
+    }
+
     /// Structural validation — used by property tests and debug assertions.
     pub fn validate(&self) -> Result<(), String> {
         if self.indptr.len() != self.rows + 1 {
@@ -306,5 +381,60 @@ mod tests {
         let mut m = sample();
         m.indices[0] = 99;
         assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn byte_roundtrip_is_bit_identical() {
+        let m = sample();
+        let mut bytes = Vec::new();
+        m.write_bytes(&mut bytes);
+        let mut pos = 0;
+        let back = Csr::read_bytes(&bytes, &mut pos).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(pos, bytes.len());
+        // empty matrices round-trip too
+        let z = Csr::zeros(4, 7);
+        let mut bytes = Vec::new();
+        z.write_bytes(&mut bytes);
+        let mut pos = 0;
+        assert_eq!(Csr::read_bytes(&bytes, &mut pos).unwrap(), z);
+    }
+
+    #[test]
+    fn byte_roundtrip_preserves_value_bits() {
+        // subnormals and negative zero must survive exactly
+        let m = Csr::from_dense(1, 3, &[f32::MIN_POSITIVE / 2.0, -0.0, 1.5]);
+        let mut bytes = Vec::new();
+        m.write_bytes(&mut bytes);
+        let back = Csr::read_bytes(&bytes, &mut 0).unwrap();
+        assert_eq!(
+            back.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            m.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn read_bytes_rejects_truncation_and_corruption() {
+        let m = sample();
+        let mut bytes = Vec::new();
+        m.write_bytes(&mut bytes);
+        // every strict prefix fails cleanly
+        for cut in 0..bytes.len() {
+            assert!(
+                Csr::read_bytes(&bytes[..cut], &mut 0).is_err(),
+                "prefix of {cut} bytes parsed"
+            );
+        }
+        // absurd header sizes are rejected before allocation
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&u64::MAX.to_le_bytes());
+        huge.extend_from_slice(&u64::MAX.to_le_bytes());
+        huge.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Csr::read_bytes(&huge, &mut 0).is_err());
+        // structural corruption (column out of bounds) is caught
+        let mut bad = bytes.clone();
+        let idx_start = 8 * 3 + 8 * 4; // header + indptr
+        bad[idx_start] = 0xff;
+        assert!(Csr::read_bytes(&bad, &mut 0).is_err());
     }
 }

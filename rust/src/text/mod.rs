@@ -9,6 +9,6 @@ pub mod tdm;
 pub mod tokenizer;
 pub mod vocab;
 
-pub use tdm::{TdmBuilder, TermDocMatrix};
-pub use tokenizer::tokenize;
+pub use tdm::{TdmBuilder, TermDocMatrix, UNLABELED};
+pub use tokenizer::{normalize_term, tokenize};
 pub use vocab::Vocab;

@@ -11,6 +11,15 @@ use super::vocab::Vocab;
 use crate::sparse::{Coo, Csc, Csr};
 use std::collections::HashMap;
 
+/// Label assigned at freeze to documents added without a label when the
+/// corpus is *partially* labeled (e.g. a directory mixing flat `.txt`
+/// files with labeled subdirectories). Guarantees the invariant
+/// downstream eval relies on: whenever `doc_labels` is `Some`, every
+/// entry is a valid index into `label_names` — previously such corpora
+/// carried a `u32::MAX` sentinel that panicked or indexed out of bounds
+/// in the accuracy/eval paths.
+pub const UNLABELED: &str = "_unlabeled";
+
 /// The frozen corpus matrix plus the metadata evaluation needs.
 #[derive(Clone, Debug)]
 pub struct TermDocMatrix {
@@ -140,12 +149,32 @@ impl TdmBuilder {
 
         let terms: Vec<String> = keep.iter().map(|&id| self.vocab.term(id).to_string()).collect();
         let a_csc = a.to_csc();
+
+        // a partially-labeled corpus (some docs added with a label, some
+        // without) gets the UNLABELED sentinel for the gaps, so Some(labels)
+        // always means "every entry indexes label_names"
+        let mut labels = self.labels;
+        let mut label_names = self.label_names;
+        if self.any_label && labels.iter().any(|&l| l == u32::MAX) {
+            let id = match label_names.iter().position(|n| n == UNLABELED) {
+                Some(i) => i as u32,
+                None => {
+                    label_names.push(UNLABELED.to_string());
+                    (label_names.len() - 1) as u32
+                }
+            };
+            for l in &mut labels {
+                if *l == u32::MAX {
+                    *l = id;
+                }
+            }
+        }
         TermDocMatrix {
             a,
             a_csc,
             terms,
-            doc_labels: if self.any_label { Some(self.labels) } else { None },
-            label_names: self.label_names,
+            doc_labels: if self.any_label { Some(labels) } else { None },
+            label_names,
         }
     }
 }
@@ -193,6 +222,27 @@ mod tests {
     fn csc_twin_matches() {
         let tdm = tiny_corpus();
         assert_eq!(tdm.a_csc.to_csr(), tdm.a);
+    }
+
+    #[test]
+    fn partially_labeled_corpus_gets_the_sentinel() {
+        let mut b = TdmBuilder::new();
+        b.add_text("coffee crop coffee crop", Some("econ"));
+        b.add_text("coffee crop coffee", None); // unlabeled rider
+        b.add_text("electrons atoms electrons atoms", Some("sci"));
+        let tdm = b.freeze();
+        let labels = tdm.doc_labels.as_ref().unwrap();
+        assert_eq!(labels.len(), 3);
+        // every label is a valid index into label_names (no u32::MAX leak)
+        for &l in labels {
+            assert!((l as usize) < tdm.label_names.len(), "label {l} out of range");
+        }
+        assert_eq!(tdm.label_names, vec!["econ", "sci", UNLABELED]);
+        assert_eq!(labels[1] as usize, 2);
+        // eval over such labels no longer panics/misindexes
+        let v = Csr::from_dense(3, 2, &[1.0, 0.0, 1.0, 0.0, 0.0, 1.0]);
+        let acc = crate::eval::mean_topic_accuracy(&v, labels, tdm.label_names.len());
+        assert!(acc.is_finite());
     }
 
     #[test]

@@ -2,6 +2,25 @@
 //! alphabetic tokens of length ≥ 2 (single characters and pure numbers
 //! carry no topical signal and the paper filters singletons anyway).
 
+/// The canonical case normalization of this stack — char-wise Unicode
+/// lowercasing, exactly what [`tokenize`] applies while building the
+/// vocabulary. Every term lookup against that vocabulary (the model's
+/// CLASSIFY/FOLDIN paths) and every case-folding cache key MUST use this
+/// function rather than `str::to_lowercase`: the two differ on
+/// context-sensitive mappings (e.g. Greek final sigma — `"ΟΔΟΣ"`
+/// lowercases to `"οδος"` as a string but to `"οδοσ"` char-wise), and a
+/// lookup normalized differently from the stored vocabulary silently
+/// misses, serving wrong answers.
+pub fn normalize_term(term: &str) -> String {
+    let mut out = String::with_capacity(term.len());
+    for ch in term.chars() {
+        for lc in ch.to_lowercase() {
+            out.push(lc);
+        }
+    }
+    out
+}
+
 /// Tokenize one document into lowercase terms.
 pub fn tokenize(text: &str) -> Vec<String> {
     let mut out = Vec::new();
@@ -62,5 +81,25 @@ mod tests {
     #[test]
     fn unicode_lowercases() {
         assert_eq!(tokenize("Zürich Ärzte"), vec!["zürich", "ärzte"]);
+    }
+
+    #[test]
+    fn normalize_term_matches_tokenizer_exactly() {
+        // including the context-sensitive cases where str::to_lowercase
+        // diverges (Greek capital sigma in final position)
+        for word in ["Coffee", "ΟΔΟΣ", "İstanbul", "ÄRZTE", "mixedCASE'"] {
+            let toks = tokenize(word);
+            if let Some(tok) = toks.first() {
+                // the tokenizer also strips quotes/possessives, so compare
+                // against the normalized-then-stripped form
+                let mut norm = normalize_term(word);
+                norm = norm.trim_end_matches("'s").trim_matches('\'').to_string();
+                assert_eq!(tok, &norm, "word {word:?}");
+            }
+        }
+        // the regression this function exists for: final sigma
+        assert_eq!(normalize_term("ΟΔΟΣ"), "οδοσ");
+        assert_ne!(normalize_term("ΟΔΟΣ"), "ΟΔΟΣ".to_lowercase());
+        assert_eq!(tokenize("ΟΔΟΣ")[0], normalize_term("ΟΔΟΣ"));
     }
 }

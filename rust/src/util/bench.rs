@@ -14,6 +14,10 @@
 //! * `ESNMF_BENCH_JSON=<dir>` — on drop, each suite writes its results
 //!   as `<dir>/<slug-of-title>.json` (machine-readable; CI uploads these
 //!   as workflow artifacts).
+//! * `ESNMF_BENCH_COMBINED=<file>` — on drop, each suite also merges its
+//!   results into one accumulating JSON file keyed by suite slug (CI
+//!   points this at `BENCH_smoke.json` in the repository root, so every
+//!   PR's smoke run produces one comparable perf-trajectory document).
 
 use super::json::Json;
 use super::stats;
@@ -168,21 +172,59 @@ impl BenchSuite {
     }
 
     fn emit_json(&self) {
-        let Ok(dir) = std::env::var("ESNMF_BENCH_JSON") else {
-            return;
-        };
-        if dir.is_empty() || self.results.is_empty() {
+        if self.results.is_empty() {
             return;
         }
-        if std::fs::create_dir_all(&dir).is_err() {
-            eprintln!("bench: cannot create {dir}; skipping JSON emission");
-            return;
+        if let Ok(dir) = std::env::var("ESNMF_BENCH_JSON") {
+            if !dir.is_empty() {
+                if std::fs::create_dir_all(&dir).is_err() {
+                    eprintln!("bench: cannot create {dir}; skipping JSON emission");
+                } else {
+                    let path =
+                        std::path::Path::new(&dir).join(format!("{}.json", self.slug()));
+                    match std::fs::write(&path, self.to_json().to_string()) {
+                        Ok(()) => println!("wrote {}", path.display()),
+                        Err(e) => eprintln!("bench: writing {}: {e}", path.display()),
+                    }
+                }
+            }
         }
-        let path = std::path::Path::new(&dir).join(format!("{}.json", self.slug()));
-        match std::fs::write(&path, self.to_json().to_string()) {
-            Ok(()) => println!("wrote {}", path.display()),
-            Err(e) => eprintln!("bench: writing {}: {e}", path.display()),
+        if let Ok(file) = std::env::var("ESNMF_BENCH_COMBINED") {
+            if !file.is_empty() {
+                if let Err(e) = self.merge_into_combined(std::path::Path::new(&file)) {
+                    eprintln!("bench: merging into {file}: {e}");
+                }
+            }
         }
+    }
+
+    /// Read-modify-write this suite into the accumulating combined file
+    /// (`{"schema": ..., "suites": {<slug>: <suite json>, ...}}`). An
+    /// absent or unparsable file starts fresh, so the trajectory document
+    /// self-heals.
+    fn merge_into_combined(&self, path: &std::path::Path) -> Result<(), String> {
+        let mut root = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .filter(|j| matches!(j, Json::Obj(_)))
+            .unwrap_or_else(|| Json::Obj(BTreeMap::new()));
+        let Json::Obj(obj) = &mut root else { unreachable!() };
+        obj.insert(
+            "schema".to_string(),
+            Json::Str("esnmf-bench-smoke-v1".to_string()),
+        );
+        let suites = obj
+            .entry("suites".to_string())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        if !matches!(suites, Json::Obj(_)) {
+            *suites = Json::Obj(BTreeMap::new());
+        }
+        if let Json::Obj(m) = suites {
+            m.insert(self.slug(), self.to_json());
+        }
+        std::fs::write(path, root.to_string()).map_err(|e| e.to_string())?;
+        println!("merged suite {:?} into {}", self.slug(), path.display());
+        Ok(())
     }
 }
 
@@ -242,5 +284,50 @@ mod tests {
             Some(3)
         );
         suite.results.clear(); // keep the drop hook from writing files
+    }
+
+    #[test]
+    fn combined_file_accumulates_suites() {
+        let path = std::env::temp_dir().join("esnmf_bench_combined_test.json");
+        let _ = std::fs::remove_file(&path);
+        let mut a = BenchSuite::new("suite alpha");
+        a.results.push(BenchResult {
+            name: "x".into(),
+            samples_s: vec![0.1],
+        });
+        a.merge_into_combined(&path).unwrap();
+        let mut b = BenchSuite::new("suite beta");
+        b.results.push(BenchResult {
+            name: "y".into(),
+            samples_s: vec![0.2],
+        });
+        b.merge_into_combined(&path).unwrap();
+        // re-running a suite replaces its entry instead of duplicating
+        a.results[0].samples_s = vec![0.3];
+        a.merge_into_combined(&path).unwrap();
+
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            root.get("schema").and_then(Json::as_str),
+            Some("esnmf-bench-smoke-v1")
+        );
+        let suites = root.get("suites").unwrap();
+        let alpha = suites.get("suite_alpha").unwrap();
+        let beta = suites.get("suite_beta").unwrap();
+        assert_eq!(
+            alpha.get("results").and_then(Json::as_arr).unwrap()[0]
+                .get("median_s")
+                .and_then(Json::as_f64),
+            Some(0.3)
+        );
+        assert_eq!(beta.get("title").and_then(Json::as_str), Some("suite beta"));
+        // a corrupt combined file self-heals instead of erroring
+        std::fs::write(&path, "not json").unwrap();
+        b.merge_into_combined(&path).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(root.get("suites").unwrap().get("suite_beta").is_some());
+        a.results.clear();
+        b.results.clear(); // keep the drop hook quiet
+        std::fs::remove_file(&path).unwrap();
     }
 }

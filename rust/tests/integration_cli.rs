@@ -131,6 +131,133 @@ fn gen_corpus_roundtrips_through_loader() {
 }
 
 #[test]
+fn save_model_then_serve_model_without_refactorizing() {
+    use std::io::{BufRead, BufReader, Write};
+    let snap = std::env::temp_dir().join("esnmf_cli_model.esnmf");
+    let _ = std::fs::remove_file(&snap);
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--iters", "6", "--sparsity", "both", "--t-u", "60", "--t-v", "120",
+        "--seed", "9", "--save-model", snap.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("saved model snapshot"));
+    assert!(snap.exists());
+
+    // cold-start a server from the snapshot on an ephemeral port
+    let mut child = Command::new(env!("CARGO_BIN_EXE_esnmf"))
+        .args(["serve", "--model", snap.to_str().unwrap(), "--addr", "127.0.0.1:0"])
+        .env("ESNMF_LOG", "warn")
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning esnmf serve");
+    let mut banner = String::new();
+    BufReader::new(child.stdout.as_mut().unwrap())
+        .read_line(&mut banner)
+        .unwrap();
+    let addr = banner
+        .split_whitespace()
+        .find(|t| t.contains(':') && t.starts_with("127.0.0.1"))
+        .unwrap_or_else(|| panic!("no address in banner {banner:?}"))
+        .to_string();
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "TOPICS").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "OK k=3", "{banner:?}");
+    writeln!(writer, "QUIT").unwrap();
+    child.kill().unwrap();
+    let _ = child.wait();
+    std::fs::remove_file(&snap).unwrap();
+}
+
+#[test]
+fn serve_model_with_missing_file_fails_clearly() {
+    let out = esnmf(&["serve", "--model", "/nonexistent/nope.esnmf", "--addr", "127.0.0.1:0"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("nope.esnmf"), "{err}");
+}
+
+#[test]
+fn serve_model_refuses_k_mismatch() {
+    let snap = std::env::temp_dir().join("esnmf_cli_kmismatch.esnmf");
+    let _ = std::fs::remove_file(&snap);
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--iters", "3", "--seed", "10", "--save-model", snap.to_str().unwrap(),
+    ]);
+    assert!(out.status.success());
+    let out = esnmf(&[
+        "serve", "--model", snap.to_str().unwrap(), "--k", "5",
+        "--addr", "127.0.0.1:0",
+    ]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("k=5") && err.contains("k=3"), "{err}");
+    std::fs::remove_file(&snap).unwrap();
+}
+
+#[test]
+fn resume_refuses_a_different_corpus() {
+    let snap = std::env::temp_dir().join("esnmf_cli_resume_refuse.esnmf");
+    let _ = std::fs::remove_file(&snap);
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--iters", "4", "--seed", "11", "--save-model", snap.to_str().unwrap(),
+    ]);
+    assert!(out.status.success());
+    // same preset, different seed → different corpus → digest refusal
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--iters", "8", "--seed", "12", "--resume", snap.to_str().unwrap(),
+    ]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("digest"), "{err}");
+    std::fs::remove_file(&snap).unwrap();
+}
+
+#[test]
+fn warm_start_runs_on_a_grown_corpus() {
+    let snap = std::env::temp_dir().join("esnmf_cli_warm.esnmf");
+    let _ = std::fs::remove_file(&snap);
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--iters", "5", "--seed", "13", "--save-model", snap.to_str().unwrap(),
+    ]);
+    assert!(out.status.success());
+    // a different corpus (grown/changed vocabulary) warm-starts fine
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--iters", "5", "--seed", "14", "--warm-start", snap.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("completed 5 iterations"));
+    std::fs::remove_file(&snap).unwrap();
+}
+
+#[test]
+fn checkpoint_every_without_save_model_errors() {
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--iters", "4", "--checkpoint-every", "2",
+    ]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--save-model"));
+}
+
+#[test]
 fn config_file_drives_factorization() {
     let path = std::env::temp_dir().join("esnmf_cli_config.toml");
     std::fs::write(

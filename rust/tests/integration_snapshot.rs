@@ -1,0 +1,201 @@
+//! End-to-end tests of the `.esnmf` model-snapshot subsystem: property
+//! tests of the save→load round trip, typed failures on truncated and
+//! bit-flipped files, serve-from-snapshot answer identity over TCP, and
+//! checkpoint→resume equivalence through the public API.
+
+use esnmf::coordinator::{MetricsRegistry, ServerState, TopicModel, TopicServer};
+use esnmf::io::{corpus_digest, Progress, Snapshot, SnapshotError};
+use esnmf::nmf::{self, NmfOptions, SparsityMode};
+use esnmf::sparse::TieMode;
+use esnmf::text::TermDocMatrix;
+use esnmf::util::prop;
+use esnmf::util::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn labeled_tdm(seed: u64) -> TermDocMatrix {
+    esnmf::corpus::generate_tdm(&esnmf::corpus::reuters_sim(esnmf::corpus::Scale::Tiny), seed)
+}
+
+fn snapshot_of(tdm: &TermDocMatrix, opts: &NmfOptions) -> (Snapshot, esnmf::nmf::NmfResult) {
+    let r = nmf::factorize(tdm, opts);
+    let snap = Snapshot::new(
+        opts.clone(),
+        r.u.clone(),
+        r.v.clone(),
+        tdm,
+        Progress {
+            iterations: r.iterations,
+            residuals: r.residuals.clone(),
+            errors: r.errors.clone(),
+            memory: r.memory,
+            elapsed_s: r.elapsed_s,
+        },
+    );
+    (snap, r)
+}
+
+/// Property: save→load is the identity on factors, vocabulary, labels,
+/// options and progress — across randomized ranks, sparsity budgets and
+/// seeds.
+#[test]
+fn roundtrip_is_identity_property() {
+    prop::check("snapshot roundtrip", 0xe5, 12, |rng: &mut Rng| {
+        let tdm = labeled_tdm(rng.below(1000) as u64);
+        let k = 2 + rng.below(4);
+        let mut opts = NmfOptions::new(k)
+            .with_iters(1 + rng.below(5))
+            .with_seed(rng.below(10_000) as u64);
+        if rng.below(2) == 1 {
+            opts = opts.with_sparsity(SparsityMode::both(
+                20 + rng.below(60),
+                40 + rng.below(100),
+            ));
+            opts.tie_mode = TieMode::Exact;
+        }
+        if rng.below(2) == 1 {
+            opts = opts.with_init_nnz(30 + rng.below(50));
+        }
+        let (snap, _) = snapshot_of(&tdm, &opts);
+        let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back.u, snap.u);
+        assert_eq!(back.v, snap.v);
+        assert_eq!(back.terms, snap.terms);
+        assert_eq!(back.doc_labels, snap.doc_labels);
+        assert_eq!(back.label_names, snap.label_names);
+        assert_eq!(back.corpus_digest, snap.corpus_digest);
+        assert_eq!(back.progress, snap.progress);
+        assert_eq!(back.options.k, snap.options.k);
+        assert_eq!(back.options.sparsity, snap.options.sparsity);
+        assert_eq!(back.options.seed, snap.options.seed);
+        assert_eq!(back.options.init_nnz, snap.options.init_nnz);
+        assert_eq!(back.options.tie_mode, snap.options.tie_mode);
+    });
+}
+
+/// Property: every strict prefix fails with a typed error (Truncated for
+/// header/payload cuts — never a panic), and any single bit flip in the
+/// payload is caught by the CRC.
+#[test]
+fn corruption_is_always_a_typed_error_property() {
+    let tdm = labeled_tdm(7);
+    let opts = NmfOptions::new(3).with_iters(3).with_seed(9);
+    let (snap, _) = snapshot_of(&tdm, &opts);
+    let bytes = snap.to_bytes();
+
+    prop::check("snapshot corruption", 0xc0, 64, |rng: &mut Rng| {
+        // random truncation point
+        let cut = rng.below(bytes.len());
+        match Snapshot::from_bytes(&bytes[..cut]) {
+            Err(
+                SnapshotError::Truncated { .. }
+                | SnapshotError::BadMagic
+                | SnapshotError::Corrupt(_),
+            ) => {}
+            other => panic!("truncation at {cut}: {other:?}"),
+        }
+        // random payload bit flip
+        let pos = 20 + rng.below(bytes.len() - 20);
+        let bit = 1u8 << rng.below(8);
+        let mut bad = bytes.clone();
+        bad[pos] ^= bit;
+        match Snapshot::from_bytes(&bad) {
+            Err(SnapshotError::CrcMismatch { .. }) => {}
+            other => panic!("bit flip at {pos}: {other:?}"),
+        }
+    });
+}
+
+/// A server cold-started from a snapshot answers CLASSIFY/FOLDIN/TOPTERMS
+/// byte-identically to the freshly-trained model it was saved from —
+/// checked over a real TCP connection.
+#[test]
+fn serve_from_snapshot_answers_identically_over_tcp() {
+    let tdm = labeled_tdm(23);
+    let mut opts = NmfOptions::new(4)
+        .with_iters(8)
+        .with_seed(41)
+        .with_sparsity(SparsityMode::both(60, 120));
+    opts.tie_mode = TieMode::Exact;
+    let (snap, r) = snapshot_of(&tdm, &opts);
+
+    // the reference: the exact serving path over the fresh model
+    let fresh = Arc::new(
+        TopicModel::new(r.u, r.v, tdm.terms.clone()).with_foldin_budget(snap.t_v()),
+    );
+    let reference = ServerState::new(Arc::clone(&fresh), MetricsRegistry::new(), 0);
+
+    // the system under test: a TCP server over the loaded snapshot
+    let loaded = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+    let served = Arc::new(TopicModel::from_snapshot(loaded));
+    assert_eq!(served.foldin_budget(), fresh.foldin_budget());
+    let server = TopicServer::start("127.0.0.1:0", served, MetricsRegistry::new()).unwrap();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    let word_of = |i: usize| tdm.terms[i % tdm.terms.len()].clone();
+    let mut queries = vec!["TOPICS".to_string()];
+    for t in 0..4 {
+        queries.push(format!("TOPTERMS {t} 8"));
+        queries.push(format!("DOCS {t} 6"));
+    }
+    for i in 0..10 {
+        queries.push(format!("CLASSIFY {} {}", word_of(i), word_of(i * 3 + 1)));
+        queries.push(format!("FOLDIN {}:2 {}:1", word_of(i * 2), word_of(i * 5 + 3)));
+    }
+    for q in &queries {
+        let want = esnmf::coordinator::server::respond(&reference, q);
+        writeln!(writer, "{q}").unwrap();
+        let mut got = String::new();
+        reader.read_line(&mut got).unwrap();
+        assert_eq!(got.trim_end(), want, "query {q:?}");
+    }
+    server.stop();
+}
+
+/// Checkpoint → crash → resume through the public API reaches the same
+/// final factors, residual history and memory peaks as a run that never
+/// crashed.
+#[test]
+fn checkpoint_resume_equals_uninterrupted() {
+    let tdm = labeled_tdm(51);
+    let ck = std::env::temp_dir().join("esnmf_integration_resume.esnmf");
+    let _ = std::fs::remove_file(&ck);
+    let mut opts = NmfOptions::new(3)
+        .with_iters(10)
+        .with_seed(13)
+        .with_sparsity(SparsityMode::both(50, 110));
+    opts.tie_mode = TieMode::Exact;
+
+    let uninterrupted = nmf::factorize(&tdm, &opts);
+    // crash after 7 iterations, checkpointing every 3 (last lands on 6)
+    let _ = nmf::factorize(&tdm, &opts.clone().with_iters(7).with_checkpoint(&ck, 3));
+    let snap = Snapshot::load(&ck).unwrap();
+    assert_eq!(snap.progress.iterations, 6);
+    let resumed = nmf::resume(&tdm, &opts, &snap).unwrap();
+    assert_eq!(resumed.u, uninterrupted.u);
+    assert_eq!(resumed.v, uninterrupted.v);
+    assert_eq!(resumed.iterations, uninterrupted.iterations);
+    assert_eq!(resumed.residuals, uninterrupted.residuals);
+    assert_eq!(resumed.errors, uninterrupted.errors);
+    assert_eq!(resumed.memory, uninterrupted.memory);
+    std::fs::remove_file(&ck).unwrap();
+}
+
+/// The corpus digest distinguishes corpora and pins resumability.
+#[test]
+fn digest_distinguishes_corpora() {
+    let a = labeled_tdm(1);
+    let b = labeled_tdm(2);
+    assert_eq!(corpus_digest(&a), corpus_digest(&a));
+    assert_ne!(corpus_digest(&a), corpus_digest(&b));
+    let opts = NmfOptions::new(2).with_iters(2).with_seed(1);
+    let (snap, _) = snapshot_of(&a, &opts);
+    assert!(snap.check_corpus(&a).is_ok());
+    assert!(matches!(
+        snap.check_corpus(&b),
+        Err(SnapshotError::Mismatch(_))
+    ));
+}
