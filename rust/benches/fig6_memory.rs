@@ -1,32 +1,87 @@
 //! Bench for Fig. 6: max-stored-NNZ runs under sparse and dense initial
-//! guesses (memory is the figure's metric; time shown for context).
+//! guesses (memory is the figure's metric; time shown for context), plus
+//! the blocked-vs-unblocked half-step comparison: the streamed pipeline
+//! must hold `max_intermediate_nnz` at O(block_rows · k) per worker
+//! while producing bit-identical factors. Peaks are recorded as suite
+//! metrics so the merged `BENCH_smoke.json` trajectory carries a memory
+//! axis. MemoryStats are captured from the benched runs themselves (the
+//! solver is deterministic, so every sample observes identical peaks).
 
 mod common;
 
-use esnmf::nmf::{factorize, NmfOptions, SparsityMode};
+use esnmf::nmf::{factorize, NmfOptions, NmfResult, SparsityMode};
 use esnmf::util::bench::BenchSuite;
 
 fn main() {
     let cfg = common::print_paper_rows("fig6");
     let tdm = common::corpus("pubmed", &cfg);
+    let k = 5;
     let iters = cfg.iters(30);
     let t = 100;
     let mut suite = BenchSuite::new("fig6: memory-tracked runs");
-    let sparse_init = NmfOptions::new(5)
+
+    let sparse_init = NmfOptions::new(k)
         .with_iters(iters)
         .with_seed(cfg.seed)
         .with_sparsity(SparsityMode::both(t, t))
         .with_init_nnz(tdm.n_terms() / 10)
         .with_track_error(false);
+    let mut last: Option<NmfResult> = None;
     suite.bench("als(both t=100, sparse init)", || {
-        factorize(&tdm, &sparse_init)
+        last = Some(factorize(&tdm, &sparse_init));
     });
-    let dense_init = NmfOptions::new(5)
+    let stats = last.take().expect("bench ran").memory;
+    suite.metric("sparse_init.max_combined_nnz", stats.max_combined_nnz as f64);
+    suite.metric(
+        "sparse_init.max_intermediate_nnz",
+        stats.max_intermediate_nnz as f64,
+    );
+
+    let dense_init = NmfOptions::new(k)
         .with_iters(iters)
         .with_seed(cfg.seed)
         .with_sparsity(SparsityMode::both(t, t))
         .with_track_error(false);
     suite.bench("als(both t=100, dense init)", || {
-        factorize(&tdm, &dense_init)
+        last = Some(factorize(&tdm, &dense_init));
     });
+    let stats = last.take().expect("bench ran").memory;
+    suite.metric("dense_init.max_combined_nnz", stats.max_combined_nnz as f64);
+    suite.metric(
+        "dense_init.max_intermediate_nnz",
+        stats.max_intermediate_nnz as f64,
+    );
+
+    // blocked vs unblocked: same factorization, bounded vs full-matrix
+    // candidate scratch. block_rows chosen well below the corpus height
+    // so the run genuinely crosses many block boundaries.
+    let block_rows = (tdm.n_docs().max(tdm.n_terms()) / 8).max(1);
+    let blocked_opts = dense_init.clone().with_block_rows(block_rows);
+    let unblocked_opts = dense_init.clone().with_block_rows(usize::MAX);
+    suite.bench(&format!("als(dense init, block_rows={block_rows})"), || {
+        last = Some(factorize(&tdm, &blocked_opts));
+    });
+    let blocked = last.take().expect("bench ran");
+    let mut last_un: Option<NmfResult> = None;
+    suite.bench("als(dense init, unblocked)", || {
+        last_un = Some(factorize(&tdm, &unblocked_opts));
+    });
+    let unblocked = last_un.take().expect("bench ran");
+    assert_eq!(blocked.u, unblocked.u, "blocked ≡ unblocked factors");
+    assert_eq!(blocked.v, unblocked.v, "blocked ≡ unblocked factors");
+    suite.metric("blocked.block_rows", block_rows as f64);
+    suite.metric(
+        "blocked.max_intermediate_nnz",
+        blocked.memory.max_intermediate_nnz as f64,
+    );
+    suite.metric(
+        "unblocked.max_intermediate_nnz",
+        unblocked.memory.max_intermediate_nnz as f64,
+    );
+    println!(
+        "blocked vs unblocked peak intermediate: {} vs {} scalars (per-worker bound {})",
+        blocked.memory.max_intermediate_nnz,
+        unblocked.memory.max_intermediate_nnz,
+        block_rows * k
+    );
 }

@@ -3,7 +3,7 @@
 
 mod common;
 
-use esnmf::nmf::init;
+use esnmf::nmf::{half_step_v, init, MemoryTracker, NmfOptions, SparsityMode};
 use esnmf::sparse::{ops, topk, RowBlock, TieMode};
 use esnmf::util::bench::BenchSuite;
 use esnmf::util::rng::Rng;
@@ -91,6 +91,42 @@ fn main() {
             enforce_par4 = s;
         }
     }
+
+    // the fused streamed half-step (candidate → solve → enforce per row
+    // block): blocked vs single-block timings at the same thread count —
+    // the memory bound is supposed to cost ~one extra SpMM sweep in
+    // global-enforcement mode, nothing more
+    let half_opts = NmfOptions::new(k)
+        .with_seed(cfg.seed)
+        .with_sparsity(SparsityMode::both(t, t))
+        .with_threads(4);
+    let blocked_rows = (tdm.n_docs() / 8).max(1);
+    let half_blocked = suite
+        .bench(
+            &format!("half_step_v(block_rows={blocked_rows}, threads=4)"),
+            || {
+                let mut mem = MemoryTracker::new();
+                half_step_v(
+                    &tdm.a_csc,
+                    &u,
+                    &half_opts.clone().with_block_rows(blocked_rows),
+                    &mut mem,
+                )
+            },
+        )
+        .median_s();
+    let half_unblocked = suite
+        .bench("half_step_v(unblocked, threads=4)", || {
+            let mut mem = MemoryTracker::new();
+            half_step_v(
+                &tdm.a_csc,
+                &u,
+                &half_opts.clone().with_block_rows(usize::MAX),
+                &mut mem,
+            )
+        })
+        .median_s();
+    suite.metric("half_step_v.blocked_over_unblocked", half_blocked / half_unblocked);
 
     // serial/parallel speedups at 4 workers — the numbers the parallel
     // hot path exists for (>1.5x expected on the SpMM and enforcement

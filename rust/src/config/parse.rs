@@ -119,13 +119,18 @@ impl ConfigFile {
         self.get(key).and_then(|v| v.as_bool())
     }
 
-    /// A worker-count knob: a non-negative integer, or the bare word
-    /// `auto` (→ 0, "use every available core").
-    pub fn threads(&self, key: &str) -> Option<usize> {
+    /// An `N | auto` knob (worker counts, block heights): a non-negative
+    /// integer, or the bare word `auto` (→ 0, "let the solver decide").
+    pub fn auto_usize(&self, key: &str) -> Option<usize> {
         match self.get(key)? {
             Value::Str(s) if s == "auto" => Some(0),
             v => v.as_usize(),
         }
+    }
+
+    /// [`Self::auto_usize`] under its historical worker-count name.
+    pub fn threads(&self, key: &str) -> Option<usize> {
+        self.auto_usize(key)
     }
 }
 
@@ -229,6 +234,18 @@ foldin_t = 10
         assert_eq!(c.threads("nmf.threads"), Some(0));
         assert_eq!(c.threads("other.threads"), Some(4));
         assert_eq!(c.threads("missing.threads"), None);
+    }
+
+    #[test]
+    fn auto_usize_serves_block_rows() {
+        let c = ConfigFile::parse("[nmf]\nblock_rows = auto\n[big]\nblock_rows = 4096\n")
+            .unwrap();
+        assert_eq!(c.auto_usize("nmf.block_rows"), Some(0));
+        assert_eq!(c.auto_usize("big.block_rows"), Some(4096));
+        assert_eq!(c.auto_usize("missing.block_rows"), None);
+        // non-`auto` words do not parse as a knob value
+        let c = ConfigFile::parse("[nmf]\nblock_rows = lots\n").unwrap();
+        assert_eq!(c.auto_usize("nmf.block_rows"), None);
     }
 
     #[test]

@@ -37,6 +37,10 @@ pub struct RunConfig {
     pub track_error: bool,
     /// row-parallelism for the ALS hot path; 0 = auto (all cores)
     pub threads: usize,
+    /// rows per streamed ALS half-step block; 0 = auto (fixed scratch
+    /// budget / k, or the ESNMF_BLOCK_ROWS env override). Bounds peak
+    /// intermediate memory at block_rows · k without changing results.
+    pub block_rows: usize,
     /// sequential-only: topics per block and iterations per block
     pub block_topics: usize,
     pub iters_per_block: usize,
@@ -87,6 +91,7 @@ impl Default for RunConfig {
             init_nnz: None,
             track_error: true,
             threads: 0,
+            block_rows: 0,
             block_topics: 1,
             iters_per_block: 20,
             serve_threads: serve_defaults.threads,
@@ -142,6 +147,9 @@ impl RunConfig {
         }
         if let Some(v) = f.threads("nmf.threads") {
             self.threads = v;
+        }
+        if let Some(v) = f.auto_usize("nmf.block_rows") {
+            self.block_rows = v;
         }
         if let Some(v) = f.str("sparsity.mode") {
             self.sparsity_mode = v.to_string();
@@ -250,7 +258,8 @@ impl RunConfig {
             .with_tol(self.tol)
             .with_sparsity(self.sparsity()?)
             .with_track_error(self.track_error)
-            .with_threads(self.threads);
+            .with_threads(self.threads)
+            .with_block_rows(self.block_rows);
         opts.tie_mode = TieMode::KeepTies;
         opts.init_nnz = self.init_nnz;
         if self.checkpoint_every > 0 {
@@ -345,6 +354,23 @@ mod tests {
             cfg.nmf_options().unwrap().threads,
             crate::coordinator::pool::default_threads()
         );
+    }
+
+    #[test]
+    fn block_rows_knob_from_file() {
+        let f = ConfigFile::parse("[nmf]\nblock_rows = 512\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.block_rows, 512);
+        let opts = cfg.nmf_options().unwrap();
+        assert_eq!(opts.block_rows, 512);
+        assert_eq!(opts.resolved_block_rows(), 512);
+        // auto resets an earlier explicit value
+        let f = ConfigFile::parse("[nmf]\nblock_rows = auto\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.block_rows = 64;
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.nmf_options().unwrap().block_rows, 0);
     }
 
     #[test]

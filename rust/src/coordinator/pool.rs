@@ -108,16 +108,69 @@ where
     R: Send,
     F: Fn(usize, usize) -> R + Sync,
 {
+    scoped_map_ranges_with(threads, ranges, || (), |_, lo, hi| f(lo, hi))
+}
+
+/// [`scoped_map_ranges`] with per-worker scratch state: `init` runs once
+/// per worker (once total on the serial path) and the state is handed
+/// back to `f` for every range that worker claims. This is how the
+/// blocked ALS half-steps reuse one candidate [`RowBlock`] allocation per
+/// worker instead of materializing every block at once — the whole point
+/// of the bounded-memory pipeline.
+///
+/// The state must not influence the *value* `f` returns for a given range
+/// (it is scratch, not an accumulator): which worker claims which range
+/// is scheduling-dependent, and the determinism contract above only holds
+/// when `f(state, lo, hi)` is a pure function of `(lo, hi)`.
+///
+/// [`RowBlock`]: crate::sparse::RowBlock
+pub fn scoped_map_ranges_with<S, R, I, F>(
+    threads: usize,
+    ranges: &[(usize, usize)],
+    init: I,
+    f: F,
+) -> Vec<R>
+where
+    S: Send,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, usize) -> R + Sync,
+{
+    scoped_map_ranges_with_states(threads, ranges, init, f).0
+}
+
+/// As [`scoped_map_ranges_with`], additionally returning each worker's
+/// final state. The per-range results come back in range order as
+/// always; the states come back in **no guaranteed order** (which
+/// worker claimed which ranges is scheduling-dependent), so callers
+/// must fold them with an order-independent reduction. This is how the
+/// blocked global enforcement keeps its pass-1 memory at one O(t)
+/// selector per *worker* instead of one per block.
+pub fn scoped_map_ranges_with_states<S, R, I, F>(
+    threads: usize,
+    ranges: &[(usize, usize)],
+    init: I,
+    f: F,
+) -> (Vec<R>, Vec<S>)
+where
+    S: Send,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, usize) -> R + Sync,
+{
     let n = ranges.len();
     if threads <= 1 || n <= 1 {
-        return ranges.iter().map(|&(lo, hi)| f(lo, hi)).collect();
+        let mut state = init();
+        let out: Vec<R> = ranges.iter().map(|&(lo, hi)| f(&mut state, lo, hi)).collect();
+        return (out, vec![state]);
     }
     let next = AtomicUsize::new(0);
     let workers = threads.min(n);
-    let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+    let per_worker: Vec<(Vec<(usize, R)>, S)> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(|| {
+                    let mut state = init();
                     let mut local = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
@@ -125,9 +178,9 @@ where
                             break;
                         }
                         let (lo, hi) = ranges[i];
-                        local.push((i, f(lo, hi)));
+                        local.push((i, f(&mut state, lo, hi)));
                     }
-                    local
+                    (local, state)
                 })
             })
             .collect();
@@ -137,15 +190,18 @@ where
             .collect()
     });
     let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    for pairs in per_worker {
+    let mut states = Vec::with_capacity(per_worker.len());
+    for (pairs, state) in per_worker {
         for (i, r) in pairs {
             slots[i] = Some(r);
         }
+        states.push(state);
     }
-    slots
+    let out = slots
         .into_iter()
         .map(|s| s.expect("range not executed"))
-        .collect()
+        .collect();
+    (out, states)
 }
 
 /// Partition `data` into up to `threads` contiguous pieces whose lengths
@@ -382,6 +438,42 @@ mod tests {
         for threads in [2, 4, 7, 16] {
             let par = scoped_map_ranges(threads, &ranges, |lo, hi| (lo, hi));
             assert_eq!(par, serial, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn scoped_map_ranges_with_reuses_per_worker_state() {
+        let ranges = fixed_chunks(50, 5);
+        for threads in [1usize, 2, 4, 7] {
+            let inits = AtomicUsize::new(0);
+            let (out, states) = scoped_map_ranges_with_states(
+                threads,
+                &ranges,
+                || {
+                    inits.fetch_add(1, Ordering::SeqCst);
+                    Vec::<usize>::new()
+                },
+                |scratch, lo, hi| {
+                    // scratch survives across claims (reuse), but the
+                    // returned value depends only on (lo, hi)
+                    scratch.push(lo);
+                    (lo, hi)
+                },
+            );
+            assert_eq!(out, ranges, "threads {threads}");
+            let created = inits.load(Ordering::SeqCst);
+            let cap = if threads <= 1 { 1 } else { threads.min(ranges.len()) };
+            assert!(
+                created >= 1 && created <= cap,
+                "threads {threads}: {created} states for cap {cap}"
+            );
+            // one state back per created worker; together they saw
+            // every range exactly once
+            assert_eq!(states.len(), created, "threads {threads}");
+            let mut claimed: Vec<usize> = states.into_iter().flatten().collect();
+            claimed.sort_unstable();
+            let want: Vec<usize> = ranges.iter().map(|&(lo, _)| lo).collect();
+            assert_eq!(claimed, want, "threads {threads}");
         }
     }
 

@@ -616,9 +616,10 @@ fn read_options(r: &mut Reader) -> Result<NmfOptions, SnapshotError> {
         },
         other => return Err(SnapshotError::Corrupt(format!("bad sparsity tag {other}"))),
     };
-    // threads is a machine-local speed knob with a bit-identical
-    // determinism contract, so it is deliberately not persisted: a loaded
-    // model uses this machine's default
+    // threads and block_rows are machine-local speed/memory knobs with a
+    // bit-identical determinism contract, so they are deliberately not
+    // persisted: a loaded model uses this machine's defaults (threads =
+    // all cores, block_rows = auto / ESNMF_BLOCK_ROWS)
     let mut opts = NmfOptions::new(k)
         .with_iters(max_iters)
         .with_tol(tol)
@@ -786,6 +787,22 @@ mod tests {
             let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
             assert_eq!(back.options.sparsity, mode);
         }
+    }
+
+    #[test]
+    fn machine_local_knobs_are_not_persisted() {
+        // threads and block_rows are this-machine knobs (results are
+        // bit-identical at any setting); a snapshot written with exotic
+        // values must load with the local defaults
+        let mut snap = sample();
+        snap.options.threads = 3;
+        snap.options.block_rows = 7;
+        let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(
+            back.options.threads,
+            crate::coordinator::pool::default_threads()
+        );
+        assert_eq!(back.options.block_rows, 0, "block_rows loads as auto");
     }
 
     #[test]

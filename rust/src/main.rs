@@ -31,12 +31,17 @@ USAGE:
   esnmf factorize  [--corpus reuters|wikipedia|pubmed|dir:<path>] [--scale tiny|small|paper]
                    [--k N] [--iters N] [--sparsity none|both|u|v|percol] [--t-u N] [--t-v N]
                    [--algorithm als|seq] [--backend native|xla] [--seed N] [--init-nnz N]
-                   [--threads N|auto] [--config file.toml] [--top N]
+                   [--threads N|auto] [--block-rows N|auto] [--config file.toml] [--top N]
                    [--save-model m.esnmf] [--checkpoint-every N]
                    [--resume ck.esnmf] [--warm-start old.esnmf]
 
   --threads row-partitions the ALS hot path across N workers (default:
   auto = all cores). Results are bit-identical at any thread count.
+  --block-rows streams each ALS half-step over N-row blocks, bounding
+  peak intermediate memory at N·k scalars per worker (default: auto =
+  a fixed scratch budget / k; ESNMF_BLOCK_ROWS overrides auto).
+  Factors are bit-identical at any block height — only memory
+  telemetry moves.
   --save-model persists the factorization as a versioned .esnmf snapshot
   (factors, vocabulary, labels, options, corpus digest).
   --checkpoint-every N writes that snapshot every N iterations mid-run;
@@ -154,6 +159,12 @@ fn build_run_config(args: &mut Args) -> Result<RunConfig> {
     }
     if let Some(v) = args.opt_threads("threads").map_err(anyhow::Error::msg)? {
         cfg.threads = v;
+    }
+    if let Some(v) = args
+        .opt_threads("block-rows")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.block_rows = v;
     }
     if let Some(v) = args.opt_str("save-model") {
         cfg.save_model = Some(v);

@@ -11,35 +11,58 @@
 //! until ‖Uᵢ−Uᵢ₋₁‖/‖Uᵢ‖ < tol or max_iters
 //! ```
 //!
-//! The half-step intermediates are [`RowBlock`]s: only rows reachable from
-//! the current factor's support are ever materialized, which is the
-//! paper's memory claim; the [`MemoryTracker`] records the peak.
+//! # Blocked, memory-bounded half-steps
 //!
-//! # Parallel execution
+//! Each half-step streams over contiguous `block_rows`-row blocks of its
+//! output: for every block it computes the candidate rows
+//! ([`ops::atb_into`] / [`ops::ab_into`]), multiplies by the precomputed
+//! Gram inverse, projects non-negative, enforces sparsity, and appends
+//! the survivors straight into the output CSR. One scratch [`RowBlock`]
+//! per worker is reused across blocks
+//! ([`pool::scoped_map_ranges_with`]), so peak intermediate memory is
+//! **O(block_rows · k) per worker** (threads × block_rows × k resident
+//! in total) instead of O(active rows · k) — the limited-internal-memory
+//! direction of Nguyen & Ho (arXiv:1506.08938) applied to the paper's
+//! Algorithm 2. The [`MemoryTracker`] observes the per-block scratch
+//! peak (`max_intermediate_nnz`).
 //!
-//! Every stage of a half-step is row-partitioned across
-//! `NmfOptions::threads` scoped workers (see
-//! [`crate::coordinator::pool`] for the primitives): the SpMM product
-//! (`Aᵀ·U` / `A·V`), the gram accumulation, the small solve
-//! (`B · G⁻¹`), the non-negative projection, and the top-t enforcement.
+//! Global top-t enforcement is a **two-pass streaming selection**: pass 1
+//! streams the blocks through per-worker O(t) [`topk::TopTSelector`]s
+//! (merged afterwards — the cutoff is an order statistic, so worker
+//! interleaving cannot change it) to find the cutoff `tau` and the
+//! `Exact` tie budget; pass 2 re-streams (compute is traded for memory)
+//! and emits. Per-column, threshold, and unenforced
+//! half-steps stream in a single pass; per-column enforcement then runs
+//! on the assembled CSR, keeping the §4 column-gather cost the paper
+//! measures. A half-step whose output fits one block (`block_rows ≥
+//! rows`) falls back to the pre-blocking in-memory pipeline
+//! ([`unblocked_half_step`]): the candidate exists in full either way,
+//! so the row-partitioned parallel kernels and single-sweep enforcement
+//! are strictly better there — and bit-identical.
 //!
 //! # Determinism contract
 //!
-//! The result is **bit-for-bit identical at every thread count**,
-//! so `threads` is purely a speed knob:
+//! The factors, residuals and errors are **bit-for-bit identical at
+//! every `(block_rows, threads)` combination** — both knobs are purely
+//! speed/memory knobs (only `MemoryStats::max_intermediate_nnz` observes
+//! the block size; nothing observes the thread count):
 //!
-//! * row-local stages concatenate per-range outputs in range order;
+//! * every candidate row is computed by the same instruction sequence
+//!   whatever block it lands in, and blocks concatenate in row order;
 //! * the gram reduction accumulates per fixed-width row chunk
-//!   ([`crate::sparse::ops::GRAM_CHUNK_ROWS`]) and merges partials in
-//!   ascending chunk order, independent of the thread count;
-//! * top-t tie-breaking splits the `Exact`-mode budget by prefix-counted
-//!   ties per range, reproducing the serial left-to-right scan;
-//! * the memory tracker observes logical stored sizes (identical by the
-//!   above), so `MemoryStats` peaks match exactly too.
+//!   ([`crate::sparse::ops::GRAM_CHUNK_ROWS`]) merged in ascending chunk
+//!   order, independent of the thread count;
+//! * the global cutoff `tau` is an order statistic of the candidate
+//!   multiset — independent of block and worker interleaving — and the
+//!   `Exact` tie budget is consumed during in-order assembly,
+//!   reproducing the serial left-to-right scan;
+//! * the dense-factor fast-path decision is made once per half-step
+//!   ([`ops::dense_factor`]), never per block.
 //!
 //! `tests/prop_invariants.rs` and `tests/integration_nmf.rs` pin this
-//! for thread counts {1, 2, 4, 7}.
+//! for thread counts {1, 2, 4, 7} × block heights {1, 7, 64, auto, ∞}.
 
+use crate::coordinator::pool;
 use crate::dense::inverse_spd;
 use crate::sparse::{ops, topk, Csc, Csr, RowBlock, TieMode};
 use crate::text::TermDocMatrix;
@@ -83,27 +106,338 @@ fn enforcement_for(mode: SparsityMode, is_u: bool) -> Enforce {
     }
 }
 
-/// Solve + project + enforce one candidate RowBlock into a CSR factor.
-/// Every stage is row-partitioned across `threads` workers.
-fn finish_half_step(
-    mut cand: RowBlock,
-    gram_other: &[f32],
+/// The candidate-row source of one half-step: which SpMM orientation
+/// produces output rows `lo..hi`, plus the half-step-wide dense
+/// fast-path copy (decided once, see [`ops::dense_factor`], so the
+/// result bits cannot vary with `block_rows`).
+enum CandSource<'a> {
+    /// `Aᵀ·U` — output rows are columns of `a` (the update-V half)
+    Atb {
+        a: &'a Csc,
+        u: &'a Csr,
+        dense: Option<Vec<f32>>,
+    },
+    /// `A·V` — output rows are rows of `a` (the update-U half)
+    Ab {
+        a: &'a Csr,
+        v: &'a Csr,
+        dense: Option<Vec<f32>>,
+    },
+}
+
+impl CandSource<'_> {
+    fn out_rows(&self) -> usize {
+        match self {
+            CandSource::Atb { a, .. } => a.cols,
+            CandSource::Ab { a, .. } => a.rows,
+        }
+    }
+
+    /// Compute candidate rows `lo..hi` into the scratch block (cleared
+    /// by the kernels first — scratch is reused across blocks).
+    fn fill(&self, lo: usize, hi: usize, out: &mut RowBlock) {
+        match self {
+            CandSource::Atb { a, u, dense } => ops::atb_into(a, u, dense.as_deref(), lo, hi, out),
+            CandSource::Ab { a, v, dense } => ops::ab_into(a, v, dense.as_deref(), lo, hi, out),
+        }
+    }
+
+    /// Materialize the whole candidate at once, row-partitioned across
+    /// `threads` workers — the single-block fast path.
+    fn fill_all_par(&self, threads: usize) -> RowBlock {
+        match self {
+            CandSource::Atb { a, u, dense } => ops::atb_par_with(a, u, dense.as_deref(), threads),
+            CandSource::Ab { a, v, dense } => ops::ab_par_with(a, v, dense.as_deref(), threads),
+        }
+    }
+}
+
+/// Which solved + projected candidate values a block emits into the
+/// output CSR. The predicates replicate the pre-blocking operators
+/// exactly — down to their NaN edge cases — so the streamed pipeline is
+/// bit-identical to the full-matrix one.
+#[derive(Clone, Copy, Debug)]
+enum Keep {
+    /// unenforced freeze: every stored nonzero (`RowBlock::to_csr`)
+    All,
+    /// threshold mode: `v ≥ tau` and finite. Dropping non-finite values
+    /// is deliberate: a candidate solved against a degenerate Gram
+    /// inverse can go NaN/∞, and the old in-place `*v < tau` zeroing
+    /// silently kept NaN.
+    FiniteAtLeast(f32),
+    /// global top-t, KeepTies: everything not strictly below `tau` (NaN
+    /// included — matching the in-place zeroing pass this replaces)
+    AtLeast(f32),
+    /// global top-t, Exact: `v ≥ tau`; the `== tau` ties beyond the
+    /// budget are dropped during in-order assembly
+    AboveOrTie(f32),
+}
+
+impl Keep {
+    #[inline]
+    fn keeps(self, v: f32) -> bool {
+        match self {
+            Keep::All => v != 0.0,
+            Keep::FiniteAtLeast(tau) => v.is_finite() && v >= tau && v != 0.0,
+            // `!(v < tau)` spelled out NaN-explicitly
+            Keep::AtLeast(tau) => (v >= tau || v.is_nan()) && v != 0.0,
+            Keep::AboveOrTie(tau) => v >= tau,
+        }
+    }
+}
+
+/// One block's emitted output: the surviving nonzeros in CSR-fragment
+/// form, plus the candidate scratch size the block materialized (the
+/// bounded Fig. 6 intermediate).
+struct BlockEmit {
+    /// surviving nonzeros per output row of the block
+    row_nnz: Vec<u32>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    scratch_len: usize,
+}
+
+/// Everything one streamed half-step needs: the candidate source, the
+/// solve matrix, and the block/worker geometry.
+struct StreamCtx<'a> {
+    src: CandSource<'a>,
+    g_inv: Vec<f32>,
+    blocks: Vec<(usize, usize)>,
+    workers: usize,
+    rows: usize,
     k: usize,
+}
+
+impl<'a> StreamCtx<'a> {
+    fn new(
+        src: CandSource<'a>,
+        gram_other: &[f32],
+        k: usize,
+        threads: usize,
+        block_rows: usize,
+    ) -> Self {
+        let rows = src.out_rows();
+        StreamCtx {
+            g_inv: inverse_spd(gram_other, k),
+            blocks: pool::fixed_chunks(rows, block_rows),
+            // below the per-worker floor, spawn overhead beats the work;
+            // the clamp changes nothing but speed
+            workers: pool::effective_workers(rows.saturating_mul(k), threads),
+            rows,
+            k,
+            src,
+        }
+    }
+
+    /// Run `per_block` over every solved + projected candidate block.
+    /// Blocks are claimed dynamically across the workers, each worker
+    /// reusing one scratch RowBlock; results come back in block order.
+    fn map_blocks<R: Send>(
+        &self,
+        per_block: impl Fn(&RowBlock, usize, usize) -> R + Sync,
+    ) -> Vec<R> {
+        pool::scoped_map_ranges_with(
+            self.workers,
+            &self.blocks,
+            || RowBlock::new(self.rows, self.k),
+            |scratch, lo, hi| {
+                self.src.fill(lo, hi, scratch);
+                scratch.matmul_small(&self.g_inv);
+                scratch.project_nonneg();
+                per_block(scratch, lo, hi)
+            },
+        )
+    }
+
+    /// Pass 1 of global enforcement: stream every block, folding each
+    /// worker's solved + projected candidate values into that worker's
+    /// *own* O(t) selector — pass-1 memory is one selector per worker,
+    /// never one per block. Returns the per-block scratch sizes (block
+    /// order, for the memory tracker) and the ≤ workers selectors
+    /// (worker order is scheduling-dependent, which is fine: the cutoff
+    /// they merge into is an order statistic).
+    fn select_pass(&self, t: usize) -> (Vec<usize>, Vec<topk::TopTSelector>) {
+        let (lens, states) = pool::scoped_map_ranges_with_states(
+            self.workers,
+            &self.blocks,
+            || (RowBlock::new(self.rows, self.k), topk::TopTSelector::new(t)),
+            |state, lo, hi| {
+                let (scratch, sel) = state;
+                self.src.fill(lo, hi, scratch);
+                scratch.matmul_small(&self.g_inv);
+                scratch.project_nonneg();
+                for &v in &scratch.data {
+                    sel.offer(v);
+                }
+                scratch.stored_len()
+            },
+        );
+        (lens, states.into_iter().map(|(_, sel)| sel).collect())
+    }
+
+    /// Emission pass: stream the blocks once, filter with `keep`, append
+    /// straight into the output CSR in block order. `trim` is the
+    /// `Exact`-mode global tie budget `(tau, budget)`, consumed during
+    /// assembly — which walks blocks, rows and columns in ascending
+    /// order — reproducing the serial left-to-right budget scan.
+    fn emit(&self, keep: Keep, trim: Option<(f32, usize)>, mem: &mut MemoryTracker) -> Csr {
+        let emits = self.map_blocks(|scratch, lo, hi| {
+            let mut out = BlockEmit {
+                row_nnz: vec![0u32; hi - lo],
+                indices: Vec::new(),
+                values: Vec::new(),
+                scratch_len: scratch.stored_len(),
+            };
+            for (slot, &rid) in scratch.row_ids.iter().enumerate() {
+                let mut n = 0u32;
+                for (c, &v) in scratch.row_data(slot).iter().enumerate() {
+                    if keep.keeps(v) {
+                        out.indices.push(c as u32);
+                        out.values.push(v);
+                        n += 1;
+                    }
+                }
+                out.row_nnz[rid as usize - lo] = n;
+            }
+            out
+        });
+        self.assemble(emits, trim, mem)
+    }
+
+    /// Concatenate the per-block fragments (contiguous, ascending) into
+    /// the output CSR, dropping `== tau` ties once the global `Exact`
+    /// budget runs out. With `trim == None` the tie test never fires
+    /// (`tau` is NaN) and every fragment value is kept verbatim.
+    fn assemble(
+        &self,
+        emits: Vec<BlockEmit>,
+        trim: Option<(f32, usize)>,
+        mem: &mut MemoryTracker,
+    ) -> Csr {
+        let total: usize = emits.iter().map(|e| e.values.len()).sum();
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::with_capacity(total);
+        let mut values = Vec::with_capacity(total);
+        let mut row = 0usize;
+        let (tau, mut budget) = trim.unwrap_or((f32::NAN, 0));
+        for e in emits {
+            mem.observe_intermediate(e.scratch_len);
+            let mut off = 0usize;
+            for &n in &e.row_nnz {
+                for p in off..off + n as usize {
+                    let v = e.values[p];
+                    if v == tau {
+                        if budget == 0 {
+                            continue;
+                        }
+                        budget -= 1;
+                    }
+                    indices.push(e.indices[p]);
+                    values.push(v);
+                }
+                off += n as usize;
+                row += 1;
+                indptr[row] = values.len();
+            }
+        }
+        debug_assert_eq!(row, self.rows, "fragments must cover every output row");
+        Csr {
+            rows: self.rows,
+            cols: self.k,
+            indptr,
+            indices,
+            values,
+        }
+    }
+}
+
+/// Stream one half-step over contiguous row blocks: per block, compute
+/// the candidate rows, solve against the Gram inverse, project, enforce,
+/// and append into the output CSR. Peak intermediate memory is one
+/// scratch RowBlock per worker — O(block_rows · k) — and the result is
+/// bit-identical to the unblocked pipeline at every `(block_rows,
+/// threads)` pair (module docs).
+fn stream_half_step(
+    ctx: &StreamCtx<'_>,
     enforce: Enforce,
     tie: TieMode,
     threads: usize,
     mem: &mut MemoryTracker,
 ) -> Csr {
-    // candidates are tracked separately (max_intermediate_nnz); the
-    // paper's Fig. 6 metric (max_combined_nnz) counts the stored factor
-    // matrices at step boundaries, matching the MATLAB implementation
+    if ctx.blocks.len() <= 1 {
+        // the whole output fits one block, so the candidate is
+        // materialized in full anyway: the pre-blocking in-memory
+        // pipeline is strictly better here (row-partitioned parallel
+        // kernels, and global enforcement in a single sweep instead of
+        // the two-pass selection)
+        return unblocked_half_step(ctx, enforce, tie, threads, mem);
+    }
+    match enforce {
+        Enforce::No => ctx.emit(Keep::All, None, mem),
+        Enforce::Threshold(tau) => ctx.emit(Keep::FiniteAtLeast(tau), None, mem),
+        Enforce::PerColumn(t) => {
+            // assemble unenforced, then deliberately go through the CSR
+            // column gather — the access-pattern cost the paper
+            // attributes to column-wise enforcement
+            let mut csr = ctx.emit(Keep::All, None, mem);
+            // the gather needs every candidate column at once, so the
+            // unenforced CSR is itself a transient intermediate:
+            // per-column mode cannot honor the block_rows bound (the
+            // paper's point about column-wise enforcement) and the
+            // telemetry must say so
+            mem.observe_intermediate(csr.nnz());
+            topk::enforce_top_t_per_column_par(&mut csr, t, tie, threads);
+            csr
+        }
+        Enforce::Global(t) => {
+            // pass 1: stream the blocks through per-worker O(t)
+            // selectors to find the cutoff — an order statistic of the
+            // candidate multiset, independent of block and worker
+            // interleaving
+            let (scratch_lens, selectors) = ctx.select_pass(t);
+            for len in scratch_lens {
+                mem.observe_intermediate(len);
+            }
+            let mut sel = topk::TopTSelector::new(t);
+            for part in selectors {
+                sel.absorb(part);
+            }
+            // pass 2: re-stream (compute traded for memory) and emit
+            match sel.cutoff() {
+                None => ctx.emit(Keep::All, None, mem),
+                Some((tau, above)) => match tie {
+                    TieMode::KeepTies => ctx.emit(Keep::AtLeast(tau), None, mem),
+                    // above ≤ t-1 (see TopTSelector::cutoff), so the
+                    // budget cannot underflow
+                    TieMode::Exact => {
+                        ctx.emit(Keep::AboveOrTie(tau), Some((tau, t - above)), mem)
+                    }
+                },
+            }
+        }
+    }
+}
+
+/// The pre-blocking in-memory pipeline, used when the output fits one
+/// block (`block_rows ≥ rows`): materialize the whole candidate with the
+/// row-partitioned parallel kernels, solve, project and enforce in place,
+/// in a single sweep. Bit-identical to the streamed path — the
+/// blocked-vs-unblocked property tests literally pin the two against
+/// each other. The memory tracker records the full candidate, which is
+/// what actually exists (and still satisfies the `block_rows · k` bound).
+fn unblocked_half_step(
+    ctx: &StreamCtx<'_>,
+    enforce: Enforce,
+    tie: TieMode,
+    threads: usize,
+    mem: &mut MemoryTracker,
+) -> Csr {
+    let mut cand = ctx.src.fill_all_par(threads);
     mem.observe_intermediate(cand.stored_len());
     // below the per-worker floor, spawn overhead beats the work; the
-    // clamp changes nothing but speed (results are thread-count
-    // independent)
-    let threads = crate::coordinator::pool::effective_workers(cand.stored_len(), threads);
-    let g_inv = inverse_spd(gram_other, k);
-    cand.matmul_small_par(&g_inv, threads);
+    // clamp changes nothing but speed
+    let threads = pool::effective_workers(cand.stored_len(), threads);
+    cand.matmul_small_par(&ctx.g_inv, threads);
     cand.project_nonneg_par(threads);
     match enforce {
         Enforce::No => cand.to_csr(),
@@ -112,15 +446,16 @@ fn finish_half_step(
             cand.to_csr()
         }
         Enforce::PerColumn(t) => {
-            // deliberately via the CSR column gather — the access-pattern
-            // cost the paper attributes to column-wise enforcement
+            // via the CSR column gather, as in the streamed path
             let mut csr = cand.to_csr();
             topk::enforce_top_t_per_column_par(&mut csr, t, tie, threads);
             csr
         }
         Enforce::Threshold(tau) => {
+            // same predicate as the streamed emission (non-finite
+            // candidates are dropped, the satellite bugfix)
             for v in &mut cand.data {
-                if *v < tau {
+                if !Keep::FiniteAtLeast(tau).keeps(*v) {
                     *v = 0.0;
                 }
             }
@@ -129,19 +464,24 @@ fn finish_half_step(
     }
 }
 
-/// Steps 1–2 of Algorithm 2: `V = proj₊(Aᵀ U (UᵀU)⁻¹)`, enforced.
+/// Steps 1–2 of Algorithm 2: `V = proj₊(Aᵀ U (UᵀU)⁻¹)`, enforced,
+/// streamed over `block_rows`-row blocks.
 pub fn half_step_v(
     a_csc: &Csc,
     u: &Csr,
     opts: &NmfOptions,
     mem: &mut MemoryTracker,
 ) -> Csr {
+    assert_eq!(a_csc.rows, u.rows, "Aᵀ·U contraction mismatch");
     let g = ops::gram_par(u, opts.threads);
-    let cand = ops::atb_par(a_csc, u, opts.threads);
-    finish_half_step(
-        cand,
-        &g,
-        opts.k,
+    let src = CandSource::Atb {
+        a: a_csc,
+        u,
+        dense: ops::dense_factor(u),
+    };
+    let ctx = StreamCtx::new(src, &g, opts.k, opts.threads, opts.resolved_block_rows());
+    stream_half_step(
+        &ctx,
         enforcement_for(opts.sparsity, false),
         opts.tie_mode,
         opts.threads,
@@ -149,19 +489,24 @@ pub fn half_step_v(
     )
 }
 
-/// Steps 3–4 of Algorithm 2: `U = proj₊(A V (VᵀV)⁻¹)`, enforced.
+/// Steps 3–4 of Algorithm 2: `U = proj₊(A V (VᵀV)⁻¹)`, enforced,
+/// streamed over `block_rows`-row blocks.
 pub fn half_step_u(
     a: &Csr,
     v: &Csr,
     opts: &NmfOptions,
     mem: &mut MemoryTracker,
 ) -> Csr {
+    assert_eq!(a.cols, v.rows, "A·V contraction mismatch");
     let g = ops::gram_par(v, opts.threads);
-    let cand = ops::ab_par(a, v, opts.threads);
-    finish_half_step(
-        cand,
-        &g,
-        opts.k,
+    let src = CandSource::Ab {
+        a,
+        v,
+        dense: ops::dense_factor(v),
+    };
+    let ctx = StreamCtx::new(src, &g, opts.k, opts.threads, opts.resolved_block_rows());
+    stream_half_step(
+        &ctx,
         enforcement_for(opts.sparsity, true),
         opts.tie_mode,
         opts.threads,
@@ -243,14 +588,16 @@ pub fn resume(
 }
 
 /// The options a resumed run actually trains with: the snapshot's
-/// recorded solver math, with only the iteration budget, thread count
-/// and checkpoint knobs taken from the caller. Public so a
+/// recorded solver math, with only the iteration budget, the
+/// machine-local knobs (`threads`, `block_rows` — neither is persisted)
+/// and the checkpoint knobs taken from the caller. Public so a
 /// `--save-model` after `--resume` records the options the run really
 /// used instead of the CLI defaults.
 pub fn resume_options(opts: &NmfOptions, snap: &crate::io::Snapshot) -> NmfOptions {
     let mut effective = snap.options.clone();
     effective.max_iters = opts.max_iters;
     effective.threads = opts.threads;
+    effective.block_rows = opts.block_rows;
     effective.checkpoint_every = opts.checkpoint_every;
     effective.checkpoint_path = opts.checkpoint_path.clone();
     effective
@@ -498,6 +845,94 @@ mod tests {
         let r = factorize(&tdm, &opts);
         assert!(r.iterations < 500, "never converged");
         assert!(r.final_residual() < 1e-4);
+    }
+
+    #[test]
+    fn threshold_enforcement_drops_nonfinite_candidates() {
+        // A degenerate candidate (NaN from a broken Gram inverse, or a
+        // NaN slipped into the corpus) must not survive thresholding —
+        // the old `*v < tau` comparison silently kept NaN. The NaN in
+        // A's row 0 contaminates that whole candidate row through the
+        // SpMM accumulator, so only row 1's value can survive.
+        let a = Csr::from_dense(2, 2, &[f32::NAN, 1.0, 0.0, 2.0]);
+        let v = Csr::from_dense(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let opts = NmfOptions::new(2).with_sparsity(SparsityMode::Threshold {
+            tau_u: Some(0.5),
+            tau_v: None,
+        });
+        // both pipelines: single-block in-memory and streamed (1-row
+        // blocks) must agree on dropping the non-finite values
+        for block_rows in [usize::MAX, 1] {
+            let opts = opts.clone().with_block_rows(block_rows);
+            let mut mem = MemoryTracker::new();
+            // candidate ≈ A·V·(VᵀV+εI)⁻¹ ≈ A with row 0 fully NaN
+            let u = half_step_u(&a, &v, &opts, &mut mem);
+            assert!(
+                u.values.iter().all(|x| x.is_finite()),
+                "block_rows {block_rows}: {:?}",
+                u.values
+            );
+            assert_eq!(u.nnz(), 1, "only row 1's finite 2.0 survives");
+            assert!(u.get(1, 1) > 1.5, "block_rows {block_rows}");
+        }
+    }
+
+    #[test]
+    fn keep_predicates_replicate_the_in_place_operators() {
+        // the emission predicates are the single source of truth for
+        // what each enforcement mode keeps — pin their edge cases
+        let nan = f32::NAN;
+        assert!(Keep::All.keeps(0.5) && Keep::All.keeps(nan));
+        assert!(!Keep::All.keeps(0.0) && !Keep::All.keeps(-0.0));
+        // threshold drops non-finite (the bugfix)
+        assert!(Keep::FiniteAtLeast(0.5).keeps(0.5));
+        assert!(!Keep::FiniteAtLeast(0.5).keeps(0.4));
+        assert!(!Keep::FiniteAtLeast(0.5).keeps(nan));
+        assert!(!Keep::FiniteAtLeast(0.5).keeps(f32::INFINITY));
+        // global KeepTies replicates `!(v < tau)` zeroing, NaN and all
+        assert!(Keep::AtLeast(2.0).keeps(2.0) && Keep::AtLeast(2.0).keeps(nan));
+        assert!(!Keep::AtLeast(2.0).keeps(1.0) && !Keep::AtLeast(2.0).keeps(0.0));
+        // global Exact drops NaN like the old budget scan did
+        assert!(Keep::AboveOrTie(2.0).keeps(2.0) && Keep::AboveOrTie(2.0).keeps(3.0));
+        assert!(!Keep::AboveOrTie(2.0).keeps(1.0) && !Keep::AboveOrTie(2.0).keeps(nan));
+    }
+
+    #[test]
+    fn block_rows_change_memory_but_not_the_factors() {
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 41);
+        let k = 4;
+        for (mode, tie) in [
+            (SparsityMode::None, crate::sparse::TieMode::KeepTies),
+            (SparsityMode::both(60, 120), crate::sparse::TieMode::Exact),
+            (SparsityMode::both(60, 120), crate::sparse::TieMode::KeepTies),
+        ] {
+            let mut base = NmfOptions::new(k)
+                .with_iters(4)
+                .with_seed(43)
+                .with_sparsity(mode)
+                .with_threads(2)
+                .with_block_rows(usize::MAX); // one block = unblocked shape
+            base.tie_mode = tie;
+            let unblocked = factorize(&tdm, &base);
+            for block_rows in [1usize, 7, 64] {
+                let r = factorize(&tdm, &base.clone().with_block_rows(block_rows));
+                assert_eq!(r.u, unblocked.u, "block_rows {block_rows}");
+                assert_eq!(r.v, unblocked.v, "block_rows {block_rows}");
+                assert_eq!(r.residuals, unblocked.residuals, "block_rows {block_rows}");
+                assert_eq!(r.errors, unblocked.errors, "block_rows {block_rows}");
+                // the bounded-scratch guarantee of the streamed pipeline
+                assert!(
+                    r.memory.max_intermediate_nnz <= block_rows.saturating_mul(k),
+                    "block_rows {block_rows}: intermediate {} > {}",
+                    r.memory.max_intermediate_nnz,
+                    block_rows * k
+                );
+                assert_eq!(
+                    r.memory.max_combined_nnz, unblocked.memory.max_combined_nnz,
+                    "combined peak counts stored factors, not scratch"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,17 +1,32 @@
 //! Max-stored-nonzeros tracking — the paper's memory-footprint metric.
 //!
 //! Figure 6 reports "the maximum number of nonzeros that need to be stored
-//! for the U and V matrices combined" during the computation. The peak
-//! occurs *inside* a half-step, when the un-thresholded candidate (active
-//! rows × k scalars) coexists with the other factor; the tracker is
-//! therefore probed at every intermediate, not just after enforcement.
+//! for the U and V matrices combined" during the computation
+//! (`max_combined_nnz`: the stored factors at step boundaries).
+//!
+//! `max_intermediate_nnz` tracks the half-step candidate scratch. Since
+//! the blocked pipeline (PR 4), multi-block half-steps stream over
+//! `block_rows`-row blocks reusing one scratch RowBlock per worker, so
+//! for the streamed global/threshold/unenforced modes this peak is the
+//! largest *single block* — bounded by `block_rows · k` whatever the
+//! corpus size — rather than the whole active-rows × k candidate.
+//! Deliberate exceptions, because those shapes genuinely exist in
+//! memory: a half-step whose output fits one block records the full
+//! candidate (the single-block in-memory path), and per-column
+//! enforcement additionally records the gathered unenforced CSR (the §4
+//! column gather needs every candidate column at once — the paper's
+//! point about column-wise enforcement's cost). Auxiliary fixed-size
+//! state (the k×k Gram/inverse, the per-worker O(t) top-t selectors) is
+//! not counted, exactly as the Gram never was.
 
 /// Frozen summary attached to an [`super::options::NmfResult`].
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct MemoryStats {
-    /// peak of (stored U scalars + stored V scalars), candidates included
+    /// peak of (stored U scalars + stored V scalars) at step boundaries
     pub max_combined_nnz: usize,
-    /// peak stored size of any single half-step intermediate
+    /// peak half-step candidate scratch (for streamed
+    /// global/threshold/unenforced half-steps: one block,
+    /// ≤ `block_rows · k` — see the module docs for the exceptions)
     pub max_intermediate_nnz: usize,
     /// final factor nonzeros
     pub final_u_nnz: usize,

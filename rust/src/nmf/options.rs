@@ -78,6 +78,16 @@ pub struct NmfOptions {
     /// determinism contract in `crate::coordinator::pool`), so this is
     /// purely a speed knob.
     pub threads: usize,
+    /// rows per streamed half-step block (0 = auto): each half-step
+    /// computes, solves, projects and enforces its candidate one
+    /// contiguous `block_rows`-row block at a time, so peak intermediate
+    /// memory is O(`block_rows` · k) per worker instead of
+    /// O(active rows · k).
+    /// Factors, residuals and errors are bit-identical at every setting
+    /// (only `MemoryStats::max_intermediate_nnz` observes the block
+    /// size), so this — like `threads` — is a machine-local memory/speed
+    /// knob and is deliberately not persisted in `.esnmf` snapshots.
+    pub block_rows: usize,
     /// write a `.esnmf` checkpoint to `checkpoint_path` every N completed
     /// iterations (0 = never). The driver skips the write on the final
     /// iteration's tol-break so resuming a checkpoint never overshoots an
@@ -99,6 +109,7 @@ impl NmfOptions {
             init_nnz: None,
             track_error: true,
             threads: crate::coordinator::pool::default_threads(),
+            block_rows: 0,
             checkpoint_every: 0,
             checkpoint_path: None,
         }
@@ -151,7 +162,50 @@ impl NmfOptions {
         };
         self
     }
+
+    /// Set the streamed half-step block height; `0` means "auto" (the
+    /// `ESNMF_BLOCK_ROWS` environment override if set, else a fixed
+    /// [`AUTO_BLOCK_SCALARS`]-scalar scratch budget divided by `k`).
+    pub fn with_block_rows(mut self, block_rows: usize) -> Self {
+        self.block_rows = block_rows;
+        self
+    }
+
+    /// The block height the solver actually streams with. Deliberately
+    /// independent of `threads` and of the corpus, so `MemoryStats` —
+    /// which observes per-block scratch — stays bit-identical across
+    /// thread counts and machines.
+    pub fn resolved_block_rows(&self) -> usize {
+        if self.block_rows != 0 {
+            return self.block_rows;
+        }
+        if let Ok(v) = std::env::var("ESNMF_BLOCK_ROWS") {
+            // a malformed override must fail loudly: the CI tiny-blocks
+            // job exists solely to exercise block boundaries, and a typo
+            // silently falling back to auto would turn it into a no-op
+            // that still reports green
+            match v.trim().parse::<usize>() {
+                Ok(0) => {} // 0 = auto, same as the flag and config knob
+                Ok(n) => return n,
+                Err(_) => panic!(
+                    "ESNMF_BLOCK_ROWS must be a non-negative integer (0 = auto), got {v:?}"
+                ),
+            }
+        }
+        (AUTO_BLOCK_SCALARS / self.k.max(1)).max(1)
+    }
 }
+
+/// Candidate-scratch scalar budget behind `block_rows = auto`: one block
+/// holds at most this many f32s (16 KiB), so `auto` block height is
+/// `AUTO_BLOCK_SCALARS / k`. Deliberately equal to
+/// [`crate::coordinator::pool::MIN_ITEMS_PER_WORKER`]: the streamed
+/// pipeline parallelizes *across* blocks, so `auto` produces at least as
+/// many blocks as the pre-blocking row partitioning had workers — the
+/// memory bound never costs parallelism at the default setting. (A
+/// block height ≥ the output rows serializes into the single-block
+/// in-memory path instead.)
+pub const AUTO_BLOCK_SCALARS: usize = crate::coordinator::pool::MIN_ITEMS_PER_WORKER;
 
 /// A completed factorization with its convergence telemetry.
 #[derive(Clone, Debug)]
@@ -209,6 +263,33 @@ mod tests {
         assert_eq!(NmfOptions::new(2).threads, auto);
         assert_eq!(NmfOptions::new(2).with_threads(0).threads, auto);
         assert_eq!(NmfOptions::new(2).with_threads(3).threads, 3);
+    }
+
+    #[test]
+    fn block_rows_default_auto_and_explicit_values_win() {
+        let o = NmfOptions::new(4);
+        assert_eq!(o.block_rows, 0);
+        // auto: the fixed scalar budget divided by k (no env override in
+        // the test environment unless CI sets one — then any positive
+        // value is acceptable, it only moves memory telemetry)
+        let auto = o.resolved_block_rows();
+        assert!(auto >= 1);
+        if std::env::var("ESNMF_BLOCK_ROWS").is_err() {
+            assert_eq!(auto, AUTO_BLOCK_SCALARS / 4);
+        }
+        // explicit values resolve to themselves, env or not
+        assert_eq!(NmfOptions::new(4).with_block_rows(7).resolved_block_rows(), 7);
+        assert_eq!(
+            NmfOptions::new(4).with_block_rows(usize::MAX).resolved_block_rows(),
+            usize::MAX
+        );
+        // a rank above the scalar budget still yields a positive height
+        if std::env::var("ESNMF_BLOCK_ROWS").is_err() {
+            assert_eq!(
+                NmfOptions::new(AUTO_BLOCK_SCALARS * 2).resolved_block_rows(),
+                1
+            );
+        }
     }
 
     #[test]

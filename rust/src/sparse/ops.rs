@@ -21,7 +21,12 @@ pub const GRAM_CHUNK_ROWS: usize = 1024;
 /// Dense row-major copy of a factor when it is dense enough that the
 /// sparse row iteration's index indirection costs more than it saves.
 /// The dense inner loop is branch-free over k and auto-vectorizes.
-fn maybe_dense_factor(x: &Csr) -> Option<Vec<f32>> {
+///
+/// Public so the blocked half-step driver ([`crate::nmf::als`]) can make
+/// this decision **once per half-step**: the dense/sparse inner loops
+/// accumulate in different orders over explicit zeros, so the choice must
+/// not vary per row block or the result bits would depend on `block_rows`.
+pub fn dense_factor(x: &Csr) -> Option<Vec<f32>> {
     let total = x.rows * x.cols;
     if total == 0 || (x.nnz() as f64) < 0.5 * total as f64 {
         return None;
@@ -29,11 +34,21 @@ fn maybe_dense_factor(x: &Csr) -> Option<Vec<f32>> {
     Some(x.to_dense())
 }
 
-/// `B = Aᵀ · U` restricted to output rows `lo..hi` (columns of `a`).
-/// `u_dense` is the optional dense fast-path copy of `u`.
-fn atb_range(a: &Csc, u: &Csr, u_dense: Option<&[f32]>, lo: usize, hi: usize) -> RowBlock {
+/// `B = Aᵀ · U` restricted to output rows `lo..hi` (columns of `a`),
+/// appended into `out` (cleared first — `out` is a reusable scratch).
+/// `u_dense` is the optional dense fast-path copy of `u`; pass the same
+/// copy for every range of one half-step (see [`dense_factor`]).
+pub fn atb_into(
+    a: &Csc,
+    u: &Csr,
+    u_dense: Option<&[f32]>,
+    lo: usize,
+    hi: usize,
+    out: &mut RowBlock,
+) {
+    assert_eq!(a.rows, u.rows, "Aᵀ·U contraction mismatch");
+    out.clear();
     let k = u.cols;
-    let mut out = RowBlock::new(a.cols, k);
     let mut acc = vec![0.0f32; k];
     for j in lo..hi {
         let (rows, vals) = a.col(j);
@@ -66,38 +81,58 @@ fn atb_range(a: &Csc, u: &Csr, u_dense: Option<&[f32]>, lo: usize, hi: usize) ->
             out.push_row(j, &acc);
         }
     }
+}
+
+/// [`atb_into`] allocating a fresh RowBlock.
+fn atb_range(a: &Csc, u: &Csr, u_dense: Option<&[f32]>, lo: usize, hi: usize) -> RowBlock {
+    let mut out = RowBlock::new(a.cols, u.cols);
+    atb_into(a, u, u_dense, lo, hi, &mut out);
     out
 }
 
 /// `B = Aᵀ · U` where `a` is (n, m) in CSC and `u` is (n, k) CSR.
 /// Returns the (m, k) intermediate with only active rows materialized.
 pub fn atb(a: &Csc, u: &Csr) -> RowBlock {
-    assert_eq!(a.rows, u.rows, "Aᵀ·U contraction mismatch");
-    let ud = maybe_dense_factor(u);
+    let ud = dense_factor(u);
     atb_range(a, u, ud.as_deref(), 0, a.cols)
 }
 
 /// Parallel [`atb`]: contiguous output-row ranges across `threads` scoped
 /// workers, concatenated in order — bit-identical to the serial result.
 pub fn atb_par(a: &Csc, u: &Csr, threads: usize) -> RowBlock {
+    let ud = dense_factor(u);
+    atb_par_with(a, u, ud.as_deref(), threads)
+}
+
+/// [`atb_par`] with a caller-supplied dense fast-path copy (see
+/// [`dense_factor`]) so one half-step computes the copy exactly once.
+pub fn atb_par_with(a: &Csc, u: &Csr, u_dense: Option<&[f32]>, threads: usize) -> RowBlock {
     assert_eq!(a.rows, u.rows, "Aᵀ·U contraction mismatch");
-    let ud = maybe_dense_factor(u);
     if threads <= 1 || a.cols < 2 * threads {
-        return atb_range(a, u, ud.as_deref(), 0, a.cols);
+        return atb_range(a, u, u_dense, 0, a.cols);
     }
     let parts = pool::split_ranges(a.cols, threads);
-    let ud_ref = ud.as_deref();
     let blocks = pool::scoped_map_ranges(threads, &parts, |lo, hi| {
-        atb_range(a, u, ud_ref, lo, hi)
+        atb_range(a, u, u_dense, lo, hi)
     });
     concat_rowblocks(a.cols, u.cols, blocks)
 }
 
-/// `C = A · V` restricted to output rows `lo..hi` (rows of `a`).
-/// `v_dense` is the optional dense fast-path copy of `v`.
-fn ab_range(a: &Csr, v: &Csr, v_dense: Option<&[f32]>, lo: usize, hi: usize) -> RowBlock {
+/// `C = A · V` restricted to output rows `lo..hi` (rows of `a`),
+/// appended into `out` (cleared first — `out` is a reusable scratch).
+/// `v_dense` is the optional dense fast-path copy of `v`; pass the same
+/// copy for every range of one half-step (see [`dense_factor`]).
+pub fn ab_into(
+    a: &Csr,
+    v: &Csr,
+    v_dense: Option<&[f32]>,
+    lo: usize,
+    hi: usize,
+    out: &mut RowBlock,
+) {
+    assert_eq!(a.cols, v.rows, "A·V contraction mismatch");
+    out.clear();
     let k = v.cols;
-    let mut out = RowBlock::new(a.rows, k);
     let mut acc = vec![0.0f32; k];
     for i in lo..hi {
         let (cols, vals) = a.row(i);
@@ -130,28 +165,38 @@ fn ab_range(a: &Csr, v: &Csr, v_dense: Option<&[f32]>, lo: usize, hi: usize) -> 
             out.push_row(i, &acc);
         }
     }
+}
+
+/// [`ab_into`] allocating a fresh RowBlock.
+fn ab_range(a: &Csr, v: &Csr, v_dense: Option<&[f32]>, lo: usize, hi: usize) -> RowBlock {
+    let mut out = RowBlock::new(a.rows, v.cols);
+    ab_into(a, v, v_dense, lo, hi, &mut out);
     out
 }
 
 /// `C = A · V` where `a` is (n, m) in CSR and `v` is (m, k) CSR.
 /// Returns the (n, k) intermediate with only active rows materialized.
 pub fn ab(a: &Csr, v: &Csr) -> RowBlock {
-    assert_eq!(a.cols, v.rows, "A·V contraction mismatch");
-    let vd = maybe_dense_factor(v);
+    let vd = dense_factor(v);
     ab_range(a, v, vd.as_deref(), 0, a.rows)
 }
 
 /// Parallel [`ab`], same contract as [`atb_par`].
 pub fn ab_par(a: &Csr, v: &Csr, threads: usize) -> RowBlock {
+    let vd = dense_factor(v);
+    ab_par_with(a, v, vd.as_deref(), threads)
+}
+
+/// [`ab_par`] with a caller-supplied dense fast-path copy (see
+/// [`dense_factor`]) so one half-step computes the copy exactly once.
+pub fn ab_par_with(a: &Csr, v: &Csr, v_dense: Option<&[f32]>, threads: usize) -> RowBlock {
     assert_eq!(a.cols, v.rows, "A·V contraction mismatch");
-    let vd = maybe_dense_factor(v);
     if threads <= 1 || a.rows < 2 * threads {
-        return ab_range(a, v, vd.as_deref(), 0, a.rows);
+        return ab_range(a, v, v_dense, 0, a.rows);
     }
     let parts = pool::split_ranges(a.rows, threads);
-    let vd_ref = vd.as_deref();
     let blocks = pool::scoped_map_ranges(threads, &parts, |lo, hi| {
-        ab_range(a, v, vd_ref, lo, hi)
+        ab_range(a, v, v_dense, lo, hi)
     });
     concat_rowblocks(a.rows, v.cols, blocks)
 }
@@ -536,6 +581,45 @@ mod tests {
             assert_eq!(ab_par(&a, &v, threads), ab(&a, &v));
             assert_eq!(gram_par(&u, threads), gram(&u));
             assert_eq!(gram_par(&v, threads), gram(&v));
+        });
+    }
+
+    #[test]
+    fn range_kernels_agree_with_full_products_at_any_block_size() {
+        // the blocked half-step pipeline streams atb_into/ab_into over
+        // fixed row chunks; concatenating the chunks must reproduce the
+        // one-shot product bit-for-bit at every block size
+        prop::check("blocked-ranges-vs-full", 1700, 24, |rng: &mut Rng| {
+            let n = rng.range(1, 30);
+            let m = rng.range(1, 30);
+            let k = rng.range(1, 6);
+            let block = rng.range(1, 9);
+            let a = Csr::from_dense(n, m, &prop::gen_sparse_dense(rng, n, m, 0.3));
+            let u = Csr::from_dense(n, k, &prop::gen_sparse_dense(rng, n, k, 0.5));
+            let v = Csr::from_dense(m, k, &prop::gen_sparse_dense(rng, m, k, 0.5));
+            let a_csc = a.to_csc();
+            let ud = dense_factor(&u);
+            let vd = dense_factor(&v);
+
+            let mut scratch = RowBlock::new(m, k);
+            let mut atb_blocked = RowBlock::new(m, k);
+            for (lo, hi) in crate::coordinator::pool::fixed_chunks(m, block) {
+                atb_into(&a_csc, &u, ud.as_deref(), lo, hi, &mut scratch);
+                for (slot, &rid) in scratch.row_ids.iter().enumerate() {
+                    atb_blocked.push_row(rid as usize, scratch.row_data(slot));
+                }
+            }
+            assert_eq!(atb_blocked, atb(&a_csc, &u), "atb block={block}");
+
+            let mut scratch = RowBlock::new(n, k);
+            let mut ab_blocked = RowBlock::new(n, k);
+            for (lo, hi) in crate::coordinator::pool::fixed_chunks(n, block) {
+                ab_into(&a, &v, vd.as_deref(), lo, hi, &mut scratch);
+                for (slot, &rid) in scratch.row_ids.iter().enumerate() {
+                    ab_blocked.push_row(rid as usize, scratch.row_data(slot));
+                }
+            }
+            assert_eq!(ab_blocked, ab(&a, &v), "ab block={block}");
         });
     }
 

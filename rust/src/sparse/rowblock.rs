@@ -54,6 +54,16 @@ impl RowBlock {
         &mut self.data[slot * k..(slot + 1) * k]
     }
 
+    /// Drop every active row, keeping the allocations. The blocked
+    /// half-step pipeline reuses one scratch RowBlock per worker across
+    /// row blocks (see [`crate::coordinator::pool::scoped_map_ranges_with`]),
+    /// so per-worker candidate memory stays at its high-water block, never
+    /// the whole matrix.
+    pub fn clear(&mut self) {
+        self.row_ids.clear();
+        self.data.clear();
+    }
+
     pub fn push_row(&mut self, row_id: usize, row: &[f32]) {
         debug_assert_eq!(row.len(), self.k);
         debug_assert!(
@@ -277,6 +287,19 @@ mod tests {
     #[test]
     fn stored_len_counts_active_rows() {
         assert_eq!(sample().stored_len(), 4); // 2 active rows × k=2
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_capacity() {
+        let mut rb = sample();
+        let cap = rb.data.capacity();
+        rb.clear();
+        assert_eq!(rb.active_rows(), 0);
+        assert_eq!(rb.stored_len(), 0);
+        assert!(rb.data.capacity() >= cap);
+        // refilling from row 0 is legal after a clear
+        rb.push_row(0, &[9.0, 9.0]);
+        assert_eq!(rb.row_data(0), &[9.0, 9.0]);
     }
 
     #[test]

@@ -89,13 +89,130 @@ fn three_way_partition(vals: &mut [f32], lo: usize, hi: usize, pivot: f32) -> (u
 }
 
 /// Sort-based reference for `nth_largest` (the paper's stated method).
+/// Uses `total_cmp`, so NaN input (e.g. a candidate solved against a
+/// degenerate Gram inverse) sorts ahead of +∞ instead of panicking the
+/// comparator — the same bug class PR 3 fixed in `coordinator/model.rs`.
 pub fn nth_largest_by_sort(vals: &[f32], t: usize) -> f32 {
     if t == 0 || vals.is_empty() {
         return f32::INFINITY;
     }
     let mut sorted = vals.to_vec();
-    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sorted.sort_by(|a, b| b.total_cmp(a));
     sorted[t.min(sorted.len()) - 1]
+}
+
+/// Streaming top-t selection over positive values — the pass-1 operator
+/// of the blocked global enforcement ([`crate::nmf::als`]). Blocks feed
+/// their candidate values in any order; the selector holds only the `t`
+/// largest seen (a min-heap, O(t) memory) plus a total count, so finding
+/// the global cutoff never materializes the full candidate matrix.
+///
+/// Determinism: [`Self::cutoff`] returns the t-th largest *value* of the
+/// offered multiset — an order statistic, independent of arrival order —
+/// so it equals `nth_largest` over the serially-gathered positives no
+/// matter how blocks or workers interleave.
+#[derive(Clone, Debug, Default)]
+pub struct TopTSelector {
+    t: usize,
+    /// min-heap of the `t` largest positives seen (`heap[0]` is smallest)
+    heap: Vec<f32>,
+    /// total positives offered, absorbed selectors included
+    positives: usize,
+}
+
+impl TopTSelector {
+    pub fn new(t: usize) -> Self {
+        TopTSelector {
+            t,
+            heap: Vec::new(),
+            positives: 0,
+        }
+    }
+
+    /// Feed one candidate value. Zeros, negatives and NaN are never
+    /// enforcement candidates (matching the `v > 0.0` gather of
+    /// [`enforce_top_t_rowblock`]) and are ignored.
+    #[inline]
+    pub fn offer(&mut self, v: f32) {
+        if v <= 0.0 || v.is_nan() {
+            return;
+        }
+        self.positives += 1;
+        self.insert(v);
+    }
+
+    /// Merge a per-block selector built with the same `t`.
+    pub fn absorb(&mut self, other: TopTSelector) {
+        debug_assert_eq!(self.t, other.t, "selectors must share a budget");
+        self.positives += other.positives;
+        for v in other.heap {
+            self.insert(v);
+        }
+    }
+
+    fn insert(&mut self, v: f32) {
+        if self.t == 0 {
+            return;
+        }
+        if self.heap.len() < self.t {
+            self.heap.push(v);
+            self.sift_up(self.heap.len() - 1);
+        } else if v > self.heap[0] {
+            self.heap[0] = v;
+            self.sift_down();
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i] < self.heap[parent] {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self) {
+        let n = self.heap.len();
+        let mut i = 0;
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < n && self.heap[l] < self.heap[smallest] {
+                smallest = l;
+            }
+            if r < n && self.heap[r] < self.heap[smallest] {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
+    }
+
+    /// The enforcement cutoff `(tau, strictly_above_count)`, or `None`
+    /// when every positive already fits the budget (the
+    /// `positives.len() <= t` fast path of the in-memory operators).
+    /// `strictly_above_count ≤ t - 1`, so `t - above` — the `Exact`-mode
+    /// tie budget — never underflows.
+    pub fn cutoff(&self) -> Option<(f32, usize)> {
+        if self.positives <= self.t {
+            return None;
+        }
+        if self.t == 0 {
+            // nth_largest(_, 0) semantics: nothing passes the cutoff
+            return Some((f32::INFINITY, 0));
+        }
+        let tau = self.heap[0];
+        // every value strictly above the t-th largest is one of the t
+        // largest, i.e. in the heap — counting there is exact
+        Some((tau, self.heap.iter().filter(|&&v| v > tau).count()))
+    }
 }
 
 /// Keep only the `t` largest stored values of a CSR matrix (all values are
@@ -373,6 +490,95 @@ mod tests {
             let got = nth_largest(&mut vals, t);
             assert_eq!(got, want, "t={t} n={n}");
         });
+    }
+
+    #[test]
+    fn nth_largest_by_sort_survives_nan_input() {
+        // regression: b.partial_cmp(a).unwrap() panicked on NaN (the same
+        // bug class PR 3 fixed in the serving-layer ranking sorts). NaN
+        // sorts ahead of +∞ under total_cmp, so finite t still lands on a
+        // finite order statistic.
+        let vals = [1.0f32, f32::NAN, 3.0, 2.0];
+        assert_eq!(nth_largest_by_sort(&vals, 2), 3.0);
+        assert_eq!(nth_largest_by_sort(&vals, 4), 1.0);
+        assert!(nth_largest_by_sort(&[f32::NAN], 1).is_nan());
+        // all-NaN never panics either
+        assert!(nth_largest_by_sort(&[f32::NAN, f32::NAN], 2).is_nan());
+    }
+
+    #[test]
+    fn selector_cutoff_matches_quickselect() {
+        prop::check("selector-vs-quickselect", 1800, 64, |rng: &mut Rng| {
+            let n = rng.range(1, 150);
+            let vals: Vec<f32> = (0..n)
+                .map(|_| {
+                    if rng.f64() < 0.25 {
+                        (rng.below(5) as f32) * 0.5 // ties and zeros
+                    } else if rng.f64() < 0.1 {
+                        -rng.f32() // negatives are ignored
+                    } else {
+                        rng.f32() * 10.0
+                    }
+                })
+                .collect();
+            let t = rng.range(0, n + 2);
+            // reference: the serial gather + quickselect of the in-memory
+            // enforcement operators
+            let mut positives: Vec<f32> = vals.iter().copied().filter(|&v| v > 0.0).collect();
+            let want = if positives.len() <= t {
+                None
+            } else {
+                let tau = nth_largest(&mut positives, t);
+                let above = positives.iter().filter(|&&v| v > tau).count();
+                Some((tau, above))
+            };
+            // streamed in one selector…
+            let mut all = TopTSelector::new(t);
+            for &v in &vals {
+                all.offer(v);
+            }
+            assert_eq!(all.cutoff(), want, "t={t} n={n}");
+            // …and split across per-block selectors absorbed in order
+            let split = rng.range(0, n + 1);
+            let mut left = TopTSelector::new(t);
+            let mut right = TopTSelector::new(t);
+            for &v in &vals[..split] {
+                left.offer(v);
+            }
+            for &v in &vals[split..] {
+                right.offer(v);
+            }
+            left.absorb(right);
+            assert_eq!(left.cutoff(), want, "t={t} split={split}");
+        });
+    }
+
+    #[test]
+    fn selector_edges() {
+        // no positives at all → never enforces
+        let mut s = TopTSelector::new(3);
+        s.offer(0.0);
+        s.offer(-1.0);
+        s.offer(f32::NAN);
+        assert_eq!(s.cutoff(), None);
+        // t = 0 with positives present → infinite cutoff, zero above
+        let mut s = TopTSelector::new(0);
+        s.offer(1.0);
+        assert_eq!(s.cutoff(), Some((f32::INFINITY, 0)));
+        // exactly at budget → no enforcement
+        let mut s = TopTSelector::new(2);
+        s.offer(1.0);
+        s.offer(2.0);
+        assert_eq!(s.cutoff(), None);
+        // over budget: tau = 2nd largest of {1,2,3} = 2.0, one strictly above
+        s.offer(3.0);
+        assert_eq!(s.cutoff(), Some((2.0, 1)));
+        // all-tied input: tau is the tie, nothing strictly above
+        let mut s = TopTSelector::new(2);
+        for _ in 0..5 {
+            s.offer(4.0);
+        }
+        assert_eq!(s.cutoff(), Some((4.0, 0)));
     }
 
     #[test]

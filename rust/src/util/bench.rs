@@ -53,6 +53,10 @@ pub struct BenchSuite {
     pub samples: usize,
     pub warmup: usize,
     pub results: Vec<BenchResult>,
+    /// Named scalar observations (memory peaks, speedup ratios, …)
+    /// carried alongside the timings in every JSON emission — this is
+    /// how the fig6 suite gives the perf trajectory a memory axis.
+    pub metrics: BTreeMap<String, f64>,
 }
 
 /// CI smoke mode: a single rep over tiny sizes (see the module docs).
@@ -85,7 +89,15 @@ impl BenchSuite {
             samples,
             warmup,
             results: Vec::new(),
+            metrics: BTreeMap::new(),
         }
+    }
+
+    /// Record a named scalar observation (printed immediately, emitted
+    /// under `"metrics"` in the suite JSON and the combined trajectory).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        println!("metric {name} = {value}");
+        self.metrics.insert(name.to_string(), value);
     }
 
     /// Measure `f` (the closure's result is black-boxed).
@@ -143,6 +155,15 @@ impl BenchSuite {
         obj.insert(
             "smoke".to_string(),
             Json::Bool(smoke_mode()),
+        );
+        obj.insert(
+            "metrics".to_string(),
+            Json::Obj(
+                self.metrics
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                    .collect(),
+            ),
         );
         obj.insert("results".to_string(), Json::Arr(results));
         Json::Obj(obj)
@@ -266,7 +287,16 @@ mod tests {
             name: "a".into(),
             samples_s: vec![0.25, 0.5, 0.75],
         });
+        suite.metric("max_intermediate_nnz", 160.0);
         let j = suite.to_json();
+        assert_eq!(
+            Json::parse(&j.to_string())
+                .unwrap()
+                .get("metrics")
+                .and_then(|m| m.get("max_intermediate_nnz"))
+                .and_then(Json::as_f64),
+            Some(160.0)
+        );
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("title").and_then(Json::as_str), Some("jsontest"));
         let results = parsed.get("results").and_then(Json::as_arr).unwrap();

@@ -51,6 +51,53 @@ fn factorize_tiny_reuters() {
     assert!(text.contains("mean clustering accuracy"), "{text}");
 }
 
+/// Blank out the wall-clock portion of the "completed N iterations in
+/// X.XXXs" line — everything else the CLI prints is deterministic.
+fn strip_elapsed(text: &str) -> String {
+    text.lines()
+        .map(|l| match (l.find(" in "), l.find("s  final residual")) {
+            (Some(a), Some(b)) if a < b => format!("{}{}", &l[..a], &l[b + 1..]),
+            _ => l.to_string(),
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn block_rows_flag_streams_without_changing_the_output() {
+    // the blocked pipeline's CLI face: any --block-rows value (including
+    // a pathological 1-row block) produces byte-identical human output
+    let base = [
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "4",
+        "--iters", "6", "--sparsity", "both", "--t-u", "50", "--t-v", "90",
+        "--seed", "3", "--threads", "2",
+    ];
+    let mut reference: Option<String> = None;
+    for block_rows in ["1", "17", "auto"] {
+        let mut args: Vec<&str> = base.to_vec();
+        args.extend_from_slice(&["--block-rows", block_rows]);
+        let out = esnmf(&args);
+        assert!(
+            out.status.success(),
+            "--block-rows {block_rows} stderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout).into_owned();
+        assert!(text.contains("completed 6 iterations"), "{text}");
+        let text = strip_elapsed(&text);
+        match &reference {
+            None => reference = Some(text),
+            Some(want) => assert_eq!(&text, want, "--block-rows {block_rows}"),
+        }
+    }
+    // junk values are rejected like junk thread counts
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend_from_slice(&["--block-rows", "many"]);
+    let out = esnmf(&args);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("block-rows"));
+}
+
 #[test]
 fn factorize_sequential_algorithm() {
     let out = esnmf(&[

@@ -219,6 +219,127 @@ fn factorization_byte_identical_across_thread_counts() {
     });
 }
 
+/// Block heights the blocked ≡ unblocked contract is pinned at: single
+/// row (every boundary possible), a prime (ragged final block), a
+/// typical power of two, and auto.
+const BLOCK_ROWS: [usize; 4] = [1, 7, 64, 0];
+
+#[test]
+fn factorization_byte_identical_across_block_heights() {
+    // the blocked streaming pipeline's contract: factors, residuals and
+    // errors are bit-identical at every (block_rows, threads) pair for
+    // every SparsityMode and both TieModes; only max_intermediate_nnz
+    // observes the block height (and never the thread count)
+    prop::check("blocked-vs-unblocked-solver", 0xB10C, 3, |rng| {
+        let tdm = random_corpus(rng);
+        let k = rng.range(2, 5);
+        let t_u = rng.range(k, 160);
+        let t_v = rng.range(k, 320);
+        let modes = [
+            SparsityMode::None,
+            SparsityMode::both(t_u, t_v),
+            SparsityMode::PerColumn {
+                t_u_col: Some(rng.range(1, 25)),
+                t_v_col: Some(rng.range(1, 50)),
+            },
+            SparsityMode::Threshold {
+                tau_u: Some((rng.f64() * 0.2) as f32),
+                tau_v: Some((rng.f64() * 0.1) as f32),
+            },
+        ];
+        let seed = rng.next_u64();
+        for mode in modes {
+            for tie in [TieMode::KeepTies, TieMode::Exact] {
+                let mut base = NmfOptions::new(k)
+                    .with_iters(2)
+                    .with_seed(seed)
+                    .with_sparsity(mode)
+                    .with_threads(1)
+                    .with_block_rows(usize::MAX); // one block = unblocked
+                base.tie_mode = tie;
+                let reference = factorize(&tdm, &base);
+                for &block_rows in &BLOCK_ROWS {
+                    let mut per_block_memory = None;
+                    for threads in [1usize, 4] {
+                        let opts = base
+                            .clone()
+                            .with_threads(threads)
+                            .with_block_rows(block_rows);
+                        let r = factorize(&tdm, &opts);
+                        let tag = format!(
+                            "mode={mode:?} tie={tie:?} block_rows={block_rows} threads={threads}"
+                        );
+                        assert_eq!(r.u, reference.u, "{tag}");
+                        assert_eq!(r.v, reference.v, "{tag}");
+                        assert_eq!(r.iterations, reference.iterations, "{tag}");
+                        assert_eq!(r.residuals, reference.residuals, "{tag}");
+                        assert_eq!(r.errors, reference.errors, "{tag}");
+                        // memory telemetry may depend on block_rows but
+                        // must not depend on the thread count
+                        match per_block_memory {
+                            None => per_block_memory = Some(r.memory),
+                            Some(m) => assert_eq!(r.memory, m, "{tag}"),
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn intermediate_memory_is_bounded_by_one_block() {
+    // a corpus spanning many blocks: the candidate scratch peak must be
+    // block_rows · k, not active_rows · k — the whole point of the
+    // blocked pipeline (and strictly below the unblocked peak)
+    let spec = CorpusSpec {
+        name: "blocky".into(),
+        topics: vec![
+            TopicSpec { name: "coffee".into(), seeds: words::COFFEE.to_vec() },
+            TopicSpec { name: "science".into(), seeds: words::SCIENCE.to_vec() },
+            TopicSpec { name: "music".into(), seeds: words::MUSIC.to_vec() },
+        ],
+        n_docs: 400,
+        doc_len_mean: 30,
+        topic_tail: 40,
+        background_tail: 30,
+        background_frac: 0.3,
+        mixture: 0.1,
+        zipf_s: 1.05,
+    };
+    let tdm = generate_tdm(&spec, 0xB10C2);
+    let k = 5;
+    let block_rows = 32;
+    assert!(
+        tdm.n_docs() > 4 * block_rows && tdm.n_terms() > 2 * block_rows,
+        "corpus must span many blocks ({} docs, {} terms)",
+        tdm.n_docs(),
+        tdm.n_terms()
+    );
+    let base = NmfOptions::new(k)
+        .with_iters(3)
+        .with_seed(11)
+        .with_sparsity(SparsityMode::both(300, 900))
+        .with_track_error(false);
+    let blocked = factorize(&tdm, &base.clone().with_block_rows(block_rows));
+    assert!(
+        blocked.memory.max_intermediate_nnz <= block_rows * k,
+        "intermediate {} exceeds the {}-scalar block bound",
+        blocked.memory.max_intermediate_nnz,
+        block_rows * k
+    );
+    let unblocked = factorize(&tdm, &base.clone().with_block_rows(usize::MAX));
+    assert!(
+        blocked.memory.max_intermediate_nnz < unblocked.memory.max_intermediate_nnz,
+        "blocked peak {} should undercut unblocked {}",
+        blocked.memory.max_intermediate_nnz,
+        unblocked.memory.max_intermediate_nnz
+    );
+    // same factorization either way
+    assert_eq!(blocked.u, unblocked.u);
+    assert_eq!(blocked.v, unblocked.v);
+}
+
 #[test]
 fn job_manager_state_machine_invariants() {
     prop::check("job-state-machine", 0xB22, 6, |rng| {
