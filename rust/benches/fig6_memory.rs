@@ -2,14 +2,18 @@
 //! guesses (memory is the figure's metric; time shown for context), plus
 //! the blocked-vs-unblocked half-step comparison: the streamed pipeline
 //! must hold `max_intermediate_nnz` at O(block_rows · k) per worker
-//! while producing bit-identical factors. Peaks are recorded as suite
+//! while producing bit-identical factors — and the out-of-core corpus
+//! store, whose resident-corpus peak (bytes of shards in flight) must
+//! undercut the full on-disk matrix. Peaks are recorded as suite
 //! metrics so the merged `BENCH_smoke.json` trajectory carries a memory
-//! axis. MemoryStats are captured from the benched runs themselves (the
+//! axis (and the `bench-check` CI gate can flag regressions).
+//! MemoryStats are captured from the benched runs themselves (the
 //! solver is deterministic, so every sample observes identical peaks).
 
 mod common;
 
-use esnmf::nmf::{factorize, NmfOptions, NmfResult, SparsityMode};
+use esnmf::io::CorpusStore;
+use esnmf::nmf::{factorize, factorize_corpus, NmfOptions, NmfResult, SparsityMode};
 use esnmf::util::bench::BenchSuite;
 
 fn main() {
@@ -84,4 +88,43 @@ fn main() {
         unblocked.memory.max_intermediate_nnz,
         block_rows * k
     );
+
+    // out-of-core: the same blocked factorization streamed from an
+    // .estdm store — bit-identical factors, resident corpus bounded by
+    // the shards in flight instead of the whole matrix
+    let store_path = std::env::temp_dir().join("esnmf_fig6_bench.estdm");
+    let _ = std::fs::remove_file(&store_path);
+    let shard_rows = (tdm.n_docs().max(tdm.n_terms()) / 16).max(1);
+    CorpusStore::write(&store_path, &tdm, shard_rows).expect("writing bench store");
+    let store = CorpusStore::open(&store_path).expect("opening bench store");
+    // one worker ⇒ one shard cursor ⇒ the resident peak is a
+    // deterministic function of the (fixed smoke-mode) corpus, so the
+    // bench-check CI gate can guard it without scheduling jitter; the
+    // factors are bit-identical at any thread count regardless
+    let store_opts = blocked_opts.clone().with_threads(1);
+    let mut last_store: Option<NmfResult> = None;
+    suite.bench(
+        &format!("als(dense init, corpus-store, block_rows={block_rows})"),
+        || {
+            last_store = Some(factorize_corpus(&store, &store_opts));
+        },
+    );
+    let streamed = last_store.take().expect("bench ran");
+    assert_eq!(streamed.u, blocked.u, "store-streamed ≡ in-memory factors");
+    assert_eq!(streamed.v, blocked.v, "store-streamed ≡ in-memory factors");
+    suite.metric("store.shard_rows", shard_rows as f64);
+    suite.metric(
+        "store.resident_corpus_peak_bytes",
+        store.resident().peak() as f64,
+    );
+    suite.metric("store.corpus_payload_bytes", store.payload_bytes() as f64);
+    println!(
+        "store-streamed resident corpus peak: {} of {} payload bytes ({} + {} shards)",
+        store.resident().peak(),
+        store.payload_bytes(),
+        store.terms_major().n_shards(),
+        store.docs_major().n_shards(),
+    );
+    drop(store);
+    let _ = std::fs::remove_file(&store_path);
 }

@@ -20,6 +20,10 @@ pub enum Algorithm {
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub corpus: String,
+    /// factorize against an on-disk `.estdm` corpus store instead of a
+    /// resident corpus (`--corpus-store` / `[corpus] store`); streams
+    /// `A` shard-by-shard, bit-identical to in-memory
+    pub corpus_store: Option<String>,
     pub scale: Scale,
     pub seed: u64,
     pub algorithm: Algorithm,
@@ -76,6 +80,7 @@ impl Default for RunConfig {
         let serve_defaults = crate::coordinator::ServeOptions::default();
         RunConfig {
             corpus: "reuters".into(),
+            corpus_store: None,
             scale: Scale::Small,
             seed: 0x5eed,
             algorithm: Algorithm::Als,
@@ -111,6 +116,9 @@ impl RunConfig {
     pub fn apply_file(&mut self, f: &ConfigFile) -> Result<()> {
         if let Some(v) = f.str("corpus") {
             self.corpus = v.to_string();
+        }
+        if let Some(v) = f.str("corpus.store") {
+            self.corpus_store = Some(v.to_string());
         }
         if let Some(v) = f.str("scale") {
             self.scale = Scale::parse(v)
@@ -279,6 +287,10 @@ impl RunConfig {
         s.init_nnz = self.init_nnz;
         s.t_u = self.t_u;
         s.t_v = self.t_v;
+        // the streamed half-steps honor the same machine-local knobs as
+        // Algorithm 2 (bit-identical at any setting)
+        s.threads = self.threads;
+        s.block_rows = self.block_rows;
         s
     }
 }
@@ -412,6 +424,20 @@ mod tests {
         let want = crate::coordinator::ServeOptions::default();
         assert_eq!(opts.threads, want.threads);
         assert_eq!(opts.cache_size, want.cache_size);
+    }
+
+    #[test]
+    fn corpus_store_knob_from_file() {
+        let f = ConfigFile::parse("[corpus]\nstore = corpora/reuters.estdm\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.corpus_store.as_deref(), Some("corpora/reuters.estdm"));
+        // a top-level corpus preset and a [corpus] section coexist
+        let f = ConfigFile::parse("corpus = pubmed\n[corpus]\nstore = x.estdm\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.corpus, "pubmed");
+        assert_eq!(cfg.corpus_store.as_deref(), Some("x.estdm"));
     }
 
     #[test]

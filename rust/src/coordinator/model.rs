@@ -4,7 +4,7 @@
 
 use crate::eval::topics::top_terms;
 use crate::io::Snapshot;
-use crate::nmf::FoldIn;
+use crate::nmf::{FoldIn, FoldInScratch};
 use crate::sparse::{Csr, TieMode};
 use crate::text::normalize_term;
 
@@ -114,21 +114,35 @@ impl TopicModel {
     /// nonzero (topic, weight) entries, weight-descending (ties broken by
     /// topic id).
     pub fn fold_in<S: AsRef<str>>(&self, doc: &[(S, f32)]) -> Vec<(usize, f32)> {
-        let pairs: Vec<(usize, f32)> = doc
-            .iter()
-            .filter_map(|(w, c)| {
-                self.term_ids
-                    .get(&normalize_term(w.as_ref()))
-                    .map(|&row| (row, *c))
-            })
-            .collect();
-        let x = self.foldin.solve(&self.u, &pairs);
+        self.fold_in_with(doc, &mut FoldInScratch::default())
+    }
+
+    /// [`TopicModel::fold_in`] through caller-pooled scratch buffers —
+    /// the topic server keeps a pool of [`FoldInScratch`]es so a warm
+    /// serving path answers fold-ins with zero allocation growth (only
+    /// the returned pairs are allocated; they *are* the response).
+    /// Identical answers to [`TopicModel::fold_in`].
+    pub fn fold_in_with<S: AsRef<str>>(
+        &self,
+        doc: &[(S, f32)],
+        scratch: &mut FoldInScratch,
+    ) -> Vec<(usize, f32)> {
+        let mut pairs = std::mem::take(&mut scratch.pairs);
+        pairs.clear();
+        pairs.extend(doc.iter().filter_map(|(w, c)| {
+            self.term_ids
+                .get(&normalize_term(w.as_ref()))
+                .map(|&row| (row, *c))
+        }));
+        let x = self.foldin.solve_into(&self.u, &pairs, scratch);
         let mut out: Vec<(usize, f32)> = x
-            .into_iter()
+            .iter()
+            .copied()
             .enumerate()
             .filter(|&(_, w)| w > 0.0)
             .collect();
         out.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        scratch.pairs = pairs;
         out
     }
 

@@ -37,6 +37,7 @@ use super::cache::LruCache;
 use super::metrics::{Counter, Gauge, Histogram, MetricsRegistry};
 use super::model::TopicModel;
 use super::pool::ThreadPool;
+use crate::nmf::FoldInScratch;
 use crate::Result;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -102,6 +103,15 @@ pub struct ServerState {
     cache_misses: Arc<Counter>,
     /// parallel to [`LATENCY_LABELS`]
     latency: Vec<Arc<Histogram>>,
+    /// pooled fold-in scratch buffers, one checked out per in-flight
+    /// request — the serving-side analogue of the solver's per-worker
+    /// RowBlock reuse, so a warm server answers FOLDIN with zero
+    /// per-request allocation growth
+    foldin_scratch: Mutex<Vec<FoldInScratch>>,
+    /// fresh scratches ever created (`server.foldin.scratch_allocs`):
+    /// bounded by the peak number of simultaneously served requests,
+    /// never by the request count — the hammer test pins that
+    scratch_allocs: Arc<Counter>,
 }
 
 impl ServerState {
@@ -115,16 +125,30 @@ impl ServerState {
             requests: metrics.counter("server.requests"),
             cache_hits: metrics.counter("server.cache.hits"),
             cache_misses: metrics.counter("server.cache.misses"),
+            scratch_allocs: metrics.counter("server.foldin.scratch_allocs"),
             latency,
             metrics,
             cache: Mutex::new(LruCache::new(cache_size)),
             cache_enabled: cache_size > 0,
+            foldin_scratch: Mutex::new(Vec::new()),
         }
     }
 
     /// Current number of cached responses (for tests / introspection).
     pub fn cache_len(&self) -> usize {
         self.cache.lock().unwrap().len()
+    }
+
+    /// Run one command line through a pooled scratch: pop (or create and
+    /// count) a [`FoldInScratch`], answer, return it to the pool.
+    fn run_command(&self, line: &str) -> String {
+        let mut scratch = self.foldin_scratch.lock().unwrap().pop().unwrap_or_else(|| {
+            self.scratch_allocs.inc();
+            FoldInScratch::default()
+        });
+        let response = handle_command_with(&self.model, &self.metrics, line, &mut scratch);
+        self.foldin_scratch.lock().unwrap().push(scratch);
+        response
     }
 }
 
@@ -191,8 +215,20 @@ fn parse_topic_n(
 }
 
 /// Handle one protocol line (no caching, no framing — see [`respond`]).
-/// Public for direct unit testing.
+/// Public for direct unit testing; the serving path goes through
+/// [`handle_command_with`] and a pooled scratch.
 pub fn handle_command(model: &TopicModel, metrics: &MetricsRegistry, line: &str) -> String {
+    handle_command_with(model, metrics, line, &mut FoldInScratch::default())
+}
+
+/// [`handle_command`] with caller-pooled fold-in scratch (identical
+/// answers; the scratch only removes per-request allocation).
+pub fn handle_command_with(
+    model: &TopicModel,
+    metrics: &MetricsRegistry,
+    line: &str,
+    scratch: &mut FoldInScratch,
+) -> String {
     let mut parts = line.split_whitespace();
     let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
     match cmd.as_str() {
@@ -240,7 +276,7 @@ pub fn handle_command(model: &TopicModel, metrics: &MetricsRegistry, line: &str)
             if doc.is_empty() {
                 return USAGE.into();
             }
-            let ranked = model.fold_in(&doc);
+            let ranked = model.fold_in_with(&doc, scratch);
             let mut body = vec![format!("nnz={}", ranked.len())];
             body.extend(ranked.iter().map(|(t, w)| format!("topic:{t}:{w:.4}")));
             format!("OK {}", body.join(" "))
@@ -290,7 +326,7 @@ pub fn respond(state: &ServerState, line: &str) -> String {
                 }
                 None => {
                     state.cache_misses.inc();
-                    let fresh = handle_command(&state.model, &state.metrics, line);
+                    let fresh = state.run_command(line);
                     // never cache ERR: malformed lines must not be able to
                     // evict legitimate entries
                     if fresh.starts_with("OK") {
@@ -300,7 +336,7 @@ pub fn respond(state: &ServerState, line: &str) -> String {
                 }
             }
         }
-        None => handle_command(&state.model, &state.metrics, line),
+        None => state.run_command(line),
     };
     state.latency[latency_label_idx(line)].observe(start.elapsed());
     response
@@ -775,6 +811,24 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(s.metrics.counter("server.cache.misses").get(), 2);
         assert_eq!(s.metrics.counter("server.cache.hits").get(), 0);
+    }
+
+    #[test]
+    fn scratch_pool_plateaus_at_the_concurrency_not_the_request_count() {
+        // serial requests reuse one pooled scratch: however many
+        // requests run, only the first allocates
+        let s = state(0);
+        for i in 0..50 {
+            let r = respond(&s, &format!("FOLDIN coffee:{}", i % 5 + 1));
+            assert!(r.starts_with("OK"), "{r}");
+            let _ = respond(&s, "CLASSIFY coffee crop");
+            let _ = respond(&s, "TOPICS");
+        }
+        assert_eq!(
+            s.metrics.counter("server.foldin.scratch_allocs").get(),
+            1,
+            "serial serving must reuse one scratch"
+        );
     }
 
     #[test]

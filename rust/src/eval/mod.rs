@@ -11,5 +11,5 @@ pub mod sparsity;
 pub mod topics;
 
 pub use accuracy::{mean_topic_accuracy, topic_accuracy};
-pub use sparsity::SparsityReport;
+pub use sparsity::{sparsity_fraction, SparsityReport};
 pub use topics::{top_terms, topic_term_table};

@@ -19,17 +19,55 @@ impl SparsityReport {
     /// Compute the Fig. 1 rows. `U·Vᵀ`'s *structural* sparsity is computed
     /// from the factor supports without materializing the dense product.
     pub fn compute(a: &Csr, u: &Csr, v: &Csr) -> SparsityReport {
+        SparsityReport::from_parts(a.rows, a.cols, a.nnz(), u, v)
+    }
+
+    /// As [`SparsityReport::compute`] from `A`'s shape and nonzero count
+    /// alone — the out-of-core path, where `A` lives in a corpus store
+    /// and only its stats are resident. Identical numbers to `compute`
+    /// on the same corpus.
+    pub fn from_parts(
+        a_rows: usize,
+        a_cols: usize,
+        a_nnz: usize,
+        u: &Csr,
+        v: &Csr,
+    ) -> SparsityReport {
         let uvt = ops::spmm(u, &v.transpose());
         SparsityReport {
-            a_sparsity: a.sparsity(),
+            a_sparsity: sparsity_fraction(a_rows, a_cols, a_nnz),
             u_sparsity: u.sparsity(),
             v_sparsity: v.sparsity(),
             uvt_sparsity: uvt.sparsity(),
-            a_nnz: a.nnz(),
+            a_nnz,
             u_nnz: u.nnz(),
             v_nnz: v.nnz(),
             uvt_nnz: uvt.nnz(),
         }
+    }
+
+    /// The Fig. 1 rows *without* the `U·Vᵀ` product — the out-of-core
+    /// reporting path: the product's structural support can approach a
+    /// dense `n_terms × n_docs` for weakly enforced factors, which
+    /// would reintroduce after the run exactly the O(n·m) memory the
+    /// store-streamed factorization existed to avoid.
+    pub fn format_factors_only(
+        dataset: &str,
+        a_rows: usize,
+        a_cols: usize,
+        a_nnz: usize,
+        u: &Csr,
+        v: &Csr,
+    ) -> String {
+        format!(
+            "{dataset}\nMatrix | Sparsity | NNZ\n--- | --- | ---\nA | {:.2}% | {}\nU | {:.2}% | {}\nV | {:.2}% | {}\n",
+            sparsity_fraction(a_rows, a_cols, a_nnz) * 100.0,
+            a_nnz,
+            u.sparsity() * 100.0,
+            u.nnz(),
+            v.sparsity() * 100.0,
+            v.nnz(),
+        )
     }
 
     /// Markdown rows in the paper's Fig. 1 layout.
@@ -46,6 +84,16 @@ impl SparsityReport {
             self.uvt_nnz,
         )
     }
+}
+
+/// Fraction of exactly-zero cells for a matrix known only by shape and
+/// nonzero count — [`Csr::sparsity`] for corpora that are not resident
+/// (the out-of-core store), empty shapes counting as fully sparse.
+pub fn sparsity_fraction(rows: usize, cols: usize, nnz: usize) -> f64 {
+    if rows * cols == 0 {
+        return 1.0;
+    }
+    1.0 - nnz as f64 / (rows * cols) as f64
 }
 
 /// Hoyer's sparsity measure (the constraint used by [10] in the paper):

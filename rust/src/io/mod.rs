@@ -1,5 +1,6 @@
-//! Model persistence: the versioned `.esnmf` binary snapshot format and
-//! its checkpoint/resume plumbing.
+//! Binary persistence formats: the versioned `.esnmf` model snapshot
+//! with its checkpoint/resume plumbing, and the versioned `.estdm`
+//! out-of-core corpus store streamed by the blocked ALS.
 //!
 //! The paper's algorithms make NMF viable on *large* corpora — but a
 //! large factorization that cannot be saved must be recomputed on every
@@ -8,10 +9,17 @@
 //! file: both CSR factors bit-exact, the vocabulary, document labels,
 //! the [`crate::nmf::NmfOptions`] used, a corpus digest that pins which
 //! data the factors belong to, and the convergence telemetry needed to
-//! resume mid-run.
+//! resume mid-run. [`store`] does the complementary thing for the
+//! *input*: the term-document matrix lives on disk as row-range shards
+//! in both orientations, so corpora that don't fit in RAM factorize by
+//! streaming — bit-identical to in-memory. Both formats share the
+//! bounds-checked codecs in [`wire`].
 
 pub mod snapshot;
+pub mod store;
+mod wire;
 
 pub use snapshot::{
     corpus_digest, Progress, Snapshot, SnapshotError, MAX_SNAPSHOT_K, SNAPSHOT_VERSION,
 };
+pub use store::{CorpusStore, ResidentCounter, ShardedMatrix, StoreError, STORE_VERSION};

@@ -23,6 +23,7 @@
 //! section sizes and structurally invalid factors all surface as a typed
 //! [`SnapshotError`], never a panic or an unbounded allocation.
 
+use super::wire::{self, Reader, WireError};
 use crate::nmf::memory::MemoryStats;
 use crate::nmf::{NmfOptions, SparsityMode};
 use crate::sparse::{Csr, TieMode};
@@ -88,6 +89,17 @@ impl std::error::Error for SnapshotError {}
 impl From<std::io::Error> for SnapshotError {
     fn from(e: std::io::Error) -> Self {
         SnapshotError::Io(e)
+    }
+}
+
+impl From<WireError> for SnapshotError {
+    fn from(e: WireError) -> Self {
+        match e {
+            WireError::Truncated { expected, have } => {
+                SnapshotError::Truncated { expected, have }
+            }
+            WireError::Corrupt(msg) => SnapshotError::Corrupt(msg),
+        }
     }
 }
 
@@ -204,22 +216,13 @@ impl Snapshot {
         payload.extend_from_slice(&self.corpus_digest.to_le_bytes());
         self.u.write_bytes(&mut payload);
         self.v.write_bytes(&mut payload);
-        write_strings(&mut payload, &self.terms);
-        match &self.doc_labels {
-            None => payload.push(0),
-            Some(labels) => {
-                payload.push(1);
-                payload.extend_from_slice(&(labels.len() as u64).to_le_bytes());
-                for &l in labels {
-                    payload.extend_from_slice(&l.to_le_bytes());
-                }
-            }
-        }
-        write_strings(&mut payload, &self.label_names);
+        wire::write_strings(&mut payload, &self.terms);
+        wire::write_opt_labels(&mut payload, &self.doc_labels);
+        wire::write_strings(&mut payload, &self.label_names);
         let p = &self.progress;
         payload.extend_from_slice(&(p.iterations as u64).to_le_bytes());
-        write_f64s(&mut payload, &p.residuals);
-        write_f64s(&mut payload, &p.errors);
+        wire::write_f64s(&mut payload, &p.residuals);
+        wire::write_f64s(&mut payload, &p.errors);
         for m in [
             p.memory.max_combined_nnz,
             p.memory.max_intermediate_nnz,
@@ -278,35 +281,17 @@ impl Snapshot {
             });
         }
 
-        let mut r = Reader {
-            bytes: payload,
-            pos: 0,
-        };
+        let mut r = Reader::new(payload);
         let options = read_options(&mut r)?;
         let corpus_digest = r.u64()?;
         let u = Csr::read_bytes(r.bytes, &mut r.pos).map_err(SnapshotError::Corrupt)?;
         let v = Csr::read_bytes(r.bytes, &mut r.pos).map_err(SnapshotError::Corrupt)?;
-        let terms = read_strings(&mut r)?;
-        let doc_labels = match r.u8()? {
-            0 => None,
-            1 => {
-                let n = r.len("doc labels", 4)?;
-                let mut labels = Vec::with_capacity(n);
-                for _ in 0..n {
-                    labels.push(r.u32()?);
-                }
-                Some(labels)
-            }
-            other => {
-                return Err(SnapshotError::Corrupt(format!(
-                    "bad doc-label flag {other}"
-                )))
-            }
-        };
-        let label_names = read_strings(&mut r)?;
+        let terms = wire::read_strings(&mut r)?;
+        let doc_labels = wire::read_opt_labels(&mut r)?;
+        let label_names = wire::read_strings(&mut r)?;
         let iterations = r.u64()? as usize;
-        let residuals = read_f64s(&mut r)?;
-        let errors = read_f64s(&mut r)?;
+        let residuals = wire::read_f64s(&mut r)?;
+        let errors = wire::read_f64s(&mut r)?;
         let memory = MemoryStats {
             max_combined_nnz: r.u64()? as usize,
             max_intermediate_nnz: r.u64()? as usize,
@@ -422,16 +407,23 @@ impl Snapshot {
     /// Refuse to continue training against `tdm` unless it is the exact
     /// corpus this snapshot was trained on.
     pub fn check_corpus(&self, tdm: &TermDocMatrix) -> Result<(), SnapshotError> {
-        let digest = corpus_digest(tdm);
+        self.check_digest(corpus_digest(tdm), tdm.n_terms(), tdm.n_docs())
+    }
+
+    /// As [`Self::check_corpus`] against a precomputed digest — the
+    /// out-of-core corpus store (`.estdm`) carries its digest in
+    /// metadata, so resuming against a store never re-hashes the matrix.
+    pub fn check_digest(
+        &self,
+        digest: u64,
+        n_terms: usize,
+        n_docs: usize,
+    ) -> Result<(), SnapshotError> {
         if digest != self.corpus_digest {
             return Err(SnapshotError::Mismatch(format!(
                 "corpus digest {digest:#018x} does not match the snapshot's {:#018x} \
-                 ({} terms × {} docs vs {} × {}); use warm-start for a changed corpus",
-                self.corpus_digest,
-                tdm.n_terms(),
-                tdm.n_docs(),
-                self.u.rows,
-                self.v.rows,
+                 ({n_terms} terms × {n_docs} docs vs {} × {}); use warm-start for a changed corpus",
+                self.corpus_digest, self.u.rows, self.v.rows,
             )));
         }
         Ok(())
@@ -461,57 +453,8 @@ impl Snapshot {
 }
 
 // --- payload section codecs -------------------------------------------------
-
-/// Bounds-checked little-endian payload reader.
-struct Reader<'a> {
-    bytes: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
-        let end = self
-            .pos
-            .checked_add(n)
-            .filter(|&e| e <= self.bytes.len())
-            .ok_or(SnapshotError::Truncated {
-                expected: self.pos.saturating_add(n),
-                have: self.bytes.len(),
-            })?;
-        let s = &self.bytes[self.pos..end];
-        self.pos = end;
-        Ok(s)
-    }
-
-    fn u8(&mut self) -> Result<u8, SnapshotError> {
-        Ok(self.take(1)?[0])
-    }
-
-    fn u32(&mut self) -> Result<u32, SnapshotError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64, SnapshotError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    /// An element count for a section of `elem_size`-byte items, rejected
-    /// up front when the remaining payload cannot possibly hold it (so a
-    /// corrupt length cannot trigger a huge allocation).
-    fn len(&mut self, what: &str, elem_size: usize) -> Result<usize, SnapshotError> {
-        let n = self.u64()? as usize;
-        let need = n
-            .checked_mul(elem_size)
-            .ok_or_else(|| SnapshotError::Corrupt(format!("absurd {what} count {n}")))?;
-        if self.bytes.len() - self.pos < need {
-            return Err(SnapshotError::Corrupt(format!(
-                "{what} section claims {need} bytes, {} remain",
-                self.bytes.len() - self.pos
-            )));
-        }
-        Ok(n)
-    }
-}
+// (the bounds-checked Reader and the shared string/f64/label codecs live
+// in `io::wire`, shared with the `.estdm` corpus store)
 
 fn write_opt_usize(out: &mut Vec<u8>, v: Option<usize>) {
     match v {
@@ -629,46 +572,6 @@ fn read_options(r: &mut Reader) -> Result<NmfOptions, SnapshotError> {
     opts.tie_mode = tie_mode;
     opts.init_nnz = init_nnz;
     Ok(opts)
-}
-
-fn write_strings(out: &mut Vec<u8>, strings: &[String]) {
-    out.extend_from_slice(&(strings.len() as u64).to_le_bytes());
-    for s in strings {
-        out.extend_from_slice(&(s.len() as u64).to_le_bytes());
-        out.extend_from_slice(s.as_bytes());
-    }
-}
-
-fn read_strings(r: &mut Reader) -> Result<Vec<String>, SnapshotError> {
-    // each string costs at least its 8-byte length prefix
-    let n = r.len("string table", 8)?;
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        let len = r.len("string", 1)?;
-        let bytes = r.take(len)?;
-        out.push(
-            std::str::from_utf8(bytes)
-                .map_err(|e| SnapshotError::Corrupt(format!("bad UTF-8 string: {e}")))?
-                .to_string(),
-        );
-    }
-    Ok(out)
-}
-
-fn write_f64s(out: &mut Vec<u8>, xs: &[f64]) {
-    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
-    for &x in xs {
-        out.extend_from_slice(&x.to_bits().to_le_bytes());
-    }
-}
-
-fn read_f64s(r: &mut Reader) -> Result<Vec<f64>, SnapshotError> {
-    let n = r.len("f64 series", 8)?;
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        out.push(f64::from_bits(r.u64()?));
-    }
-    Ok(out)
 }
 
 /// CRC-32 (IEEE 802.3, reflected, init/xorout `0xffffffff`) — the common

@@ -1,0 +1,1084 @@
+//! The `.estdm` out-of-core corpus store: the term-document matrix as
+//! on-disk row-range shards, streamed by the blocked ALS half-steps.
+//!
+//! PR 4 bounded the solver's *intermediate* memory at O(block_rows · k),
+//! but the data matrix `A` itself still had to be fully resident. This
+//! store removes that last O(nnz(A)) residency: `esnmf ingest` writes a
+//! corpus to disk once, and `factorize --corpus-store` streams it back
+//! shard-by-shard through the [`RowSource`] contract — bit-identical to
+//! the in-memory factorization, with resident corpus bytes bounded by
+//! the shards currently cached across workers (one per worker cursor).
+//!
+//! # File layout (all integers little-endian)
+//!
+//! ```text
+//! magic     6 bytes   b"ESTDM\0"
+//! version   u16       STORE_VERSION (readers refuse newer files)
+//! meta_len  u64       metadata byte count
+//! meta_crc  u32       CRC-32 (IEEE) of the metadata
+//! metadata  meta_len bytes
+//! shards    concatenated shard payloads (offsets in the metadata)
+//! ```
+//!
+//! The metadata holds the corpus digest (the same
+//! [`corpus_digest`](super::corpus_digest) the `.esnmf` snapshot pins,
+//! so `--resume` / `--warm-start` / `serve --model` verification keeps
+//! working against a store), `‖A‖²_F` (precomputed with
+//! [`Csr::fro_norm_sq`]'s summation order so the error history is
+//! bit-identical), the vocabulary and document labels, and **two shard
+//! indexes** — one per orientation:
+//!
+//! * **terms-major** — row ranges of `A` (terms × docs), streamed by the
+//!   update-U half-step (`A·V`);
+//! * **docs-major** — row ranges of `Aᵀ` (docs × terms), streamed by the
+//!   update-V half-step (`Aᵀ·U`).
+//!
+//! Each half-step walks a different side of `A`, so the store keeps both
+//! orientations on disk — disk is traded for the transpose that an
+//! in-memory [`TermDocMatrix`](crate::text::TermDocMatrix) keeps as its
+//! CSC twin. Every shard is a [`Csr::write_bytes`] payload of its row
+//! range with its own CRC-32 in the index, and the index gives O(1) seek
+//! to the shard holding any row (`row / shard_rows`).
+//!
+//! # Totality and failure model
+//!
+//! [`CorpusStore::open`] is total: truncation anywhere in the file
+//! (header, metadata, or a shard region shorter than the index claims),
+//! metadata bit flips (CRC), absurd section sizes and inconsistent shard
+//! indexes all surface as a typed [`StoreError`]. Shard payloads are
+//! CRC-checked and structurally validated on every read;
+//! [`CorpusStore::verify`] runs that check over the whole file up front.
+//! A shard that turns unreadable *mid-factorization* (disk failure, or a
+//! bit flip after `open`) panics with the store path in the message —
+//! by then hours of compute may be in flight and there is no factor to
+//! return; validate up front with `verify` where that matters.
+
+use super::snapshot::crc32;
+use super::wire::{self, Reader, WireError};
+use crate::sparse::{Csr, RowCursor, RowSource, RowsRef};
+use crate::text::TermDocMatrix;
+use std::fmt;
+use std::fs::File;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Current format version. Bump on any layout change.
+pub const STORE_VERSION: u16 = 1;
+
+const MAGIC: &[u8; 6] = b"ESTDM\0";
+
+/// Header bytes before the metadata: magic + version + meta_len + crc.
+const HEADER_LEN: usize = 6 + 2 + 8 + 4;
+
+/// `--shard-rows auto`: target payload bytes per shard. Small enough
+/// that a handful of cached shards is negligible next to the factors,
+/// large enough that seeks amortize (a shard is one contiguous read).
+pub const AUTO_SHARD_BYTES: usize = 256 * 1024;
+
+/// Everything that can go wrong opening, validating or reading a store.
+#[derive(Debug)]
+pub enum StoreError {
+    Io(std::io::Error),
+    /// Not an `.estdm` file at all.
+    BadMagic,
+    /// Written by a newer esnmf than this reader.
+    UnsupportedVersion(u16),
+    /// File ends before the declared metadata or shard region does.
+    Truncated { expected: usize, have: usize },
+    /// Stored bytes do not match their checksum (bit rot / flip).
+    CrcMismatch {
+        what: String,
+        stored: u32,
+        computed: u32,
+    },
+    /// Checksums pass but a section does not parse or is inconsistent.
+    Corrupt(String),
+    /// The store is valid but does not belong to this model/config.
+    Mismatch(String),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "corpus store i/o: {e}"),
+            StoreError::BadMagic => write!(f, "not an .estdm corpus store (bad magic)"),
+            StoreError::UnsupportedVersion(v) => write!(
+                f,
+                "corpus store version {v} is newer than this build (max {STORE_VERSION})"
+            ),
+            StoreError::Truncated { expected, have } => write!(
+                f,
+                "corpus store truncated: expected {expected} bytes, have {have}"
+            ),
+            StoreError::CrcMismatch {
+                what,
+                stored,
+                computed,
+            } => write!(
+                f,
+                "corpus store checksum mismatch in {what} (stored {stored:#010x}, computed {computed:#010x}) — file is corrupt"
+            ),
+            StoreError::Corrupt(msg) => write!(f, "corpus store corrupt: {msg}"),
+            StoreError::Mismatch(msg) => write!(f, "corpus store mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        StoreError::Io(e)
+    }
+}
+
+impl From<WireError> for StoreError {
+    fn from(e: WireError) -> Self {
+        match e {
+            WireError::Truncated { expected, have } => StoreError::Truncated { expected, have },
+            WireError::Corrupt(msg) => StoreError::Corrupt(msg),
+        }
+    }
+}
+
+/// Peak/current accounting of corpus bytes materialized from the store —
+/// the out-of-core counterpart of
+/// [`MemoryStats::max_intermediate_nnz`](crate::nmf::memory::MemoryStats).
+/// Worker cursors charge a shard's payload bytes while they cache it and
+/// release the charge when the cache is replaced or dropped, so the peak
+/// is the high-water mark of shards simultaneously in flight.
+#[derive(Debug, Default)]
+pub struct ResidentCounter {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl ResidentCounter {
+    fn add(&self, bytes: usize) {
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn sub(&self, bytes: usize) {
+        self.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn current(&self) -> usize {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+/// Subtracts the cached shard's bytes on drop, so replacing or
+/// discarding a worker's cache can never leak the resident charge.
+#[derive(Debug)]
+struct ResidentCharge {
+    counter: Arc<ResidentCounter>,
+    bytes: usize,
+}
+
+impl ResidentCharge {
+    fn new(counter: &Arc<ResidentCounter>, bytes: usize) -> Self {
+        counter.add(bytes);
+        ResidentCharge {
+            counter: Arc::clone(counter),
+            bytes,
+        }
+    }
+}
+
+impl Drop for ResidentCharge {
+    fn drop(&mut self) {
+        self.counter.sub(self.bytes);
+    }
+}
+
+/// A worker cursor's cached shard, parked in [`RowCursor::cache`].
+struct CachedShard {
+    /// (matrix token, shard ordinal) — tokens are globally unique per
+    /// [`ShardedMatrix`], so a cursor crossing sources can never serve a
+    /// stale shard
+    key: (u64, usize),
+    rows: Csr,
+    _charge: ResidentCharge,
+}
+
+/// One shard's index entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    pub row_lo: usize,
+    pub row_hi: usize,
+    /// byte offset inside the shard region (after the metadata)
+    pub offset: usize,
+    pub len: usize,
+    pub crc: u32,
+}
+
+static NEXT_MATRIX_TOKEN: AtomicU64 = AtomicU64::new(1);
+
+/// One on-disk orientation of the corpus: fixed-height row-range shards
+/// of a CSR matrix, readable through [`RowSource`]. Reads go through
+/// positioned I/O on a shared file handle, so any number of worker
+/// cursors stream concurrently without seeking over each other.
+pub struct ShardedMatrix {
+    file: Arc<File>,
+    path: PathBuf,
+    /// absolute file offset of the shard region
+    shard_base: u64,
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    shard_rows: usize,
+    shards: Vec<ShardEntry>,
+    resident: Arc<ResidentCounter>,
+    token: u64,
+}
+
+impl ShardedMatrix {
+    /// Largest single shard payload, in bytes — the unit the resident
+    /// bound is stated in.
+    pub fn max_shard_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.len).max().unwrap_or(0)
+    }
+
+    /// Total shard payload bytes of this orientation.
+    pub fn payload_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.len).sum()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard_rows(&self) -> usize {
+        self.shard_rows
+    }
+
+    /// Read and validate shard `sid` from disk: CRC over the payload,
+    /// structural CSR validation, and shape agreement with the index.
+    fn read_shard(&self, sid: usize) -> Result<Csr, StoreError> {
+        let entry = &self.shards[sid];
+        let mut buf = vec![0u8; entry.len];
+        read_exact_at(&self.file, &mut buf, self.shard_base + entry.offset as u64)?;
+        let computed = crc32(&buf);
+        if computed != entry.crc {
+            return Err(StoreError::CrcMismatch {
+                what: format!("shard {sid} (rows {}..{})", entry.row_lo, entry.row_hi),
+                stored: entry.crc,
+                computed,
+            });
+        }
+        let mut pos = 0usize;
+        let m = Csr::read_bytes(&buf, &mut pos).map_err(StoreError::Corrupt)?;
+        if pos != buf.len() {
+            return Err(StoreError::Corrupt(format!(
+                "shard {sid}: {} trailing bytes",
+                buf.len() - pos
+            )));
+        }
+        if m.rows != entry.row_hi - entry.row_lo || m.cols != self.cols {
+            return Err(StoreError::Corrupt(format!(
+                "shard {sid} shape ({}, {}) disagrees with the index ({}, {})",
+                m.rows,
+                m.cols,
+                entry.row_hi - entry.row_lo,
+                self.cols
+            )));
+        }
+        Ok(m)
+    }
+
+    /// The cursor's cached parse of shard `sid`, reading it if the cache
+    /// holds a different shard (or another matrix's). Panics on read
+    /// failure — see the module docs' failure model.
+    fn cached<'c>(
+        &self,
+        slot: &'c mut Option<Box<dyn std::any::Any + Send>>,
+        sid: usize,
+    ) -> &'c Csr {
+        let hit = slot
+            .as_ref()
+            .and_then(|b| b.downcast_ref::<CachedShard>())
+            .is_some_and(|c| c.key == (self.token, sid));
+        if !hit {
+            // release the previous shard *before* any new bytes exist, and
+            // charge the incoming shard before reading it, so the counter
+            // also covers the raw read buffer's lifetime — old and new
+            // shards never coexist and the accounted peak stays an honest
+            // upper bound on cached payload bytes. (During the parse the
+            // raw buffer and the decoded arrays briefly coexist, ≈ 2× one
+            // shard payload of transient heap; the counter charges the
+            // payload once — size real memory budgets accordingly.)
+            *slot = None;
+            let charge = ResidentCharge::new(&self.resident, self.shards[sid].len);
+            let rows = self.read_shard(sid).unwrap_or_else(|e| {
+                panic!("corpus store {}: {e}", self.path.display());
+            });
+            *slot = Some(Box::new(CachedShard {
+                key: (self.token, sid),
+                rows,
+                _charge: charge,
+            }));
+        }
+        &slot
+            .as_ref()
+            .unwrap()
+            .downcast_ref::<CachedShard>()
+            .unwrap()
+            .rows
+    }
+}
+
+impl RowSource for ShardedMatrix {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    fn load<'a>(&'a self, lo: usize, hi: usize, cur: &'a mut RowCursor) -> RowsRef<'a> {
+        assert!(lo <= hi && hi <= self.rows, "row range {lo}..{hi} out of bounds");
+        if lo == hi {
+            cur.begin_chunk();
+            return cur.chunk_view();
+        }
+        let s0 = lo / self.shard_rows;
+        let s1 = (hi - 1) / self.shard_rows;
+        if s0 == s1 {
+            // the whole range lives in one shard: serve a borrowed view
+            // of the cursor's cache, zero copies
+            let base = self.shards[s0].row_lo;
+            let shard = self.cached(&mut cur.cache, s0);
+            let (l, h) = (lo - base, hi - base);
+            return RowsRef::new(
+                &shard.indptr[l..=h],
+                &shard.indices[shard.indptr[l]..shard.indptr[h]],
+                &shard.values[shard.indptr[l]..shard.indptr[h]],
+            );
+        }
+        // the range straddles shards: copy the covered rows into the
+        // cursor's chunk buffers (bounded by the range height), paging
+        // one shard through the cache at a time
+        cur.indptr.clear();
+        cur.indices.clear();
+        cur.values.clear();
+        cur.indptr.push(0);
+        for sid in s0..=s1 {
+            let base = self.shards[sid].row_lo;
+            let top = self.shards[sid].row_hi;
+            let shard = self.cached(&mut cur.cache, sid);
+            for r in lo.max(base)..hi.min(top) {
+                let (idx, val) = shard.row(r - base);
+                cur.indices.extend_from_slice(idx);
+                cur.values.extend_from_slice(val);
+                cur.indptr.push(cur.values.len());
+            }
+        }
+        RowsRef::new(&cur.indptr, &cur.indices, &cur.values)
+    }
+}
+
+/// Positioned read: `pread` on unix (thread-safe on a shared handle); a
+/// locked seek+read fallback elsewhere.
+#[cfg(unix)]
+fn read_exact_at(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, offset)
+}
+
+#[cfg(not(unix))]
+fn read_exact_at(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    use std::io::{Read, Seek, SeekFrom};
+    use std::sync::Mutex;
+    static LOCK: Mutex<()> = Mutex::new(());
+    let _g = LOCK.lock().unwrap();
+    let mut f = file;
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(buf)
+}
+
+/// An opened `.estdm` store: metadata resident, the matrix on disk in
+/// both orientations.
+pub struct CorpusStore {
+    pub terms: Vec<String>,
+    pub doc_labels: Option<Vec<u32>>,
+    pub label_names: Vec<String>,
+    corpus_digest: u64,
+    norm_a_sq: f64,
+    terms_major: ShardedMatrix,
+    docs_major: ShardedMatrix,
+    resident: Arc<ResidentCounter>,
+    path: PathBuf,
+}
+
+impl CorpusStore {
+    /// Write `tdm` to `path` as a store. `shard_rows = 0` is auto: each
+    /// orientation targets [`AUTO_SHARD_BYTES`] of payload per shard.
+    /// The write is atomic (`.tmp` + rename), like snapshot saves — and
+    /// it **streams**: shards are serialized one at a time straight into
+    /// the file (extra memory O(one shard) beyond the resident `tdm`),
+    /// then the metadata — whose length is fixed by the shard *counts*,
+    /// not their contents — is written back over its reserved region.
+    /// An out-of-core subsystem whose ingest needed several transient
+    /// copies of `A` would defeat its own point.
+    pub fn write(path: &Path, tdm: &TermDocMatrix, shard_rows: usize) -> Result<(), StoreError> {
+        use std::io::{Seek, SeekFrom, Write};
+
+        let a = RawCsr::of(&tdm.a);
+        let at = RawCsr::transpose_of(&tdm.a_csc);
+        let terms_plan = shard_plan(&a, shard_rows);
+        let docs_plan = shard_plan(&at, shard_rows);
+
+        // everything before the shard indexes is known up front — one
+        // digest pass, one norm pass, one vocabulary serialization
+        let mut meta = Vec::new();
+        meta.extend_from_slice(&super::corpus_digest(tdm).to_le_bytes());
+        meta.extend_from_slice(&tdm.a.fro_norm_sq().to_bits().to_le_bytes());
+        meta.extend_from_slice(&(tdm.n_terms() as u64).to_le_bytes());
+        meta.extend_from_slice(&(tdm.n_docs() as u64).to_le_bytes());
+        meta.extend_from_slice(&(tdm.a.nnz() as u64).to_le_bytes());
+        wire::write_strings(&mut meta, &tdm.terms);
+        wire::write_opt_labels(&mut meta, &tdm.doc_labels);
+        wire::write_strings(&mut meta, &tdm.label_names);
+        // index entries are fixed-size (see write_shard_index: shard_rows
+        // + count + 36 bytes per entry), so the metadata length is pinned
+        // by the shard *counts* before the offsets/CRCs exist
+        let index_bytes = |plan: &ShardPlan| 8 + 8 + 36 * plan.ranges.len();
+        let meta_len = meta.len() + index_bytes(&terms_plan) + index_bytes(&docs_plan);
+
+        let tmp = path.with_extension("estdm.tmp");
+        let mut file = std::io::BufWriter::new(File::create(&tmp)?);
+        // reserve the header + metadata region, stream the shards after it
+        file.seek(SeekFrom::Start((HEADER_LEN + meta_len) as u64))?;
+        let mut offset = 0usize;
+        let mut buf = Vec::new();
+        let mut stream = |plan: &ShardPlan, src: &RawCsr<'_>| -> Result<ShardIndex, StoreError> {
+            let mut entries = Vec::with_capacity(plan.ranges.len());
+            for &(lo, hi) in &plan.ranges {
+                buf.clear();
+                src.slice(lo, hi).write_bytes(&mut buf);
+                file.write_all(&buf)?;
+                entries.push(ShardEntry {
+                    row_lo: lo,
+                    row_hi: hi,
+                    offset,
+                    len: buf.len(),
+                    crc: crc32(&buf),
+                });
+                offset += buf.len();
+            }
+            Ok((plan.shard_rows, entries))
+        };
+        let terms_idx = stream(&terms_plan, &a)?;
+        let docs_idx = stream(&docs_plan, &at)?;
+
+        write_shard_index(&mut meta, &terms_idx);
+        write_shard_index(&mut meta, &docs_idx);
+        assert_eq!(meta.len(), meta_len, "fixed-size index entries pin the length");
+        file.seek(SeekFrom::Start(0))?;
+        file.write_all(MAGIC)?;
+        file.write_all(&STORE_VERSION.to_le_bytes())?;
+        file.write_all(&(meta.len() as u64).to_le_bytes())?;
+        file.write_all(&crc32(&meta).to_le_bytes())?;
+        file.write_all(&meta)?;
+        file.into_inner()
+            .map_err(|e| StoreError::Io(e.into_error()))?
+            .sync_all()?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Open a store: header, metadata CRC, and index consistency are
+    /// all checked here (shard payloads are checked per read, or all at
+    /// once by [`Self::verify`]).
+    pub fn open(path: &Path) -> Result<CorpusStore, StoreError> {
+        let file = File::open(path)?;
+        let file_len = file.metadata()?.len() as usize;
+        if file_len < HEADER_LEN {
+            return Err(StoreError::Truncated {
+                expected: HEADER_LEN,
+                have: file_len,
+            });
+        }
+        let mut header = vec![0u8; HEADER_LEN];
+        read_exact_at(&file, &mut header, 0)?;
+        if &header[..6] != MAGIC {
+            return Err(StoreError::BadMagic);
+        }
+        let version = u16::from_le_bytes(header[6..8].try_into().unwrap());
+        if version == 0 || version > STORE_VERSION {
+            return Err(StoreError::UnsupportedVersion(version));
+        }
+        let meta_len = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+        let stored_crc = u32::from_le_bytes(header[16..20].try_into().unwrap());
+        if file_len - HEADER_LEN < meta_len {
+            return Err(StoreError::Truncated {
+                expected: HEADER_LEN + meta_len,
+                have: file_len,
+            });
+        }
+        let mut meta = vec![0u8; meta_len];
+        read_exact_at(&file, &mut meta, HEADER_LEN as u64)?;
+        let computed = crc32(&meta);
+        if computed != stored_crc {
+            return Err(StoreError::CrcMismatch {
+                what: "metadata".into(),
+                stored: stored_crc,
+                computed,
+            });
+        }
+
+        let mut r = Reader::new(&meta);
+        let corpus_digest = r.u64()?;
+        let norm_a_sq = f64::from_bits(r.u64()?);
+        let n_terms = r.u64()? as usize;
+        let n_docs = r.u64()? as usize;
+        let nnz = r.u64()? as usize;
+        let terms = wire::read_strings(&mut r)?;
+        let doc_labels = wire::read_opt_labels(&mut r)?;
+        let label_names = wire::read_strings(&mut r)?;
+        let terms_idx = read_shard_index(&mut r)?;
+        let docs_idx = read_shard_index(&mut r)?;
+        if r.pos != meta.len() {
+            return Err(StoreError::Corrupt(format!(
+                "{} unparsed metadata bytes",
+                meta.len() - r.pos
+            )));
+        }
+        if terms.len() != n_terms {
+            return Err(StoreError::Corrupt(format!(
+                "{} vocabulary terms for {n_terms} rows",
+                terms.len()
+            )));
+        }
+        if let Some(labels) = &doc_labels {
+            if labels.len() != n_docs {
+                return Err(StoreError::Corrupt(format!(
+                    "{} doc labels for {n_docs} documents",
+                    labels.len()
+                )));
+            }
+            let n = label_names.len() as u32;
+            if let Some(&bad) = labels.iter().find(|&&l| l >= n) {
+                return Err(StoreError::Corrupt(format!(
+                    "doc label id {bad} out of range ({n} label names)"
+                )));
+            }
+        }
+        validate_shard_index(&terms_idx.1, n_terms, terms_idx.0, "terms-major")?;
+        validate_shard_index(&docs_idx.1, n_docs, docs_idx.0, "docs-major")?;
+        // every shard must live inside the file — a truncated shard
+        // region is caught here at open, not mid-factorization
+        let shard_base = HEADER_LEN + meta_len;
+        let region = file_len - shard_base;
+        for (name, idx) in [("terms-major", &terms_idx.1), ("docs-major", &docs_idx.1)] {
+            for (i, s) in idx.iter().enumerate() {
+                let end = s
+                    .offset
+                    .checked_add(s.len)
+                    .ok_or_else(|| StoreError::Corrupt(format!("{name} shard {i} offset overflow")))?;
+                if end > region {
+                    return Err(StoreError::Truncated {
+                        expected: shard_base + end,
+                        have: file_len,
+                    });
+                }
+            }
+        }
+
+        let file = Arc::new(file);
+        let resident = Arc::new(ResidentCounter::default());
+        let mk = |rows: usize, cols: usize, (shard_rows, shards): (usize, Vec<ShardEntry>)| {
+            ShardedMatrix {
+                file: Arc::clone(&file),
+                path: path.to_path_buf(),
+                shard_base: shard_base as u64,
+                rows,
+                cols,
+                nnz,
+                shard_rows,
+                shards,
+                resident: Arc::clone(&resident),
+                token: NEXT_MATRIX_TOKEN.fetch_add(1, Ordering::Relaxed),
+            }
+        };
+        Ok(CorpusStore {
+            terms_major: mk(n_terms, n_docs, terms_idx),
+            docs_major: mk(n_docs, n_terms, docs_idx),
+            terms,
+            doc_labels,
+            label_names,
+            corpus_digest,
+            norm_a_sq,
+            resident,
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Read and CRC-check every shard of both orientations, and check
+    /// the two orientations agree on the nonzero count. O(file size);
+    /// run before long factorizations where a mid-run panic on bit rot
+    /// would be expensive.
+    pub fn verify(&self) -> Result<(), StoreError> {
+        for m in [&self.terms_major, &self.docs_major] {
+            let mut nnz = 0usize;
+            for sid in 0..m.shards.len() {
+                nnz += m.read_shard(sid)?.nnz();
+            }
+            if nnz != m.nnz {
+                return Err(StoreError::Corrupt(format!(
+                    "shards hold {nnz} nonzeros, metadata claims {}",
+                    m.nnz
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Terms-major orientation: rows of `A` (terms × docs), the
+    /// update-U half-step's stream.
+    pub fn terms_major(&self) -> &ShardedMatrix {
+        &self.terms_major
+    }
+
+    /// Docs-major orientation: rows of `Aᵀ` (docs × terms), the
+    /// update-V half-step's stream.
+    pub fn docs_major(&self) -> &ShardedMatrix {
+        &self.docs_major
+    }
+
+    pub fn n_terms(&self) -> usize {
+        self.terms_major.rows
+    }
+
+    pub fn n_docs(&self) -> usize {
+        self.docs_major.rows
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.terms_major.nnz
+    }
+
+    /// The [`corpus_digest`](super::corpus_digest) recorded at ingest.
+    pub fn digest(&self) -> u64 {
+        self.corpus_digest
+    }
+
+    /// `‖A‖²_F` recorded at ingest (bit-identical to
+    /// [`Csr::fro_norm_sq`] on the resident matrix).
+    pub fn norm_a_sq(&self) -> f64 {
+        self.norm_a_sq
+    }
+
+    /// Resident-corpus accounting shared by both orientations' cursors.
+    pub fn resident(&self) -> &ResidentCounter {
+        &self.resident
+    }
+
+    /// Total shard payload bytes (both orientations) — what "the whole
+    /// matrix resident" would cost; the streaming peak must undercut it.
+    pub fn payload_bytes(&self) -> usize {
+        self.terms_major.payload_bytes() + self.docs_major.payload_bytes()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// One orientation's index: the shard height and its entries.
+type ShardIndex = (usize, Vec<ShardEntry>);
+
+/// Borrowed CSR-shaped view of one orientation at ingest time — the CSC
+/// twin serializes as the CSR of `Aᵀ` without being cloned into one.
+struct RawCsr<'a> {
+    rows: usize,
+    cols: usize,
+    indptr: &'a [usize],
+    indices: &'a [u32],
+    values: &'a [f32],
+}
+
+impl<'a> RawCsr<'a> {
+    fn of(m: &'a Csr) -> Self {
+        RawCsr {
+            rows: m.rows,
+            cols: m.cols,
+            indptr: &m.indptr,
+            indices: &m.indices,
+            values: &m.values,
+        }
+    }
+
+    /// CSC of `A` is, field for field, the CSR of `Aᵀ`.
+    fn transpose_of(c: &'a crate::sparse::Csc) -> Self {
+        RawCsr {
+            rows: c.cols,
+            cols: c.rows,
+            indptr: &c.indptr,
+            indices: &c.indices,
+            values: &c.values,
+        }
+    }
+
+    /// Copy rows `lo..hi` into a standalone one-shard CSR (indptr
+    /// rebased) — the only per-shard allocation of the streaming write.
+    fn slice(&self, lo: usize, hi: usize) -> Csr {
+        let base = self.indptr[lo];
+        Csr {
+            rows: hi - lo,
+            cols: self.cols,
+            indptr: self.indptr[lo..=hi].iter().map(|&p| p - base).collect(),
+            indices: self.indices[base..self.indptr[hi]].to_vec(),
+            values: self.values[base..self.indptr[hi]].to_vec(),
+        }
+    }
+}
+
+/// One orientation's sharding decision: the resolved height and the row
+/// ranges (a zero-row orientation still gets one empty shard so load
+/// logic never meets a missing index).
+struct ShardPlan {
+    shard_rows: usize,
+    ranges: Vec<(usize, usize)>,
+}
+
+/// Resolve `--shard-rows N|auto` for one orientation (auto targets
+/// [`AUTO_SHARD_BYTES`] of payload from the average bytes-per-row) and
+/// lay out the row ranges.
+fn shard_plan(m: &RawCsr<'_>, shard_rows: usize) -> ShardPlan {
+    let resolved = if shard_rows != 0 {
+        shard_rows
+    } else if m.rows == 0 {
+        1
+    } else {
+        // payload ≈ 24 header + 8·(rows+1) indptr + 12·nnz entries
+        let bytes_per_row = 8 + 12 * m.values.len() / m.rows.max(1);
+        (AUTO_SHARD_BYTES / bytes_per_row.max(1)).clamp(1, m.rows.max(1))
+    };
+    let mut ranges = crate::coordinator::pool::fixed_chunks(m.rows, resolved);
+    if m.rows == 0 {
+        ranges.push((0, 0));
+    }
+    ShardPlan {
+        shard_rows: resolved,
+        ranges,
+    }
+}
+
+fn write_shard_index(out: &mut Vec<u8>, (shard_rows, entries): &ShardIndex) {
+    out.extend_from_slice(&(*shard_rows as u64).to_le_bytes());
+    out.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+    for e in entries {
+        out.extend_from_slice(&(e.row_lo as u64).to_le_bytes());
+        out.extend_from_slice(&(e.row_hi as u64).to_le_bytes());
+        out.extend_from_slice(&(e.offset as u64).to_le_bytes());
+        out.extend_from_slice(&(e.len as u64).to_le_bytes());
+        out.extend_from_slice(&e.crc.to_le_bytes());
+    }
+}
+
+fn read_shard_index(r: &mut Reader) -> Result<ShardIndex, StoreError> {
+    let shard_rows = r.u64()? as usize;
+    let n = r.len("shard index", 36)?;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        entries.push(ShardEntry {
+            row_lo: r.u64()? as usize,
+            row_hi: r.u64()? as usize,
+            offset: r.u64()? as usize,
+            len: r.u64()? as usize,
+            crc: r.u32()?,
+        });
+    }
+    Ok((shard_rows, entries))
+}
+
+/// Shards must tile `0..rows` contiguously at the declared height —
+/// `load`'s `row / shard_rows` O(1) lookup depends on it.
+fn validate_shard_index(
+    entries: &[ShardEntry],
+    rows: usize,
+    shard_rows: usize,
+    name: &str,
+) -> Result<(), StoreError> {
+    if shard_rows == 0 {
+        return Err(StoreError::Corrupt(format!("{name}: zero shard height")));
+    }
+    let expect = if rows == 0 { 1 } else { rows.div_ceil(shard_rows) };
+    if entries.len() != expect {
+        return Err(StoreError::Corrupt(format!(
+            "{name}: {} shards for {rows} rows at height {shard_rows} (expected {expect})",
+            entries.len()
+        )));
+    }
+    let mut prev = 0usize;
+    for (i, e) in entries.iter().enumerate() {
+        let want_hi = if rows == 0 { 0 } else { (prev + shard_rows).min(rows) };
+        if e.row_lo != prev || e.row_hi != want_hi {
+            return Err(StoreError::Corrupt(format!(
+                "{name}: shard {i} covers {}..{} (expected {prev}..{want_hi})",
+                e.row_lo, e.row_hi
+            )));
+        }
+        prev = e.row_hi;
+    }
+    if prev != rows {
+        return Err(StoreError::Corrupt(format!(
+            "{name}: shards cover {prev} of {rows} rows"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::TdmBuilder;
+
+    fn tiny_tdm() -> TermDocMatrix {
+        let mut b = TdmBuilder::new();
+        for i in 0..8 {
+            b.add_text("coffee crop quotas coffee brazil crop", Some("econ"));
+            b.add_text("electrons atoms hydrogen electrons atoms", Some("sci"));
+            if i % 2 == 0 {
+                b.add_text("guitar chord melody guitar rhythm chord", Some("music"));
+            }
+        }
+        b.freeze()
+    }
+
+    fn temp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("esnmf_store_{name}.estdm"))
+    }
+
+    fn write_open(name: &str, tdm: &TermDocMatrix, shard_rows: usize) -> (PathBuf, CorpusStore) {
+        let path = temp(name);
+        let _ = std::fs::remove_file(&path);
+        CorpusStore::write(&path, tdm, shard_rows).unwrap();
+        let store = CorpusStore::open(&path).unwrap();
+        (path, store)
+    }
+
+    /// Reassemble one orientation through arbitrary load ranges.
+    fn reassemble(m: &ShardedMatrix, step: usize) -> Csr {
+        let mut cur = RowCursor::new();
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut lo = 0;
+        while lo < m.rows() {
+            let hi = (lo + step).min(m.rows());
+            let view = m.load(lo, hi, &mut cur);
+            for i in 0..view.n_rows() {
+                let (idx, val) = view.row(i);
+                indices.extend_from_slice(idx);
+                values.extend_from_slice(val);
+                indptr.push(values.len());
+            }
+            lo = hi;
+        }
+        Csr {
+            rows: m.rows(),
+            cols: m.cols(),
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    #[test]
+    fn roundtrip_reassembles_both_orientations_bit_exactly() {
+        let tdm = tiny_tdm();
+        for shard_rows in [1usize, 3, 1000] {
+            let (path, store) = write_open(&format!("rt{shard_rows}"), &tdm, shard_rows);
+            assert_eq!(store.n_terms(), tdm.n_terms());
+            assert_eq!(store.n_docs(), tdm.n_docs());
+            assert_eq!(store.nnz(), tdm.a.nnz());
+            assert_eq!(store.terms, tdm.terms);
+            assert_eq!(store.doc_labels, tdm.doc_labels);
+            assert_eq!(store.label_names, tdm.label_names);
+            assert_eq!(store.digest(), crate::io::corpus_digest(&tdm));
+            assert_eq!(store.norm_a_sq().to_bits(), tdm.a.fro_norm_sq().to_bits());
+            // every load granularity — within-shard, straddling, whole —
+            // reproduces the matrices bit for bit
+            for step in [1usize, 2, 5, tdm.n_terms().max(1)] {
+                assert_eq!(reassemble(store.terms_major(), step), tdm.a, "step {step}");
+                assert_eq!(
+                    reassemble(store.docs_major(), step),
+                    tdm.a.transpose(),
+                    "step {step}"
+                );
+            }
+            store.verify().unwrap();
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+
+    #[test]
+    fn shard_index_gives_o1_access_to_any_row() {
+        let tdm = tiny_tdm();
+        let (path, store) = write_open("seek", &tdm, 2);
+        let m = store.terms_major();
+        assert!(m.n_shards() > 2, "corpus must span several shards");
+        let mut cur = RowCursor::new();
+        // single rows in arbitrary order, each served from one shard
+        for r in [m.rows() - 1, 0, m.rows() / 2, 1] {
+            let view = m.load(r, r + 1, &mut cur);
+            assert_eq!(view.row(0), tdm.a.row(r), "row {r}");
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn resident_accounting_is_bounded_by_cached_shards() {
+        let tdm = tiny_tdm();
+        let (path, store) = write_open("resident", &tdm, 2);
+        let m = store.terms_major();
+        let max_shard = m.max_shard_bytes();
+        let mut cur = RowCursor::new();
+        for lo in 0..m.rows() {
+            let _ = m.load(lo, (lo + 2).min(m.rows()), &mut cur);
+            // one cursor ⇒ at most one shard resident at any instant
+            assert!(
+                store.resident().current() <= max_shard,
+                "resident {} > one shard {max_shard}",
+                store.resident().current()
+            );
+        }
+        assert!(store.resident().peak() <= max_shard);
+        assert!(store.resident().peak() > 0);
+        // strictly below full residency on a multi-shard corpus
+        assert!(store.resident().peak() < store.payload_bytes());
+        drop(cur);
+        assert_eq!(store.resident().current(), 0, "drop releases the charge");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncation_at_every_prefix_is_typed_at_open() {
+        let tdm = tiny_tdm();
+        let path = temp("trunc");
+        let _ = std::fs::remove_file(&path);
+        CorpusStore::write(&path, &tdm, 2).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let cut_path = temp("trunc_cut");
+        for cut in 0..bytes.len() {
+            std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+            match CorpusStore::open(&cut_path) {
+                Err(
+                    StoreError::Truncated { .. }
+                    | StoreError::Corrupt(_)
+                    | StoreError::CrcMismatch { .. },
+                ) => {}
+                other => panic!(
+                    "prefix of {cut}/{} bytes: {:?}",
+                    bytes.len(),
+                    other.map(|_| "opened")
+                ),
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&cut_path).unwrap();
+    }
+
+    #[test]
+    fn every_bit_flip_is_caught() {
+        let tdm = tiny_tdm();
+        let path = temp("flip");
+        let _ = std::fs::remove_file(&path);
+        CorpusStore::write(&path, &tdm, 2).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let flip_path = temp("flip_bad");
+        let n = bytes.len();
+        // positions spread over header, metadata and shard region
+        for pos in [0usize, 7, HEADER_LEN, HEADER_LEN + 9, n / 2, n * 3 / 4, n - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x10;
+            std::fs::write(&flip_path, &bad).unwrap();
+            let caught = match CorpusStore::open(&flip_path) {
+                Err(_) => true,
+                // flips in the shard region pass open (metadata intact)
+                // but must be caught by the full-file verify
+                Ok(store) => store.verify().is_err(),
+            };
+            assert!(caught, "flip at byte {pos} undetected");
+        }
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&flip_path).unwrap();
+    }
+
+    #[test]
+    fn shard_region_bit_flip_is_a_crc_mismatch_on_read() {
+        let tdm = tiny_tdm();
+        let path = temp("shardflip");
+        let _ = std::fs::remove_file(&path);
+        CorpusStore::write(&path, &tdm, 2).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip a bit in the very last shard payload byte
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let store = CorpusStore::open(&path).unwrap();
+        match store.verify() {
+            Err(StoreError::CrcMismatch { what, .. }) => {
+                assert!(what.contains("shard"), "{what}");
+            }
+            other => panic!("{:?}", other.map(|_| "verified")),
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn future_version_and_bad_magic_are_refused() {
+        let tdm = tiny_tdm();
+        let path = temp("version");
+        let _ = std::fs::remove_file(&path);
+        CorpusStore::write(&path, &tdm, 0).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let mut newer = bytes.clone();
+        newer[6..8].copy_from_slice(&(STORE_VERSION + 1).to_le_bytes());
+        std::fs::write(&path, &newer).unwrap();
+        assert!(matches!(
+            CorpusStore::open(&path),
+            Err(StoreError::UnsupportedVersion(_))
+        ));
+        let mut magic = bytes.clone();
+        magic[0] = b'X';
+        std::fs::write(&path, &magic).unwrap();
+        assert!(matches!(CorpusStore::open(&path), Err(StoreError::BadMagic)));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn auto_shard_rows_are_positive_and_bounded() {
+        let tdm = tiny_tdm();
+        let (path, store) = write_open("auto", &tdm, 0);
+        assert!(store.terms_major().shard_rows() >= 1);
+        assert!(store.docs_major().shard_rows() >= 1);
+        store.verify().unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_corpus_roundtrips() {
+        let tdm = TdmBuilder::new().freeze();
+        let (path, store) = write_open("empty", &tdm, 0);
+        assert_eq!(store.n_terms(), 0);
+        assert_eq!(store.n_docs(), 0);
+        store.verify().unwrap();
+        let mut cur = RowCursor::new();
+        assert_eq!(store.terms_major().load(0, 0, &mut cur).n_rows(), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

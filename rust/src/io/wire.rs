@@ -1,0 +1,203 @@
+//! Shared little-endian wire codecs for the binary formats under `io/`
+//! (`.esnmf` model snapshots, `.estdm` corpus stores).
+//!
+//! Both formats promise the same totality contract: truncated input,
+//! absurd section sizes and malformed strings surface as a typed error,
+//! never a panic or an unbounded allocation. The bounds-checked
+//! [`Reader`] and the string/f64 section codecs live here so the two
+//! formats cannot drift apart; each format converts [`WireError`] into
+//! its own error enum at the boundary.
+
+use std::fmt;
+
+/// Low-level decode failure, mapped into `SnapshotError` / `StoreError`
+/// by the format layers.
+#[derive(Debug)]
+pub(crate) enum WireError {
+    /// Input ends before a read the layout requires.
+    Truncated { expected: usize, have: usize },
+    /// Input is long enough but the bytes do not parse.
+    Corrupt(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated { expected, have } => {
+                write!(f, "truncated: expected {expected} bytes, have {have}")
+            }
+            WireError::Corrupt(msg) => write!(f, "corrupt: {msg}"),
+        }
+    }
+}
+
+/// Bounds-checked little-endian payload reader.
+pub(crate) struct Reader<'a> {
+    pub bytes: &'a [u8],
+    pub pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Reader { bytes, pos: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or(WireError::Truncated {
+                expected: self.pos.saturating_add(n),
+                have: self.bytes.len(),
+            })?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// An element count for a section of `elem_size`-byte items, rejected
+    /// up front when the remaining payload cannot possibly hold it (so a
+    /// corrupt length cannot trigger a huge allocation).
+    pub fn len(&mut self, what: &str, elem_size: usize) -> Result<usize, WireError> {
+        let n = self.u64()? as usize;
+        let need = n
+            .checked_mul(elem_size)
+            .ok_or_else(|| WireError::Corrupt(format!("absurd {what} count {n}")))?;
+        if self.bytes.len() - self.pos < need {
+            return Err(WireError::Corrupt(format!(
+                "{what} section claims {need} bytes, {} remain",
+                self.bytes.len() - self.pos
+            )));
+        }
+        Ok(n)
+    }
+}
+
+pub(crate) fn write_strings(out: &mut Vec<u8>, strings: &[String]) {
+    out.extend_from_slice(&(strings.len() as u64).to_le_bytes());
+    for s in strings {
+        out.extend_from_slice(&(s.len() as u64).to_le_bytes());
+        out.extend_from_slice(s.as_bytes());
+    }
+}
+
+pub(crate) fn read_strings(r: &mut Reader) -> Result<Vec<String>, WireError> {
+    // each string costs at least its 8-byte length prefix
+    let n = r.len("string table", 8)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = r.len("string", 1)?;
+        let bytes = r.take(len)?;
+        out.push(
+            std::str::from_utf8(bytes)
+                .map_err(|e| WireError::Corrupt(format!("bad UTF-8 string: {e}")))?
+                .to_string(),
+        );
+    }
+    Ok(out)
+}
+
+pub(crate) fn write_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+pub(crate) fn read_f64s(r: &mut Reader) -> Result<Vec<f64>, WireError> {
+    let n = r.len("f64 series", 8)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(f64::from_bits(r.u64()?));
+    }
+    Ok(out)
+}
+
+/// Optional doc labels exactly as both formats store them: a presence
+/// byte, then a u32 count + ids.
+pub(crate) fn write_opt_labels(out: &mut Vec<u8>, labels: &Option<Vec<u32>>) {
+    match labels {
+        None => out.push(0),
+        Some(labels) => {
+            out.push(1);
+            out.extend_from_slice(&(labels.len() as u64).to_le_bytes());
+            for &l in labels {
+                out.extend_from_slice(&l.to_le_bytes());
+            }
+        }
+    }
+}
+
+pub(crate) fn read_opt_labels(r: &mut Reader) -> Result<Option<Vec<u32>>, WireError> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => {
+            let n = r.len("doc labels", 4)?;
+            let mut labels = Vec::with_capacity(n);
+            for _ in 0..n {
+                labels.push(r.u32()?);
+            }
+            Ok(Some(labels))
+        }
+        other => Err(WireError::Corrupt(format!("bad doc-label flag {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reader_bounds_are_typed() {
+        let mut r = Reader::new(&[1, 2, 3]);
+        assert_eq!(r.u8().unwrap(), 1);
+        assert!(matches!(r.u64(), Err(WireError::Truncated { .. })));
+        // absurd section counts are rejected before allocation
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut r = Reader::new(&bytes);
+        assert!(matches!(r.len("things", 8), Err(WireError::Corrupt(_))));
+    }
+
+    #[test]
+    fn strings_and_labels_roundtrip() {
+        let strings = vec!["alpha".to_string(), "βγ".to_string(), String::new()];
+        let labels = Some(vec![0u32, 7, 42]);
+        let mut out = Vec::new();
+        write_strings(&mut out, &strings);
+        write_opt_labels(&mut out, &labels);
+        write_opt_labels(&mut out, &None);
+        write_f64s(&mut out, &[1.5, -0.0]);
+        let mut r = Reader::new(&out);
+        assert_eq!(read_strings(&mut r).unwrap(), strings);
+        assert_eq!(read_opt_labels(&mut r).unwrap(), labels);
+        assert_eq!(read_opt_labels(&mut r).unwrap(), None);
+        let f = read_f64s(&mut r).unwrap();
+        assert_eq!(f[0], 1.5);
+        assert_eq!(f[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.pos, out.len());
+    }
+
+    #[test]
+    fn bad_utf8_is_corrupt() {
+        let mut out = Vec::new();
+        out.extend_from_slice(&1u64.to_le_bytes());
+        out.extend_from_slice(&2u64.to_le_bytes());
+        out.extend_from_slice(&[0xff, 0xfe]);
+        let mut r = Reader::new(&out);
+        assert!(matches!(read_strings(&mut r), Err(WireError::Corrupt(_))));
+    }
+}

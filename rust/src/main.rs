@@ -3,12 +3,16 @@
 //! Subcommands:
 //! * `factorize`  — run one factorization (native or XLA backend) and
 //!                  print convergence + topic tables.
+//! * `ingest`     — write a corpus to an on-disk `.estdm` store for
+//!                  out-of-core factorization (`--corpus-store`).
 //! * `experiment` — regenerate a paper figure/table (`fig1`..`fig9`,
 //!                  `table1`, or `all`).
 //! * `serve`      — factorize a corpus (or load a `.esnmf` snapshot),
 //!                  then serve topic queries over TCP.
 //! * `gen-corpus` — write a synthetic preset corpus to disk as .txt files.
 //! * `artifacts`  — inspect/smoke-test the compiled XLA artifacts.
+//! * `bench-check`— compare guarded metrics between two `BENCH_smoke.json`
+//!                  trajectory points (the CI memory-regression gate).
 
 use esnmf::backend::{AlsBackend, BackendKind, NativeBackend, XlaBackend};
 use esnmf::cli::Args;
@@ -18,8 +22,10 @@ use esnmf::corpus::{self, Scale};
 use esnmf::eval::topics::{format_topic_table, topic_term_table};
 use esnmf::eval::{mean_topic_accuracy, SparsityReport};
 use esnmf::experiments::{self, ExpConfig};
-use esnmf::nmf::factorize_sequential;
+use esnmf::io::CorpusStore;
+use esnmf::nmf::{factorize_sequential_corpus, AlsCorpus};
 use esnmf::runtime::{self, ProgramKind, XlaExecutor};
+use esnmf::sparse::RowSource;
 use esnmf::text::TermDocMatrix;
 use esnmf::util::logging;
 use esnmf::{log_info, Result};
@@ -29,6 +35,7 @@ const USAGE: &str = r#"esnmf — Enforced Sparse Non-Negative Matrix Factorizati
 
 USAGE:
   esnmf factorize  [--corpus reuters|wikipedia|pubmed|dir:<path>] [--scale tiny|small|paper]
+                   [--corpus-store c.estdm]
                    [--k N] [--iters N] [--sparsity none|both|u|v|percol] [--t-u N] [--t-v N]
                    [--algorithm als|seq] [--backend native|xla] [--seed N] [--init-nnz N]
                    [--threads N|auto] [--block-rows N|auto] [--config file.toml] [--top N]
@@ -42,12 +49,27 @@ USAGE:
   a fixed scratch budget / k; ESNMF_BLOCK_ROWS overrides auto).
   Factors are bit-identical at any block height — only memory
   telemetry moves.
+  --corpus-store factorizes against an on-disk .estdm store (written by
+  `esnmf ingest`) instead of loading the corpus into memory: each
+  half-step streams A shard-by-shard, so resident corpus memory is
+  bounded by the shards in flight across workers — and the factors are
+  bit-identical to the in-memory run. Requires --backend native.
   --save-model persists the factorization as a versioned .esnmf snapshot
   (factors, vocabulary, labels, options, corpus digest).
   --checkpoint-every N writes that snapshot every N iterations mid-run;
   --resume continues a checkpoint (refuses on corpus/k mismatch) and
   reaches the same result as an uninterrupted run. --warm-start seeds U
-  from a prior snapshot aligned by term, for incremental corpora.
+  from a prior snapshot aligned by term, for incremental corpora. All
+  snapshot digest checks work against a store too (its metadata carries
+  the same corpus digest).
+  esnmf ingest     [--corpus ... --scale ... --seed N | dir:<path>]
+                   [--shard-rows N|auto] --out corpus.estdm
+
+  Writes the corpus as a versioned .estdm store: the term-document
+  matrix as row-range shards in both orientations (terms-major for the
+  A·V half-step, docs-major for AᵀU), with a CRC-checked shard index,
+  vocabulary, labels, the corpus digest and ‖A‖². --shard-rows sets the
+  rows per shard (auto targets 256 KiB payloads per shard).
   esnmf experiment <fig1|fig2|fig3|table1|fig4|fig5|fig6|fig7|fig8|fig9|all>
                    [--scale ...] [--seed N] [--fast] [--out results/]
   esnmf serve      [--addr 127.0.0.1:7878] [--model m.esnmf]
@@ -63,6 +85,13 @@ USAGE:
   snapshot's training budget). Wire protocol: rust/README.md.
   esnmf gen-corpus [--corpus ...] [--scale ...] [--seed N] --out <dir>
   esnmf artifacts  [--dir artifacts/]
+  esnmf bench-check --previous prev.json --current BENCH_smoke.json
+                   [--tolerance 1.10] [--guards max_intermediate_nnz,resident_corpus]
+
+  Compares the guarded (lower-is-better) metrics of two merged
+  bench-smoke trajectory documents and exits nonzero when any grew
+  beyond the tolerance factor — the CI memory-regression gate. A
+  missing/empty --previous passes (no baseline yet).
   esnmf help
 "#;
 
@@ -88,10 +117,12 @@ fn run() -> Result<()> {
     }
     match args.subcommand.clone().as_deref() {
         Some("factorize") => cmd_factorize(&mut args),
+        Some("ingest") => cmd_ingest(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("serve") => cmd_serve(&mut args),
         Some("gen-corpus") => cmd_gen_corpus(&mut args),
         Some("artifacts") => cmd_artifacts(&mut args),
+        Some("bench-check") => cmd_bench_check(&mut args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -109,6 +140,9 @@ fn build_run_config(args: &mut Args) -> Result<RunConfig> {
     }
     if let Some(v) = args.opt_str("corpus") {
         cfg.corpus = v;
+    }
+    if let Some(v) = args.opt_str("corpus-store") {
+        cfg.corpus_store = Some(v);
     }
     if let Some(v) = args.opt_str("scale") {
         cfg.scale = Scale::parse(&v).ok_or_else(|| anyhow::anyhow!("bad --scale {v}"))?;
@@ -197,7 +231,7 @@ fn load_snapshot(path: &str) -> Result<esnmf::io::Snapshot> {
 fn save_model(
     path: &str,
     cfg: &RunConfig,
-    tdm: &TermDocMatrix,
+    corpus: &dyn AlsCorpus,
     r: &esnmf::nmf::NmfResult,
     used: Option<&esnmf::nmf::NmfOptions>,
 ) -> Result<()> {
@@ -205,19 +239,22 @@ fn save_model(
         Some(o) => o.clone(),
         None => cfg.nmf_options()?,
     };
-    let snap = esnmf::io::Snapshot::new(
+    let snap = esnmf::io::Snapshot {
         options,
-        r.u.clone(),
-        r.v.clone(),
-        tdm,
-        esnmf::io::Progress {
+        u: r.u.clone(),
+        v: r.v.clone(),
+        terms: corpus.terms().to_vec(),
+        doc_labels: corpus.doc_labels().map(|l| l.to_vec()),
+        label_names: corpus.label_names().to_vec(),
+        corpus_digest: corpus.digest(),
+        progress: esnmf::io::Progress {
             iterations: r.iterations,
             residuals: r.residuals.clone(),
             errors: r.errors.clone(),
             memory: r.memory,
             elapsed_s: r.elapsed_s,
         },
-    );
+    };
     snap.save(std::path::Path::new(path))
         .map_err(|e| anyhow::Error::from(e).context(format!("saving snapshot {path}")))?;
     log_info!("snapshot", "wrote model snapshot to {path}");
@@ -238,14 +275,59 @@ fn load_corpus(cfg: &RunConfig) -> Result<TermDocMatrix> {
     Ok(corpus::generate_tdm(&spec, cfg.seed))
 }
 
+/// A corpus ready to factorize: fully resident, or an opened `.estdm`
+/// store streamed from disk. Both sides of the enum implement
+/// [`AlsCorpus`], so everything downstream of loading is shared.
+enum LoadedCorpus {
+    Mem(TermDocMatrix),
+    Store(CorpusStore),
+}
+
+impl LoadedCorpus {
+    fn as_als(&self) -> &dyn AlsCorpus {
+        match self {
+            LoadedCorpus::Mem(tdm) => tdm,
+            LoadedCorpus::Store(store) => store,
+        }
+    }
+}
+
+/// `--corpus-store` wins over `--corpus`; everything else loads as before.
+fn load_any_corpus(cfg: &RunConfig) -> Result<LoadedCorpus> {
+    match &cfg.corpus_store {
+        Some(path) => {
+            let store = CorpusStore::open(std::path::Path::new(path))
+                .map_err(|e| anyhow::Error::from(e).context(format!("opening corpus store {path}")))?;
+            log_info!(
+                "corpus",
+                "opened store {path}: {} terms × {} docs, nnz {} ({} + {} shards on disk)",
+                store.n_terms(),
+                store.n_docs(),
+                store.nnz(),
+                store.terms_major().n_shards(),
+                store.docs_major().n_shards(),
+            );
+            Ok(LoadedCorpus::Store(store))
+        }
+        None => Ok(LoadedCorpus::Mem(load_corpus(cfg)?)),
+    }
+}
+
 /// Run the configured factorization. The second return is the options
 /// the run actually trained with when they differ from the CLI's (a
 /// resumed run takes its solver math from the snapshot) — `--save-model`
 /// must record those.
 fn run_factorization(
     cfg: &RunConfig,
-    tdm: &TermDocMatrix,
+    loaded: &LoadedCorpus,
 ) -> Result<(esnmf::nmf::NmfResult, Option<esnmf::nmf::NmfOptions>)> {
+    let corpus = loaded.as_als();
+    if matches!(loaded, LoadedCorpus::Store(_)) {
+        anyhow::ensure!(
+            cfg.backend == BackendKind::Native,
+            "--corpus-store requires --backend native (the XLA backend needs the matrix resident)"
+        );
+    }
     // checkpoint continuation / warm start run on the native ALS driver
     if cfg.resume.is_some() || cfg.warm_start.is_some() {
         anyhow::ensure!(
@@ -265,34 +347,55 @@ fn run_factorization(
                 snap.progress.iterations
             );
             let used = esnmf::nmf::resume_options(&opts, &snap);
-            let r = esnmf::nmf::resume(tdm, &opts, &snap)?;
+            let r = esnmf::nmf::resume_corpus(corpus, &opts, &snap)?;
             return Ok((r, Some(used)));
         }
         let path = cfg.warm_start.as_ref().unwrap();
         let snap = load_snapshot(path)?;
         snap.check_k(opts.k)
             .map_err(|e| anyhow::Error::from(e).context("warm start"))?;
-        let u0 =
-            esnmf::nmf::init::warm_start_u(&snap.u, &snap.terms, &tdm.terms, opts.k, opts.seed);
+        let u0 = esnmf::nmf::init::warm_start_u(
+            &snap.u,
+            &snap.terms,
+            corpus.terms(),
+            opts.k,
+            opts.seed,
+        );
         let old: std::collections::HashSet<&str> =
             snap.terms.iter().map(|t| t.as_str()).collect();
-        let carried = tdm.terms.iter().filter(|t| old.contains(t.as_str())).count();
+        let carried = corpus
+            .terms()
+            .iter()
+            .filter(|t| old.contains(t.as_str()))
+            .count();
         log_info!(
             "snapshot",
             "warm start from {path}: {carried}/{} terms carried over",
-            tdm.n_terms()
+            corpus.n_terms()
         );
-        return Ok((esnmf::nmf::factorize_from(tdm, &opts, u0), None));
+        return Ok((
+            esnmf::nmf::factorize_from_corpus(corpus, &opts, u0),
+            None,
+        ));
     }
     match cfg.algorithm {
-        Algorithm::Sequential => {
-            Ok((factorize_sequential(tdm, &cfg.sequential_options()), None))
-        }
+        Algorithm::Sequential => Ok((
+            factorize_sequential_corpus(corpus, &cfg.sequential_options()),
+            None,
+        )),
         Algorithm::Als => {
             let opts = cfg.nmf_options()?;
-            let r = match cfg.backend {
-                BackendKind::Native => NativeBackend::new().factorize(tdm, &opts),
-                BackendKind::Xla => {
+            let r = match (cfg.backend, loaded) {
+                (BackendKind::Native, LoadedCorpus::Mem(tdm)) => {
+                    NativeBackend::new().factorize(tdm, &opts)
+                }
+                (BackendKind::Native, LoadedCorpus::Store(store)) => {
+                    Ok(esnmf::nmf::factorize_corpus(store, &opts))
+                }
+                (BackendKind::Xla, LoadedCorpus::Store(_)) => {
+                    unreachable!("store runs are rejected above for the XLA backend")
+                }
+                (BackendKind::Xla, LoadedCorpus::Mem(tdm)) => {
                     let dir = runtime::artifact_dir();
                     let guard = XlaExecutor::spawn(dir)?;
                     let manifest_fit = {
@@ -331,18 +434,18 @@ fn cmd_factorize(args: &mut Args) -> Result<()> {
     let top = args.parse_or("top", 5usize).map_err(anyhow::Error::msg)?;
     args.check_unknown().map_err(anyhow::Error::msg)?;
 
-    let tdm = load_corpus(&cfg)?;
+    let loaded = load_any_corpus(&cfg)?;
+    let corpus = loaded.as_als();
+    let (n_terms, n_docs, a_nnz) = (corpus.n_terms(), corpus.n_docs(), corpus.a_rows().nnz());
     log_info!(
         "factorize",
-        "{} terms × {} docs, nnz(A) = {} ({:.2}% sparse)",
-        tdm.n_terms(),
-        tdm.n_docs(),
-        tdm.a.nnz(),
-        tdm.a.sparsity() * 100.0
+        "{n_terms} terms × {n_docs} docs, nnz(A) = {a_nnz} ({:.2}% sparse)",
+        esnmf::eval::sparsity_fraction(n_terms, n_docs, a_nnz) * 100.0
     );
-    let (r, used_opts) = run_factorization(&cfg, &tdm)?;
+    let (r, used_opts) = run_factorization(&cfg, &loaded)?;
+    let corpus = loaded.as_als();
     if let Some(path) = &cfg.save_model {
-        save_model(path, &cfg, &tdm, &r, used_opts.as_ref())?;
+        save_model(path, &cfg, corpus, &r, used_opts.as_ref())?;
         println!("saved model snapshot to {path}");
     }
 
@@ -359,18 +462,135 @@ fn cmd_factorize(args: &mut Args) -> Result<()> {
         r.v.nnz(),
         r.memory.max_combined_nnz
     );
-    let report = SparsityReport::compute(&tdm.a, &r.u, &r.v);
-    print!("{}", report.format(&cfg.corpus));
+    if let LoadedCorpus::Store(store) = &loaded {
+        println!(
+            "resident corpus peak = {} bytes ({} on disk)",
+            store.resident().peak(),
+            store.payload_bytes()
+        );
+    }
+    let dataset = cfg
+        .corpus_store
+        .clone()
+        .unwrap_or_else(|| cfg.corpus.clone());
+    match &loaded {
+        // in-memory: the full Fig. 1 report, U·Vᵀ support included
+        LoadedCorpus::Mem(_) => print!(
+            "{}",
+            SparsityReport::from_parts(n_terms, n_docs, a_nnz, &r.u, &r.v).format(&dataset)
+        ),
+        // out-of-core: skip the U·Vᵀ product — its structural support can
+        // approach dense n×m, the very memory the store run avoided
+        LoadedCorpus::Store(_) => print!(
+            "{}",
+            SparsityReport::format_factors_only(&dataset, n_terms, n_docs, a_nnz, &r.u, &r.v)
+        ),
+    }
     println!("\nTop {top} terms per topic:");
     print!(
         "{}",
-        format_topic_table(&topic_term_table(&r.u, &tdm.terms, top), cfg.k)
+        format_topic_table(&topic_term_table(&r.u, corpus.terms(), top), cfg.k)
     );
-    if let Some(labels) = &tdm.doc_labels {
-        let acc = mean_topic_accuracy(&r.v, labels, tdm.label_names.len());
+    if let Some(labels) = corpus.doc_labels() {
+        let acc = mean_topic_accuracy(&r.v, labels, corpus.label_names().len());
         println!("\nmean clustering accuracy (Eq. 3.3): {acc:.4}");
     }
     Ok(())
+}
+
+/// `esnmf ingest`: build the corpus (preset generator or `dir:` loader)
+/// and write it to an `.estdm` store for out-of-core factorization.
+fn cmd_ingest(args: &mut Args) -> Result<()> {
+    let cfg = build_run_config(args)?;
+    let out = args
+        .opt_str("out")
+        .ok_or_else(|| anyhow::anyhow!("--out <corpus.estdm> required"))?;
+    let shard_rows = args
+        .opt_threads("shard-rows")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(0);
+    args.check_unknown().map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        cfg.corpus_store.is_none(),
+        "ingest reads a corpus (--corpus/dir:), not a store"
+    );
+
+    let tdm = load_corpus(&cfg)?;
+    let path = std::path::Path::new(&out);
+    CorpusStore::write(path, &tdm, shard_rows)
+        .map_err(|e| anyhow::Error::from(e).context(format!("writing corpus store {out}")))?;
+    // reopen + verify: an ingest that cannot be read back is not an ingest
+    let store = CorpusStore::open(path)
+        .map_err(|e| anyhow::Error::from(e).context(format!("reopening corpus store {out}")))?;
+    store
+        .verify()
+        .map_err(|e| anyhow::Error::from(e).context(format!("verifying corpus store {out}")))?;
+    println!(
+        "wrote {out}: {} terms × {} docs, nnz {}, digest {:#018x}, {} + {} shards ({} bytes on disk)",
+        store.n_terms(),
+        store.n_docs(),
+        store.nnz(),
+        store.digest(),
+        store.terms_major().n_shards(),
+        store.docs_major().n_shards(),
+        store.payload_bytes(),
+    );
+    Ok(())
+}
+
+/// `esnmf bench-check`: the CI memory-regression gate over two merged
+/// `BENCH_smoke.json` trajectory points.
+fn cmd_bench_check(args: &mut Args) -> Result<()> {
+    let previous = args
+        .opt_str("previous")
+        .ok_or_else(|| anyhow::anyhow!("--previous <prev.json> required"))?;
+    let current = args
+        .opt_str("current")
+        .ok_or_else(|| anyhow::anyhow!("--current <BENCH_smoke.json> required"))?;
+    let tolerance = args
+        .parse_or("tolerance", 1.10f64)
+        .map_err(anyhow::Error::msg)?;
+    let guards = args.str_or("guards", "max_intermediate_nnz,resident_corpus");
+    args.check_unknown().map_err(anyhow::Error::msg)?;
+
+    // only a genuinely *absent* baseline passes (first run, cold cache);
+    // a baseline that exists but cannot be read or parsed must fail
+    // loudly — swallowing it would silently disable the regression gate
+    let prev = match std::fs::read_to_string(&previous) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            println!(
+                "bench-check: no previous trajectory point at {previous}; nothing to compare"
+            );
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("bench-check: cannot read previous trajectory {previous}: {e}"),
+        Ok(text) => esnmf::util::json::Json::parse(&text).map_err(|e| {
+            anyhow::anyhow!("bench-check: previous trajectory {previous} is corrupt: {e}")
+        })?,
+    };
+    let cur = std::fs::read_to_string(&current)
+        .map_err(|e| anyhow::anyhow!("bench-check: cannot read current trajectory {current}: {e}"))
+        .and_then(|text| {
+            esnmf::util::json::Json::parse(&text).map_err(|e| {
+                anyhow::anyhow!("bench-check: current trajectory {current} is corrupt: {e}")
+            })
+        })?;
+    let guard_list: Vec<&str> = guards.split(',').map(str::trim).filter(|g| !g.is_empty()).collect();
+    let regressions =
+        esnmf::util::bench::metric_regressions(&prev, &cur, &guard_list, tolerance);
+    if regressions.is_empty() {
+        println!(
+            "bench-check: guarded metrics within {tolerance}x of the previous trajectory point"
+        );
+        return Ok(());
+    }
+    for r in &regressions {
+        eprintln!(
+            "bench-check: REGRESSION {}: {} -> {} (> {tolerance}x)",
+            r.path, r.previous, r.current
+        );
+    }
+    anyhow::bail!("{} guarded metric(s) regressed", regressions.len());
 }
 
 fn cmd_experiment(args: &mut Args) -> Result<()> {
@@ -411,6 +631,7 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     // consume the value, so build_run_config still sees them)
     let explicit_k = args.opt_parse::<usize>("k").map_err(anyhow::Error::msg)?;
     let explicit_corpus = args.opt_str("corpus");
+    let explicit_store = args.opt_str("corpus-store");
     let mut cfg = build_run_config(args)?;
     if let Some(v) = args
         .opt_threads("serve-threads")
@@ -443,7 +664,17 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
                 snap.check_k(k)
                     .map_err(|e| anyhow::Error::from(e).context("serve --model"))?;
             }
-            if explicit_corpus.is_some() {
+            if explicit_store.is_some() {
+                // an explicit store alongside --model verifies the
+                // snapshot belongs to that corpus — from the store's
+                // metadata digest, without materializing the matrix
+                let store = match load_any_corpus(&cfg)? {
+                    LoadedCorpus::Store(s) => s,
+                    LoadedCorpus::Mem(_) => unreachable!("corpus_store is set"),
+                };
+                snap.check_digest(store.digest(), store.n_terms(), store.n_docs())
+                    .map_err(|e| anyhow::Error::from(e).context("serve --model"))?;
+            } else if explicit_corpus.is_some() {
                 // an explicit corpus alongside --model is a request to
                 // verify the snapshot actually belongs to that corpus
                 let tdm = load_corpus(&cfg)?;
@@ -466,13 +697,14 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
             Arc::new(model)
         }
         None => {
-            let tdm = load_corpus(&cfg)?;
-            let (r, used_opts) = run_factorization(&cfg, &tdm)?;
+            let loaded = load_any_corpus(&cfg)?;
+            let (r, used_opts) = run_factorization(&cfg, &loaded)?;
+            let corpus = loaded.as_als();
             if let Some(path) = &cfg.save_model {
-                save_model(path, &cfg, &tdm, &r, used_opts.as_ref())?;
+                save_model(path, &cfg, corpus, &r, used_opts.as_ref())?;
             }
             Arc::new(
-                TopicModel::new(r.u, r.v, tdm.terms.clone())
+                TopicModel::new(r.u, r.v, corpus.terms().to_vec())
                     .with_foldin_budget(cfg.foldin_budget()),
             )
         }

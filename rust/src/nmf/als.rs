@@ -15,7 +15,7 @@
 //!
 //! Each half-step streams over contiguous `block_rows`-row blocks of its
 //! output: for every block it computes the candidate rows
-//! ([`ops::atb_into`] / [`ops::ab_into`]), multiplies by the precomputed
+//! ([`ops::stream_mul_into`]), multiplies by the precomputed
 //! Gram inverse, projects non-negative, enforces sparsity, and appends
 //! the survivors straight into the output CSR. One scratch [`RowBlock`]
 //! per worker is reused across blocks
@@ -25,6 +25,13 @@
 //! direction of Nguyen & Ho (arXiv:1506.08938) applied to the paper's
 //! Algorithm 2. The [`MemoryTracker`] observes the per-block scratch
 //! peak (`max_intermediate_nnz`).
+//!
+//! The data matrix itself reaches the kernels through the [`RowSource`]
+//! streaming contract, gathered behind the [`AlsCorpus`] trait: a
+//! resident [`TermDocMatrix`] serves borrowed row views, and the on-disk
+//! [`CorpusStore`] (`.estdm`) pages row-range shards through per-worker
+//! cursors — so corpora that do not fit in RAM factorize with resident
+//! `A` bounded by the shards in flight, bit-identical to in-memory.
 //!
 //! Global top-t enforcement is a **two-pass streaming selection**: pass 1
 //! streams the blocks through per-worker O(t) [`topk::TopTSelector`]s
@@ -64,18 +71,118 @@
 
 use crate::coordinator::pool;
 use crate::dense::inverse_spd;
+use crate::io::CorpusStore;
+use crate::sparse::source::{RowCursor, RowSource};
 use crate::sparse::{ops, topk, Csc, Csr, RowBlock, TieMode};
 use crate::text::TermDocMatrix;
 use crate::util::timer::Timer;
 
-use super::convergence::{rel_error_sparse, rel_residual};
+use super::convergence::{rel_error_source, rel_residual};
 use super::init::initial_u;
 use super::memory::MemoryTracker;
 use super::options::{NmfOptions, NmfResult, SparsityMode};
 
+/// The solver's whole view of a corpus: each orientation of `A` readable
+/// as contiguous row runs ([`RowSource`]), plus the scalars and metadata
+/// the driver needs around the half-steps. Implemented by the resident
+/// [`TermDocMatrix`] and by the on-disk [`CorpusStore`], so one driver
+/// factorizes both — bit-identically, since the half-step kernels see
+/// the same rows either way.
+pub trait AlsCorpus: Sync {
+    /// Terms-major orientation: rows of `A` (terms × docs), streamed by
+    /// the update-U half-step (`A·V`) and the error pass.
+    fn a_rows(&self) -> &dyn RowSource;
+
+    /// Docs-major orientation: rows of `Aᵀ` (docs × terms), streamed by
+    /// the update-V half-step (`Aᵀ·U`).
+    fn a_cols(&self) -> &dyn RowSource;
+
+    /// `‖A‖²_F`, summed in [`Csr::fro_norm_sq`]'s order (the error
+    /// history depends on these bits).
+    fn norm_a_sq(&self) -> f64;
+
+    /// The [`corpus_digest`](crate::io::corpus_digest) of this corpus.
+    /// May cost O(nnz) for resident corpora; the store answers from
+    /// metadata. Called only where a snapshot is written or checked.
+    fn digest(&self) -> u64;
+
+    fn terms(&self) -> &[String];
+    fn doc_labels(&self) -> Option<&[u32]>;
+    fn label_names(&self) -> &[String];
+
+    fn n_terms(&self) -> usize {
+        self.a_rows().rows()
+    }
+
+    fn n_docs(&self) -> usize {
+        self.a_cols().rows()
+    }
+}
+
+impl AlsCorpus for TermDocMatrix {
+    fn a_rows(&self) -> &dyn RowSource {
+        &self.a
+    }
+
+    fn a_cols(&self) -> &dyn RowSource {
+        // the CSC twin is, byte for byte, the CSR of Aᵀ
+        &self.a_csc
+    }
+
+    fn norm_a_sq(&self) -> f64 {
+        self.a.fro_norm_sq()
+    }
+
+    fn digest(&self) -> u64 {
+        crate::io::corpus_digest(self)
+    }
+
+    fn terms(&self) -> &[String] {
+        &self.terms
+    }
+
+    fn doc_labels(&self) -> Option<&[u32]> {
+        self.doc_labels.as_deref()
+    }
+
+    fn label_names(&self) -> &[String] {
+        &self.label_names
+    }
+}
+
+impl AlsCorpus for CorpusStore {
+    fn a_rows(&self) -> &dyn RowSource {
+        self.terms_major()
+    }
+
+    fn a_cols(&self) -> &dyn RowSource {
+        self.docs_major()
+    }
+
+    fn norm_a_sq(&self) -> f64 {
+        CorpusStore::norm_a_sq(self)
+    }
+
+    fn digest(&self) -> u64 {
+        CorpusStore::digest(self)
+    }
+
+    fn terms(&self) -> &[String] {
+        &self.terms
+    }
+
+    fn doc_labels(&self) -> Option<&[u32]> {
+        self.doc_labels.as_deref()
+    }
+
+    fn label_names(&self) -> &[String] {
+        &self.label_names
+    }
+}
+
 /// Enforcement applied to one side's candidate.
 #[derive(Clone, Copy, Debug)]
-enum Enforce {
+pub(crate) enum Enforce {
     No,
     Global(usize),
     PerColumn(usize),
@@ -106,48 +213,84 @@ fn enforcement_for(mode: SparsityMode, is_u: bool) -> Enforce {
     }
 }
 
-/// The candidate-row source of one half-step: which SpMM orientation
-/// produces output rows `lo..hi`, plus the half-step-wide dense
-/// fast-path copy (decided once, see [`ops::dense_factor`], so the
-/// result bits cannot vary with `block_rows`).
-enum CandSource<'a> {
-    /// `Aᵀ·U` — output rows are columns of `a` (the update-V half)
-    Atb {
-        a: &'a Csc,
-        u: &'a Csr,
-        dense: Option<Vec<f32>>,
-    },
-    /// `A·V` — output rows are rows of `a` (the update-U half)
-    Ab {
-        a: &'a Csr,
-        v: &'a Csr,
-        dense: Option<Vec<f32>>,
-    },
+/// The candidate-row source of one half-step: the streamed left operand
+/// (rows of `A` or of `Aᵀ` — one [`RowSource`], whatever the backing
+/// storage), the fixed factor, the half-step-wide dense fast-path copy
+/// (decided once, see [`ops::dense_factor`], so the result bits cannot
+/// vary with `block_rows`), and the optional sequential-ALS deflation
+/// term fused into the streaming kernel.
+pub(crate) struct CandSource<'a> {
+    pub src: &'a dyn RowSource,
+    pub factor: &'a Csr,
+    pub dense: Option<Vec<f32>>,
+    /// `(D, M)`: subtract `D[row]·M` from every candidate row
+    /// (Eqs. 4.7/4.8; `None` outside sequential ALS)
+    pub defl: Option<(&'a Csr, Vec<f32>)>,
 }
 
 impl CandSource<'_> {
     fn out_rows(&self) -> usize {
-        match self {
-            CandSource::Atb { a, .. } => a.cols,
-            CandSource::Ab { a, .. } => a.rows,
-        }
+        self.src.rows()
+    }
+
+    fn defl_ref(&self) -> Option<(&Csr, &[f32])> {
+        self.defl.as_ref().map(|(d, m)| (*d, m.as_slice()))
     }
 
     /// Compute candidate rows `lo..hi` into the scratch block (cleared
-    /// by the kernels first — scratch is reused across blocks).
-    fn fill(&self, lo: usize, hi: usize, out: &mut RowBlock) {
-        match self {
-            CandSource::Atb { a, u, dense } => ops::atb_into(a, u, dense.as_deref(), lo, hi, out),
-            CandSource::Ab { a, v, dense } => ops::ab_into(a, v, dense.as_deref(), lo, hi, out),
-        }
+    /// by the kernels first — scratch and cursor are reused across the
+    /// blocks one worker claims).
+    fn fill(&self, lo: usize, hi: usize, cur: &mut RowCursor, out: &mut RowBlock) {
+        ops::stream_mul_into(
+            self.src,
+            self.factor,
+            self.dense.as_deref(),
+            self.defl_ref(),
+            lo,
+            hi,
+            cur,
+            out,
+        );
     }
 
     /// Materialize the whole candidate at once, row-partitioned across
     /// `threads` workers — the single-block fast path.
     fn fill_all_par(&self, threads: usize) -> RowBlock {
+        ops::stream_mul_par_with(
+            self.src,
+            self.factor,
+            self.dense.as_deref(),
+            self.defl_ref(),
+            threads,
+        )
+    }
+}
+
+/// The per-row solve applied after the candidate SpMM.
+pub(crate) enum Solve {
+    /// right-multiply by the dense (k, k) ridged Gram inverse
+    Gram(Vec<f32>),
+    /// k = 1 scalar fast path (sequential ALS's rank-1 blocks): one
+    /// multiply per element, bit-identical at any partitioning
+    Scalar(f32),
+}
+
+impl Solve {
+    fn apply(&self, rb: &mut RowBlock) {
+        self.apply_par(rb, 1);
+    }
+
+    fn apply_par(&self, rb: &mut RowBlock, threads: usize) {
         match self {
-            CandSource::Atb { a, u, dense } => ops::atb_par_with(a, u, dense.as_deref(), threads),
-            CandSource::Ab { a, v, dense } => ops::ab_par_with(a, v, dense.as_deref(), threads),
+            Solve::Gram(g_inv) => rb.matmul_small_par(g_inv, threads),
+            Solve::Scalar(inv) => {
+                let inv = *inv;
+                pool::scoped_partition_map_mut(threads, &mut rb.data, 1, |_, piece| {
+                    for v in piece {
+                        *v *= inv;
+                    }
+                });
+            }
         }
     }
 }
@@ -198,10 +341,10 @@ struct BlockEmit {
 }
 
 /// Everything one streamed half-step needs: the candidate source, the
-/// solve matrix, and the block/worker geometry.
-struct StreamCtx<'a> {
+/// per-row solve, and the block/worker geometry.
+pub(crate) struct StreamCtx<'a> {
     src: CandSource<'a>,
-    g_inv: Vec<f32>,
+    solve: Solve,
     blocks: Vec<(usize, usize)>,
     workers: usize,
     rows: usize,
@@ -209,16 +352,16 @@ struct StreamCtx<'a> {
 }
 
 impl<'a> StreamCtx<'a> {
-    fn new(
+    pub(crate) fn new(
         src: CandSource<'a>,
-        gram_other: &[f32],
+        solve: Solve,
         k: usize,
         threads: usize,
         block_rows: usize,
     ) -> Self {
         let rows = src.out_rows();
         StreamCtx {
-            g_inv: inverse_spd(gram_other, k),
+            solve,
             blocks: pool::fixed_chunks(rows, block_rows),
             // below the per-worker floor, spawn overhead beats the work;
             // the clamp changes nothing but speed
@@ -229,9 +372,22 @@ impl<'a> StreamCtx<'a> {
         }
     }
 
+    /// [`StreamCtx::new`] with the usual ALS solve: the ridged inverse
+    /// of the other factor's Gram matrix.
+    fn with_gram(
+        src: CandSource<'a>,
+        gram_other: &[f32],
+        k: usize,
+        threads: usize,
+        block_rows: usize,
+    ) -> Self {
+        StreamCtx::new(src, Solve::Gram(inverse_spd(gram_other, k)), k, threads, block_rows)
+    }
+
     /// Run `per_block` over every solved + projected candidate block.
     /// Blocks are claimed dynamically across the workers, each worker
-    /// reusing one scratch RowBlock; results come back in block order.
+    /// reusing one scratch RowBlock and one streaming cursor; results
+    /// come back in block order.
     fn map_blocks<R: Send>(
         &self,
         per_block: impl Fn(&RowBlock, usize, usize) -> R + Sync,
@@ -239,10 +395,10 @@ impl<'a> StreamCtx<'a> {
         pool::scoped_map_ranges_with(
             self.workers,
             &self.blocks,
-            || RowBlock::new(self.rows, self.k),
-            |scratch, lo, hi| {
-                self.src.fill(lo, hi, scratch);
-                scratch.matmul_small(&self.g_inv);
+            || (RowBlock::new(self.rows, self.k), RowCursor::new()),
+            |(scratch, cur), lo, hi| {
+                self.src.fill(lo, hi, cur, scratch);
+                self.solve.apply(scratch);
                 scratch.project_nonneg();
                 per_block(scratch, lo, hi)
             },
@@ -260,11 +416,17 @@ impl<'a> StreamCtx<'a> {
         let (lens, states) = pool::scoped_map_ranges_with_states(
             self.workers,
             &self.blocks,
-            || (RowBlock::new(self.rows, self.k), topk::TopTSelector::new(t)),
+            || {
+                (
+                    RowBlock::new(self.rows, self.k),
+                    RowCursor::new(),
+                    topk::TopTSelector::new(t),
+                )
+            },
             |state, lo, hi| {
-                let (scratch, sel) = state;
-                self.src.fill(lo, hi, scratch);
-                scratch.matmul_small(&self.g_inv);
+                let (scratch, cur, sel) = state;
+                self.src.fill(lo, hi, cur, scratch);
+                self.solve.apply(scratch);
                 scratch.project_nonneg();
                 for &v in &scratch.data {
                     sel.offer(v);
@@ -272,7 +434,7 @@ impl<'a> StreamCtx<'a> {
                 scratch.stored_len()
             },
         );
-        (lens, states.into_iter().map(|(_, sel)| sel).collect())
+        (lens, states.into_iter().map(|(_, _, sel)| sel).collect())
     }
 
     /// Emission pass: stream the blocks once, filter with `keep`, append
@@ -357,7 +519,7 @@ impl<'a> StreamCtx<'a> {
 /// scratch RowBlock per worker — O(block_rows · k) — and the result is
 /// bit-identical to the unblocked pipeline at every `(block_rows,
 /// threads)` pair (module docs).
-fn stream_half_step(
+pub(crate) fn stream_half_step(
     ctx: &StreamCtx<'_>,
     enforce: Enforce,
     tie: TieMode,
@@ -437,7 +599,7 @@ fn unblocked_half_step(
     // below the per-worker floor, spawn overhead beats the work; the
     // clamp changes nothing but speed
     let threads = pool::effective_workers(cand.stored_len(), threads);
-    cand.matmul_small_par(&ctx.g_inv, threads);
+    ctx.solve.apply_par(&mut cand, threads);
     cand.project_nonneg_par(threads);
     match enforce {
         Enforce::No => cand.to_csr(),
@@ -472,14 +634,26 @@ pub fn half_step_v(
     opts: &NmfOptions,
     mem: &mut MemoryTracker,
 ) -> Csr {
-    assert_eq!(a_csc.rows, u.rows, "Aᵀ·U contraction mismatch");
+    half_step_v_src(a_csc, u, opts, mem)
+}
+
+/// [`half_step_v`] with `Aᵀ` streamed through any [`RowSource`] (the
+/// out-of-core entry point; a [`Csc`] streams as its transpose's rows).
+pub fn half_step_v_src(
+    a_cols: &dyn RowSource,
+    u: &Csr,
+    opts: &NmfOptions,
+    mem: &mut MemoryTracker,
+) -> Csr {
+    assert_eq!(a_cols.cols(), u.rows, "Aᵀ·U contraction mismatch");
     let g = ops::gram_par(u, opts.threads);
-    let src = CandSource::Atb {
-        a: a_csc,
-        u,
+    let src = CandSource {
+        src: a_cols,
+        factor: u,
         dense: ops::dense_factor(u),
+        defl: None,
     };
-    let ctx = StreamCtx::new(src, &g, opts.k, opts.threads, opts.resolved_block_rows());
+    let ctx = StreamCtx::with_gram(src, &g, opts.k, opts.threads, opts.resolved_block_rows());
     stream_half_step(
         &ctx,
         enforcement_for(opts.sparsity, false),
@@ -497,14 +671,25 @@ pub fn half_step_u(
     opts: &NmfOptions,
     mem: &mut MemoryTracker,
 ) -> Csr {
-    assert_eq!(a.cols, v.rows, "A·V contraction mismatch");
+    half_step_u_src(a, v, opts, mem)
+}
+
+/// [`half_step_u`] with `A` streamed through any [`RowSource`].
+pub fn half_step_u_src(
+    a_rows: &dyn RowSource,
+    v: &Csr,
+    opts: &NmfOptions,
+    mem: &mut MemoryTracker,
+) -> Csr {
+    assert_eq!(a_rows.cols(), v.rows, "A·V contraction mismatch");
     let g = ops::gram_par(v, opts.threads);
-    let src = CandSource::Ab {
-        a,
-        v,
+    let src = CandSource {
+        src: a_rows,
+        factor: v,
         dense: ops::dense_factor(v),
+        defl: None,
     };
-    let ctx = StreamCtx::new(src, &g, opts.k, opts.threads, opts.resolved_block_rows());
+    let ctx = StreamCtx::with_gram(src, &g, opts.k, opts.threads, opts.resolved_block_rows());
     stream_half_step(
         &ctx,
         enforcement_for(opts.sparsity, true),
@@ -516,27 +701,42 @@ pub fn half_step_u(
 
 /// Run projected / enforced-sparsity ALS on a term-document matrix.
 pub fn factorize(tdm: &TermDocMatrix, opts: &NmfOptions) -> NmfResult {
-    factorize_from(tdm, opts, initial_u(tdm.n_terms(), opts.k, opts.init_nnz, opts.seed))
+    factorize_corpus(tdm, opts)
+}
+
+/// [`factorize`] over any [`AlsCorpus`] — resident or streamed from an
+/// on-disk [`CorpusStore`]. Bit-identical either way.
+pub fn factorize_corpus(corpus: &dyn AlsCorpus, opts: &NmfOptions) -> NmfResult {
+    factorize_from_corpus(
+        corpus,
+        opts,
+        initial_u(corpus.n_terms(), opts.k, opts.init_nnz, opts.seed),
+    )
 }
 
 /// As [`factorize`] but with an explicit initial guess (used by the
 /// backend-agreement tests and by warm starts, see
 /// [`crate::nmf::init::warm_start_u`]).
 pub fn factorize_from(tdm: &TermDocMatrix, opts: &NmfOptions, u0: Csr) -> NmfResult {
-    assert_eq!(u0.rows, tdm.n_terms(), "U₀ row count != vocabulary size");
+    factorize_from_corpus(tdm, opts, u0)
+}
+
+/// [`factorize_from`] over any [`AlsCorpus`].
+pub fn factorize_from_corpus(corpus: &dyn AlsCorpus, opts: &NmfOptions, u0: Csr) -> NmfResult {
+    assert_eq!(u0.rows, corpus.n_terms(), "U₀ row count != vocabulary size");
     assert_eq!(u0.cols, opts.k, "U₀ column count != k");
     let mut mem = MemoryTracker::new();
     mem.observe_pair(u0.nnz(), 0); // the initial guess is stored too
     let state = LoopState {
         u: u0,
-        v: Csr::zeros(tdm.n_docs(), opts.k),
+        v: Csr::zeros(corpus.n_docs(), opts.k),
         start_iter: 0,
         residuals: Vec::with_capacity(opts.max_iters),
         errors: Vec::new(),
         mem,
         elapsed_base_s: 0.0,
     };
-    run_loop(tdm, opts, state)
+    run_loop(corpus, opts, state)
 }
 
 /// Continue a checkpointed run. The solver math (k, sparsity, tie mode,
@@ -552,8 +752,19 @@ pub fn resume(
     opts: &NmfOptions,
     snap: &crate::io::Snapshot,
 ) -> crate::Result<NmfResult> {
+    resume_corpus(tdm, opts, snap)
+}
+
+/// [`resume`] over any [`AlsCorpus`]. The digest refusal works for the
+/// on-disk store too — its metadata carries the same
+/// [`corpus_digest`](crate::io::corpus_digest) the snapshot pinned.
+pub fn resume_corpus(
+    corpus: &dyn AlsCorpus,
+    opts: &NmfOptions,
+    snap: &crate::io::Snapshot,
+) -> crate::Result<NmfResult> {
     snap.check_k(opts.k)?;
-    snap.check_corpus(tdm)?;
+    snap.check_digest(corpus.digest(), corpus.n_terms(), corpus.n_docs())?;
     snap.check_resumable()?;
     let effective = resume_options(opts, snap);
 
@@ -584,7 +795,7 @@ pub fn resume(
             elapsed_s: state.elapsed_base_s,
         });
     }
-    Ok(run_loop(tdm, &effective, state))
+    Ok(run_loop(corpus, &effective, state))
 }
 
 /// The options a resumed run actually trains with: the snapshot's
@@ -616,15 +827,14 @@ struct LoopState {
     elapsed_base_s: f64,
 }
 
-fn run_loop(tdm: &TermDocMatrix, opts: &NmfOptions, state: LoopState) -> NmfResult {
+fn run_loop(corpus: &dyn AlsCorpus, opts: &NmfOptions, state: LoopState) -> NmfResult {
     let timer = Timer::start();
-    let a = &tdm.a;
-    let a_csc = &tdm.a_csc;
-    let norm_a_sq = a.fro_norm_sq();
+    let norm_a_sq = corpus.norm_a_sq();
     // the corpus is immutable for the whole run, so hash it once up
-    // front instead of once per checkpoint (it is O(nnz))
+    // front instead of once per checkpoint (O(nnz) for resident corpora;
+    // the store answers from metadata)
     let checkpoint_digest = (opts.checkpoint_every > 0 && opts.checkpoint_path.is_some())
-        .then(|| crate::io::corpus_digest(tdm));
+        .then(|| corpus.digest());
 
     let LoopState {
         mut u,
@@ -638,9 +848,9 @@ fn run_loop(tdm: &TermDocMatrix, opts: &NmfOptions, state: LoopState) -> NmfResu
     let mut iterations = start_iter;
 
     for it in start_iter..opts.max_iters {
-        v = half_step_v(a_csc, &u, opts, &mut mem);
+        v = half_step_v_src(corpus.a_cols(), &u, opts, &mut mem);
         mem.observe_pair(u.nnz(), v.nnz());
-        let u_new = half_step_u(a, &v, opts, &mut mem);
+        let u_new = half_step_u_src(corpus.a_rows(), &v, opts, &mut mem);
         mem.observe_pair(u_new.nnz(), v.nnz());
 
         let r = rel_residual(&u_new, &u);
@@ -649,7 +859,15 @@ fn run_loop(tdm: &TermDocMatrix, opts: &NmfOptions, state: LoopState) -> NmfResu
         iterations = it + 1;
 
         if opts.track_error {
-            errors.push(rel_error_sparse(a, &u, &v, norm_a_sq));
+            // streamed in block_rows-row runs, so the error pass honors
+            // the same resident-corpus bound as the half-steps
+            errors.push(rel_error_source(
+                corpus.a_rows(),
+                &u,
+                &v,
+                norm_a_sq,
+                opts.resolved_block_rows(),
+            ));
         }
         let stopping = opts.tol > 0.0 && r < opts.tol;
         // checkpoint cadence counts absolute iterations so a resumed run
@@ -669,9 +887,9 @@ fn run_loop(tdm: &TermDocMatrix, opts: &NmfOptions, state: LoopState) -> NmfResu
                     options: opts.clone(),
                     u: u.clone(),
                     v: v.clone(),
-                    terms: tdm.terms.clone(),
-                    doc_labels: tdm.doc_labels.clone(),
-                    label_names: tdm.label_names.clone(),
+                    terms: corpus.terms().to_vec(),
+                    doc_labels: corpus.doc_labels().map(|l| l.to_vec()),
+                    label_names: corpus.label_names().to_vec(),
                     corpus_digest: checkpoint_digest.unwrap_or_default(),
                     progress,
                 };

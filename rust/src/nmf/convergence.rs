@@ -5,7 +5,7 @@
 //!   `‖A‖² − 2·tr(UᵀAV) + tr((UᵀU)(VᵀV))` so `U Vᵀ` is never materialized
 //!   (on the PubMed-sized corpus that product would be 20k × 7.5k dense).
 
-use crate::sparse::{ops, Csr};
+use crate::sparse::{ops, Csr, RowSource};
 
 /// `‖u_new − u_old‖_F / ‖u_new‖_F` (0/0 → 0: two empty factors agree).
 pub fn rel_residual(u_new: &Csr, u_old: &Csr) -> f64 {
@@ -25,10 +25,24 @@ pub fn rel_residual(u_new: &Csr, u_old: &Csr) -> f64 {
 /// Sparse-safe relative Frobenius error. `norm_a_sq` = ‖A‖²_F may be
 /// precomputed once per run; float cancellation is clamped at zero.
 pub fn rel_error_sparse(a: &Csr, u: &Csr, v: &Csr, norm_a_sq: f64) -> f64 {
+    rel_error_source(a, u, v, norm_a_sq, a.rows.max(1))
+}
+
+/// [`rel_error_sparse`] with `A` streamed through a [`RowSource`] in
+/// `chunk_rows`-row runs — the out-of-core error pass. The cross trace
+/// walks rows in order into one f64 accumulator, so the chunking (and
+/// the backing storage) cannot change the result bits.
+pub fn rel_error_source(
+    a: &dyn RowSource,
+    u: &Csr,
+    v: &Csr,
+    norm_a_sq: f64,
+    chunk_rows: usize,
+) -> f64 {
     if norm_a_sq == 0.0 {
         return 0.0;
     }
-    let cross = ops::tr_cross(a, u, v);
+    let cross = ops::tr_cross_source(a, u, v, chunk_rows);
     let gu = ops::gram(u);
     let gv = ops::gram(v);
     let gg = ops::tr_gram_product(&gu, &gv, u.cols);

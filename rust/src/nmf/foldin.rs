@@ -32,6 +32,22 @@ pub struct FoldIn {
     pub tie: TieMode,
 }
 
+/// Per-request buffers of one fold-in solve, poolable by the serving
+/// layer so a warm pool answers requests with zero allocation growth —
+/// the same reuse discipline the solver applies to its per-worker
+/// `RowBlock`s. Plain [`FoldIn::solve`] creates one transparently.
+#[derive(Debug, Default)]
+pub struct FoldInScratch {
+    /// `b = aᵀU` accumulator (k-wide)
+    b: Vec<f32>,
+    /// the solved row (k-wide; borrowed out by [`FoldIn::solve_into`])
+    x: Vec<f32>,
+    /// positive-value gather buffer of the enforcement pass
+    positives: Vec<f32>,
+    /// resolved (term row id, count) pairs of the model-level lookup
+    pub pairs: Vec<(usize, f32)>,
+}
+
 impl FoldIn {
     /// Precompute the ridged Gram inverse of `u`. `t` caps the nonzeros
     /// of every folded-in row (None leaves rows unenforced).
@@ -56,38 +72,60 @@ impl FoldIn {
     /// length-k topic row (nonnegative, at most `t` nonzeros when
     /// enforced).
     pub fn solve(&self, u: &Csr, doc: &[(usize, f32)]) -> Vec<f32> {
+        let mut scratch = FoldInScratch::default();
+        self.solve_into(u, doc, &mut scratch);
+        scratch.x
+    }
+
+    /// As [`FoldIn::solve`] but through caller-pooled buffers: the solved
+    /// row is left in (and returned as a view of) `scratch.x`, and no
+    /// allocation happens once the scratch has warmed to size k. Results
+    /// are identical to `solve` — the buffers are cleared and refilled
+    /// exactly as the fresh allocations were.
+    pub fn solve_into<'s>(
+        &self,
+        u: &Csr,
+        doc: &[(usize, f32)],
+        scratch: &'s mut FoldInScratch,
+    ) -> &'s [f32] {
         let k = self.k;
         debug_assert_eq!(u.cols, k, "U changed shape under the solver");
         // b = aᵀ U — same accumulation order as ops::atb's sparse path
-        let mut b = vec![0.0f32; k];
+        scratch.b.clear();
+        scratch.b.resize(k, 0.0);
         for &(term, count) in doc {
             if term >= u.rows || !count.is_finite() || count <= 0.0 {
                 continue;
             }
             let (idx, val) = u.row(term);
             for (&c, &uv) in idx.iter().zip(val) {
-                b[c as usize] += count * uv;
+                scratch.b[c as usize] += count * uv;
             }
         }
         // x = b · G⁻¹ (the 1-row form of RowBlock::matmul_small)
-        let mut x = vec![0.0f32; k];
-        for (i, &bi) in b.iter().enumerate() {
+        scratch.x.clear();
+        scratch.x.resize(k, 0.0);
+        for (i, &bi) in scratch.b.iter().enumerate() {
             if bi != 0.0 {
                 let g_row = &self.g_inv[i * k..(i + 1) * k];
-                for (xj, &gij) in x.iter_mut().zip(g_row) {
+                for (xj, &gij) in scratch.x.iter_mut().zip(g_row) {
                     *xj += bi * gij;
                 }
             }
         }
-        for v in &mut x {
+        for v in &mut scratch.x {
             if *v < 0.0 {
                 *v = 0.0;
             }
         }
         if let Some(t) = self.t {
-            topk::enforce_top_t_vec(&mut x, t, self.tie);
+            // the gather holds at most k positives: reserving up front
+            // makes the no-allocation-once-warm property deterministic
+            scratch.positives.clear();
+            scratch.positives.reserve(k);
+            topk::enforce_top_t_vec_with(&mut scratch.x, t, self.tie, &mut scratch.positives);
         }
-        x
+        &scratch.x
     }
 }
 
@@ -155,6 +193,51 @@ mod tests {
             assert!(nnz <= t, "nnz {nnz} > budget {t}");
             assert!(x.iter().all(|v| v.is_finite() && *v >= 0.0));
         });
+    }
+
+    #[test]
+    fn pooled_scratch_solves_identically_and_stops_allocating() {
+        // the serving layer reuses one FoldInScratch across requests;
+        // reused solves must match fresh ones bit for bit, and once the
+        // buffers are warm, further solves must not grow them
+        let mut rng = Rng::new(0x5c7a);
+        let rows = 20;
+        let k = 6;
+        let dense = prop::gen_sparse_dense(&mut rng, rows, k, 0.5);
+        let u = Csr::from_dense(rows, k, &dense);
+        let solver = FoldIn::new(&u, Some(3), TieMode::Exact);
+        let mut scratch = FoldInScratch::default();
+        // warm the buffers with a maximal document (every term present)
+        let full: Vec<(usize, f32)> = (0..rows).map(|r| (r, 1.0)).collect();
+        let _ = solver.solve_into(&u, &full, &mut scratch);
+        let caps = (
+            scratch.b.capacity(),
+            scratch.x.capacity(),
+            scratch.positives.capacity(),
+        );
+        for round in 0..30 {
+            let n_words = rng.range(1, 10);
+            let doc: Vec<(usize, f32)> = (0..n_words)
+                .map(|_| (rng.below(rows), rng.below(5) as f32 + 1.0))
+                .collect();
+            let fresh = solver.solve(&u, &doc);
+            let pooled = solver.solve_into(&u, &doc, &mut scratch).to_vec();
+            assert_eq!(
+                fresh.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                pooled.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "round {round}"
+            );
+            // warm buffers never grow: a request costs zero allocation
+            assert_eq!(
+                (
+                    scratch.b.capacity(),
+                    scratch.x.capacity(),
+                    scratch.positives.capacity(),
+                ),
+                caps,
+                "scratch grew on round {round}"
+            );
+        }
     }
 
     #[test]

@@ -21,9 +21,13 @@ pub mod memory;
 pub mod options;
 pub mod sequential;
 
-pub use als::{factorize, factorize_from, half_step_u, half_step_v, resume, resume_options};
-pub use foldin::FoldIn;
-pub use convergence::{rel_error_sparse, rel_residual};
+pub use als::{
+    factorize, factorize_corpus, factorize_from, factorize_from_corpus, half_step_u,
+    half_step_u_src, half_step_v, half_step_v_src, resume, resume_corpus, resume_options,
+    AlsCorpus,
+};
+pub use convergence::{rel_error_source, rel_error_sparse, rel_residual};
+pub use foldin::{FoldIn, FoldInScratch};
 pub use memory::MemoryTracker;
 pub use options::{NmfOptions, NmfResult, SparsityMode};
-pub use sequential::{factorize_sequential, SequentialOptions};
+pub use sequential::{factorize_sequential, factorize_sequential_corpus, SequentialOptions};

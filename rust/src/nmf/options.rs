@@ -176,24 +176,33 @@ impl NmfOptions {
     /// which observes per-block scratch — stays bit-identical across
     /// thread counts and machines.
     pub fn resolved_block_rows(&self) -> usize {
-        if self.block_rows != 0 {
-            return self.block_rows;
-        }
-        if let Ok(v) = std::env::var("ESNMF_BLOCK_ROWS") {
-            // a malformed override must fail loudly: the CI tiny-blocks
-            // job exists solely to exercise block boundaries, and a typo
-            // silently falling back to auto would turn it into a no-op
-            // that still reports green
-            match v.trim().parse::<usize>() {
-                Ok(0) => {} // 0 = auto, same as the flag and config knob
-                Ok(n) => return n,
-                Err(_) => panic!(
-                    "ESNMF_BLOCK_ROWS must be a non-negative integer (0 = auto), got {v:?}"
-                ),
-            }
-        }
-        (AUTO_BLOCK_SCALARS / self.k.max(1)).max(1)
+        resolve_block_rows(self.block_rows, self.k)
     }
+}
+
+/// Resolve a `block_rows` knob (0 = auto) against a rank: the
+/// `ESNMF_BLOCK_ROWS` env override, else the fixed
+/// [`AUTO_BLOCK_SCALARS`]-scalar scratch budget divided by `k`. Shared
+/// by [`NmfOptions`] and [`SequentialOptions`](super::SequentialOptions)
+/// (whose blocks solve at rank `block_topics`, not `k`).
+pub fn resolve_block_rows(block_rows: usize, k: usize) -> usize {
+    if block_rows != 0 {
+        return block_rows;
+    }
+    if let Ok(v) = std::env::var("ESNMF_BLOCK_ROWS") {
+        // a malformed override must fail loudly: the CI tiny-blocks
+        // job exists solely to exercise block boundaries, and a typo
+        // silently falling back to auto would turn it into a no-op
+        // that still reports green
+        match v.trim().parse::<usize>() {
+            Ok(0) => {} // 0 = auto, same as the flag and config knob
+            Ok(n) => return n,
+            Err(_) => panic!(
+                "ESNMF_BLOCK_ROWS must be a non-negative integer (0 = auto), got {v:?}"
+            ),
+        }
+    }
+    (AUTO_BLOCK_SCALARS / k.max(1)).max(1)
 }
 
 /// Candidate-scratch scalar budget behind `block_rows = auto`: one block

@@ -6,6 +6,12 @@
 
 use super::coo::Coo;
 use super::csc::Csc;
+use crate::coordinator::pool;
+
+/// One row range's filtered entries, produced by the parallel retain
+/// passes: `(indices, values, fragment-local cumulative entry count per
+/// row)`.
+pub(crate) type RowFragment = (Vec<u32>, Vec<f32>, Vec<usize>);
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
@@ -193,6 +199,68 @@ impl Csr {
         self.indptr = new_indptr;
     }
 
+    /// Parallel [`Csr::retain`] for *row-local* predicates: `keep` must
+    /// be a pure function of `(row, col, value)` (no scan-order state —
+    /// order-sensitive filters like the top-t `Exact` tie budget split
+    /// their state per range first; see
+    /// [`topk`](super::topk::enforce_top_t_per_column_par)). Rows are
+    /// partitioned into contiguous ranges, each range filtered
+    /// independently, and the fragments concatenate in range order —
+    /// bit-identical to the serial scan at any thread count.
+    pub fn retain_par(
+        &mut self,
+        threads: usize,
+        keep: impl Fn(usize, u32, f32) -> bool + Sync,
+    ) {
+        if threads <= 1 || self.rows < 2 {
+            return self.retain(keep);
+        }
+        let ranges = pool::split_ranges(self.rows, threads);
+        let shared: &Csr = self;
+        let frags = pool::scoped_map_ranges(threads, &ranges, |lo, hi| {
+            let mut indices = Vec::new();
+            let mut values = Vec::new();
+            let mut row_ends = Vec::with_capacity(hi - lo);
+            for r in lo..hi {
+                let (idx, val) = shared.row(r);
+                for (&c, &v) in idx.iter().zip(val) {
+                    if keep(r, c, v) {
+                        indices.push(c);
+                        values.push(v);
+                    }
+                }
+                row_ends.push(indices.len());
+            }
+            (indices, values, row_ends)
+        });
+        self.replace_from_fragments(frags);
+    }
+
+    /// Rebuild storage from per-row-range fragments `(indices, values,
+    /// row_ends)` covering every row in ascending order (`row_ends` is
+    /// the fragment-local cumulative entry count per row). Shared by the
+    /// parallel retain passes.
+    pub(crate) fn replace_from_fragments(&mut self, frags: Vec<RowFragment>) {
+        let total: usize = frags.iter().map(|f| f.0.len()).sum();
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::with_capacity(total);
+        let mut values = Vec::with_capacity(total);
+        let mut row = 0usize;
+        for (fi, fv, ends) in frags {
+            let base = indices.len();
+            indices.extend_from_slice(&fi);
+            values.extend_from_slice(&fv);
+            for e in ends {
+                row += 1;
+                indptr[row] = base + e;
+            }
+        }
+        debug_assert_eq!(row, self.rows, "fragments must cover every row");
+        self.indptr = indptr;
+        self.indices = indices;
+        self.values = values;
+    }
+
     /// Append the raw little-endian serialization of this matrix:
     /// `rows u64 · cols u64 · nnz u64 · indptr (rows+1 × u64) ·
     /// indices (nnz × u32) · values (nnz × f32 bit patterns)`.
@@ -374,6 +442,27 @@ mod tests {
     #[test]
     fn col_nnz_counts() {
         assert_eq!(sample().col_nnz(), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn retain_par_matches_serial_at_every_thread_count() {
+        use crate::util::prop;
+        use crate::util::rng::Rng;
+        prop::check("retain-par-vs-serial", 0x8e7a, 48, |rng: &mut Rng| {
+            let rows = rng.range(1, 30);
+            let cols = rng.range(1, 8);
+            let m = Csr::from_dense(rows, cols, &prop::gen_sparse_dense(rng, rows, cols, 0.5));
+            let cut = rng.f32();
+            let keep = |r: usize, c: u32, v: f32| v > cut || (r + c as usize) % 3 == 0;
+            let mut serial = m.clone();
+            serial.retain(keep);
+            for threads in [1usize, 2, 4, 7] {
+                let mut par = m.clone();
+                par.retain_par(threads, keep);
+                assert_eq!(par, serial, "threads {threads}");
+                par.validate().unwrap();
+            }
+        });
     }
 
     #[test]

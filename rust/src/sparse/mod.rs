@@ -13,10 +13,12 @@ pub mod csc;
 pub mod csr;
 pub mod ops;
 pub mod rowblock;
+pub mod source;
 pub mod topk;
 
 pub use coo::Coo;
 pub use csc::Csc;
 pub use csr::Csr;
 pub use rowblock::RowBlock;
+pub use source::{RowCursor, RowSource, RowsRef};
 pub use topk::TieMode;

@@ -6,10 +6,19 @@
 //! * `gram`: `Xᵀ·X`      (the small (k,k) normal matrix)
 //! plus `tr_cross` (the sparse-safe error trace) and a general Gustavson
 //! `spmm` used by tests and the evaluation code.
+//!
+//! Both SpMM orientations are one kernel underneath
+//! ([`stream_mul_into`]): the left operand is presented through the
+//! [`RowSource`] streaming contract ("rows r0..r1 as CSR" — a CSC matrix
+//! streams as its transpose's rows), so the identical instruction
+//! sequence runs whether `A` is fully resident or paged in shard-by-shard
+//! from the on-disk corpus store ([`crate::io::store`]). That is what
+//! makes store-streamed factorization bit-identical to in-memory.
 
 use super::csc::Csc;
 use super::csr::Csr;
 use super::rowblock::RowBlock;
+use super::source::{RowCursor, RowSource};
 use crate::coordinator::pool;
 
 /// Rows per partial gram accumulation. Fixed (never derived from the
@@ -34,6 +43,145 @@ pub fn dense_factor(x: &Csr) -> Option<Vec<f32>> {
     Some(x.to_dense())
 }
 
+/// Candidate rows `lo..hi` of `S·F` (optionally `S·F − D·M`, the
+/// sequential-ALS deflation of Eqs. 4.7/4.8) where the left operand `S`
+/// is streamed through a [`RowSource`], appended into `out` (cleared
+/// first — `out` is a reusable scratch; `cur` is the worker's streaming
+/// cursor). `f_dense` is the optional dense fast-path copy of `f`; pass
+/// the same copy for every range of one half-step (see
+/// [`dense_factor`]).
+///
+/// Replicates the pre-`RowSource` operators bit-for-bit: the SpMM body
+/// is the old `atb_into`/`ab_into` instruction sequence (including the
+/// dense/sparse `any`-row semantics), and the fused deflation reproduces
+/// `csr_times_small` + `rowblock_sub` exactly — down to the negation of
+/// deflation-only rows — so the blocked sequential solver emits the same
+/// bits the unfused pipeline did.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_mul_into(
+    s: &dyn RowSource,
+    f: &Csr,
+    f_dense: Option<&[f32]>,
+    defl: Option<(&Csr, &[f32])>,
+    lo: usize,
+    hi: usize,
+    cur: &mut RowCursor,
+    out: &mut RowBlock,
+) {
+    assert_eq!(s.cols(), f.rows, "stream contraction mismatch");
+    if let Some((d, m)) = defl {
+        assert_eq!(d.rows, s.rows(), "deflation row mismatch");
+        assert_eq!(m.len(), d.cols * f.cols, "deflation matrix shape");
+    }
+    out.clear();
+    let k = f.cols;
+    let view = s.load(lo, hi, cur);
+    let mut acc = vec![0.0f32; k];
+    // only the sequential-ALS fuse pays for the deflation buffer
+    let mut dacc = if defl.is_some() {
+        vec![0.0f32; k]
+    } else {
+        Vec::new()
+    };
+    for j in lo..hi {
+        let (cols, vals) = view.row(j - lo);
+        let mut any = false;
+        if !cols.is_empty() {
+            acc.iter_mut().for_each(|x| *x = 0.0);
+            match f_dense {
+                Some(fd) => {
+                    for (&i, &aij) in cols.iter().zip(vals) {
+                        let frow = &fd[i as usize * k..(i as usize + 1) * k];
+                        for (slot, &fv) in acc.iter_mut().zip(frow) {
+                            *slot += aij * fv;
+                        }
+                    }
+                    any = acc.iter().any(|&x| x != 0.0);
+                }
+                None => {
+                    for (&i, &aij) in cols.iter().zip(vals) {
+                        let (fidx, fval) = f.row(i as usize);
+                        for (&c, &fv) in fidx.iter().zip(fval) {
+                            acc[c as usize] += aij * fv;
+                            any = true;
+                        }
+                    }
+                }
+            }
+        }
+        let Some((d, m)) = defl else {
+            if any {
+                out.push_row(j, &acc);
+            }
+            continue;
+        };
+        let (didx, dval) = d.row(j);
+        if didx.is_empty() {
+            if any {
+                out.push_row(j, &acc);
+            }
+            continue;
+        }
+        // the deflation row, accumulated exactly as csr_times_small does
+        dacc.iter_mut().for_each(|x| *x = 0.0);
+        for (&c, &v) in didx.iter().zip(dval) {
+            let mrow = &m[c as usize * k..(c as usize + 1) * k];
+            for (a, &mv) in dacc.iter_mut().zip(mrow) {
+                *a += v * mv;
+            }
+        }
+        if any {
+            // both sides active: elementwise x − y (rowblock_sub's merge)
+            for (a, &dv) in acc.iter_mut().zip(&dacc) {
+                *a -= dv;
+            }
+        } else {
+            // deflation-only row: rowblock_sub stores the negation
+            for (a, &dv) in acc.iter_mut().zip(&dacc) {
+                *a = -dv;
+            }
+        }
+        out.push_row(j, &acc);
+    }
+}
+
+/// [`stream_mul_into`] over rows `lo..hi`, allocating a fresh RowBlock.
+fn stream_mul_range(
+    s: &dyn RowSource,
+    f: &Csr,
+    f_dense: Option<&[f32]>,
+    defl: Option<(&Csr, &[f32])>,
+    lo: usize,
+    hi: usize,
+    cur: &mut RowCursor,
+) -> RowBlock {
+    let mut out = RowBlock::new(s.rows(), f.cols);
+    stream_mul_into(s, f, f_dense, defl, lo, hi, cur, &mut out);
+    out
+}
+
+/// Materialize the whole product at once, row-partitioned across
+/// `threads` scoped workers (one streaming cursor per worker),
+/// concatenated in range order — bit-identical to the serial result.
+pub fn stream_mul_par_with(
+    s: &dyn RowSource,
+    f: &Csr,
+    f_dense: Option<&[f32]>,
+    defl: Option<(&Csr, &[f32])>,
+    threads: usize,
+) -> RowBlock {
+    let rows = s.rows();
+    if threads <= 1 || rows < 2 * threads {
+        let mut cur = RowCursor::new();
+        return stream_mul_range(s, f, f_dense, defl, 0, rows, &mut cur);
+    }
+    let parts = pool::split_ranges(rows, threads);
+    let blocks = pool::scoped_map_ranges_with(threads, &parts, RowCursor::new, |cur, lo, hi| {
+        stream_mul_range(s, f, f_dense, defl, lo, hi, cur)
+    });
+    concat_rowblocks(rows, f.cols, blocks)
+}
+
 /// `B = Aᵀ · U` restricted to output rows `lo..hi` (columns of `a`),
 /// appended into `out` (cleared first — `out` is a reusable scratch).
 /// `u_dense` is the optional dense fast-path copy of `u`; pass the same
@@ -47,54 +195,15 @@ pub fn atb_into(
     out: &mut RowBlock,
 ) {
     assert_eq!(a.rows, u.rows, "Aᵀ·U contraction mismatch");
-    out.clear();
-    let k = u.cols;
-    let mut acc = vec![0.0f32; k];
-    for j in lo..hi {
-        let (rows, vals) = a.col(j);
-        if rows.is_empty() {
-            continue;
-        }
-        acc.iter_mut().for_each(|x| *x = 0.0);
-        let mut any = false;
-        match u_dense {
-            Some(ud) => {
-                for (&i, &aij) in rows.iter().zip(vals) {
-                    let urow = &ud[i as usize * k..(i as usize + 1) * k];
-                    for (s, &uv) in acc.iter_mut().zip(urow) {
-                        *s += aij * uv;
-                    }
-                }
-                any = acc.iter().any(|&x| x != 0.0);
-            }
-            None => {
-                for (&i, &aij) in rows.iter().zip(vals) {
-                    let (uidx, uval) = u.row(i as usize);
-                    for (&c, &uv) in uidx.iter().zip(uval) {
-                        acc[c as usize] += aij * uv;
-                        any = true;
-                    }
-                }
-            }
-        }
-        if any {
-            out.push_row(j, &acc);
-        }
-    }
-}
-
-/// [`atb_into`] allocating a fresh RowBlock.
-fn atb_range(a: &Csc, u: &Csr, u_dense: Option<&[f32]>, lo: usize, hi: usize) -> RowBlock {
-    let mut out = RowBlock::new(a.cols, u.cols);
-    atb_into(a, u, u_dense, lo, hi, &mut out);
-    out
+    let mut cur = RowCursor::new();
+    stream_mul_into(a, u, u_dense, None, lo, hi, &mut cur, out);
 }
 
 /// `B = Aᵀ · U` where `a` is (n, m) in CSC and `u` is (n, k) CSR.
 /// Returns the (m, k) intermediate with only active rows materialized.
 pub fn atb(a: &Csc, u: &Csr) -> RowBlock {
     let ud = dense_factor(u);
-    atb_range(a, u, ud.as_deref(), 0, a.cols)
+    atb_par_with(a, u, ud.as_deref(), 1)
 }
 
 /// Parallel [`atb`]: contiguous output-row ranges across `threads` scoped
@@ -108,14 +217,7 @@ pub fn atb_par(a: &Csc, u: &Csr, threads: usize) -> RowBlock {
 /// [`dense_factor`]) so one half-step computes the copy exactly once.
 pub fn atb_par_with(a: &Csc, u: &Csr, u_dense: Option<&[f32]>, threads: usize) -> RowBlock {
     assert_eq!(a.rows, u.rows, "Aᵀ·U contraction mismatch");
-    if threads <= 1 || a.cols < 2 * threads {
-        return atb_range(a, u, u_dense, 0, a.cols);
-    }
-    let parts = pool::split_ranges(a.cols, threads);
-    let blocks = pool::scoped_map_ranges(threads, &parts, |lo, hi| {
-        atb_range(a, u, u_dense, lo, hi)
-    });
-    concat_rowblocks(a.cols, u.cols, blocks)
+    stream_mul_par_with(a, u, u_dense, None, threads)
 }
 
 /// `C = A · V` restricted to output rows `lo..hi` (rows of `a`),
@@ -131,54 +233,15 @@ pub fn ab_into(
     out: &mut RowBlock,
 ) {
     assert_eq!(a.cols, v.rows, "A·V contraction mismatch");
-    out.clear();
-    let k = v.cols;
-    let mut acc = vec![0.0f32; k];
-    for i in lo..hi {
-        let (cols, vals) = a.row(i);
-        if cols.is_empty() {
-            continue;
-        }
-        acc.iter_mut().for_each(|x| *x = 0.0);
-        let mut any = false;
-        match v_dense {
-            Some(vd) => {
-                for (&j, &aij) in cols.iter().zip(vals) {
-                    let vrow = &vd[j as usize * k..(j as usize + 1) * k];
-                    for (s, &vv) in acc.iter_mut().zip(vrow) {
-                        *s += aij * vv;
-                    }
-                }
-                any = acc.iter().any(|&x| x != 0.0);
-            }
-            None => {
-                for (&j, &aij) in cols.iter().zip(vals) {
-                    let (vidx, vval) = v.row(j as usize);
-                    for (&c, &vv) in vidx.iter().zip(vval) {
-                        acc[c as usize] += aij * vv;
-                        any = true;
-                    }
-                }
-            }
-        }
-        if any {
-            out.push_row(i, &acc);
-        }
-    }
-}
-
-/// [`ab_into`] allocating a fresh RowBlock.
-fn ab_range(a: &Csr, v: &Csr, v_dense: Option<&[f32]>, lo: usize, hi: usize) -> RowBlock {
-    let mut out = RowBlock::new(a.rows, v.cols);
-    ab_into(a, v, v_dense, lo, hi, &mut out);
-    out
+    let mut cur = RowCursor::new();
+    stream_mul_into(a, v, v_dense, None, lo, hi, &mut cur, out);
 }
 
 /// `C = A · V` where `a` is (n, m) in CSR and `v` is (m, k) CSR.
 /// Returns the (n, k) intermediate with only active rows materialized.
 pub fn ab(a: &Csr, v: &Csr) -> RowBlock {
     let vd = dense_factor(v);
-    ab_range(a, v, vd.as_deref(), 0, a.rows)
+    ab_par_with(a, v, vd.as_deref(), 1)
 }
 
 /// Parallel [`ab`], same contract as [`atb_par`].
@@ -191,14 +254,7 @@ pub fn ab_par(a: &Csr, v: &Csr, threads: usize) -> RowBlock {
 /// [`dense_factor`]) so one half-step computes the copy exactly once.
 pub fn ab_par_with(a: &Csr, v: &Csr, v_dense: Option<&[f32]>, threads: usize) -> RowBlock {
     assert_eq!(a.cols, v.rows, "A·V contraction mismatch");
-    if threads <= 1 || a.rows < 2 * threads {
-        return ab_range(a, v, v_dense, 0, a.rows);
-    }
-    let parts = pool::split_ranges(a.rows, threads);
-    let blocks = pool::scoped_map_ranges(threads, &parts, |lo, hi| {
-        ab_range(a, v, v_dense, lo, hi)
-    });
-    concat_rowblocks(a.rows, v.cols, blocks)
+    stream_mul_par_with(a, v, v_dense, None, threads)
 }
 
 /// Concatenate per-range RowBlocks (disjoint ascending row ranges).
@@ -271,32 +327,46 @@ pub fn gram_par(x: &Csr, threads: usize) -> Vec<f32> {
 /// `tr(Uᵀ A V) = Σ_{(i,j) ∈ nnz(A)} a_ij · ⟨U_i, V_j⟩` — the cross term of
 /// the sparse-safe relative error (never materializes U·Vᵀ).
 pub fn tr_cross(a: &Csr, u: &Csr, v: &Csr) -> f64 {
-    assert_eq!(a.rows, u.rows);
-    assert_eq!(a.cols, v.rows);
+    tr_cross_source(a, u, v, a.rows.max(1))
+}
+
+/// [`tr_cross`] with `A` streamed through a [`RowSource`] in
+/// `chunk_rows`-row runs — the out-of-core error pass. One f64
+/// accumulator walks the rows in order, so the chunking (and therefore
+/// the backing storage) cannot change the result bits; resident corpus
+/// memory stays bounded by one chunk (plus the cursor's cached shard for
+/// store-backed sources).
+pub fn tr_cross_source(a: &dyn RowSource, u: &Csr, v: &Csr, chunk_rows: usize) -> f64 {
+    assert_eq!(a.rows(), u.rows);
+    assert_eq!(a.cols(), v.rows);
     assert_eq!(u.cols, v.cols);
     let k = u.cols;
     let mut scratch = vec![0.0f32; k];
     let mut acc = 0.0f64;
-    for i in 0..a.rows {
-        let (acols, avals) = a.row(i);
-        if acols.is_empty() {
-            continue;
-        }
-        let (uidx, uval) = u.row(i);
-        if uidx.is_empty() {
-            continue;
-        }
-        scratch.iter_mut().for_each(|x| *x = 0.0);
-        for (&c, &uv) in uidx.iter().zip(uval) {
-            scratch[c as usize] = uv;
-        }
-        for (&j, &aij) in acols.iter().zip(avals) {
-            let (vidx, vval) = v.row(j as usize);
-            let mut dot = 0.0f64;
-            for (&c, &vv) in vidx.iter().zip(vval) {
-                dot += scratch[c as usize] as f64 * vv as f64;
+    let mut cur = RowCursor::new();
+    for (lo, hi) in pool::fixed_chunks(a.rows(), chunk_rows) {
+        let view = a.load(lo, hi, &mut cur);
+        for i in lo..hi {
+            let (acols, avals) = view.row(i - lo);
+            if acols.is_empty() {
+                continue;
             }
-            acc += aij as f64 * dot;
+            let (uidx, uval) = u.row(i);
+            if uidx.is_empty() {
+                continue;
+            }
+            scratch.iter_mut().for_each(|x| *x = 0.0);
+            for (&c, &uv) in uidx.iter().zip(uval) {
+                scratch[c as usize] = uv;
+            }
+            for (&j, &aij) in acols.iter().zip(avals) {
+                let (vidx, vval) = v.row(j as usize);
+                let mut dot = 0.0f64;
+                for (&c, &vv) in vidx.iter().zip(vval) {
+                    dot += scratch[c as usize] as f64 * vv as f64;
+                }
+                acc += aij as f64 * dot;
+            }
         }
     }
     acc
@@ -694,5 +764,51 @@ mod tests {
         assert_eq!(atb(&a.to_csc(), &u).active_rows(), 0);
         assert_eq!(ab(&a, &Csr::zeros(4, 2)).active_rows(), 0);
         assert_eq!(gram(&u), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn fused_deflation_matches_csr_times_small_plus_rowblock_sub() {
+        // the blocked sequential solver fuses Eq. 4.7/4.8's deflation into
+        // the streaming kernel; it must reproduce the unfused
+        // csr_times_small + rowblock_sub pipeline bit-for-bit — including
+        // rows active only on one side
+        prop::check("fused-deflation", 2100, 48, |rng: &mut Rng| {
+            let n = rng.range(1, 20);
+            let m = rng.range(1, 20);
+            let k_cur = rng.range(1, 4);
+            let k2 = rng.range(1, 4);
+            let a = Csr::from_dense(n, m, &prop::gen_sparse_dense(rng, n, m, 0.3));
+            let f = Csr::from_dense(m, k2, &prop::gen_sparse_dense(rng, m, k2, 0.5));
+            let d = Csr::from_dense(n, k_cur, &prop::gen_sparse_dense(rng, n, k_cur, 0.4));
+            let mm: Vec<f32> = (0..k_cur * k2).map(|_| rng.normal() as f32).collect();
+
+            let want = rowblock_sub(&ab(&a, &f), &csr_times_small(&d, &mm, k2));
+            let fd = dense_factor(&f);
+            for threads in [1usize, 4] {
+                let got =
+                    stream_mul_par_with(&a, &f, fd.as_deref(), Some((&d, &mm)), threads);
+                assert_eq!(got.row_ids, want.row_ids, "threads {threads}");
+                let got_bits: Vec<u32> = got.data.iter().map(|v| v.to_bits()).collect();
+                let want_bits: Vec<u32> = want.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "threads {threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn tr_cross_source_chunking_is_bit_identical() {
+        prop::check("tr-cross-chunked", 2200, 48, |rng: &mut Rng| {
+            let n = rng.range(1, 25);
+            let m = rng.range(1, 25);
+            let k = rng.range(1, 5);
+            let a = Csr::from_dense(n, m, &prop::gen_sparse_dense(rng, n, m, 0.4));
+            let u = Csr::from_dense(n, k, &prop::gen_sparse_dense(rng, n, k, 0.6));
+            let v = Csr::from_dense(m, k, &prop::gen_sparse_dense(rng, m, k, 0.6));
+            let want = tr_cross(&a, &u, &v);
+            for chunk in [1usize, 3, 8, n + 5] {
+                let got = tr_cross_source(&a, &u, &v, chunk);
+                assert_eq!(got.to_bits(), want.to_bits(), "chunk {chunk}");
+            }
+        });
     }
 }

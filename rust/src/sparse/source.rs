@@ -1,0 +1,267 @@
+//! [`RowSource`] — the streaming contract between a sparse matrix and the
+//! blocked ALS half-steps: "give me rows `r0..r1` as CSR".
+//!
+//! The blocked pipeline ([`crate::nmf::als`]) never needs the whole data
+//! matrix at once — each half-step walks contiguous row blocks of one
+//! orientation of `A`. Abstracting that access behind a trait is what
+//! lets the same kernels run over a fully resident [`Csr`]/[`Csc`] *and*
+//! over the on-disk sharded store ([`crate::io::store`]), where resident
+//! corpus memory is bounded by the shards currently cached by the
+//! workers instead of the whole matrix.
+//!
+//! Two pieces:
+//!
+//! * [`RowsRef`] — a borrowed CSR-shaped view of a contiguous row run.
+//!   For resident matrices it borrows the matrix directly (zero copy);
+//!   for disk-backed sources it borrows the cursor's cached shard or
+//!   chunk buffers.
+//! * [`RowCursor`] — per-worker streaming state. Sources that read from
+//!   disk park their last-read shard (and any cross-shard copy buffers)
+//!   here, so each worker keeps at most one shard resident and repeated
+//!   blocks inside one shard cost one read. Resident matrices ignore it.
+//!
+//! # Determinism contract
+//!
+//! `load(lo, hi)` must present exactly the rows `lo..hi` of the logical
+//! matrix, entries in ascending column order with identical value bits,
+//! whatever the backing storage — the blocked half-steps' bit-identical
+//! guarantee rests on every source producing the same row bytes.
+
+use super::csc::Csc;
+use super::csr::Csr;
+use std::any::Any;
+
+/// Borrowed CSR-shaped view of rows `lo..hi` of some matrix. `indptr`
+/// has one entry per row plus one; entry positions index `indices` /
+/// `values` after subtracting `indptr[0]`, so both rebased chunk buffers
+/// and direct sub-slices of a resident CSR share one representation.
+#[derive(Clone, Copy, Debug)]
+pub struct RowsRef<'a> {
+    indptr: &'a [usize],
+    indices: &'a [u32],
+    values: &'a [f32],
+}
+
+impl<'a> RowsRef<'a> {
+    pub fn new(indptr: &'a [usize], indices: &'a [u32], values: &'a [f32]) -> Self {
+        debug_assert!(!indptr.is_empty(), "indptr needs at least the sentinel");
+        debug_assert_eq!(
+            indptr.last().unwrap() - indptr[0],
+            values.len(),
+            "indptr span must cover the value slice"
+        );
+        debug_assert_eq!(indices.len(), values.len());
+        RowsRef {
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// (column indices, values) of local row `i` (row `lo + i` of the
+    /// source).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&'a [u32], &'a [f32]) {
+        let base = self.indptr[0];
+        let s = self.indptr[i] - base;
+        let e = self.indptr[i + 1] - base;
+        (&self.indices[s..e], &self.values[s..e])
+    }
+}
+
+/// Per-worker streaming state for a [`RowSource`]. One cursor lives in
+/// each worker's scratch (next to its candidate
+/// [`RowBlock`](super::RowBlock)) and is reused across the blocks that
+/// worker claims — exactly the allocation-reuse discipline of the
+/// blocked pipeline, applied to corpus bytes.
+#[derive(Debug, Default)]
+pub struct RowCursor {
+    /// chunk buffers for ranges no single cached unit can serve
+    /// (rebased indptr starting at 0)
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+    /// source-private cache (the store parks its last-read shard here;
+    /// dropping the box releases the shard's resident-byte charge)
+    pub cache: Option<Box<dyn Any + Send>>,
+}
+
+impl RowCursor {
+    pub fn new() -> Self {
+        RowCursor::default()
+    }
+
+    /// Reset the chunk buffers (allocations kept) and seed the rebased
+    /// indptr — callers then append rows with [`Self::push_row`].
+    pub fn begin_chunk(&mut self) {
+        self.indptr.clear();
+        self.indices.clear();
+        self.values.clear();
+        self.indptr.push(0);
+    }
+
+    /// Append one row's entries to the chunk.
+    pub fn push_row(&mut self, indices: &[u32], values: &[f32]) {
+        debug_assert_eq!(indices.len(), values.len());
+        self.indices.extend_from_slice(indices);
+        self.values.extend_from_slice(values);
+        self.indptr.push(self.values.len());
+    }
+
+    /// View of the accumulated chunk.
+    pub fn chunk_view(&self) -> RowsRef<'_> {
+        RowsRef::new(&self.indptr, &self.indices, &self.values)
+    }
+}
+
+/// A sparse matrix readable as contiguous CSR row runs — the streaming
+/// contract of the blocked ALS half-steps (see the module docs).
+pub trait RowSource: Sync {
+    /// Logical row count (the half-step's output rows).
+    fn rows(&self) -> usize;
+
+    /// Logical column count (the contraction dimension).
+    fn cols(&self) -> usize;
+
+    /// Stored nonzeros of the whole matrix.
+    fn nnz(&self) -> usize;
+
+    /// Present rows `lo..hi`. Resident sources return a borrowed view
+    /// and never touch `cur`; disk-backed sources load through `cur`
+    /// (shard cache + chunk buffers). Implementations for fallible
+    /// backing storage surface read failures as a panic with the store
+    /// path in the message — a corpus that turns unreadable mid-run is
+    /// fatal to the factorization (validation happens at open time; see
+    /// [`crate::io::store`]).
+    fn load<'a>(&'a self, lo: usize, hi: usize, cur: &'a mut RowCursor) -> RowsRef<'a>;
+}
+
+impl RowSource for Csr {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz()
+    }
+
+    fn load<'a>(&'a self, lo: usize, hi: usize, _cur: &'a mut RowCursor) -> RowsRef<'a> {
+        RowsRef::new(
+            &self.indptr[lo..=hi],
+            &self.indices[self.indptr[lo]..self.indptr[hi]],
+            &self.values[self.indptr[lo]..self.indptr[hi]],
+        )
+    }
+}
+
+/// The transpose view: a CSC matrix is, byte for byte, the CSR of its
+/// transpose, so "rows" of this source are the *columns* of the logical
+/// matrix. This is exactly what the update-V half-step streams (`Aᵀ`'s
+/// rows = `A`'s columns).
+impl RowSource for Csc {
+    fn rows(&self) -> usize {
+        self.cols
+    }
+
+    fn cols(&self) -> usize {
+        self.rows
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz()
+    }
+
+    fn load<'a>(&'a self, lo: usize, hi: usize, _cur: &'a mut RowCursor) -> RowsRef<'a> {
+        RowsRef::new(
+            &self.indptr[lo..=hi],
+            &self.indices[self.indptr[lo]..self.indptr[hi]],
+            &self.values[self.indptr[lo]..self.indptr[hi]],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        Csr::from_dense(4, 3, &[
+            1.0, 0.0, 2.0, //
+            0.0, 0.0, 0.0, //
+            3.0, 4.0, 0.0, //
+            0.0, 5.0, 6.0,
+        ])
+    }
+
+    #[test]
+    fn csr_views_match_direct_rows() {
+        let m = sample();
+        let mut cur = RowCursor::new();
+        for lo in 0..=m.rows {
+            for hi in lo..=m.rows {
+                let view = m.load(lo, hi, &mut cur);
+                assert_eq!(view.n_rows(), hi - lo);
+                for r in lo..hi {
+                    assert_eq!(view.row(r - lo), m.row(r), "rows {lo}..{hi} row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn csc_views_are_the_transpose_rows() {
+        let m = sample();
+        let t = m.transpose();
+        let csc = m.to_csc();
+        assert_eq!(RowSource::rows(&csc), m.cols);
+        assert_eq!(RowSource::cols(&csc), m.rows);
+        let mut cur = RowCursor::new();
+        let view = csc.load(0, csc.cols, &mut cur);
+        for c in 0..m.cols {
+            assert_eq!(view.row(c), t.row(c), "column {c}");
+        }
+    }
+
+    #[test]
+    fn chunk_buffers_rebase_and_reuse() {
+        let m = sample();
+        let mut cur = RowCursor::new();
+        // copy rows 2..4 into the chunk and compare against the direct view
+        cur.begin_chunk();
+        for r in 2..4 {
+            let (idx, val) = m.row(r);
+            cur.push_row(idx, val);
+        }
+        {
+            let view = cur.chunk_view();
+            assert_eq!(view.n_rows(), 2);
+            assert_eq!(view.row(0), m.row(2));
+            assert_eq!(view.row(1), m.row(3));
+        }
+        // reuse: a second chunk starts clean but keeps the allocations
+        let cap = cur.indices.capacity();
+        cur.begin_chunk();
+        cur.push_row(&[0], &[9.0]);
+        let view = cur.chunk_view();
+        assert_eq!(view.n_rows(), 1);
+        assert_eq!(view.row(0), (&[0u32][..], &[9.0f32][..]));
+        assert!(cur.indices.capacity() >= cap.min(1));
+    }
+
+    #[test]
+    fn empty_ranges_are_legal() {
+        let m = sample();
+        let mut cur = RowCursor::new();
+        let view = m.load(1, 1, &mut cur);
+        assert_eq!(view.n_rows(), 0);
+    }
+}

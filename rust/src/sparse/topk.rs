@@ -347,11 +347,25 @@ pub fn enforce_top_t_rowblock_par(rb: &mut RowBlock, t: usize, mode: TieMode, th
 /// row it produces per unseen document, with the same tie semantics as
 /// the training-time operators above.
 pub fn enforce_top_t_vec(vals: &mut [f32], t: usize, mode: TieMode) {
-    let mut positives: Vec<f32> = vals.iter().copied().filter(|&v| v > 0.0).collect();
+    enforce_top_t_vec_with(vals, t, mode, &mut Vec::new());
+}
+
+/// [`enforce_top_t_vec`] with a caller-owned gather buffer, so a serving
+/// hot path (fold-in answers one of these per request) can pool its
+/// scratch instead of allocating per call. Identical results — the
+/// buffer is cleared and refilled exactly as the fresh allocation was.
+pub fn enforce_top_t_vec_with(
+    vals: &mut [f32],
+    t: usize,
+    mode: TieMode,
+    positives: &mut Vec<f32>,
+) {
+    positives.clear();
+    positives.extend(vals.iter().copied().filter(|&v| v > 0.0));
     if positives.len() <= t {
         return;
     }
-    let tau = nth_largest(&mut positives, t);
+    let tau = nth_largest(positives, t);
     match mode {
         TieMode::KeepTies => {
             for v in vals.iter_mut() {
@@ -390,9 +404,12 @@ pub fn enforce_top_t_per_column(m: &mut Csr, t_per_col: usize, mode: TieMode) {
 /// thread count: the column gather is row-range partitioned and merged in
 /// range order (same per-column value sequence as the serial scan), the
 /// per-column thresholds are computed on independent column partitions,
-/// and the final retain pass stays sequential (CSR compaction moves
-/// entries across row boundaries, so its write cursor cannot be split;
-/// selection dominates the cost).
+/// and the retain pass is row-range partitioned too — `KeepTies` filters
+/// with a row-local predicate ([`Csr::retain_par`]); `Exact` first
+/// prefix-counts each range's `== tau` ties per column and splits every
+/// column's budget across ranges in row order, reproducing the serial
+/// left-to-right budget scan, then filters ranges independently and
+/// concatenates the fragments in order.
 pub fn enforce_top_t_per_column_par(
     m: &mut Csr,
     t_per_col: usize,
@@ -448,21 +465,94 @@ pub fn enforce_top_t_per_column_par(
         .flatten()
         .collect();
     let taus: Vec<f32> = thresholds.iter().map(|t| t.0).collect();
-    let mut tie_budgets: Vec<usize> = thresholds.iter().map(|t| t.1).collect();
+    let tie_budgets: Vec<usize> = thresholds.iter().map(|t| t.1).collect();
     match mode {
-        TieMode::KeepTies => m.retain(|_, c, v| v >= taus[c as usize]),
-        TieMode::Exact => m.retain(|_, c, v| {
+        TieMode::KeepTies => m.retain_par(threads, |_, c, v| v >= taus[c as usize]),
+        TieMode::Exact => retain_exact_par(m, &taus, tie_budgets, threads),
+    }
+}
+
+/// The `Exact`-mode compaction of per-column enforcement, row-range
+/// parallel: the per-column tie budgets are scan-order state, so each
+/// range's share is prefix-counted first (ranges earlier in row order
+/// consume ties first, exactly like the serial left-to-right scan), then
+/// ranges filter independently and the fragments concatenate in order —
+/// bit-identical to the serial retain at any thread count.
+fn retain_exact_par(m: &mut Csr, taus: &[f32], mut budgets: Vec<usize>, threads: usize) {
+    if threads <= 1 || m.rows < 2 {
+        // the serial reference scan
+        return m.retain(|_, c, v| {
             let c = c as usize;
             if v > taus[c] {
                 true
-            } else if v == taus[c] && tie_budgets[c] > 0 {
-                tie_budgets[c] -= 1;
+            } else if v == taus[c] && budgets[c] > 0 {
+                budgets[c] -= 1;
                 true
             } else {
                 false
             }
-        }),
+        });
     }
+    let ranges = pool::split_ranges(m.rows, threads);
+    let shared: &Csr = m;
+    // pass 1: per-range, per-column `== tau` counts
+    let tie_counts = pool::scoped_map_ranges(threads, &ranges, |lo, hi| {
+        let mut ties = vec![0usize; taus.len()];
+        for r in lo..hi {
+            let (idx, val) = shared.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                if v == taus[c as usize] {
+                    ties[c as usize] += 1;
+                }
+            }
+        }
+        ties
+    });
+    // split every column's budget across ranges in row order
+    let range_budgets: Vec<Vec<usize>> = tie_counts
+        .iter()
+        .map(|ties| {
+            ties.iter()
+                .enumerate()
+                .map(|(c, &t)| {
+                    let take = budgets[c].min(t);
+                    budgets[c] -= take;
+                    take
+                })
+                .collect()
+        })
+        .collect();
+    // pass 2: filter each range with its own budgets
+    let frags = pool::scoped_map_ranges(threads, &ranges, |lo, hi| {
+        let part = ranges
+            .binary_search_by_key(&lo, |&(l, _)| l)
+            .expect("range boundaries must match split_ranges");
+        let mut local = range_budgets[part].clone();
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut row_ends = Vec::with_capacity(hi - lo);
+        for r in lo..hi {
+            let (idx, val) = shared.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                let col = c as usize;
+                let keep = if v > taus[col] {
+                    true
+                } else if v == taus[col] && local[col] > 0 {
+                    local[col] -= 1;
+                    true
+                } else {
+                    false
+                };
+                if keep {
+                    indices.push(c);
+                    values.push(v);
+                }
+            }
+            row_ends.push(indices.len());
+        }
+        (indices, values, row_ends)
+    });
+    m.replace_from_fragments(frags);
 }
 
 #[cfg(test)]
@@ -746,6 +836,40 @@ mod tests {
         assert_eq!(empty_rows.nnz(), 0);
         enforce_top_t_per_column(&mut m, 0, TieMode::Exact);
         assert_eq!(m.nnz(), 0, "t_per_col = 0 clears every column");
+    }
+
+    #[test]
+    fn per_column_ties_straddling_row_ranges_split_budgets_exactly() {
+        // a tall matrix whose columns are almost entirely tied values:
+        // at any thread count the per-range Exact budgets must reproduce
+        // the serial left-to-right scan — including ranges that hold
+        // more ties than their share of the budget
+        let rows = 23;
+        let cols = 3;
+        let mut dense = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                dense[r * cols + c] = match (r + c) % 4 {
+                    0 | 1 => 2.0,              // the tie value
+                    2 => 5.0,                  // strictly above
+                    _ => 1.0,                  // below, dropped
+                };
+            }
+        }
+        let m = Csr::from_dense(rows, cols, &dense);
+        for t in [1usize, 3, 7, 12, 40] {
+            let mut serial = m.clone();
+            enforce_top_t_per_column(&mut serial, t, TieMode::Exact);
+            for threads in [1usize, 4, 7] {
+                let mut par = m.clone();
+                enforce_top_t_per_column_par(&mut par, t, TieMode::Exact, threads);
+                assert_eq!(par, serial, "t={t} threads={threads}");
+                par.validate().unwrap();
+                for (c, &count) in par.col_nnz().iter().enumerate() {
+                    assert!(count <= t, "t={t} threads={threads} col {c}: {count}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -255,6 +255,63 @@ impl Drop for BenchSuite {
     }
 }
 
+/// One guarded metric that moved the wrong way between two trajectory
+/// points (see [`metric_regressions`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricRegression {
+    /// `<suite slug>.<metric name>`
+    pub path: String,
+    pub previous: f64,
+    pub current: f64,
+}
+
+/// Compare the *guarded* metrics of two combined trajectory documents
+/// (the `BENCH_smoke.json` schema: `{"suites": {<slug>: {"metrics":
+/// {...}}}}`): a metric whose name contains any of the `guards`
+/// substrings is lower-is-better (memory peaks, resident bytes), and
+/// regresses when `current > previous * tolerance`. Metrics absent from
+/// either document are skipped — a new metric has no baseline, and a
+/// removed one has nothing to regress. This is the CI bench-smoke
+/// memory-regression gate (`esnmf bench-check`).
+pub fn metric_regressions(
+    previous: &Json,
+    current: &Json,
+    guards: &[&str],
+    tolerance: f64,
+) -> Vec<MetricRegression> {
+    let mut out = Vec::new();
+    let Some(Json::Obj(cur_suites)) = current.get("suites") else {
+        return out;
+    };
+    for (slug, suite) in cur_suites {
+        let Some(Json::Obj(cur_metrics)) = suite.get("metrics") else {
+            continue;
+        };
+        for (name, value) in cur_metrics {
+            if !guards.iter().any(|g| name.contains(g)) {
+                continue;
+            }
+            let Some(cur) = value.as_f64() else { continue };
+            let prev = previous
+                .get("suites")
+                .and_then(|s| s.get(slug))
+                .and_then(|s| s.get("metrics"))
+                .and_then(|m| m.get(name))
+                .and_then(Json::as_f64);
+            if let Some(prev) = prev {
+                if cur > prev * tolerance {
+                    out.push(MetricRegression {
+                        path: format!("{slug}.{name}"),
+                        previous: prev,
+                        current: cur,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -314,6 +371,42 @@ mod tests {
             Some(3)
         );
         suite.results.clear(); // keep the drop hook from writing files
+    }
+
+    #[test]
+    fn metric_regressions_flag_only_guarded_growth() {
+        let doc = |intermediate: f64, resident: f64, time: f64| {
+            Json::parse(&format!(
+                r#"{{"schema":"esnmf-bench-smoke-v1","suites":{{
+                    "fig6":{{"metrics":{{
+                        "blocked.max_intermediate_nnz":{intermediate},
+                        "store.resident_corpus_peak_bytes":{resident},
+                        "wall_s":{time}}}}},
+                    "micro":{{"metrics":{{}}}}}}}}"#
+            ))
+            .unwrap()
+        };
+        let guards = ["max_intermediate_nnz", "resident_corpus"];
+        let prev = doc(100.0, 5000.0, 1.0);
+        // within tolerance: no regression (time is unguarded and may grow)
+        let ok = doc(105.0, 5200.0, 99.0);
+        assert!(metric_regressions(&prev, &ok, &guards, 1.10).is_empty());
+        // a guarded metric beyond tolerance is flagged with its path
+        let bad = doc(150.0, 5200.0, 1.0);
+        let regs = metric_regressions(&prev, &bad, &guards, 1.10);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].path, "fig6.blocked.max_intermediate_nnz");
+        assert_eq!(regs[0].previous, 100.0);
+        assert_eq!(regs[0].current, 150.0);
+        // both guarded metrics regressing are both reported
+        let worse = doc(150.0, 9000.0, 1.0);
+        assert_eq!(metric_regressions(&prev, &worse, &guards, 1.10).len(), 2);
+        // a brand-new metric (absent from prev) has no baseline → skipped
+        let empty_prev = Json::parse(r#"{"suites":{}}"#).unwrap();
+        assert!(metric_regressions(&empty_prev, &bad, &guards, 1.10).is_empty());
+        // a malformed previous document compares as empty, not a panic
+        let junk = Json::parse(r#"{"schema":"x"}"#).unwrap();
+        assert!(metric_regressions(&junk, &bad, &guards, 1.10).is_empty());
     }
 
     #[test]

@@ -377,6 +377,18 @@ fn concurrent_clients_hammer_and_counters_add_up() {
         metrics.counter("server.connections.total").get(),
         CLIENTS as u64
     );
+    // fold-in scratch is pooled per in-flight request, never allocated
+    // per request: creations are bounded by the worker count (8), far
+    // below the 240 answered lines — zero per-request allocation growth
+    let scratch_allocs = metrics.counter("server.foldin.scratch_allocs").get();
+    assert!(
+        scratch_allocs >= 1 && scratch_allocs <= 8,
+        "scratch allocs {scratch_allocs} exceed the 8-worker concurrency bound"
+    );
+    assert!(
+        scratch_allocs < total,
+        "scratch allocs {scratch_allocs} grew with the {total} requests"
+    );
     server.stop();
     assert_eq!(metrics.gauge("server.connections.active").get(), 0);
 }

@@ -1,0 +1,443 @@
+//! Out-of-core corpus store acceptance tests: `ingest` +
+//! `factorize --corpus-store` must produce `NmfResult`s bit-identical to
+//! the in-memory factorization at every `(block_rows, threads)`
+//! combination, with resident corpus bytes bounded by the shards in
+//! flight across workers — strictly below full-matrix residency.
+
+use esnmf::corpus::{generate_tdm, reuters_sim, Scale};
+use esnmf::io::{CorpusStore, Snapshot, SnapshotError};
+use esnmf::nmf::{
+    factorize, factorize_corpus, factorize_sequential, factorize_sequential_corpus,
+    resume_corpus, NmfOptions, NmfResult, SequentialOptions, SparsityMode,
+};
+use esnmf::sparse::TieMode;
+use esnmf::text::TermDocMatrix;
+use std::path::PathBuf;
+use std::process::Command;
+
+fn corpus() -> TermDocMatrix {
+    generate_tdm(&reuters_sim(Scale::Tiny), 0x0c0de)
+}
+
+fn temp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("esnmf_it_store_{name}"))
+}
+
+fn write_store(name: &str, tdm: &TermDocMatrix, shard_rows: usize) -> (PathBuf, CorpusStore) {
+    let path = temp(&format!("{name}.estdm"));
+    let _ = std::fs::remove_file(&path);
+    CorpusStore::write(&path, tdm, shard_rows).unwrap();
+    let store = CorpusStore::open(&path).unwrap();
+    (path, store)
+}
+
+fn assert_same_result(a: &NmfResult, b: &NmfResult, tag: &str) {
+    assert_eq!(a.u, b.u, "{tag}: U");
+    assert_eq!(a.v, b.v, "{tag}: V");
+    assert_eq!(a.iterations, b.iterations, "{tag}: iterations");
+    assert_eq!(a.residuals, b.residuals, "{tag}: residuals");
+    assert_eq!(a.errors, b.errors, "{tag}: errors");
+    assert_eq!(a.memory, b.memory, "{tag}: memory telemetry");
+}
+
+#[test]
+fn store_streamed_factorization_bit_identical_to_in_memory() {
+    // the acceptance matrix: block_rows {1, 7, auto} × threads {1, 4},
+    // for an enforced (two-pass global, Exact ties) and an unenforced
+    // run, against a store whose shards the blocks constantly straddle
+    let tdm = corpus();
+    let (path, store) = write_store("accept", &tdm, 5);
+    assert!(
+        store.terms_major().n_shards() > 3 && store.docs_major().n_shards() > 3,
+        "corpus must span several shards per orientation"
+    );
+    for (mode, tie) in [
+        (SparsityMode::both(60, 140), TieMode::Exact),
+        (SparsityMode::None, TieMode::KeepTies),
+    ] {
+        let mut base = NmfOptions::new(4)
+            .with_iters(3)
+            .with_seed(0x51de)
+            .with_sparsity(mode);
+        base.tie_mode = tie;
+        for block_rows in [1usize, 7, 0] {
+            for threads in [1usize, 4] {
+                let opts = base
+                    .clone()
+                    .with_threads(threads)
+                    .with_block_rows(block_rows);
+                let mem = factorize(&tdm, &opts);
+                let streamed = factorize_corpus(&store, &opts);
+                assert_same_result(
+                    &streamed,
+                    &mem,
+                    &format!("mode={mode:?} block_rows={block_rows} threads={threads}"),
+                );
+            }
+        }
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn randomized_store_equivalence_property() {
+    // random corpora × random shard heights × random sparsity modes:
+    // the store-streamed NmfResult equals the in-memory one bit for bit
+    use esnmf::util::prop;
+    let dir = temp("prop");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    prop::check("store-vs-memory", 0xe57d, 4, |rng| {
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), rng.next_u64());
+        let shard_rows = rng.range(1, 40);
+        let path = dir.join(format!("p{}.estdm", rng.below(1 << 30)));
+        CorpusStore::write(&path, &tdm, shard_rows).unwrap();
+        let store = CorpusStore::open(&path).unwrap();
+        let k = rng.range(2, 5);
+        let mode = match rng.below(3) {
+            0 => SparsityMode::None,
+            1 => SparsityMode::both(rng.range(k, 150), rng.range(k, 300)),
+            _ => SparsityMode::PerColumn {
+                t_u_col: Some(rng.range(1, 25)),
+                t_v_col: Some(rng.range(1, 50)),
+            },
+        };
+        let mut opts = NmfOptions::new(k)
+            .with_iters(2)
+            .with_seed(rng.next_u64())
+            .with_sparsity(mode)
+            .with_threads(rng.range(1, 5))
+            .with_block_rows(rng.range(1, 50));
+        opts.tie_mode = if rng.below(2) == 0 {
+            TieMode::KeepTies
+        } else {
+            TieMode::Exact
+        };
+        let mem = factorize(&tdm, &opts);
+        let streamed = factorize_corpus(&store, &opts);
+        assert_same_result(&streamed, &mem, &format!("shard_rows={shard_rows}"));
+        drop(store);
+        std::fs::remove_file(&path).unwrap();
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sequential_from_store_matches_in_memory() {
+    let tdm = corpus();
+    let (path, store) = write_store("seq", &tdm, 6);
+    for block_rows in [1usize, 16, 0] {
+        let opts = SequentialOptions::new(3, 4)
+            .with_budgets(30, 70)
+            .with_seed(0x5e9)
+            .with_block_rows(block_rows);
+        let mem = factorize_sequential(&tdm, &opts);
+        let streamed = factorize_sequential_corpus(&store, &opts);
+        assert_same_result(&streamed, &mem, &format!("sequential block_rows={block_rows}"));
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn resident_corpus_stays_within_the_shard_flight_bound() {
+    // during streamed half-steps, resident corpus bytes are the shards
+    // cached by in-flight worker cursors: ≤ workers × max shard bytes,
+    // and strictly below the full on-disk matrix
+    let tdm = corpus();
+    let shard_rows = 4;
+    let (path, store) = write_store("resident", &tdm, shard_rows);
+    let max_shard = store
+        .terms_major()
+        .max_shard_bytes()
+        .max(store.docs_major().max_shard_bytes());
+    for threads in [1usize, 4] {
+        let opts = NmfOptions::new(4)
+            .with_iters(2)
+            .with_seed(0xbeef)
+            .with_sparsity(SparsityMode::both(50, 120))
+            .with_threads(threads)
+            .with_block_rows(shard_rows); // blocks within (and straddling) shards
+        let _ = factorize_corpus(&store, &opts);
+        let peak = store.resident().peak();
+        assert!(peak > 0, "threads {threads}: nothing was ever resident?");
+        assert!(
+            peak <= threads * max_shard,
+            "threads {threads}: resident peak {peak} exceeds {threads} workers × {max_shard} shard bytes"
+        );
+        assert!(
+            peak < store.payload_bytes(),
+            "threads {threads}: resident peak {peak} not below full residency {}",
+            store.payload_bytes()
+        );
+        assert_eq!(
+            store.resident().current(),
+            0,
+            "threads {threads}: cursors must release their shards"
+        );
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn checkpoint_resume_and_digest_refusals_work_against_a_store() {
+    let tdm = corpus();
+    let (path, store) = write_store("resume", &tdm, 5);
+    let ck = temp("resume_ck.esnmf");
+    let _ = std::fs::remove_file(&ck);
+
+    let mut opts = NmfOptions::new(3)
+        .with_iters(7)
+        .with_seed(0xadd)
+        .with_sparsity(SparsityMode::both(40, 90));
+    opts.tie_mode = TieMode::Exact;
+    // uninterrupted reference, fully in memory
+    let uninterrupted = factorize(&tdm, &opts);
+
+    // checkpointed run streamed from the store, "crashing" at 6
+    let ck_opts = opts.clone().with_iters(6).with_checkpoint(&ck, 3);
+    let _ = factorize_corpus(&store, &ck_opts);
+    let snap = Snapshot::load(&ck).unwrap();
+    assert_eq!(snap.progress.iterations, 6);
+    // the store's metadata digest is the corpus digest the snapshot pins
+    assert_eq!(snap.corpus_digest, store.digest());
+
+    // resume against the store: bit-identical to never crashing
+    let resumed = resume_corpus(&store, &opts, &snap).unwrap();
+    assert_same_result(&resumed, &uninterrupted, "store resume");
+
+    // a snapshot of a different corpus is refused by digest
+    let other = generate_tdm(&reuters_sim(Scale::Tiny), 0xd1ff);
+    let r = factorize(&other, &opts);
+    let wrong = Snapshot::new(
+        opts.clone(),
+        r.u,
+        r.v,
+        &other,
+        esnmf::io::Progress {
+            iterations: r.iterations,
+            residuals: r.residuals,
+            errors: r.errors,
+            memory: r.memory,
+            elapsed_s: 0.0,
+        },
+    );
+    match resume_corpus(&store, &opts, &wrong) {
+        Err(e) => assert!(format!("{e:#}").contains("digest"), "{e:#}"),
+        Ok(_) => panic!("resume against the wrong corpus store was accepted"),
+    }
+    // the typed layer agrees
+    assert!(matches!(
+        wrong.check_digest(store.digest(), store.n_terms(), store.n_docs()),
+        Err(SnapshotError::Mismatch(_))
+    ));
+    std::fs::remove_file(&ck).unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+// ---- CLI end-to-end ------------------------------------------------------
+
+fn esnmf(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_esnmf"))
+        .args(args)
+        .env("ESNMF_LOG", "warn")
+        .output()
+        .expect("spawning esnmf")
+}
+
+/// The deterministic result lines of a factorize run: convergence
+/// numbers (wall time stripped), factor stats, topic tables, accuracy —
+/// everything except the store-only resident-corpus line, the
+/// dataset-name header of the sparsity report, and the `UV^T` row
+/// (deliberately absent from out-of-core reports — its support can be
+/// dense).
+fn comparable_lines(stdout: &str) -> Vec<String> {
+    stdout
+        .lines()
+        .filter(|l| !l.starts_with("resident corpus peak"))
+        .filter(|l| !l.contains(".estdm") && !l.starts_with("reuters"))
+        .filter(|l| !l.starts_with("UV^T"))
+        .map(|l| match (l.find(" in "), l.find("s  final residual")) {
+            (Some(a), Some(b)) if a < b => format!("{}{}", &l[..a], &l[b + 1..]),
+            _ => l.to_string(),
+        })
+        .collect()
+}
+
+#[test]
+fn cli_ingest_then_factorize_from_store_matches_in_memory_output() {
+    let store_path = temp("cli.estdm");
+    let _ = std::fs::remove_file(&store_path);
+    let out = esnmf(&[
+        "ingest", "--corpus", "reuters", "--scale", "tiny", "--seed", "21",
+        "--shard-rows", "5", "--out", store_path.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "ingest stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("shards"), "{text}");
+    assert!(text.contains("digest"), "{text}");
+
+    // --seed drives both the preset generator and the init guess, so the
+    // in-memory run regenerates exactly the ingested corpus
+    let common = [
+        "--k", "4", "--iters", "5", "--sparsity", "both", "--t-u", "50",
+        "--t-v", "110", "--seed", "21", "--threads", "2", "--block-rows", "7",
+    ];
+    let mut mem_args: Vec<&str> =
+        vec!["factorize", "--corpus", "reuters", "--scale", "tiny"];
+    mem_args.extend_from_slice(&common);
+    let mem_out = esnmf(&mem_args);
+    assert!(
+        mem_out.status.success(),
+        "in-memory stderr: {}",
+        String::from_utf8_lossy(&mem_out.stderr)
+    );
+
+    let mut store_args: Vec<&str> = vec!["factorize", "--corpus-store"];
+    let sp = store_path.to_str().unwrap();
+    store_args.push(sp);
+    store_args.extend_from_slice(&common);
+    let store_out = esnmf(&store_args);
+    assert!(
+        store_out.status.success(),
+        "store stderr: {}",
+        String::from_utf8_lossy(&store_out.stderr)
+    );
+    let store_text = String::from_utf8_lossy(&store_out.stdout);
+    assert!(
+        store_text.contains("resident corpus peak"),
+        "{store_text}"
+    );
+
+    let mem_lines = comparable_lines(&String::from_utf8_lossy(&mem_out.stdout));
+    let store_lines = comparable_lines(&store_text);
+    assert_eq!(mem_lines, store_lines, "store run diverged from in-memory");
+    std::fs::remove_file(&store_path).unwrap();
+}
+
+#[test]
+fn cli_store_errors_are_clear() {
+    // missing store file
+    let out = esnmf(&[
+        "factorize", "--corpus-store", "/nonexistent/nope.estdm", "--k", "3",
+    ]);
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("nope.estdm"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // junk --shard-rows
+    let out = esnmf(&[
+        "ingest", "--corpus", "reuters", "--scale", "tiny", "--shard-rows",
+        "lots", "--out", "/tmp/esnmf_junk.estdm",
+    ]);
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("shard-rows"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // the XLA backend cannot stream from a store
+    let out = esnmf(&[
+        "factorize", "--corpus-store", "/tmp/whatever.estdm", "--backend", "xla",
+    ]);
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cli_bench_check_gates_regressions() {
+    let prev = temp("bench_prev.json");
+    let cur = temp("bench_cur.json");
+    std::fs::write(
+        &prev,
+        r#"{"schema":"esnmf-bench-smoke-v1","suites":{"fig6":{"metrics":{"blocked.max_intermediate_nnz":100}}}}"#,
+    )
+    .unwrap();
+    std::fs::write(
+        &cur,
+        r#"{"schema":"esnmf-bench-smoke-v1","suites":{"fig6":{"metrics":{"blocked.max_intermediate_nnz":150}}}}"#,
+    )
+    .unwrap();
+    // regression beyond tolerance fails with the metric named
+    let out = esnmf(&[
+        "bench-check", "--previous", prev.to_str().unwrap(), "--current",
+        cur.to_str().unwrap(), "--tolerance", "1.10",
+    ]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("max_intermediate_nnz"), "{err}");
+    // a generous tolerance passes
+    let out = esnmf(&[
+        "bench-check", "--previous", prev.to_str().unwrap(), "--current",
+        cur.to_str().unwrap(), "--tolerance", "2.0",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    // no previous trajectory point: nothing to compare, pass
+    let out = esnmf(&[
+        "bench-check", "--previous", "/nonexistent/prev.json", "--current",
+        cur.to_str().unwrap(),
+    ]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("nothing to compare"));
+    // a previous file that exists but is garbage must fail loudly, not
+    // silently disable the gate
+    let corrupt = temp("bench_corrupt.json");
+    std::fs::write(&corrupt, "not json at all").unwrap();
+    let out = esnmf(&[
+        "bench-check", "--previous", corrupt.to_str().unwrap(), "--current",
+        cur.to_str().unwrap(),
+    ]);
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("corrupt"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    std::fs::remove_file(&corrupt).unwrap();
+    std::fs::remove_file(&prev).unwrap();
+    std::fs::remove_file(&cur).unwrap();
+}
+
+#[test]
+fn cli_serve_model_verifies_against_a_store() {
+    // save a model from the in-memory corpus, then ask serve to verify
+    // it against the matching store (digest from metadata) and against a
+    // mismatched one (refusal)
+    let tdm = corpus();
+    let (store_path, store) = write_store("serve", &tdm, 5);
+    let opts = NmfOptions::new(3).with_iters(3).with_seed(0x5e4e);
+    let r = factorize(&tdm, &opts);
+    let snap = Snapshot::new(
+        opts.clone(),
+        r.u,
+        r.v,
+        &tdm,
+        esnmf::io::Progress::default(),
+    );
+    // matching digest passes the explicit check
+    snap.check_digest(store.digest(), store.n_terms(), store.n_docs())
+        .unwrap();
+    let model_path = temp("serve_model.esnmf");
+    snap.save(&model_path).unwrap();
+
+    // a store of a different corpus refuses at serve startup
+    let other = generate_tdm(&reuters_sim(Scale::Tiny), 0xffee);
+    let (other_path, _other_store) = write_store("serve_other", &other, 5);
+    let out = esnmf(&[
+        "serve", "--model", model_path.to_str().unwrap(), "--corpus-store",
+        other_path.to_str().unwrap(), "--addr", "127.0.0.1:0",
+    ]);
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("digest"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    std::fs::remove_file(&model_path).unwrap();
+    std::fs::remove_file(&store_path).unwrap();
+    std::fs::remove_file(&other_path).unwrap();
+}
