@@ -1,0 +1,186 @@
+//! Serving-plane load test: concurrent CLASSIFY / FOLDIN / BATCH
+//! clients hammer a live [`TopicServer`] across a mid-run atomic hot
+//! model swap, and the suite records per-command-class p50/p99 latency
+//! and overall throughput as guarded trajectory metrics (`p99_us` is in
+//! the default `esnmf bench-check` guard list, so a latency regression
+//! on the request path fails CI the same way a memory regression does).
+
+use esnmf::coordinator::{MetricsRegistry, ServerState, TopicServer};
+use esnmf::io::{Progress, Snapshot};
+use esnmf::nmf::NmfOptions;
+use esnmf::sparse::Csr;
+use esnmf::util::bench::BenchSuite;
+use esnmf::util::stats;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
+
+const CLIENTS: usize = 4;
+const PER_CLIENT: usize = 50;
+/// classify + foldin + batch round trips per client iteration
+const ROUND_TRIPS_PER_ITER: usize = 3;
+
+fn terms() -> Vec<String> {
+    vec![
+        "coffee".into(),
+        "crop".into(),
+        "electrons".into(),
+        "atoms".into(),
+    ]
+}
+
+fn model_a() -> Arc<esnmf::coordinator::TopicModel> {
+    let u = Csr::from_dense(4, 2, &[
+        0.9, 0.0, //
+        0.5, 0.0, //
+        0.0, 0.8, //
+        0.0, 0.3,
+    ]);
+    let v = Csr::from_dense(3, 2, &[1.0, 0.0, 0.0, 0.9, 0.4, 0.0]);
+    Arc::new(esnmf::coordinator::TopicModel::new(u, v, terms()))
+}
+
+/// The same vocabulary with the topic columns exchanged — a visibly
+/// different model for the mid-run swap.
+fn model_b_snapshot() -> Snapshot {
+    let u = Csr::from_dense(4, 2, &[
+        0.0, 0.9, //
+        0.0, 0.5, //
+        0.8, 0.0, //
+        0.3, 0.0,
+    ]);
+    let v = Csr::from_dense(3, 2, &[0.0, 1.0, 0.9, 0.0, 0.0, 0.4]);
+    snapshot(u, v)
+}
+
+fn model_a_snapshot() -> Snapshot {
+    let m = model_a();
+    snapshot(m.u.clone(), m.v.clone())
+}
+
+fn snapshot(u: Csr, v: Csr) -> Snapshot {
+    Snapshot {
+        options: NmfOptions::new(2),
+        u,
+        v,
+        terms: terms(),
+        doc_labels: None,
+        label_names: vec![],
+        corpus_digest: 0xBEEF,
+        progress: Progress::default(),
+    }
+}
+
+/// One client: a scripted CLASSIFY / FOLDIN / BATCH mix, per-class
+/// latencies in µs appended to the shared accumulators.
+fn run_client(
+    addr: std::net::SocketAddr,
+    barrier: Arc<Barrier>,
+    classify_us: Arc<Mutex<Vec<f64>>>,
+    foldin_us: Arc<Mutex<Vec<f64>>>,
+    batch_us: Arc<Mutex<Vec<f64>>>,
+) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = stream;
+    let mut line = String::new();
+    let mut roundtrip = |req: &str, responses: usize| -> f64 {
+        let t = Instant::now();
+        writer.write_all(req.as_bytes()).expect("write");
+        for _ in 0..responses {
+            line.clear();
+            reader.read_line(&mut line).expect("read");
+            assert!(line.starts_with("OK"), "server answered {line:?} to {req:?}");
+        }
+        t.elapsed().as_secs_f64() * 1e6
+    };
+    let (mut c, mut f, mut b) = (Vec::new(), Vec::new(), Vec::new());
+    barrier.wait(); // start together
+    for i in 0..PER_CLIENT {
+        if i == PER_CLIENT / 2 {
+            barrier.wait(); // the main thread swaps the model here
+        }
+        let word = ["coffee", "crop", "electrons", "atoms"][i % 4];
+        c.push(roundtrip(&format!("CLASSIFY {word} coffee\n"), 1));
+        f.push(roundtrip(&format!("FOLDIN {word}:{} crop:1\n", 1 + i % 5), 1));
+        b.push(roundtrip(
+            &format!("BATCH 2\nTOPICS\nCLASSIFY {word}\n"),
+            3, // header + two responses
+        ));
+    }
+    classify_us.lock().unwrap().extend_from_slice(&c);
+    foldin_us.lock().unwrap().extend_from_slice(&f);
+    batch_us.lock().unwrap().extend_from_slice(&b);
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("esnmf_bench_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let snap_a = dir.join("a.esnmf");
+    let snap_b = dir.join("b.esnmf");
+    model_a_snapshot().save(&snap_a).expect("save a");
+    model_b_snapshot().save(&snap_b).expect("save b");
+
+    let state = Arc::new(ServerState::new(model_a(), MetricsRegistry::new(), 256));
+    let server =
+        TopicServer::serve_state("127.0.0.1:0", Arc::clone(&state), 8).expect("server");
+    let addr = server.addr();
+
+    let classify_us = Arc::new(Mutex::new(Vec::new()));
+    let foldin_us = Arc::new(Mutex::new(Vec::new()));
+    let batch_us = Arc::new(Mutex::new(Vec::new()));
+    let mut total_requests = 0usize;
+    let mut total_elapsed_s = 0.0f64;
+    let mut swaps = 0usize;
+
+    let mut suite = BenchSuite::new("serve: hot-swap load");
+    suite.bench("classify+foldin+batch across a hot swap", || {
+        let barrier = Arc::new(Barrier::new(CLIENTS + 1));
+        let t = Instant::now();
+        let clients: Vec<_> = (0..CLIENTS)
+            .map(|_| {
+                let (addr, barrier) = (addr, Arc::clone(&barrier));
+                let (c, f, b) = (
+                    Arc::clone(&classify_us),
+                    Arc::clone(&foldin_us),
+                    Arc::clone(&batch_us),
+                );
+                std::thread::spawn(move || run_client(addr, barrier, c, f, b))
+            })
+            .collect();
+        barrier.wait(); // start
+        barrier.wait(); // halfway: swap concurrently with live traffic
+        let target = if state.generation() % 2 == 0 {
+            &snap_b
+        } else {
+            &snap_a
+        };
+        state.swap_model(target).expect("hot swap");
+        swaps += 1;
+        for c in clients {
+            c.join().expect("client");
+        }
+        total_requests += CLIENTS * PER_CLIENT * ROUND_TRIPS_PER_ITER;
+        total_elapsed_s += t.elapsed().as_secs_f64();
+    });
+
+    for (name, lat) in [
+        ("classify", &classify_us),
+        ("foldin", &foldin_us),
+        ("batch", &batch_us),
+    ] {
+        let samples = lat.lock().unwrap();
+        suite.metric(&format!("serve.{name}.p50_us"), stats::quantile(&samples, 0.50));
+        suite.metric(&format!("serve.{name}.p99_us"), stats::quantile(&samples, 0.99));
+    }
+    suite.metric("serve.throughput_rps", total_requests as f64 / total_elapsed_s);
+    suite.metric("serve.swaps_performed", swaps as f64);
+    assert!(
+        state.generation() as usize >= swaps,
+        "every swap must bump the generation"
+    );
+
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}

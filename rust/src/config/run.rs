@@ -62,6 +62,12 @@ pub struct RunConfig {
     /// serve a persisted snapshot instead of factorizing
     /// (`esnmf serve --model`)
     pub model: Option<String>,
+    /// loopback-only admin/observability listener port
+    /// (`--admin-port` / `[serve] admin_port`); None = no admin listener
+    pub admin_port: Option<u16>,
+    /// poll the `--model` file's mtime and hot-swap on change
+    /// (`--watch-model` / `[serve] watch_model`)
+    pub watch_model: bool,
     /// checkpoint the ALS run every N completed iterations
     /// (`--checkpoint-every`, 0 = off; requires a checkpoint destination —
     /// `--save-model`)
@@ -104,6 +110,8 @@ impl Default for RunConfig {
             foldin_t: None,
             save_model: None,
             model: None,
+            admin_port: None,
+            watch_model: false,
             checkpoint_every: 0,
             resume: None,
             warm_start: None,
@@ -191,6 +199,16 @@ impl RunConfig {
         }
         if let Some(v) = f.str("serve.model") {
             self.model = Some(v.to_string());
+        }
+        if let Some(v) = f.usize("serve.admin_port") {
+            anyhow::ensure!(
+                v > 0 && v <= u16::MAX as usize,
+                "bad serve.admin_port {v} in config (1..=65535)"
+            );
+            self.admin_port = Some(v as u16);
+        }
+        if let Some(v) = f.bool("serve.watch_model") {
+            self.watch_model = v;
         }
         if let Some(v) = f.str("snapshot.save") {
             self.save_model = Some(v.to_string());
@@ -405,6 +423,23 @@ mod tests {
             cfg.serve_options().threads,
             crate::coordinator::pool::default_threads()
         );
+    }
+
+    #[test]
+    fn admin_knobs_from_file() {
+        let f = ConfigFile::parse("[serve]\nadmin_port = 9090\nwatch_model = true\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.admin_port, Some(9090));
+        assert!(cfg.watch_model);
+        // defaults: no admin listener, no watcher
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.admin_port, None);
+        assert!(!cfg.watch_model);
+        // out-of-range ports are refused, not truncated
+        let f = ConfigFile::parse("[serve]\nadmin_port = 70000\n").unwrap();
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_file(&f).is_err());
     }
 
     #[test]

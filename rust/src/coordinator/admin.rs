@@ -1,0 +1,316 @@
+//! Localhost admin/observability listener (`esnmf serve --admin-port`).
+//!
+//! A second, operator-facing TCP endpoint that shares the
+//! [`ServerState`] with the data plane but never competes with user
+//! traffic for its worker pool:
+//!
+//! ```text
+//! HEALTH          → "OK up generation=<g> requests=<n>"
+//! READY           → "OK ready generation=<g>" | "ERR not ready: <why>"
+//! METRICS         → Prometheus text exposition, terminated by "# EOF"
+//! PROVENANCE      → "OK path=... crc32=... digest=... k=... ..." (one line)
+//! RELOAD <path>   → "OK swapped generation=<g> k=<k>" | "ERR reload failed: ..."
+//! PING            → "OK pong"
+//! QUIT            → closes the connection
+//! ```
+//!
+//! `READY` tracks [`ServerState::ready`]: it flips false on a recorded
+//! corpus-store fault and recovers on the next successful swap. A failed
+//! `RELOAD` does **not** flip it — the previous model is still serving,
+//! untouched, and a rolling deploy probing `READY` must keep routing
+//! traffic here.
+//!
+//! Connections are handled serially on one dedicated thread: admin
+//! traffic is one operator or one scrape loop, and serializing it means
+//! a `RELOAD` (the only slow command) cannot race another `RELOAD`.
+//! Binding is restricted to loopback by the driver; the listener itself
+//! also refuses non-loopback addresses as defense in depth.
+
+use super::server::{is_timeout, LineReader, ServerState};
+use crate::Result;
+use std::io::{ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Stop-flag poll interval for a blocked admin read.
+const READ_POLL: Duration = Duration::from_millis(50);
+
+/// Bounded response write, as on the data plane: a scraper that stops
+/// reading gets disconnected instead of wedging the admin thread.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Answer one admin command line. Pure request → response (no I/O), so
+/// unit tests drive the full command surface without a socket.
+pub fn admin_command(state: &ServerState, line: &str) -> String {
+    let line = line.trim();
+    let mut parts = line.split_whitespace();
+    let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
+    match cmd.as_str() {
+        "HEALTH" => format!(
+            "OK up generation={} requests={}",
+            state.generation(),
+            state.metrics.counter("server.requests").get()
+        ),
+        "READY" => {
+            if state.ready() {
+                format!("OK ready generation={}", state.generation())
+            } else {
+                let why = state
+                    .fault_message()
+                    .unwrap_or_else(|| "no servable model".into());
+                format!("ERR not ready: {why}")
+            }
+        }
+        // multi-line: scrapers read until the `# EOF` terminator
+        "METRICS" => format!("{}# EOF", state.metrics.prometheus()),
+        "PROVENANCE" => {
+            let active = state.active();
+            let p = &active.provenance;
+            fn opt<T: std::fmt::Display>(v: &Option<T>) -> String {
+                v.as_ref().map_or_else(|| "-".into(), |x| x.to_string())
+            }
+            format!(
+                "OK path={} crc32={} digest={} k={} terms={} docs={} \
+                 sparsity={} options={} foldin_t={} loaded_unix_ms={} generation={}",
+                opt(&p.path),
+                p.file_crc32
+                    .map_or_else(|| "-".into(), |c| format!("{c:#010x}")),
+                p.corpus_digest
+                    .map_or_else(|| "-".into(), |d| format!("{d:#018x}")),
+                p.k,
+                p.n_terms,
+                p.n_docs,
+                p.sparsity,
+                p.options,
+                opt(&p.foldin_t),
+                p.loaded_unix_ms,
+                active.generation,
+            )
+        }
+        "RELOAD" => {
+            let path = match (parts.next(), parts.next()) {
+                (Some(p), None) => p,
+                _ => return "ERR usage: RELOAD <path.esnmf>".into(),
+            };
+            match state.swap_model(std::path::Path::new(path)) {
+                Ok(active) => {
+                    crate::log_info!(
+                        "admin",
+                        "hot-swapped model from {path} (generation {})",
+                        active.generation
+                    );
+                    format!(
+                        "OK swapped generation={} k={}",
+                        active.generation,
+                        active.model.k()
+                    )
+                }
+                Err(e) => format!("ERR reload failed: {e}"),
+            }
+        }
+        "PING" => "OK pong".into(),
+        "" => "ERR empty command".into(),
+        other => format!("ERR unknown admin command {other:?}"),
+    }
+}
+
+fn admin_conn(stream: TcpStream, state: &ServerState, stop: &AtomicBool) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut reader = LineReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    loop {
+        let line = loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match reader.read_line() {
+                Ok(Some(l)) => break l,
+                Ok(None) => return,
+                Err(e) if is_timeout(&e) => continue,
+                Err(_) => return,
+            }
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.eq_ignore_ascii_case("QUIT") {
+            let _ = writeln!(writer, "OK bye");
+            return;
+        }
+        let response = admin_command(state, line);
+        if writeln!(writer, "{response}").is_err() {
+            return;
+        }
+    }
+}
+
+/// The admin listener handle; stops (gracefully) on [`AdminServer::stop`]
+/// or drop, exactly like the data-plane `TopicServer`.
+pub struct AdminServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl AdminServer {
+    /// Bind `addr` (loopback only — e.g. `127.0.0.1:9090`, or port 0 for
+    /// an ephemeral test port) and serve admin commands against `state`
+    /// on one dedicated `esnmf-admin` thread.
+    pub fn start(addr: &str, state: Arc<ServerState>) -> Result<AdminServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        if !local.ip().is_loopback() {
+            return Err(anyhow::anyhow!(
+                "admin listener must bind loopback, got {local} \
+                 (RELOAD and METRICS are operator-only)"
+            ));
+        }
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("esnmf-admin".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let _ = stream.set_nonblocking(false);
+                            // serial, panic-isolated: one bad admin
+                            // connection costs itself, never the listener
+                            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || admin_conn(stream, &state, &stop2),
+                            ));
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(e) => {
+                            crate::log_warn!("admin", "accept failed: {e}");
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                }
+            })?;
+        Ok(AdminServer {
+            addr: local,
+            stop,
+            join: Some(join),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the admin thread (in-flight connection
+    /// observes the flag within its read-poll interval).
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for AdminServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::metrics::MetricsRegistry;
+    use super::super::model::TopicModel;
+    use super::super::server::respond;
+    use crate::sparse::Csr;
+
+    fn state() -> ServerState {
+        let u = Csr::from_dense(3, 2, &[0.9, 0.0, 0.4, 0.0, 0.0, 0.7]);
+        let v = Csr::from_dense(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let model = TopicModel::new(
+            u,
+            v,
+            vec!["coffee".into(), "crop".into(), "electrons".into()],
+        );
+        ServerState::new(Arc::new(model), MetricsRegistry::new(), 16)
+    }
+
+    #[test]
+    fn health_reports_generation_and_requests() {
+        let s = state();
+        let _ = respond(&s, "PING");
+        let _ = respond(&s, "TOPICS");
+        assert_eq!(admin_command(&s, "HEALTH"), "OK up generation=0 requests=2");
+        assert_eq!(admin_command(&s, "health"), "OK up generation=0 requests=2");
+    }
+
+    #[test]
+    fn ready_tracks_store_faults() {
+        let s = state();
+        assert_eq!(admin_command(&s, "READY"), "OK ready generation=0");
+        s.set_store_fault("corpus store i/o: short read");
+        assert_eq!(
+            admin_command(&s, "READY"),
+            "ERR not ready: corpus store i/o: short read"
+        );
+    }
+
+    #[test]
+    fn metrics_exports_prometheus_with_terminator() {
+        let s = state();
+        let _ = respond(&s, "CLASSIFY coffee");
+        let text = admin_command(&s, "METRICS");
+        assert!(text.ends_with("# EOF"), "{text}");
+        assert!(text.contains("esnmf_server_requests 1\n"), "{text}");
+        assert!(
+            text.contains("# TYPE esnmf_server_latency_classify_us histogram\n"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn provenance_is_one_line_of_key_value_pairs() {
+        let s = state();
+        let line = admin_command(&s, "PROVENANCE");
+        assert!(!line.contains('\n'));
+        assert!(line.starts_with("OK path=- crc32=- "), "{line}");
+        assert!(line.contains(" k=2 terms=3 docs=2 "), "{line}");
+        assert!(line.ends_with("generation=0"), "{line}");
+        for pair in line.trim_start_matches("OK ").split(' ') {
+            assert!(pair.contains('='), "not key=value: {pair:?} in {line}");
+        }
+    }
+
+    #[test]
+    fn reload_rejects_bad_usage_and_missing_files() {
+        let s = state();
+        assert_eq!(admin_command(&s, "RELOAD"), "ERR usage: RELOAD <path.esnmf>");
+        assert!(admin_command(&s, "RELOAD a b").starts_with("ERR usage"));
+        let r = admin_command(&s, "RELOAD /nonexistent/model.esnmf");
+        assert!(r.starts_with("ERR reload failed:"), "{r}");
+        assert_eq!(s.generation(), 0);
+        assert!(s.ready(), "failed reload must not flip READY");
+    }
+
+    #[test]
+    fn unknown_commands_answer_err() {
+        let s = state();
+        assert!(admin_command(&s, "FROBNICATE").starts_with("ERR unknown"));
+        assert_eq!(admin_command(&s, ""), "ERR empty command");
+        assert_eq!(admin_command(&s, "PING"), "OK pong");
+    }
+}

@@ -128,6 +128,18 @@ impl LruCache {
         self.map.insert(key, i);
         self.push_front(i);
     }
+
+    /// Drop every entry, keeping the capacity and the allocations. The
+    /// server calls this on a hot model swap: generation-tagged keys
+    /// already make stale hits impossible, clearing reclaims the dead
+    /// generation's memory in one O(n) sweep.
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.entries.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
 }
 
 #[cfg(test)]
@@ -199,6 +211,22 @@ mod tests {
                 assert_eq!(c.get(&format!("k{}", i - 1)), None);
             }
         }
+    }
+
+    #[test]
+    fn clear_empties_and_cache_keeps_working() {
+        let mut c = LruCache::new(3);
+        for i in 0..5 {
+            c.insert(format!("k{i}"), format!("v{i}"));
+        }
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.get("k4"), None);
+        assert_eq!(keys_mru_to_lru(&c), Vec::<String>::new());
+        c.insert("x".into(), "1".into());
+        c.insert("y".into(), "2".into());
+        assert_eq!(c.get("x"), Some("1".into()));
+        assert_eq!(c.len(), 2);
     }
 
     #[test]

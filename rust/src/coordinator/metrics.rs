@@ -3,8 +3,20 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked. Every
+/// mutex in the serving plane (registry maps, response cache, scratch
+/// pool, model slot) only ever holds state that is valid between
+/// individual writes — inserts, single assignments, pushes — so a
+/// panicking holder cannot leave a half-updated invariant behind and the
+/// poison flag carries no information worth dying for. Using this
+/// everywhere turns "one bad request panicked" from a permanent serving
+/// outage (every later `.lock().unwrap()` re-panics) into a non-event.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 #[derive(Default)]
 pub struct Counter(AtomicU64);
@@ -120,17 +132,17 @@ impl MetricsRegistry {
     }
 
     pub fn counter(&self, name: &str) -> Arc<Counter> {
-        let mut map = self.counters.lock().unwrap();
+        let mut map = lock_unpoisoned(&self.counters);
         Arc::clone(map.entry(name.to_string()).or_default())
     }
 
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
-        let mut map = self.gauges.lock().unwrap();
+        let mut map = lock_unpoisoned(&self.gauges);
         Arc::clone(map.entry(name.to_string()).or_default())
     }
 
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
-        let mut map = self.histograms.lock().unwrap();
+        let mut map = lock_unpoisoned(&self.histograms);
         Arc::clone(map.entry(name.to_string()).or_default())
     }
 
@@ -139,13 +151,13 @@ impl MetricsRegistry {
     /// `<name>.le_<bound>us` / `<name>.inf` bucket counts.
     pub fn snapshot(&self) -> Vec<(String, i64)> {
         let mut out = Vec::new();
-        for (name, c) in self.counters.lock().unwrap().iter() {
+        for (name, c) in lock_unpoisoned(&self.counters).iter() {
             out.push((name.clone(), c.get() as i64));
         }
-        for (name, g) in self.gauges.lock().unwrap().iter() {
+        for (name, g) in lock_unpoisoned(&self.gauges).iter() {
             out.push((name.clone(), g.get()));
         }
-        for (name, h) in self.histograms.lock().unwrap().iter() {
+        for (name, h) in lock_unpoisoned(&self.histograms).iter() {
             out.push((format!("{name}.count"), h.count() as i64));
             out.push((format!("{name}.sum_us"), h.sum_us() as i64));
             for (i, cum) in h.cumulative().into_iter().enumerate() {
@@ -165,6 +177,49 @@ impl MetricsRegistry {
             .map(|(k, v)| format!("{k}={v}"))
             .collect::<Vec<_>>()
             .join(" ")
+    }
+
+    /// Prometheus text exposition of the whole registry, served by the
+    /// admin listener's `METRICS` command. Metric names are the dotted
+    /// registry names with `.` → `_` under an `esnmf_` prefix; histogram
+    /// bucket bounds stay in microseconds (`le` labels are the
+    /// [`HISTOGRAM_BOUNDS_US`] values, `+Inf` for the overflow bucket)
+    /// and the `_sum` is microseconds to match.
+    pub fn prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            let mut s: String = name
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect();
+            s.insert_str(0, "esnmf_");
+            s
+        }
+        let mut out = String::new();
+        for (name, c) in lock_unpoisoned(&self.counters).iter() {
+            let n = sanitize(name);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {}\n", c.get()));
+        }
+        for (name, g) in lock_unpoisoned(&self.gauges).iter() {
+            let n = sanitize(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", g.get()));
+        }
+        for (name, h) in lock_unpoisoned(&self.histograms).iter() {
+            let n = format!("{}_us", sanitize(name));
+            out.push_str(&format!("# TYPE {n} histogram\n"));
+            for (i, cum) in h.cumulative().into_iter().enumerate() {
+                match HISTOGRAM_BOUNDS_US.get(i) {
+                    Some(bound) => {
+                        out.push_str(&format!("{n}_bucket{{le=\"{bound}\"}} {cum}\n"));
+                    }
+                    None => {
+                        out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                    }
+                }
+            }
+            out.push_str(&format!("{n}_sum {}\n", h.sum_us()));
+            out.push_str(&format!("{n}_count {}\n", h.count()));
+        }
+        out
     }
 }
 
@@ -232,6 +287,55 @@ mod tests {
         assert_eq!(h.count(), 1);
         assert_eq!(h.cumulative()[2], 1); // ≤ 1ms
         assert_eq!(h.cumulative()[1], 0); // not ≤ 100µs
+    }
+
+    #[test]
+    fn prometheus_export_is_parseable_and_complete() {
+        let reg = MetricsRegistry::new();
+        reg.counter("server.requests").add(7);
+        reg.gauge("server.connections.active").set(-2);
+        reg.histogram("server.latency.classify").observe_us(50);
+        let text = reg.prometheus();
+        assert!(text.contains("# TYPE esnmf_server_requests counter\n"));
+        assert!(text.contains("esnmf_server_requests 7\n"));
+        assert!(text.contains("esnmf_server_connections_active -2\n"));
+        assert!(text.contains("# TYPE esnmf_server_latency_classify_us histogram\n"));
+        assert!(text.contains("esnmf_server_latency_classify_us_bucket{le=\"100\"} 1\n"));
+        assert!(text.contains("esnmf_server_latency_classify_us_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("esnmf_server_latency_classify_us_sum 50\n"));
+        assert!(text.contains("esnmf_server_latency_classify_us_count 1\n"));
+        // every line is a comment or `name[{labels}] value`
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("name value");
+            assert!(name.starts_with("esnmf_"), "{line}");
+            assert!(value.parse::<f64>().is_ok(), "{line}");
+        }
+    }
+
+    #[test]
+    fn poisoned_registry_locks_recover() {
+        let reg = MetricsRegistry::new();
+        reg.counter("survivor").inc();
+        // a thread that panics while holding every registry lock poisons
+        // them all — exactly what a panicking request thread used to do
+        let reg2 = reg.clone();
+        let _ = std::thread::spawn(move || {
+            let _c = reg2.counters.lock().unwrap();
+            let _g = reg2.gauges.lock().unwrap();
+            let _h = reg2.histograms.lock().unwrap();
+            panic!("holder dies");
+        })
+        .join();
+        // the registry keeps handing out metrics and snapshotting
+        reg.counter("survivor").inc();
+        reg.gauge("after").set(1);
+        reg.histogram("lat").observe_us(3);
+        let snap = reg.snapshot();
+        assert!(snap.contains(&("survivor".to_string(), 2)));
+        assert!(!reg.prometheus().is_empty());
     }
 
     #[test]

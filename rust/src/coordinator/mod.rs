@@ -8,6 +8,7 @@
 //! concurrently — exactly what the experiment harness does), and the
 //! resulting topic models are served over a line protocol.
 
+pub mod admin;
 pub mod cache;
 pub mod ingest;
 pub mod jobs;
@@ -16,10 +17,11 @@ pub mod model;
 pub mod pool;
 pub mod server;
 
+pub use admin::{admin_command, AdminServer};
 pub use cache::LruCache;
 pub use ingest::{ingest_stream, IngestConfig};
 pub use jobs::{JobId, JobManager, JobSpec, JobStatus};
 pub use metrics::MetricsRegistry;
-pub use model::TopicModel;
+pub use model::{Provenance, TopicModel};
 pub use pool::{default_threads, ThreadPool};
-pub use server::{ServeOptions, ServerState, TopicServer};
+pub use server::{watch_model, ActiveModel, ServeOptions, ServerState, TopicServer};

@@ -4,9 +4,108 @@
 
 use crate::eval::topics::top_terms;
 use crate::io::Snapshot;
-use crate::nmf::{FoldIn, FoldInScratch};
+use crate::nmf::{FoldIn, FoldInScratch, NmfOptions, SparsityMode};
 use crate::sparse::{Csr, TieMode};
 use crate::text::normalize_term;
+
+/// Where the active model came from — captured when a snapshot is loaded
+/// (or a freshly factorized model installed) and served verbatim by the
+/// admin listener's `PROVENANCE` command. [`Snapshot`] is consumed by
+/// [`TopicModel::from_snapshot`], so this record is taken *before*
+/// construction and travels with the model through every hot swap.
+#[derive(Clone, Debug, Default)]
+pub struct Provenance {
+    /// snapshot file the model was loaded from (None: factorized in-process)
+    pub path: Option<String>,
+    /// CRC-32 of the snapshot file bytes (None: factorized in-process)
+    pub file_crc32: Option<u32>,
+    /// training corpus digest pinned by the snapshot / corpus
+    pub corpus_digest: Option<u64>,
+    pub k: usize,
+    pub n_terms: usize,
+    pub n_docs: usize,
+    /// compact [`SparsityMode`] label, see [`sparsity_label`]
+    pub sparsity: String,
+    /// compact solver-options label, see [`options_label`]
+    pub options: String,
+    /// serving-side fold-in nonzero budget (None = unenforced)
+    pub foldin_t: Option<usize>,
+    /// wall-clock load time, milliseconds since the unix epoch
+    pub loaded_unix_ms: u64,
+}
+
+impl Provenance {
+    /// Capture a snapshot's provenance (call before
+    /// [`TopicModel::from_snapshot`] consumes it).
+    pub fn from_snapshot(snap: &Snapshot, path: Option<&str>, file_crc32: Option<u32>) -> Self {
+        Provenance {
+            path: path.map(str::to_string),
+            file_crc32,
+            corpus_digest: Some(snap.corpus_digest),
+            k: snap.options.k,
+            n_terms: snap.terms.len(),
+            n_docs: snap.v.rows,
+            sparsity: sparsity_label(&snap.options.sparsity),
+            options: options_label(&snap.options),
+            foldin_t: snap.t_v(),
+            loaded_unix_ms: now_unix_ms(),
+        }
+    }
+
+    /// Provenance of a model factorized (or constructed) in-process.
+    pub fn from_model(model: &TopicModel) -> Self {
+        Provenance {
+            path: None,
+            file_crc32: None,
+            corpus_digest: None,
+            k: model.k(),
+            n_terms: model.terms.len(),
+            n_docs: model.v.rows,
+            sparsity: String::new(),
+            options: String::new(),
+            foldin_t: model.foldin_budget(),
+            loaded_unix_ms: now_unix_ms(),
+        }
+    }
+}
+
+/// Compact, space-free [`SparsityMode`] label for one-line admin output.
+pub fn sparsity_label(mode: &SparsityMode) -> String {
+    fn opt(v: Option<usize>) -> String {
+        v.map_or_else(|| "-".into(), |t| t.to_string())
+    }
+    match mode {
+        SparsityMode::None => "none".into(),
+        SparsityMode::Global { t_u, t_v } => {
+            format!("global(t_u={},t_v={})", opt(*t_u), opt(*t_v))
+        }
+        SparsityMode::PerColumn { t_u_col, t_v_col } => {
+            format!("percol(t_u_col={},t_v_col={})", opt(*t_u_col), opt(*t_v_col))
+        }
+        SparsityMode::Threshold { tau_u, tau_v } => format!(
+            "threshold(tau_u={},tau_v={})",
+            tau_u.map_or_else(|| "-".into(), |t| t.to_string()),
+            tau_v.map_or_else(|| "-".into(), |t| t.to_string()),
+        ),
+    }
+}
+
+/// Compact, space-free solver-options label for one-line admin output
+/// (the machine-local knobs — threads, block height, checkpointing — are
+/// deliberately omitted: they are not part of what the model *is*).
+pub fn options_label(opts: &NmfOptions) -> String {
+    format!(
+        "iters={},tol={},seed={:#x},tie={:?}",
+        opts.max_iters, opts.tol, opts.seed, opts.tie_mode
+    )
+}
+
+fn now_unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis().min(u64::MAX as u128) as u64)
+        .unwrap_or(0)
+}
 
 #[derive(Clone, Debug)]
 pub struct TopicModel {
@@ -289,6 +388,70 @@ mod tests {
         assert!(r[0].1 > 0.99, "uppercase query missed the vocabulary: {r:?}");
         let folded = m.fold_in(&[("ΟΔΟΣ", 2.0)]);
         assert!(!folded.is_empty(), "fold-in missed the vocabulary");
+    }
+
+    #[test]
+    fn provenance_labels_are_single_token() {
+        use crate::nmf::{NmfOptions, SparsityMode};
+        assert_eq!(sparsity_label(&SparsityMode::None), "none");
+        assert_eq!(
+            sparsity_label(&SparsityMode::both(30, 40)),
+            "global(t_u=30,t_v=40)"
+        );
+        assert_eq!(
+            sparsity_label(&SparsityMode::u_only(9)),
+            "global(t_u=9,t_v=-)"
+        );
+        // admin responses are single-line, space-separated key=value
+        // pairs, so neither label may contain whitespace
+        for mode in [
+            SparsityMode::None,
+            SparsityMode::both(1, 2),
+            SparsityMode::PerColumn {
+                t_u_col: Some(3),
+                t_v_col: None,
+            },
+            SparsityMode::Threshold {
+                tau_u: Some(0.5),
+                tau_v: None,
+            },
+        ] {
+            assert!(!sparsity_label(&mode).contains(' '), "{mode:?}");
+        }
+        assert!(!options_label(&NmfOptions::new(2)).contains(' '));
+    }
+
+    #[test]
+    fn provenance_from_snapshot_captures_the_digest_and_budget() {
+        use crate::nmf::{factorize, NmfOptions, SparsityMode};
+        use crate::text::TdmBuilder;
+        let mut b = TdmBuilder::new();
+        b.add_text("coffee crop coffee", None);
+        b.add_text("atoms electrons atoms", None);
+        let tdm = b.freeze();
+        let opts = NmfOptions::new(2)
+            .with_iters(3)
+            .with_sparsity(SparsityMode::both(10, 12));
+        let r = factorize(&tdm, &opts);
+        let snap = crate::io::Snapshot::new(
+            opts,
+            r.u,
+            r.v,
+            &tdm,
+            crate::io::Progress::default(),
+        );
+        let prov = Provenance::from_snapshot(&snap, Some("m.esnmf"), Some(0xdead_beef));
+        assert_eq!(prov.corpus_digest, Some(snap.corpus_digest));
+        assert_eq!(prov.k, 2);
+        assert_eq!(prov.n_terms, tdm.terms.len());
+        assert_eq!(prov.foldin_t, Some(12));
+        assert_eq!(prov.file_crc32, Some(0xdead_beef));
+        assert!(prov.loaded_unix_ms > 0);
+        let m = TopicModel::from_snapshot(snap);
+        let from_model = Provenance::from_model(&m);
+        assert_eq!(from_model.k, 2);
+        assert_eq!(from_model.foldin_t, Some(12));
+        assert_eq!(from_model.corpus_digest, None);
     }
 
     #[test]

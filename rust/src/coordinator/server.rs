@@ -32,17 +32,34 @@
 //! CLASSIFY / FOLDIN responses are memoized in a shared LRU keyed by
 //! [`normalize_query`]; hits/misses and per-command latency histograms
 //! land in the [`MetricsRegistry`] and are visible through `STATS`.
+//! Identical cacheable misses in flight at the same moment are
+//! single-flighted: one request runs the solve, the rest wait on its
+//! result (`server.cache.stampede_suppressed` counts the waiters).
+//!
+//! # Hot model swap
+//!
+//! The active [`TopicModel`] lives behind an `ArcSwap`-style slot
+//! ([`ServerState::swap_model`]): each request clones the `Arc` once and
+//! serves its whole lifetime — classification, fold-in, cache key — from
+//! that one snapshot, so a concurrent swap can never show a request two
+//! models. Cache keys carry the model *generation*, making a stale
+//! cross-generation hit impossible by construction; the swap additionally
+//! clears the LRU to reclaim the dead generation's memory. Swaps are
+//! driven by the admin listener's `RELOAD <path>` command
+//! ([`super::admin`]) or by [`watch_model`] mtime polling; a failed
+//! reload leaves the previous model serving untouched.
 
 use super::cache::LruCache;
-use super::metrics::{Counter, Gauge, Histogram, MetricsRegistry};
-use super::model::TopicModel;
+use super::metrics::{lock_unpoisoned, Counter, Gauge, Histogram, MetricsRegistry};
+use super::model::{Provenance, TopicModel};
 use super::pool::ThreadPool;
 use crate::nmf::FoldInScratch;
 use crate::Result;
+use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -89,18 +106,54 @@ const LATENCY_LABELS: [&str; 8] = [
     "topics", "topterms", "classify", "foldin", "docs", "stats", "ping", "other",
 ];
 
+/// One installed model: the factors, the swap generation that installed
+/// them, and where they came from. Requests and the admin listener clone
+/// the containing `Arc` once and read a consistent triple for as long as
+/// they hold it, however many swaps land meanwhile.
+pub struct ActiveModel {
+    pub model: Arc<TopicModel>,
+    /// monotone swap counter; 0 = the model the server started with
+    pub generation: u64,
+    pub provenance: Provenance,
+}
+
+/// A waiting place for one in-flight cacheable computation: the first
+/// computer publishes its response here and notifies; duplicate requests
+/// block on the condvar instead of re-running the solve.
+type InflightSlot = Arc<(Mutex<Option<String>>, Condvar)>;
+
 /// Everything a connection handler needs, shared across the pool. The
 /// request-path metric handles (counters, per-command histograms) are
 /// resolved once here so [`respond`] never touches the registry's name
-/// maps — the hot path is lock-free except for the LRU itself.
+/// maps — the hot path is lock-free except for the model slot and the
+/// LRU. Every mutex is taken through
+/// [`lock_unpoisoned`](super::metrics::lock_unpoisoned): a panicking
+/// request thread must cost one response, never the server.
 pub struct ServerState {
-    pub model: Arc<TopicModel>,
     pub metrics: MetricsRegistry,
+    /// the hot-swap slot; see the module docs
+    active: Mutex<Arc<ActiveModel>>,
+    /// allocator for [`ActiveModel::generation`]
+    generation: AtomicU64,
+    /// false after a corpus-store fault, until a successful swap installs
+    /// a servable model again (`READY` on the admin listener)
+    ready: AtomicBool,
+    /// fast-path flag for `fault` (checked per request, lock-free)
+    faulted: AtomicBool,
+    /// first recorded corpus-store fault, served as `ERR corpus store
+    /// unavailable: ...` to model queries
+    fault: Mutex<Option<String>>,
     cache: Mutex<LruCache>,
     cache_enabled: bool,
+    /// single-flight table: normalized+generation-tagged key → the slot
+    /// duplicate concurrent misses wait on
+    inflight: Mutex<HashMap<String, InflightSlot>>,
     requests: Arc<Counter>,
     cache_hits: Arc<Counter>,
     cache_misses: Arc<Counter>,
+    stampede_suppressed: Arc<Counter>,
+    swaps: Arc<Counter>,
+    swap_failures: Arc<Counter>,
     /// parallel to [`LATENCY_LABELS`]
     latency: Vec<Arc<Histogram>>,
     /// pooled fold-in scratch buffers, one checked out per in-flight
@@ -120,11 +173,24 @@ impl ServerState {
             .iter()
             .map(|l| metrics.histogram(&format!("server.latency.{l}")))
             .collect();
+        let provenance = Provenance::from_model(&model);
         ServerState {
-            model,
+            active: Mutex::new(Arc::new(ActiveModel {
+                model,
+                generation: 0,
+                provenance,
+            })),
+            generation: AtomicU64::new(0),
+            ready: AtomicBool::new(true),
+            faulted: AtomicBool::new(false),
+            fault: Mutex::new(None),
+            inflight: Mutex::new(HashMap::new()),
             requests: metrics.counter("server.requests"),
             cache_hits: metrics.counter("server.cache.hits"),
             cache_misses: metrics.counter("server.cache.misses"),
+            stampede_suppressed: metrics.counter("server.cache.stampede_suppressed"),
+            swaps: metrics.counter("server.model.swaps"),
+            swap_failures: metrics.counter("server.model.swap_failures"),
             scratch_allocs: metrics.counter("server.foldin.scratch_allocs"),
             latency,
             metrics,
@@ -134,22 +200,145 @@ impl ServerState {
         }
     }
 
+    /// Replace the startup provenance (the `--model` serve path captures
+    /// the snapshot's provenance before constructing the model; builder
+    /// style so it composes with [`ServerState::new`]).
+    pub fn with_provenance(self, provenance: Provenance) -> Self {
+        {
+            let mut slot = lock_unpoisoned(&self.active);
+            *slot = Arc::new(ActiveModel {
+                model: Arc::clone(&slot.model),
+                generation: slot.generation,
+                provenance,
+            });
+        }
+        self
+    }
+
+    /// The active model snapshot. One clone per request: everything the
+    /// request does (answering, cache keying) reads this one value.
+    pub fn active(&self) -> Arc<ActiveModel> {
+        Arc::clone(&lock_unpoisoned(&self.active))
+    }
+
+    /// Convenience: just the active [`TopicModel`].
+    pub fn model(&self) -> Arc<TopicModel> {
+        Arc::clone(&lock_unpoisoned(&self.active).model)
+    }
+
+    /// Current swap generation (0 until the first successful swap).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    /// Readiness for the admin listener: true while a servable model is
+    /// installed and no corpus-store fault is outstanding.
+    pub fn ready(&self) -> bool {
+        self.ready.load(Ordering::Relaxed)
+    }
+
+    /// The recorded corpus-store fault, if any.
+    pub fn fault_message(&self) -> Option<String> {
+        if !self.faulted.load(Ordering::Relaxed) {
+            return None;
+        }
+        lock_unpoisoned(&self.fault).clone()
+    }
+
+    /// Record a corpus-store read failure: model queries answer
+    /// `ERR corpus store unavailable: ...` (PING and STATS keep working
+    /// so operators can see the state) and `READY` flips false until a
+    /// successful [`ServerState::swap_model`] installs a fresh model.
+    pub fn set_store_fault(&self, msg: impl Into<String>) {
+        *lock_unpoisoned(&self.fault) = Some(msg.into());
+        self.faulted.store(true, Ordering::Relaxed);
+        self.ready.store(false, Ordering::Relaxed);
+    }
+
+    /// Atomic hot model swap: load and fully validate the `.esnmf` at
+    /// `path` — parse, CRC, and the one-time Gram-inverse precompute all
+    /// happen here, **off** the request path — then install it with a
+    /// single pointer store. In-flight requests finish against the model
+    /// they started with; new requests see the new model and a bumped
+    /// cache generation (plus a cleared LRU, reclaiming the dead
+    /// generation's entries). On error the old model keeps serving,
+    /// fully untouched, and `READY` is unaffected.
+    pub fn swap_model(
+        &self,
+        path: &std::path::Path,
+    ) -> std::result::Result<Arc<ActiveModel>, String> {
+        let (snap, crc) = crate::io::Snapshot::load_with_crc(path).map_err(|e| {
+            self.swap_failures.inc();
+            format!("loading {}: {e}", path.display())
+        })?;
+        let provenance = Provenance::from_snapshot(&snap, path.to_str(), Some(crc));
+        let model = Arc::new(TopicModel::from_snapshot(snap));
+        let generation = self.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        let active = Arc::new(ActiveModel {
+            model,
+            generation,
+            provenance,
+        });
+        *lock_unpoisoned(&self.active) = Arc::clone(&active);
+        // stale hits are already impossible (generation-tagged keys);
+        // clearing reclaims the unreachable old generation's memory
+        lock_unpoisoned(&self.cache).clear();
+        *lock_unpoisoned(&self.fault) = None;
+        self.faulted.store(false, Ordering::Relaxed);
+        self.ready.store(true, Ordering::Relaxed);
+        self.swaps.inc();
+        Ok(active)
+    }
+
     /// Current number of cached responses (for tests / introspection).
     pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        lock_unpoisoned(&self.cache).len()
     }
 
     /// Run one command line through a pooled scratch: pop (or create and
     /// count) a [`FoldInScratch`], answer, return it to the pool.
-    fn run_command(&self, line: &str) -> String {
-        let mut scratch = self.foldin_scratch.lock().unwrap().pop().unwrap_or_else(|| {
+    fn run_command(&self, model: &TopicModel, line: &str) -> String {
+        let mut scratch = lock_unpoisoned(&self.foldin_scratch).pop().unwrap_or_else(|| {
             self.scratch_allocs.inc();
             FoldInScratch::default()
         });
-        let response = handle_command_with(&self.model, &self.metrics, line, &mut scratch);
-        self.foldin_scratch.lock().unwrap().push(scratch);
+        let response = handle_command_with(model, &self.metrics, line, &mut scratch);
+        lock_unpoisoned(&self.foldin_scratch).push(scratch);
         response
     }
+}
+
+/// Poll `path`'s mtime every `interval` and hot-swap the model whenever
+/// it changes (`esnmf serve --watch-model`). Failed reloads — a writer
+/// mid-copy, a corrupt file — log a warning and leave the old model
+/// serving; the next mtime change retries. Detached daemon thread, runs
+/// for the process lifetime.
+pub fn watch_model(state: Arc<ServerState>, path: std::path::PathBuf, interval: Duration) {
+    let _ = std::thread::Builder::new()
+        .name("esnmf-watch".into())
+        .spawn(move || {
+            let mtime = |p: &std::path::Path| p.metadata().and_then(|m| m.modified()).ok();
+            let mut last = mtime(&path);
+            loop {
+                std::thread::sleep(interval);
+                let now = mtime(&path);
+                if now.is_some() && now != last {
+                    last = now;
+                    match state.swap_model(&path) {
+                        Ok(active) => crate::log_info!(
+                            "server",
+                            "hot-swapped model from {} (generation {})",
+                            path.display(),
+                            active.generation
+                        ),
+                        Err(e) => crate::log_warn!(
+                            "server",
+                            "--watch-model reload failed, keeping the old model: {e}"
+                        ),
+                    }
+                }
+            }
+        });
 }
 
 /// Canonical cache key for the cacheable commands (CLASSIFY / FOLDIN):
@@ -303,43 +492,115 @@ pub fn handle_command_with(
 }
 
 /// Handle one line through the full request path: request counter, LRU
-/// cache for CLASSIFY/FOLDIN (hit/miss counters), and the per-command
-/// latency histogram. Public so tests can drive the exact serving path
-/// without a socket.
+/// cache for CLASSIFY/FOLDIN (hit/miss counters, generation-tagged keys,
+/// single-flight), and the per-command latency histogram. Public so tests
+/// can drive the exact serving path without a socket.
 pub fn respond(state: &ServerState, line: &str) -> String {
     let start = Instant::now();
     let line = line.trim();
     state.requests.inc();
+    let response = respond_inner(state, line);
+    state.latency[latency_label_idx(line)].observe(start.elapsed());
+    response
+}
+
+/// Removes the computer's in-flight entry and wakes its waiters on scope
+/// exit — **including an unwind** out of the solve, in which case the
+/// waiters get an ERR instead of blocking forever.
+struct InflightGuard<'a> {
+    state: &'a ServerState,
+    key: &'a str,
+    slot: &'a InflightSlot,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        lock_unpoisoned(&self.state.inflight).remove(self.key);
+        let (result, cv) = &**self.slot;
+        let mut published = lock_unpoisoned(result);
+        if published.is_none() {
+            *published = Some("ERR request failed".into());
+        }
+        drop(published);
+        cv.notify_all();
+    }
+}
+
+fn respond_inner(state: &ServerState, line: &str) -> String {
+    // a recorded corpus-store fault fails model queries fast; PING and
+    // STATS keep answering so operators can observe the state
+    if state.faulted.load(Ordering::Relaxed) {
+        let cmd = line.split_whitespace().next().unwrap_or("");
+        if !cmd.eq_ignore_ascii_case("PING") && !cmd.eq_ignore_ascii_case("STATS") {
+            if let Some(msg) = state.fault_message() {
+                return format!("ERR corpus store unavailable: {msg}");
+            }
+        }
+    }
+    // one Arc clone pins model + generation for this whole request: a
+    // concurrent swap can neither mix models within a response nor let a
+    // response computed against the old model satisfy a new-generation
+    // cache lookup (the key below carries `active.generation`)
+    let active = state.active();
     // normalization is pure overhead when the cache is off, so gate first
     let key = if state.cache_enabled {
-        normalize_query(line)
+        normalize_query(line).map(|q| format!("g{} {q}", active.generation))
     } else {
         None
     };
-    let response = match key {
-        Some(key) => {
-            let cached = state.cache.lock().unwrap().get(&key);
-            match cached {
-                Some(hit) => {
-                    state.cache_hits.inc();
-                    hit
-                }
-                None => {
-                    state.cache_misses.inc();
-                    let fresh = state.run_command(line);
-                    // never cache ERR: malformed lines must not be able to
-                    // evict legitimate entries
-                    if fresh.starts_with("OK") {
-                        state.cache.lock().unwrap().insert(key, fresh.clone());
-                    }
-                    fresh
-                }
+    let Some(key) = key else {
+        return state.run_command(&active.model, line);
+    };
+    if let Some(hit) = lock_unpoisoned(&state.cache).get(&key) {
+        state.cache_hits.inc();
+        return hit;
+    }
+    // single-flight: the first miss for a key computes, concurrent
+    // duplicates wait on its published result instead of re-running the
+    // solve (a stampede of identical FOLDINs used to run N solves)
+    let claim = {
+        let mut inflight = lock_unpoisoned(&state.inflight);
+        match inflight.get(&key) {
+            Some(slot) => Err(Arc::clone(slot)),
+            None => {
+                let slot: InflightSlot = Arc::new((Mutex::new(None), Condvar::new()));
+                inflight.insert(key.clone(), Arc::clone(&slot));
+                Ok(slot)
             }
         }
-        None => state.run_command(line),
     };
-    state.latency[latency_label_idx(line)].observe(start.elapsed());
-    response
+    match claim {
+        Err(slot) => {
+            // waiters account as hits: every cacheable request is still
+            // exactly one hit or one miss, and the solve ran once
+            state.stampede_suppressed.inc();
+            state.cache_hits.inc();
+            let (result, cv) = &*slot;
+            let mut published = lock_unpoisoned(result);
+            while published.is_none() {
+                published = cv
+                    .wait(published)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+            published.clone().expect("published single-flight result")
+        }
+        Ok(slot) => {
+            state.cache_misses.inc();
+            let _guard = InflightGuard {
+                state,
+                key: &key,
+                slot: &slot,
+            };
+            let fresh = state.run_command(&active.model, line);
+            // never cache ERR: malformed lines must not be able to
+            // evict legitimate entries (waiters still receive the ERR)
+            if fresh.starts_with("OK") {
+                lock_unpoisoned(&state.cache).insert(key.clone(), fresh.clone());
+            }
+            *lock_unpoisoned(&slot.0) = Some(fresh.clone());
+            fresh
+        }
+    }
 }
 
 fn parse_batch_n(tok: Option<&str>, extra: Option<&str>) -> std::result::Result<usize, String> {
@@ -355,15 +616,16 @@ fn parse_batch_n(tok: Option<&str>, extra: Option<&str>) -> std::result::Result<
 /// Minimal buffered line reader that survives read timeouts: a partial
 /// line stays buffered across `WouldBlock`/`TimedOut`, so the connection
 /// loop can poll the stop flag between read attempts. (`BufReader` makes
-/// no such guarantee for `read_line` under errors.)
-struct LineReader<R: Read> {
+/// no such guarantee for `read_line` under errors.) Shared with the
+/// admin listener ([`super::admin`]).
+pub(crate) struct LineReader<R: Read> {
     inner: R,
     buf: Vec<u8>,
     start: usize,
 }
 
 impl<R: Read> LineReader<R> {
-    fn new(inner: R) -> Self {
+    pub(crate) fn new(inner: R) -> Self {
         LineReader {
             inner,
             buf: Vec::new(),
@@ -374,7 +636,7 @@ impl<R: Read> LineReader<R> {
     /// Next newline-terminated line without the terminator (a trailing
     /// `\r` is stripped). `Ok(None)` = clean EOF; timeouts bubble up as
     /// errors with any partial line preserved for the next call.
-    fn read_line(&mut self) -> std::io::Result<Option<String>> {
+    pub(crate) fn read_line(&mut self) -> std::io::Result<Option<String>> {
         loop {
             if let Some(pos) = self.buf[self.start..].iter().position(|&b| b == b'\n') {
                 let end = self.start + pos;
@@ -422,7 +684,7 @@ impl<R: Read> LineReader<R> {
     }
 }
 
-fn is_timeout(e: &std::io::Error) -> bool {
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
 }
 
@@ -530,6 +792,7 @@ pub struct TopicServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     join: Option<JoinHandle<()>>,
+    state: Arc<ServerState>,
 }
 
 impl TopicServer {
@@ -552,13 +815,26 @@ impl TopicServer {
         metrics: MetricsRegistry,
         opts: ServeOptions,
     ) -> Result<TopicServer> {
+        let state = Arc::new(ServerState::new(model, metrics, opts.cache_size));
+        TopicServer::serve_state(addr, state, opts.threads)
+    }
+
+    /// Lowest-level constructor: serve an externally built
+    /// [`ServerState`] — the `esnmf serve` driver uses this so the same
+    /// state can be shared with the admin listener and the
+    /// [`watch_model`] poller.
+    pub fn serve_state(
+        addr: &str,
+        state: Arc<ServerState>,
+        threads: usize,
+    ) -> Result<TopicServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
-        let state = Arc::new(ServerState::new(model, metrics, opts.cache_size));
-        let pool_size = opts.threads.max(1);
+        let shared = Arc::clone(&state);
+        let pool_size = threads.max(1);
         let join = std::thread::Builder::new()
             .name("esnmf-server".into())
             .spawn(move || {
@@ -609,11 +885,19 @@ impl TopicServer {
             addr: local,
             stop,
             join: Some(join),
+            state: shared,
         })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// The shared serving state — hand this to the admin listener
+    /// ([`super::admin::AdminServer`]), the [`watch_model`] poller, or a
+    /// test that wants to drive swaps / faults directly.
+    pub fn state(&self) -> Arc<ServerState> {
+        Arc::clone(&self.state)
     }
 
     /// Stop accepting, drain in-flight requests, and join every worker.
@@ -904,6 +1188,196 @@ mod tests {
         assert_eq!(r.read_line().unwrap(), Some("STATS".into()));
     }
 
-    // Full TCP round-trips (concurrency, BATCH, FOLDIN, shutdown) live in
-    // rust/tests/integration_server.rs.
+    /// `model()` with the two topics swapped — "coffee crop" classifies
+    /// to topic 1 instead of 0, so a response is attributable to exactly
+    /// one of the two models.
+    fn swapped_model() -> TopicModel {
+        let u = Csr::from_dense(3, 2, &[0.0, 0.9, 0.0, 0.4, 0.7, 0.0]);
+        let v = Csr::from_dense(2, 2, &[0.0, 1.0, 1.0, 0.0]);
+        TopicModel::new(
+            u,
+            v,
+            vec!["coffee".into(), "crop".into(), "electrons".into()],
+        )
+    }
+
+    fn save_snapshot(name: &str, m: &TopicModel) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!(
+            "esnmf_server_test_{}_{name}.esnmf",
+            std::process::id()
+        ));
+        let snap = crate::io::Snapshot {
+            options: crate::nmf::NmfOptions::new(m.k()),
+            u: m.u.clone(),
+            v: m.v.clone(),
+            terms: m.terms.clone(),
+            doc_labels: None,
+            label_names: Vec::new(),
+            corpus_digest: 7,
+            progress: crate::io::Progress::default(),
+        };
+        snap.save(&path).unwrap();
+        path
+    }
+
+    #[test]
+    fn poisoned_server_locks_recover_and_serving_continues() {
+        let s = Arc::new(state(16));
+        assert!(respond(&s, "CLASSIFY coffee crop").starts_with("OK"));
+        // simulate a request thread dying mid-request while holding every
+        // request-path lock — this used to poison them all and turn each
+        // subsequent request into a panic (a permanent outage)
+        let s2 = Arc::clone(&s);
+        let _ = std::thread::spawn(move || {
+            let _cache = s2.cache.lock().unwrap();
+            let _scratch = s2.foldin_scratch.lock().unwrap();
+            let _active = s2.active.lock().unwrap();
+            let _fault = s2.fault.lock().unwrap();
+            let _inflight = s2.inflight.lock().unwrap();
+            panic!("request handler dies mid-request");
+        })
+        .join();
+        // every path still answers: cache hit, fresh solve, uncached
+        assert!(respond(&s, "CLASSIFY coffee crop").starts_with("OK"));
+        assert!(respond(&s, "FOLDIN coffee:2").starts_with("OK"));
+        assert!(respond(&s, "TOPICS").starts_with("OK"));
+        assert!(s.cache_len() >= 1);
+        assert!(s.ready());
+        assert_eq!(s.active().generation, 0);
+    }
+
+    #[test]
+    fn single_flight_waiters_share_the_computers_result() {
+        // deterministic: pre-claim the in-flight slot so the request is
+        // forced onto the waiter path, then publish a sentinel result
+        let s = Arc::new(state(16));
+        let key = format!("g0 {}", normalize_query("CLASSIFY coffee crop").unwrap());
+        let slot: InflightSlot = Arc::new((Mutex::new(None), Condvar::new()));
+        lock_unpoisoned(&s.inflight).insert(key.clone(), Arc::clone(&slot));
+        let s2 = Arc::clone(&s);
+        let waiter = std::thread::spawn(move || respond(&s2, "classify CROP coffee"));
+        std::thread::sleep(Duration::from_millis(50));
+        *lock_unpoisoned(&slot.0) = Some("OK published-by-test".into());
+        slot.1.notify_all();
+        lock_unpoisoned(&s.inflight).remove(&key);
+        assert_eq!(waiter.join().unwrap(), "OK published-by-test");
+        assert_eq!(
+            s.metrics.counter("server.cache.stampede_suppressed").get(),
+            1
+        );
+        // the waiter accounts as a hit, keeping hit+miss == cacheable
+        assert_eq!(s.metrics.counter("server.cache.hits").get(), 1);
+        assert_eq!(s.metrics.counter("server.cache.misses").get(), 0);
+    }
+
+    #[test]
+    fn concurrent_identical_misses_solve_once() {
+        let s = Arc::new(state(64));
+        let n = 8;
+        let barrier = Arc::new(std::sync::Barrier::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                let b = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    b.wait();
+                    respond(&s, "FOLDIN coffee:2 crop:1")
+                })
+            })
+            .collect();
+        let answers: Vec<String> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(answers.iter().all(|a| a == &answers[0]), "{answers:?}");
+        assert!(answers[0].starts_with("OK"), "{}", answers[0]);
+        // the solve ran exactly once however the threads interleaved:
+        // colliders wait on the in-flight slot, stragglers hit the cache
+        assert_eq!(
+            s.metrics.counter("server.cache.misses").get(),
+            1,
+            "identical concurrent misses must run one solve"
+        );
+        assert_eq!(s.metrics.counter("server.cache.hits").get(), n as u64 - 1);
+    }
+
+    #[test]
+    fn store_fault_fails_model_queries_and_flips_ready() {
+        let s = state(16);
+        assert!(s.ready());
+        assert!(s.fault_message().is_none());
+        s.set_store_fault("corpus store i/o: short read");
+        assert!(!s.ready());
+        let r = respond(&s, "CLASSIFY coffee");
+        assert!(r.starts_with("ERR corpus store unavailable:"), "{r}");
+        assert!(respond(&s, "FOLDIN coffee:1").starts_with("ERR corpus store"));
+        assert!(respond(&s, "TOPICS").starts_with("ERR corpus store"));
+        // observability survives the fault
+        assert_eq!(respond(&s, "PING"), "OK pong");
+        assert!(respond(&s, "STATS").starts_with("OK"));
+        // and the requests were still counted and timed
+        assert_eq!(s.metrics.counter("server.requests").get(), 5);
+    }
+
+    #[test]
+    fn hot_swap_bumps_generation_and_invalidates_the_cache() {
+        let s = state(16);
+        let old = respond(&s, "CLASSIFY coffee crop");
+        assert!(old.contains("topic:0"), "{old}");
+        assert_eq!(s.cache_len(), 1);
+        let path = save_snapshot("swap", &swapped_model());
+        let active = s.swap_model(&path).unwrap();
+        assert_eq!(active.generation, 1);
+        assert_eq!(s.generation(), 1);
+        assert_eq!(s.cache_len(), 0, "swap must clear the response cache");
+        // the same cacheable query now answers from the new model — a
+        // cross-generation stale hit would resurrect topic:0
+        let new = respond(&s, "CLASSIFY coffee crop");
+        assert!(new.contains("topic:1"), "stale cross-generation hit: {new}");
+        assert_eq!(s.metrics.counter("server.model.swaps").get(), 1);
+        // provenance travels with the swap
+        assert_eq!(active.provenance.corpus_digest, Some(7));
+        assert!(active.provenance.path.as_deref().unwrap().ends_with(".esnmf"));
+        assert!(active.provenance.file_crc32.is_some());
+        assert_eq!(active.provenance.k, 2);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn failed_swap_leaves_the_old_model_serving_and_ready() {
+        let s = state(16);
+        let before = respond(&s, "CLASSIFY coffee crop");
+        let path = std::env::temp_dir().join(format!(
+            "esnmf_server_test_{}_corrupt.esnmf",
+            std::process::id()
+        ));
+        std::fs::write(&path, b"definitely not a snapshot").unwrap();
+        let err = s.swap_model(&path).unwrap_err();
+        assert!(err.contains(&path.display().to_string()), "{err}");
+        assert_eq!(s.generation(), 0);
+        assert!(
+            s.ready(),
+            "a failed reload must not flip READY for the still-serving model"
+        );
+        assert_eq!(respond(&s, "CLASSIFY coffee crop"), before);
+        assert_eq!(s.metrics.counter("server.model.swap_failures").get(), 1);
+        assert_eq!(s.metrics.counter("server.model.swaps").get(), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn successful_swap_clears_a_store_fault() {
+        let s = state(16);
+        s.set_store_fault("corpus store i/o: short read");
+        assert!(!s.ready());
+        assert!(respond(&s, "CLASSIFY coffee").starts_with("ERR corpus store"));
+        let path = save_snapshot("fault_swap", &swapped_model());
+        s.swap_model(&path).unwrap();
+        assert!(s.ready());
+        assert!(s.fault_message().is_none());
+        assert!(respond(&s, "CLASSIFY coffee").starts_with("OK"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    // Full TCP round-trips (concurrency, BATCH, FOLDIN, shutdown, hot
+    // swap under load) live in rust/tests/integration_server.rs and
+    // rust/tests/integration_serving_plane.rs.
 }

@@ -404,6 +404,18 @@ impl Snapshot {
         Snapshot::from_bytes(&bytes)
     }
 
+    /// [`Self::load`], also returning the CRC-32 of the whole file. The
+    /// serving plane records this as provenance: an operator can match
+    /// the `PROVENANCE` admin line against `crc32 <file>` of the
+    /// artifact they meant to deploy. One read, one checksum pass — no
+    /// second disk touch.
+    pub fn load_with_crc(path: &Path) -> Result<(Snapshot, u32), SnapshotError> {
+        let bytes = std::fs::read(path)?;
+        let crc = crc32(&bytes);
+        let snap = Snapshot::from_bytes(&bytes)?;
+        Ok((snap, crc))
+    }
+
     /// Refuse to continue training against `tdm` unless it is the exact
     /// corpus this snapshot was trained on.
     pub fn check_corpus(&self, tdm: &TermDocMatrix) -> Result<(), SnapshotError> {

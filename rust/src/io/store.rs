@@ -48,10 +48,20 @@
 //! indexes all surface as a typed [`StoreError`]. Shard payloads are
 //! CRC-checked and structurally validated on every read;
 //! [`CorpusStore::verify`] runs that check over the whole file up front.
-//! A shard that turns unreadable *mid-factorization* (disk failure, or a
-//! bit flip after `open`) panics with the store path in the message —
-//! by then hours of compute may be in flight and there is no factor to
-//! return; validate up front with `verify` where that matters.
+//!
+//! A shard that turns unreadable *mid-run* (disk failure, or a bit flip
+//! after `open`) must not panic: by then hours of compute may be in
+//! flight, and the `RowSource` contract ([`RowSource::load`]) has no
+//! error channel by design — the hot loops stay branch-free. Instead the
+//! failed read is **latched**: the first [`StoreError`] is recorded in a
+//! poison slot shared by both orientations, and the unreadable shard is
+//! served as a shape-correct, all-empty row range (empty rows are
+//! skipped by every streaming kernel, so the solver finishes its step
+//! on partial data instead of crashing). Callers that care — the ALS
+//! run loop, the serve path — check [`CorpusStore::error`] between
+//! steps, keep their last consistent state, and surface the fault as an
+//! error; results computed after a latched fault are never silently
+//! reported as clean.
 
 use super::snapshot::crc32;
 use super::wire::{self, Reader, WireError};
@@ -61,7 +71,7 @@ use std::fmt;
 use std::fs::File;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, PoisonError};
 
 /// Current format version. Bump on any layout change.
 pub const STORE_VERSION: u16 = 1;
@@ -235,6 +245,9 @@ pub struct ShardedMatrix {
     shard_rows: usize,
     shards: Vec<ShardEntry>,
     resident: Arc<ResidentCounter>,
+    /// first mid-run read failure, latched; shared by both orientations
+    /// of one store so one check observes either stream's fault
+    errors: Arc<Mutex<Option<StoreError>>>,
     token: u64,
 }
 
@@ -293,8 +306,10 @@ impl ShardedMatrix {
     }
 
     /// The cursor's cached parse of shard `sid`, reading it if the cache
-    /// holds a different shard (or another matrix's). Panics on read
-    /// failure — see the module docs' failure model.
+    /// holds a different shard (or another matrix's). A read failure is
+    /// latched (see [`ShardedMatrix::error`]) and served as an all-empty
+    /// row range of the shard's exact shape — see the module docs'
+    /// failure model.
     fn cached<'c>(
         &self,
         slot: &'c mut Option<Box<dyn std::any::Any + Send>>,
@@ -316,7 +331,9 @@ impl ShardedMatrix {
             *slot = None;
             let charge = ResidentCharge::new(&self.resident, self.shards[sid].len);
             let rows = self.read_shard(sid).unwrap_or_else(|e| {
-                panic!("corpus store {}: {e}", self.path.display());
+                self.latch_error(sid, e);
+                let entry = &self.shards[sid];
+                empty_rows(entry.row_hi - entry.row_lo, self.cols)
             });
             *slot = Some(Box::new(CachedShard {
                 key: (self.token, sid),
@@ -330,6 +347,44 @@ impl ShardedMatrix {
             .downcast_ref::<CachedShard>()
             .unwrap()
             .rows
+    }
+
+    /// Record a mid-run read failure. Only the first fault is kept (it
+    /// is the diagnostic one — later failures are usually the same
+    /// corruption rediscovered by other cursors); every occurrence logs.
+    fn latch_error(&self, sid: usize, e: StoreError) {
+        crate::log_warn!(
+            "store",
+            "corpus store {} shard {sid}: {e} — serving empty rows, fault latched",
+            self.path.display()
+        );
+        let mut latched = self.errors.lock().unwrap_or_else(PoisonError::into_inner);
+        if latched.is_none() {
+            *latched = Some(e);
+        }
+    }
+
+    /// The latched mid-run read failure, if any, rendered for operators.
+    /// Shared with the sibling orientation (one store, one poison slot).
+    pub fn error(&self) -> Option<String> {
+        self.errors
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .as_ref()
+            .map(|e| e.to_string())
+    }
+}
+
+/// A shape-correct CSR holding `rows` empty rows — the sentinel served
+/// for an unreadable shard. Empty rows contribute nothing to any
+/// half-step product and are skipped by the streaming kernels.
+fn empty_rows(rows: usize, cols: usize) -> Csr {
+    Csr {
+        rows,
+        cols,
+        indptr: vec![0; rows + 1],
+        indices: Vec::new(),
+        values: Vec::new(),
     }
 }
 
@@ -418,6 +473,9 @@ pub struct CorpusStore {
     terms_major: ShardedMatrix,
     docs_major: ShardedMatrix,
     resident: Arc<ResidentCounter>,
+    /// the poison slot shared by both orientations (see the module
+    /// docs' failure model)
+    errors: Arc<Mutex<Option<StoreError>>>,
     path: PathBuf,
 }
 
@@ -598,6 +656,7 @@ impl CorpusStore {
 
         let file = Arc::new(file);
         let resident = Arc::new(ResidentCounter::default());
+        let errors = Arc::new(Mutex::new(None));
         let mk = |rows: usize, cols: usize, (shard_rows, shards): (usize, Vec<ShardEntry>)| {
             ShardedMatrix {
                 file: Arc::clone(&file),
@@ -609,6 +668,7 @@ impl CorpusStore {
                 shard_rows,
                 shards,
                 resident: Arc::clone(&resident),
+                errors: Arc::clone(&errors),
                 token: NEXT_MATRIX_TOKEN.fetch_add(1, Ordering::Relaxed),
             }
         };
@@ -621,6 +681,7 @@ impl CorpusStore {
             corpus_digest,
             norm_a_sq,
             resident,
+            errors,
             path: path.to_path_buf(),
         })
     }
@@ -683,6 +744,27 @@ impl CorpusStore {
     /// Resident-corpus accounting shared by both orientations' cursors.
     pub fn resident(&self) -> &ResidentCounter {
         &self.resident
+    }
+
+    /// The latched mid-run read failure across both orientations, if
+    /// any, rendered for operators/logs. While this is `Some`, results
+    /// streamed from the store are incomplete (unreadable shards served
+    /// as empty rows) and must not be reported as clean.
+    pub fn error(&self) -> Option<String> {
+        self.errors
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .as_ref()
+            .map(|e| e.to_string())
+    }
+
+    /// Take ownership of the latched fault (clearing it), e.g. to
+    /// propagate as a typed error after checkpointing last-good state.
+    pub fn take_error(&self) -> Option<StoreError> {
+        self.errors
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .take()
     }
 
     /// Total shard payload bytes (both orientations) — what "the whole
@@ -1057,6 +1139,51 @@ mod tests {
         magic[0] = b'X';
         std::fs::write(&path, &magic).unwrap();
         assert!(matches!(CorpusStore::open(&path), Err(StoreError::BadMagic)));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn post_open_corruption_is_latched_not_a_panic() {
+        let tdm = tiny_tdm();
+        let path = temp("latch");
+        let _ = std::fs::remove_file(&path);
+        CorpusStore::write(&path, &tdm, 2).unwrap();
+        let store = CorpusStore::open(&path).unwrap();
+        assert!(store.error().is_none());
+        // corrupt the last shard payload byte AFTER open — mid-run bit
+        // rot (fs::write truncates the same inode, so the store's open
+        // handle sees the corrupted bytes)
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        // stream the whole docs-major orientation (its final shard is
+        // the corrupted one): the bad shard is served as shape-correct
+        // empty rows instead of panicking mid-run
+        let m = store.docs_major();
+        let mut cur = RowCursor::new();
+        let mut rows_seen = 0;
+        let mut lo = 0;
+        while lo < m.rows() {
+            let hi = (lo + 2).min(m.rows());
+            let view = m.load(lo, hi, &mut cur);
+            rows_seen += view.n_rows();
+            lo = hi;
+        }
+        assert_eq!(rows_seen, m.rows(), "shape stays correct under the fault");
+        // the fault is latched and visible from every handle
+        let msg = store.error().expect("fault latched");
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+        assert!(m.error().is_some());
+        assert!(
+            store.terms_major().error().is_some(),
+            "poison slot is shared across orientations"
+        );
+        assert!(matches!(
+            store.take_error(),
+            Some(StoreError::CrcMismatch { .. })
+        ));
+        assert!(store.error().is_none(), "take_error clears the latch");
         std::fs::remove_file(&path).unwrap();
     }
 

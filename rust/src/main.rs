@@ -17,7 +17,9 @@
 use esnmf::backend::{AlsBackend, BackendKind, NativeBackend, XlaBackend};
 use esnmf::cli::Args;
 use esnmf::config::{Algorithm, ConfigFile, RunConfig};
-use esnmf::coordinator::{MetricsRegistry, TopicModel, TopicServer};
+use esnmf::coordinator::{
+    watch_model, AdminServer, MetricsRegistry, Provenance, ServerState, TopicModel, TopicServer,
+};
 use esnmf::corpus::{self, Scale};
 use esnmf::eval::topics::{format_topic_table, topic_term_table};
 use esnmf::eval::{mean_topic_accuracy, SparsityReport};
@@ -74,7 +76,7 @@ USAGE:
                    [--scale ...] [--seed N] [--fast] [--out results/]
   esnmf serve      [--addr 127.0.0.1:7878] [--model m.esnmf]
                    [--serve-threads N|auto] [--cache-size N] [--foldin-t N]
-                   [factorize flags]
+                   [--admin-port N] [--watch-model] [factorize flags]
 
   --model serves a saved snapshot without factorizing (cold start = one
   file read; refuses on k mismatch, and on digest mismatch when an
@@ -82,16 +84,24 @@ USAGE:
   simultaneously served connections (default 8), --cache-size sizes the
   CLASSIFY/FOLDIN response LRU (0 disables), and --foldin-t caps the
   nonzeros of folded-in document rows (defaults to --t-v, else the
-  snapshot's training budget). Wire protocol: rust/README.md.
+  snapshot's training budget). --admin-port opens a second,
+  loopback-only listener speaking HEALTH / READY / METRICS (Prometheus
+  text) / PROVENANCE / RELOAD <path> — RELOAD hot-swaps the served
+  model atomically without dropping connections. --watch-model polls
+  the --model file's mtime and hot-swaps when it changes. Wire
+  protocol: rust/README.md.
   esnmf gen-corpus [--corpus ...] [--scale ...] [--seed N] --out <dir>
   esnmf artifacts  [--dir artifacts/]
   esnmf bench-check --previous prev.json --current BENCH_smoke.json
-                   [--tolerance 1.10] [--guards max_intermediate_nnz,resident_corpus]
+                   [--tolerance 1.10]
+                   [--guards max_intermediate_nnz,resident_corpus,p99_us]
 
   Compares the guarded (lower-is-better) metrics of two merged
   bench-smoke trajectory documents and exits nonzero when any grew
-  beyond the tolerance factor — the CI memory-regression gate. A
-  missing/empty --previous passes (no baseline yet).
+  beyond the tolerance factor — the CI memory- and latency-regression
+  gate (guards are substring matches; `p99_us` covers the serving-plane
+  latency metrics). A missing/empty --previous passes (no baseline
+  yet).
   esnmf help
 "#;
 
@@ -318,6 +328,27 @@ fn load_any_corpus(cfg: &RunConfig) -> Result<LoadedCorpus> {
 /// resumed run takes its solver math from the snapshot) — `--save-model`
 /// must record those.
 fn run_factorization(
+    cfg: &RunConfig,
+    loaded: &LoadedCorpus,
+) -> Result<(esnmf::nmf::NmfResult, Option<esnmf::nmf::NmfOptions>)> {
+    let out = run_factorization_inner(cfg, loaded)?;
+    // a store fault latched mid-run means the "result" was computed on
+    // partial data: surface the typed error instead of reporting it as
+    // clean (the run loop already checkpointed the last-good state when
+    // --checkpoint-every was on)
+    if let LoadedCorpus::Store(store) = loaded {
+        if let Some(e) = store.take_error() {
+            return Err(anyhow::Error::from(e).context(format!(
+                "corpus store {} turned unreadable mid-run \
+                 (a checkpointed last-good state survives if --checkpoint-every was set)",
+                store.path().display()
+            )));
+        }
+    }
+    Ok(out)
+}
+
+fn run_factorization_inner(
     cfg: &RunConfig,
     loaded: &LoadedCorpus,
 ) -> Result<(esnmf::nmf::NmfResult, Option<esnmf::nmf::NmfOptions>)> {
@@ -550,7 +581,7 @@ fn cmd_bench_check(args: &mut Args) -> Result<()> {
     let tolerance = args
         .parse_or("tolerance", 1.10f64)
         .map_err(anyhow::Error::msg)?;
-    let guards = args.str_or("guards", "max_intermediate_nnz,resident_corpus");
+    let guards = args.str_or("guards", "max_intermediate_nnz,resident_corpus,p99_us");
     args.check_unknown().map_err(anyhow::Error::msg)?;
 
     // only a genuinely *absent* baseline passes (first run, cold cache);
@@ -654,12 +685,27 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     if let Some(v) = args.opt_str("model") {
         cfg.model = Some(v);
     }
+    if let Some(v) = args
+        .opt_parse::<u16>("admin-port")
+        .map_err(anyhow::Error::msg)?
+    {
+        cfg.admin_port = Some(v);
+    }
+    if args.flag("watch-model") {
+        cfg.watch_model = true;
+    }
     args.check_unknown().map_err(anyhow::Error::msg)?;
+    if cfg.watch_model && cfg.model.is_none() {
+        anyhow::bail!("--watch-model requires --model <path.esnmf> (a file to watch)");
+    }
 
-    let model = match cfg.model.clone() {
+    let (model, provenance) = match cfg.model.clone() {
         Some(path) => {
-            // cold start from disk: no corpus generation, no factorization
-            let snap = load_snapshot(&path)?;
+            // cold start from disk: no corpus generation, no
+            // factorization; one read yields both the snapshot and the
+            // file CRC recorded in PROVENANCE
+            let (snap, file_crc) = esnmf::io::Snapshot::load_with_crc(std::path::Path::new(&path))
+                .map_err(|e| anyhow::Error::from(e).context(format!("loading snapshot {path}")))?;
             if let Some(k) = explicit_k {
                 snap.check_k(k)
                     .map_err(|e| anyhow::Error::from(e).context("serve --model"))?;
@@ -688,13 +734,14 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
                 snap.v.rows,
                 snap.options.k
             );
+            let provenance = Provenance::from_snapshot(&snap, Some(&path), Some(file_crc));
             // from_snapshot already defaults the fold-in budget to the
             // snapshot's t_v; only an explicit --foldin-t overrides it
             let mut model = TopicModel::from_snapshot(snap);
             if cfg.foldin_t.is_some() {
                 model = model.with_foldin_budget(cfg.foldin_t);
             }
-            Arc::new(model)
+            (Arc::new(model), provenance)
         }
         None => {
             let loaded = load_any_corpus(&cfg)?;
@@ -703,17 +750,48 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
             if let Some(path) = &cfg.save_model {
                 save_model(path, &cfg, corpus, &r, used_opts.as_ref())?;
             }
-            Arc::new(
+            let digest = corpus.digest();
+            let model = Arc::new(
                 TopicModel::new(r.u, r.v, corpus.terms().to_vec())
                     .with_foldin_budget(cfg.foldin_budget()),
-            )
+            );
+            let mut provenance = Provenance::from_model(&model);
+            provenance.corpus_digest = Some(digest);
+            let trained = used_opts.or_else(|| cfg.nmf_options().ok());
+            if let Some(o) = &trained {
+                provenance.sparsity = esnmf::coordinator::model::sparsity_label(&o.sparsity);
+                provenance.options = esnmf::coordinator::model::options_label(o);
+            }
+            (model, provenance)
         }
     };
     let metrics = MetricsRegistry::new();
     let opts = cfg.serve_options();
     let workers = opts.threads;
     let cache = opts.cache_size;
-    let server = TopicServer::start_with(&addr, model, metrics, opts)?;
+    let state = Arc::new(ServerState::new(model, metrics, cache).with_provenance(provenance));
+    let server = TopicServer::serve_state(&addr, Arc::clone(&state), workers)?;
+    // kept alive for the life of the process (the Drop stops its thread)
+    let _admin = match cfg.admin_port {
+        Some(port) => {
+            let admin = AdminServer::start(&format!("127.0.0.1:{port}"), Arc::clone(&state))?;
+            println!(
+                "admin listener on {} (HEALTH READY METRICS PROVENANCE RELOAD)",
+                admin.addr()
+            );
+            Some(admin)
+        }
+        None => None,
+    };
+    if cfg.watch_model {
+        let path = cfg.model.clone().expect("checked above");
+        watch_model(
+            Arc::clone(&state),
+            std::path::PathBuf::from(path),
+            std::time::Duration::from_secs(2),
+        );
+        println!("watching the model file; edits hot-swap without dropping connections");
+    }
     println!(
         "serving topic queries on {} ({workers} connection workers, cache {cache} entries; QUIT closes a session, Ctrl-C stops)",
         server.addr()

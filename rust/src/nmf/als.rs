@@ -117,6 +117,15 @@ pub trait AlsCorpus: Sync {
     fn n_docs(&self) -> usize {
         self.a_cols().rows()
     }
+
+    /// The corpus's latched mid-run read fault, if any — see
+    /// [`crate::io::store`]'s failure model. [`RowSource::load`] is
+    /// total (unreadable ranges come back as empty rows), so the run
+    /// loop checks this after every half-step to avoid training on
+    /// partial data. Resident corpora can never fault.
+    fn store_error(&self) -> Option<String> {
+        None
+    }
 }
 
 impl AlsCorpus for TermDocMatrix {
@@ -177,6 +186,10 @@ impl AlsCorpus for CorpusStore {
 
     fn label_names(&self) -> &[String] {
         &self.label_names
+    }
+
+    fn store_error(&self) -> Option<String> {
+        CorpusStore::error(self)
     }
 }
 
@@ -827,6 +840,52 @@ struct LoopState {
     elapsed_base_s: f64,
 }
 
+/// Write one checkpoint snapshot of the loop state at an iteration
+/// boundary. A failing checkpoint disk must not abort hours of training:
+/// errors warn and the run continues.
+#[allow(clippy::too_many_arguments)]
+fn write_checkpoint(
+    corpus: &dyn AlsCorpus,
+    opts: &NmfOptions,
+    u: &Csr,
+    v: &Csr,
+    iterations: usize,
+    residuals: &[f64],
+    errors: &[f64],
+    memory: super::memory::MemoryStats,
+    elapsed_s: f64,
+    digest: u64,
+) {
+    let Some(path) = &opts.checkpoint_path else {
+        return;
+    };
+    let snap = crate::io::Snapshot {
+        options: opts.clone(),
+        u: u.clone(),
+        v: v.clone(),
+        terms: corpus.terms().to_vec(),
+        doc_labels: corpus.doc_labels().map(|l| l.to_vec()),
+        label_names: corpus.label_names().to_vec(),
+        corpus_digest: digest,
+        progress: crate::io::Progress {
+            iterations,
+            residuals: residuals.to_vec(),
+            errors: errors.to_vec(),
+            memory,
+            elapsed_s,
+        },
+    };
+    if let Err(e) = snap.save(path) {
+        crate::log_warn!("als", "checkpoint at iteration {iterations} failed: {e}");
+    } else {
+        crate::log_debug!(
+            "als",
+            "checkpointed iteration {iterations} to {}",
+            path.display()
+        );
+    }
+}
+
 fn run_loop(corpus: &dyn AlsCorpus, opts: &NmfOptions, state: LoopState) -> NmfResult {
     let timer = Timer::start();
     let norm_a_sq = corpus.norm_a_sq();
@@ -846,11 +905,25 @@ fn run_loop(corpus: &dyn AlsCorpus, opts: &NmfOptions, state: LoopState) -> NmfR
         elapsed_base_s,
     } = state;
     let mut iterations = start_iter;
+    // a latched corpus-store read fault: the half-step that hit it was
+    // computed on partial data, so its output is discarded and the loop
+    // stops with the last consistent state (see io::store's failure
+    // model — load() serves empty rows instead of panicking)
+    let mut store_fault: Option<String> = None;
 
     for it in start_iter..opts.max_iters {
-        v = half_step_v_src(corpus.a_cols(), &u, opts, &mut mem);
+        let v_new = half_step_v_src(corpus.a_cols(), &u, opts, &mut mem);
+        if let Some(fault) = corpus.store_error() {
+            store_fault = Some(fault);
+            break;
+        }
+        v = v_new;
         mem.observe_pair(u.nnz(), v.nnz());
         let u_new = half_step_u_src(corpus.a_rows(), &v, opts, &mut mem);
+        if let Some(fault) = corpus.store_error() {
+            store_fault = Some(fault);
+            break;
+        }
         mem.observe_pair(u_new.nnz(), v.nnz());
 
         let r = rel_residual(&u_new, &u);
@@ -861,13 +934,20 @@ fn run_loop(corpus: &dyn AlsCorpus, opts: &NmfOptions, state: LoopState) -> NmfR
         if opts.track_error {
             // streamed in block_rows-row runs, so the error pass honors
             // the same resident-corpus bound as the half-steps
-            errors.push(rel_error_source(
+            let e = rel_error_source(
                 corpus.a_rows(),
                 &u,
                 &v,
                 norm_a_sq,
                 opts.resolved_block_rows(),
-            ));
+            );
+            if let Some(fault) = corpus.store_error() {
+                // the factors are consistent (both half-steps completed)
+                // but this error sample saw partial data — drop it
+                store_fault = Some(fault);
+                break;
+            }
+            errors.push(e);
         }
         let stopping = opts.tol > 0.0 && r < opts.tol;
         // checkpoint cadence counts absolute iterations so a resumed run
@@ -875,43 +955,50 @@ fn run_loop(corpus: &dyn AlsCorpus, opts: &NmfOptions, state: LoopState) -> NmfR
         // nothing is written on the stopping iteration (the final model
         // is the caller's --save-model, not a checkpoint)
         if !stopping && opts.checkpoint_every > 0 && iterations % opts.checkpoint_every == 0 {
-            if let Some(path) = &opts.checkpoint_path {
-                let progress = crate::io::Progress {
-                    iterations,
-                    residuals: residuals.clone(),
-                    errors: errors.clone(),
-                    memory: *mem.peek(),
-                    elapsed_s: elapsed_base_s + timer.elapsed_s(),
-                };
-                let snap = crate::io::Snapshot {
-                    options: opts.clone(),
-                    u: u.clone(),
-                    v: v.clone(),
-                    terms: corpus.terms().to_vec(),
-                    doc_labels: corpus.doc_labels().map(|l| l.to_vec()),
-                    label_names: corpus.label_names().to_vec(),
-                    corpus_digest: checkpoint_digest.unwrap_or_default(),
-                    progress,
-                };
-                if let Err(e) = snap.save(path) {
-                    // a failing checkpoint disk must not abort hours of
-                    // training — warn and keep iterating
-                    crate::log_warn!(
-                        "als",
-                        "checkpoint at iteration {iterations} failed: {e}"
-                    );
-                } else {
-                    crate::log_debug!(
-                        "als",
-                        "checkpointed iteration {iterations} to {}",
-                        path.display()
-                    );
-                }
-            }
+            write_checkpoint(
+                corpus,
+                opts,
+                &u,
+                &v,
+                iterations,
+                &residuals,
+                &errors,
+                *mem.peek(),
+                elapsed_base_s + timer.elapsed_s(),
+                checkpoint_digest.unwrap_or_default(),
+            );
         }
         if stopping {
             break;
         }
+    }
+
+    if let Some(fault) = &store_fault {
+        crate::log_warn!(
+            "als",
+            "corpus store fault after {iterations} completed iterations: {fault} — \
+             saving last-good state and stopping"
+        );
+        // force a checkpoint of the surviving consistent state even off
+        // the regular cadence: the completed iterations are hours of
+        // compute, and the fault is exactly when they must not be lost
+        if opts.checkpoint_every > 0 {
+            write_checkpoint(
+                corpus,
+                opts,
+                &u,
+                &v,
+                iterations,
+                &residuals,
+                &errors,
+                *mem.peek(),
+                elapsed_base_s + timer.elapsed_s(),
+                checkpoint_digest.unwrap_or_default(),
+            );
+        }
+        // the fault stays latched on the corpus: drivers check
+        // store_error() after this returns and surface a typed error
+        // instead of reporting the partial result as clean
     }
 
     let memory = mem.finish(u.nnz(), v.nnz());
@@ -1224,6 +1311,34 @@ mod tests {
         let resumed = super::resume(&tdm, &opts, &snap).unwrap();
         assert_same_result(&resumed, &uninterrupted);
         std::fs::remove_file(&ck).unwrap();
+    }
+
+    #[test]
+    fn store_fault_mid_run_stops_cleanly_with_last_good_state() {
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 41);
+        let path = std::env::temp_dir().join("esnmf_als_fault_test.estdm");
+        let _ = std::fs::remove_file(&path);
+        crate::io::CorpusStore::write(&path, &tdm, 2).unwrap();
+        let store = crate::io::CorpusStore::open(&path).unwrap();
+        // corrupt a docs-major shard AFTER open (mid-run bit rot): the
+        // very first v half-step streams it and latches the fault — this
+        // used to be a panic that killed the whole process
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let opts = NmfOptions::new(2).with_iters(3).with_seed(7);
+        let r = factorize_corpus(&store, &opts);
+        // the faulted half-step's output is discarded: no iteration
+        // completed, the state returned is the consistent initial one
+        assert_eq!(r.iterations, 0, "faulted half-step must not count");
+        assert!(r.residuals.is_empty());
+        // the fault stays latched for the driver to surface as an error
+        let msg = store.error().expect("fault latched");
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+        // a resident corpus can never fault
+        assert!(AlsCorpus::store_error(&tdm).is_none());
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -133,11 +133,14 @@ pub trait RowSource: Sync {
 
     /// Present rows `lo..hi`. Resident sources return a borrowed view
     /// and never touch `cur`; disk-backed sources load through `cur`
-    /// (shard cache + chunk buffers). Implementations for fallible
-    /// backing storage surface read failures as a panic with the store
-    /// path in the message — a corpus that turns unreadable mid-run is
-    /// fatal to the factorization (validation happens at open time; see
-    /// [`crate::io::store`]).
+    /// (shard cache + chunk buffers). This signature has no error
+    /// channel by design — the hot loops stay branch-free — so
+    /// implementations over fallible backing storage must stay total:
+    /// an unreadable range is served as shape-correct **empty rows**
+    /// (which every streaming kernel skips) and the failure is latched
+    /// on the source for callers to check between steps (see
+    /// [`crate::io::store`]'s failure model). A mid-run read failure
+    /// must never panic a multi-hour factorization.
     fn load<'a>(&'a self, lo: usize, hi: usize, cur: &'a mut RowCursor) -> RowsRef<'a>;
 }
 

@@ -394,6 +394,55 @@ fn concurrent_clients_hammer_and_counters_add_up() {
 }
 
 #[test]
+fn identical_concurrent_misses_solve_once_across_connections() {
+    // N clients fire the same never-seen FOLDIN at the same instant: the
+    // single-flight slot must run exactly one solve and hand every other
+    // client the computed response (as a hit), not N duplicate solves
+    let metrics = MetricsRegistry::new();
+    let server = TopicServer::start_with(
+        "127.0.0.1:0",
+        model(),
+        metrics.clone(),
+        ServeOptions {
+            threads: 8,
+            cache_size: 64,
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+    const N: usize = 8;
+    let aligned = Arc::new(Barrier::new(N));
+    let handles: Vec<_> = (0..N)
+        .map(|_| {
+            let aligned = Arc::clone(&aligned);
+            std::thread::spawn(move || {
+                let (mut reader, mut writer) = connect(addr);
+                // answered PING ⇒ this client's handler is live
+                assert_eq!(query(&mut reader, &mut writer, "PING"), "OK pong");
+                aligned.wait();
+                let r = query(&mut reader, &mut writer, "FOLDIN coffee:3 electrons:1");
+                assert!(r.starts_with("OK nnz="), "{r}");
+                r
+            })
+        })
+        .collect();
+    let answers: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // exactly one solve; the other N-1 identical requests were either
+    // single-flight waiters or post-publish cache hits — both are hits
+    assert_eq!(metrics.counter("server.cache.misses").get(), 1);
+    assert_eq!(metrics.counter("server.cache.hits").get(), (N - 1) as u64);
+    let suppressed = metrics.counter("server.cache.stampede_suppressed").get();
+    assert!(suppressed <= (N - 1) as u64, "suppressed {suppressed}");
+    // every client saw the one computed response, byte for byte
+    assert!(
+        answers.windows(2).all(|w| w[0] == w[1]),
+        "answers diverged: {answers:?}"
+    );
+    server.stop();
+}
+
+#[test]
 fn graceful_shutdown_drains_open_connections() {
     let server =
         TopicServer::start("127.0.0.1:0", model(), MetricsRegistry::new()).unwrap();

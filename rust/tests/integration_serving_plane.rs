@@ -1,0 +1,260 @@
+//! End-to-end tests of the zero-downtime serving plane: atomic hot model
+//! swap under concurrent load (every response attributable to exactly
+//! one model, no dropped connections, no cross-generation cache hits),
+//! failed reloads leaving the old model serving, and the loopback admin
+//! listener (HEALTH / READY / METRICS / PROVENANCE / RELOAD) over real
+//! TCP.
+
+use esnmf::coordinator::{AdminServer, MetricsRegistry, ServerState, TopicModel, TopicServer};
+use esnmf::io::{Progress, Snapshot};
+use esnmf::nmf::NmfOptions;
+use esnmf::sparse::Csr;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+
+fn terms() -> Vec<String> {
+    vec![
+        "coffee".into(),
+        "crop".into(),
+        "electrons".into(),
+        "atoms".into(),
+    ]
+}
+
+/// Model A: coffee/crop load topic 0. `CLASSIFY coffee crop` answers
+/// `OK topic:0:…` first.
+fn model_a() -> Arc<TopicModel> {
+    let u = Csr::from_dense(4, 2, &[
+        0.9, 0.0, //
+        0.5, 0.0, //
+        0.0, 0.8, //
+        0.0, 0.3,
+    ]);
+    let v = Csr::from_dense(3, 2, &[1.0, 0.0, 0.0, 0.9, 0.4, 0.0]);
+    Arc::new(TopicModel::new(u, v, terms()))
+}
+
+/// Model B: the topic columns exchanged — the same query answers
+/// `OK topic:1:…` first, so responses self-identify their model.
+fn snapshot_b() -> Snapshot {
+    let u = Csr::from_dense(4, 2, &[
+        0.0, 0.9, //
+        0.0, 0.5, //
+        0.8, 0.0, //
+        0.3, 0.0,
+    ]);
+    let v = Csr::from_dense(3, 2, &[0.0, 1.0, 0.9, 0.0, 0.0, 0.4]);
+    Snapshot {
+        options: NmfOptions::new(2),
+        u,
+        v,
+        terms: terms(),
+        doc_labels: None,
+        label_names: vec![],
+        corpus_digest: 0xD1CE,
+        progress: Progress::default(),
+    }
+}
+
+fn temp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("esnmf_plane_{}_{name}", std::process::id()))
+}
+
+fn connect(addr: std::net::SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (reader, stream)
+}
+
+fn query(reader: &mut impl BufRead, writer: &mut impl Write, q: &str) -> String {
+    writeln!(writer, "{q}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line.trim_end().to_string()
+}
+
+#[test]
+fn hot_swap_under_load_keeps_every_response_attributable() {
+    let snap_path = temp("swap_load.esnmf");
+    snapshot_b().save(&snap_path).unwrap();
+    let state = Arc::new(ServerState::new(model_a(), MetricsRegistry::new(), 64));
+    let server = TopicServer::serve_state("127.0.0.1:0", Arc::clone(&state), 8).unwrap();
+    let addr = server.addr();
+
+    const CLIENTS: usize = 6;
+    const PER_CLIENT: usize = 40;
+    // clients pause at the halfway barrier; the main thread swaps there,
+    // so the second half of each session runs concurrently with (or
+    // after) the swap while the first half strictly precedes it
+    let halfway = Arc::new(Barrier::new(CLIENTS + 1));
+    // …and every client's *final* request waits for the swap to have
+    // completed, so "they all end on the new model" is deterministic
+    let swapped = Arc::new(Barrier::new(CLIENTS + 1));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let halfway = Arc::clone(&halfway);
+            let swapped = Arc::clone(&swapped);
+            std::thread::spawn(move || {
+                let (mut reader, mut writer) = connect(addr);
+                let mut saw_new = false;
+                for i in 0..PER_CLIENT {
+                    if i == PER_CLIENT / 2 {
+                        halfway.wait();
+                    }
+                    if i == PER_CLIENT - 1 {
+                        swapped.wait();
+                    }
+                    // alternate a shared (cache-warming) and a per-client
+                    // bag so both cache hits and misses cross the swap
+                    let q = if i % 2 == 0 {
+                        "CLASSIFY coffee crop".to_string()
+                    } else {
+                        format!("CLASSIFY coffee crop x{c}")
+                    };
+                    let r = query(&mut reader, &mut writer, &q);
+                    // every response is attributable to exactly one model
+                    let old = r.starts_with("OK topic:0:");
+                    let new = r.starts_with("OK topic:1:");
+                    assert!(old ^ new, "client {c} got unattributable {r:?}");
+                    if i < PER_CLIENT / 2 {
+                        assert!(old, "client {c} saw the new model before the swap: {r:?}");
+                    }
+                    // atomic swap + generation-tagged cache keys: once a
+                    // client has seen the new model, a stale (old-model)
+                    // response can never follow — a cross-generation
+                    // cache hit would violate exactly this
+                    if saw_new {
+                        assert!(new, "client {c} flapped back to the old model: {r:?}");
+                    }
+                    saw_new = new;
+                }
+                // the connection survived the swap
+                assert_eq!(query(&mut reader, &mut writer, "QUIT"), "OK bye");
+                saw_new
+            })
+        })
+        .collect();
+    halfway.wait();
+    let active = state.swap_model(&snap_path).expect("swap under load");
+    assert_eq!(active.generation, 1);
+    swapped.wait(); // release the final requests
+    let clients_seeing_new = handles
+        .into_iter()
+        .map(|h| h.join().expect("client dropped"))
+        .filter(|&saw| saw)
+        .count();
+    // the swap landed while traffic was live: the final request of every
+    // client runs strictly after swap_model returned, so all of them
+    // finished on the new model
+    assert_eq!(clients_seeing_new, CLIENTS);
+    assert_eq!(state.generation(), 1);
+    server.stop();
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+#[test]
+fn corrupt_reload_over_admin_leaves_the_old_model_serving() {
+    let good = temp("good.esnmf");
+    let bad = temp("bad.esnmf");
+    snapshot_b().save(&good).unwrap();
+    std::fs::write(&bad, b"not a snapshot at all").unwrap();
+
+    let state = Arc::new(ServerState::new(model_a(), MetricsRegistry::new(), 16));
+    let server = TopicServer::serve_state("127.0.0.1:0", Arc::clone(&state), 2).unwrap();
+    let admin = AdminServer::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
+    let (mut areader, mut awriter) = connect(admin.addr());
+    let (mut dreader, mut dwriter) = connect(server.addr());
+
+    // a corrupt reload answers ERR and swaps nothing
+    let r = query(&mut areader, &mut awriter, &format!("RELOAD {}", bad.display()));
+    assert!(r.starts_with("ERR reload failed:"), "{r}");
+    assert_eq!(state.generation(), 0);
+    // READY stays true — the old model is intact and still serving
+    assert_eq!(
+        query(&mut areader, &mut awriter, "READY"),
+        "OK ready generation=0"
+    );
+    let d = query(&mut dreader, &mut dwriter, "CLASSIFY coffee crop");
+    assert!(d.starts_with("OK topic:0:"), "{d}");
+
+    // a good reload then swaps live, no reconnect needed
+    let r = query(&mut areader, &mut awriter, &format!("RELOAD {}", good.display()));
+    assert_eq!(r, "OK swapped generation=1 k=2");
+    let d = query(&mut dreader, &mut dwriter, "CLASSIFY coffee crop");
+    assert!(d.starts_with("OK topic:1:"), "{d}");
+
+    admin.stop();
+    server.stop();
+    let _ = std::fs::remove_file(&good);
+    let _ = std::fs::remove_file(&bad);
+}
+
+#[test]
+fn admin_listener_speaks_health_metrics_and_provenance() {
+    let snap = temp("admin_swap.esnmf");
+    snapshot_b().save(&snap).unwrap();
+    let state = Arc::new(ServerState::new(model_a(), MetricsRegistry::new(), 16));
+    let server = TopicServer::serve_state("127.0.0.1:0", Arc::clone(&state), 2).unwrap();
+    let admin = AdminServer::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
+    let (mut areader, mut awriter) = connect(admin.addr());
+
+    // drive one data-plane request so the counters are nonzero
+    let (mut dreader, mut dwriter) = connect(server.addr());
+    assert!(query(&mut dreader, &mut dwriter, "CLASSIFY coffee").starts_with("OK"));
+
+    let health = query(&mut areader, &mut awriter, "HEALTH");
+    assert!(health.starts_with("OK up generation=0 requests="), "{health}");
+    assert_eq!(query(&mut areader, &mut awriter, "PING"), "OK pong");
+
+    // METRICS: Prometheus text until the `# EOF` terminator
+    writeln!(awriter, "METRICS").unwrap();
+    let mut lines = Vec::new();
+    loop {
+        let mut line = String::new();
+        areader.read_line(&mut line).unwrap();
+        let line = line.trim_end().to_string();
+        if line == "# EOF" {
+            break;
+        }
+        lines.push(line);
+    }
+    assert!(
+        lines.iter().any(|l| l.starts_with("esnmf_server_requests ")),
+        "no request counter in {lines:?}"
+    );
+    assert!(
+        lines
+            .iter()
+            .any(|l| l.contains("_us_bucket{le=\"+Inf\"}")),
+        "no histogram buckets in {lines:?}"
+    );
+    // every non-comment line parses as `name[{labels}] value`
+    for l in &lines {
+        if l.starts_with('#') {
+            continue;
+        }
+        let (name, value) = l.rsplit_once(' ').expect("name value");
+        assert!(name.starts_with("esnmf_"), "{l}");
+        assert!(value.parse::<f64>().is_ok(), "{l}");
+    }
+
+    // PROVENANCE before the swap: a from-memory model, no file facts
+    let prov = query(&mut areader, &mut awriter, "PROVENANCE");
+    assert!(prov.starts_with("OK path=- crc32=- "), "{prov}");
+    assert!(prov.ends_with("generation=0"), "{prov}");
+
+    // after a RELOAD it reports the snapshot's path, CRC and digest
+    let r = query(&mut areader, &mut awriter, &format!("RELOAD {}", snap.display()));
+    assert_eq!(r, "OK swapped generation=1 k=2");
+    let prov = query(&mut areader, &mut awriter, "PROVENANCE");
+    assert!(prov.contains(&format!("path={}", snap.display())), "{prov}");
+    assert!(prov.contains("crc32=0x"), "{prov}");
+    assert!(prov.contains(&format!("digest={:#018x}", 0xD1CEu64)), "{prov}");
+    assert!(prov.ends_with("generation=1"), "{prov}");
+
+    assert_eq!(query(&mut areader, &mut awriter, "QUIT"), "OK bye");
+    admin.stop();
+    server.stop();
+    let _ = std::fs::remove_file(&snap);
+}
