@@ -1,0 +1,111 @@
+//! Bench for the distributed plane: the same blocked, store-streamed
+//! factorization run single-process vs scattered over loopback workers.
+//! The distributed run must produce bit-identical factors (asserted via
+//! full factor equality *and* `NmfResult::digest`), so the only thing
+//! this suite measures is the wire overhead of the scatter/merge path —
+//! recorded as `wall_s_*` metrics the `bench-check --guards wall_s` CI
+//! gate can watch.
+
+mod common;
+
+use std::net::TcpListener;
+use std::path::Path;
+use std::time::Duration;
+
+use esnmf::coordinator::{run_distributed_on, run_worker, DistOptions};
+use esnmf::io::CorpusStore;
+use esnmf::nmf::{factorize_corpus, NmfOptions, NmfResult, SparsityMode};
+use esnmf::util::bench::BenchSuite;
+
+/// One full distributed run: bind an ephemeral loopback port, spawn
+/// `workers` in-process workers against it, drive the coordinator, and
+/// join the workers after the shutdown frame.
+fn distributed(
+    store: &CorpusStore,
+    store_path: &Path,
+    opts: &NmfOptions,
+    workers: usize,
+) -> NmfResult {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback listener");
+    let addr = listener.local_addr().expect("listener addr").to_string();
+    let handles: Vec<_> = (0..workers)
+        .map(|_| {
+            let path = store_path.to_path_buf();
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&path, &addr, 1))
+        })
+        .collect();
+    let dopts = DistOptions {
+        listen: addr,
+        workers,
+        timeout: Duration::from_secs(60),
+    };
+    let result = run_distributed_on(listener, store, opts, &dopts).expect("distributed run");
+    for h in handles {
+        h.join().expect("worker thread").expect("worker exits cleanly");
+    }
+    result
+}
+
+fn main() {
+    let cfg = common::bench_config();
+    let tdm = common::corpus("pubmed", &cfg);
+    let k = 5;
+    let t = 100;
+    let iters = cfg.iters(20);
+    // well below the corpus height so the run genuinely scatters spans
+    let block_rows = (tdm.n_docs().max(tdm.n_terms()) / 8).max(1);
+    let mut suite = BenchSuite::new("distributed: loopback workers vs single-process");
+
+    let store_path = std::env::temp_dir().join("esnmf_dist_bench.estdm");
+    let _ = std::fs::remove_file(&store_path);
+    let shard_rows = (tdm.n_docs().max(tdm.n_terms()) / 16).max(1);
+    CorpusStore::write(&store_path, &tdm, shard_rows).expect("writing bench store");
+    let store = CorpusStore::open(&store_path).expect("opening bench store");
+
+    let opts = NmfOptions::new(k)
+        .with_iters(iters)
+        .with_seed(cfg.seed)
+        .with_sparsity(SparsityMode::both(t, t))
+        .with_block_rows(block_rows)
+        .with_threads(1)
+        .with_track_error(false);
+
+    let mut last: Option<NmfResult> = None;
+    let local_s = suite
+        .bench("als(corpus-store, single-process)", || {
+            last = Some(factorize_corpus(&store, &opts));
+        })
+        .median_s();
+    let local = last.take().expect("bench ran");
+
+    let workers = 2;
+    let mut last_dist: Option<NmfResult> = None;
+    let dist_s = suite
+        .bench(&format!("als(corpus-store, {workers} loopback workers)"), || {
+            last_dist = Some(distributed(&store, &store_path, &opts, workers));
+        })
+        .median_s();
+    let dist = last_dist.take().expect("bench ran");
+
+    assert_eq!(dist.u, local.u, "distributed ≡ single-process factors");
+    assert_eq!(dist.v, local.v, "distributed ≡ single-process factors");
+    assert_eq!(
+        dist.digest(),
+        local.digest(),
+        "distributed ≡ single-process digest"
+    );
+
+    suite.metric("dist.workers", workers as f64);
+    suite.metric("dist.block_rows", block_rows as f64);
+    suite.metric("dist.overhead_x", dist_s / local_s.max(1e-12));
+    println!(
+        "factors digest: {:#018x} (identical at {} workers; wire overhead {:.2}x)",
+        dist.digest(),
+        workers,
+        dist_s / local_s.max(1e-12)
+    );
+
+    drop(store);
+    let _ = std::fs::remove_file(&store_path);
+}

@@ -78,6 +78,19 @@ pub struct RunConfig {
     /// seed `U₀` from this snapshot's factors, aligned by term string
     /// (`--warm-start`); the corpus may differ — that is the point
     pub warm_start: Option<String>,
+    /// run the factorization as a distributed coordinator
+    /// (`--distributed` / `[distributed] enabled`): listen for workers
+    /// over the shared `.estdm` and scatter half-step spans to them.
+    /// Bit-identical to the single-process run at any worker count.
+    pub distributed: bool,
+    /// workers to wait for before starting (`--dist-workers`); the run
+    /// proceeds short-handed if fewer join within the timeout
+    pub dist_workers: usize,
+    /// coordinator listen address for worker connections (`--dist-listen`)
+    pub dist_listen: String,
+    /// seconds to wait for workers to join, and the per-roundtrip read
+    /// deadline after which a worker counts as dead (`--dist-timeout`)
+    pub dist_timeout_s: u64,
 }
 
 impl Default for RunConfig {
@@ -115,6 +128,10 @@ impl Default for RunConfig {
             checkpoint_every: 0,
             resume: None,
             warm_start: None,
+            distributed: false,
+            dist_workers: 2,
+            dist_listen: "127.0.0.1:7611".into(),
+            dist_timeout_s: 30,
         }
     }
 }
@@ -222,7 +239,28 @@ impl RunConfig {
         if let Some(v) = f.str("snapshot.warm_start") {
             self.warm_start = Some(v.to_string());
         }
+        if let Some(v) = f.bool("distributed.enabled") {
+            self.distributed = v;
+        }
+        if let Some(v) = f.usize("distributed.workers") {
+            self.dist_workers = v;
+        }
+        if let Some(v) = f.str("distributed.listen") {
+            self.dist_listen = v.to_string();
+        }
+        if let Some(v) = f.u64("distributed.timeout_s") {
+            self.dist_timeout_s = v;
+        }
         Ok(())
+    }
+
+    /// Resolve the distributed-coordinator knobs into [`DistOptions`].
+    pub fn dist_options(&self) -> crate::coordinator::DistOptions {
+        crate::coordinator::DistOptions {
+            listen: self.dist_listen.clone(),
+            workers: self.dist_workers,
+            timeout: std::time::Duration::from_secs(self.dist_timeout_s.max(1)),
+        }
     }
 
     /// Resolve the topic-server knobs (`0` serve threads = all cores).
@@ -504,6 +542,26 @@ mod tests {
         assert!(format!("{err:#}").contains("--save-model"), "{err:#}");
         cfg.save_model = Some("x.esnmf".into());
         assert!(cfg.nmf_options().is_ok());
+    }
+
+    #[test]
+    fn distributed_knobs_from_file() {
+        let f = ConfigFile::parse(
+            "[distributed]\nenabled = true\nworkers = 3\nlisten = 127.0.0.1:9100\ntimeout_s = 5\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert!(cfg.distributed);
+        let d = cfg.dist_options();
+        assert_eq!(d.workers, 3);
+        assert_eq!(d.listen, "127.0.0.1:9100");
+        assert_eq!(d.timeout, std::time::Duration::from_secs(5));
+        // defaults: off, 2 workers, the documented port
+        let cfg = RunConfig::default();
+        assert!(!cfg.distributed);
+        assert_eq!(cfg.dist_options().workers, 2);
+        assert_eq!(cfg.dist_options().listen, "127.0.0.1:7611");
     }
 
     #[test]

@@ -26,7 +26,8 @@
 //! Binding is restricted to loopback by the driver; the listener itself
 //! also refuses non-loopback addresses as defense in depth.
 
-use super::server::{is_timeout, LineReader, ServerState};
+use super::server::ServerState;
+use crate::io::wire::{is_timeout, AdminRequest, LineReader};
 use crate::Result;
 use std::io::{ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
@@ -45,16 +46,18 @@ const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 /// Answer one admin command line. Pure request → response (no I/O), so
 /// unit tests drive the full command surface without a socket.
 pub fn admin_command(state: &ServerState, line: &str) -> String {
-    let line = line.trim();
-    let mut parts = line.split_whitespace();
-    let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
-    match cmd.as_str() {
-        "HEALTH" => format!(
+    let req = match AdminRequest::parse(line.trim()) {
+        Ok(req) => req,
+        // a parse failure IS the response line (wire-layer contract)
+        Err(err) => return err,
+    };
+    match req {
+        AdminRequest::Health => format!(
             "OK up generation={} requests={}",
             state.generation(),
             state.metrics.counter("server.requests").get()
         ),
-        "READY" => {
+        AdminRequest::Ready => {
             if state.ready() {
                 format!("OK ready generation={}", state.generation())
             } else {
@@ -65,8 +68,8 @@ pub fn admin_command(state: &ServerState, line: &str) -> String {
             }
         }
         // multi-line: scrapers read until the `# EOF` terminator
-        "METRICS" => format!("{}# EOF", state.metrics.prometheus()),
-        "PROVENANCE" => {
+        AdminRequest::Metrics => format!("{}# EOF", state.metrics.prometheus()),
+        AdminRequest::Provenance => {
             let active = state.active();
             let p = &active.provenance;
             fn opt<T: std::fmt::Display>(v: &Option<T>) -> String {
@@ -90,30 +93,22 @@ pub fn admin_command(state: &ServerState, line: &str) -> String {
                 active.generation,
             )
         }
-        "RELOAD" => {
-            let path = match (parts.next(), parts.next()) {
-                (Some(p), None) => p,
-                _ => return "ERR usage: RELOAD <path.esnmf>".into(),
-            };
-            match state.swap_model(std::path::Path::new(path)) {
-                Ok(active) => {
-                    crate::log_info!(
-                        "admin",
-                        "hot-swapped model from {path} (generation {})",
-                        active.generation
-                    );
-                    format!(
-                        "OK swapped generation={} k={}",
-                        active.generation,
-                        active.model.k()
-                    )
-                }
-                Err(e) => format!("ERR reload failed: {e}"),
+        AdminRequest::Reload { path } => match state.swap_model(std::path::Path::new(&path)) {
+            Ok(active) => {
+                crate::log_info!(
+                    "admin",
+                    "hot-swapped model from {path} (generation {})",
+                    active.generation
+                );
+                format!(
+                    "OK swapped generation={} k={}",
+                    active.generation,
+                    active.model.k()
+                )
             }
-        }
-        "PING" => "OK pong".into(),
-        "" => "ERR empty command".into(),
-        other => format!("ERR unknown admin command {other:?}"),
+            Err(e) => format!("ERR reload failed: {e}"),
+        },
+        AdminRequest::Ping => "OK pong".into(),
     }
 }
 

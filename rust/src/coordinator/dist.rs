@@ -1,0 +1,559 @@
+//! The stateful side of distributed factorization: the coordinator.
+//!
+//! The coordinator owns everything the single-process run owns — the
+//! iteration loop, residual/error tracking, checkpoint cadence, the
+//! memory telemetry — and replaces only the compute placement: each
+//! half-step's block list is partitioned into contiguous spans
+//! ([`pool::split_ranges`]) scattered to the joined workers, the
+//! replies are merged in fixed global block order, and the two-pass
+//! global top-t exchanges per-span [`TopTSelector`] summaries instead
+//! of candidate matrices.
+//!
+//! # Determinism contract (the reason this file is small)
+//!
+//! An N-worker run is bit-identical to the single-process blocked run
+//! at every worker count, including under worker failure:
+//!
+//! * every participant derives the same block geometry from the
+//!   resolved `block_rows` the coordinator ships in each request;
+//! * the fixed factor and the ridged Gram inverse travel as exact bits,
+//!   and fragments are produced by the same [`StreamCtx`] code path a
+//!   local run uses — a fragment's bits cannot depend on who computed
+//!   it;
+//! * fragments are assembled in ascending global block order, with the
+//!   `Exact` tie budget consumed by the coordinator's serial scan;
+//! * the top-t cutoff is an order statistic, so absorbing per-span
+//!   selector summaries in any order yields the in-process cutoff;
+//! * the memory tracker is max-based and observes the same multiset of
+//!   scratch sizes, so the telemetry matches too.
+//!
+//! A span whose worker dies, stalls past the reply timeout, refuses, or
+//! answers with a malformed frame is reassigned to surviving workers
+//! and, when none remain, computed locally — the coordinator shares the
+//! `.estdm`, so completion never depends on any worker surviving.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::pool;
+use crate::dense::inverse_spd;
+use crate::io::wire::{read_msg, write_msg, ComputeReq, PassReq, WorkerMsg, WORKER_PROTOCOL_VERSION};
+use crate::io::CorpusStore;
+use crate::nmf::als::{
+    self, enforcement_for, stream_half_step, AlsCorpus, BlockEmit, CandSource, Enforce, HalfSteps,
+    Keep, Solve, StreamCtx,
+};
+use crate::nmf::{MemoryTracker, NmfOptions, NmfResult};
+use crate::sparse::source::RowSource;
+use crate::sparse::{ops, topk, Csr, TieMode};
+use crate::EsnmfError;
+
+/// Knobs of one distributed run (CLI: `--dist-listen`, `--dist-workers`,
+/// `--dist-timeout`).
+#[derive(Clone, Debug)]
+pub struct DistOptions {
+    /// listener address workers join, e.g. `127.0.0.1:7611`
+    pub listen: String,
+    /// workers to wait for before starting (at least one must join)
+    pub workers: usize,
+    /// per-reply deadline; a worker silent past it is marked dead and
+    /// its span reassigned
+    pub timeout: Duration,
+}
+
+/// One joined worker connection.
+struct WorkerConn {
+    stream: TcpStream,
+    peer: String,
+    alive: bool,
+}
+
+impl WorkerConn {
+    /// One request/reply exchange. `Err` is a human-readable reason the
+    /// worker is now considered dead (timeout, hangup, refusal, or a
+    /// malformed frame).
+    fn roundtrip(&mut self, msg: &WorkerMsg, timeout: Duration) -> Result<WorkerMsg, String> {
+        self.stream
+            .set_read_timeout(Some(timeout))
+            .map_err(|e| format!("set timeout: {e}"))?;
+        write_msg(&mut self.stream, msg).map_err(|e| format!("send failed: {e}"))?;
+        match read_msg(&mut self.stream) {
+            Ok(WorkerMsg::Refuse { message }) => Err(format!("worker refused: {message}")),
+            Ok(reply) => Ok(reply),
+            Err(e) => Err(format!("reply failed: {e}")),
+        }
+    }
+}
+
+/// The distributed half-step engine plugged into the shared iteration
+/// loop ([`als::factorize_corpus_with`]).
+struct DistEngine {
+    conns: Vec<WorkerConn>,
+    timeout: Duration,
+}
+
+/// Run a distributed factorization over the shared on-disk corpus:
+/// bind the worker listener, admit `dopts.workers` workers (each
+/// verified against this store's digest and shape), and drive the
+/// standard iteration loop with span-scattered half-steps.
+pub fn run_distributed(
+    store: &CorpusStore,
+    opts: &NmfOptions,
+    dopts: &DistOptions,
+) -> Result<NmfResult, EsnmfError> {
+    let listener = TcpListener::bind(&dopts.listen)?;
+    run_distributed_on(listener, store, opts, dopts)
+}
+
+/// [`run_distributed`] over an already-bound listener. Lets callers
+/// (tests, embedders) bind `127.0.0.1:0`, read the real address from
+/// `listener.local_addr()`, and hand workers that address before the
+/// coordinator starts admitting — no port race.
+pub fn run_distributed_on(
+    listener: TcpListener,
+    store: &CorpusStore,
+    opts: &NmfOptions,
+    dopts: &DistOptions,
+) -> Result<NmfResult, EsnmfError> {
+    if dopts.workers == 0 {
+        return Err(EsnmfError::config(
+            "--dist-workers must be >= 1 (or drop --distributed)",
+        ));
+    }
+    let conns = admit_workers(listener, store, dopts)?;
+    let mut engine = DistEngine {
+        conns,
+        timeout: dopts.timeout,
+    };
+    let result = als::factorize_corpus_with(store, opts, &mut engine);
+    engine.shutdown();
+    Ok(result)
+}
+
+/// Accept and handshake workers until `dopts.workers` have joined or the
+/// join deadline passes. At least one worker must join; a short-handed
+/// start warns and proceeds (missing spans fall back to local compute —
+/// the run completes either way).
+fn admit_workers(
+    listener: TcpListener,
+    store: &CorpusStore,
+    dopts: &DistOptions,
+) -> Result<Vec<WorkerConn>, EsnmfError> {
+    listener.set_nonblocking(true)?;
+    crate::log_info!(
+        "dist",
+        "waiting for {} worker(s) on {}",
+        dopts.workers,
+        dopts.listen
+    );
+    let deadline = Instant::now() + dopts.timeout;
+    let mut conns = Vec::new();
+    while conns.len() < dopts.workers && Instant::now() < deadline {
+        match listener.accept() {
+            Ok((stream, peer)) => match handshake(store, stream, &peer.to_string()) {
+                Ok(conn) => {
+                    crate::log_info!("dist", "worker {} joined ({}/{})", conn.peer, conns.len() + 1, dopts.workers);
+                    conns.push(conn);
+                }
+                Err(why) => {
+                    crate::log_warn!("dist", "rejected worker {peer}: {why}");
+                }
+            },
+            Err(e) if crate::io::wire::is_timeout(&e) => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    if conns.is_empty() {
+        return Err(EsnmfError::protocol(format!(
+            "no workers joined {} within {:?}",
+            dopts.listen, dopts.timeout
+        )));
+    }
+    if conns.len() < dopts.workers {
+        crate::log_warn!(
+            "dist",
+            "starting short-handed: {}/{} workers joined",
+            conns.len(),
+            dopts.workers
+        );
+    }
+    Ok(conns)
+}
+
+/// Verify one joining worker: protocol version and — critically — that
+/// it opened the *same* corpus (digest + shape) before any work flows.
+fn handshake(store: &CorpusStore, stream: TcpStream, peer: &str) -> Result<WorkerConn, String> {
+    let mut conn = WorkerConn {
+        stream,
+        peer: peer.to_string(),
+        alive: true,
+    };
+    conn.stream.set_nodelay(true).ok();
+    conn.stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .map_err(|e| format!("set timeout: {e}"))?;
+    let refuse = |conn: &mut WorkerConn, message: String| {
+        let _ = write_msg(&mut conn.stream, &WorkerMsg::Refuse { message: message.clone() });
+        Err(message)
+    };
+    match read_msg(&mut conn.stream) {
+        Ok(WorkerMsg::Hello {
+            version,
+            digest,
+            n_terms,
+            n_docs,
+        }) => {
+            if version != WORKER_PROTOCOL_VERSION {
+                return refuse(
+                    &mut conn,
+                    format!("protocol v{version}, coordinator speaks v{WORKER_PROTOCOL_VERSION}"),
+                );
+            }
+            if digest != store.digest()
+                || n_terms as usize != AlsCorpus::n_terms(store)
+                || n_docs as usize != AlsCorpus::n_docs(store)
+            {
+                return refuse(
+                    &mut conn,
+                    format!(
+                        "corpus mismatch: worker serves digest {digest:#018x} ({n_terms}×{n_docs}), \
+                         coordinator has {:#018x} ({}×{})",
+                        store.digest(),
+                        AlsCorpus::n_terms(store),
+                        AlsCorpus::n_docs(store)
+                    ),
+                );
+            }
+            write_msg(
+                &mut conn.stream,
+                &WorkerMsg::Welcome {
+                    version: WORKER_PROTOCOL_VERSION,
+                },
+            )
+            .map_err(|e| format!("welcome failed: {e}"))?;
+            Ok(conn)
+        }
+        Ok(other) => refuse(&mut conn, format!("expected Hello, got {other:?}")),
+        Err(e) => Err(format!("bad hello: {e}")),
+    }
+}
+
+impl DistEngine {
+    fn shutdown(&mut self) {
+        for conn in self.conns.iter_mut().filter(|c| c.alive) {
+            let _ = write_msg(&mut conn.stream, &WorkerMsg::Shutdown);
+        }
+    }
+
+    fn half_step(
+        &mut self,
+        corpus: &dyn AlsCorpus,
+        factor: &Csr,
+        step_u: bool,
+        opts: &NmfOptions,
+        mem: &mut MemoryTracker,
+    ) -> Csr {
+        let row_src = if step_u {
+            corpus.a_rows()
+        } else {
+            corpus.a_cols()
+        };
+        assert_eq!(row_src.cols(), factor.rows, "half-step contraction mismatch");
+        let g = ops::gram_par(factor, opts.threads);
+        let g_inv = inverse_spd(&g, opts.k);
+        let block_rows = opts.resolved_block_rows();
+        let src = CandSource {
+            src: row_src,
+            factor,
+            dense: ops::dense_factor(factor),
+            defl: None,
+        };
+        let ctx = StreamCtx::new(
+            src,
+            Solve::Gram(g_inv.clone()),
+            opts.k,
+            opts.threads,
+            block_rows,
+        );
+        let enforce = enforcement_for(opts.sparsity, step_u);
+
+        // one block (or no one left to help): the in-process pipeline is
+        // what a single-process run would execute here — use it verbatim
+        if ctx.n_blocks() <= 1 || !self.conns.iter().any(|c| c.alive) {
+            return stream_half_step(&ctx, enforce, opts.tie_mode, opts.threads, mem);
+        }
+
+        let req = |span: (usize, usize), pass: PassReq| {
+            WorkerMsg::Compute(ComputeReq {
+                step_u,
+                k: opts.k as u32,
+                block_rows: block_rows as u64,
+                span: (span.0 as u64, span.1 as u64),
+                factor: factor.clone(),
+                g_inv: g_inv.clone(),
+                pass,
+            })
+        };
+
+        let emit_merged = |engine: &mut DistEngine,
+                           keep: Keep,
+                           trim: Option<(f32, usize)>,
+                           mem: &mut MemoryTracker| {
+            let (keep_tag, tau) = keep.to_wire();
+            let span_emits = scatter(
+                &mut engine.conns,
+                engine.timeout,
+                ctx.n_blocks(),
+                |span| req(span, PassReq::Emit { keep_tag, tau }),
+                |msg, span| parse_fragments(msg, span, &ctx),
+                |span| ctx.emit_span(span.0, span.1, keep),
+            );
+            let emits: Vec<BlockEmit> = span_emits.into_iter().flatten().collect();
+            ctx.assemble(emits, trim, mem)
+        };
+
+        match enforce {
+            Enforce::No => emit_merged(self, Keep::All, None, mem),
+            Enforce::Threshold(tau) => emit_merged(self, Keep::FiniteAtLeast(tau), None, mem),
+            Enforce::PerColumn(t) => {
+                let mut csr = emit_merged(self, Keep::All, None, mem);
+                // same access-pattern cost (and telemetry) as in-process:
+                // the unenforced CSR is a transient intermediate
+                mem.observe_intermediate(csr.nnz());
+                topk::enforce_top_t_per_column_par(&mut csr, t, opts.tie_mode, opts.threads);
+                csr
+            }
+            Enforce::Global(t) => {
+                // pass 1: per-span O(t) selector summaries
+                let selected = scatter(
+                    &mut self.conns,
+                    self.timeout,
+                    ctx.n_blocks(),
+                    |span| req(span, PassReq::Select { t: t as u64 }),
+                    |msg, span| parse_selected(msg, span, t),
+                    |span| ctx.select_span(span.0, span.1, t),
+                );
+                let mut sel = topk::TopTSelector::new(t);
+                for (lens, part) in selected {
+                    for len in lens {
+                        mem.observe_intermediate(len);
+                    }
+                    sel.absorb(part);
+                }
+                // pass 2: emission under the merged global cutoff
+                match sel.cutoff() {
+                    None => emit_merged(self, Keep::All, None, mem),
+                    Some((tau, above)) => match opts.tie_mode {
+                        TieMode::KeepTies => emit_merged(self, Keep::AtLeast(tau), None, mem),
+                        TieMode::Exact => {
+                            emit_merged(self, Keep::AboveOrTie(tau), Some((tau, t - above)), mem)
+                        }
+                    },
+                }
+            }
+        }
+    }
+}
+
+impl HalfSteps for DistEngine {
+    fn v(
+        &mut self,
+        corpus: &dyn AlsCorpus,
+        u: &Csr,
+        opts: &NmfOptions,
+        mem: &mut MemoryTracker,
+    ) -> Csr {
+        self.half_step(corpus, u, false, opts, mem)
+    }
+
+    fn u(
+        &mut self,
+        corpus: &dyn AlsCorpus,
+        v: &Csr,
+        opts: &NmfOptions,
+        mem: &mut MemoryTracker,
+    ) -> Csr {
+        self.half_step(corpus, v, true, opts, mem)
+    }
+}
+
+/// Validate one pass-1 reply into `(scratch_lens, selector)`.
+fn parse_selected(
+    msg: WorkerMsg,
+    span: (usize, usize),
+    t: usize,
+) -> Result<(Vec<usize>, topk::TopTSelector), String> {
+    match msg {
+        WorkerMsg::Selected {
+            scratch_lens,
+            positives,
+            heap,
+        } => {
+            if scratch_lens.len() != span.1 - span.0 {
+                return Err(format!(
+                    "selected reply covers {} blocks, span {:?} has {}",
+                    scratch_lens.len(),
+                    span,
+                    span.1 - span.0
+                ));
+            }
+            Ok((
+                scratch_lens.iter().map(|&l| l as usize).collect(),
+                topk::TopTSelector::from_wire_parts(t, positives as usize, &heap),
+            ))
+        }
+        other => Err(format!("expected Selected, got {other:?}")),
+    }
+}
+
+/// Validate one pass-2 reply into assembly-ready fragments: block count,
+/// per-block row coverage, fragment self-consistency, and column bounds
+/// are all checked before a byte reaches [`StreamCtx::assemble`].
+fn parse_fragments(
+    msg: WorkerMsg,
+    span: (usize, usize),
+    ctx: &StreamCtx<'_>,
+) -> Result<Vec<BlockEmit>, String> {
+    let WorkerMsg::Fragments { emits } = msg else {
+        return Err("expected Fragments, got another frame type".to_string());
+    };
+    if emits.len() != span.1 - span.0 {
+        return Err(format!(
+            "fragment reply covers {} blocks, span {:?} has {}",
+            emits.len(),
+            span,
+            span.1 - span.0
+        ));
+    }
+    let k = ctx.k();
+    let mut out = Vec::with_capacity(emits.len());
+    for (i, e) in emits.into_iter().enumerate() {
+        let (lo, hi) = ctx.block_bounds(span.0 + i);
+        if e.row_nnz.len() != hi - lo {
+            return Err(format!(
+                "fragment {} has {} rows, block {:?} has {}",
+                span.0 + i,
+                e.row_nnz.len(),
+                (lo, hi),
+                hi - lo
+            ));
+        }
+        let total: usize = e.row_nnz.iter().map(|&n| n as usize).sum();
+        if total != e.indices.len() || total != e.values.len() {
+            return Err(format!(
+                "fragment {} is inconsistent: row_nnz sums to {total}, {} indices / {} values",
+                span.0 + i,
+                e.indices.len(),
+                e.values.len()
+            ));
+        }
+        if e.indices.iter().any(|&c| c as usize >= k) {
+            return Err(format!("fragment {} has a column index >= k={k}", span.0 + i));
+        }
+        out.push(BlockEmit::from_wire(e));
+    }
+    Ok(out)
+}
+
+/// Scatter one pass over the block list: partition into contiguous
+/// spans (one per live worker), exchange concurrently, reassign failed
+/// spans to survivors, and compute any still-unserved span locally.
+/// Results come back in span order — global block order — whatever the
+/// failure pattern.
+fn scatter<R, M, P, L>(
+    conns: &mut [WorkerConn],
+    timeout: Duration,
+    n_blocks: usize,
+    make: M,
+    parse: P,
+    local: L,
+) -> Vec<R>
+where
+    M: Fn((usize, usize)) -> WorkerMsg,
+    P: Fn(WorkerMsg, (usize, usize)) -> Result<R, String>,
+    L: Fn((usize, usize)) -> R,
+{
+    let live = conns.iter().filter(|c| c.alive).count();
+    let spans = pool::split_ranges(n_blocks, live);
+    let mut results: Vec<Option<R>> = spans.iter().map(|_| None).collect();
+
+    loop {
+        let pending: Vec<usize> = results
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.is_none().then_some(i))
+            .collect();
+        if pending.is_empty() {
+            break;
+        }
+        let alive: Vec<usize> = conns
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| c.alive.then_some(i))
+            .collect();
+        if alive.is_empty() {
+            break;
+        }
+        // one span per live worker per round; leftovers wait for the
+        // next round (or for the local fallback)
+        let batch: Vec<(usize, usize)> = pending.into_iter().zip(alive).collect();
+        let jobs: Vec<(usize, WorkerMsg)> =
+            batch.iter().map(|&(si, wi)| (wi, make(spans[si]))).collect();
+        let replies = exchange(conns, timeout, jobs);
+        for (&(si, wi), reply) in batch.iter().zip(replies) {
+            match reply.and_then(|msg| parse(msg, spans[si])) {
+                Ok(r) => results[si] = Some(r),
+                Err(why) => {
+                    crate::log_warn!(
+                        "dist",
+                        "worker {} dropped (span {:?}): {why}",
+                        conns[wi].peer,
+                        spans[si]
+                    );
+                    conns[wi].alive = false;
+                }
+            }
+        }
+    }
+
+    // guaranteed completion: the coordinator shares the store, so any
+    // span no worker served is computed here with the identical engine
+    results
+        .into_iter()
+        .zip(spans)
+        .map(|(r, span)| {
+            r.unwrap_or_else(|| {
+                crate::log_warn!("dist", "computing span {span:?} locally (no live workers)");
+                local(span)
+            })
+        })
+        .collect()
+}
+
+/// Run the batch's request/reply exchanges concurrently, one scoped
+/// thread per assigned worker. Reply order matches job order.
+fn exchange(
+    conns: &mut [WorkerConn],
+    timeout: Duration,
+    jobs: Vec<(usize, WorkerMsg)>,
+) -> Vec<Result<WorkerMsg, String>> {
+    let mut slots: Vec<Option<&mut WorkerConn>> = conns.iter_mut().map(Some).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = jobs
+            .into_iter()
+            .map(|(wi, msg)| {
+                let conn = slots[wi].take().expect("one job per worker per exchange");
+                s.spawn(move || conn.roundtrip(&msg, timeout))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err("exchange thread panicked".into()))
+            })
+            .collect()
+    })
+}

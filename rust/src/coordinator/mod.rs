@@ -6,22 +6,29 @@
 //! pipeline into the term-document matrix, factorization jobs run on a
 //! worker pool (one corpus can be factorized under many configurations
 //! concurrently — exactly what the experiment harness does), and the
-//! resulting topic models are served over a line protocol.
+//! resulting topic models are served over a line protocol. The [`dist`] /
+//! [`worker`] pair extends the same harness across processes: stateless
+//! workers over a shared `.estdm` pull half-step spans from a stateful
+//! coordinator on the worker wire plane ([`crate::io::wire`]).
 
 pub mod admin;
 pub mod cache;
+pub mod dist;
 pub mod ingest;
 pub mod jobs;
 pub mod metrics;
 pub mod model;
 pub mod pool;
 pub mod server;
+pub mod worker;
 
 pub use admin::{admin_command, AdminServer};
 pub use cache::LruCache;
+pub use dist::{run_distributed, run_distributed_on, DistOptions};
 pub use ingest::{ingest_stream, IngestConfig};
 pub use jobs::{JobId, JobManager, JobSpec, JobStatus};
 pub use metrics::MetricsRegistry;
 pub use model::{Provenance, TopicModel};
 pub use pool::{default_threads, ThreadPool};
 pub use server::{watch_model, ActiveModel, ServeOptions, ServerState, TopicServer};
+pub use worker::run_worker;

@@ -53,22 +53,20 @@ use super::cache::LruCache;
 use super::metrics::{lock_unpoisoned, Counter, Gauge, Histogram, MetricsRegistry};
 use super::model::{Provenance, TopicModel};
 use super::pool::ThreadPool;
+use crate::io::wire::{is_timeout, parse_batch_n, LineReader, ServeRequest};
 use crate::nmf::FoldInScratch;
 use crate::Result;
 use std::collections::HashMap;
-use std::io::{ErrorKind, Read, Write};
+use std::io::{ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Upper bound on `BATCH <n>` so one line cannot pin a worker forever.
-pub const MAX_BATCH: usize = 256;
-
-/// Reject lines longer than this (a connection streaming garbage without
-/// a newline would otherwise grow the buffer unboundedly).
-const MAX_LINE_BYTES: usize = 1 << 20;
+// the cap is shared wire-layer policy now, but `server::MAX_BATCH` stays
+// the public path
+pub use crate::io::wire::MAX_BATCH;
 
 /// How often a blocked connection handler wakes to poll the stop flag.
 const READ_POLL: Duration = Duration::from_millis(50);
@@ -372,37 +370,6 @@ fn latency_label_idx(line: &str) -> usize {
         .unwrap_or(LATENCY_LABELS.len() - 1)
 }
 
-/// Strictly parse `<topic> [n]`: malformed numerics, `n = 0`, trailing
-/// garbage, and out-of-range topics all answer ERR (never a default).
-fn parse_topic_n(
-    parts: &mut std::str::SplitWhitespace,
-    usage: &str,
-    k: usize,
-) -> std::result::Result<(usize, usize), String> {
-    let topic = match parts.next() {
-        None => return Err(format!("ERR usage: {usage}")),
-        Some(tok) => match tok.parse::<usize>() {
-            Ok(t) => t,
-            Err(_) => return Err(format!("ERR bad topic {tok:?} (usage: {usage})")),
-        },
-    };
-    let n = match parts.next() {
-        None => 5,
-        Some(tok) => match tok.parse::<usize>() {
-            Ok(0) => return Err(format!("ERR n must be >= 1 (usage: {usage})")),
-            Ok(n) => n,
-            Err(_) => return Err(format!("ERR bad count {tok:?} (usage: {usage})")),
-        },
-    };
-    if parts.next().is_some() {
-        return Err(format!("ERR trailing arguments (usage: {usage})"));
-    }
-    if topic >= k {
-        return Err(format!("ERR topic {topic} out of range (k={k})"));
-    }
-    Ok((topic, n))
-}
-
 /// Handle one protocol line (no caching, no framing — see [`respond`]).
 /// Public for direct unit testing; the serving path goes through
 /// [`handle_command_with`] and a pooled scratch.
@@ -411,22 +378,23 @@ pub fn handle_command(model: &TopicModel, metrics: &MetricsRegistry, line: &str)
 }
 
 /// [`handle_command`] with caller-pooled fold-in scratch (identical
-/// answers; the scratch only removes per-request allocation).
+/// answers; the scratch only removes per-request allocation). Parsing —
+/// including every ERR string — lives in the shared wire layer
+/// ([`ServeRequest::parse`]); this function only executes parsed
+/// requests against the model.
 pub fn handle_command_with(
     model: &TopicModel,
     metrics: &MetricsRegistry,
     line: &str,
     scratch: &mut FoldInScratch,
 ) -> String {
-    let mut parts = line.split_whitespace();
-    let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
-    match cmd.as_str() {
-        "TOPICS" => format!("OK k={}", model.k()),
-        "TOPTERMS" => {
-            let (topic, n) = match parse_topic_n(&mut parts, "TOPTERMS <topic> [n]", model.k()) {
-                Ok(t) => t,
-                Err(e) => return e,
-            };
+    let req = match ServeRequest::parse(line, model.k()) {
+        Ok(req) => req,
+        Err(err) => return err,
+    };
+    match req {
+        ServeRequest::Topics => format!("OK k={}", model.k()),
+        ServeRequest::TopTerms { topic, n } => {
             let terms = model.topic_terms(topic, n);
             let body: Vec<String> = terms
                 .iter()
@@ -434,11 +402,7 @@ pub fn handle_command_with(
                 .collect();
             format!("OK {}", body.join(" "))
         }
-        "CLASSIFY" => {
-            let words: Vec<&str> = parts.collect();
-            if words.is_empty() {
-                return "ERR usage: CLASSIFY <word> ...".into();
-            }
+        ServeRequest::Classify { words } => {
             let ranked = model.classify(&words);
             let body: Vec<String> = ranked
                 .iter()
@@ -447,47 +411,24 @@ pub fn handle_command_with(
                 .collect();
             format!("OK {}", body.join(" "))
         }
-        "FOLDIN" => {
-            const USAGE: &str = "ERR usage: FOLDIN <word:count> ...";
-            let mut doc: Vec<(&str, f32)> = Vec::new();
-            for tok in parts {
-                let Some((word, count)) = tok.rsplit_once(':') else {
-                    return format!("{USAGE} (bad pair {tok:?})");
-                };
-                if word.is_empty() {
-                    return format!("{USAGE} (bad pair {tok:?})");
-                }
-                match count.parse::<f32>() {
-                    Ok(c) if c.is_finite() && c > 0.0 => doc.push((word, c)),
-                    _ => return format!("{USAGE} (bad count {count:?} in {tok:?})"),
-                }
-            }
-            if doc.is_empty() {
-                return USAGE.into();
-            }
+        ServeRequest::FoldIn { doc } => {
             let ranked = model.fold_in_with(&doc, scratch);
             let mut body = vec![format!("nnz={}", ranked.len())];
             body.extend(ranked.iter().map(|(t, w)| format!("topic:{t}:{w:.4}")));
             format!("OK {}", body.join(" "))
         }
-        "DOCS" => {
-            let (topic, n) = match parse_topic_n(&mut parts, "DOCS <topic> [n]", model.k()) {
-                Ok(t) => t,
-                Err(e) => return e,
-            };
+        ServeRequest::Docs { topic, n } => {
             let docs = model.topic_documents(topic, n);
             let body: Vec<String> =
                 docs.iter().map(|(d, w)| format!("{d}:{w:.4}")).collect();
             format!("OK {}", body.join(" "))
         }
-        "STATS" => format!("OK {}", metrics.format()),
-        "PING" => "OK pong".into(),
+        ServeRequest::Stats => format!("OK {}", metrics.format()),
+        ServeRequest::Ping => "OK pong".into(),
         // connection control never reaches this handler on its own line;
         // inside a BATCH body it is rejected so the response count holds
-        "QUIT" => "ERR QUIT not allowed inside BATCH".into(),
-        "BATCH" => "ERR BATCH cannot be nested".into(),
-        "" => "ERR empty command".into(),
-        other => format!("ERR unknown command {other:?}"),
+        ServeRequest::Quit => "ERR QUIT not allowed inside BATCH".into(),
+        ServeRequest::Batch { .. } => "ERR BATCH cannot be nested".into(),
     }
 }
 
@@ -601,91 +542,6 @@ fn respond_inner(state: &ServerState, line: &str) -> String {
             fresh
         }
     }
-}
-
-fn parse_batch_n(tok: Option<&str>, extra: Option<&str>) -> std::result::Result<usize, String> {
-    if extra.is_some() {
-        return Err(format!("ERR trailing arguments (usage: BATCH <n>, 1..={MAX_BATCH})"));
-    }
-    match tok.and_then(|s| s.parse::<usize>().ok()) {
-        Some(n) if (1..=MAX_BATCH).contains(&n) => Ok(n),
-        _ => Err(format!("ERR usage: BATCH <n> (1..={MAX_BATCH})")),
-    }
-}
-
-/// Minimal buffered line reader that survives read timeouts: a partial
-/// line stays buffered across `WouldBlock`/`TimedOut`, so the connection
-/// loop can poll the stop flag between read attempts. (`BufReader` makes
-/// no such guarantee for `read_line` under errors.) Shared with the
-/// admin listener ([`super::admin`]).
-pub(crate) struct LineReader<R: Read> {
-    inner: R,
-    buf: Vec<u8>,
-    start: usize,
-}
-
-impl<R: Read> LineReader<R> {
-    pub(crate) fn new(inner: R) -> Self {
-        LineReader {
-            inner,
-            buf: Vec::new(),
-            start: 0,
-        }
-    }
-
-    /// Next newline-terminated line without the terminator (a trailing
-    /// `\r` is stripped). `Ok(None)` = clean EOF; timeouts bubble up as
-    /// errors with any partial line preserved for the next call.
-    pub(crate) fn read_line(&mut self) -> std::io::Result<Option<String>> {
-        loop {
-            if let Some(pos) = self.buf[self.start..].iter().position(|&b| b == b'\n') {
-                let end = self.start + pos;
-                let mut slice = &self.buf[self.start..end];
-                if slice.last() == Some(&b'\r') {
-                    slice = &slice[..slice.len() - 1];
-                }
-                let line = String::from_utf8_lossy(slice).into_owned();
-                self.start = end + 1;
-                if self.start >= self.buf.len() {
-                    self.buf.clear();
-                    self.start = 0;
-                }
-                return Ok(Some(line));
-            }
-            if self.start > 0 {
-                self.buf.drain(..self.start);
-                self.start = 0;
-            }
-            if self.buf.len() > MAX_LINE_BYTES {
-                return Err(std::io::Error::new(
-                    ErrorKind::InvalidData,
-                    "request line too long",
-                ));
-            }
-            let mut chunk = [0u8; 4096];
-            match self.inner.read(&mut chunk) {
-                Ok(0) => {
-                    if self.buf.is_empty() {
-                        return Ok(None);
-                    }
-                    // final unterminated line before EOF
-                    let mut slice = &self.buf[..];
-                    if slice.last() == Some(&b'\r') {
-                        slice = &slice[..slice.len() - 1];
-                    }
-                    let line = String::from_utf8_lossy(slice).into_owned();
-                    self.buf.clear();
-                    return Ok(Some(line));
-                }
-                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
-                Err(e) => return Err(e),
-            }
-        }
-    }
-}
-
-pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
-    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
 }
 
 /// Decrements the active-connections gauge on scope exit — including an
@@ -922,6 +778,7 @@ impl Drop for TopicServer {
 mod tests {
     use super::*;
     use crate::sparse::Csr;
+    use std::io::Read;
 
     fn model() -> TopicModel {
         let u = Csr::from_dense(3, 2, &[0.9, 0.0, 0.4, 0.0, 0.0, 0.7]);

@@ -1,0 +1,206 @@
+//! The thin, stateless side of distributed factorization.
+//!
+//! A worker owns nothing but a read-only handle on the shared `.estdm`
+//! corpus store and one TCP connection to the coordinator. Every
+//! [`ComputeReq`] it receives is self-contained — which half-step, the
+//! fixed factor (bit-exact CSR), the ridged Gram inverse, the resolved
+//! block geometry, and the assigned span of the global block list — so a
+//! worker can join, die, or be replaced at any iteration boundary
+//! without the coordinator losing state. The compute itself is the same
+//! [`StreamCtx`] engine the single-process blocked half-step runs,
+//! restricted to the assigned span: a fragment's bits cannot depend on
+//! who computed it.
+//!
+//! Failure model: every malformed frame, shape mismatch, or latched
+//! store fault answers with a typed [`WorkerMsg::Refuse`] (never a hang,
+//! never a panic on the request path); the coordinator treats a refusing
+//! or silent worker identically — mark dead, reassign the span.
+
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::io::wire::{read_msg, write_msg, ComputeReq, PassReq, WorkerMsg, WORKER_PROTOCOL_VERSION};
+use crate::io::CorpusStore;
+use crate::nmf::als::{AlsCorpus, BlockEmit, CandSource, Keep, Solve, StreamCtx};
+use crate::sparse::{ops, source::RowSource};
+use crate::EsnmfError;
+
+/// How long [`run_worker`] keeps retrying the initial connect — workers
+/// routinely start before the coordinator binds its listener.
+const CONNECT_RETRY_WINDOW: Duration = Duration::from_secs(30);
+
+/// Open the shared corpus store, join the coordinator, and serve compute
+/// requests until a `Shutdown` frame (or the coordinator hangs up).
+pub fn run_worker(store_path: &Path, coordinator: &str, threads: usize) -> Result<(), EsnmfError> {
+    let store = CorpusStore::open(store_path)?;
+    let mut stream = connect_with_retry(coordinator)?;
+    stream.set_nodelay(true).ok();
+
+    write_msg(
+        &mut stream,
+        &WorkerMsg::Hello {
+            version: WORKER_PROTOCOL_VERSION,
+            digest: store.digest(),
+            n_terms: AlsCorpus::n_terms(&store) as u64,
+            n_docs: AlsCorpus::n_docs(&store) as u64,
+        },
+    )?;
+    match read_msg(&mut stream)? {
+        WorkerMsg::Welcome { version } if version == WORKER_PROTOCOL_VERSION => {}
+        WorkerMsg::Welcome { version } => {
+            return Err(EsnmfError::protocol(format!(
+                "coordinator speaks protocol v{version}, this worker v{WORKER_PROTOCOL_VERSION}"
+            )));
+        }
+        WorkerMsg::Refuse { message } => {
+            return Err(EsnmfError::protocol(format!(
+                "coordinator refused this worker: {message}"
+            )));
+        }
+        other => {
+            return Err(EsnmfError::protocol(format!(
+                "expected Welcome, got {other:?}"
+            )));
+        }
+    }
+    crate::log_info!("worker", "joined coordinator at {coordinator}");
+
+    loop {
+        match read_msg(&mut stream) {
+            Ok(WorkerMsg::Compute(req)) => {
+                let reply = compute(&store, &req, threads)
+                    .unwrap_or_else(|message| WorkerMsg::Refuse { message });
+                write_msg(&mut stream, &reply)?;
+            }
+            Ok(WorkerMsg::Ping) => write_msg(&mut stream, &WorkerMsg::Pong)?,
+            Ok(WorkerMsg::Shutdown) => {
+                crate::log_info!("worker", "coordinator sent shutdown, exiting");
+                return Ok(());
+            }
+            Ok(other) => {
+                let _ = write_msg(
+                    &mut stream,
+                    &WorkerMsg::Refuse {
+                        message: format!("unexpected frame {other:?} on the worker plane"),
+                    },
+                );
+                return Err(EsnmfError::protocol(format!(
+                    "coordinator sent unexpected frame {other:?}"
+                )));
+            }
+            // coordinator hung up without a Shutdown (it crashed or was
+            // killed): a stateless worker has nothing to save — exit
+            // cleanly so supervisors do not restart-loop against nothing
+            Err(EsnmfError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                crate::log_warn!("worker", "coordinator connection closed, exiting");
+                return Ok(());
+            }
+            // a corrupt frame: refuse (typed, best-effort) and close —
+            // the stream framing is unrecoverable after garbage
+            Err(e @ EsnmfError::Wire(_)) => {
+                let _ = write_msg(
+                    &mut stream,
+                    &WorkerMsg::Refuse {
+                        message: e.to_string(),
+                    },
+                );
+                return Err(e);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn connect_with_retry(coordinator: &str) -> Result<TcpStream, EsnmfError> {
+    let deadline = Instant::now() + CONNECT_RETRY_WINDOW;
+    loop {
+        match TcpStream::connect(coordinator) {
+            Ok(s) => return Ok(s),
+            Err(e) if Instant::now() < deadline => {
+                crate::log_debug!("worker", "connect to {coordinator} failed ({e}), retrying");
+                std::thread::sleep(Duration::from_millis(200));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Execute one self-contained compute request against the local store
+/// handle. `Err` is the refusal message — every input is validated
+/// before it can panic a kernel.
+fn compute(store: &CorpusStore, req: &ComputeReq, threads: usize) -> Result<WorkerMsg, String> {
+    let k = req.k as usize;
+    let block_rows = req.block_rows as usize;
+    if k == 0 {
+        return Err("k must be >= 1".into());
+    }
+    if block_rows == 0 {
+        return Err("block_rows must be >= 1".into());
+    }
+    if req.factor.cols != k {
+        return Err(format!(
+            "factor has {} columns, request says k={k}",
+            req.factor.cols
+        ));
+    }
+    if req.g_inv.len() != k * k {
+        return Err(format!(
+            "gram inverse has {} entries, wanted k*k={}",
+            req.g_inv.len(),
+            k * k
+        ));
+    }
+    let row_src: &dyn RowSource = if req.step_u {
+        AlsCorpus::a_rows(store)
+    } else {
+        AlsCorpus::a_cols(store)
+    };
+    if row_src.cols() != req.factor.rows {
+        return Err(format!(
+            "contraction mismatch: streamed rows have {} columns, factor has {} rows",
+            row_src.cols(),
+            req.factor.rows
+        ));
+    }
+    let src = CandSource {
+        src: row_src,
+        factor: &req.factor,
+        dense: ops::dense_factor(&req.factor),
+        defl: None,
+    };
+    let ctx = StreamCtx::new(src, Solve::Gram(req.g_inv.clone()), k, threads, block_rows);
+    let (lo, hi) = (req.span.0 as usize, req.span.1 as usize);
+    if lo > hi || hi > ctx.n_blocks() {
+        return Err(format!(
+            "span {:?} outside the {}-block geometry",
+            req.span,
+            ctx.n_blocks()
+        ));
+    }
+    let reply = match &req.pass {
+        PassReq::Select { t } => {
+            let (lens, sel) = ctx.select_span(lo, hi, *t as usize);
+            let (positives, heap) = sel.into_wire_parts();
+            WorkerMsg::Selected {
+                scratch_lens: lens.iter().map(|&l| l as u64).collect(),
+                positives: positives as u64,
+                heap,
+            }
+        }
+        PassReq::Emit { keep_tag, tau } => {
+            let keep = Keep::from_wire(*keep_tag, *tau)
+                .ok_or_else(|| format!("bad keep tag {keep_tag}"))?;
+            let emits = ctx.emit_span(lo, hi, keep);
+            WorkerMsg::Fragments {
+                emits: emits.into_iter().map(BlockEmit::into_wire).collect(),
+            }
+        }
+    };
+    // a latched shard-read fault means this span was computed on partial
+    // data: refuse instead of shipping silently-wrong fragments
+    if let Some(fault) = AlsCorpus::store_error(store) {
+        return Err(format!("corpus store fault: {fault}"));
+    }
+    Ok(reply)
+}

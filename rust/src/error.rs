@@ -1,0 +1,195 @@
+//! The crate's unified error surface.
+//!
+//! Every failure the `esnmf` binary can hit funnels into one public
+//! [`EsnmfError`] enum, so the CLI boundary (`main.rs`) maps *categories*
+//! of failure to stable exit codes instead of printing whatever ad-hoc
+//! string a call site happened to format:
+//!
+//! | category | variants | exit code |
+//! |---|---|---|
+//! | caller mistake | [`EsnmfError::Usage`], [`EsnmfError::Config`] | 2 |
+//! | bad data at rest / on the wire | [`EsnmfError::Snapshot`], [`EsnmfError::Store`], [`EsnmfError::Wire`] | 3 |
+//! | protocol violation between live processes | [`EsnmfError::Protocol`] | 4 |
+//! | everything else | [`EsnmfError::Io`], [`EsnmfError::Other`] | 1 |
+//!
+//! The typed sub-errors ([`SnapshotError`], [`StoreError`], [`WireError`])
+//! convert in via `From`, so `?` works unannotated through the CLI and
+//! the distributed plane. `anyhow`-producing internals convert through
+//! [`EsnmfError::Other`] at the boundary — the string is kept, the
+//! category information simply is not claimed where none exists.
+
+use std::fmt;
+
+use crate::io::wire::WireError;
+use crate::io::{SnapshotError, StoreError};
+
+/// Everything that can fail across the crate's public surface.
+#[derive(Debug)]
+pub enum EsnmfError {
+    /// Malformed command line (unknown flag, missing argument, bad value).
+    Usage(String),
+    /// A syntactically valid but unusable configuration (conflicting
+    /// flags, a knob out of range, a file-config key with a bad value).
+    Config(String),
+    /// A `.esnmf` model snapshot failed to load or validate.
+    Snapshot(SnapshotError),
+    /// A `.estdm` corpus store failed to open, verify, or read.
+    Store(StoreError),
+    /// A wire payload (worker frame, snapshot/store section) failed to
+    /// decode.
+    Wire(WireError),
+    /// A live peer broke the protocol contract: wrong handshake, digest
+    /// mismatch between coordinator and worker, an unexpected reply type,
+    /// or a worker-reported compute refusal.
+    Protocol(String),
+    /// Operating-system I/O failure outside the typed formats.
+    Io(std::io::Error),
+    /// Uncategorized failure (the `anyhow` boundary).
+    Other(String),
+    /// A wrapped error with a "what were we doing" prefix. Keeps the
+    /// inner category (and exit code) — context never reclassifies.
+    Context {
+        what: String,
+        source: Box<EsnmfError>,
+    },
+}
+
+impl EsnmfError {
+    /// Stable process exit code for this failure category (see the
+    /// module docs table).
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            EsnmfError::Usage(_) | EsnmfError::Config(_) => 2,
+            EsnmfError::Snapshot(_) | EsnmfError::Store(_) | EsnmfError::Wire(_) => 3,
+            EsnmfError::Protocol(_) => 4,
+            EsnmfError::Io(_) | EsnmfError::Other(_) => 1,
+            EsnmfError::Context { source, .. } => source.exit_code(),
+        }
+    }
+
+    /// Wrap `self` with a "what were we doing" prefix (shown as
+    /// `what: inner`), preserving the category and exit code.
+    pub fn context(self, what: impl fmt::Display) -> Self {
+        EsnmfError::Context {
+            what: what.to_string(),
+            source: Box::new(self),
+        }
+    }
+
+    /// Shorthand for a [`EsnmfError::Usage`] from any displayable.
+    pub fn usage(msg: impl fmt::Display) -> Self {
+        EsnmfError::Usage(msg.to_string())
+    }
+
+    /// Shorthand for a [`EsnmfError::Config`] from any displayable.
+    pub fn config(msg: impl fmt::Display) -> Self {
+        EsnmfError::Config(msg.to_string())
+    }
+
+    /// Shorthand for a [`EsnmfError::Protocol`] from any displayable.
+    pub fn protocol(msg: impl fmt::Display) -> Self {
+        EsnmfError::Protocol(msg.to_string())
+    }
+}
+
+impl fmt::Display for EsnmfError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EsnmfError::Usage(msg) => write!(f, "{msg}"),
+            EsnmfError::Config(msg) => write!(f, "{msg}"),
+            EsnmfError::Snapshot(e) => write!(f, "{e}"),
+            EsnmfError::Store(e) => write!(f, "{e}"),
+            EsnmfError::Wire(e) => write!(f, "wire: {e}"),
+            EsnmfError::Protocol(msg) => write!(f, "protocol: {msg}"),
+            EsnmfError::Io(e) => write!(f, "i/o: {e}"),
+            EsnmfError::Other(msg) => write!(f, "{msg}"),
+            EsnmfError::Context { what, source } => write!(f, "{what}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for EsnmfError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EsnmfError::Snapshot(e) => Some(e),
+            EsnmfError::Store(e) => Some(e),
+            EsnmfError::Io(e) => Some(e),
+            EsnmfError::Context { source, .. } => Some(source.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+impl From<SnapshotError> for EsnmfError {
+    fn from(e: SnapshotError) -> Self {
+        EsnmfError::Snapshot(e)
+    }
+}
+
+impl From<StoreError> for EsnmfError {
+    fn from(e: StoreError) -> Self {
+        EsnmfError::Store(e)
+    }
+}
+
+impl From<WireError> for EsnmfError {
+    fn from(e: WireError) -> Self {
+        EsnmfError::Wire(e)
+    }
+}
+
+impl From<std::io::Error> for EsnmfError {
+    fn from(e: std::io::Error) -> Self {
+        EsnmfError::Io(e)
+    }
+}
+
+impl From<anyhow::Error> for EsnmfError {
+    fn from(e: anyhow::Error) -> Self {
+        // `{:#}` keeps the whole context chain in one line, matching what
+        // the pre-typed CLI boundary printed
+        EsnmfError::Other(format!("{e:#}"))
+    }
+}
+
+impl From<String> for EsnmfError {
+    fn from(msg: String) -> Self {
+        EsnmfError::Other(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_codes_partition_by_category() {
+        assert_eq!(EsnmfError::usage("x").exit_code(), 2);
+        assert_eq!(EsnmfError::config("x").exit_code(), 2);
+        assert_eq!(EsnmfError::from(SnapshotError::BadMagic).exit_code(), 3);
+        assert_eq!(
+            EsnmfError::from(WireError::Corrupt("x".into())).exit_code(),
+            3
+        );
+        assert_eq!(EsnmfError::protocol("x").exit_code(), 4);
+        assert_eq!(EsnmfError::Other("x".into()).exit_code(), 1);
+    }
+
+    #[test]
+    fn context_keeps_category_and_prefixes_display() {
+        let e = EsnmfError::from(SnapshotError::BadMagic).context("loading snapshot nope.esnmf");
+        assert_eq!(e.exit_code(), 3, "context must not reclassify");
+        let s = e.to_string();
+        assert!(s.starts_with("loading snapshot nope.esnmf: "), "{s}");
+    }
+
+    #[test]
+    fn display_keeps_the_inner_message() {
+        let e = EsnmfError::from(anyhow::anyhow!("root").context("outer"));
+        let s = e.to_string();
+        assert!(s.contains("outer") && s.contains("root"), "{s}");
+        assert!(EsnmfError::usage("unknown option(s): --oops")
+            .to_string()
+            .contains("--oops"));
+    }
+}

@@ -17,7 +17,7 @@
 
 pub mod snapshot;
 pub mod store;
-mod wire;
+pub mod wire;
 
 pub use snapshot::{
     corpus_digest, Progress, Snapshot, SnapshotError, MAX_SNAPSHOT_K, SNAPSHOT_VERSION,

@@ -1,19 +1,35 @@
-//! Shared little-endian wire codecs for the binary formats under `io/`
-//! (`.esnmf` model snapshots, `.estdm` corpus stores).
+//! The crate's shared wire layer: codecs, framing, and typed requests
+//! for every protocol surface.
 //!
-//! Both formats promise the same totality contract: truncated input,
-//! absurd section sizes and malformed strings surface as a typed error,
-//! never a panic or an unbounded allocation. The bounds-checked
-//! [`Reader`] and the string/f64 section codecs live here so the two
-//! formats cannot drift apart; each format converts [`WireError`] into
-//! its own error enum at the boundary.
+//! Three things live here so the formats and planes cannot drift apart:
+//!
+//! * **Binary codecs** — the bounds-checked [`Reader`] and the
+//!   string/f64/label section codecs shared by the `.esnmf` snapshot and
+//!   `.estdm` store formats, and by the worker frames below.
+//! * **Text-plane framing and parsing** — [`LineReader`] (timeout-
+//!   surviving line framing, shared by the serve and admin listeners)
+//!   plus the typed request enums [`ServeRequest`] / [`AdminRequest`]
+//!   with one strict parser each. A parse failure IS the complete
+//!   `ERR ...` response line, so every plane refuses malformed input
+//!   with the same semantics.
+//! * **Worker-plane frames** — the length-prefixed binary frames of the
+//!   distributed factorization protocol ([`WorkerMsg`]): magic + tag +
+//!   bounded length, payloads decoded through [`Reader`].
+//!
+//! Every decoder promises the same totality contract: truncated input,
+//! absurd section sizes and malformed payloads surface as a typed error
+//! ([`WireError`], or an `ERR` line on the text planes), never a panic,
+//! a hang, or an unbounded allocation.
 
+use crate::sparse::Csr;
 use std::fmt;
+use std::io::{ErrorKind, Read, Write};
 
 /// Low-level decode failure, mapped into `SnapshotError` / `StoreError`
-/// by the format layers.
+/// by the format layers and into
+/// [`EsnmfError::Wire`](crate::EsnmfError::Wire) by the worker plane.
 #[derive(Debug)]
-pub(crate) enum WireError {
+pub enum WireError {
     /// Input ends before a read the layout requires.
     Truncated { expected: usize, have: usize },
     /// Input is long enough but the bytes do not parse.
@@ -156,6 +172,615 @@ pub(crate) fn read_opt_labels(r: &mut Reader) -> Result<Option<Vec<u32>>, WireEr
     }
 }
 
+// ---------------------------------------------------------------------------
+// Text-plane framing (serve + admin listeners)
+// ---------------------------------------------------------------------------
+
+/// Defensive cap on one text-protocol request line.
+pub(crate) const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Largest `BATCH <n>` the serve plane accepts.
+pub const MAX_BATCH: usize = 256;
+
+/// Minimal buffered line reader that survives read timeouts: a partial
+/// line stays buffered across `WouldBlock`/`TimedOut`, so a connection
+/// loop can poll its stop flag between read attempts. (`BufReader` makes
+/// no such guarantee for `read_line` under errors.) Shared by the serve
+/// and admin listeners.
+pub(crate) struct LineReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl<R: Read> LineReader<R> {
+    pub(crate) fn new(inner: R) -> Self {
+        LineReader {
+            inner,
+            buf: Vec::new(),
+            start: 0,
+        }
+    }
+
+    /// Next newline-terminated line without the terminator (a trailing
+    /// `\r` is stripped). `Ok(None)` = clean EOF; timeouts bubble up as
+    /// errors with any partial line preserved for the next call.
+    pub(crate) fn read_line(&mut self) -> std::io::Result<Option<String>> {
+        loop {
+            if let Some(pos) = self.buf[self.start..].iter().position(|&b| b == b'\n') {
+                let end = self.start + pos;
+                let mut slice = &self.buf[self.start..end];
+                if slice.last() == Some(&b'\r') {
+                    slice = &slice[..slice.len() - 1];
+                }
+                let line = String::from_utf8_lossy(slice).into_owned();
+                self.start = end + 1;
+                if self.start >= self.buf.len() {
+                    self.buf.clear();
+                    self.start = 0;
+                }
+                return Ok(Some(line));
+            }
+            if self.start > 0 {
+                self.buf.drain(..self.start);
+                self.start = 0;
+            }
+            if self.buf.len() > MAX_LINE_BYTES {
+                return Err(std::io::Error::new(
+                    ErrorKind::InvalidData,
+                    "request line too long",
+                ));
+            }
+            let mut chunk = [0u8; 4096];
+            match self.inner.read(&mut chunk) {
+                Ok(0) => {
+                    if self.buf.is_empty() {
+                        return Ok(None);
+                    }
+                    // final unterminated line before EOF
+                    let mut slice = &self.buf[..];
+                    if slice.last() == Some(&b'\r') {
+                        slice = &slice[..slice.len() - 1];
+                    }
+                    let line = String::from_utf8_lossy(slice).into_owned();
+                    self.buf.clear();
+                    return Ok(Some(line));
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+// ---------------------------------------------------------------------------
+// Typed text-plane requests (one strict parser per plane)
+// ---------------------------------------------------------------------------
+
+/// One parsed serve-plane request. Borrowed from the request line —
+/// parsing allocates only for collected argument lists.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum ServeRequest<'a> {
+    Topics,
+    TopTerms { topic: usize, n: usize },
+    Classify { words: Vec<&'a str> },
+    FoldIn { doc: Vec<(&'a str, f32)> },
+    Docs { topic: usize, n: usize },
+    Stats,
+    Ping,
+    Quit,
+    Batch { n: usize },
+}
+
+/// Strictly parse `<topic> [n]`: malformed numerics, `n = 0`, trailing
+/// garbage, and out-of-range topics all answer ERR (never a default).
+fn parse_topic_n(
+    parts: &mut std::str::SplitWhitespace,
+    usage: &str,
+    k: usize,
+) -> Result<(usize, usize), String> {
+    let topic = match parts.next() {
+        None => return Err(format!("ERR usage: {usage}")),
+        Some(tok) => match tok.parse::<usize>() {
+            Ok(t) => t,
+            Err(_) => return Err(format!("ERR bad topic {tok:?} (usage: {usage})")),
+        },
+    };
+    let n = match parts.next() {
+        None => 5,
+        Some(tok) => match tok.parse::<usize>() {
+            Ok(0) => return Err(format!("ERR n must be >= 1 (usage: {usage})")),
+            Ok(n) => n,
+            Err(_) => return Err(format!("ERR bad count {tok:?} (usage: {usage})")),
+        },
+    };
+    if parts.next().is_some() {
+        return Err(format!("ERR trailing arguments (usage: {usage})"));
+    }
+    if topic >= k {
+        return Err(format!("ERR topic {topic} out of range (k={k})"));
+    }
+    Ok((topic, n))
+}
+
+/// Strictly parse the argument of `BATCH <n>` (shared by the serve
+/// connection loop and [`ServeRequest::parse`]).
+pub(crate) fn parse_batch_n(tok: Option<&str>, extra: Option<&str>) -> Result<usize, String> {
+    if extra.is_some() {
+        return Err(format!(
+            "ERR trailing arguments (usage: BATCH <n>, 1..={MAX_BATCH})"
+        ));
+    }
+    match tok.and_then(|s| s.parse::<usize>().ok()) {
+        Some(n) if (1..=MAX_BATCH).contains(&n) => Ok(n),
+        _ => Err(format!("ERR usage: BATCH <n> (1..={MAX_BATCH})")),
+    }
+}
+
+impl<'a> ServeRequest<'a> {
+    /// Parse one serve-plane line against model dimension `k`. `Err` is
+    /// the complete `ERR ...` response line — every malformed request is
+    /// a typed refusal with shared semantics, never a default.
+    pub(crate) fn parse(line: &'a str, k: usize) -> Result<ServeRequest<'a>, String> {
+        let mut parts = line.split_whitespace();
+        let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
+        match cmd.as_str() {
+            "TOPICS" => Ok(ServeRequest::Topics),
+            "TOPTERMS" => {
+                let (topic, n) = parse_topic_n(&mut parts, "TOPTERMS <topic> [n]", k)?;
+                Ok(ServeRequest::TopTerms { topic, n })
+            }
+            "CLASSIFY" => {
+                let words: Vec<&str> = parts.collect();
+                if words.is_empty() {
+                    return Err("ERR usage: CLASSIFY <word> ...".into());
+                }
+                Ok(ServeRequest::Classify { words })
+            }
+            "FOLDIN" => {
+                const USAGE: &str = "ERR usage: FOLDIN <word:count> ...";
+                let mut doc: Vec<(&str, f32)> = Vec::new();
+                for tok in parts {
+                    let Some((word, count)) = tok.rsplit_once(':') else {
+                        return Err(format!("{USAGE} (bad pair {tok:?})"));
+                    };
+                    if word.is_empty() {
+                        return Err(format!("{USAGE} (bad pair {tok:?})"));
+                    }
+                    match count.parse::<f32>() {
+                        Ok(c) if c.is_finite() && c > 0.0 => doc.push((word, c)),
+                        _ => return Err(format!("{USAGE} (bad count {count:?} in {tok:?})")),
+                    }
+                }
+                if doc.is_empty() {
+                    return Err(USAGE.into());
+                }
+                Ok(ServeRequest::FoldIn { doc })
+            }
+            "DOCS" => {
+                let (topic, n) = parse_topic_n(&mut parts, "DOCS <topic> [n]", k)?;
+                Ok(ServeRequest::Docs { topic, n })
+            }
+            "STATS" => Ok(ServeRequest::Stats),
+            "PING" => Ok(ServeRequest::Ping),
+            "QUIT" => Ok(ServeRequest::Quit),
+            "BATCH" => {
+                let n = parse_batch_n(parts.next(), parts.next())?;
+                Ok(ServeRequest::Batch { n })
+            }
+            "" => Err("ERR empty command".into()),
+            other => Err(format!("ERR unknown command {other:?}")),
+        }
+    }
+}
+
+/// One parsed admin-plane request.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum AdminRequest {
+    Health,
+    Ready,
+    Metrics,
+    Provenance,
+    Reload { path: String },
+    Ping,
+}
+
+impl AdminRequest {
+    /// Parse one admin-plane line; `Err` is the complete `ERR ...`
+    /// response line, exactly as on the serve plane.
+    pub(crate) fn parse(line: &str) -> Result<AdminRequest, String> {
+        let mut parts = line.split_whitespace();
+        let cmd = parts.next().unwrap_or("").to_ascii_uppercase();
+        match cmd.as_str() {
+            "HEALTH" => Ok(AdminRequest::Health),
+            "READY" => Ok(AdminRequest::Ready),
+            "METRICS" => Ok(AdminRequest::Metrics),
+            "PROVENANCE" => Ok(AdminRequest::Provenance),
+            "RELOAD" => match (parts.next(), parts.next()) {
+                (Some(p), None) => Ok(AdminRequest::Reload {
+                    path: p.to_string(),
+                }),
+                _ => Err("ERR usage: RELOAD <path.esnmf>".into()),
+            },
+            "PING" => Ok(AdminRequest::Ping),
+            "" => Err("ERR empty command".into()),
+            other => Err(format!("ERR unknown admin command {other:?}")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker-plane binary frames (distributed factorization)
+// ---------------------------------------------------------------------------
+
+/// Frame magic of the worker plane (`ESNW`).
+pub(crate) const WORKER_MAGIC: [u8; 4] = *b"ESNW";
+
+/// Protocol version exchanged in the `Hello`/`Welcome` handshake; a
+/// worker and coordinator refuse to pair across versions.
+pub(crate) const WORKER_PROTOCOL_VERSION: u16 = 1;
+
+/// Defensive cap on one worker frame's payload. Fragment frames carry a
+/// span's surviving nonzeros (u32 index + f32 value each), so a gigabyte
+/// bounds spans far beyond anything the coordinator assigns.
+pub(crate) const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// One enforcement pass a worker runs over its assigned block span.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum PassReq {
+    /// Pass 1 of global enforcement: fold every solved + projected
+    /// candidate value of the span into one O(t) top-t selector.
+    Select { t: u64 },
+    /// Emission: filter the span's candidate values with the keep
+    /// predicate `(keep_tag, tau)` (the wire form of the half-step's
+    /// `Keep` enum; tags 0=All, 1=FiniteAtLeast, 2=AtLeast,
+    /// 3=AboveOrTie) and return CSR fragments.
+    Emit { keep_tag: u8, tau: f32 },
+}
+
+/// One self-contained half-step work assignment: everything a stateless
+/// worker needs to compute blocks `span.0..span.1` of the global block
+/// list `fixed_chunks(rows, block_rows)` — the fixed factor (bit-exact
+/// CSR), the ridged Gram inverse (computed once by the coordinator so
+/// every worker solves against identical bits), and the pass to run.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) struct ComputeReq {
+    /// `true`: update-U half-step (stream `A`'s rows); `false`:
+    /// update-V half-step (stream `Aᵀ`'s rows).
+    pub step_u: bool,
+    pub k: u32,
+    pub block_rows: u64,
+    /// assigned block-index span `[lo, hi)` of the global block list
+    pub span: (u64, u64),
+    /// the fixed factor of this half-step
+    pub factor: Csr,
+    /// row-major (k × k) ridged Gram inverse
+    pub g_inv: Vec<f32>,
+    pub pass: PassReq,
+}
+
+/// One CSR fragment a worker emits for one block (the wire form of the
+/// half-step's per-block emission).
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) struct WireEmit {
+    /// surviving nonzeros per output row of the block
+    pub row_nnz: Vec<u32>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+    /// candidate scratch the block materialized (memory telemetry)
+    pub scratch_len: u64,
+}
+
+/// Every frame of the worker plane. Directions: workers send `Hello`,
+/// `Selected`, `Fragments`, `Refuse` and `Pong`; coordinators send
+/// `Welcome`, `Compute`, `Ping`, `Shutdown` and `Refuse`.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum WorkerMsg {
+    /// Worker handshake: protocol version plus the digest and shape of
+    /// the `.estdm` it opened, so a coordinator refuses a worker serving
+    /// different data before any work is assigned.
+    Hello {
+        version: u16,
+        digest: u64,
+        n_terms: u64,
+        n_docs: u64,
+    },
+    /// Coordinator handshake acknowledgement.
+    Welcome { version: u16 },
+    Compute(ComputeReq),
+    /// Select-pass reply: per-block candidate scratch sizes (block order
+    /// within the span) and the worker's merged top-t selector state.
+    Selected {
+        scratch_lens: Vec<u64>,
+        positives: u64,
+        heap: Vec<f32>,
+    },
+    /// Emit-pass reply: one fragment per block, span order.
+    Fragments { emits: Vec<WireEmit> },
+    /// Typed refusal — the peer violated the protocol or the request
+    /// could not be served (digest mismatch, bad span, store fault).
+    Refuse { message: String },
+    Ping,
+    Pong,
+    /// Coordinator → worker: the run is over, exit cleanly.
+    Shutdown,
+}
+
+impl WorkerMsg {
+    fn tag(&self) -> u8 {
+        match self {
+            WorkerMsg::Hello { .. } => 1,
+            WorkerMsg::Welcome { .. } => 2,
+            WorkerMsg::Compute(_) => 3,
+            WorkerMsg::Selected { .. } => 4,
+            WorkerMsg::Fragments { .. } => 5,
+            WorkerMsg::Refuse { .. } => 6,
+            WorkerMsg::Ping => 7,
+            WorkerMsg::Pong => 8,
+            WorkerMsg::Shutdown => 9,
+        }
+    }
+}
+
+fn write_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn read_f32s(r: &mut Reader) -> Result<Vec<f32>, WireError> {
+    let n = r.len("f32 series", 4)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(f32::from_bits(r.u32()?));
+    }
+    Ok(out)
+}
+
+fn write_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn read_u32s(r: &mut Reader) -> Result<Vec<u32>, WireError> {
+    let n = r.len("u32 series", 4)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.u32()?);
+    }
+    Ok(out)
+}
+
+fn write_u64s(out: &mut Vec<u8>, xs: &[u64]) {
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn read_u64s(r: &mut Reader) -> Result<Vec<u64>, WireError> {
+    let n = r.len("u64 series", 8)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.u64()?);
+    }
+    Ok(out)
+}
+
+/// Serialize one message's payload (frame header excluded).
+fn encode_payload(msg: &WorkerMsg) -> Vec<u8> {
+    let mut out = Vec::new();
+    match msg {
+        WorkerMsg::Hello {
+            version,
+            digest,
+            n_terms,
+            n_docs,
+        } => {
+            out.extend_from_slice(&version.to_le_bytes());
+            out.extend_from_slice(&digest.to_le_bytes());
+            out.extend_from_slice(&n_terms.to_le_bytes());
+            out.extend_from_slice(&n_docs.to_le_bytes());
+        }
+        WorkerMsg::Welcome { version } => {
+            out.extend_from_slice(&version.to_le_bytes());
+        }
+        WorkerMsg::Compute(req) => {
+            out.push(u8::from(req.step_u));
+            out.extend_from_slice(&req.k.to_le_bytes());
+            out.extend_from_slice(&req.block_rows.to_le_bytes());
+            out.extend_from_slice(&req.span.0.to_le_bytes());
+            out.extend_from_slice(&req.span.1.to_le_bytes());
+            match &req.pass {
+                PassReq::Select { t } => {
+                    out.push(0);
+                    out.extend_from_slice(&t.to_le_bytes());
+                }
+                PassReq::Emit { keep_tag, tau } => {
+                    out.push(1);
+                    out.push(*keep_tag);
+                    out.extend_from_slice(&tau.to_bits().to_le_bytes());
+                }
+            }
+            write_f32s(&mut out, &req.g_inv);
+            req.factor.write_bytes(&mut out);
+        }
+        WorkerMsg::Selected {
+            scratch_lens,
+            positives,
+            heap,
+        } => {
+            write_u64s(&mut out, scratch_lens);
+            out.extend_from_slice(&positives.to_le_bytes());
+            write_f32s(&mut out, heap);
+        }
+        WorkerMsg::Fragments { emits } => {
+            out.extend_from_slice(&(emits.len() as u64).to_le_bytes());
+            for e in emits {
+                write_u32s(&mut out, &e.row_nnz);
+                write_u32s(&mut out, &e.indices);
+                write_f32s(&mut out, &e.values);
+                out.extend_from_slice(&e.scratch_len.to_le_bytes());
+            }
+        }
+        WorkerMsg::Refuse { message } => {
+            write_strings(&mut out, std::slice::from_ref(message));
+        }
+        WorkerMsg::Ping | WorkerMsg::Pong | WorkerMsg::Shutdown => {}
+    }
+    out
+}
+
+/// Parse one message's payload for `tag`. Trailing bytes are corrupt —
+/// a frame means exactly one message.
+fn decode_payload(tag: u8, payload: &[u8]) -> Result<WorkerMsg, WireError> {
+    let mut r = Reader::new(payload);
+    let msg = match tag {
+        1 => WorkerMsg::Hello {
+            version: u16::from_le_bytes(r.take(2)?.try_into().unwrap()),
+            digest: r.u64()?,
+            n_terms: r.u64()?,
+            n_docs: r.u64()?,
+        },
+        2 => WorkerMsg::Welcome {
+            version: u16::from_le_bytes(r.take(2)?.try_into().unwrap()),
+        },
+        3 => {
+            let step_u = match r.u8()? {
+                0 => false,
+                1 => true,
+                other => {
+                    return Err(WireError::Corrupt(format!("bad step flag {other}")));
+                }
+            };
+            let k = r.u32()?;
+            let block_rows = r.u64()?;
+            let span = (r.u64()?, r.u64()?);
+            let pass = match r.u8()? {
+                0 => PassReq::Select { t: r.u64()? },
+                1 => {
+                    let keep_tag = r.u8()?;
+                    if keep_tag > 3 {
+                        return Err(WireError::Corrupt(format!("bad keep tag {keep_tag}")));
+                    }
+                    PassReq::Emit {
+                        keep_tag,
+                        tau: f32::from_bits(r.u32()?),
+                    }
+                }
+                other => {
+                    return Err(WireError::Corrupt(format!("bad pass tag {other}")));
+                }
+            };
+            let g_inv = read_f32s(&mut r)?;
+            let factor = Csr::read_bytes(r.bytes, &mut r.pos)
+                .map_err(|e| WireError::Corrupt(format!("factor: {e}")))?;
+            WorkerMsg::Compute(ComputeReq {
+                step_u,
+                k,
+                block_rows,
+                span,
+                factor,
+                g_inv,
+                pass,
+            })
+        }
+        4 => WorkerMsg::Selected {
+            scratch_lens: read_u64s(&mut r)?,
+            positives: r.u64()?,
+            heap: read_f32s(&mut r)?,
+        },
+        5 => {
+            // each fragment costs at least its three 8-byte length
+            // prefixes plus the scratch-len field
+            let n = r.len("fragment list", 32)?;
+            let mut emits = Vec::with_capacity(n);
+            for _ in 0..n {
+                emits.push(WireEmit {
+                    row_nnz: read_u32s(&mut r)?,
+                    indices: read_u32s(&mut r)?,
+                    values: read_f32s(&mut r)?,
+                    scratch_len: r.u64()?,
+                });
+            }
+            WorkerMsg::Fragments { emits }
+        }
+        6 => {
+            let mut strings = read_strings(&mut r)?;
+            if strings.len() != 1 {
+                return Err(WireError::Corrupt(format!(
+                    "refusal carries {} strings, wanted 1",
+                    strings.len()
+                )));
+            }
+            WorkerMsg::Refuse {
+                message: strings.pop().unwrap(),
+            }
+        }
+        7 => WorkerMsg::Ping,
+        8 => WorkerMsg::Pong,
+        9 => WorkerMsg::Shutdown,
+        other => {
+            return Err(WireError::Corrupt(format!("unknown frame tag {other}")));
+        }
+    };
+    if r.pos != payload.len() {
+        return Err(WireError::Corrupt(format!(
+            "{} trailing bytes after frame payload",
+            payload.len() - r.pos
+        )));
+    }
+    Ok(msg)
+}
+
+/// Write one framed message: magic, tag, payload length, payload.
+pub(crate) fn write_msg<W: Write>(w: &mut W, msg: &WorkerMsg) -> std::io::Result<()> {
+    let payload = encode_payload(msg);
+    debug_assert!(payload.len() <= MAX_FRAME_BYTES);
+    let mut frame = Vec::with_capacity(9 + payload.len());
+    frame.extend_from_slice(&WORKER_MAGIC);
+    frame.push(msg.tag());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    w.write_all(&frame)?;
+    w.flush()
+}
+
+/// Read one framed message. I/O failures (including read timeouts — the
+/// coordinator's straggler detection) surface as
+/// [`EsnmfError::Io`](crate::EsnmfError::Io); malformed frames as
+/// [`EsnmfError::Wire`](crate::EsnmfError::Wire). Never hangs past the
+/// stream's own timeout, never allocates past [`MAX_FRAME_BYTES`].
+pub(crate) fn read_msg<R: Read>(r: &mut R) -> Result<WorkerMsg, crate::EsnmfError> {
+    let mut header = [0u8; 9];
+    r.read_exact(&mut header)?;
+    if header[0..4] != WORKER_MAGIC {
+        return Err(WireError::Corrupt(format!(
+            "bad frame magic {:02x?} (not a worker-plane peer)",
+            &header[0..4]
+        ))
+        .into());
+    }
+    let tag = header[4];
+    let len = u32::from_le_bytes(header[5..9].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Corrupt(format!(
+            "frame claims {len} payload bytes (cap {MAX_FRAME_BYTES})"
+        ))
+        .into());
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(decode_payload(tag, &payload)?)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,5 +824,251 @@ mod tests {
         out.extend_from_slice(&[0xff, 0xfe]);
         let mut r = Reader::new(&out);
         assert!(matches!(read_strings(&mut r), Err(WireError::Corrupt(_))));
+    }
+
+    #[test]
+    fn line_reader_handles_crlf_caps_and_final_line() {
+        let mut lr = LineReader::new(&b"alpha\r\nbeta\ntail"[..]);
+        assert_eq!(lr.read_line().unwrap().as_deref(), Some("alpha"));
+        assert_eq!(lr.read_line().unwrap().as_deref(), Some("beta"));
+        // final unterminated line is still delivered before clean EOF
+        assert_eq!(lr.read_line().unwrap().as_deref(), Some("tail"));
+        assert_eq!(lr.read_line().unwrap(), None);
+
+        let long = vec![b'x'; MAX_LINE_BYTES + 2];
+        let mut lr = LineReader::new(&long[..]);
+        let err = lr.read_line().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn serve_requests_parse_strictly() {
+        assert_eq!(ServeRequest::parse("topics extra junk", 4), Ok(ServeRequest::Topics));
+        assert_eq!(
+            ServeRequest::parse("TOPTERMS 2", 4),
+            Ok(ServeRequest::TopTerms { topic: 2, n: 5 })
+        );
+        assert_eq!(
+            ServeRequest::parse("docs 1 9", 4),
+            Ok(ServeRequest::Docs { topic: 1, n: 9 })
+        );
+        assert_eq!(
+            ServeRequest::parse("TOPTERMS 9", 4).unwrap_err(),
+            "ERR topic 9 out of range (k=4)"
+        );
+        assert_eq!(
+            ServeRequest::parse("TOPTERMS 1 0", 4).unwrap_err(),
+            "ERR n must be >= 1 (usage: TOPTERMS <topic> [n])"
+        );
+        assert_eq!(
+            ServeRequest::parse("TOPTERMS 1 2 3", 4).unwrap_err(),
+            "ERR trailing arguments (usage: TOPTERMS <topic> [n])"
+        );
+        assert_eq!(
+            ServeRequest::parse("CLASSIFY a b", 4),
+            Ok(ServeRequest::Classify { words: vec!["a", "b"] })
+        );
+        assert_eq!(
+            ServeRequest::parse("CLASSIFY", 4).unwrap_err(),
+            "ERR usage: CLASSIFY <word> ..."
+        );
+        assert_eq!(
+            ServeRequest::parse("FOLDIN cat:2 dog:0.5", 4),
+            Ok(ServeRequest::FoldIn {
+                doc: vec![("cat", 2.0), ("dog", 0.5)]
+            })
+        );
+        assert_eq!(
+            ServeRequest::parse("FOLDIN cat:zero", 4).unwrap_err(),
+            "ERR usage: FOLDIN <word:count> ... (bad count \"zero\" in \"cat:zero\")"
+        );
+        assert_eq!(
+            ServeRequest::parse("FOLDIN nocolon", 4).unwrap_err(),
+            "ERR usage: FOLDIN <word:count> ... (bad pair \"nocolon\")"
+        );
+        assert_eq!(ServeRequest::parse("BATCH 3", 4), Ok(ServeRequest::Batch { n: 3 }));
+        assert_eq!(
+            ServeRequest::parse("BATCH 0", 4).unwrap_err(),
+            format!("ERR usage: BATCH <n> (1..={MAX_BATCH})")
+        );
+        assert_eq!(ServeRequest::parse("", 4).unwrap_err(), "ERR empty command");
+        assert_eq!(
+            ServeRequest::parse("FROB", 4).unwrap_err(),
+            "ERR unknown command \"FROB\""
+        );
+    }
+
+    #[test]
+    fn admin_requests_parse_strictly() {
+        assert_eq!(AdminRequest::parse("health"), Ok(AdminRequest::Health));
+        assert_eq!(
+            AdminRequest::parse("RELOAD /tmp/m.esnmf"),
+            Ok(AdminRequest::Reload {
+                path: "/tmp/m.esnmf".to_string()
+            })
+        );
+        assert_eq!(
+            AdminRequest::parse("RELOAD").unwrap_err(),
+            "ERR usage: RELOAD <path.esnmf>"
+        );
+        assert_eq!(
+            AdminRequest::parse("RELOAD a b").unwrap_err(),
+            "ERR usage: RELOAD <path.esnmf>"
+        );
+        assert_eq!(
+            AdminRequest::parse("SHUTDOWN").unwrap_err(),
+            "ERR unknown admin command \"SHUTDOWN\""
+        );
+    }
+
+    fn roundtrip(msg: &WorkerMsg) -> WorkerMsg {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, msg).unwrap();
+        let mut cursor = &buf[..];
+        let back = read_msg(&mut cursor).unwrap();
+        assert!(cursor.is_empty(), "frame left trailing bytes");
+        back
+    }
+
+    #[test]
+    fn worker_frames_roundtrip() {
+        let factor = Csr::from_dense(2, 2, &[1.0, 0.0, 0.25, -3.5]);
+        let msgs = vec![
+            WorkerMsg::Hello {
+                version: WORKER_PROTOCOL_VERSION,
+                digest: 0xdead_beef_cafe_f00d,
+                n_terms: 12,
+                n_docs: 34,
+            },
+            WorkerMsg::Welcome {
+                version: WORKER_PROTOCOL_VERSION,
+            },
+            WorkerMsg::Compute(ComputeReq {
+                step_u: true,
+                k: 2,
+                block_rows: 3,
+                span: (1, 4),
+                factor: factor.clone(),
+                g_inv: vec![1.0, 0.0, 0.0, 1.0],
+                pass: PassReq::Select { t: 7 },
+            }),
+            WorkerMsg::Compute(ComputeReq {
+                step_u: false,
+                k: 2,
+                block_rows: 3,
+                span: (0, 1),
+                factor,
+                g_inv: vec![0.5; 4],
+                pass: PassReq::Emit {
+                    keep_tag: 3,
+                    tau: 0.125,
+                },
+            }),
+            WorkerMsg::Selected {
+                scratch_lens: vec![6, 0, 4],
+                positives: 11,
+                heap: vec![0.5, 1.5, 2.5],
+            },
+            WorkerMsg::Fragments {
+                emits: vec![WireEmit {
+                    row_nnz: vec![2, 0, 1],
+                    indices: vec![0, 1, 1],
+                    values: vec![1.0, 2.0, 3.0],
+                    scratch_len: 6,
+                }],
+            },
+            WorkerMsg::Refuse {
+                message: "corpus digest mismatch".to_string(),
+            },
+            WorkerMsg::Ping,
+            WorkerMsg::Pong,
+            WorkerMsg::Shutdown,
+        ];
+        for msg in &msgs {
+            assert_eq!(&roundtrip(msg), msg);
+        }
+    }
+
+    #[test]
+    fn nan_tau_survives_the_wire_bit_exact() {
+        // Exact-mode emission ships tau = NaN when there is no cutoff;
+        // the keep predicate distinguishes NaN payloads by bit pattern.
+        let msg = WorkerMsg::Compute(ComputeReq {
+            step_u: true,
+            k: 1,
+            block_rows: 1,
+            span: (0, 1),
+            factor: Csr::zeros(1, 1),
+            g_inv: vec![1.0],
+            pass: PassReq::Emit {
+                keep_tag: 0,
+                tau: f32::NAN,
+            },
+        });
+        match roundtrip(&msg) {
+            WorkerMsg::Compute(req) => match req.pass {
+                PassReq::Emit { tau, .. } => {
+                    assert_eq!(tau.to_bits(), f32::NAN.to_bits());
+                }
+                other => panic!("wrong pass {other:?}"),
+            },
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupt_worker_frames_are_typed_refusals() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &WorkerMsg::Ping).unwrap();
+
+        // wrong magic
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            read_msg(&mut &bad[..]),
+            Err(crate::EsnmfError::Wire(WireError::Corrupt(_)))
+        ));
+
+        // unknown tag
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        assert!(matches!(
+            read_msg(&mut &bad[..]),
+            Err(crate::EsnmfError::Wire(WireError::Corrupt(_)))
+        ));
+
+        // length overrun claim
+        let mut bad = buf.clone();
+        bad[5..9].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(
+            read_msg(&mut &bad[..]),
+            Err(crate::EsnmfError::Wire(WireError::Corrupt(_)))
+        ));
+
+        // truncated stream mid-frame surfaces as I/O, not a hang
+        let mut framed = Vec::new();
+        write_msg(
+            &mut framed,
+            &WorkerMsg::Refuse {
+                message: "x".to_string(),
+            },
+        )
+        .unwrap();
+        framed.truncate(framed.len() - 1);
+        assert!(matches!(
+            read_msg(&mut &framed[..]),
+            Err(crate::EsnmfError::Io(_))
+        ));
+
+        // trailing payload bytes are corrupt, not silently ignored
+        let mut padded = Vec::new();
+        padded.extend_from_slice(&WORKER_MAGIC);
+        padded.push(7); // Ping carries no payload
+        padded.extend_from_slice(&1u32.to_le_bytes());
+        padded.push(0);
+        assert!(matches!(
+            read_msg(&mut &padded[..]),
+            Err(crate::EsnmfError::Wire(WireError::Corrupt(_)))
+        ));
     }
 }

@@ -28,6 +28,7 @@ pub mod config;
 pub mod coordinator;
 pub mod corpus;
 pub mod dense;
+pub mod error;
 pub mod eval;
 pub mod experiments;
 pub mod io;
@@ -37,5 +38,9 @@ pub mod sparse;
 pub mod text;
 pub mod util;
 
-/// Crate-wide result type.
+/// Crate-wide result type for internals that have not adopted the typed
+/// surface; the CLI boundary and the distributed plane use
+/// [`EsnmfError`] (every `anyhow` error converts in via `From`).
 pub type Result<T> = anyhow::Result<T>;
+
+pub use error::EsnmfError;

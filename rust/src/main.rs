@@ -9,10 +9,17 @@
 //!                  `table1`, or `all`).
 //! * `serve`      — factorize a corpus (or load a `.esnmf` snapshot),
 //!                  then serve topic queries over TCP.
+//! * `worker`     — join a distributed factorization as a stateless
+//!                  compute worker over a shared `.estdm` store.
 //! * `gen-corpus` — write a synthetic preset corpus to disk as .txt files.
 //! * `artifacts`  — inspect/smoke-test the compiled XLA artifacts.
 //! * `bench-check`— compare guarded metrics between two `BENCH_smoke.json`
 //!                  trajectory points (the CI memory-regression gate).
+//!
+//! Every failure funnels through [`EsnmfError`], so the process exit code
+//! is the failure *category* (see `src/error.rs`): 2 = usage/config,
+//! 3 = corrupt data at rest or on the wire, 4 = protocol violation
+//! between live processes, 1 = everything else.
 
 use esnmf::backend::{AlsBackend, BackendKind, NativeBackend, XlaBackend};
 use esnmf::cli::Args;
@@ -30,8 +37,12 @@ use esnmf::runtime::{self, ProgramKind, XlaExecutor};
 use esnmf::sparse::RowSource;
 use esnmf::text::TermDocMatrix;
 use esnmf::util::logging;
-use esnmf::{log_info, Result};
+use esnmf::{log_info, EsnmfError};
 use std::sync::Arc;
+
+/// Every CLI path funnels into the typed error surface, so `main` can
+/// map failure categories to stable exit codes.
+type CliResult<T = ()> = std::result::Result<T, EsnmfError>;
 
 const USAGE: &str = r#"esnmf — Enforced Sparse Non-Negative Matrix Factorization
 
@@ -43,6 +54,8 @@ USAGE:
                    [--threads N|auto] [--block-rows N|auto] [--config file.toml] [--top N]
                    [--save-model m.esnmf] [--checkpoint-every N]
                    [--resume ck.esnmf] [--warm-start old.esnmf]
+                   [--distributed] [--dist-workers N] [--dist-listen 127.0.0.1:7611]
+                   [--dist-timeout SECS]
 
   --threads row-partitions the ALS hot path across N workers (default:
   auto = all cores). Results are bit-identical at any thread count.
@@ -64,6 +77,22 @@ USAGE:
   from a prior snapshot aligned by term, for incremental corpora. All
   snapshot digest checks work against a store too (its metadata carries
   the same corpus digest).
+  --distributed runs the factorization as a coordinator: it listens on
+  --dist-listen, waits (up to --dist-timeout seconds) for --dist-workers
+  `esnmf worker` processes that opened the *same* .estdm store, and
+  scatters each half-step's block spans to them. Factors are
+  bit-identical to the single-process run at any worker count; a worker
+  that dies or straggles past --dist-timeout is marked dead and its
+  span recomputed (by survivors, else locally), so the run always
+  completes. Requires --corpus-store --backend native --algorithm als.
+  esnmf worker     <corpus.estdm> [--coordinator 127.0.0.1:7611] [--threads N|auto]
+
+  Joins a distributed factorization as a stateless compute worker: opens
+  the shared .estdm store, connects to the coordinator (retrying while
+  it starts up), proves it sees the same corpus (digest handshake), then
+  computes assigned half-step spans until told to shut down. Workers
+  hold no iteration state — kill one mid-run and the result is still
+  bit-identical.
   esnmf ingest     [--corpus ... --scale ... --seed N | dir:<path>]
                    [--shard-rows N|auto] --out corpus.estdm
 
@@ -101,8 +130,14 @@ USAGE:
   beyond the tolerance factor — the CI memory- and latency-regression
   gate (guards are substring matches; `p99_us` covers the serving-plane
   latency metrics). A missing/empty --previous passes (no baseline
-  yet).
+  yet). `wall_s` guards the benchmark wall-time medians (use a looser
+  --tolerance for those — wall time is noisy in CI).
   esnmf help
+
+EXIT CODES:
+  0 success · 1 runtime/I-O failure · 2 usage or config error ·
+  3 corrupt snapshot/store/wire data · 4 protocol violation between
+  coordinator and worker
 "#;
 
 fn main() {
@@ -110,15 +145,15 @@ fn main() {
     let exit = match run() {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
-            1
+            eprintln!("error: {e}");
+            e.exit_code()
         }
     };
     std::process::exit(exit);
 }
 
-fn run() -> Result<()> {
-    let mut args = Args::from_env().map_err(anyhow::Error::msg)?;
+fn run() -> CliResult {
+    let mut args = Args::from_env().map_err(EsnmfError::usage)?;
     if args.flag("verbose") {
         logging::set_level(logging::Level::Debug);
     }
@@ -130,6 +165,7 @@ fn run() -> Result<()> {
         Some("ingest") => cmd_ingest(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("serve") => cmd_serve(&mut args),
+        Some("worker") => cmd_worker(&mut args),
         Some("gen-corpus") => cmd_gen_corpus(&mut args),
         Some("artifacts") => cmd_artifacts(&mut args),
         Some("bench-check") => cmd_bench_check(&mut args),
@@ -137,16 +173,18 @@ fn run() -> Result<()> {
             print!("{USAGE}");
             Ok(())
         }
-        Some(other) => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
+        Some(other) => Err(EsnmfError::usage(format!(
+            "unknown subcommand {other:?}\n{USAGE}"
+        ))),
     }
 }
 
-fn build_run_config(args: &mut Args) -> Result<RunConfig> {
+fn build_run_config(args: &mut Args) -> CliResult<RunConfig> {
     let mut cfg = RunConfig::default();
     if let Some(path) = args.opt_str("config") {
-        let file = ConfigFile::load(std::path::Path::new(&path))
-            .map_err(anyhow::Error::msg)?;
-        cfg.apply_file(&file)?;
+        let file = ConfigFile::load(std::path::Path::new(&path)).map_err(EsnmfError::config)?;
+        cfg.apply_file(&file)
+            .map_err(|e| EsnmfError::config(format!("{e:#}")))?;
     }
     if let Some(v) = args.opt_str("corpus") {
         cfg.corpus = v;
@@ -155,59 +193,57 @@ fn build_run_config(args: &mut Args) -> Result<RunConfig> {
         cfg.corpus_store = Some(v);
     }
     if let Some(v) = args.opt_str("scale") {
-        cfg.scale = Scale::parse(&v).ok_or_else(|| anyhow::anyhow!("bad --scale {v}"))?;
+        cfg.scale =
+            Scale::parse(&v).ok_or_else(|| EsnmfError::usage(format!("bad --scale {v}")))?;
     }
-    if let Some(v) = args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
+    if let Some(v) = args.opt_parse::<u64>("seed").map_err(EsnmfError::usage)? {
         cfg.seed = v;
     }
     if let Some(v) = args.opt_str("algorithm") {
         cfg.algorithm = match v.as_str() {
             "als" => Algorithm::Als,
             "seq" | "sequential" => Algorithm::Sequential,
-            other => anyhow::bail!("bad --algorithm {other}"),
+            other => return Err(EsnmfError::usage(format!("bad --algorithm {other}"))),
         };
     }
     if let Some(v) = args.opt_str("backend") {
-        cfg.backend =
-            BackendKind::parse(&v).ok_or_else(|| anyhow::anyhow!("bad --backend {v}"))?;
+        cfg.backend = BackendKind::parse(&v)
+            .ok_or_else(|| EsnmfError::usage(format!("bad --backend {v}")))?;
     }
-    if let Some(v) = args.opt_parse::<usize>("k").map_err(anyhow::Error::msg)? {
+    if let Some(v) = args.opt_parse::<usize>("k").map_err(EsnmfError::usage)? {
         cfg.k = v;
     }
-    if let Some(v) = args.opt_parse::<usize>("iters").map_err(anyhow::Error::msg)? {
+    if let Some(v) = args.opt_parse::<usize>("iters").map_err(EsnmfError::usage)? {
         cfg.iters = v;
     }
-    if let Some(v) = args.opt_parse::<f64>("tol").map_err(anyhow::Error::msg)? {
+    if let Some(v) = args.opt_parse::<f64>("tol").map_err(EsnmfError::usage)? {
         cfg.tol = v;
     }
     if let Some(v) = args.opt_str("sparsity") {
         cfg.sparsity_mode = v;
     }
-    if let Some(v) = args.opt_parse::<usize>("t-u").map_err(anyhow::Error::msg)? {
+    if let Some(v) = args.opt_parse::<usize>("t-u").map_err(EsnmfError::usage)? {
         cfg.t_u = Some(v);
     }
-    if let Some(v) = args.opt_parse::<usize>("t-v").map_err(anyhow::Error::msg)? {
+    if let Some(v) = args.opt_parse::<usize>("t-v").map_err(EsnmfError::usage)? {
         cfg.t_v = Some(v);
     }
     if let Some(v) = args
         .opt_parse::<usize>("init-nnz")
-        .map_err(anyhow::Error::msg)?
+        .map_err(EsnmfError::usage)?
     {
         cfg.init_nnz = Some(v);
     }
-    if let Some(v) = args.opt_parse::<f32>("tau-u").map_err(anyhow::Error::msg)? {
+    if let Some(v) = args.opt_parse::<f32>("tau-u").map_err(EsnmfError::usage)? {
         cfg.tau_u = Some(v);
     }
-    if let Some(v) = args.opt_parse::<f32>("tau-v").map_err(anyhow::Error::msg)? {
+    if let Some(v) = args.opt_parse::<f32>("tau-v").map_err(EsnmfError::usage)? {
         cfg.tau_v = Some(v);
     }
-    if let Some(v) = args.opt_threads("threads").map_err(anyhow::Error::msg)? {
+    if let Some(v) = args.opt_threads("threads").map_err(EsnmfError::usage)? {
         cfg.threads = v;
     }
-    if let Some(v) = args
-        .opt_threads("block-rows")
-        .map_err(anyhow::Error::msg)?
-    {
+    if let Some(v) = args.opt_threads("block-rows").map_err(EsnmfError::usage)? {
         cfg.block_rows = v;
     }
     if let Some(v) = args.opt_str("save-model") {
@@ -215,7 +251,7 @@ fn build_run_config(args: &mut Args) -> Result<RunConfig> {
     }
     if let Some(v) = args
         .opt_parse::<usize>("checkpoint-every")
-        .map_err(anyhow::Error::msg)?
+        .map_err(EsnmfError::usage)?
     {
         cfg.checkpoint_every = v;
     }
@@ -225,13 +261,33 @@ fn build_run_config(args: &mut Args) -> Result<RunConfig> {
     if let Some(v) = args.opt_str("warm-start") {
         cfg.warm_start = Some(v);
     }
+    if args.flag("distributed") {
+        cfg.distributed = true;
+    }
+    if let Some(v) = args
+        .opt_parse::<usize>("dist-workers")
+        .map_err(EsnmfError::usage)?
+    {
+        cfg.dist_workers = v;
+    }
+    if let Some(v) = args.opt_str("dist-listen") {
+        cfg.dist_listen = v;
+    }
+    if let Some(v) = args
+        .opt_parse::<u64>("dist-timeout")
+        .map_err(EsnmfError::usage)?
+    {
+        cfg.dist_timeout_s = v;
+    }
     Ok(cfg)
 }
 
-/// Load a snapshot with path context on the error.
-fn load_snapshot(path: &str) -> Result<esnmf::io::Snapshot> {
+/// Load a snapshot with path context on the error (the typed
+/// [`EsnmfError::Snapshot`] category — and its exit code — survive the
+/// wrapping).
+fn load_snapshot(path: &str) -> CliResult<esnmf::io::Snapshot> {
     esnmf::io::Snapshot::load(std::path::Path::new(path))
-        .map_err(|e| anyhow::Error::from(e).context(format!("loading snapshot {path}")))
+        .map_err(|e| EsnmfError::from(e).context(format!("loading snapshot {path}")))
 }
 
 /// Persist the finished factorization as a `.esnmf` snapshot. `used` is
@@ -244,10 +300,12 @@ fn save_model(
     corpus: &dyn AlsCorpus,
     r: &esnmf::nmf::NmfResult,
     used: Option<&esnmf::nmf::NmfOptions>,
-) -> Result<()> {
+) -> CliResult {
     let options = match used {
         Some(o) => o.clone(),
-        None => cfg.nmf_options()?,
+        None => cfg
+            .nmf_options()
+            .map_err(|e| EsnmfError::config(format!("{e:#}")))?,
     };
     let snap = esnmf::io::Snapshot {
         options,
@@ -266,20 +324,24 @@ fn save_model(
         },
     };
     snap.save(std::path::Path::new(path))
-        .map_err(|e| anyhow::Error::from(e).context(format!("saving snapshot {path}")))?;
+        .map_err(|e| EsnmfError::from(e).context(format!("saving snapshot {path}")))?;
     log_info!("snapshot", "wrote model snapshot to {path}");
     Ok(())
 }
 
-fn load_corpus(cfg: &RunConfig) -> Result<TermDocMatrix> {
+fn load_corpus(cfg: &RunConfig) -> CliResult<TermDocMatrix> {
     if let Some(dir) = cfg.corpus.strip_prefix("dir:") {
-        return corpus::loader::load_dir(std::path::Path::new(dir));
+        return Ok(corpus::loader::load_dir(std::path::Path::new(dir))?);
     }
     let spec = match cfg.corpus.as_str() {
         "reuters" => corpus::reuters_sim(cfg.scale),
         "wikipedia" => corpus::wikipedia_sim(cfg.scale),
         "pubmed" => corpus::pubmed_sim(cfg.scale),
-        other => anyhow::bail!("unknown corpus {other:?} (reuters|wikipedia|pubmed|dir:<path>)"),
+        other => {
+            return Err(EsnmfError::config(format!(
+                "unknown corpus {other:?} (reuters|wikipedia|pubmed|dir:<path>)"
+            )))
+        }
     };
     log_info!("corpus", "generating {} at {:?} scale", spec.name, cfg.scale);
     Ok(corpus::generate_tdm(&spec, cfg.seed))
@@ -303,11 +365,11 @@ impl LoadedCorpus {
 }
 
 /// `--corpus-store` wins over `--corpus`; everything else loads as before.
-fn load_any_corpus(cfg: &RunConfig) -> Result<LoadedCorpus> {
+fn load_any_corpus(cfg: &RunConfig) -> CliResult<LoadedCorpus> {
     match &cfg.corpus_store {
         Some(path) => {
             let store = CorpusStore::open(std::path::Path::new(path))
-                .map_err(|e| anyhow::Error::from(e).context(format!("opening corpus store {path}")))?;
+                .map_err(|e| EsnmfError::from(e).context(format!("opening corpus store {path}")))?;
             log_info!(
                 "corpus",
                 "opened store {path}: {} terms × {} docs, nnz {} ({} + {} shards on disk)",
@@ -330,7 +392,7 @@ fn load_any_corpus(cfg: &RunConfig) -> Result<LoadedCorpus> {
 fn run_factorization(
     cfg: &RunConfig,
     loaded: &LoadedCorpus,
-) -> Result<(esnmf::nmf::NmfResult, Option<esnmf::nmf::NmfOptions>)> {
+) -> CliResult<(esnmf::nmf::NmfResult, Option<esnmf::nmf::NmfOptions>)> {
     let out = run_factorization_inner(cfg, loaded)?;
     // a store fault latched mid-run means the "result" was computed on
     // partial data: surface the typed error instead of reporting it as
@@ -338,7 +400,7 @@ fn run_factorization(
     // --checkpoint-every was on)
     if let LoadedCorpus::Store(store) = loaded {
         if let Some(e) = store.take_error() {
-            return Err(anyhow::Error::from(e).context(format!(
+            return Err(EsnmfError::from(e).context(format!(
                 "corpus store {} turned unreadable mid-run \
                  (a checkpointed last-good state survives if --checkpoint-every was set)",
                 store.path().display()
@@ -351,25 +413,57 @@ fn run_factorization(
 fn run_factorization_inner(
     cfg: &RunConfig,
     loaded: &LoadedCorpus,
-) -> Result<(esnmf::nmf::NmfResult, Option<esnmf::nmf::NmfOptions>)> {
+) -> CliResult<(esnmf::nmf::NmfResult, Option<esnmf::nmf::NmfOptions>)> {
     let corpus = loaded.as_als();
-    if matches!(loaded, LoadedCorpus::Store(_)) {
-        anyhow::ensure!(
-            cfg.backend == BackendKind::Native,
-            "--corpus-store requires --backend native (the XLA backend needs the matrix resident)"
-        );
+    if matches!(loaded, LoadedCorpus::Store(_)) && cfg.backend != BackendKind::Native {
+        return Err(EsnmfError::config(
+            "--corpus-store requires --backend native (the XLA backend needs the matrix resident)",
+        ));
+    }
+    if cfg.distributed {
+        // the coordinator side of `esnmf worker`: same blocked ALS, with
+        // half-step spans scattered to remote workers over the shared store
+        let store = match loaded {
+            LoadedCorpus::Store(store) => store,
+            LoadedCorpus::Mem(_) => {
+                return Err(EsnmfError::config(
+                    "--distributed requires --corpus-store <c.estdm> \
+                     (workers must open the same on-disk corpus; see `esnmf ingest`)",
+                ))
+            }
+        };
+        if cfg.algorithm != Algorithm::Als {
+            return Err(EsnmfError::config(
+                "--distributed requires --algorithm als",
+            ));
+        }
+        if cfg.resume.is_some() || cfg.warm_start.is_some() {
+            return Err(EsnmfError::config(
+                "--distributed does not combine with --resume/--warm-start",
+            ));
+        }
+        let opts = cfg
+            .nmf_options()
+            .map_err(|e| EsnmfError::config(format!("{e:#}")))?;
+        let r = esnmf::coordinator::run_distributed(store, &opts, &cfg.dist_options())?;
+        return Ok((r, None));
     }
     // checkpoint continuation / warm start run on the native ALS driver
     if cfg.resume.is_some() || cfg.warm_start.is_some() {
-        anyhow::ensure!(
-            cfg.resume.is_none() || cfg.warm_start.is_none(),
-            "--resume and --warm-start are mutually exclusive (resume continues the exact run; warm-start begins a new one)"
-        );
-        anyhow::ensure!(
-            cfg.algorithm == Algorithm::Als && cfg.backend == BackendKind::Native,
-            "--resume/--warm-start require --algorithm als --backend native"
-        );
-        let opts = cfg.nmf_options()?;
+        if cfg.resume.is_some() && cfg.warm_start.is_some() {
+            return Err(EsnmfError::config(
+                "--resume and --warm-start are mutually exclusive \
+                 (resume continues the exact run; warm-start begins a new one)",
+            ));
+        }
+        if cfg.algorithm != Algorithm::Als || cfg.backend != BackendKind::Native {
+            return Err(EsnmfError::config(
+                "--resume/--warm-start require --algorithm als --backend native",
+            ));
+        }
+        let opts = cfg
+            .nmf_options()
+            .map_err(|e| EsnmfError::config(format!("{e:#}")))?;
         if let Some(path) = &cfg.resume {
             let snap = load_snapshot(path)?;
             log_info!(
@@ -384,7 +478,7 @@ fn run_factorization_inner(
         let path = cfg.warm_start.as_ref().unwrap();
         let snap = load_snapshot(path)?;
         snap.check_k(opts.k)
-            .map_err(|e| anyhow::Error::from(e).context("warm start"))?;
+            .map_err(|e| EsnmfError::from(e).context("warm start"))?;
         let u0 = esnmf::nmf::init::warm_start_u(
             &snap.u,
             &snap.terms,
@@ -415,7 +509,9 @@ fn run_factorization_inner(
             None,
         )),
         Algorithm::Als => {
-            let opts = cfg.nmf_options()?;
+            let opts = cfg
+                .nmf_options()
+                .map_err(|e| EsnmfError::config(format!("{e:#}")))?;
             let r = match (cfg.backend, loaded) {
                 (BackendKind::Native, LoadedCorpus::Mem(tdm)) => {
                     NativeBackend::new().factorize(tdm, &opts)
@@ -460,10 +556,10 @@ fn run_factorization_inner(
     }
 }
 
-fn cmd_factorize(args: &mut Args) -> Result<()> {
+fn cmd_factorize(args: &mut Args) -> CliResult {
     let cfg = build_run_config(args)?;
-    let top = args.parse_or("top", 5usize).map_err(anyhow::Error::msg)?;
-    args.check_unknown().map_err(anyhow::Error::msg)?;
+    let top = args.parse_or("top", 5usize).map_err(EsnmfError::usage)?;
+    args.check_unknown().map_err(EsnmfError::usage)?;
 
     let loaded = load_any_corpus(&cfg)?;
     let corpus = loaded.as_als();
@@ -493,6 +589,10 @@ fn cmd_factorize(args: &mut Args) -> Result<()> {
         r.v.nnz(),
         r.memory.max_combined_nnz
     );
+    // one greppable line pinning the full bit-level outcome — the CI
+    // distributed-smoke job diffs this between single-process and
+    // N-worker runs
+    println!("factors digest: {:#018x}", r.digest());
     if let LoadedCorpus::Store(store) = &loaded {
         println!(
             "resident corpus peak = {} bytes ({} on disk)",
@@ -531,31 +631,32 @@ fn cmd_factorize(args: &mut Args) -> Result<()> {
 
 /// `esnmf ingest`: build the corpus (preset generator or `dir:` loader)
 /// and write it to an `.estdm` store for out-of-core factorization.
-fn cmd_ingest(args: &mut Args) -> Result<()> {
+fn cmd_ingest(args: &mut Args) -> CliResult {
     let cfg = build_run_config(args)?;
     let out = args
         .opt_str("out")
-        .ok_or_else(|| anyhow::anyhow!("--out <corpus.estdm> required"))?;
+        .ok_or_else(|| EsnmfError::usage("--out <corpus.estdm> required"))?;
     let shard_rows = args
         .opt_threads("shard-rows")
-        .map_err(anyhow::Error::msg)?
+        .map_err(EsnmfError::usage)?
         .unwrap_or(0);
-    args.check_unknown().map_err(anyhow::Error::msg)?;
-    anyhow::ensure!(
-        cfg.corpus_store.is_none(),
-        "ingest reads a corpus (--corpus/dir:), not a store"
-    );
+    args.check_unknown().map_err(EsnmfError::usage)?;
+    if cfg.corpus_store.is_some() {
+        return Err(EsnmfError::config(
+            "ingest reads a corpus (--corpus/dir:), not a store",
+        ));
+    }
 
     let tdm = load_corpus(&cfg)?;
     let path = std::path::Path::new(&out);
     CorpusStore::write(path, &tdm, shard_rows)
-        .map_err(|e| anyhow::Error::from(e).context(format!("writing corpus store {out}")))?;
+        .map_err(|e| EsnmfError::from(e).context(format!("writing corpus store {out}")))?;
     // reopen + verify: an ingest that cannot be read back is not an ingest
     let store = CorpusStore::open(path)
-        .map_err(|e| anyhow::Error::from(e).context(format!("reopening corpus store {out}")))?;
+        .map_err(|e| EsnmfError::from(e).context(format!("reopening corpus store {out}")))?;
     store
         .verify()
-        .map_err(|e| anyhow::Error::from(e).context(format!("verifying corpus store {out}")))?;
+        .map_err(|e| EsnmfError::from(e).context(format!("verifying corpus store {out}")))?;
     println!(
         "wrote {out}: {} terms × {} docs, nnz {}, digest {:#018x}, {} + {} shards ({} bytes on disk)",
         store.n_terms(),
@@ -571,18 +672,18 @@ fn cmd_ingest(args: &mut Args) -> Result<()> {
 
 /// `esnmf bench-check`: the CI memory-regression gate over two merged
 /// `BENCH_smoke.json` trajectory points.
-fn cmd_bench_check(args: &mut Args) -> Result<()> {
+fn cmd_bench_check(args: &mut Args) -> CliResult {
     let previous = args
         .opt_str("previous")
-        .ok_or_else(|| anyhow::anyhow!("--previous <prev.json> required"))?;
+        .ok_or_else(|| EsnmfError::usage("--previous <prev.json> required"))?;
     let current = args
         .opt_str("current")
-        .ok_or_else(|| anyhow::anyhow!("--current <BENCH_smoke.json> required"))?;
+        .ok_or_else(|| EsnmfError::usage("--current <BENCH_smoke.json> required"))?;
     let tolerance = args
         .parse_or("tolerance", 1.10f64)
-        .map_err(anyhow::Error::msg)?;
+        .map_err(EsnmfError::usage)?;
     let guards = args.str_or("guards", "max_intermediate_nnz,resident_corpus,p99_us");
-    args.check_unknown().map_err(anyhow::Error::msg)?;
+    args.check_unknown().map_err(EsnmfError::usage)?;
 
     // only a genuinely *absent* baseline passes (first run, cold cache);
     // a baseline that exists but cannot be read or parsed must fail
@@ -594,16 +695,28 @@ fn cmd_bench_check(args: &mut Args) -> Result<()> {
             );
             return Ok(());
         }
-        Err(e) => anyhow::bail!("bench-check: cannot read previous trajectory {previous}: {e}"),
+        Err(e) => {
+            return Err(EsnmfError::Other(format!(
+                "bench-check: cannot read previous trajectory {previous}: {e}"
+            )))
+        }
         Ok(text) => esnmf::util::json::Json::parse(&text).map_err(|e| {
-            anyhow::anyhow!("bench-check: previous trajectory {previous} is corrupt: {e}")
+            EsnmfError::Other(format!(
+                "bench-check: previous trajectory {previous} is corrupt: {e}"
+            ))
         })?,
     };
     let cur = std::fs::read_to_string(&current)
-        .map_err(|e| anyhow::anyhow!("bench-check: cannot read current trajectory {current}: {e}"))
+        .map_err(|e| {
+            EsnmfError::Other(format!(
+                "bench-check: cannot read current trajectory {current}: {e}"
+            ))
+        })
         .and_then(|text| {
             esnmf::util::json::Json::parse(&text).map_err(|e| {
-                anyhow::anyhow!("bench-check: current trajectory {current} is corrupt: {e}")
+                EsnmfError::Other(format!(
+                    "bench-check: current trajectory {current} is corrupt: {e}"
+                ))
             })
         })?;
     let guard_list: Vec<&str> = guards.split(',').map(str::trim).filter(|g| !g.is_empty()).collect();
@@ -621,21 +734,24 @@ fn cmd_bench_check(args: &mut Args) -> Result<()> {
             r.path, r.previous, r.current
         );
     }
-    anyhow::bail!("{} guarded metric(s) regressed", regressions.len());
+    Err(EsnmfError::Other(format!(
+        "{} guarded metric(s) regressed",
+        regressions.len()
+    )))
 }
 
-fn cmd_experiment(args: &mut Args) -> Result<()> {
+fn cmd_experiment(args: &mut Args) -> CliResult {
     let id = args
         .positional
         .first()
         .cloned()
-        .ok_or_else(|| anyhow::anyhow!("experiment id required\n{USAGE}"))?;
+        .ok_or_else(|| EsnmfError::usage(format!("experiment id required\n{USAGE}")))?;
     let scale = Scale::parse(&args.str_or("scale", "small"))
-        .ok_or_else(|| anyhow::anyhow!("bad --scale"))?;
-    let seed = args.parse_or("seed", 42u64).map_err(anyhow::Error::msg)?;
+        .ok_or_else(|| EsnmfError::usage("bad --scale"))?;
+    let seed = args.parse_or("seed", 42u64).map_err(EsnmfError::usage)?;
     let fast = args.flag("fast");
     let out_dir = args.opt_str("out");
-    args.check_unknown().map_err(anyhow::Error::msg)?;
+    args.check_unknown().map_err(EsnmfError::usage)?;
 
     let cfg = ExpConfig { scale, seed, fast };
     let ids: Vec<&str> = if id == "all" {
@@ -656,29 +772,29 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &mut Args) -> Result<()> {
+fn cmd_serve(args: &mut Args) -> CliResult {
     let addr = args.str_or("addr", "127.0.0.1:7878");
     // flags the snapshot path must cross-check (option reads don't
     // consume the value, so build_run_config still sees them)
-    let explicit_k = args.opt_parse::<usize>("k").map_err(anyhow::Error::msg)?;
+    let explicit_k = args.opt_parse::<usize>("k").map_err(EsnmfError::usage)?;
     let explicit_corpus = args.opt_str("corpus");
     let explicit_store = args.opt_str("corpus-store");
     let mut cfg = build_run_config(args)?;
     if let Some(v) = args
         .opt_threads("serve-threads")
-        .map_err(anyhow::Error::msg)?
+        .map_err(EsnmfError::usage)?
     {
         cfg.serve_threads = v;
     }
     if let Some(v) = args
         .opt_parse::<usize>("cache-size")
-        .map_err(anyhow::Error::msg)?
+        .map_err(EsnmfError::usage)?
     {
         cfg.serve_cache = v;
     }
     if let Some(v) = args
         .opt_parse::<usize>("foldin-t")
-        .map_err(anyhow::Error::msg)?
+        .map_err(EsnmfError::usage)?
     {
         cfg.foldin_t = Some(v);
     }
@@ -687,16 +803,18 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     }
     if let Some(v) = args
         .opt_parse::<u16>("admin-port")
-        .map_err(anyhow::Error::msg)?
+        .map_err(EsnmfError::usage)?
     {
         cfg.admin_port = Some(v);
     }
     if args.flag("watch-model") {
         cfg.watch_model = true;
     }
-    args.check_unknown().map_err(anyhow::Error::msg)?;
+    args.check_unknown().map_err(EsnmfError::usage)?;
     if cfg.watch_model && cfg.model.is_none() {
-        anyhow::bail!("--watch-model requires --model <path.esnmf> (a file to watch)");
+        return Err(EsnmfError::config(
+            "--watch-model requires --model <path.esnmf> (a file to watch)",
+        ));
     }
 
     let (model, provenance) = match cfg.model.clone() {
@@ -705,10 +823,10 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
             // factorization; one read yields both the snapshot and the
             // file CRC recorded in PROVENANCE
             let (snap, file_crc) = esnmf::io::Snapshot::load_with_crc(std::path::Path::new(&path))
-                .map_err(|e| anyhow::Error::from(e).context(format!("loading snapshot {path}")))?;
+                .map_err(|e| EsnmfError::from(e).context(format!("loading snapshot {path}")))?;
             if let Some(k) = explicit_k {
                 snap.check_k(k)
-                    .map_err(|e| anyhow::Error::from(e).context("serve --model"))?;
+                    .map_err(|e| EsnmfError::from(e).context("serve --model"))?;
             }
             if explicit_store.is_some() {
                 // an explicit store alongside --model verifies the
@@ -719,13 +837,13 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
                     LoadedCorpus::Mem(_) => unreachable!("corpus_store is set"),
                 };
                 snap.check_digest(store.digest(), store.n_terms(), store.n_docs())
-                    .map_err(|e| anyhow::Error::from(e).context("serve --model"))?;
+                    .map_err(|e| EsnmfError::from(e).context("serve --model"))?;
             } else if explicit_corpus.is_some() {
                 // an explicit corpus alongside --model is a request to
                 // verify the snapshot actually belongs to that corpus
                 let tdm = load_corpus(&cfg)?;
                 snap.check_corpus(&tdm)
-                    .map_err(|e| anyhow::Error::from(e).context("serve --model"))?;
+                    .map_err(|e| EsnmfError::from(e).context("serve --model"))?;
             }
             log_info!(
                 "serve",
@@ -801,17 +919,53 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     }
 }
 
-fn cmd_gen_corpus(args: &mut Args) -> Result<()> {
+/// `esnmf worker`: the stateless compute side of distributed
+/// factorization — open the shared `.estdm`, join the coordinator, and
+/// serve half-step span requests until shut down.
+fn cmd_worker(args: &mut Args) -> CliResult {
+    let store = match args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.opt_str("store"))
+    {
+        Some(s) => s,
+        None => {
+            return Err(EsnmfError::usage(
+                "worker needs the shared corpus store: \
+                 esnmf worker <corpus.estdm> --coordinator <host:port>",
+            ))
+        }
+    };
+    let coordinator = args.str_or("coordinator", "127.0.0.1:7611");
+    let threads = args
+        .opt_threads("threads")
+        .map_err(EsnmfError::usage)?
+        .unwrap_or(0);
+    args.check_unknown().map_err(EsnmfError::usage)?;
+    let threads = if threads == 0 {
+        esnmf::coordinator::default_threads()
+    } else {
+        threads
+    };
+    esnmf::coordinator::run_worker(std::path::Path::new(&store), &coordinator, threads)
+}
+
+fn cmd_gen_corpus(args: &mut Args) -> CliResult {
     let cfg = build_run_config(args)?;
     let out = args
         .opt_str("out")
-        .ok_or_else(|| anyhow::anyhow!("--out <dir> required"))?;
-    args.check_unknown().map_err(anyhow::Error::msg)?;
+        .ok_or_else(|| EsnmfError::usage("--out <dir> required"))?;
+    args.check_unknown().map_err(EsnmfError::usage)?;
     let spec = match cfg.corpus.as_str() {
         "reuters" => corpus::reuters_sim(cfg.scale),
         "wikipedia" => corpus::wikipedia_sim(cfg.scale),
         "pubmed" => corpus::pubmed_sim(cfg.scale),
-        other => anyhow::bail!("unknown corpus preset {other:?}"),
+        other => {
+            return Err(EsnmfError::config(format!(
+                "unknown corpus preset {other:?}"
+            )))
+        }
     };
     let docs = corpus::generate(&spec, cfg.seed);
     let base = std::path::Path::new(&out);
@@ -825,12 +979,12 @@ fn cmd_gen_corpus(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_artifacts(args: &mut Args) -> Result<()> {
+fn cmd_artifacts(args: &mut Args) -> CliResult {
     let dir = args
         .opt_str("dir")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(runtime::artifact_dir);
-    args.check_unknown().map_err(anyhow::Error::msg)?;
+    args.check_unknown().map_err(EsnmfError::usage)?;
     let manifest = esnmf::runtime::Manifest::load(&dir)?;
     println!("artifact dir: {}", dir.display());
     for p in &manifest.programs {

@@ -202,7 +202,7 @@ pub(crate) enum Enforce {
     Threshold(f32),
 }
 
-fn enforcement_for(mode: SparsityMode, is_u: bool) -> Enforce {
+pub(crate) fn enforcement_for(mode: SparsityMode, is_u: bool) -> Enforce {
     match mode {
         SparsityMode::None => Enforce::No,
         SparsityMode::Global { t_u, t_v } => {
@@ -313,7 +313,7 @@ impl Solve {
 /// exactly — down to their NaN edge cases — so the streamed pipeline is
 /// bit-identical to the full-matrix one.
 #[derive(Clone, Copy, Debug)]
-enum Keep {
+pub(crate) enum Keep {
     /// unenforced freeze: every stored nonzero (`RowBlock::to_csr`)
     All,
     /// threshold mode: `v ≥ tau` and finite. Dropping non-finite values
@@ -340,17 +340,64 @@ impl Keep {
             Keep::AboveOrTie(tau) => v >= tau,
         }
     }
+
+    /// Encode as the worker-plane `(keep_tag, tau)` pair (see
+    /// [`crate::io::wire::PassReq::Emit`]). `tau` for [`Keep::All`] is
+    /// NaN — there is no cutoff, and the bits round-trip exactly.
+    pub(crate) fn to_wire(self) -> (u8, f32) {
+        match self {
+            Keep::All => (0, f32::NAN),
+            Keep::FiniteAtLeast(tau) => (1, tau),
+            Keep::AtLeast(tau) => (2, tau),
+            Keep::AboveOrTie(tau) => (3, tau),
+        }
+    }
+
+    /// Decode the worker-plane pair; `None` for an unknown tag (the
+    /// frame decoder already rejects those, this is the worker's own
+    /// defense-in-depth).
+    pub(crate) fn from_wire(tag: u8, tau: f32) -> Option<Keep> {
+        match tag {
+            0 => Some(Keep::All),
+            1 => Some(Keep::FiniteAtLeast(tau)),
+            2 => Some(Keep::AtLeast(tau)),
+            3 => Some(Keep::AboveOrTie(tau)),
+            _ => None,
+        }
+    }
 }
 
 /// One block's emitted output: the surviving nonzeros in CSR-fragment
 /// form, plus the candidate scratch size the block materialized (the
 /// bounded Fig. 6 intermediate).
-struct BlockEmit {
+pub(crate) struct BlockEmit {
     /// surviving nonzeros per output row of the block
-    row_nnz: Vec<u32>,
-    indices: Vec<u32>,
-    values: Vec<f32>,
-    scratch_len: usize,
+    pub(crate) row_nnz: Vec<u32>,
+    pub(crate) indices: Vec<u32>,
+    pub(crate) values: Vec<f32>,
+    pub(crate) scratch_len: usize,
+}
+
+impl BlockEmit {
+    /// Move into the worker-plane fragment form.
+    pub(crate) fn into_wire(self) -> crate::io::wire::WireEmit {
+        crate::io::wire::WireEmit {
+            row_nnz: self.row_nnz,
+            indices: self.indices,
+            values: self.values,
+            scratch_len: self.scratch_len as u64,
+        }
+    }
+
+    /// Move a received worker-plane fragment back into assembly form.
+    pub(crate) fn from_wire(w: crate::io::wire::WireEmit) -> Self {
+        BlockEmit {
+            row_nnz: w.row_nnz,
+            indices: w.indices,
+            values: w.values,
+            scratch_len: w.scratch_len as usize,
+        }
+    }
 }
 
 /// Everything one streamed half-step needs: the candidate source, the
@@ -397,6 +444,25 @@ impl<'a> StreamCtx<'a> {
         StreamCtx::new(src, Solve::Gram(inverse_spd(gram_other, k)), k, threads, block_rows)
     }
 
+    /// Number of fixed-geometry blocks this half-step streams over. The
+    /// distributed coordinator partitions *blocks* (never raw rows)
+    /// across workers so every participant agrees on the block list
+    /// [`pool::fixed_chunks`] produces.
+    pub(crate) fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Row bounds `[lo, hi)` of block `i` — the coordinator validates
+    /// received fragments against this before trusting their shape.
+    pub(crate) fn block_bounds(&self, i: usize) -> (usize, usize) {
+        self.blocks[i]
+    }
+
+    /// Output column count (the factorization rank).
+    pub(crate) fn k(&self) -> usize {
+        self.k
+    }
+
     /// Run `per_block` over every solved + projected candidate block.
     /// Blocks are claimed dynamically across the workers, each worker
     /// reusing one scratch RowBlock and one streaming cursor; results
@@ -405,9 +471,19 @@ impl<'a> StreamCtx<'a> {
         &self,
         per_block: impl Fn(&RowBlock, usize, usize) -> R + Sync,
     ) -> Vec<R> {
+        self.map_blocks_in(&self.blocks, per_block)
+    }
+
+    /// [`Self::map_blocks`] over an explicit block subset (a worker's
+    /// assigned span).
+    fn map_blocks_in<R: Send>(
+        &self,
+        blocks: &[(usize, usize)],
+        per_block: impl Fn(&RowBlock, usize, usize) -> R + Sync,
+    ) -> Vec<R> {
         pool::scoped_map_ranges_with(
             self.workers,
-            &self.blocks,
+            blocks,
             || (RowBlock::new(self.rows, self.k), RowCursor::new()),
             |(scratch, cur), lo, hi| {
                 self.src.fill(lo, hi, cur, scratch);
@@ -426,9 +502,36 @@ impl<'a> StreamCtx<'a> {
     /// (worker order is scheduling-dependent, which is fine: the cutoff
     /// they merge into is an order statistic).
     fn select_pass(&self, t: usize) -> (Vec<usize>, Vec<topk::TopTSelector>) {
+        self.select_in(&self.blocks, t)
+    }
+
+    /// Select pass restricted to blocks `b_lo..b_hi` of the global block
+    /// list, merged to a single selector — the worker-plane unit of
+    /// pass-1 work. Scratch sizes come back in block order within the
+    /// span; the merged selector is safe to absorb in any order (the
+    /// cutoff is an order statistic).
+    pub(crate) fn select_span(
+        &self,
+        b_lo: usize,
+        b_hi: usize,
+        t: usize,
+    ) -> (Vec<usize>, topk::TopTSelector) {
+        let (lens, sels) = self.select_in(&self.blocks[b_lo..b_hi], t);
+        let mut sel = topk::TopTSelector::new(t);
+        for part in sels {
+            sel.absorb(part);
+        }
+        (lens, sel)
+    }
+
+    fn select_in(
+        &self,
+        blocks: &[(usize, usize)],
+        t: usize,
+    ) -> (Vec<usize>, Vec<topk::TopTSelector>) {
         let (lens, states) = pool::scoped_map_ranges_with_states(
             self.workers,
-            &self.blocks,
+            blocks,
             || {
                 (
                     RowBlock::new(self.rows, self.k),
@@ -456,34 +559,27 @@ impl<'a> StreamCtx<'a> {
     /// assembly — which walks blocks, rows and columns in ascending
     /// order — reproducing the serial left-to-right budget scan.
     fn emit(&self, keep: Keep, trim: Option<(f32, usize)>, mem: &mut MemoryTracker) -> Csr {
-        let emits = self.map_blocks(|scratch, lo, hi| {
-            let mut out = BlockEmit {
-                row_nnz: vec![0u32; hi - lo],
-                indices: Vec::new(),
-                values: Vec::new(),
-                scratch_len: scratch.stored_len(),
-            };
-            for (slot, &rid) in scratch.row_ids.iter().enumerate() {
-                let mut n = 0u32;
-                for (c, &v) in scratch.row_data(slot).iter().enumerate() {
-                    if keep.keeps(v) {
-                        out.indices.push(c as u32);
-                        out.values.push(v);
-                        n += 1;
-                    }
-                }
-                out.row_nnz[rid as usize - lo] = n;
-            }
-            out
-        });
+        let emits = self.map_blocks(|scratch, lo, hi| emit_block(scratch, lo, hi, keep));
         self.assemble(emits, trim, mem)
+    }
+
+    /// Emission pass restricted to blocks `b_lo..b_hi` of the global
+    /// block list, returning the raw fragments instead of assembling —
+    /// the worker-plane unit of pass-2 work. The coordinator concatenates
+    /// every span's fragments in global block order and runs
+    /// [`Self::assemble`] itself, so the `Exact` tie budget is consumed
+    /// by one serial left-to-right scan exactly as in-process.
+    pub(crate) fn emit_span(&self, b_lo: usize, b_hi: usize, keep: Keep) -> Vec<BlockEmit> {
+        self.map_blocks_in(&self.blocks[b_lo..b_hi], |scratch, lo, hi| {
+            emit_block(scratch, lo, hi, keep)
+        })
     }
 
     /// Concatenate the per-block fragments (contiguous, ascending) into
     /// the output CSR, dropping `== tau` ties once the global `Exact`
     /// budget runs out. With `trim == None` the tie test never fires
     /// (`tau` is NaN) and every fragment value is kept verbatim.
-    fn assemble(
+    pub(crate) fn assemble(
         &self,
         emits: Vec<BlockEmit>,
         trim: Option<(f32, usize)>,
@@ -524,6 +620,31 @@ impl<'a> StreamCtx<'a> {
             values,
         }
     }
+}
+
+/// One block's emission: filter the solved + projected scratch with
+/// `keep`, producing a CSR fragment. Shared verbatim by the in-process
+/// emission pass and the worker-plane `emit_span`, so a fragment's bits
+/// cannot depend on who computed it.
+fn emit_block(scratch: &RowBlock, lo: usize, hi: usize, keep: Keep) -> BlockEmit {
+    let mut out = BlockEmit {
+        row_nnz: vec![0u32; hi - lo],
+        indices: Vec::new(),
+        values: Vec::new(),
+        scratch_len: scratch.stored_len(),
+    };
+    for (slot, &rid) in scratch.row_ids.iter().enumerate() {
+        let mut n = 0u32;
+        for (c, &v) in scratch.row_data(slot).iter().enumerate() {
+            if keep.keeps(v) {
+                out.indices.push(c as u32);
+                out.values.push(v);
+                n += 1;
+            }
+        }
+        out.row_nnz[rid as usize - lo] = n;
+    }
+    out
 }
 
 /// Stream one half-step over contiguous row blocks: per block, compute
@@ -712,6 +833,57 @@ pub fn half_step_u_src(
     )
 }
 
+/// The half-step engine the iteration loop drives. [`run_loop_with`]
+/// owns everything *around* the half-steps — residual tracking, error
+/// sampling, checkpoint cadence, store-fault latching — and delegates
+/// the two factor updates here, so the distributed coordinator replaces
+/// only the compute placement and reuses the loop verbatim (one code
+/// path to keep the trajectories bit-identical).
+pub(crate) trait HalfSteps {
+    /// Steps 1–2: the V update given the current U.
+    fn v(
+        &mut self,
+        corpus: &dyn AlsCorpus,
+        u: &Csr,
+        opts: &NmfOptions,
+        mem: &mut MemoryTracker,
+    ) -> Csr;
+
+    /// Steps 3–4: the U update given the fresh V.
+    fn u(
+        &mut self,
+        corpus: &dyn AlsCorpus,
+        v: &Csr,
+        opts: &NmfOptions,
+        mem: &mut MemoryTracker,
+    ) -> Csr;
+}
+
+/// The in-process engine: both half-steps stream on this machine.
+pub(crate) struct LocalHalfSteps;
+
+impl HalfSteps for LocalHalfSteps {
+    fn v(
+        &mut self,
+        corpus: &dyn AlsCorpus,
+        u: &Csr,
+        opts: &NmfOptions,
+        mem: &mut MemoryTracker,
+    ) -> Csr {
+        half_step_v_src(corpus.a_cols(), u, opts, mem)
+    }
+
+    fn u(
+        &mut self,
+        corpus: &dyn AlsCorpus,
+        v: &Csr,
+        opts: &NmfOptions,
+        mem: &mut MemoryTracker,
+    ) -> Csr {
+        half_step_u_src(corpus.a_rows(), v, opts, mem)
+    }
+}
+
 /// Run projected / enforced-sparsity ALS on a term-document matrix.
 pub fn factorize(tdm: &TermDocMatrix, opts: &NmfOptions) -> NmfResult {
     factorize_corpus(tdm, opts)
@@ -736,6 +908,31 @@ pub fn factorize_from(tdm: &TermDocMatrix, opts: &NmfOptions, u0: Csr) -> NmfRes
 
 /// [`factorize_from`] over any [`AlsCorpus`].
 pub fn factorize_from_corpus(corpus: &dyn AlsCorpus, opts: &NmfOptions, u0: Csr) -> NmfResult {
+    factorize_with(corpus, opts, u0, &mut LocalHalfSteps)
+}
+
+/// [`factorize_corpus`] driven by an explicit half-step engine (the
+/// distributed coordinator's entry point — same initial guess, same
+/// loop, different compute placement).
+pub(crate) fn factorize_corpus_with(
+    corpus: &dyn AlsCorpus,
+    opts: &NmfOptions,
+    engine: &mut dyn HalfSteps,
+) -> NmfResult {
+    factorize_with(
+        corpus,
+        opts,
+        initial_u(corpus.n_terms(), opts.k, opts.init_nnz, opts.seed),
+        engine,
+    )
+}
+
+fn factorize_with(
+    corpus: &dyn AlsCorpus,
+    opts: &NmfOptions,
+    u0: Csr,
+    engine: &mut dyn HalfSteps,
+) -> NmfResult {
     assert_eq!(u0.rows, corpus.n_terms(), "U₀ row count != vocabulary size");
     assert_eq!(u0.cols, opts.k, "U₀ column count != k");
     let mut mem = MemoryTracker::new();
@@ -749,7 +946,7 @@ pub fn factorize_from_corpus(corpus: &dyn AlsCorpus, opts: &NmfOptions, u0: Csr)
         mem,
         elapsed_base_s: 0.0,
     };
-    run_loop(corpus, opts, state)
+    run_loop_with(corpus, opts, state, engine)
 }
 
 /// Continue a checkpointed run. The solver math (k, sparsity, tie mode,
@@ -887,6 +1084,15 @@ fn write_checkpoint(
 }
 
 fn run_loop(corpus: &dyn AlsCorpus, opts: &NmfOptions, state: LoopState) -> NmfResult {
+    run_loop_with(corpus, opts, state, &mut LocalHalfSteps)
+}
+
+fn run_loop_with(
+    corpus: &dyn AlsCorpus,
+    opts: &NmfOptions,
+    state: LoopState,
+    engine: &mut dyn HalfSteps,
+) -> NmfResult {
     let timer = Timer::start();
     let norm_a_sq = corpus.norm_a_sq();
     // the corpus is immutable for the whole run, so hash it once up
@@ -912,14 +1118,14 @@ fn run_loop(corpus: &dyn AlsCorpus, opts: &NmfOptions, state: LoopState) -> NmfR
     let mut store_fault: Option<String> = None;
 
     for it in start_iter..opts.max_iters {
-        let v_new = half_step_v_src(corpus.a_cols(), &u, opts, &mut mem);
+        let v_new = engine.v(corpus, &u, opts, &mut mem);
         if let Some(fault) = corpus.store_error() {
             store_fault = Some(fault);
             break;
         }
         v = v_new;
         mem.observe_pair(u.nnz(), v.nnz());
-        let u_new = half_step_u_src(corpus.a_rows(), &v, opts, &mut mem);
+        let u_new = engine.u(corpus, &v, opts, &mut mem);
         if let Some(fault) = corpus.store_error() {
             store_fault = Some(fault);
             break;

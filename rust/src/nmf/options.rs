@@ -240,6 +240,36 @@ impl NmfResult {
     pub fn final_error(&self) -> f64 {
         self.errors.last().copied().unwrap_or(f64::NAN)
     }
+
+    /// FNV-1a digest over everything the determinism contract pins: the
+    /// exact factor bytes (CSR structure and f32 bit patterns), the
+    /// iteration count, and the per-iteration residual/error f64 bits.
+    /// Two runs print the same digest iff they converged bit-identically,
+    /// so the CI distributed-smoke job compares exactly this value
+    /// between a single-process and an N-worker run. Wall time and
+    /// memory telemetry are deliberately excluded — they are allowed to
+    /// differ between runs that computed the same factors.
+    pub fn digest(&self) -> u64 {
+        let mut bytes = Vec::new();
+        self.u.write_bytes(&mut bytes);
+        self.v.write_bytes(&mut bytes);
+        bytes.extend_from_slice(&(self.iterations as u64).to_le_bytes());
+        bytes.extend_from_slice(&(self.residuals.len() as u64).to_le_bytes());
+        for r in &self.residuals {
+            bytes.extend_from_slice(&r.to_bits().to_le_bytes());
+        }
+        for e in &self.errors {
+            bytes.extend_from_slice(&e.to_bits().to_le_bytes());
+        }
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        for &b in &bytes {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -299,6 +329,30 @@ mod tests {
                 1
             );
         }
+    }
+
+    #[test]
+    fn result_digest_tracks_factor_bits() {
+        let base = NmfResult {
+            u: Csr::from_dense(2, 2, &[1.0, 0.0, 0.0, 2.0]),
+            v: Csr::from_dense(2, 2, &[0.5, 0.0, 0.0, 0.25]),
+            iterations: 3,
+            residuals: vec![0.1, 0.01],
+            errors: vec![0.9],
+            memory: MemoryStats::default(),
+            elapsed_s: 1.0,
+        };
+        let d = base.digest();
+        assert_eq!(d, base.digest(), "digest must be a pure function");
+        let mut slower = base.clone();
+        slower.elapsed_s = 99.0;
+        assert_eq!(d, slower.digest(), "wall time must not move the digest");
+        let mut other = base.clone();
+        other.u = Csr::from_dense(2, 2, &[1.0, 0.0, 0.0, 2.5]);
+        assert_ne!(d, other.digest());
+        let mut more_iters = base.clone();
+        more_iters.iterations = 4;
+        assert_ne!(d, more_iters.digest());
     }
 
     #[test]

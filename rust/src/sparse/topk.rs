@@ -213,6 +213,30 @@ impl TopTSelector {
         // largest, i.e. in the heap — counting there is exact
         Some((tau, self.heap.iter().filter(|&&v| v > tau).count()))
     }
+
+    /// Export this selector's state for the worker wire: the positive
+    /// count and the retained heap values. Because [`Self::cutoff`] is an
+    /// order statistic, a coordinator that absorbs these summaries from
+    /// every worker computes the same cutoff as one selector fed all
+    /// candidates directly — the heap of a subset's top-t contains every
+    /// member of the global top-t that the subset holds.
+    pub(crate) fn into_wire_parts(self) -> (usize, Vec<f32>) {
+        (self.positives, self.heap)
+    }
+
+    /// Rebuild a worker's exported selector state for absorption. The
+    /// caller supplies its own `t`; `heap` values re-enter through the
+    /// ordinary insert path so invariants hold even for a hostile peer.
+    pub(crate) fn from_wire_parts(t: usize, positives: usize, heap: &[f32]) -> Self {
+        let mut s = TopTSelector::new(t);
+        for &v in heap {
+            if v > 0.0 && !v.is_nan() {
+                s.insert(v);
+            }
+        }
+        s.positives = positives;
+        s
+    }
 }
 
 /// Keep only the `t` largest stored values of a CSR matrix (all values are

@@ -156,40 +156,26 @@ impl BenchSuite {
             "smoke".to_string(),
             Json::Bool(smoke_mode()),
         );
-        obj.insert(
-            "metrics".to_string(),
-            Json::Obj(
-                self.metrics
-                    .iter()
-                    .map(|(k, &v)| (k.clone(), Json::Num(v)))
-                    .collect(),
-            ),
-        );
+        let mut metrics: BTreeMap<String, Json> = self
+            .metrics
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v)))
+            .collect();
+        // every result's wall-time median rides along as a metric
+        // (`wall_s_<result slug>`), so `esnmf bench-check --guards
+        // wall_s` turns the smoke trajectory into a wall-time
+        // regression gate without each bench target opting in
+        for r in &self.results {
+            metrics.insert(format!("wall_s_{}", slug_of(&r.name)), Json::Num(r.median_s()));
+        }
+        obj.insert("metrics".to_string(), Json::Obj(metrics));
         obj.insert("results".to_string(), Json::Arr(results));
         Json::Obj(obj)
     }
 
     /// Filesystem-safe slug of the suite title.
     pub fn slug(&self) -> String {
-        let mut out = String::with_capacity(self.title.len());
-        let mut last_sep = true; // trim leading separators
-        for c in self.title.chars() {
-            if c.is_ascii_alphanumeric() {
-                out.push(c.to_ascii_lowercase());
-                last_sep = false;
-            } else if !last_sep {
-                out.push('_');
-                last_sep = true;
-            }
-        }
-        while out.ends_with('_') {
-            out.pop();
-        }
-        if out.is_empty() {
-            "bench".to_string()
-        } else {
-            out
-        }
+        slug_of(&self.title)
     }
 
     fn emit_json(&self) {
@@ -252,6 +238,31 @@ impl BenchSuite {
 impl Drop for BenchSuite {
     fn drop(&mut self) {
         self.emit_json();
+    }
+}
+
+/// Filesystem- and metric-name-safe slug: lowercase alphanumerics with
+/// single `_` separators (shared by suite filenames and the per-result
+/// `wall_s_*` metric keys).
+fn slug_of(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut last_sep = true; // trim leading separators
+    for c in text.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c.to_ascii_lowercase());
+            last_sep = false;
+        } else if !last_sep {
+            out.push('_');
+            last_sep = true;
+        }
+    }
+    while out.ends_with('_') {
+        out.pop();
+    }
+    if out.is_empty() {
+        "bench".to_string()
+    } else {
+        out
     }
 }
 
@@ -356,6 +367,15 @@ mod tests {
         );
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("title").and_then(Json::as_str), Some("jsontest"));
+        // each result's median rides along as a wall_s_* metric so the
+        // bench-check gate can guard wall time
+        assert_eq!(
+            parsed
+                .get("metrics")
+                .and_then(|m| m.get("wall_s_a"))
+                .and_then(Json::as_f64),
+            Some(0.5)
+        );
         let results = parsed.get("results").and_then(Json::as_arr).unwrap();
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].get("name").and_then(Json::as_str), Some("a"));
@@ -407,6 +427,11 @@ mod tests {
         // a malformed previous document compares as empty, not a panic
         let junk = Json::parse(r#"{"schema":"x"}"#).unwrap();
         assert!(metric_regressions(&junk, &bad, &guards, 1.10).is_empty());
+        // opting wall time in via its own guard flags the slowdown
+        let slow = doc(100.0, 5000.0, 99.0);
+        let regs = metric_regressions(&prev, &slow, &["wall_s"], 5.0);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].path, "fig6.wall_s");
     }
 
     #[test]

@@ -1,0 +1,342 @@
+//! Distributed-plane acceptance tests: an N-worker run over a shared
+//! `.estdm` must be bit-identical to the single-process blocked run at
+//! every worker count — including when a worker is killed mid-iteration
+//! — and every malformed or mismatched peer must get a typed refusal,
+//! never a hang.
+//!
+//! Workers run in-process (threads calling [`run_worker`] over real
+//! loopback sockets) except where a test needs to kill one, which uses
+//! the actual `esnmf worker` binary as a subprocess.
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::Duration;
+
+use esnmf::coordinator::{run_distributed_on, run_worker, DistOptions};
+use esnmf::corpus::{generate_tdm, reuters_sim, Scale};
+use esnmf::io::CorpusStore;
+use esnmf::nmf::{factorize_corpus, NmfOptions, NmfResult, SparsityMode};
+use esnmf::sparse::TieMode;
+use esnmf::EsnmfError;
+
+fn temp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("esnmf_it_dist_{name}"))
+}
+
+fn write_store(name: &str, seed: u64) -> (PathBuf, CorpusStore) {
+    let path = temp(&format!("{name}.estdm"));
+    let _ = std::fs::remove_file(&path);
+    let tdm = generate_tdm(&reuters_sim(Scale::Tiny), seed);
+    CorpusStore::write(&path, &tdm, 5).unwrap();
+    let store = CorpusStore::open(&path).unwrap();
+    (path, store)
+}
+
+fn assert_same_result(a: &NmfResult, b: &NmfResult, tag: &str) {
+    assert_eq!(a.u, b.u, "{tag}: U");
+    assert_eq!(a.v, b.v, "{tag}: V");
+    assert_eq!(a.iterations, b.iterations, "{tag}: iterations");
+    assert_eq!(a.residuals, b.residuals, "{tag}: residuals");
+    assert_eq!(a.errors, b.errors, "{tag}: errors");
+    assert_eq!(a.memory, b.memory, "{tag}: memory telemetry");
+    assert_eq!(a.digest(), b.digest(), "{tag}: digest");
+}
+
+/// Bind an ephemeral loopback port, spawn `workers` in-process workers
+/// against it, run the coordinator, and join the workers after the
+/// shutdown frame.
+fn run_with_workers(
+    store: &CorpusStore,
+    store_path: &Path,
+    opts: &NmfOptions,
+    workers: usize,
+) -> NmfResult {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handles: Vec<_> = (0..workers)
+        .map(|_| {
+            let path = store_path.to_path_buf();
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&path, &addr, 1))
+        })
+        .collect();
+    let dopts = DistOptions {
+        listen: addr,
+        workers,
+        timeout: Duration::from_secs(30),
+    };
+    let result = run_distributed_on(listener, store, opts, &dopts).expect("distributed run");
+    for h in handles {
+        h.join().unwrap().expect("worker exits cleanly");
+    }
+    result
+}
+
+fn enforced_opts() -> NmfOptions {
+    // explicit block_rows well below the corpus height so every
+    // half-step genuinely scatters multi-block spans
+    let mut opts = NmfOptions::new(4)
+        .with_iters(3)
+        .with_seed(0xd157)
+        .with_sparsity(SparsityMode::both(60, 140))
+        .with_threads(2)
+        .with_block_rows(3);
+    opts.tie_mode = TieMode::Exact;
+    opts
+}
+
+#[test]
+fn distributed_is_bit_identical_at_every_worker_count() {
+    let (path, store) = write_store("counts", 0x0c0de);
+    let opts = enforced_opts();
+    let baseline = factorize_corpus(&store, &opts);
+    for workers in [1usize, 2, 3] {
+        let dist = run_with_workers(&store, &path, &opts, workers);
+        assert_same_result(&dist, &baseline, &format!("{workers} workers"));
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn distributed_matches_across_sparsity_modes() {
+    let (path, store) = write_store("modes", 0x0c0de);
+    for (mode, tie) in [
+        (SparsityMode::None, TieMode::KeepTies),
+        (SparsityMode::both(60, 140), TieMode::KeepTies),
+        (
+            SparsityMode::PerColumn {
+                t_u_col: Some(12),
+                t_v_col: Some(30),
+            },
+            TieMode::Exact,
+        ),
+    ] {
+        let mut opts = enforced_opts().with_sparsity(mode);
+        opts.tie_mode = tie;
+        let baseline = factorize_corpus(&store, &opts);
+        let dist = run_with_workers(&store, &path, &opts, 2);
+        assert_same_result(&dist, &baseline, &format!("mode={mode:?}"));
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn worker_killed_mid_iteration_still_completes_bit_identically() {
+    let (path, store) = write_store("kill", 0x0c0de);
+    // enough iterations that the kill lands while spans are in flight
+    // (and if the run happens to finish first, the invariant asserted —
+    // bit-identity whatever the failure pattern — still holds)
+    let opts = enforced_opts().with_iters(120);
+    let baseline = factorize_corpus(&store, &opts);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let survivor = {
+        let path = path.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || run_worker(&path, &addr, 1))
+    };
+    let mut victim = Command::new(env!("CARGO_BIN_EXE_esnmf"))
+        .args([
+            "worker",
+            path.to_str().unwrap(),
+            "--coordinator",
+            addr.as_str(),
+            "--threads",
+            "1",
+        ])
+        .env("ESNMF_LOG", "warn")
+        .spawn()
+        .expect("spawning worker subprocess");
+    // late enough that spawn + store-open + handshake are done (so the
+    // admission deadline is not left waiting on a corpse), early enough
+    // to land inside the iteration loop
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(250));
+        let _ = victim.kill();
+        let _ = victim.wait();
+    });
+
+    let dopts = DistOptions {
+        listen: addr,
+        workers: 2,
+        timeout: Duration::from_secs(30),
+    };
+    let dist = run_distributed_on(listener, &store, &opts, &dopts).expect("distributed run");
+    assert_same_result(&dist, &baseline, "one worker killed mid-run");
+    survivor.join().unwrap().expect("surviving worker exits cleanly");
+    killer.join().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn garbage_peer_is_rejected_and_the_run_completes() {
+    let (path, store) = write_store("garbage", 0x0c0de);
+    let opts = enforced_opts();
+    let baseline = factorize_corpus(&store, &opts);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // connect (and queue in the backlog) *before* the real worker so the
+    // coordinator handshakes the garbage first: a corrupt frame must be
+    // a typed rejection that keeps the admission loop going, not a hang
+    let mut garbage = TcpStream::connect(&addr).unwrap();
+    garbage.write_all(b"NOPE this is not a worker frame").unwrap();
+    garbage.flush().unwrap();
+    let worker = {
+        let path = path.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || run_worker(&path, &addr, 1))
+    };
+
+    let dopts = DistOptions {
+        listen: addr,
+        workers: 1,
+        timeout: Duration::from_secs(30),
+    };
+    let dist = run_distributed_on(listener, &store, &opts, &dopts).expect("distributed run");
+    assert_same_result(&dist, &baseline, "after rejecting a garbage peer");
+    worker.join().unwrap().expect("real worker exits cleanly");
+    drop(garbage);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn corpus_digest_mismatch_is_a_typed_refusal_on_both_sides() {
+    let (path_a, store_a) = write_store("digest_a", 0x0c0de);
+    let (path_b, _store_b) = write_store("digest_b", 0xd1ff);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // the worker opened a *different* corpus: the coordinator must
+    // refuse it at handshake, and with no eligible worker left the run
+    // must fail with a protocol error instead of waiting forever
+    let worker = {
+        let path = path_b.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || run_worker(&path, &addr, 1))
+    };
+    let dopts = DistOptions {
+        listen: addr,
+        workers: 1,
+        timeout: Duration::from_secs(2),
+    };
+    let opts = enforced_opts();
+    match run_distributed_on(listener, &store_a, &opts, &dopts) {
+        Err(EsnmfError::Protocol(msg)) => {
+            assert!(msg.contains("no workers joined"), "{msg}")
+        }
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+    match worker.join().unwrap() {
+        Err(EsnmfError::Protocol(msg)) => assert!(msg.contains("mismatch"), "{msg}"),
+        other => panic!("worker should see the refusal, got {other:?}"),
+    }
+    std::fs::remove_file(&path_a).unwrap();
+    std::fs::remove_file(&path_b).unwrap();
+}
+
+// ---- CLI end-to-end ------------------------------------------------------
+
+fn esnmf(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_esnmf"))
+        .args(args)
+        .env("ESNMF_LOG", "warn")
+        .output()
+        .expect("spawning esnmf")
+}
+
+#[test]
+fn cli_distributed_needs_a_corpus_store() {
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--distributed",
+    ]);
+    assert_eq!(out.status.code(), Some(2), "config mistakes exit 2");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--corpus-store"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn cli_distributed_run_prints_the_single_process_digest() {
+    let store_path = temp("cli.estdm");
+    let _ = std::fs::remove_file(&store_path);
+    let out = esnmf(&[
+        "ingest", "--corpus", "reuters", "--scale", "tiny", "--seed", "21",
+        "--shard-rows", "5", "--out", store_path.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "ingest stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let digest_line = |stdout: &str| -> String {
+        stdout
+            .lines()
+            .find(|l| l.starts_with("factors digest:"))
+            .unwrap_or_else(|| panic!("no digest line in:\n{stdout}"))
+            .to_string()
+    };
+    let common = [
+        "--k", "4", "--iters", "4", "--sparsity", "both", "--t-u", "50",
+        "--t-v", "110", "--seed", "21", "--block-rows", "7",
+    ];
+    let mut local_args: Vec<&str> =
+        vec!["factorize", "--corpus-store", store_path.to_str().unwrap()];
+    local_args.extend_from_slice(&common);
+    let local_out = esnmf(&local_args);
+    assert!(
+        local_out.status.success(),
+        "local stderr: {}",
+        String::from_utf8_lossy(&local_out.stderr)
+    );
+    let local_digest = digest_line(&String::from_utf8_lossy(&local_out.stdout));
+
+    // a port of our own: bind :0, note the address, release it for the
+    // coordinator (workers retry connecting for 30s, so the brief gap
+    // between drop and rebind is covered)
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+    let mut workers: Vec<_> = (0..2)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_esnmf"))
+                .args([
+                    "worker",
+                    store_path.to_str().unwrap(),
+                    "--coordinator",
+                    addr.as_str(),
+                    "--threads",
+                    "1",
+                ])
+                .env("ESNMF_LOG", "warn")
+                .spawn()
+                .expect("spawning worker")
+        })
+        .collect();
+    let mut dist_args: Vec<&str> = vec![
+        "factorize", "--corpus-store", store_path.to_str().unwrap(),
+        "--distributed", "--dist-workers", "2", "--dist-listen", addr.as_str(),
+        "--dist-timeout", "30",
+    ];
+    dist_args.extend_from_slice(&common);
+    let dist_out = esnmf(&dist_args);
+    for w in &mut workers {
+        let _ = w.kill();
+        let _ = w.wait();
+    }
+    assert!(
+        dist_out.status.success(),
+        "distributed stderr: {}",
+        String::from_utf8_lossy(&dist_out.stderr)
+    );
+    let dist_digest = digest_line(&String::from_utf8_lossy(&dist_out.stdout));
+    assert_eq!(dist_digest, local_digest, "distributed CLI run diverged");
+    std::fs::remove_file(&store_path).unwrap();
+}
