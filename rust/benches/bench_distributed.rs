@@ -28,11 +28,12 @@ fn distributed(
 ) -> NmfResult {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback listener");
     let addr = listener.local_addr().expect("listener addr").to_string();
+    let objective = opts.objective;
     let handles: Vec<_> = (0..workers)
         .map(|_| {
             let path = store_path.to_path_buf();
             let addr = addr.clone();
-            std::thread::spawn(move || run_worker(&path, &addr, 1))
+            std::thread::spawn(move || run_worker(&path, &addr, objective, 1))
         })
         .collect();
     let dopts = DistOptions {

@@ -1,0 +1,49 @@
+//! Bench for the objective seam: the same enforced-sparse blocked ALS
+//! run under the Frobenius least-squares objective vs the KL-divergence
+//! multiplicative updates. Both share the streaming block geometry and
+//! the top-t enforcement machinery, so this suite records what the
+//! objective itself costs — wall time per full factorization and the
+//! peak-memory telemetry — as *per-objective* metrics: the bench-check
+//! gates compare each metric against its own previous trajectory point,
+//! never Frobenius against KL (the objectives legitimately differ).
+
+mod common;
+
+use esnmf::nmf::{factorize, NmfOptions, NmfResult, ObjectiveKind, SparsityMode};
+use esnmf::util::bench::BenchSuite;
+
+fn main() {
+    let cfg = common::bench_config();
+    let tdm = common::corpus("reuters", &cfg);
+    let k = 5;
+    let t = 100;
+    let iters = cfg.iters(15);
+    let mut suite = BenchSuite::new("objectives: frobenius vs kl");
+
+    for objective in [ObjectiveKind::Frobenius, ObjectiveKind::Kl] {
+        let opts = NmfOptions::new(k)
+            .with_iters(iters)
+            .with_seed(cfg.seed)
+            .with_sparsity(SparsityMode::both(t, t))
+            .with_threads(1)
+            .with_track_error(false)
+            .with_objective(objective);
+        let mut last: Option<NmfResult> = None;
+        suite.bench(&format!("als({})", objective.name()), || {
+            last = Some(factorize(&tdm, &opts));
+        });
+        let r = last.take().expect("bench ran");
+        assert!(r.u.nnz() > 0 && r.v.nnz() > 0, "{objective:?} factorized to zero");
+        // the peak-memory axis, namespaced by objective so the guarded
+        // lower-is-better gates (max_intermediate_nnz) track each
+        // objective's own trajectory
+        suite.metric(
+            &format!("{}.max_intermediate_nnz", objective.name()),
+            r.memory.max_intermediate_nnz as f64,
+        );
+        suite.metric(
+            &format!("{}.max_combined_nnz", objective.name()),
+            r.memory.max_combined_nnz as f64,
+        );
+    }
+}

@@ -4,7 +4,7 @@
 use super::parse::ConfigFile;
 use crate::backend::BackendKind;
 use crate::corpus::Scale;
-use crate::nmf::{NmfOptions, SequentialOptions, SparsityMode};
+use crate::nmf::{NmfOptions, ObjectiveKind, SequentialOptions, SparsityMode};
 use crate::sparse::TieMode;
 use anyhow::{bail, Result};
 
@@ -31,6 +31,10 @@ pub struct RunConfig {
     pub k: usize,
     pub iters: usize,
     pub tol: f64,
+    /// which per-half-step math the factorization runs
+    /// (`--objective` / `[nmf] objective`): `frobenius` (the paper's
+    /// least-squares ALS) or `kl` (multiplicative KL-divergence updates)
+    pub objective: String,
     pub sparsity_mode: String,
     pub t_u: Option<usize>,
     pub t_v: Option<usize>,
@@ -107,6 +111,7 @@ impl Default for RunConfig {
             k: 5,
             iters: 75,
             tol: 0.0,
+            objective: "frobenius".into(),
             sparsity_mode: "none".into(),
             t_u: None,
             t_v: None,
@@ -171,6 +176,9 @@ impl RunConfig {
         }
         if let Some(v) = f.f64("nmf.tol") {
             self.tol = v;
+        }
+        if let Some(v) = f.str("nmf.objective") {
+            self.objective = v.to_string();
         }
         if let Some(v) = f.bool("nmf.track_error") {
             self.track_error = v;
@@ -315,6 +323,26 @@ impl RunConfig {
         })
     }
 
+    /// Resolve the objective string into the typed enum, refusing
+    /// combinations no solver implements: the sequential algorithm and
+    /// the XLA backend are Frobenius-only.
+    pub fn objective(&self) -> Result<ObjectiveKind> {
+        let o = ObjectiveKind::parse(&self.objective).ok_or_else(|| {
+            anyhow::anyhow!("unknown objective {:?} (frobenius|kl)", self.objective)
+        })?;
+        if o == ObjectiveKind::Kl {
+            anyhow::ensure!(
+                self.algorithm == Algorithm::Als,
+                "--objective kl requires --algorithm als (the sequential solver is frobenius-only)"
+            );
+            anyhow::ensure!(
+                self.backend == BackendKind::Native,
+                "--objective kl requires --backend native (the xla backend is frobenius-only)"
+            );
+        }
+        Ok(o)
+    }
+
     pub fn nmf_options(&self) -> Result<NmfOptions> {
         let mut opts = NmfOptions::new(self.k)
             .with_iters(self.iters)
@@ -323,7 +351,8 @@ impl RunConfig {
             .with_sparsity(self.sparsity()?)
             .with_track_error(self.track_error)
             .with_threads(self.threads)
-            .with_block_rows(self.block_rows);
+            .with_block_rows(self.block_rows)
+            .with_objective(self.objective()?);
         opts.tie_mode = TieMode::KeepTies;
         opts.init_nnz = self.init_nnz;
         if self.checkpoint_every > 0 {
@@ -562,6 +591,39 @@ mod tests {
         assert!(!cfg.distributed);
         assert_eq!(cfg.dist_options().workers, 2);
         assert_eq!(cfg.dist_options().listen, "127.0.0.1:7611");
+    }
+
+    #[test]
+    fn objective_knob_from_file() {
+        let f = ConfigFile::parse("[nmf]\nobjective = kl\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.nmf_options().unwrap().objective, ObjectiveKind::Kl);
+        // default is the paper's Frobenius math
+        let cfg = RunConfig::default();
+        assert_eq!(
+            cfg.nmf_options().unwrap().objective,
+            ObjectiveKind::Frobenius
+        );
+        // unknown names are refused, not defaulted
+        let mut cfg = RunConfig::default();
+        cfg.objective = "itakura".into();
+        let err = cfg.nmf_options().unwrap_err();
+        assert!(format!("{err:#}").contains("objective"), "{err:#}");
+    }
+
+    #[test]
+    fn kl_requires_the_native_als_path() {
+        let mut cfg = RunConfig::default();
+        cfg.objective = "kl".into();
+        assert!(cfg.objective().is_ok());
+        cfg.algorithm = Algorithm::Sequential;
+        let err = cfg.objective().unwrap_err();
+        assert!(format!("{err:#}").contains("sequential"), "{err:#}");
+        cfg.algorithm = Algorithm::Als;
+        cfg.backend = BackendKind::Xla;
+        let err = cfg.objective().unwrap_err();
+        assert!(format!("{err:#}").contains("xla"), "{err:#}");
     }
 
     #[test]

@@ -77,7 +77,7 @@ pub fn admin_command(state: &ServerState, line: &str) -> String {
             }
             format!(
                 "OK path={} crc32={} digest={} k={} terms={} docs={} \
-                 sparsity={} options={} foldin_t={} loaded_unix_ms={} generation={}",
+                 sparsity={} options={} objective={} foldin_t={} loaded_unix_ms={} generation={}",
                 opt(&p.path),
                 p.file_crc32
                     .map_or_else(|| "-".into(), |c| format!("{c:#010x}")),
@@ -88,6 +88,7 @@ pub fn admin_command(state: &ServerState, line: &str) -> String {
                 p.n_docs,
                 p.sparsity,
                 p.options,
+                p.objective,
                 opt(&p.foldin_t),
                 p.loaded_unix_ms,
                 active.generation,
@@ -284,6 +285,7 @@ mod tests {
         assert!(!line.contains('\n'));
         assert!(line.starts_with("OK path=- crc32=- "), "{line}");
         assert!(line.contains(" k=2 terms=3 docs=2 "), "{line}");
+        assert!(line.contains(" objective=frobenius "), "{line}");
         assert!(line.ends_with("generation=0"), "{line}");
         for pair in line.trim_start_matches("OK ").split(' ') {
             assert!(pair.contains('='), "not key=value: {pair:?} in {line}");

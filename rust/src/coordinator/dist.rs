@@ -16,10 +16,11 @@
 //!
 //! * every participant derives the same block geometry from the
 //!   resolved `block_rows` the coordinator ships in each request;
-//! * the fixed factor and the ridged Gram inverse travel as exact bits,
-//!   and fragments are produced by the same [`StreamCtx`] code path a
-//!   local run uses — a fragment's bits cannot depend on who computed
-//!   it;
+//! * the fixed factor and the objective's auxiliary data (the ridged
+//!   Gram inverse under Frobenius, the column sums — plus the previous
+//!   iterate — under KL) travel as exact bits, and fragments are
+//!   produced by the same [`StreamCtx`] code path a local run uses — a
+//!   fragment's bits cannot depend on who computed it;
 //! * fragments are assembled in ascending global block order, with the
 //!   `Exact` tie budget consumed by the coordinator's serial scan;
 //! * the top-t cutoff is an order statistic, so absorbing per-span
@@ -36,14 +37,13 @@ use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::pool;
-use crate::dense::inverse_spd;
 use crate::io::wire::{read_msg, write_msg, ComputeReq, PassReq, WorkerMsg, WORKER_PROTOCOL_VERSION};
 use crate::io::CorpusStore;
 use crate::nmf::als::{
-    self, enforcement_for, stream_half_step, AlsCorpus, BlockEmit, CandSource, Enforce, HalfSteps,
-    Keep, Solve, StreamCtx,
+    self, enforcement_for, stream_half_step, AlsCorpus, BlockCompute, BlockEmit, CandSource,
+    Enforce, HalfSteps, Keep, Solve, StreamCtx,
 };
-use crate::nmf::{MemoryTracker, NmfOptions, NmfResult};
+use crate::nmf::{MemoryTracker, NmfOptions, NmfResult, ObjectiveKind};
 use crate::sparse::source::RowSource;
 use crate::sparse::{ops, topk, Csr, TieMode};
 use crate::EsnmfError;
@@ -120,7 +120,7 @@ pub fn run_distributed_on(
             "--dist-workers must be >= 1 (or drop --distributed)",
         ));
     }
-    let conns = admit_workers(listener, store, dopts)?;
+    let conns = admit_workers(listener, store, opts.objective, dopts)?;
     let mut engine = DistEngine {
         conns,
         timeout: dopts.timeout,
@@ -137,6 +137,7 @@ pub fn run_distributed_on(
 fn admit_workers(
     listener: TcpListener,
     store: &CorpusStore,
+    objective: ObjectiveKind,
     dopts: &DistOptions,
 ) -> Result<Vec<WorkerConn>, EsnmfError> {
     listener.set_nonblocking(true)?;
@@ -150,7 +151,7 @@ fn admit_workers(
     let mut conns = Vec::new();
     while conns.len() < dopts.workers && Instant::now() < deadline {
         match listener.accept() {
-            Ok((stream, peer)) => match handshake(store, stream, &peer.to_string()) {
+            Ok((stream, peer)) => match handshake(store, objective, stream, &peer.to_string()) {
                 Ok(conn) => {
                     crate::log_info!("dist", "worker {} joined ({}/{})", conn.peer, conns.len() + 1, dopts.workers);
                     conns.push(conn);
@@ -182,9 +183,15 @@ fn admit_workers(
     Ok(conns)
 }
 
-/// Verify one joining worker: protocol version and — critically — that
-/// it opened the *same* corpus (digest + shape) before any work flows.
-fn handshake(store: &CorpusStore, stream: TcpStream, peer: &str) -> Result<WorkerConn, String> {
+/// Verify one joining worker: protocol version, that it opened the
+/// *same* corpus (digest + shape), and that it was launched under this
+/// run's objective — all before any work flows.
+fn handshake(
+    store: &CorpusStore,
+    objective: ObjectiveKind,
+    stream: TcpStream,
+    peer: &str,
+) -> Result<WorkerConn, String> {
     let mut conn = WorkerConn {
         stream,
         peer: peer.to_string(),
@@ -204,11 +211,22 @@ fn handshake(store: &CorpusStore, stream: TcpStream, peer: &str) -> Result<Worke
             digest,
             n_terms,
             n_docs,
+            objective: worker_objective,
         }) => {
             if version != WORKER_PROTOCOL_VERSION {
                 return refuse(
                     &mut conn,
                     format!("protocol v{version}, coordinator speaks v{WORKER_PROTOCOL_VERSION}"),
+                );
+            }
+            if worker_objective != objective {
+                return refuse(
+                    &mut conn,
+                    format!(
+                        "objective mismatch: worker runs {}, this factorization is {}",
+                        worker_objective.name(),
+                        objective.name()
+                    ),
                 );
             }
             if digest != store.digest()
@@ -251,6 +269,7 @@ impl DistEngine {
         &mut self,
         corpus: &dyn AlsCorpus,
         factor: &Csr,
+        prev: &Csr,
         step_u: bool,
         opts: &NmfOptions,
         mem: &mut MemoryTracker,
@@ -261,22 +280,32 @@ impl DistEngine {
             corpus.a_cols()
         };
         assert_eq!(row_src.cols(), factor.rows, "half-step contraction mismatch");
-        let g = ops::gram_par(factor, opts.threads);
-        let g_inv = inverse_spd(&g, opts.k);
+        // computed once here so every worker solves against identical
+        // bits: the ridged Gram inverse (Frobenius) or the fixed
+        // factor's column sums (KL)
+        let aux = opts.objective.implementation().step_aux(factor, opts.threads);
         let block_rows = opts.resolved_block_rows();
         let src = CandSource {
             src: row_src,
             factor,
-            dense: ops::dense_factor(factor),
+            dense: match opts.objective {
+                ObjectiveKind::Frobenius => ops::dense_factor(factor),
+                // the dense fast path belongs to the SpMM fill, unused by KL
+                ObjectiveKind::Kl => None,
+            },
             defl: None,
         };
-        let ctx = StreamCtx::new(
-            src,
-            Solve::Gram(g_inv.clone()),
-            opts.k,
-            opts.threads,
-            block_rows,
-        );
+        let compute = match opts.objective {
+            ObjectiveKind::Frobenius => BlockCompute::Solve(Solve::Gram(aux.clone())),
+            ObjectiveKind::Kl => {
+                assert_eq!(prev.rows, row_src.rows(), "KL previous-iterate row mismatch");
+                BlockCompute::Kl {
+                    prev,
+                    col_sums: aux.clone(),
+                }
+            }
+        };
+        let ctx = StreamCtx::with_compute(src, compute, opts.k, opts.threads, block_rows);
         let enforce = enforcement_for(opts.sparsity, step_u);
 
         // one block (or no one left to help): the in-process pipeline is
@@ -288,11 +317,16 @@ impl DistEngine {
         let req = |span: (usize, usize), pass: PassReq| {
             WorkerMsg::Compute(ComputeReq {
                 step_u,
+                objective: opts.objective,
                 k: opts.k as u32,
                 block_rows: block_rows as u64,
                 span: (span.0 as u64, span.1 as u64),
                 factor: factor.clone(),
-                g_inv: g_inv.clone(),
+                aux: aux.clone(),
+                prev: match opts.objective {
+                    ObjectiveKind::Frobenius => None,
+                    ObjectiveKind::Kl => Some(prev.clone()),
+                },
                 pass,
             })
         };
@@ -362,20 +396,22 @@ impl HalfSteps for DistEngine {
         &mut self,
         corpus: &dyn AlsCorpus,
         u: &Csr,
+        v_prev: &Csr,
         opts: &NmfOptions,
         mem: &mut MemoryTracker,
     ) -> Csr {
-        self.half_step(corpus, u, false, opts, mem)
+        self.half_step(corpus, u, v_prev, false, opts, mem)
     }
 
     fn u(
         &mut self,
         corpus: &dyn AlsCorpus,
         v: &Csr,
+        u_prev: &Csr,
         opts: &NmfOptions,
         mem: &mut MemoryTracker,
     ) -> Csr {
-        self.half_step(corpus, v, true, opts, mem)
+        self.half_step(corpus, v, u_prev, true, opts, mem)
     }
 }
 

@@ -4,7 +4,7 @@
 
 use crate::eval::topics::top_terms;
 use crate::io::Snapshot;
-use crate::nmf::{FoldIn, FoldInScratch, NmfOptions, SparsityMode};
+use crate::nmf::{FoldIn, FoldInScratch, NmfOptions, ObjectiveKind, SparsityMode};
 use crate::sparse::{Csr, TieMode};
 use crate::text::normalize_term;
 
@@ -28,6 +28,9 @@ pub struct Provenance {
     pub sparsity: String,
     /// compact solver-options label, see [`options_label`]
     pub options: String,
+    /// training objective name (`frobenius` / `kl`) — fold-in answers
+    /// are solved under this same objective
+    pub objective: String,
     /// serving-side fold-in nonzero budget (None = unenforced)
     pub foldin_t: Option<usize>,
     /// wall-clock load time, milliseconds since the unix epoch
@@ -47,6 +50,7 @@ impl Provenance {
             n_docs: snap.v.rows,
             sparsity: sparsity_label(&snap.options.sparsity),
             options: options_label(&snap.options),
+            objective: snap.options.objective.name().into(),
             foldin_t: snap.t_v(),
             loaded_unix_ms: now_unix_ms(),
         }
@@ -63,6 +67,7 @@ impl Provenance {
             n_docs: model.v.rows,
             sparsity: String::new(),
             options: String::new(),
+            objective: model.objective().name().into(),
             foldin_t: model.foldin_budget(),
             loaded_unix_ms: now_unix_ms(),
         }
@@ -147,7 +152,10 @@ impl TopicModel {
     /// [`TopicModel::with_foldin_budget`]).
     pub fn from_snapshot(snap: Snapshot) -> Self {
         let budget = snap.t_v();
-        TopicModel::new(snap.u, snap.v, snap.terms).with_foldin_budget(budget)
+        let objective = snap.options.objective;
+        TopicModel::new(snap.u, snap.v, snap.terms)
+            .with_foldin_budget(budget)
+            .with_objective(objective)
     }
 
     /// Cap the nonzeros of every folded-in document row (None leaves
@@ -156,6 +164,22 @@ impl TopicModel {
     pub fn with_foldin_budget(mut self, t: Option<usize>) -> Self {
         self.foldin.t = t;
         self
+    }
+
+    /// Solve fold-ins under this objective — what
+    /// [`TopicModel::from_snapshot`] sets from the snapshot's training
+    /// objective, so FOLDIN/CLASSIFY answers minimize the same
+    /// divergence the model was trained under.
+    pub fn with_objective(mut self, objective: ObjectiveKind) -> Self {
+        if self.foldin.objective() != objective {
+            self.foldin = FoldIn::with_objective(&self.u, objective, self.foldin.t, self.foldin.tie);
+        }
+        self
+    }
+
+    /// The objective fold-ins are solved under.
+    pub fn objective(&self) -> ObjectiveKind {
+        self.foldin.objective()
     }
 
     pub fn foldin_budget(&self) -> Option<usize> {
@@ -446,12 +470,47 @@ mod tests {
         assert_eq!(prov.n_terms, tdm.terms.len());
         assert_eq!(prov.foldin_t, Some(12));
         assert_eq!(prov.file_crc32, Some(0xdead_beef));
+        assert_eq!(prov.objective, "frobenius");
         assert!(prov.loaded_unix_ms > 0);
         let m = TopicModel::from_snapshot(snap);
         let from_model = Provenance::from_model(&m);
         assert_eq!(from_model.k, 2);
         assert_eq!(from_model.foldin_t, Some(12));
         assert_eq!(from_model.corpus_digest, None);
+        assert_eq!(from_model.objective, "frobenius");
+    }
+
+    #[test]
+    fn kl_snapshot_serves_kl_foldins() {
+        use crate::nmf::{factorize, NmfOptions};
+        use crate::text::TdmBuilder;
+        let mut b = TdmBuilder::new();
+        for _ in 0..4 {
+            b.add_text("coffee crop quotas coffee", Some("econ"));
+            b.add_text("electrons atoms hydrogen", Some("sci"));
+        }
+        let tdm = b.freeze();
+        let opts = NmfOptions::new(2)
+            .with_iters(6)
+            .with_seed(5)
+            .with_objective(ObjectiveKind::Kl);
+        let r = factorize(&tdm, &opts);
+        let snap = crate::io::Snapshot::new(
+            opts,
+            r.u.clone(),
+            r.v.clone(),
+            &tdm,
+            crate::io::Progress::default(),
+        );
+        let prov = Provenance::from_snapshot(&snap, None, None);
+        assert_eq!(prov.objective, "kl");
+        let m = TopicModel::from_snapshot(snap);
+        assert_eq!(m.objective(), ObjectiveKind::Kl);
+        // answers match a hand-built KL fold-in over the same factors
+        let want = TopicModel::new(r.u, r.v, tdm.terms.clone())
+            .with_objective(ObjectiveKind::Kl);
+        let doc = [("coffee", 2.0f32), ("atoms", 1.0)];
+        assert_eq!(m.fold_in(&doc), want.fold_in(&doc));
     }
 
     #[test]

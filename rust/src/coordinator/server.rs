@@ -9,7 +9,7 @@
 //! DOCS <topic> [n]            → "OK doc:weight ..."
 //! BATCH <n>                   → "OK batch=<n>" + the next n lines'
 //!                               responses, in order
-//! STATS                       → "OK <metrics snapshot>"
+//! STATS                       → "OK objective=<name> <metrics snapshot>"
 //! PING                        → "OK pong"
 //! QUIT                        → closes the connection
 //! ```
@@ -423,7 +423,13 @@ pub fn handle_command_with(
                 docs.iter().map(|(d, w)| format!("{d}:{w:.4}")).collect();
             format!("OK {}", body.join(" "))
         }
-        ServeRequest::Stats => format!("OK {}", metrics.format()),
+        // the serving objective leads so operators can tell a KL model
+        // from a Frobenius one without the admin plane
+        ServeRequest::Stats => format!(
+            "OK objective={} {}",
+            model.objective().name(),
+            metrics.format()
+        ),
         ServeRequest::Ping => "OK pong".into(),
         // connection control never reaches this handler on its own line;
         // inside a BATCH body it is rejected so the response count holds

@@ -2,14 +2,15 @@
 //!
 //! A worker owns nothing but a read-only handle on the shared `.estdm`
 //! corpus store and one TCP connection to the coordinator. Every
-//! [`ComputeReq`] it receives is self-contained — which half-step, the
-//! fixed factor (bit-exact CSR), the ridged Gram inverse, the resolved
-//! block geometry, and the assigned span of the global block list — so a
-//! worker can join, die, or be replaced at any iteration boundary
-//! without the coordinator losing state. The compute itself is the same
-//! [`StreamCtx`] engine the single-process blocked half-step runs,
-//! restricted to the assigned span: a fragment's bits cannot depend on
-//! who computed it.
+//! [`ComputeReq`] it receives is self-contained — which half-step and
+//! objective, the fixed factor (bit-exact CSR), the objective's
+//! auxiliary data (ridged Gram inverse or column sums + previous
+//! iterate), the resolved block geometry, and the assigned span of the
+//! global block list — so a worker can join, die, or be replaced at any
+//! iteration boundary without the coordinator losing state. The compute
+//! itself is the same [`StreamCtx`] engine the single-process blocked
+//! half-step runs, restricted to the assigned span: a fragment's bits
+//! cannot depend on who computed it.
 //!
 //! Failure model: every malformed frame, shape mismatch, or latched
 //! store fault answers with a typed [`WorkerMsg::Refuse`] (never a hang,
@@ -22,7 +23,8 @@ use std::time::{Duration, Instant};
 
 use crate::io::wire::{read_msg, write_msg, ComputeReq, PassReq, WorkerMsg, WORKER_PROTOCOL_VERSION};
 use crate::io::CorpusStore;
-use crate::nmf::als::{AlsCorpus, BlockEmit, CandSource, Keep, Solve, StreamCtx};
+use crate::nmf::als::{AlsCorpus, BlockCompute, BlockEmit, CandSource, Keep, Solve, StreamCtx};
+use crate::nmf::ObjectiveKind;
 use crate::sparse::{ops, source::RowSource};
 use crate::EsnmfError;
 
@@ -32,7 +34,14 @@ const CONNECT_RETRY_WINDOW: Duration = Duration::from_secs(30);
 
 /// Open the shared corpus store, join the coordinator, and serve compute
 /// requests until a `Shutdown` frame (or the coordinator hangs up).
-pub fn run_worker(store_path: &Path, coordinator: &str, threads: usize) -> Result<(), EsnmfError> {
+/// `objective` is announced in the handshake — a coordinator running
+/// different per-block math refuses the pairing before any work flows.
+pub fn run_worker(
+    store_path: &Path,
+    coordinator: &str,
+    objective: ObjectiveKind,
+    threads: usize,
+) -> Result<(), EsnmfError> {
     let store = CorpusStore::open(store_path)?;
     let mut stream = connect_with_retry(coordinator)?;
     stream.set_nodelay(true).ok();
@@ -44,6 +53,7 @@ pub fn run_worker(store_path: &Path, coordinator: &str, threads: usize) -> Resul
             digest: store.digest(),
             n_terms: AlsCorpus::n_terms(&store) as u64,
             n_docs: AlsCorpus::n_docs(&store) as u64,
+            objective,
         },
     )?;
     match read_msg(&mut stream)? {
@@ -69,7 +79,7 @@ pub fn run_worker(store_path: &Path, coordinator: &str, threads: usize) -> Resul
     loop {
         match read_msg(&mut stream) {
             Ok(WorkerMsg::Compute(req)) => {
-                let reply = compute(&store, &req, threads)
+                let reply = compute(&store, &req, objective, threads)
                     .unwrap_or_else(|message| WorkerMsg::Refuse { message });
                 write_msg(&mut stream, &reply)?;
             }
@@ -129,9 +139,21 @@ fn connect_with_retry(coordinator: &str) -> Result<TcpStream, EsnmfError> {
 /// Execute one self-contained compute request against the local store
 /// handle. `Err` is the refusal message — every input is validated
 /// before it can panic a kernel.
-fn compute(store: &CorpusStore, req: &ComputeReq, threads: usize) -> Result<WorkerMsg, String> {
+fn compute(
+    store: &CorpusStore,
+    req: &ComputeReq,
+    objective: ObjectiveKind,
+    threads: usize,
+) -> Result<WorkerMsg, String> {
     let k = req.k as usize;
     let block_rows = req.block_rows as usize;
+    if req.objective != objective {
+        return Err(format!(
+            "request runs objective {}, this worker was launched with {}",
+            req.objective.name(),
+            objective.name()
+        ));
+    }
     if k == 0 {
         return Err("k must be >= 1".into());
     }
@@ -144,11 +166,12 @@ fn compute(store: &CorpusStore, req: &ComputeReq, threads: usize) -> Result<Work
             req.factor.cols
         ));
     }
-    if req.g_inv.len() != k * k {
+    let want_aux = req.objective.implementation().aux_len(k);
+    if req.aux.len() != want_aux {
         return Err(format!(
-            "gram inverse has {} entries, wanted k*k={}",
-            req.g_inv.len(),
-            k * k
+            "auxiliary data has {} entries, objective {} wants {want_aux} at k={k}",
+            req.aux.len(),
+            req.objective.name()
         ));
     }
     let row_src: &dyn RowSource = if req.step_u {
@@ -163,13 +186,44 @@ fn compute(store: &CorpusStore, req: &ComputeReq, threads: usize) -> Result<Work
             req.factor.rows
         ));
     }
+    let prev = match (req.objective, &req.prev) {
+        (ObjectiveKind::Frobenius, None) => None,
+        (ObjectiveKind::Frobenius, Some(_)) => {
+            return Err("frobenius request carries a previous factor".into());
+        }
+        (ObjectiveKind::Kl, None) => {
+            return Err("kl request is missing the previous factor".into());
+        }
+        (ObjectiveKind::Kl, Some(p)) => {
+            if p.cols != k || p.rows != row_src.rows() {
+                return Err(format!(
+                    "previous factor is {}×{}, wanted {}×{k}",
+                    p.rows,
+                    p.cols,
+                    row_src.rows()
+                ));
+            }
+            Some(p)
+        }
+    };
     let src = CandSource {
         src: row_src,
         factor: &req.factor,
-        dense: ops::dense_factor(&req.factor),
+        dense: match req.objective {
+            ObjectiveKind::Frobenius => ops::dense_factor(&req.factor),
+            // the dense fast path belongs to the SpMM fill, unused by KL
+            ObjectiveKind::Kl => None,
+        },
         defl: None,
     };
-    let ctx = StreamCtx::new(src, Solve::Gram(req.g_inv.clone()), k, threads, block_rows);
+    let compute = match prev {
+        None => BlockCompute::Solve(Solve::Gram(req.aux.clone())),
+        Some(prev) => BlockCompute::Kl {
+            prev,
+            col_sums: req.aux.clone(),
+        },
+    };
+    let ctx = StreamCtx::with_compute(src, compute, k, threads, block_rows);
     let (lo, hi) = (req.span.0 as usize, req.span.1 as usize);
     if lo > hi || hi > ctx.n_blocks() {
         return Err(format!(

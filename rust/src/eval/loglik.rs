@@ -1,0 +1,214 @@
+//! Held-out mean per-token log-likelihood — the objective-agnostic
+//! predictive measure reported next to the rel-error / accuracy lines.
+//!
+//! Every [`HELDOUT_STRIDE`]-th document is re-projected from scratch
+//! against the frozen term factor `U` (the same [`FoldIn`] solve the
+//! topic server answers FOLDIN with — the trained `V` row is never
+//! consulted), the factorization's implied unigram distribution
+//!
+//! ```text
+//! p(w | d) = ⟨U_w, x̂_d⟩ / (colsums(U) · x̂_d)
+//! ```
+//!
+//! is evaluated at each of the document's tokens, and the count-weighted
+//! mean of `ln p(w | d)` is returned. Higher (closer to zero) is better.
+//! Predictions are floored at [`KL_EPS`] inside the log, so a topic row
+//! that misses a token entirely costs a large-but-finite penalty instead
+//! of `-inf` — the same no-epsilon-in-the-math, epsilon-only-in-the-log
+//! discipline as the streamed KL divergence.
+//!
+//! The measure is comparable *across objectives* (both Frobenius- and
+//! KL-trained models are scored under the identical likelihood), which
+//! is exactly what the per-objective training errors (relative Frobenius
+//! error vs. mean per-token KL) are not.
+
+use crate::nmf::foldin::FoldIn;
+use crate::nmf::objective::{ObjectiveKind, KL_EPS};
+use crate::sparse::source::{RowCursor, RowSource};
+use crate::sparse::{Csr, TieMode};
+
+/// Every stride-th document (by column id) is scored; the rest are
+/// skipped. 7 is coprime to the corpus generators' topic cycling, so the
+/// sample crosses all ground-truth clusters.
+pub const HELDOUT_STRIDE: usize = 7;
+
+/// The result of a held-out scoring pass.
+#[derive(Clone, Copy, Debug)]
+pub struct HeldOut {
+    /// documents scored (every [`HELDOUT_STRIDE`]-th, empty ones skipped)
+    pub docs: usize,
+    /// total token mass scored (sum of the scored documents' counts)
+    pub tokens: f64,
+    /// count-weighted mean of `ln p(w | d)` over the scored tokens;
+    /// `0.0` when nothing was scorable
+    pub mean_log_likelihood: f64,
+}
+
+/// Score the factorization's predictive likelihood on every
+/// [`HELDOUT_STRIDE`]-th document of `a_cols` (the docs-major
+/// orientation: row `d` holds document `d`'s term counts). Each scored
+/// document is folded in against `u` under `objective` — with the same
+/// nonzero budget `t` and tie discipline the model would serve with —
+/// and its tokens are scored under the implied unigram distribution.
+pub fn heldout_mean_log_likelihood(
+    a_cols: &dyn RowSource,
+    u: &Csr,
+    objective: ObjectiveKind,
+    t: Option<usize>,
+    tie: TieMode,
+) -> HeldOut {
+    let k = u.cols;
+    let solver = FoldIn::with_objective(u, objective, t, tie);
+    // per-topic column sums of U in f64 — the normalizer of p(w | d)
+    let mut col_sums = vec![0.0f64; k];
+    for w in 0..u.rows {
+        let (idx, val) = u.row(w);
+        for (&c, &v) in idx.iter().zip(val) {
+            col_sums[c as usize] += v as f64;
+        }
+    }
+    let mut cur = RowCursor::new();
+    let mut doc: Vec<(usize, f32)> = Vec::new();
+    let (mut docs, mut tokens, mut ll) = (0usize, 0.0f64, 0.0f64);
+    for d in (0..a_cols.rows()).step_by(HELDOUT_STRIDE.max(1)) {
+        let view = a_cols.load(d, d + 1, &mut cur);
+        let (idx, val) = view.row(0);
+        doc.clear();
+        doc.extend(
+            idx.iter()
+                .zip(val)
+                .filter(|(_, &a)| a > 0.0)
+                .map(|(&w, &a)| (w as usize, a)),
+        );
+        if doc.is_empty() {
+            continue;
+        }
+        let x = solver.solve(u, &doc);
+        let denom: f64 = col_sums
+            .iter()
+            .zip(&x)
+            .map(|(&s, &xc)| s * xc as f64)
+            .sum();
+        for &(w, a) in &doc {
+            // ⟨U_w, x̂⟩ — U's row w is sparse, x̂ is dense length-k
+            let (idx, val) = u.row(w);
+            let pred: f64 = idx
+                .iter()
+                .zip(val)
+                .map(|(&c, &v)| v as f64 * x[c as usize] as f64)
+                .sum();
+            let p = if denom > 0.0 { pred / denom } else { 0.0 };
+            ll += a as f64 * p.max(KL_EPS).ln();
+            tokens += a as f64;
+        }
+        docs += 1;
+    }
+    HeldOut {
+        docs,
+        tokens,
+        mean_log_likelihood: if tokens > 0.0 { ll / tokens } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One topic whose U column is exactly the empirical term
+    /// distribution of every document: p(w | d) reduces to the
+    /// empirical unigram, so the mean log-likelihood is the negated
+    /// empirical entropy — the best any unigram model can do.
+    #[test]
+    fn perfect_single_topic_model_attains_the_empirical_entropy() {
+        // every doc is the same bag: term 0 ×3, term 1 ×1
+        let n_docs = 15;
+        let mut cols = vec![0.0f32; n_docs * 2];
+        for d in 0..n_docs {
+            cols[d * 2] = 3.0;
+            cols[d * 2 + 1] = 1.0;
+        }
+        let a_cols = Csr::from_dense(n_docs, 2, &cols);
+        let u = Csr::from_dense(2, 1, &[0.75, 0.25]);
+        for objective in [ObjectiveKind::Frobenius, ObjectiveKind::Kl] {
+            let h = heldout_mean_log_likelihood(
+                &a_cols,
+                &u,
+                objective,
+                None,
+                TieMode::KeepTies,
+            );
+            // stride 7 over 15 docs → docs 0, 7, 14
+            assert_eq!(h.docs, 3, "{objective:?}");
+            assert!((h.tokens - 12.0).abs() < 1e-9, "{objective:?}");
+            let want = 0.75 * 0.75f64.ln() + 0.25 * 0.25f64.ln();
+            assert!(
+                (h.mean_log_likelihood - want).abs() < 1e-4,
+                "{objective:?}: {} vs {want}",
+                h.mean_log_likelihood
+            );
+        }
+    }
+
+    #[test]
+    fn a_matching_model_beats_a_mismatched_one() {
+        // docs dominated by term 0; the matched model concentrates its
+        // mass there, the mismatched one inverts it
+        let n_docs = 8;
+        let mut cols = vec![0.0f32; n_docs * 3];
+        for d in 0..n_docs {
+            cols[d * 3] = 5.0;
+            cols[d * 3 + 1] = 1.0;
+        }
+        let a_cols = Csr::from_dense(n_docs, 3, &cols);
+        let good = Csr::from_dense(3, 1, &[5.0, 1.0, 0.1]);
+        let bad = Csr::from_dense(3, 1, &[0.1, 1.0, 5.0]);
+        for objective in [ObjectiveKind::Frobenius, ObjectiveKind::Kl] {
+            let hg =
+                heldout_mean_log_likelihood(&a_cols, &good, objective, None, TieMode::KeepTies);
+            let hb =
+                heldout_mean_log_likelihood(&a_cols, &bad, objective, None, TieMode::KeepTies);
+            assert!(
+                hg.mean_log_likelihood > hb.mean_log_likelihood,
+                "{objective:?}: good {} vs bad {}",
+                hg.mean_log_likelihood,
+                hb.mean_log_likelihood
+            );
+            assert!(hg.mean_log_likelihood <= 0.0);
+            assert!(hb.mean_log_likelihood.is_finite());
+        }
+    }
+
+    #[test]
+    fn unmodeled_tokens_are_floored_not_infinite() {
+        // U gives term 2 zero mass in every topic: its tokens hit the
+        // KL_EPS floor and the likelihood stays finite
+        let a_cols = Csr::from_dense(1, 3, &[1.0, 1.0, 4.0]);
+        let u = Csr::from_dense(3, 2, &[1.0, 0.5, 0.5, 1.0, 0.0, 0.0]);
+        for objective in [ObjectiveKind::Frobenius, ObjectiveKind::Kl] {
+            let h = heldout_mean_log_likelihood(&a_cols, &u, objective, None, TieMode::KeepTies);
+            assert_eq!(h.docs, 1, "{objective:?}");
+            assert!(h.mean_log_likelihood.is_finite(), "{objective:?}");
+            assert!(h.mean_log_likelihood < KL_EPS.ln() / 2.0, "{objective:?}");
+        }
+    }
+
+    #[test]
+    fn empty_documents_and_empty_samples_are_skipped() {
+        // doc 0 is empty (the only one the stride visits): nothing scored
+        let mut cols = vec![0.0f32; 3 * 2];
+        cols[1 * 2] = 1.0;
+        cols[2 * 2] = 1.0;
+        let a_cols = Csr::from_dense(3, 2, &cols);
+        let u = Csr::from_dense(2, 1, &[1.0, 1.0]);
+        let h = heldout_mean_log_likelihood(
+            &a_cols,
+            &u,
+            ObjectiveKind::Frobenius,
+            None,
+            TieMode::KeepTies,
+        );
+        assert_eq!(h.docs, 0);
+        assert_eq!(h.tokens, 0.0);
+        assert_eq!(h.mean_log_likelihood, 0.0);
+    }
+}

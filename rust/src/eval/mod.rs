@@ -5,11 +5,16 @@
 //! * [`topics`] — top-magnitude terms per topic (the Fig. 2/7 and Table 1
 //!   topic tables) and nonzero-distribution statistics.
 //! * [`sparsity`] — the Fig. 1 sparsity table for A, U, V and U·Vᵀ.
+//! * [`loglik`] — held-out mean per-token log-likelihood, the
+//!   objective-agnostic predictive measure (comparable across the
+//!   Frobenius and KL training objectives).
 
 pub mod accuracy;
+pub mod loglik;
 pub mod sparsity;
 pub mod topics;
 
 pub use accuracy::{mean_topic_accuracy, topic_accuracy};
+pub use loglik::{heldout_mean_log_likelihood, HeldOut, HELDOUT_STRIDE};
 pub use sparsity::{sparsity_fraction, SparsityReport};
 pub use topics::{top_terms, topic_term_table};

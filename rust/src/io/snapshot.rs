@@ -11,8 +11,10 @@
 //! payload  length bytes
 //! ```
 //!
-//! The payload is a flat sequence of sections: solver options, corpus
-//! digest, the `U` and `V` factors ([`Csr::write_bytes`] — value *bits*
+//! The payload is a flat sequence of sections: solver options (including,
+//! from version 2, the training objective — version-1 files predate
+//! selectable objectives and always load as Frobenius), corpus digest,
+//! the `U` and `V` factors ([`Csr::write_bytes`] — value *bits*
 //! round-trip, so a loaded model answers queries bit-identically),
 //! vocabulary terms, optional document labels + label names, and the
 //! convergence progress (iteration count, residual/error history, memory
@@ -25,14 +27,17 @@
 
 use super::wire::{self, Reader, WireError};
 use crate::nmf::memory::MemoryStats;
-use crate::nmf::{NmfOptions, SparsityMode};
+use crate::nmf::{NmfOptions, ObjectiveKind, SparsityMode};
 use crate::sparse::{Csr, TieMode};
 use crate::text::TermDocMatrix;
 use std::fmt;
 use std::path::Path;
 
 /// Current format version. Bump on any layout change.
-pub const SNAPSHOT_VERSION: u16 = 1;
+///
+/// History: v1 had no objective field (all v1 models are Frobenius);
+/// v2 appends the training objective tag to the options section.
+pub const SNAPSHOT_VERSION: u16 = 2;
 
 /// Hard ceiling on a snapshot's rank. Serving precomputes a dense k×k
 /// Gram inverse, so an absurd `k` in an otherwise well-formed file would
@@ -211,8 +216,16 @@ impl Snapshot {
 
     /// Serialize to the `.esnmf` wire form.
     pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_bytes_versioned(SNAPSHOT_VERSION)
+    }
+
+    /// [`Self::to_bytes`] at an explicit format version. Writers always
+    /// emit [`SNAPSHOT_VERSION`]; the older layouts exist so the
+    /// compatibility tests exercise real v1 bytes rather than
+    /// hand-patched buffers.
+    fn to_bytes_versioned(&self, version: u16) -> Vec<u8> {
         let mut payload = Vec::new();
-        write_options(&mut payload, &self.options);
+        write_options(&mut payload, &self.options, version);
         payload.extend_from_slice(&self.corpus_digest.to_le_bytes());
         self.u.write_bytes(&mut payload);
         self.v.write_bytes(&mut payload);
@@ -235,7 +248,7 @@ impl Snapshot {
 
         let mut out = Vec::with_capacity(payload.len() + 20);
         out.extend_from_slice(MAGIC);
-        out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        out.extend_from_slice(&version.to_le_bytes());
         out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
         out.extend_from_slice(&crc32(&payload).to_le_bytes());
         out.extend_from_slice(&payload);
@@ -282,7 +295,7 @@ impl Snapshot {
         }
 
         let mut r = Reader::new(payload);
-        let options = read_options(&mut r)?;
+        let options = read_options(&mut r, version)?;
         let corpus_digest = r.u64()?;
         let u = Csr::read_bytes(r.bytes, &mut r.pos).map_err(SnapshotError::Corrupt)?;
         let v = Csr::read_bytes(r.bytes, &mut r.pos).map_err(SnapshotError::Corrupt)?;
@@ -453,6 +466,22 @@ impl Snapshot {
         Ok(())
     }
 
+    /// Refuse an objective mismatch (e.g. `--resume --objective kl`
+    /// against a Frobenius snapshot): multiplicative KL updates and
+    /// least-squares half-steps cannot continue each other's histories,
+    /// and a served model must fold documents in under the objective it
+    /// was trained with.
+    pub fn check_objective(&self, objective: ObjectiveKind) -> Result<(), SnapshotError> {
+        if self.options.objective != objective {
+            return Err(SnapshotError::Mismatch(format!(
+                "requested objective {} but the snapshot was trained with {}",
+                objective.name(),
+                self.options.objective.name()
+            )));
+        }
+        Ok(())
+    }
+
     /// The training-time `t_v` budget, if sparsity enforcement was on —
     /// the natural default fold-in budget for a served snapshot.
     pub fn t_v(&self) -> Option<usize> {
@@ -504,7 +533,7 @@ fn read_opt_f32(r: &mut Reader) -> Result<Option<f32>, SnapshotError> {
     }
 }
 
-fn write_options(out: &mut Vec<u8>, o: &NmfOptions) {
+fn write_options(out: &mut Vec<u8>, o: &NmfOptions, version: u16) {
     out.extend_from_slice(&(o.k as u64).to_le_bytes());
     out.extend_from_slice(&(o.max_iters as u64).to_le_bytes());
     out.extend_from_slice(&o.tol.to_bits().to_le_bytes());
@@ -533,9 +562,12 @@ fn write_options(out: &mut Vec<u8>, o: &NmfOptions) {
             write_opt_f32(out, tau_v);
         }
     }
+    if version >= 2 {
+        out.push(o.objective.tag());
+    }
 }
 
-fn read_options(r: &mut Reader) -> Result<NmfOptions, SnapshotError> {
+fn read_options(r: &mut Reader, version: u16) -> Result<NmfOptions, SnapshotError> {
     let k = r.u64()? as usize;
     let max_iters = r.u64()? as usize;
     let tol = f64::from_bits(r.u64()?);
@@ -571,6 +603,14 @@ fn read_options(r: &mut Reader) -> Result<NmfOptions, SnapshotError> {
         },
         other => return Err(SnapshotError::Corrupt(format!("bad sparsity tag {other}"))),
     };
+    let objective = if version >= 2 {
+        let tag = r.u8()?;
+        ObjectiveKind::from_tag(tag)
+            .ok_or_else(|| SnapshotError::Corrupt(format!("bad objective tag {tag}")))?
+    } else {
+        // v1 predates selectable objectives; every v1 model is Frobenius
+        ObjectiveKind::Frobenius
+    };
     // threads and block_rows are machine-local speed/memory knobs with a
     // bit-identical determinism contract, so they are deliberately not
     // persisted: a loaded model uses this machine's defaults (threads =
@@ -580,7 +620,8 @@ fn read_options(r: &mut Reader) -> Result<NmfOptions, SnapshotError> {
         .with_tol(tol)
         .with_seed(seed)
         .with_sparsity(sparsity)
-        .with_track_error(track_error);
+        .with_track_error(track_error)
+        .with_objective(objective);
     opts.tie_mode = tie_mode;
     opts.init_nnz = init_nnz;
     Ok(opts)
@@ -662,6 +703,27 @@ mod tests {
         assert_eq!(a.options.track_error, b.options.track_error);
         assert_eq!(a.options.tie_mode, b.options.tie_mode);
         assert_eq!(a.options.sparsity, b.options.sparsity);
+        assert_eq!(a.options.objective, b.options.objective);
+    }
+
+    /// Reassemble a well-formed `.esnmf` file around a (possibly
+    /// modified) payload: fresh length and CRC, chosen header version.
+    fn file_from_payload(payload: &[u8], version: u16) -> Vec<u8> {
+        let mut out = Vec::with_capacity(payload.len() + 20);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&version.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&crc32(payload).to_le_bytes());
+        out.extend_from_slice(payload);
+        out
+    }
+
+    /// Payload offset of the v2 objective tag byte: the options section
+    /// comes first in the payload and the tag is its final byte.
+    fn objective_byte_offset(snap: &Snapshot) -> usize {
+        let mut opts = Vec::new();
+        write_options(&mut opts, &snap.options, 2);
+        opts.len() - 1
     }
 
     #[test]
@@ -799,6 +861,86 @@ mod tests {
         let snap = sample();
         snap.check_k(2).unwrap();
         assert!(matches!(snap.check_k(7), Err(SnapshotError::Mismatch(_))));
+    }
+
+    #[test]
+    fn objective_roundtrips_for_both_kinds() {
+        for objective in [ObjectiveKind::Frobenius, ObjectiveKind::Kl] {
+            let mut snap = sample();
+            snap.options = snap.options.with_objective(objective);
+            let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+            assert_eq!(back.options.objective, objective);
+        }
+    }
+
+    #[test]
+    fn v1_snapshots_load_as_frobenius() {
+        // a file written before objectives existed must keep loading,
+        // and must mean Frobenius — not whatever the default happens to
+        // be in some future build
+        let snap = sample();
+        let v1 = snap.to_bytes_versioned(1);
+        let back = Snapshot::from_bytes(&v1).unwrap();
+        assert_eq!(back.options.objective, ObjectiveKind::Frobenius);
+        assert_equal(&snap, &back);
+    }
+
+    #[test]
+    fn version_zero_is_refused() {
+        let mut bytes = sample().to_bytes();
+        bytes[6..8].copy_from_slice(&0u16.to_le_bytes());
+        assert!(matches!(
+            Snapshot::from_bytes(&bytes),
+            Err(SnapshotError::UnsupportedVersion(0))
+        ));
+    }
+
+    #[test]
+    fn unknown_objective_tag_is_corrupt_not_a_default() {
+        // CRC-valid v2 file whose objective byte is from the future:
+        // refuse with a typed error naming the field — silently reading
+        // it as Frobenius would serve a model under the wrong math
+        let snap = sample();
+        let off = objective_byte_offset(&snap);
+        let mut payload = snap.to_bytes()[20..].to_vec();
+        payload[off] = 0xee;
+        match Snapshot::from_bytes(&file_from_payload(&payload, 2)) {
+            Err(SnapshotError::Corrupt(msg)) => {
+                assert!(msg.contains("objective"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn objective_byte_truncation_and_bit_flip_are_typed() {
+        let snap = sample();
+        let off = objective_byte_offset(&snap);
+        let bytes = snap.to_bytes();
+        // file cut exactly at the objective byte: Truncated, not a panic
+        match Snapshot::from_bytes(&bytes[..20 + off]) {
+            Err(SnapshotError::Truncated { .. }) => {}
+            other => panic!("{other:?}"),
+        }
+        // a bit flip in the objective byte is caught by the checksum
+        let mut bad = bytes.clone();
+        bad[20 + off] ^= 0x01;
+        assert!(matches!(
+            Snapshot::from_bytes(&bad),
+            Err(SnapshotError::CrcMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn objective_mismatch_refused() {
+        let snap = sample();
+        snap.check_objective(ObjectiveKind::Frobenius).unwrap();
+        match snap.check_objective(ObjectiveKind::Kl) {
+            Err(SnapshotError::Mismatch(msg)) => {
+                assert!(msg.contains("objective"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

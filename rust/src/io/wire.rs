@@ -21,6 +21,7 @@
 //! ([`WireError`], or an `ERR` line on the text planes), never a panic,
 //! a hang, or an unbounded allocation.
 
+use crate::nmf::ObjectiveKind;
 use crate::sparse::Csr;
 use std::fmt;
 use std::io::{ErrorKind, Read, Write};
@@ -422,7 +423,12 @@ pub(crate) const WORKER_MAGIC: [u8; 4] = *b"ESNW";
 
 /// Protocol version exchanged in the `Hello`/`Welcome` handshake; a
 /// worker and coordinator refuse to pair across versions.
-pub(crate) const WORKER_PROTOCOL_VERSION: u16 = 1;
+///
+/// History: v1 was Frobenius-only (`Hello` carried no objective and
+/// `Compute` shipped a Gram inverse); v2 announces the objective in the
+/// handshake and ships objective-specific auxiliary data plus an
+/// optional previous factor in `Compute`.
+pub(crate) const WORKER_PROTOCOL_VERSION: u16 = 2;
 
 /// Defensive cap on one worker frame's payload. Fragment frames carry a
 /// span's surviving nonzeros (u32 index + f32 value each), so a gigabyte
@@ -445,21 +451,31 @@ pub(crate) enum PassReq {
 /// One self-contained half-step work assignment: everything a stateless
 /// worker needs to compute blocks `span.0..span.1` of the global block
 /// list `fixed_chunks(rows, block_rows)` — the fixed factor (bit-exact
-/// CSR), the ridged Gram inverse (computed once by the coordinator so
-/// every worker solves against identical bits), and the pass to run.
+/// CSR), the objective's precomputed auxiliary data (computed once by
+/// the coordinator so every worker solves against identical bits), and
+/// the pass to run.
 #[derive(Clone, Debug, PartialEq)]
 pub(crate) struct ComputeReq {
     /// `true`: update-U half-step (stream `A`'s rows); `false`:
     /// update-V half-step (stream `Aᵀ`'s rows).
     pub step_u: bool,
+    /// the objective this half-step runs under (fixes the meaning of
+    /// `aux` and whether `prev` must be present)
+    pub objective: ObjectiveKind,
     pub k: u32,
     pub block_rows: u64,
     /// assigned block-index span `[lo, hi)` of the global block list
     pub span: (u64, u64),
     /// the fixed factor of this half-step
     pub factor: Csr,
-    /// row-major (k × k) ridged Gram inverse
-    pub g_inv: Vec<f32>,
+    /// objective-specific per-half-step auxiliary data: the row-major
+    /// (k × k) ridged Gram inverse for Frobenius, the k column sums of
+    /// the fixed factor for KL
+    pub aux: Vec<f32>,
+    /// previous value of the factor being updated — required by KL
+    /// (multiplicative updates rescale the previous rows), absent for
+    /// Frobenius (least squares re-solves each row from scratch)
+    pub prev: Option<Csr>,
     pub pass: PassReq,
 }
 
@@ -480,14 +496,16 @@ pub(crate) struct WireEmit {
 /// `Welcome`, `Compute`, `Ping`, `Shutdown` and `Refuse`.
 #[derive(Clone, Debug, PartialEq)]
 pub(crate) enum WorkerMsg {
-    /// Worker handshake: protocol version plus the digest and shape of
-    /// the `.estdm` it opened, so a coordinator refuses a worker serving
-    /// different data before any work is assigned.
+    /// Worker handshake: protocol version, the digest and shape of the
+    /// `.estdm` it opened, and the objective it was launched under — so
+    /// a coordinator refuses a worker serving different data or running
+    /// different per-block math before any work is assigned.
     Hello {
         version: u16,
         digest: u64,
         n_terms: u64,
         n_docs: u64,
+        objective: ObjectiveKind,
     },
     /// Coordinator handshake acknowledgement.
     Welcome { version: u16 },
@@ -574,6 +592,14 @@ fn read_u64s(r: &mut Reader) -> Result<Vec<u64>, WireError> {
     Ok(out)
 }
 
+/// Decode an objective tag byte; an unknown tag (a future objective) is
+/// a typed refusal, never a silent default.
+fn read_objective(r: &mut Reader) -> Result<ObjectiveKind, WireError> {
+    let tag = r.u8()?;
+    ObjectiveKind::from_tag(tag)
+        .ok_or_else(|| WireError::Corrupt(format!("bad objective tag {tag}")))
+}
+
 /// Serialize one message's payload (frame header excluded).
 fn encode_payload(msg: &WorkerMsg) -> Vec<u8> {
     let mut out = Vec::new();
@@ -583,17 +609,20 @@ fn encode_payload(msg: &WorkerMsg) -> Vec<u8> {
             digest,
             n_terms,
             n_docs,
+            objective,
         } => {
             out.extend_from_slice(&version.to_le_bytes());
             out.extend_from_slice(&digest.to_le_bytes());
             out.extend_from_slice(&n_terms.to_le_bytes());
             out.extend_from_slice(&n_docs.to_le_bytes());
+            out.push(objective.tag());
         }
         WorkerMsg::Welcome { version } => {
             out.extend_from_slice(&version.to_le_bytes());
         }
         WorkerMsg::Compute(req) => {
             out.push(u8::from(req.step_u));
+            out.push(req.objective.tag());
             out.extend_from_slice(&req.k.to_le_bytes());
             out.extend_from_slice(&req.block_rows.to_le_bytes());
             out.extend_from_slice(&req.span.0.to_le_bytes());
@@ -609,8 +638,15 @@ fn encode_payload(msg: &WorkerMsg) -> Vec<u8> {
                     out.extend_from_slice(&tau.to_bits().to_le_bytes());
                 }
             }
-            write_f32s(&mut out, &req.g_inv);
+            write_f32s(&mut out, &req.aux);
             req.factor.write_bytes(&mut out);
+            match &req.prev {
+                None => out.push(0),
+                Some(prev) => {
+                    out.push(1);
+                    prev.write_bytes(&mut out);
+                }
+            }
         }
         WorkerMsg::Selected {
             scratch_lens,
@@ -648,6 +684,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<WorkerMsg, WireError> {
             digest: r.u64()?,
             n_terms: r.u64()?,
             n_docs: r.u64()?,
+            objective: read_objective(&mut r)?,
         },
         2 => WorkerMsg::Welcome {
             version: u16::from_le_bytes(r.take(2)?.try_into().unwrap()),
@@ -660,6 +697,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<WorkerMsg, WireError> {
                     return Err(WireError::Corrupt(format!("bad step flag {other}")));
                 }
             };
+            let objective = read_objective(&mut r)?;
             let k = r.u32()?;
             let block_rows = r.u64()?;
             let span = (r.u64()?, r.u64()?);
@@ -679,16 +717,28 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<WorkerMsg, WireError> {
                     return Err(WireError::Corrupt(format!("bad pass tag {other}")));
                 }
             };
-            let g_inv = read_f32s(&mut r)?;
+            let aux = read_f32s(&mut r)?;
             let factor = Csr::read_bytes(r.bytes, &mut r.pos)
                 .map_err(|e| WireError::Corrupt(format!("factor: {e}")))?;
+            let prev = match r.u8()? {
+                0 => None,
+                1 => Some(
+                    Csr::read_bytes(r.bytes, &mut r.pos)
+                        .map_err(|e| WireError::Corrupt(format!("prev factor: {e}")))?,
+                ),
+                other => {
+                    return Err(WireError::Corrupt(format!("bad prev-factor flag {other}")));
+                }
+            };
             WorkerMsg::Compute(ComputeReq {
                 step_u,
+                objective,
                 k,
                 block_rows,
                 span,
                 factor,
-                g_inv,
+                aux,
+                prev,
                 pass,
             })
         }
@@ -939,26 +989,52 @@ mod tests {
                 digest: 0xdead_beef_cafe_f00d,
                 n_terms: 12,
                 n_docs: 34,
+                objective: ObjectiveKind::Frobenius,
+            },
+            WorkerMsg::Hello {
+                version: WORKER_PROTOCOL_VERSION,
+                digest: 1,
+                n_terms: 2,
+                n_docs: 3,
+                objective: ObjectiveKind::Kl,
             },
             WorkerMsg::Welcome {
                 version: WORKER_PROTOCOL_VERSION,
             },
             WorkerMsg::Compute(ComputeReq {
                 step_u: true,
+                objective: ObjectiveKind::Frobenius,
                 k: 2,
                 block_rows: 3,
                 span: (1, 4),
                 factor: factor.clone(),
-                g_inv: vec![1.0, 0.0, 0.0, 1.0],
+                aux: vec![1.0, 0.0, 0.0, 1.0],
+                prev: None,
                 pass: PassReq::Select { t: 7 },
             }),
             WorkerMsg::Compute(ComputeReq {
                 step_u: false,
+                objective: ObjectiveKind::Kl,
+                k: 2,
+                block_rows: 3,
+                span: (0, 1),
+                factor: factor.clone(),
+                aux: vec![0.5, 0.25],
+                prev: Some(Csr::from_dense(3, 2, &[1.0, 0.0, 0.0, 2.0, 0.5, 0.5])),
+                pass: PassReq::Emit {
+                    keep_tag: 3,
+                    tau: 0.125,
+                },
+            }),
+            WorkerMsg::Compute(ComputeReq {
+                step_u: false,
+                objective: ObjectiveKind::Frobenius,
                 k: 2,
                 block_rows: 3,
                 span: (0, 1),
                 factor,
-                g_inv: vec![0.5; 4],
+                aux: vec![0.5; 4],
+                prev: None,
                 pass: PassReq::Emit {
                     keep_tag: 3,
                     tau: 0.125,
@@ -995,11 +1071,13 @@ mod tests {
         // the keep predicate distinguishes NaN payloads by bit pattern.
         let msg = WorkerMsg::Compute(ComputeReq {
             step_u: true,
+            objective: ObjectiveKind::Frobenius,
             k: 1,
             block_rows: 1,
             span: (0, 1),
             factor: Csr::zeros(1, 1),
-            g_inv: vec![1.0],
+            aux: vec![1.0],
+            prev: None,
             pass: PassReq::Emit {
                 keep_tag: 0,
                 tau: f32::NAN,
@@ -1070,5 +1148,74 @@ mod tests {
             read_msg(&mut &padded[..]),
             Err(crate::EsnmfError::Wire(WireError::Corrupt(_)))
         ));
+    }
+
+    #[test]
+    fn unknown_objective_tags_are_corrupt_not_a_default() {
+        // a Hello from a future objective must be refused typed — pairing
+        // it as Frobenius would run the wrong per-block math
+        let hello = WorkerMsg::Hello {
+            version: WORKER_PROTOCOL_VERSION,
+            digest: 5,
+            n_terms: 1,
+            n_docs: 1,
+            objective: ObjectiveKind::Kl,
+        };
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &hello).unwrap();
+        *buf.last_mut().unwrap() = 0x7f; // the objective tag is Hello's final byte
+        match read_msg(&mut &buf[..]) {
+            Err(crate::EsnmfError::Wire(WireError::Corrupt(msg))) => {
+                assert!(msg.contains("objective"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // same for the objective byte of a Compute frame (payload offset
+        // 1, right after the step flag)
+        let req = WorkerMsg::Compute(ComputeReq {
+            step_u: true,
+            objective: ObjectiveKind::Frobenius,
+            k: 1,
+            block_rows: 1,
+            span: (0, 1),
+            factor: Csr::zeros(1, 1),
+            aux: vec![1.0],
+            prev: None,
+            pass: PassReq::Select { t: 1 },
+        });
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &req).unwrap();
+        buf[9 + 1] = 0x7f;
+        match read_msg(&mut &buf[..]) {
+            Err(crate::EsnmfError::Wire(WireError::Corrupt(msg))) => {
+                assert!(msg.contains("objective"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_prev_factor_flag_is_corrupt() {
+        let req = WorkerMsg::Compute(ComputeReq {
+            step_u: true,
+            objective: ObjectiveKind::Frobenius,
+            k: 1,
+            block_rows: 1,
+            span: (0, 1),
+            factor: Csr::zeros(1, 1),
+            aux: vec![1.0],
+            prev: None,
+            pass: PassReq::Select { t: 1 },
+        });
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &req).unwrap();
+        *buf.last_mut().unwrap() = 9; // the prev flag is Compute's final byte
+        match read_msg(&mut &buf[..]) {
+            Err(crate::EsnmfError::Wire(WireError::Corrupt(msg))) => {
+                assert!(msg.contains("prev"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

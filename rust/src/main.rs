@@ -50,6 +50,7 @@ USAGE:
   esnmf factorize  [--corpus reuters|wikipedia|pubmed|dir:<path>] [--scale tiny|small|paper]
                    [--corpus-store c.estdm]
                    [--k N] [--iters N] [--sparsity none|both|u|v|percol] [--t-u N] [--t-v N]
+                   [--objective frobenius|kl]
                    [--algorithm als|seq] [--backend native|xla] [--seed N] [--init-nnz N]
                    [--threads N|auto] [--block-rows N|auto] [--config file.toml] [--top N]
                    [--save-model m.esnmf] [--checkpoint-every N]
@@ -57,6 +58,12 @@ USAGE:
                    [--distributed] [--dist-workers N] [--dist-listen 127.0.0.1:7611]
                    [--dist-timeout SECS]
 
+  --objective picks the per-half-step math: frobenius (default — the
+  paper's enforced-sparse least-squares ALS) or kl (multiplicative
+  KL-divergence updates, same top-k sparsity enforcement, reported as
+  mean per-token KL). kl requires --algorithm als --backend native and
+  streams through the identical block geometry, so --threads,
+  --block-rows, --corpus-store and --distributed all apply unchanged.
   --threads row-partitions the ALS hot path across N workers (default:
   auto = all cores). Results are bit-identical at any thread count.
   --block-rows streams each ALS half-step over N-row blocks, bounding
@@ -85,14 +92,16 @@ USAGE:
   that dies or straggles past --dist-timeout is marked dead and its
   span recomputed (by survivors, else locally), so the run always
   completes. Requires --corpus-store --backend native --algorithm als.
-  esnmf worker     <corpus.estdm> [--coordinator 127.0.0.1:7611] [--threads N|auto]
+  esnmf worker     <corpus.estdm> [--coordinator 127.0.0.1:7611]
+                   [--objective frobenius|kl] [--threads N|auto]
 
   Joins a distributed factorization as a stateless compute worker: opens
   the shared .estdm store, connects to the coordinator (retrying while
-  it starts up), proves it sees the same corpus (digest handshake), then
-  computes assigned half-step spans until told to shut down. Workers
-  hold no iteration state — kill one mid-run and the result is still
-  bit-identical.
+  it starts up), proves it sees the same corpus (digest handshake) and
+  runs the same --objective (a mismatched pairing is refused before any
+  work flows), then computes assigned half-step spans until told to
+  shut down. Workers hold no iteration state — kill one mid-run and the
+  result is still bit-identical.
   esnmf ingest     [--corpus ... --scale ... --seed N | dir:<path>]
                    [--shard-rows N|auto] --out corpus.estdm
 
@@ -221,6 +230,9 @@ fn build_run_config(args: &mut Args) -> CliResult<RunConfig> {
     }
     if let Some(v) = args.opt_str("sparsity") {
         cfg.sparsity_mode = v;
+    }
+    if let Some(v) = args.opt_str("objective") {
+        cfg.objective = v;
     }
     if let Some(v) = args.opt_parse::<usize>("t-u").map_err(EsnmfError::usage)? {
         cfg.t_u = Some(v);
@@ -560,6 +572,10 @@ fn cmd_factorize(args: &mut Args) -> CliResult {
     let cfg = build_run_config(args)?;
     let top = args.parse_or("top", 5usize).map_err(EsnmfError::usage)?;
     args.check_unknown().map_err(EsnmfError::usage)?;
+    // fail fast on an unknown objective or an incoherent pairing
+    // (kl + sequential/xla) before any corpus work happens
+    cfg.objective()
+        .map_err(|e| EsnmfError::config(format!("{e:#}")))?;
 
     let loaded = load_any_corpus(&cfg)?;
     let corpus = loaded.as_als();
@@ -589,10 +605,21 @@ fn cmd_factorize(args: &mut Args) -> CliResult {
         r.v.nnz(),
         r.memory.max_combined_nnz
     );
+    // a resumed run trains under the snapshot's objective, not the flags'
+    let objective = match &used_opts {
+        Some(o) => o.objective,
+        None => cfg
+            .objective()
+            .map_err(|e| EsnmfError::config(format!("{e:#}")))?,
+    };
     // one greppable line pinning the full bit-level outcome — the CI
     // distributed-smoke job diffs this between single-process and
     // N-worker runs
-    println!("factors digest: {:#018x}", r.digest());
+    println!(
+        "factors digest: {:#018x}  objective={}",
+        r.digest(),
+        objective.name()
+    );
     if let LoadedCorpus::Store(store) = &loaded {
         println!(
             "resident corpus peak = {} bytes ({} on disk)",
@@ -626,6 +653,19 @@ fn cmd_factorize(args: &mut Args) -> CliResult {
         let acc = mean_topic_accuracy(&r.v, labels, corpus.label_names().len());
         println!("\nmean clustering accuracy (Eq. 3.3): {acc:.4}");
     }
+    // the objective-agnostic predictive measure: every stride-th document
+    // re-folded against the frozen U and scored under the implied unigram
+    let h = esnmf::eval::heldout_mean_log_likelihood(
+        corpus.a_cols(),
+        &r.u,
+        objective,
+        cfg.foldin_budget(),
+        esnmf::sparse::TieMode::KeepTies,
+    );
+    println!(
+        "held-out mean log-likelihood: {:.4}  ({} docs, {} tokens)",
+        h.mean_log_likelihood, h.docs, h.tokens
+    );
     Ok(())
 }
 
@@ -869,13 +909,20 @@ fn cmd_serve(args: &mut Args) -> CliResult {
                 save_model(path, &cfg, corpus, &r, used_opts.as_ref())?;
             }
             let digest = corpus.digest();
+            let trained = used_opts.or_else(|| cfg.nmf_options().ok());
+            // fold-ins answer under the objective the model was trained
+            // with, exactly as the snapshot-serving path does
+            let objective = trained
+                .as_ref()
+                .map(|o| o.objective)
+                .unwrap_or(esnmf::nmf::ObjectiveKind::Frobenius);
             let model = Arc::new(
                 TopicModel::new(r.u, r.v, corpus.terms().to_vec())
-                    .with_foldin_budget(cfg.foldin_budget()),
+                    .with_foldin_budget(cfg.foldin_budget())
+                    .with_objective(objective),
             );
             let mut provenance = Provenance::from_model(&model);
             provenance.corpus_digest = Some(digest);
-            let trained = used_opts.or_else(|| cfg.nmf_options().ok());
             if let Some(o) = &trained {
                 provenance.sparsity = esnmf::coordinator::model::sparsity_label(&o.sparsity);
                 provenance.options = esnmf::coordinator::model::options_label(o);
@@ -938,6 +985,11 @@ fn cmd_worker(args: &mut Args) -> CliResult {
         }
     };
     let coordinator = args.str_or("coordinator", "127.0.0.1:7611");
+    let objective = match args.opt_str("objective") {
+        Some(v) => esnmf::nmf::ObjectiveKind::parse(&v)
+            .ok_or_else(|| EsnmfError::usage(format!("bad --objective {v} (frobenius|kl)")))?,
+        None => esnmf::nmf::ObjectiveKind::Frobenius,
+    };
     let threads = args
         .opt_threads("threads")
         .map_err(EsnmfError::usage)?
@@ -948,7 +1000,12 @@ fn cmd_worker(args: &mut Args) -> CliResult {
     } else {
         threads
     };
-    esnmf::coordinator::run_worker(std::path::Path::new(&store), &coordinator, threads)
+    esnmf::coordinator::run_worker(
+        std::path::Path::new(&store),
+        &coordinator,
+        objective,
+        threads,
+    )
 }
 
 fn cmd_gen_corpus(args: &mut Args) -> CliResult {

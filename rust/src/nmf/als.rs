@@ -77,9 +77,10 @@ use crate::sparse::{ops, topk, Csc, Csr, RowBlock, TieMode};
 use crate::text::TermDocMatrix;
 use crate::util::timer::Timer;
 
-use super::convergence::{rel_error_source, rel_residual};
-use super::init::initial_u;
+use super::convergence::rel_residual;
+use super::init::{initial_u, initial_v};
 use super::memory::MemoryTracker;
+use super::objective::{self, ObjectiveKind};
 use super::options::{NmfOptions, NmfResult, SparsityMode};
 
 /// The solver's whole view of a corpus: each orientation of `A` readable
@@ -308,6 +309,33 @@ impl Solve {
     }
 }
 
+/// The per-block candidate computation of one half-step — the
+/// objective-specific heart of the streamed pipeline. Everything around
+/// it (block geometry, worker scheduling, two-pass selection, emission,
+/// assembly, the memory tracker) is objective-agnostic and shared.
+///
+/// The variants are keyed by [`ObjectiveKind`]; they live as an enum
+/// rather than a trait object because each needs different borrowed
+/// state (the Frobenius solve owns its Gram inverse, the KL update
+/// borrows the previous iterate) and the dispatch sits inside the
+/// hottest loop.
+pub(crate) enum BlockCompute<'a> {
+    /// Frobenius least squares: SpMM candidate rows, right-multiply by
+    /// the fixed factor's ridged Gram inverse, project non-negative —
+    /// the exact pre-seam instruction sequence (bit-identity contract).
+    Solve(Solve),
+    /// KL divergence: one multiplicative update per row from the
+    /// previous iterate ([`objective::kl_update_rows`]); results are
+    /// non-negative by construction.
+    Kl {
+        /// previous iterate of the factor being updated (full row space)
+        prev: &'a Csr,
+        /// per-topic column sums of the fixed factor
+        /// ([`objective::kl_col_sums`] — the KL `step_aux`)
+        col_sums: Vec<f32>,
+    },
+}
+
 /// Which solved + projected candidate values a block emits into the
 /// output CSR. The predicates replicate the pre-blocking operators
 /// exactly — down to their NaN edge cases — so the streamed pipeline is
@@ -401,10 +429,10 @@ impl BlockEmit {
 }
 
 /// Everything one streamed half-step needs: the candidate source, the
-/// per-row solve, and the block/worker geometry.
+/// per-block objective computation, and the block/worker geometry.
 pub(crate) struct StreamCtx<'a> {
     src: CandSource<'a>,
-    solve: Solve,
+    compute: BlockCompute<'a>,
     blocks: Vec<(usize, usize)>,
     workers: usize,
     rows: usize,
@@ -412,6 +440,9 @@ pub(crate) struct StreamCtx<'a> {
 }
 
 impl<'a> StreamCtx<'a> {
+    /// A Frobenius context (the historical constructor — every
+    /// least-squares call site, including the sequential solver and the
+    /// worker plane, builds through here unchanged).
     pub(crate) fn new(
         src: CandSource<'a>,
         solve: Solve,
@@ -419,9 +450,21 @@ impl<'a> StreamCtx<'a> {
         threads: usize,
         block_rows: usize,
     ) -> Self {
+        StreamCtx::with_compute(src, BlockCompute::Solve(solve), k, threads, block_rows)
+    }
+
+    /// A context with an explicit per-block computation — the
+    /// objective seam's entry point.
+    pub(crate) fn with_compute(
+        src: CandSource<'a>,
+        compute: BlockCompute<'a>,
+        k: usize,
+        threads: usize,
+        block_rows: usize,
+    ) -> Self {
         let rows = src.out_rows();
         StreamCtx {
-            solve,
+            compute,
             blocks: pool::fixed_chunks(rows, block_rows),
             // below the per-worker floor, spawn overhead beats the work;
             // the clamp changes nothing but speed
@@ -429,6 +472,30 @@ impl<'a> StreamCtx<'a> {
             rows,
             k,
             src,
+        }
+    }
+
+    /// One block of the objective's candidate rows into the worker's
+    /// scratch: the single place both streaming passes compute.
+    fn compute_block(&self, lo: usize, hi: usize, cur: &mut RowCursor, scratch: &mut RowBlock) {
+        match &self.compute {
+            BlockCompute::Solve(solve) => {
+                self.src.fill(lo, hi, cur, scratch);
+                solve.apply(scratch);
+                scratch.project_nonneg();
+            }
+            BlockCompute::Kl { prev, col_sums } => {
+                objective::kl_update_rows(
+                    self.src.src,
+                    self.src.factor,
+                    prev,
+                    col_sums,
+                    lo,
+                    hi,
+                    cur,
+                    scratch,
+                );
+            }
         }
     }
 
@@ -486,9 +553,7 @@ impl<'a> StreamCtx<'a> {
             blocks,
             || (RowBlock::new(self.rows, self.k), RowCursor::new()),
             |(scratch, cur), lo, hi| {
-                self.src.fill(lo, hi, cur, scratch);
-                self.solve.apply(scratch);
-                scratch.project_nonneg();
+                self.compute_block(lo, hi, cur, scratch);
                 per_block(scratch, lo, hi)
             },
         )
@@ -541,9 +606,7 @@ impl<'a> StreamCtx<'a> {
             },
             |state, lo, hi| {
                 let (scratch, cur, sel) = state;
-                self.src.fill(lo, hi, cur, scratch);
-                self.solve.apply(scratch);
-                scratch.project_nonneg();
+                self.compute_block(lo, hi, cur, scratch);
                 for &v in &scratch.data {
                     sel.offer(v);
                 }
@@ -660,12 +723,14 @@ pub(crate) fn stream_half_step(
     threads: usize,
     mem: &mut MemoryTracker,
 ) -> Csr {
-    if ctx.blocks.len() <= 1 {
+    if ctx.blocks.len() <= 1 && matches!(ctx.compute, BlockCompute::Solve(_)) {
         // the whole output fits one block, so the candidate is
         // materialized in full anyway: the pre-blocking in-memory
         // pipeline is strictly better here (row-partitioned parallel
         // kernels, and global enforcement in a single sweep instead of
-        // the two-pass selection)
+        // the two-pass selection). KL has no separate in-memory
+        // pipeline and needs none — a single block IS the in-memory
+        // shape, and the blocked machinery handles it unchanged.
         return unblocked_half_step(ctx, enforce, tie, threads, mem);
     }
     match enforce {
@@ -728,12 +793,15 @@ fn unblocked_half_step(
     threads: usize,
     mem: &mut MemoryTracker,
 ) -> Csr {
+    let BlockCompute::Solve(solve) = &ctx.compute else {
+        unreachable!("the unblocked fast path is Frobenius-only (see stream_half_step)");
+    };
     let mut cand = ctx.src.fill_all_par(threads);
     mem.observe_intermediate(cand.stored_len());
     // below the per-worker floor, spawn overhead beats the work; the
     // clamp changes nothing but speed
     let threads = pool::effective_workers(cand.stored_len(), threads);
-    ctx.solve.apply_par(&mut cand, threads);
+    solve.apply_par(&mut cand, threads);
     cand.project_nonneg_par(threads);
     match enforce {
         Enforce::No => cand.to_csr(),
@@ -833,18 +901,62 @@ pub fn half_step_u_src(
     )
 }
 
+/// One KL multiplicative half-step: update the factor whose rows stream
+/// through `a` (docs-major for V, terms-major for U) from its previous
+/// iterate `prev`, with the other factor `fixed`. The update rides the
+/// same streamed block machinery — and the same unchanged `topk`
+/// enforcement — as Frobenius; only the per-block computation differs
+/// ([`BlockCompute::Kl`]).
+fn kl_half_step(
+    a: &dyn RowSource,
+    fixed: &Csr,
+    prev: &Csr,
+    is_u: bool,
+    opts: &NmfOptions,
+    mem: &mut MemoryTracker,
+) -> Csr {
+    assert_eq!(a.cols(), fixed.rows, "KL contraction mismatch");
+    assert_eq!(prev.rows, a.rows(), "KL previous-iterate row mismatch");
+    let col_sums = objective::kl_col_sums(fixed);
+    let src = CandSource {
+        src: a,
+        factor: fixed,
+        dense: None, // the dense fast path belongs to the SpMM fill, unused by KL
+        defl: None,
+    };
+    let ctx = StreamCtx::with_compute(
+        src,
+        BlockCompute::Kl { prev, col_sums },
+        opts.k,
+        opts.threads,
+        opts.resolved_block_rows(),
+    );
+    stream_half_step(
+        &ctx,
+        enforcement_for(opts.sparsity, is_u),
+        opts.tie_mode,
+        opts.threads,
+        mem,
+    )
+}
+
 /// The half-step engine the iteration loop drives. [`run_loop_with`]
 /// owns everything *around* the half-steps — residual tracking, error
 /// sampling, checkpoint cadence, store-fault latching — and delegates
 /// the two factor updates here, so the distributed coordinator replaces
 /// only the compute placement and reuses the loop verbatim (one code
 /// path to keep the trajectories bit-identical).
+///
+/// Each update also receives the previous iterate of the factor being
+/// updated (`v_prev` / `u_prev`): multiplicative objectives start from
+/// it; least squares re-solves from scratch and ignores it.
 pub(crate) trait HalfSteps {
     /// Steps 1–2: the V update given the current U.
     fn v(
         &mut self,
         corpus: &dyn AlsCorpus,
         u: &Csr,
+        v_prev: &Csr,
         opts: &NmfOptions,
         mem: &mut MemoryTracker,
     ) -> Csr;
@@ -854,12 +966,14 @@ pub(crate) trait HalfSteps {
         &mut self,
         corpus: &dyn AlsCorpus,
         v: &Csr,
+        u_prev: &Csr,
         opts: &NmfOptions,
         mem: &mut MemoryTracker,
     ) -> Csr;
 }
 
-/// The in-process engine: both half-steps stream on this machine.
+/// The in-process engine: both half-steps stream on this machine,
+/// dispatched on the configured objective.
 pub(crate) struct LocalHalfSteps;
 
 impl HalfSteps for LocalHalfSteps {
@@ -867,20 +981,28 @@ impl HalfSteps for LocalHalfSteps {
         &mut self,
         corpus: &dyn AlsCorpus,
         u: &Csr,
+        v_prev: &Csr,
         opts: &NmfOptions,
         mem: &mut MemoryTracker,
     ) -> Csr {
-        half_step_v_src(corpus.a_cols(), u, opts, mem)
+        match opts.objective {
+            ObjectiveKind::Frobenius => half_step_v_src(corpus.a_cols(), u, opts, mem),
+            ObjectiveKind::Kl => kl_half_step(corpus.a_cols(), u, v_prev, false, opts, mem),
+        }
     }
 
     fn u(
         &mut self,
         corpus: &dyn AlsCorpus,
         v: &Csr,
+        u_prev: &Csr,
         opts: &NmfOptions,
         mem: &mut MemoryTracker,
     ) -> Csr {
-        half_step_u_src(corpus.a_rows(), v, opts, mem)
+        match opts.objective {
+            ObjectiveKind::Frobenius => half_step_u_src(corpus.a_rows(), v, opts, mem),
+            ObjectiveKind::Kl => kl_half_step(corpus.a_rows(), v, u_prev, true, opts, mem),
+        }
     }
 }
 
@@ -935,11 +1057,19 @@ fn factorize_with(
 ) -> NmfResult {
     assert_eq!(u0.rows, corpus.n_terms(), "U₀ row count != vocabulary size");
     assert_eq!(u0.cols, opts.k, "U₀ column count != k");
+    // least-squares ALS re-solves V from scratch, so V₀ = 0 (and the
+    // initial-guess telemetry counts only U₀ — unchanged bits). KL's
+    // multiplicative updates cannot leave zero: V₀ is a dense positive
+    // random factor under a seed-derived stream (see `init::initial_v`).
+    let v0 = match opts.objective {
+        ObjectiveKind::Frobenius => Csr::zeros(corpus.n_docs(), opts.k),
+        ObjectiveKind::Kl => initial_v(corpus.n_docs(), opts.k, opts.seed),
+    };
     let mut mem = MemoryTracker::new();
-    mem.observe_pair(u0.nnz(), 0); // the initial guess is stored too
+    mem.observe_pair(u0.nnz(), v0.nnz()); // the initial guess is stored too
     let state = LoopState {
         u: u0,
-        v: Csr::zeros(corpus.n_docs(), opts.k),
+        v: v0,
         start_iter: 0,
         residuals: Vec::with_capacity(opts.max_iters),
         errors: Vec::new(),
@@ -974,6 +1104,7 @@ pub fn resume_corpus(
     snap: &crate::io::Snapshot,
 ) -> crate::Result<NmfResult> {
     snap.check_k(opts.k)?;
+    snap.check_objective(opts.objective)?;
     snap.check_digest(corpus.digest(), corpus.n_terms(), corpus.n_docs())?;
     snap.check_resumable()?;
     let effective = resume_options(opts, snap);
@@ -1118,14 +1249,14 @@ fn run_loop_with(
     let mut store_fault: Option<String> = None;
 
     for it in start_iter..opts.max_iters {
-        let v_new = engine.v(corpus, &u, opts, &mut mem);
+        let v_new = engine.v(corpus, &u, &v, opts, &mut mem);
         if let Some(fault) = corpus.store_error() {
             store_fault = Some(fault);
             break;
         }
         v = v_new;
         mem.observe_pair(u.nnz(), v.nnz());
-        let u_new = engine.u(corpus, &v, opts, &mut mem);
+        let u_new = engine.u(corpus, &v, &u, opts, &mut mem);
         if let Some(fault) = corpus.store_error() {
             store_fault = Some(fault);
             break;
@@ -1138,9 +1269,11 @@ fn run_loop_with(
         iterations = it + 1;
 
         if opts.track_error {
-            // streamed in block_rows-row runs, so the error pass honors
-            // the same resident-corpus bound as the half-steps
-            let e = rel_error_source(
+            // the objective's own fit statistic (relative Frobenius
+            // error, or mean per-token KL divergence), streamed in
+            // block_rows-row runs so the error pass honors the same
+            // resident-corpus bound as the half-steps
+            let e = opts.objective.implementation().error_source(
                 corpus.a_rows(),
                 &u,
                 &v,
@@ -1602,5 +1735,131 @@ mod tests {
         assert_eq!(more.residuals[..6], r.residuals[..]);
         let full = factorize(&tdm, &opts.clone().with_iters(9));
         assert_same_result(&more, &full);
+    }
+
+    #[test]
+    fn kl_objective_history_is_monotone_non_increasing() {
+        // the multiplicative update is monotone in D(A ‖ UVᵀ) for the
+        // unenforced problem (Lee & Seung); enforcement truncation can
+        // break the guarantee, so this pins SparsityMode::None
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 47);
+        let opts = NmfOptions::new(4)
+            .with_objective(ObjectiveKind::Kl)
+            .with_iters(12)
+            .with_seed(3);
+        let r = factorize(&tdm, &opts);
+        assert_eq!(r.errors.len(), 12);
+        assert!(r.errors.iter().all(|e| e.is_finite()), "{:?}", r.errors);
+        for w in r.errors.windows(2) {
+            assert!(
+                w[1] <= w[0] * (1.0 + 1e-6) + 1e-9,
+                "KL history increased: {} -> {} ({:?})",
+                w[0],
+                w[1],
+                r.errors
+            );
+        }
+        // it actually fits: the divergence drops materially from start
+        assert!(r.final_error() < r.errors[0] * 0.99, "{:?}", r.errors);
+        assert!(r.u.values.iter().all(|&x| x >= 0.0));
+        assert!(r.v.values.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn kl_factors_are_invariant_to_block_rows_and_threads() {
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 53);
+        for (mode, tie) in [
+            (SparsityMode::None, crate::sparse::TieMode::KeepTies),
+            (SparsityMode::both(60, 120), crate::sparse::TieMode::Exact),
+        ] {
+            let mut base = NmfOptions::new(4)
+                .with_objective(ObjectiveKind::Kl)
+                .with_iters(5)
+                .with_seed(59)
+                .with_sparsity(mode)
+                .with_threads(1)
+                .with_block_rows(usize::MAX);
+            base.tie_mode = tie;
+            let reference = factorize(&tdm, &base);
+            for block_rows in [1usize, 7, 64] {
+                for threads in [1usize, 4] {
+                    let opts = base
+                        .clone()
+                        .with_block_rows(block_rows)
+                        .with_threads(threads);
+                    let r = factorize(&tdm, &opts);
+                    assert_eq!(r.u, reference.u, "block_rows {block_rows} threads {threads}");
+                    assert_eq!(r.v, reference.v, "block_rows {block_rows} threads {threads}");
+                    assert_eq!(
+                        r.digest(),
+                        reference.digest(),
+                        "block_rows {block_rows} threads {threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kl_enforced_sparsity_caps_nnz() {
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 61);
+        let mut opts = NmfOptions::new(5)
+            .with_objective(ObjectiveKind::Kl)
+            .with_iters(8)
+            .with_sparsity(SparsityMode::both(55, 120))
+            .with_seed(5);
+        opts.tie_mode = crate::sparse::TieMode::Exact;
+        let r = factorize(&tdm, &opts);
+        assert!(r.u.nnz() <= 55, "u nnz {}", r.u.nnz());
+        assert!(r.v.nnz() <= 120, "v nnz {}", r.v.nnz());
+        r.u.validate().unwrap();
+        r.v.validate().unwrap();
+        assert!(r.errors.iter().all(|e| e.is_finite()));
+    }
+
+    #[test]
+    fn kl_resume_from_checkpoint_matches_uninterrupted_run() {
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 67);
+        let ck = std::env::temp_dir().join("esnmf_als_kl_resume_test.esnmf");
+        let _ = std::fs::remove_file(&ck);
+        let opts = NmfOptions::new(3)
+            .with_objective(ObjectiveKind::Kl)
+            .with_iters(9)
+            .with_seed(17)
+            .with_sparsity(SparsityMode::both(40, 90));
+        let uninterrupted = factorize(&tdm, &opts);
+        let ck_opts = opts.clone().with_iters(8).with_checkpoint(&ck, 4);
+        let _partial = factorize(&tdm, &ck_opts);
+        let snap = crate::io::Snapshot::load(&ck).unwrap();
+        assert_eq!(snap.options.objective, ObjectiveKind::Kl);
+        let resumed = super::resume(&tdm, &opts, &snap).unwrap();
+        assert_same_result(&resumed, &uninterrupted);
+        std::fs::remove_file(&ck).unwrap();
+    }
+
+    #[test]
+    fn resume_refuses_an_objective_mismatch() {
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 71);
+        let opts = NmfOptions::new(3)
+            .with_objective(ObjectiveKind::Kl)
+            .with_iters(3)
+            .with_seed(5);
+        let r = factorize(&tdm, &opts);
+        let snap = crate::io::Snapshot::new(
+            opts.clone(),
+            r.u,
+            r.v,
+            &tdm,
+            crate::io::Progress {
+                iterations: r.iterations,
+                residuals: r.residuals,
+                errors: r.errors,
+                memory: r.memory,
+                elapsed_s: 0.0,
+            },
+        );
+        let fro = opts.clone().with_objective(ObjectiveKind::Frobenius);
+        let err = super::resume(&tdm, &fro, &snap).unwrap_err();
+        assert!(format!("{err:#}").contains("objective"), "{err:#}");
     }
 }

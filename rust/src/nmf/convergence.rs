@@ -4,8 +4,14 @@
 //! * relative error `E = ‖A − U Vᵀ‖_F / ‖A‖_F`, computed sparse-safely via
 //!   `‖A‖² − 2·tr(UᵀAV) + tr((UᵀU)(VᵀV))` so `U Vᵀ` is never materialized
 //!   (on the PubMed-sized corpus that product would be 20k × 7.5k dense).
+//! * mean per-token KL divergence `D(A ‖ U Vᵀ) / Σa`, streamed the same
+//!   way — the nonzero terms walk `A` in row order, the total predicted
+//!   mass collapses to `⟨colsums(U), colsums(V)⟩`.
 
-use crate::sparse::{ops, Csr, RowSource};
+use crate::coordinator::pool;
+use crate::sparse::{ops, Csr, RowCursor, RowSource};
+
+use super::objective::KL_EPS;
 
 /// `‖u_new − u_old‖_F / ‖u_new‖_F` (0/0 → 0: two empty factors agree).
 pub fn rel_residual(u_new: &Csr, u_old: &Csr) -> f64 {
@@ -48,6 +54,75 @@ pub fn rel_error_source(
     let gg = ops::tr_gram_product(&gu, &gv, u.cols);
     let err_sq = (norm_a_sq - 2.0 * cross + gg).max(0.0);
     err_sq.sqrt() / norm_a_sq.sqrt()
+}
+
+/// Mean per-token generalized KL divergence
+/// `D(A ‖ U Vᵀ) = Σ_cells [a·ln(a/p) − a + p]` divided by the total token
+/// mass `Σ a`, with `A` streamed through a [`RowSource`] in
+/// `chunk_rows`-row runs (the KL analogue of [`rel_error_source`]).
+///
+/// The sum splits sparse-safely: only `A`'s nonzeros contribute
+/// `a·(ln a − ln p) − a`, and the all-cells `Σ p` term collapses to
+/// `⟨colsums(U), colsums(V)⟩` without materializing `U Vᵀ`. Predicted
+/// counts are floored at [`KL_EPS`] inside the logarithm only, so a model
+/// assigning zero mass to an observed token yields a large finite value
+/// instead of poisoning the history with infinities. Accumulation is a
+/// single f64 walk in row order — chunking and backing storage cannot
+/// change the result bits.
+pub fn kl_divergence_source(a: &dyn RowSource, u: &Csr, v: &Csr, chunk_rows: usize) -> f64 {
+    assert_eq!(a.rows(), u.rows, "A rows != U rows");
+    assert_eq!(a.cols(), v.rows, "A cols != V rows");
+    assert_eq!(u.cols, v.cols, "rank mismatch");
+    let k = u.cols;
+    let mut scratch = vec![0.0f32; k];
+    let mut acc = 0.0f64; // Σ over nnz(A) of a·(ln a − ln p)
+    let mut mass = 0.0f64; // Σ a
+    let mut cur = RowCursor::new();
+    for (lo, hi) in pool::fixed_chunks(a.rows(), chunk_rows.max(1)) {
+        let view = a.load(lo, hi, &mut cur);
+        for i in lo..hi {
+            let (acols, avals) = view.row(i - lo);
+            if acols.is_empty() {
+                continue;
+            }
+            scratch.iter_mut().for_each(|x| *x = 0.0);
+            let (uidx, uval) = u.row(i);
+            for (&c, &uv) in uidx.iter().zip(uval) {
+                scratch[c as usize] = uv;
+            }
+            for (&j, &aij) in acols.iter().zip(avals) {
+                let (vidx, vval) = v.row(j as usize);
+                let mut p = 0.0f64;
+                for (&c, &vv) in vidx.iter().zip(vval) {
+                    p += scratch[c as usize] as f64 * vv as f64;
+                }
+                let aij = aij as f64;
+                mass += aij;
+                acc += aij * (aij.ln() - p.max(KL_EPS).ln());
+            }
+        }
+    }
+    if mass == 0.0 {
+        return 0.0;
+    }
+    let total_pred: f64 = col_sums_f64(u)
+        .iter()
+        .zip(&col_sums_f64(v))
+        .map(|(cu, cv)| cu * cv)
+        .sum();
+    (acc - mass + total_pred) / mass
+}
+
+/// f64 per-column sums of a factor, serial row walk.
+fn col_sums_f64(x: &Csr) -> Vec<f64> {
+    let mut sums = vec![0.0f64; x.cols];
+    for r in 0..x.rows {
+        let (idx, val) = x.row(r);
+        for (&c, &v) in idx.iter().zip(val) {
+            sums[c as usize] += v as f64;
+        }
+    }
+    sums
 }
 
 #[cfg(test)]
@@ -118,5 +193,83 @@ mod tests {
         let z = Csr::zeros(3, 3);
         let u = Csr::zeros(3, 2);
         assert_eq!(rel_error_sparse(&z, &u, &Csr::zeros(3, 2), 0.0), 0.0);
+    }
+
+    #[test]
+    fn kl_divergence_of_an_exact_factorization_is_near_zero() {
+        prop::check("kl-exact-zero", 1500, 24, |rng: &mut Rng| {
+            let n = rng.range(1, 10);
+            let m = rng.range(1, 10);
+            let k = rng.range(1, 4);
+            let u = Csr::from_dense(n, k, &prop::gen_sparse_dense(rng, n, k, 0.7));
+            let v = Csr::from_dense(m, k, &prop::gen_sparse_dense(rng, m, k, 0.7));
+            let a = spmm(&u, &v.transpose());
+            if a.nnz() == 0 {
+                return;
+            }
+            let d = kl_divergence_source(&a, &u, &v, a.rows.max(1));
+            assert!(d.abs() < 1e-3, "exact factorization divergence {d}");
+        });
+    }
+
+    #[test]
+    fn kl_divergence_matches_the_dense_cellwise_sum() {
+        prop::check("kl-vs-dense", 1600, 24, |rng: &mut Rng| {
+            let n = rng.range(1, 10);
+            let m = rng.range(1, 10);
+            let k = rng.range(1, 4);
+            let a = Csr::from_dense(n, m, &prop::gen_sparse_dense(rng, n, m, 0.5));
+            let u = Csr::from_dense(n, k, &prop::gen_sparse_dense(rng, n, k, 0.6));
+            let v = Csr::from_dense(m, k, &prop::gen_sparse_dense(rng, m, k, 0.6));
+            if a.nnz() == 0 {
+                return;
+            }
+            let got = kl_divergence_source(&a, &u, &v, n);
+            // dense reference: walk every cell of UVᵀ
+            let pred = spmm(&u, &v.transpose()).to_dense();
+            let ad = a.to_dense();
+            let mut want = 0.0f64;
+            let mut mass = 0.0f64;
+            for (&aij, &pij) in ad.iter().zip(&pred) {
+                let p = (pij as f64).max(super::KL_EPS);
+                if aij > 0.0 {
+                    let aij = aij as f64;
+                    mass += aij;
+                    want += aij * (aij.ln() - p.ln()) - aij + p;
+                } else {
+                    want += pij as f64;
+                }
+            }
+            want /= mass;
+            assert!(
+                (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "streamed {got} vs dense {want}"
+            );
+        });
+    }
+
+    #[test]
+    fn kl_divergence_is_chunk_invariant_bit_for_bit() {
+        prop::check("kl-chunk-invariant", 1700, 16, |rng: &mut Rng| {
+            let n = rng.range(2, 15);
+            let m = rng.range(1, 15);
+            let k = rng.range(1, 4);
+            let a = Csr::from_dense(n, m, &prop::gen_sparse_dense(rng, n, m, 0.4));
+            let u = Csr::from_dense(n, k, &prop::gen_sparse_dense(rng, n, k, 0.6));
+            let v = Csr::from_dense(m, k, &prop::gen_sparse_dense(rng, m, k, 0.6));
+            let want = kl_divergence_source(&a, &u, &v, n);
+            for chunk in [1usize, 2, 7, usize::MAX] {
+                let got = kl_divergence_source(&a, &u, &v, chunk);
+                assert_eq!(got.to_bits(), want.to_bits(), "chunk {chunk}");
+            }
+        });
+    }
+
+    #[test]
+    fn kl_divergence_of_an_empty_matrix_is_zero() {
+        let z = Csr::zeros(3, 4);
+        let u = Csr::zeros(3, 2);
+        let v = Csr::zeros(4, 2);
+        assert_eq!(kl_divergence_source(&z, &u, &v, 2), 0.0);
     }
 }

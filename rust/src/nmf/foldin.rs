@@ -17,16 +17,28 @@
 //! primitive the training loop uses ([`topk::enforce_top_t_vec`]), so a
 //! served model's fold-in rows obey the identical nonzero budget
 //! discipline as its stored `V` rows.
+//!
+//! A model trained under KL divergence folds in under KL too
+//! ([`FoldIn::with_objective`]): a fixed budget of multiplicative
+//! updates against the frozen `U` (the trait's per-objective
+//! [`Objective::foldin_solve`](crate::nmf::objective::Objective)), so
+//! served answers minimize the same divergence the training loop did.
+//! The per-`U` auxiliary is the objective's `step_aux` — the Gram
+//! inverse for Frobenius, the per-topic column sums for KL.
 
-use crate::dense::inverse_spd;
-use crate::sparse::{ops, topk, Csr, TieMode};
+use crate::sparse::{topk, Csr, TieMode};
+
+use super::objective::ObjectiveKind;
 
 /// A reusable single-document solver over a frozen `U`.
 #[derive(Clone, Debug)]
 pub struct FoldIn {
     k: usize,
-    /// (UᵀU + εI)⁻¹, row-major (k, k)
-    g_inv: Vec<f32>,
+    /// the objective the model was trained under (and solves under here)
+    objective: ObjectiveKind,
+    /// the objective's per-`U` solve auxiliary: `(UᵀU + εI)⁻¹` row-major
+    /// (k, k) for Frobenius, per-topic column sums (k) for KL
+    aux: Vec<f32>,
     /// per-document nonzero budget (None = unenforced)
     pub t: Option<usize>,
     pub tie: TieMode,
@@ -38,7 +50,8 @@ pub struct FoldIn {
 /// `RowBlock`s. Plain [`FoldIn::solve`] creates one transparently.
 #[derive(Debug, Default)]
 pub struct FoldInScratch {
-    /// `b = aᵀU` accumulator (k-wide)
+    /// k-wide solve accumulator (`b = aᵀU` for Frobenius, the
+    /// multiplicative-update numerator for KL)
     b: Vec<f32>,
     /// the solved row (k-wide; borrowed out by [`FoldIn::solve_into`])
     x: Vec<f32>,
@@ -49,14 +62,29 @@ pub struct FoldInScratch {
 }
 
 impl FoldIn {
-    /// Precompute the ridged Gram inverse of `u`. `t` caps the nonzeros
-    /// of every folded-in row (None leaves rows unenforced).
+    /// The Frobenius solver (the historical constructor): precompute the
+    /// ridged Gram inverse of `u`. `t` caps the nonzeros of every
+    /// folded-in row (None leaves rows unenforced).
     pub fn new(u: &Csr, t: Option<usize>, tie: TieMode) -> FoldIn {
-        let g = ops::gram(u);
-        let g_inv = inverse_spd(&g, u.cols);
+        FoldIn::with_objective(u, ObjectiveKind::Frobenius, t, tie)
+    }
+
+    /// A solver under an explicit objective — what the serving plane
+    /// builds from a snapshot, so FOLDIN/CLASSIFY answers are consistent
+    /// with how the model was trained.
+    pub fn with_objective(
+        u: &Csr,
+        objective: ObjectiveKind,
+        t: Option<usize>,
+        tie: TieMode,
+    ) -> FoldIn {
+        // step_aux at threads = 1 is bit-identical to the historical
+        // serial `gram` + `inverse_spd` (gram is gram_par(·, 1))
+        let aux = objective.implementation().step_aux(u, 1);
         FoldIn {
             k: u.cols,
-            g_inv,
+            objective,
+            aux,
             t,
             tie,
         }
@@ -64,6 +92,11 @@ impl FoldIn {
 
     pub fn k(&self) -> usize {
         self.k
+    }
+
+    /// The objective this solver minimizes.
+    pub fn objective(&self) -> ObjectiveKind {
+        self.objective
     }
 
     /// One enforced-sparse half-step for a single document. `doc` is the
@@ -90,34 +123,17 @@ impl FoldIn {
     ) -> &'s [f32] {
         let k = self.k;
         debug_assert_eq!(u.cols, k, "U changed shape under the solver");
-        // b = aᵀ U — same accumulation order as ops::atb's sparse path
-        scratch.b.clear();
-        scratch.b.resize(k, 0.0);
-        for &(term, count) in doc {
-            if term >= u.rows || !count.is_finite() || count <= 0.0 {
-                continue;
-            }
-            let (idx, val) = u.row(term);
-            for (&c, &uv) in idx.iter().zip(val) {
-                scratch.b[c as usize] += count * uv;
-            }
-        }
-        // x = b · G⁻¹ (the 1-row form of RowBlock::matmul_small)
-        scratch.x.clear();
-        scratch.x.resize(k, 0.0);
-        for (i, &bi) in scratch.b.iter().enumerate() {
-            if bi != 0.0 {
-                let g_row = &self.g_inv[i * k..(i + 1) * k];
-                for (xj, &gij) in scratch.x.iter_mut().zip(g_row) {
-                    *xj += bi * gij;
-                }
-            }
-        }
-        for v in &mut scratch.x {
-            if *v < 0.0 {
-                *v = 0.0;
-            }
-        }
+        // the objective's per-document solve (non-negative, unenforced):
+        // the Frobenius implementation is the exact historical
+        // b = aᵀU → x = b·G⁻¹ → clamp sequence; KL runs a fixed budget
+        // of multiplicative updates
+        self.objective.implementation().foldin_solve(
+            u,
+            &self.aux,
+            doc,
+            &mut scratch.x,
+            &mut scratch.b,
+        );
         if let Some(t) = self.t {
             // the gather holds at most k positives: reserving up front
             // makes the no-allocation-once-warm property deterministic
@@ -243,10 +259,56 @@ mod tests {
     #[test]
     fn empty_and_unknown_docs_fold_to_zero() {
         let u = Csr::from_dense(3, 2, &[1.0, 0.0, 0.5, 0.5, 0.0, 1.0]);
-        let solver = FoldIn::new(&u, Some(1), TieMode::Exact);
-        assert!(solver.solve(&u, &[]).iter().all(|&v| v == 0.0));
-        // out-of-range ids and non-positive counts are ignored
-        let x = solver.solve(&u, &[(99, 1.0), (0, 0.0), (1, -3.0), (0, f32::NAN)]);
-        assert!(x.iter().all(|&v| v == 0.0));
+        for objective in [ObjectiveKind::Frobenius, ObjectiveKind::Kl] {
+            let solver = FoldIn::with_objective(&u, objective, Some(1), TieMode::Exact);
+            assert!(solver.solve(&u, &[]).iter().all(|&v| v == 0.0), "{objective:?}");
+            // out-of-range ids and non-positive counts are ignored
+            let x = solver.solve(&u, &[(99, 1.0), (0, 0.0), (1, -3.0), (0, f32::NAN)]);
+            assert!(x.iter().all(|&v| v == 0.0), "{objective:?}");
+        }
+    }
+
+    #[test]
+    fn kl_foldin_respects_the_budget_and_pools_scratch() {
+        // same budget + zero-allocation contract as Frobenius, under KL
+        let mut rng = Rng::new(0x6b1);
+        let rows = 20;
+        let k = 6;
+        let u = Csr::from_dense(rows, k, &prop::gen_sparse_dense(&mut rng, rows, k, 0.5));
+        let solver = FoldIn::with_objective(&u, ObjectiveKind::Kl, Some(3), TieMode::Exact);
+        assert_eq!(solver.objective(), ObjectiveKind::Kl);
+        let mut scratch = FoldInScratch::default();
+        let full: Vec<(usize, f32)> = (0..rows).map(|r| (r, 1.0)).collect();
+        let _ = solver.solve_into(&u, &full, &mut scratch);
+        let caps = (
+            scratch.b.capacity(),
+            scratch.x.capacity(),
+            scratch.positives.capacity(),
+        );
+        for round in 0..20 {
+            let n_words = rng.range(1, 10);
+            let doc: Vec<(usize, f32)> = (0..n_words)
+                .map(|_| (rng.below(rows), rng.below(5) as f32 + 1.0))
+                .collect();
+            let fresh = solver.solve(&u, &doc);
+            let pooled = solver.solve_into(&u, &doc, &mut scratch).to_vec();
+            assert_eq!(
+                fresh.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                pooled.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "round {round}"
+            );
+            let nnz = pooled.iter().filter(|&&v| v > 0.0).count();
+            assert!(nnz <= 3, "round {round}: nnz {nnz}");
+            assert!(pooled.iter().all(|v| v.is_finite() && *v >= 0.0));
+            assert_eq!(
+                (
+                    scratch.b.capacity(),
+                    scratch.x.capacity(),
+                    scratch.positives.capacity(),
+                ),
+                caps,
+                "scratch grew on round {round}"
+            );
+        }
     }
 }

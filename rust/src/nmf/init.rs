@@ -35,6 +35,19 @@ pub fn initial_u(n: usize, k: usize, init_nnz: Option<usize>, seed: u64) -> Csr 
     }
 }
 
+/// Positive random `V₀` for multiplicative-update objectives (KL), which
+/// cannot leave zero: always fully dense, under a seed derived from the
+/// run seed so `U₀` and `V₀` draw independent streams but both stay
+/// deterministic in `seed`. (Least-squares ALS re-solves `V` from scratch
+/// each half-iteration and starts from `V₀ = 0` instead; the `init_nnz`
+/// Fig. 6 budget applies only to `U₀` — a sparse `V₀` under KL would
+/// permanently lock the missing entries at zero before the first
+/// enforcement pass ever ran.)
+pub fn initial_v(m: usize, k: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+    dense_random(m, k, &mut rng)
+}
+
 /// Warm-start `U₀` from a previously-trained factor over a (possibly
 /// different) vocabulary: rows whose term survives into `new_terms` carry
 /// their trained topic weights over verbatim; terms the old model never
@@ -116,6 +129,17 @@ mod tests {
     fn deterministic_by_seed() {
         assert_eq!(initial_u(8, 3, Some(10), 7), initial_u(8, 3, Some(10), 7));
         assert_ne!(initial_u(8, 3, Some(10), 7), initial_u(8, 3, Some(10), 8));
+    }
+
+    #[test]
+    fn initial_v_is_dense_positive_and_independent_of_u() {
+        let v = initial_v(6, 3, 7);
+        assert_eq!(v.nnz(), 18, "KL V₀ is always fully dense");
+        assert!(v.values.iter().all(|&x| x > 0.0));
+        assert_eq!(v, initial_v(6, 3, 7), "deterministic in the seed");
+        assert_ne!(v, initial_v(6, 3, 8));
+        // a different stream than U₀ at the same seed and shape
+        assert_ne!(v, initial_u(6, 3, None, 7));
     }
 
     #[test]

@@ -7,7 +7,12 @@
 //!   block at a time with deflation, rank-1 fast path).
 //! * [`init`] — factor initialization (dense random / sparse random with a
 //!   chosen nonzero budget, the Fig. 6 knob).
-//! * [`convergence`] — relative residual and sparse-safe relative error.
+//! * [`objective`] — the objective seam: Frobenius least squares and KL
+//!   divergence behind one [`objective::Objective`] trait, so the blocked
+//!   streaming machinery, enforcement, snapshots and the wire protocol
+//!   stay objective-agnostic.
+//! * [`convergence`] — relative residual, sparse-safe relative error, and
+//!   the streamed KL divergence.
 //! * [`memory`] — max-stored-nonzeros tracking (Fig. 6).
 //! * [`foldin`] — inference-time projection of unseen documents (one
 //!   enforced-sparse half-step against the frozen `U`, used by the topic
@@ -18,6 +23,7 @@ pub mod convergence;
 pub mod foldin;
 pub mod init;
 pub mod memory;
+pub mod objective;
 pub mod options;
 pub mod sequential;
 
@@ -26,8 +32,9 @@ pub use als::{
     half_step_u_src, half_step_v, half_step_v_src, resume, resume_corpus, resume_options,
     AlsCorpus,
 };
-pub use convergence::{rel_error_source, rel_error_sparse, rel_residual};
+pub use convergence::{kl_divergence_source, rel_error_source, rel_error_sparse, rel_residual};
 pub use foldin::{FoldIn, FoldInScratch};
 pub use memory::MemoryTracker;
+pub use objective::{Objective, ObjectiveKind};
 pub use options::{NmfOptions, NmfResult, SparsityMode};
 pub use sequential::{factorize_sequential, factorize_sequential_corpus, SequentialOptions};

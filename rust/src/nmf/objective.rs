@@ -1,0 +1,643 @@
+//! The objective seam: everything half-step math that depends on *what*
+//! is being minimized lives behind [`Objective`], so the streamed block
+//! machinery ([`crate::nmf::als::StreamCtx`]), the enforcement passes,
+//! the snapshot/wire formats and the serving plane are objective-agnostic.
+//!
+//! Two implementations:
+//!
+//! * **Frobenius** — the paper's least-squares objective
+//!   `‖A − U Vᵀ‖²_F`. Per half-step the auxiliary is the ridged Gram
+//!   inverse `(FᵀF + εI)⁻¹` of the fixed factor; each candidate block is
+//!   the SpMM row run solved against it and projected non-negative. This
+//!   path is **bit-identical** to the pre-seam solver: the instruction
+//!   sequence (gram → inverse → per-block fill/solve/project) is
+//!   unchanged, pinned by `NmfResult::digest()` equality in the property
+//!   and integration suites.
+//! * **KL divergence** — the count-data objective
+//!   `D(A ‖ U Vᵀ) = Σ a·ln(a/p) − a + p` (Nguyen & Ho,
+//!   arXiv:1604.04026). Per half-step the auxiliary is the fixed
+//!   factor's per-topic column sums; each output row gets one
+//!   multiplicative update computed per block by [`kl_update_rows`]
+//!   inside the same `StreamCtx`, then rides the unchanged `topk`
+//!   enforcement. Rows update independently, so the result is
+//!   bit-identical at every `(block_rows, threads)` pair by
+//!   construction.
+//!
+//! # The KL multiplicative update, per row
+//!
+//! Updating row `x` of one factor with the other factor `F` fixed
+//! (documents stream for the V half, terms for the U half):
+//!
+//! ```text
+//! x[c] ← x[c] · ( Σ_w (a_w / ⟨F_w, x⟩) · F[w, c] ) / ( Σ_w F[w, c] )
+//! ```
+//!
+//! summed over the nonzeros `a_w` of the streamed `A` row. Zeros are
+//! **absorbing** (`x[c] = 0` stays 0) — exactly the behavior enforced
+//! sparsity wants: a top-t pass zeroing an entry prunes it permanently,
+//! like the paper's during-iteration enforcement. A predicted count of 0
+//! needs no epsilon: `⟨F_w, x⟩ = 0` means every topic `F_w` touches has
+//! `x[c] = 0`, so that term's contributions are multiplied away by
+//! `x[c]` regardless — skipping it is exact.
+
+use crate::dense::inverse_spd;
+use crate::sparse::{ops, Csr, RowBlock, RowCursor, RowSource};
+
+use super::convergence::{kl_divergence_source, rel_error_source};
+
+/// Floor applied to predicted counts inside logarithms (the KL
+/// divergence metric and the held-out log-likelihood): a model that
+/// assigns zero mass to an observed token has genuinely infinite
+/// divergence, but the reported history must stay finite and comparable
+/// across iterations.
+pub const KL_EPS: f64 = 1e-30;
+
+/// Multiplicative-update rounds of a KL fold-in solve (one unseen
+/// document against the frozen `U`). Fixed so served answers are
+/// deterministic; k ≤ 64 converges well within this budget.
+pub const KL_FOLDIN_ROUNDS: usize = 25;
+
+/// The training objective — the serializable identity that travels
+/// through options, config, CLI, snapshots and the worker wire protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ObjectiveKind {
+    /// least squares `‖A − U Vᵀ‖²_F` (the paper's objective)
+    #[default]
+    Frobenius,
+    /// generalized KL divergence `D(A ‖ U Vᵀ)` (count data)
+    Kl,
+}
+
+impl ObjectiveKind {
+    /// Parse the CLI / config spelling.
+    pub fn parse(s: &str) -> Option<ObjectiveKind> {
+        match s {
+            "frobenius" | "fro" => Some(ObjectiveKind::Frobenius),
+            "kl" | "kl-divergence" => Some(ObjectiveKind::Kl),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling (round-trips through [`ObjectiveKind::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            ObjectiveKind::Frobenius => "frobenius",
+            ObjectiveKind::Kl => "kl",
+        }
+    }
+
+    /// Stable one-byte tag persisted in `.esnmf` snapshots (format v2+)
+    /// and the worker wire protocol. Never renumber.
+    pub fn tag(self) -> u8 {
+        match self {
+            ObjectiveKind::Frobenius => 0,
+            ObjectiveKind::Kl => 1,
+        }
+    }
+
+    /// Decode a persisted tag; `None` for tags from a future format
+    /// (callers surface a typed error — never a silent Frobenius
+    /// default).
+    pub fn from_tag(tag: u8) -> Option<ObjectiveKind> {
+        match tag {
+            0 => Some(ObjectiveKind::Frobenius),
+            1 => Some(ObjectiveKind::Kl),
+            _ => None,
+        }
+    }
+
+    /// The (stateless) implementation behind this kind.
+    pub fn implementation(self) -> &'static dyn Objective {
+        match self {
+            ObjectiveKind::Frobenius => &Frobenius,
+            ObjectiveKind::Kl => &KlDivergence,
+        }
+    }
+}
+
+/// The per-half-step math of one training objective. Implementations are
+/// stateless units; dispatch happens through
+/// [`ObjectiveKind::implementation`].
+///
+/// The contract mirrors what the streamed driver needs around its block
+/// loop: one auxiliary vector computed from the fixed factor before the
+/// blocks stream (`step_aux`), the per-iteration fit statistic
+/// (`error_source`), and the per-document fold-in solve the serving
+/// plane runs (`foldin_solve`). The per-block candidate computation
+/// itself is dispatched inside `nmf::als` (it works over crate-private
+/// scratch types), keyed by [`ObjectiveKind`].
+pub trait Objective: Sync {
+    fn kind(&self) -> ObjectiveKind;
+
+    /// The half-step auxiliary computed once from the fixed factor
+    /// before the blocks stream: Frobenius returns the dense (k, k)
+    /// ridged Gram inverse (row-major); KL returns the k per-topic
+    /// column sums. This is exactly what the distributed coordinator
+    /// ships to workers in `ComputeReq.aux`.
+    fn step_aux(&self, fixed: &Csr, threads: usize) -> Vec<f32>;
+
+    /// Expected `step_aux` length at rank `k` — the worker plane's
+    /// shape validation.
+    fn aux_len(&self, k: usize) -> usize;
+
+    /// Whether half-steps consume the previous iterate of the factor
+    /// being updated (multiplicative objectives do; least squares
+    /// re-solves from scratch). Governs whether `ComputeReq` carries
+    /// the `prev` factor.
+    fn needs_prev(&self) -> bool;
+
+    /// The per-iteration fit statistic of the error history: relative
+    /// Frobenius error, or mean per-token KL divergence. `norm_a_sq` is
+    /// `‖A‖²_F` (precomputed once per run; KL ignores it).
+    fn error_source(
+        &self,
+        a: &dyn RowSource,
+        u: &Csr,
+        v: &Csr,
+        norm_a_sq: f64,
+        chunk_rows: usize,
+    ) -> f64;
+
+    /// Solve one document row against the frozen `u` using a
+    /// precomputed `aux` (= `step_aux(u, 1)`): the serving plane's
+    /// fold-in. `doc` is (term row, count) pairs — out-of-range ids and
+    /// non-positive counts must be ignored; the dense length-k result
+    /// is left in `x` (non-negative, unenforced — the caller applies
+    /// the top-t budget). `b` is a reusable k-wide accumulator.
+    fn foldin_solve(
+        &self,
+        u: &Csr,
+        aux: &[f32],
+        doc: &[(usize, f32)],
+        x: &mut Vec<f32>,
+        b: &mut Vec<f32>,
+    );
+}
+
+/// The paper's least-squares objective — see the module docs for the
+/// bit-identity contract.
+pub struct Frobenius;
+
+impl Objective for Frobenius {
+    fn kind(&self) -> ObjectiveKind {
+        ObjectiveKind::Frobenius
+    }
+
+    fn step_aux(&self, fixed: &Csr, threads: usize) -> Vec<f32> {
+        // the exact pre-seam instruction sequence of the half-steps and
+        // the distributed coordinator: parallel gram, then the ridged
+        // SPD inverse — the bits of every downstream factor depend on it
+        let g = ops::gram_par(fixed, threads);
+        inverse_spd(&g, fixed.cols)
+    }
+
+    fn aux_len(&self, k: usize) -> usize {
+        k * k
+    }
+
+    fn needs_prev(&self) -> bool {
+        false
+    }
+
+    fn error_source(
+        &self,
+        a: &dyn RowSource,
+        u: &Csr,
+        v: &Csr,
+        norm_a_sq: f64,
+        chunk_rows: usize,
+    ) -> f64 {
+        rel_error_source(a, u, v, norm_a_sq, chunk_rows)
+    }
+
+    fn foldin_solve(
+        &self,
+        u: &Csr,
+        aux: &[f32],
+        doc: &[(usize, f32)],
+        x: &mut Vec<f32>,
+        b: &mut Vec<f32>,
+    ) {
+        let k = u.cols;
+        debug_assert_eq!(aux.len(), k * k, "fold-in aux is the (k,k) Gram inverse");
+        // b = aᵀ U — same accumulation order as ops::atb's sparse path
+        b.clear();
+        b.resize(k, 0.0);
+        for &(term, count) in doc {
+            if term >= u.rows || !count.is_finite() || count <= 0.0 {
+                continue;
+            }
+            let (idx, val) = u.row(term);
+            for (&c, &uv) in idx.iter().zip(val) {
+                b[c as usize] += count * uv;
+            }
+        }
+        // x = b · G⁻¹ (the 1-row form of RowBlock::matmul_small)
+        x.clear();
+        x.resize(k, 0.0);
+        for (i, &bi) in b.iter().enumerate() {
+            if bi != 0.0 {
+                let g_row = &aux[i * k..(i + 1) * k];
+                for (xj, &gij) in x.iter_mut().zip(g_row) {
+                    *xj += bi * gij;
+                }
+            }
+        }
+        for v in x.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// The generalized KL-divergence objective (count data) — multiplicative
+/// per-row updates, see the module docs for the update rule.
+pub struct KlDivergence;
+
+impl Objective for KlDivergence {
+    fn kind(&self) -> ObjectiveKind {
+        ObjectiveKind::Kl
+    }
+
+    fn step_aux(&self, fixed: &Csr, _threads: usize) -> Vec<f32> {
+        kl_col_sums(fixed)
+    }
+
+    fn aux_len(&self, k: usize) -> usize {
+        k
+    }
+
+    fn needs_prev(&self) -> bool {
+        true
+    }
+
+    fn error_source(
+        &self,
+        a: &dyn RowSource,
+        u: &Csr,
+        v: &Csr,
+        _norm_a_sq: f64,
+        chunk_rows: usize,
+    ) -> f64 {
+        kl_divergence_source(a, u, v, chunk_rows)
+    }
+
+    fn foldin_solve(
+        &self,
+        u: &Csr,
+        aux: &[f32],
+        doc: &[(usize, f32)],
+        x: &mut Vec<f32>,
+        b: &mut Vec<f32>,
+    ) {
+        let k = u.cols;
+        debug_assert_eq!(aux.len(), k, "fold-in aux is the per-topic column sums");
+        // multiplicative updates from a uniform positive start (they
+        // cannot leave zero); a fixed round budget keeps served answers
+        // deterministic. `b` is the numerator accumulator.
+        x.clear();
+        x.resize(k, 1.0);
+        for _ in 0..KL_FOLDIN_ROUNDS {
+            b.clear();
+            b.resize(k, 0.0);
+            for &(term, count) in doc {
+                if term >= u.rows || !count.is_finite() || count <= 0.0 {
+                    continue;
+                }
+                let (idx, val) = u.row(term);
+                let mut pred = 0.0f64;
+                for (&c, &uv) in idx.iter().zip(val) {
+                    pred += uv as f64 * x[c as usize] as f64;
+                }
+                if pred <= 0.0 {
+                    // no support overlap: the contribution would be
+                    // multiplied away by x[c] = 0 anyway (module docs)
+                    continue;
+                }
+                let ratio = count as f64 / pred;
+                for (&c, &uv) in idx.iter().zip(val) {
+                    b[c as usize] += (ratio * uv as f64) as f32;
+                }
+            }
+            for (c, xc) in x.iter_mut().enumerate() {
+                *xc = if *xc > 0.0 && aux[c] > 0.0 {
+                    (*xc as f64 * b[c] as f64 / aux[c] as f64) as f32
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+/// Per-topic column sums `Σ_rows F[r, c]` of the fixed factor — the KL
+/// half-step auxiliary (the multiplicative update's denominator).
+/// Accumulated serially in row order in f64, so the result is
+/// independent of the thread count by construction.
+pub(crate) fn kl_col_sums(fixed: &Csr) -> Vec<f32> {
+    let k = fixed.cols;
+    let mut sums = vec![0.0f64; k];
+    for r in 0..fixed.rows {
+        let (idx, val) = fixed.row(r);
+        for (&c, &v) in idx.iter().zip(val) {
+            sums[c as usize] += v as f64;
+        }
+    }
+    sums.into_iter().map(|s| s as f32).collect()
+}
+
+/// One block of KL multiplicative row updates — the KL analogue of
+/// [`ops::stream_mul_into`]: compute updated rows `lo..hi` of the factor
+/// whose `A` orientation streams through `a`, appending the surviving
+/// (non-zero) rows into `out` (cleared first; `cur` is the worker's
+/// streaming cursor).
+///
+/// `fixed` is the other factor `F` (contraction dim × k), `prev` the
+/// previous iterate of the factor being updated (full logical row space
+/// — row `j` of the output reads row `j` of `prev`), `col_sums` the
+/// precomputed per-topic sums of `fixed` ([`kl_col_sums`]).
+///
+/// Each row's update touches only that row of `prev` and of `a`, with
+/// all accumulation in f64 over the `A` row's stored order — so the
+/// emitted bits are independent of block boundaries and worker
+/// scheduling, which is what lets this kernel ride the same blocked
+/// two-pass enforcement machinery as Frobenius, bit-identically at
+/// every `(block_rows, threads)` pair.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kl_update_rows(
+    a: &dyn RowSource,
+    fixed: &Csr,
+    prev: &Csr,
+    col_sums: &[f32],
+    lo: usize,
+    hi: usize,
+    cur: &mut RowCursor,
+    out: &mut RowBlock,
+) {
+    assert_eq!(a.cols(), fixed.rows, "KL contraction mismatch");
+    assert_eq!(a.rows(), prev.rows, "KL previous-iterate row mismatch");
+    assert_eq!(fixed.cols, prev.cols, "KL rank mismatch");
+    assert_eq!(col_sums.len(), fixed.cols, "KL column-sum length");
+    out.clear();
+    let k = fixed.cols;
+    let view = a.load(lo, hi, cur);
+    let mut x = vec![0.0f32; k];
+    let mut num = vec![0.0f64; k];
+    for j in lo..hi {
+        let (pidx, pval) = prev.row(j);
+        if pidx.is_empty() {
+            // an all-zero row is a fixed point of the multiplicative
+            // update; like stream_mul_into, inactive rows are not pushed
+            continue;
+        }
+        x.iter_mut().for_each(|s| *s = 0.0);
+        for (&c, &v) in pidx.iter().zip(pval) {
+            x[c as usize] = v;
+        }
+        num.iter_mut().for_each(|s| *s = 0.0);
+        let (acols, avals) = view.row(j - lo);
+        for (&w, &aij) in acols.iter().zip(avals) {
+            let (fidx, fval) = fixed.row(w as usize);
+            // predicted count ⟨F_w, x⟩ for this (term, doc) cell
+            let mut pred = 0.0f64;
+            for (&c, &fv) in fidx.iter().zip(fval) {
+                pred += fv as f64 * x[c as usize] as f64;
+            }
+            if pred <= 0.0 {
+                // exact skip, no epsilon — see the module docs
+                continue;
+            }
+            let ratio = aij as f64 / pred;
+            for (&c, &fv) in fidx.iter().zip(fval) {
+                num[c as usize] += ratio * fv as f64;
+            }
+        }
+        let mut any = false;
+        for (c, xc) in x.iter_mut().enumerate() {
+            let v = if *xc > 0.0 && col_sums[c] > 0.0 {
+                (*xc as f64 * num[c] / col_sums[c] as f64) as f32
+            } else {
+                0.0
+            };
+            *xc = v;
+            any |= v != 0.0;
+        }
+        if any {
+            out.push_row(j, &x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kind_spellings_and_tags_round_trip() {
+        for kind in [ObjectiveKind::Frobenius, ObjectiveKind::Kl] {
+            assert_eq!(ObjectiveKind::parse(kind.name()), Some(kind));
+            assert_eq!(ObjectiveKind::from_tag(kind.tag()), Some(kind));
+            assert_eq!(kind.implementation().kind(), kind);
+        }
+        assert_eq!(ObjectiveKind::parse("fro"), Some(ObjectiveKind::Frobenius));
+        assert_eq!(ObjectiveKind::parse("kl-divergence"), Some(ObjectiveKind::Kl));
+        assert_eq!(ObjectiveKind::parse("l2"), None);
+        // unknown future tags decode to None, never a silent default
+        assert_eq!(ObjectiveKind::from_tag(2), None);
+        assert_eq!(ObjectiveKind::from_tag(255), None);
+        assert_eq!(ObjectiveKind::default(), ObjectiveKind::Frobenius);
+    }
+
+    #[test]
+    fn frobenius_aux_is_the_ridged_gram_inverse() {
+        let mut rng = Rng::new(0x0b1);
+        let u = Csr::from_dense(12, 3, &prop::gen_sparse_dense(&mut rng, 12, 3, 0.6));
+        let want = inverse_spd(&ops::gram_par(&u, 2), 3);
+        let got = ObjectiveKind::Frobenius.implementation().step_aux(&u, 2);
+        assert_eq!(
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+        assert_eq!(ObjectiveKind::Frobenius.implementation().aux_len(3), 9);
+        assert!(!ObjectiveKind::Frobenius.implementation().needs_prev());
+    }
+
+    #[test]
+    fn kl_aux_is_the_column_sums_at_any_thread_count() {
+        let mut rng = Rng::new(0x0b2);
+        let u = Csr::from_dense(20, 4, &prop::gen_sparse_dense(&mut rng, 20, 4, 0.5));
+        let obj = ObjectiveKind::Kl.implementation();
+        let want = obj.step_aux(&u, 1);
+        for threads in [2usize, 7] {
+            assert_eq!(obj.step_aux(&u, threads), want);
+        }
+        // reference: dense column sums
+        let dense = u.to_dense();
+        for c in 0..4 {
+            let s: f64 = (0..20).map(|r| dense[r * 4 + c] as f64).sum();
+            assert!((want[c] as f64 - s).abs() < 1e-4, "col {c}");
+        }
+        assert_eq!(obj.aux_len(4), 4);
+        assert!(obj.needs_prev());
+    }
+
+    /// Dense reference of the per-row multiplicative update, same f64
+    /// accumulation order as the kernel.
+    fn kl_reference_row(
+        a_row: (&[u32], &[f32]),
+        fixed: &Csr,
+        x: &[f32],
+        col_sums: &[f32],
+    ) -> Vec<f32> {
+        let k = x.len();
+        let mut num = vec![0.0f64; k];
+        for (&w, &aij) in a_row.0.iter().zip(a_row.1) {
+            let (fidx, fval) = fixed.row(w as usize);
+            let mut pred = 0.0f64;
+            for (&c, &fv) in fidx.iter().zip(fval) {
+                pred += fv as f64 * x[c as usize] as f64;
+            }
+            if pred <= 0.0 {
+                continue;
+            }
+            for (&c, &fv) in fidx.iter().zip(fval) {
+                num[c as usize] += aij as f64 / pred * fv as f64;
+            }
+        }
+        (0..k)
+            .map(|c| {
+                if x[c] > 0.0 && col_sums[c] > 0.0 {
+                    (x[c] as f64 * num[c] / col_sums[c] as f64) as f32
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn kl_update_matches_the_rowwise_reference() {
+        prop::check("kl-update-vs-reference", 3100, 48, |rng: &mut Rng| {
+            let n = rng.range(1, 15);
+            let m = rng.range(1, 15);
+            let k = rng.range(1, 5);
+            // a: the streamed orientation (output rows × contraction)
+            let a = Csr::from_dense(m, n, &prop::gen_sparse_dense(rng, m, n, 0.4));
+            let fixed = Csr::from_dense(n, k, &prop::gen_sparse_dense(rng, n, k, 0.6));
+            let prev = Csr::from_dense(m, k, &prop::gen_sparse_dense(rng, m, k, 0.7));
+            let sums = kl_col_sums(&fixed);
+            let mut cur = RowCursor::new();
+            let mut out = RowBlock::new(m, k);
+            kl_update_rows(&a, &fixed, &prev, &sums, 0, m, &mut cur, &mut out);
+            let got = out.to_csr();
+            let mut x = vec![0.0f32; k];
+            for j in 0..m {
+                x.iter_mut().for_each(|v| *v = 0.0);
+                let (pidx, pval) = prev.row(j);
+                for (&c, &v) in pidx.iter().zip(pval) {
+                    x[c as usize] = v;
+                }
+                let want = kl_reference_row(a.row(j), &fixed, &x, &sums);
+                for (c, &w) in want.iter().enumerate() {
+                    let g = got.get(j, c);
+                    assert!(
+                        (g - w).abs() <= 1e-6 * w.abs().max(1.0),
+                        "row {j} col {c}: {g} vs {w}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn kl_update_is_block_invariant_bit_for_bit() {
+        prop::check("kl-update-block-invariant", 3200, 48, |rng: &mut Rng| {
+            let n = rng.range(1, 20);
+            let m = rng.range(2, 20);
+            let k = rng.range(1, 5);
+            let a = Csr::from_dense(m, n, &prop::gen_sparse_dense(rng, m, n, 0.3));
+            let fixed = Csr::from_dense(n, k, &prop::gen_sparse_dense(rng, n, k, 0.6));
+            let prev = Csr::from_dense(m, k, &prop::gen_sparse_dense(rng, m, k, 0.7));
+            let sums = kl_col_sums(&fixed);
+            let mut cur = RowCursor::new();
+            let mut full = RowBlock::new(m, k);
+            kl_update_rows(&a, &fixed, &prev, &sums, 0, m, &mut cur, &mut full);
+            let want = full.to_csr();
+            for block in [1usize, 3, 7] {
+                let mut scratch = RowBlock::new(m, k);
+                let mut assembled = RowBlock::new(m, k);
+                for (lo, hi) in crate::coordinator::pool::fixed_chunks(m, block) {
+                    kl_update_rows(&a, &fixed, &prev, &sums, lo, hi, &mut cur, &mut scratch);
+                    for (slot, &rid) in scratch.row_ids.iter().enumerate() {
+                        assembled.push_row(rid as usize, scratch.row_data(slot));
+                    }
+                }
+                let got = assembled.to_csr();
+                assert_eq!(got.indptr, want.indptr, "block {block}");
+                assert_eq!(got.indices, want.indices, "block {block}");
+                assert_eq!(
+                    got.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "block {block}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn kl_zeros_are_absorbing_and_dead_topics_stay_dead() {
+        // prev has a zero entry and topic 1 of `fixed` is empty: both
+        // must stay exactly zero in the update
+        let a = Csr::from_dense(2, 2, &[3.0, 1.0, 0.0, 2.0]);
+        let fixed = Csr::from_dense(2, 2, &[1.0, 0.0, 2.0, 0.0]);
+        let prev = Csr::from_dense(2, 2, &[0.5, 0.0, 0.25, 4.0]);
+        let sums = kl_col_sums(&fixed);
+        assert_eq!(sums, vec![3.0, 0.0]);
+        let mut cur = RowCursor::new();
+        let mut out = RowBlock::new(2, 2);
+        kl_update_rows(&a, &fixed, &prev, &sums, 0, 2, &mut cur, &mut out);
+        let got = out.to_csr();
+        assert_eq!(got.get(0, 1), 0.0, "zero prev entry is absorbing");
+        assert_eq!(got.get(1, 1), 0.0, "dead topic stays dead");
+        assert!(got.get(0, 0) > 0.0);
+        assert!(got.get(1, 0) > 0.0);
+    }
+
+    #[test]
+    fn kl_all_zero_prev_rows_are_skipped_like_inactive_spmm_rows() {
+        let a = Csr::from_dense(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        let fixed = Csr::from_dense(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        let prev = Csr::from_dense(2, 2, &[0.0, 0.0, 1.0, 1.0]);
+        let sums = kl_col_sums(&fixed);
+        let mut cur = RowCursor::new();
+        let mut out = RowBlock::new(2, 2);
+        kl_update_rows(&a, &fixed, &prev, &sums, 0, 2, &mut cur, &mut out);
+        assert_eq!(out.row_ids, vec![1]);
+    }
+
+    #[test]
+    fn kl_foldin_solve_fits_a_training_column() {
+        // fold a document whose counts are exactly k·U's column 0 mass:
+        // the solve must put (almost) all weight on topic 0
+        let u = Csr::from_dense(3, 2, &[4.0, 0.1, 2.0, 0.0, 0.0, 3.0]);
+        let obj = ObjectiveKind::Kl.implementation();
+        let aux = obj.step_aux(&u, 1);
+        let (mut x, mut b) = (Vec::new(), Vec::new());
+        obj.foldin_solve(&u, &aux, &[(0, 8.0), (1, 4.0)], &mut x, &mut b);
+        assert_eq!(x.len(), 2);
+        assert!(x.iter().all(|v| v.is_finite() && *v >= 0.0));
+        assert!(x[0] > 10.0 * x[1].max(1e-6), "topic 0 dominates: {x:?}");
+        // invalid entries are ignored; an empty doc folds to zero
+        obj.foldin_solve(
+            &u,
+            &aux,
+            &[(99, 1.0), (0, 0.0), (1, -3.0), (0, f32::NAN)],
+            &mut x,
+            &mut b,
+        );
+        assert!(x.iter().all(|&v| v == 0.0), "{x:?}");
+    }
+}

@@ -3,6 +3,7 @@
 use crate::sparse::{Csr, TieMode};
 
 use super::memory::MemoryStats;
+use super::objective::ObjectiveKind;
 
 /// How (and whether) sparsity is enforced each iteration.
 #[derive(Clone, Copy, Debug, PartialEq, Default)]
@@ -63,6 +64,11 @@ pub struct NmfOptions {
     pub max_iters: usize,
     /// stop when the relative residual drops below this (0.0 = never)
     pub tol: f64,
+    /// the training objective the half-steps minimize (Frobenius least
+    /// squares or KL divergence — see [`crate::nmf::objective`]).
+    /// Persisted in `.esnmf` snapshots and announced on the worker wire:
+    /// resume and distributed runs refuse a mismatch with typed errors.
+    pub objective: ObjectiveKind,
     pub sparsity: SparsityMode,
     pub tie_mode: TieMode,
     /// RNG seed for the initial guess
@@ -103,6 +109,7 @@ impl NmfOptions {
             k,
             max_iters: 75,
             tol: 0.0,
+            objective: ObjectiveKind::Frobenius,
             sparsity: SparsityMode::None,
             tie_mode: TieMode::KeepTies,
             seed: 0x5eed,
@@ -117,6 +124,11 @@ impl NmfOptions {
 
     pub fn with_sparsity(mut self, s: SparsityMode) -> Self {
         self.sparsity = s;
+        self
+    }
+
+    pub fn with_objective(mut self, objective: ObjectiveKind) -> Self {
+        self.objective = objective;
         self
     }
 
@@ -284,6 +296,11 @@ mod tests {
             .with_init_nnz(50)
             .with_tol(1e-9)
             .with_sparsity(SparsityMode::both(40, 60));
+        assert_eq!(o.objective, ObjectiveKind::Frobenius, "default objective");
+        assert_eq!(
+            o.clone().with_objective(ObjectiveKind::Kl).objective,
+            ObjectiveKind::Kl
+        );
         assert_eq!(o.k, 5);
         assert_eq!(o.max_iters, 10);
         assert_eq!(o.init_nnz, Some(50));

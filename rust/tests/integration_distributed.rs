@@ -17,7 +17,7 @@ use std::time::Duration;
 use esnmf::coordinator::{run_distributed_on, run_worker, DistOptions};
 use esnmf::corpus::{generate_tdm, reuters_sim, Scale};
 use esnmf::io::CorpusStore;
-use esnmf::nmf::{factorize_corpus, NmfOptions, NmfResult, SparsityMode};
+use esnmf::nmf::{factorize_corpus, NmfOptions, NmfResult, ObjectiveKind, SparsityMode};
 use esnmf::sparse::TieMode;
 use esnmf::EsnmfError;
 
@@ -55,11 +55,12 @@ fn run_with_workers(
 ) -> NmfResult {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
+    let objective = opts.objective;
     let handles: Vec<_> = (0..workers)
         .map(|_| {
             let path = store_path.to_path_buf();
             let addr = addr.clone();
-            std::thread::spawn(move || run_worker(&path, &addr, 1))
+            std::thread::spawn(move || run_worker(&path, &addr, objective, 1))
         })
         .collect();
     let dopts = DistOptions {
@@ -136,7 +137,7 @@ fn worker_killed_mid_iteration_still_completes_bit_identically() {
     let survivor = {
         let path = path.clone();
         let addr = addr.clone();
-        std::thread::spawn(move || run_worker(&path, &addr, 1))
+        std::thread::spawn(move || run_worker(&path, &addr, ObjectiveKind::Frobenius, 1))
     };
     let mut victim = Command::new(env!("CARGO_BIN_EXE_esnmf"))
         .args([
@@ -188,7 +189,7 @@ fn garbage_peer_is_rejected_and_the_run_completes() {
     let worker = {
         let path = path.clone();
         let addr = addr.clone();
-        std::thread::spawn(move || run_worker(&path, &addr, 1))
+        std::thread::spawn(move || run_worker(&path, &addr, ObjectiveKind::Frobenius, 1))
     };
 
     let dopts = DistOptions {
@@ -216,7 +217,7 @@ fn corpus_digest_mismatch_is_a_typed_refusal_on_both_sides() {
     let worker = {
         let path = path_b.clone();
         let addr = addr.clone();
-        std::thread::spawn(move || run_worker(&path, &addr, 1))
+        std::thread::spawn(move || run_worker(&path, &addr, ObjectiveKind::Frobenius, 1))
     };
     let dopts = DistOptions {
         listen: addr,
@@ -236,6 +237,58 @@ fn corpus_digest_mismatch_is_a_typed_refusal_on_both_sides() {
     }
     std::fs::remove_file(&path_a).unwrap();
     std::fs::remove_file(&path_b).unwrap();
+}
+
+#[test]
+fn distributed_kl_is_bit_identical_to_the_local_run() {
+    let (path, store) = write_store("kl", 0x0c0de);
+    let mut opts = enforced_opts().with_objective(ObjectiveKind::Kl);
+    opts = opts.with_iters(4);
+    let baseline = factorize_corpus(&store, &opts);
+    for workers in [1usize, 2] {
+        let dist = run_with_workers(&store, &path, &opts, workers);
+        assert_same_result(&dist, &baseline, &format!("kl, {workers} workers"));
+    }
+    // the per-iteration KL history is monotone non-increasing
+    for w in baseline.errors.windows(2) {
+        assert!(w[1] <= w[0] + 1e-9, "KL went up: {:?}", baseline.errors);
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn objective_mismatch_is_a_typed_refusal_on_both_sides() {
+    let (path, store) = write_store("objective", 0x0c0de);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // a KL coordinator must refuse a Frobenius worker at handshake —
+    // mixed per-block math would corrupt the run, not just slow it
+    let worker = {
+        let path = path.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || run_worker(&path, &addr, ObjectiveKind::Frobenius, 1))
+    };
+    let dopts = DistOptions {
+        listen: addr,
+        workers: 1,
+        timeout: Duration::from_secs(2),
+    };
+    let opts = enforced_opts().with_objective(ObjectiveKind::Kl);
+    match run_distributed_on(listener, &store, &opts, &dopts) {
+        Err(EsnmfError::Protocol(msg)) => {
+            assert!(msg.contains("no workers joined"), "{msg}")
+        }
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+    match worker.join().unwrap() {
+        Err(EsnmfError::Protocol(msg)) => {
+            assert!(msg.contains("objective"), "{msg}");
+            assert!(msg.contains("refused"), "{msg}");
+        }
+        other => panic!("worker should see the refusal, got {other:?}"),
+    }
+    std::fs::remove_file(&path).unwrap();
 }
 
 // ---- CLI end-to-end ------------------------------------------------------

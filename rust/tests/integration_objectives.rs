@@ -1,0 +1,282 @@
+//! Objective-seam acceptance tests, end-to-end through the real binary:
+//! `factorize --objective kl` → `--save-model` → `serve --model`
+//! (FOLDIN/CLASSIFY/STATS) → checkpoint + `--resume` → `--distributed`.
+//!
+//! The objective under test comes from `ESNMF_OBJECTIVE` (default `kl`,
+//! which is what the CI `kl-tiny-blocks` matrix entry pins alongside
+//! `ESNMF_BLOCK_ROWS=3`), so the same suite also proves the Frobenius
+//! path end-to-end when pointed at it.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::process::Command;
+
+fn objective() -> String {
+    std::env::var("ESNMF_OBJECTIVE").unwrap_or_else(|_| "kl".into())
+}
+
+fn esnmf(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_esnmf"))
+        .args(args)
+        .env("ESNMF_LOG", "warn")
+        .output()
+        .expect("spawning esnmf")
+}
+
+fn digest_line(stdout: &str) -> String {
+    stdout
+        .lines()
+        .find(|l| l.starts_with("factors digest:"))
+        .unwrap_or_else(|| panic!("no digest line in:\n{stdout}"))
+        .to_string()
+}
+
+#[test]
+fn factorize_prints_the_objective_and_heldout_likelihood() {
+    let obj = objective();
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--iters", "5", "--sparsity", "both", "--t-u", "60", "--t-v", "120",
+        "--seed", "17", "--objective", &obj,
+    ]);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        digest_line(&text).contains(&format!("objective={obj}")),
+        "{text}"
+    );
+    assert!(text.contains("held-out mean log-likelihood:"), "{text}");
+}
+
+#[test]
+fn unknown_objective_is_a_usage_error() {
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny",
+        "--objective", "itakura",
+    ]);
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("objective"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn kl_requires_the_native_als_path() {
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny",
+        "--objective", "kl", "--algorithm", "seq",
+    ]);
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("sequential"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn save_model_then_serve_answers_under_the_trained_objective() {
+    let obj = objective();
+    let snap = std::env::temp_dir().join(format!("esnmf_obj_serve_{obj}.esnmf"));
+    let _ = std::fs::remove_file(&snap);
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--iters", "6", "--sparsity", "both", "--t-u", "60", "--t-v", "120",
+        "--seed", "19", "--objective", &obj, "--save-model", snap.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(snap.exists());
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_esnmf"))
+        .args(["serve", "--model", snap.to_str().unwrap(), "--addr", "127.0.0.1:0"])
+        .env("ESNMF_LOG", "warn")
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning esnmf serve");
+    let mut banner = String::new();
+    BufReader::new(child.stdout.as_mut().unwrap())
+        .read_line(&mut banner)
+        .unwrap();
+    let addr = banner
+        .split_whitespace()
+        .find(|t| t.contains(':') && t.starts_with("127.0.0.1"))
+        .unwrap_or_else(|| panic!("no address in banner {banner:?}"))
+        .to_string();
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut query = |cmd: &str| -> String {
+        writeln!(writer, "{cmd}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line.trim_end().to_string()
+    };
+    // STATS leads with the serving objective
+    let stats = query("STATS");
+    assert!(
+        stats.starts_with(&format!("OK objective={obj} ")),
+        "{stats}"
+    );
+    // fold-in and classify answer (under the model's own objective)
+    let folded = query("FOLDIN coffee:2 crop:1");
+    assert!(folded.starts_with("OK"), "{folded}");
+    let classified = query("CLASSIFY coffee crop");
+    assert!(classified.starts_with("OK topic:"), "{classified}");
+    query("QUIT");
+    child.kill().unwrap();
+    let _ = child.wait();
+    std::fs::remove_file(&snap).unwrap();
+}
+
+#[test]
+fn resumed_run_matches_the_uninterrupted_digest() {
+    let obj = objective();
+    let ck = std::env::temp_dir().join(format!("esnmf_obj_resume_{obj}.esnmf"));
+    let _ = std::fs::remove_file(&ck);
+    let common = [
+        "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--sparsity", "both", "--t-u", "60", "--t-v", "120", "--seed", "23",
+    ];
+    // first half of the run, persisted as a checkpoint snapshot
+    let mut args: Vec<&str> = vec!["factorize", "--objective", &obj, "--iters", "3"];
+    args.extend_from_slice(&common);
+    args.extend_from_slice(&["--save-model", ck.to_str().unwrap()]);
+    assert!(esnmf(&args).status.success());
+    // resume to the full length
+    let mut args: Vec<&str> = vec!["factorize", "--objective", &obj, "--iters", "6"];
+    args.extend_from_slice(&common);
+    args.extend_from_slice(&["--resume", ck.to_str().unwrap()]);
+    let resumed = esnmf(&args);
+    assert!(
+        resumed.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&resumed.stderr)
+    );
+    // the uninterrupted reference
+    let mut args: Vec<&str> = vec!["factorize", "--objective", &obj, "--iters", "6"];
+    args.extend_from_slice(&common);
+    let full = esnmf(&args);
+    assert!(full.status.success());
+    assert_eq!(
+        digest_line(&String::from_utf8_lossy(&resumed.stdout)),
+        digest_line(&String::from_utf8_lossy(&full.stdout)),
+        "resumed run diverged from the uninterrupted one"
+    );
+    std::fs::remove_file(&ck).unwrap();
+}
+
+#[test]
+fn resume_refuses_an_objective_mismatch() {
+    let ck = std::env::temp_dir().join("esnmf_obj_mismatch.esnmf");
+    let _ = std::fs::remove_file(&ck);
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--iters", "3", "--seed", "29", "--objective", "kl",
+        "--save-model", ck.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // the snapshot was trained under KL; resuming it under Frobenius
+    // would silently change the math mid-run — typed refusal instead
+    let out = esnmf(&[
+        "factorize", "--corpus", "reuters", "--scale", "tiny", "--k", "3",
+        "--iters", "6", "--seed", "29", "--objective", "frobenius",
+        "--resume", ck.to_str().unwrap(),
+    ]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("objective"), "{err}");
+    assert_eq!(out.status.code(), Some(3), "snapshot mismatches exit 3");
+    std::fs::remove_file(&ck).unwrap();
+}
+
+#[test]
+fn distributed_matches_the_single_process_digest() {
+    let obj = objective();
+    let store_path = std::env::temp_dir().join(format!("esnmf_obj_dist_{obj}.estdm"));
+    let _ = std::fs::remove_file(&store_path);
+    let out = esnmf(&[
+        "ingest", "--corpus", "reuters", "--scale", "tiny", "--seed", "31",
+        "--shard-rows", "5", "--out", store_path.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "ingest stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let common = [
+        "--k", "3", "--iters", "3", "--sparsity", "both", "--t-u", "50",
+        "--t-v", "110", "--seed", "31", "--block-rows", "7",
+    ];
+    let mut local_args: Vec<&str> = vec![
+        "factorize", "--objective", &obj,
+        "--corpus-store", store_path.to_str().unwrap(),
+    ];
+    local_args.extend_from_slice(&common);
+    let local_out = esnmf(&local_args);
+    assert!(
+        local_out.status.success(),
+        "local stderr: {}",
+        String::from_utf8_lossy(&local_out.stderr)
+    );
+    let local_digest = digest_line(&String::from_utf8_lossy(&local_out.stdout));
+
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+    let mut workers: Vec<_> = (0..2)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_esnmf"))
+                .args([
+                    "worker",
+                    store_path.to_str().unwrap(),
+                    "--coordinator",
+                    addr.as_str(),
+                    "--objective",
+                    obj.as_str(),
+                    "--threads",
+                    "1",
+                ])
+                .env("ESNMF_LOG", "warn")
+                .spawn()
+                .expect("spawning worker")
+        })
+        .collect();
+    let mut dist_args: Vec<&str> = vec![
+        "factorize", "--objective", &obj,
+        "--corpus-store", store_path.to_str().unwrap(),
+        "--distributed", "--dist-workers", "2", "--dist-listen", addr.as_str(),
+        "--dist-timeout", "30",
+    ];
+    dist_args.extend_from_slice(&common);
+    let dist_out = esnmf(&dist_args);
+    for w in &mut workers {
+        let _ = w.kill();
+        let _ = w.wait();
+    }
+    assert!(
+        dist_out.status.success(),
+        "distributed stderr: {}",
+        String::from_utf8_lossy(&dist_out.stderr)
+    );
+    assert_eq!(
+        digest_line(&String::from_utf8_lossy(&dist_out.stdout)),
+        local_digest,
+        "distributed run diverged under objective {obj}"
+    );
+    std::fs::remove_file(&store_path).unwrap();
+}

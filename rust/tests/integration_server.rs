@@ -57,6 +57,7 @@ fn tcp_protocol_roundtrip() {
     assert!(query(&mut reader, &mut writer, "DOCS 1 5").starts_with("OK 1:0.9000"));
     assert!(query(&mut reader, &mut writer, "BOGUS").starts_with("ERR"));
     let stats = query(&mut reader, &mut writer, "STATS");
+    assert!(stats.starts_with("OK objective=frobenius "), "{stats}");
     assert!(stats.contains("server.requests"), "{stats}");
     assert!(stats.contains("server.connections.active"), "{stats}");
     assert!(stats.contains("server.latency.topics.count"), "{stats}");
