@@ -4,7 +4,7 @@
 mod common;
 
 use esnmf::nmf::{half_step_v, init, MemoryTracker, NmfOptions, SparsityMode};
-use esnmf::sparse::{ops, topk, RowBlock, TieMode};
+use esnmf::sparse::{ops, topk, RowBlock, RowCursor, TieMode};
 use esnmf::util::bench::BenchSuite;
 use esnmf::util::rng::Rng;
 
@@ -46,6 +46,83 @@ fn main() {
         .bench("gram_par(U, threads=4)", || ops::gram_par(&u, 4))
         .median_s();
     suite.bench("tr_cross(A,U,V)", || ops::tr_cross(&tdm.a, &u, &v));
+
+    // before/after points for the kernel restructure: the live chunked
+    // SpMM / dense-gather gram / touched-clear error trace next to the
+    // verbatim pre-restructure loops kept in ops::reference. Both SpMM
+    // sides read the same dense_factor copy, so the ratio isolates the
+    // accumulator layout, not the densification cost.
+    let rows = tdm.n_terms();
+    let v_dense = ops::dense_factor(&v);
+    let spmm_dense_new = suite
+        .bench("stream_mul(dense-V, chunked)", || {
+            ops::stream_mul_par_with(&tdm.a, &v, v_dense.as_deref(), None, 1)
+        })
+        .median_s();
+    let spmm_dense_ref = suite
+        .bench("stream_mul(dense-V, reference)", || {
+            let mut cur = RowCursor::new();
+            let mut out = RowBlock::new(rows, k);
+            ops::reference::stream_mul_into_ref(
+                &tdm.a,
+                &v,
+                v_dense.as_deref(),
+                None,
+                0,
+                rows,
+                &mut cur,
+                &mut out,
+            );
+            out
+        })
+        .median_s();
+    suite.metric("spmm.chunked_speedup_dense", spmm_dense_ref / spmm_dense_new);
+    let v_sparse = init::sparse_random(tdm.n_docs(), k, tdm.n_docs() / 5, &mut rng);
+    let spmm_sparse_new = suite
+        .bench("stream_mul(sparse-V, touched-clear)", || {
+            ops::stream_mul_par_with(&tdm.a, &v_sparse, None, None, 1)
+        })
+        .median_s();
+    let spmm_sparse_ref = suite
+        .bench("stream_mul(sparse-V, reference)", || {
+            let mut cur = RowCursor::new();
+            let mut out = RowBlock::new(rows, k);
+            ops::reference::stream_mul_into_ref(
+                &tdm.a,
+                &v_sparse,
+                None,
+                None,
+                0,
+                rows,
+                &mut cur,
+                &mut out,
+            );
+            out
+        })
+        .median_s();
+    suite.metric("spmm.touched_clear_speedup_sparse", spmm_sparse_ref / spmm_sparse_new);
+    let gram_fast = suite.bench("gram(U, fast path)", || ops::gram(&u)).median_s();
+    let gram_ref = suite
+        .bench("gram(U, reference)", || ops::reference::gram_ref(&u))
+        .median_s();
+    suite.metric("gram.fastpath_speedup", gram_ref / gram_fast);
+    // the error trace at a wide rank (k = 64) on sparse factors — the
+    // regime where the old full-width scratch memset dominated
+    let kw = 64;
+    let uw = init::sparse_random(tdm.n_terms(), kw, tdm.n_terms() * 2, &mut rng);
+    let vw = init::sparse_random(tdm.n_docs(), kw, tdm.n_docs() * 2, &mut rng);
+    let trace_chunk = (tdm.n_terms() / 8).max(1);
+    let trace_new = suite
+        .bench("tr_cross(k=64 sparse, touched-clear)", || {
+            ops::tr_cross_source(&tdm.a, &uw, &vw, trace_chunk)
+        })
+        .median_s();
+    let trace_ref = suite
+        .bench("tr_cross(k=64 sparse, reference)", || {
+            ops::reference::tr_cross_source_ref(&tdm.a, &uw, &vw, trace_chunk)
+        })
+        .median_s();
+    suite.metric("error_trace.touched_clear_speedup", trace_ref / trace_new);
 
     // top-t selection: quickselect vs the paper's full sort
     let vals: Vec<f32> = (0..200_000).map(|_| rng.f32()).collect();

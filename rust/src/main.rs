@@ -15,6 +15,8 @@
 //! * `artifacts`  — inspect/smoke-test the compiled XLA artifacts.
 //! * `bench-check`— compare guarded metrics between two `BENCH_smoke.json`
 //!                  trajectory points (the CI memory-regression gate).
+//! * `bench-compare` — before/after markdown report over two trajectory
+//!                  points (the PGO lane's perf report; never gates).
 //!
 //! Every failure funnels through [`EsnmfError`], so the process exit code
 //! is the failure *category* (see `src/error.rs`): 2 = usage/config,
@@ -138,9 +140,18 @@ USAGE:
   bench-smoke trajectory documents and exits nonzero when any grew
   beyond the tolerance factor — the CI memory- and latency-regression
   gate (guards are substring matches; `p99_us` covers the serving-plane
-  latency metrics). A missing/empty --previous passes (no baseline
-  yet). `wall_s` guards the benchmark wall-time medians (use a looser
-  --tolerance for those — wall time is noisy in CI).
+  latency metrics). A missing --previous, or one whose "suites" map is
+  empty (the committed BENCH_smoke.json seed), records the current
+  document as the baseline and passes. `wall_s` guards the benchmark
+  wall-time medians (use a looser --tolerance for those — wall time is
+  noisy in CI).
+  esnmf bench-compare --before baseline.json --after BENCH_smoke.json
+                   [--guards wall_s] [--out report.md]
+
+  Prints (and with --out also writes) a before/after markdown table of
+  the guarded metrics of two trajectory documents — the report
+  scripts/perf_compare.sh and the CI PGO lane publish. Informational
+  only: it reports ratios, bench-check gates.
   esnmf help
 
 EXIT CODES:
@@ -178,6 +189,7 @@ fn run() -> CliResult {
         Some("gen-corpus") => cmd_gen_corpus(&mut args),
         Some("artifacts") => cmd_artifacts(&mut args),
         Some("bench-check") => cmd_bench_check(&mut args),
+        Some("bench-compare") => cmd_bench_compare(&mut args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -746,6 +758,17 @@ fn cmd_bench_check(args: &mut Args) -> CliResult {
             ))
         })?,
     };
+    // the committed seed trajectory is `{"suites": {}}` — a baseline
+    // with nothing recorded yet. The first gated run establishes the
+    // baseline: record and pass, explicitly, rather than letting the
+    // comparison succeed vacuously over zero shared metrics
+    if esnmf::util::bench::trajectory_is_empty(&prev) {
+        println!(
+            "bench-check: previous trajectory {previous} has no recorded suites; \
+             {current} becomes the baseline (record and pass)"
+        );
+        return Ok(());
+    }
     let cur = std::fs::read_to_string(&current)
         .map_err(|e| {
             EsnmfError::Other(format!(
@@ -778,6 +801,43 @@ fn cmd_bench_check(args: &mut Args) -> CliResult {
         "{} guarded metric(s) regressed",
         regressions.len()
     )))
+}
+
+/// Before/after markdown report over two trajectory documents. Purely
+/// informational — the PGO lane publishes this next to the gated
+/// `bench-check` so a human can see *how much* moved, not just whether
+/// the gate tripped.
+fn cmd_bench_compare(args: &mut Args) -> CliResult {
+    let before = args
+        .opt_str("before")
+        .ok_or_else(|| EsnmfError::usage(format!("--before required\n{USAGE}")))?;
+    let after = args
+        .opt_str("after")
+        .ok_or_else(|| EsnmfError::usage(format!("--after required\n{USAGE}")))?;
+    let guards = args.str_or("guards", "wall_s");
+    let out = args.opt_str("out");
+    args.check_unknown().map_err(EsnmfError::usage)?;
+
+    let read = |path: &str| -> Result<esnmf::util::json::Json, EsnmfError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            EsnmfError::Other(format!("bench-compare: cannot read trajectory {path}: {e}"))
+        })?;
+        esnmf::util::json::Json::parse(&text).map_err(|e| {
+            EsnmfError::Other(format!("bench-compare: trajectory {path} is corrupt: {e}"))
+        })
+    };
+    let before_doc = read(&before)?;
+    let after_doc = read(&after)?;
+    let guard_list: Vec<&str> = guards.split(',').map(str::trim).filter(|g| !g.is_empty()).collect();
+    let md = esnmf::util::bench::markdown_compare(&before_doc, &after_doc, &guard_list);
+    print!("{md}");
+    if let Some(path) = out {
+        std::fs::write(&path, &md).map_err(|e| {
+            EsnmfError::Other(format!("bench-compare: cannot write report {path}: {e}"))
+        })?;
+        println!("bench-compare: report written to {path}");
+    }
+    Ok(())
 }
 
 fn cmd_experiment(args: &mut Args) -> CliResult {

@@ -607,9 +607,7 @@ impl<'a> StreamCtx<'a> {
             |state, lo, hi| {
                 let (scratch, cur, sel) = state;
                 self.compute_block(lo, hi, cur, scratch);
-                for &v in &scratch.data {
-                    sel.offer(v);
-                }
+                sel.offer_all(&scratch.data);
                 scratch.stored_len()
             },
         );

@@ -113,8 +113,11 @@ impl FoldIn {
     /// As [`FoldIn::solve`] but through caller-pooled buffers: the solved
     /// row is left in (and returned as a view of) `scratch.x`, and no
     /// allocation happens once the scratch has warmed to size k. Results
-    /// are identical to `solve` — the buffers are cleared and refilled
-    /// exactly as the fresh allocations were.
+    /// are identical to `solve` — the accumulator keeps an all-zero
+    /// invariant between solves (the objective un-scatters exactly the
+    /// indices it touched, O(nnz) per solve instead of a k-wide memset —
+    /// see [`Objective::foldin_solve`](crate::nmf::objective::Objective)),
+    /// so a pooled solve reads the same state a fresh allocation would.
     pub fn solve_into<'s>(
         &self,
         u: &Csr,

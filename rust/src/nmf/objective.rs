@@ -163,7 +163,15 @@ pub trait Objective: Sync {
     /// fold-in. `doc` is (term row, count) pairs — out-of-range ids and
     /// non-positive counts must be ignored; the dense length-k result
     /// is left in `x` (non-negative, unenforced — the caller applies
-    /// the top-t budget). `b` is a reusable k-wide accumulator.
+    /// the top-t budget).
+    ///
+    /// `b` is a reusable k-wide accumulator with an **all-zero
+    /// invariant**: pass it fresh (empty) or only ever through this
+    /// method. Implementations scatter the doc's term rows into it and
+    /// un-scatter the same indices before returning — O(nnz) per solve
+    /// instead of a k-wide memset — so a pooled `b` must not be mutated
+    /// elsewhere between solves (a length mismatch, e.g. after a hot
+    /// model swap to a different rank, resets it wholesale).
     fn foldin_solve(
         &self,
         u: &Csr,
@@ -220,9 +228,15 @@ impl Objective for Frobenius {
     ) {
         let k = u.cols;
         debug_assert_eq!(aux.len(), k * k, "fold-in aux is the (k,k) Gram inverse");
+        if b.len() != k {
+            b.clear();
+            b.resize(k, 0.0);
+        }
+        debug_assert!(
+            b.iter().all(|&z| z == 0.0),
+            "pooled fold-in accumulator must keep its all-zero invariant"
+        );
         // b = aᵀ U — same accumulation order as ops::atb's sparse path
-        b.clear();
-        b.resize(k, 0.0);
         for &(term, count) in doc {
             if term >= u.rows || !count.is_finite() || count <= 0.0 {
                 continue;
@@ -246,6 +260,16 @@ impl Objective for Frobenius {
         for v in x.iter_mut() {
             if *v < 0.0 {
                 *v = 0.0;
+            }
+        }
+        // restore b's all-zero invariant at O(nnz): un-scatter exactly
+        // the term rows the accumulation pass touched
+        for &(term, count) in doc {
+            if term >= u.rows || !count.is_finite() || count <= 0.0 {
+                continue;
+            }
+            for &c in u.row(term).0 {
+                b[c as usize] = 0.0;
             }
         }
     }
@@ -295,12 +319,20 @@ impl Objective for KlDivergence {
         debug_assert_eq!(aux.len(), k, "fold-in aux is the per-topic column sums");
         // multiplicative updates from a uniform positive start (they
         // cannot leave zero); a fixed round budget keeps served answers
-        // deterministic. `b` is the numerator accumulator.
+        // deterministic. `b` is the numerator accumulator, holding the
+        // all-zero invariant between rounds and between solves (cleared
+        // by un-scattering the doc's term rows, never a k-wide memset).
+        if b.len() != k {
+            b.clear();
+            b.resize(k, 0.0);
+        }
+        debug_assert!(
+            b.iter().all(|&z| z == 0.0),
+            "pooled fold-in accumulator must keep its all-zero invariant"
+        );
         x.clear();
         x.resize(k, 1.0);
         for _ in 0..KL_FOLDIN_ROUNDS {
-            b.clear();
-            b.resize(k, 0.0);
             for &(term, count) in doc {
                 if term >= u.rows || !count.is_finite() || count <= 0.0 {
                     continue;
@@ -326,6 +358,16 @@ impl Objective for KlDivergence {
                 } else {
                     0.0
                 };
+            }
+            // un-scatter this round's numerator (a superset of what the
+            // pred > 0 gate actually wrote — clearing zeros is free)
+            for &(term, count) in doc {
+                if term >= u.rows || !count.is_finite() || count <= 0.0 {
+                    continue;
+                }
+                for &c in u.row(term).0 {
+                    b[c as usize] = 0.0;
+                }
             }
         }
     }
@@ -639,5 +681,41 @@ mod tests {
             &mut b,
         );
         assert!(x.iter().all(|&v| v == 0.0), "{x:?}");
+    }
+
+    #[test]
+    fn foldin_scratch_invariant_survives_pooling_across_objectives() {
+        // one pooled (x, b) pair alternating between both solvers must
+        // produce bit-identical results to fresh scratch every time —
+        // the O(nnz) un-scatter contract of foldin_solve, including the
+        // skip paths (out-of-range terms, non-positive counts) that must
+        // skip identically in the scatter and un-scatter passes
+        let mut rng = Rng::new(0x0b3);
+        let u = Csr::from_dense(15, 4, &prop::gen_sparse_dense(&mut rng, 15, 4, 0.5));
+        let docs: Vec<Vec<(usize, f32)>> = (0..12)
+            .map(|_| {
+                (0..rng.range(0, 6))
+                    .map(|_| (rng.below(18), rng.normal() as f32))
+                    .collect()
+            })
+            .collect();
+        let (mut x, mut b) = (Vec::new(), Vec::new());
+        for (d, doc) in docs.iter().enumerate() {
+            let kind = if d % 2 == 0 {
+                ObjectiveKind::Frobenius
+            } else {
+                ObjectiveKind::Kl
+            };
+            let obj = kind.implementation();
+            let aux = obj.step_aux(&u, 1);
+            obj.foldin_solve(&u, &aux, doc, &mut x, &mut b);
+            let (mut xf, mut bf) = (Vec::new(), Vec::new());
+            obj.foldin_solve(&u, &aux, doc, &mut xf, &mut bf);
+            assert_eq!(
+                x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                xf.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "doc {d} {kind:?}"
+            );
+        }
     }
 }

@@ -27,6 +27,15 @@ use crate::coordinator::pool;
 /// [`crate::coordinator::pool`].
 pub const GRAM_CHUNK_ROWS: usize = 1024;
 
+/// Accumulator lanes of the dense-factor SpMM fast path. The inner loop
+/// keeps a `[f32; ACC_LANES]` register partial per k-chunk — a fixed
+/// width the autovectorizer maps straight onto SIMD lanes instead of
+/// round-tripping every add through the k-wide scratch in memory. The
+/// value changes scheduling only, never bits: per output column the
+/// accumulation order over nonzeros is the same as the straight-line
+/// loop's (see [`reference`]).
+pub const ACC_LANES: usize = 8;
+
 /// Dense row-major copy of a factor when it is dense enough that the
 /// sparse row iteration's index indirection costs more than it saves.
 /// The dense inner loop is branch-free over k and auto-vectorizes.
@@ -52,11 +61,21 @@ pub fn dense_factor(x: &Csr) -> Option<Vec<f32>> {
 /// [`dense_factor`]).
 ///
 /// Replicates the pre-`RowSource` operators bit-for-bit: the SpMM body
-/// is the old `atb_into`/`ab_into` instruction sequence (including the
-/// dense/sparse `any`-row semantics), and the fused deflation reproduces
-/// `csr_times_small` + `rowblock_sub` exactly — down to the negation of
-/// deflation-only rows — so the blocked sequential solver emits the same
-/// bits the unfused pipeline did.
+/// reproduces the old `atb_into`/`ab_into` instruction sequence
+/// (including the dense/sparse `any`-row semantics), and the fused
+/// deflation reproduces `csr_times_small` + `rowblock_sub` exactly —
+/// down to the negation of deflation-only rows — so the blocked
+/// sequential solver emits the same bits the unfused pipeline did.
+///
+/// Restructured for speed (PR 9), bit-identical to
+/// [`reference::stream_mul_into_ref`]:
+/// * the dense-factor path accumulates through [`ACC_LANES`]-wide
+///   register partials over contiguous row-major factor strides — per
+///   output column the nonzeros are still summed in stored order, so
+///   the bits are unchanged;
+/// * the sparse-factor path stops memsetting the O(k) accumulator per
+///   row: it records the scattered indices and clears only those, making
+///   per-row cleanup O(nnz).
 #[allow(clippy::too_many_arguments)]
 pub fn stream_mul_into(
     s: &dyn RowSource,
@@ -69,79 +88,149 @@ pub fn stream_mul_into(
     out: &mut RowBlock,
 ) {
     assert_eq!(s.cols(), f.rows, "stream contraction mismatch");
-    if let Some((d, m)) = defl {
-        assert_eq!(d.rows, s.rows(), "deflation row mismatch");
-        assert_eq!(m.len(), d.cols * f.cols, "deflation matrix shape");
-    }
     out.clear();
     let k = f.cols;
     let view = s.load(lo, hi, cur);
     let mut acc = vec![0.0f32; k];
-    // only the sequential-ALS fuse pays for the deflation buffer
-    let mut dacc = if defl.is_some() {
-        vec![0.0f32; k]
-    } else {
-        Vec::new()
-    };
-    for j in lo..hi {
-        let (cols, vals) = view.row(j - lo);
-        let mut any = false;
-        if !cols.is_empty() {
-            acc.iter_mut().for_each(|x| *x = 0.0);
-            match f_dense {
-                Some(fd) => {
-                    for (&i, &aij) in cols.iter().zip(vals) {
-                        let frow = &fd[i as usize * k..(i as usize + 1) * k];
-                        for (slot, &fv) in acc.iter_mut().zip(frow) {
-                            *slot += aij * fv;
+    if let Some((d, m)) = defl {
+        assert_eq!(d.rows, s.rows(), "deflation row mismatch");
+        assert_eq!(m.len(), d.cols * f.cols, "deflation matrix shape");
+        // The sequential-ALS fuse (Eqs. 4.7/4.8) keeps the historical
+        // full-width loop: deflation rows overwrite the accumulator
+        // wholesale so touched-index hygiene cannot hold an all-zero
+        // invariant, and the path only ever runs with the tiny deflation
+        // ranks of sequential ALS.
+        let mut dacc = vec![0.0f32; k];
+        for j in lo..hi {
+            let (cols, vals) = view.row(j - lo);
+            let mut any = false;
+            if !cols.is_empty() {
+                acc.iter_mut().for_each(|x| *x = 0.0);
+                match f_dense {
+                    Some(fd) => {
+                        for (&i, &aij) in cols.iter().zip(vals) {
+                            let frow = &fd[i as usize * k..(i as usize + 1) * k];
+                            for (slot, &fv) in acc.iter_mut().zip(frow) {
+                                *slot += aij * fv;
+                            }
+                        }
+                        any = acc.iter().any(|&x| x != 0.0);
+                    }
+                    None => {
+                        for (&i, &aij) in cols.iter().zip(vals) {
+                            let (fidx, fval) = f.row(i as usize);
+                            for (&c, &fv) in fidx.iter().zip(fval) {
+                                acc[c as usize] += aij * fv;
+                                any = true;
+                            }
                         }
                     }
-                    any = acc.iter().any(|&x| x != 0.0);
                 }
-                None => {
-                    for (&i, &aij) in cols.iter().zip(vals) {
-                        let (fidx, fval) = f.row(i as usize);
-                        for (&c, &fv) in fidx.iter().zip(fval) {
-                            acc[c as usize] += aij * fv;
-                            any = true;
-                        }
+            }
+            let (didx, dval) = d.row(j);
+            if didx.is_empty() {
+                if any {
+                    out.push_row(j, &acc);
+                }
+                continue;
+            }
+            // the deflation row, accumulated exactly as csr_times_small does
+            dacc.iter_mut().for_each(|x| *x = 0.0);
+            for (&c, &v) in didx.iter().zip(dval) {
+                let mrow = &m[c as usize * k..(c as usize + 1) * k];
+                for (a, &mv) in dacc.iter_mut().zip(mrow) {
+                    *a += v * mv;
+                }
+            }
+            if any {
+                // both sides active: elementwise x − y (rowblock_sub's merge)
+                for (a, &dv) in acc.iter_mut().zip(&dacc) {
+                    *a -= dv;
+                }
+            } else {
+                // deflation-only row: rowblock_sub stores the negation
+                for (a, &dv) in acc.iter_mut().zip(&dacc) {
+                    *a = -dv;
+                }
+            }
+            out.push_row(j, &acc);
+        }
+        return;
+    }
+    match f_dense {
+        Some(fd) => {
+            // chunked-accumulator fast path: every non-empty row fully
+            // overwrites `acc`, so no clearing is needed at all
+            for j in lo..hi {
+                let (cols, vals) = view.row(j - lo);
+                if cols.is_empty() {
+                    continue;
+                }
+                gather_row_chunked(&mut acc, fd, k, cols, vals);
+                if acc.iter().any(|&x| x != 0.0) {
+                    out.push_row(j, &acc);
+                }
+            }
+        }
+        None => {
+            // scatter path over the sparse factor; `acc` holds an
+            // all-zero invariant between rows, restored at O(nnz) by
+            // clearing only the scattered indices
+            let mut touched: Vec<u32> = Vec::new();
+            for j in lo..hi {
+                let (cols, vals) = view.row(j - lo);
+                for (&i, &aij) in cols.iter().zip(vals) {
+                    let (fidx, fval) = f.row(i as usize);
+                    touched.extend_from_slice(fidx);
+                    for (&c, &fv) in fidx.iter().zip(fval) {
+                        acc[c as usize] += aij * fv;
                     }
                 }
+                if !touched.is_empty() {
+                    out.push_row(j, &acc);
+                }
+                // duplicate indices across factor rows are harmless here
+                // (clearing twice is still clearing)
+                for c in touched.drain(..) {
+                    acc[c as usize] = 0.0;
+                }
             }
         }
-        let Some((d, m)) = defl else {
-            if any {
-                out.push_row(j, &acc);
-            }
-            continue;
-        };
-        let (didx, dval) = d.row(j);
-        if didx.is_empty() {
-            if any {
-                out.push_row(j, &acc);
-            }
-            continue;
-        }
-        // the deflation row, accumulated exactly as csr_times_small does
-        dacc.iter_mut().for_each(|x| *x = 0.0);
-        for (&c, &v) in didx.iter().zip(dval) {
-            let mrow = &m[c as usize * k..(c as usize + 1) * k];
-            for (a, &mv) in dacc.iter_mut().zip(mrow) {
-                *a += v * mv;
-            }
-        }
-        if any {
-            // both sides active: elementwise x − y (rowblock_sub's merge)
-            for (a, &dv) in acc.iter_mut().zip(&dacc) {
-                *a -= dv;
-            }
-        } else {
-            // deflation-only row: rowblock_sub stores the negation
-            for (a, &dv) in acc.iter_mut().zip(&dacc) {
-                *a = -dv;
+    }
+}
+
+/// One output row of the dense-factor fast path:
+/// `acc[c] = Σ_p vals[p] · fd[cols[p]·k + c]`, computed [`ACC_LANES`]
+/// output columns at a time through a fixed-width register partial, with
+/// one variable-width pass for the k-remainder. Per output column the
+/// sum still runs over the nonzeros in stored order — exactly the order
+/// the straight-line loop uses — so the result bits are unchanged
+/// (pinned against [`reference::stream_mul_into_ref`] by the property
+/// suite). Overwrites all k entries of `acc`.
+#[inline]
+fn gather_row_chunked(acc: &mut [f32], fd: &[f32], k: usize, cols: &[u32], vals: &[f32]) {
+    let mut start = 0usize;
+    while start + ACC_LANES <= k {
+        let mut lanes = [0.0f32; ACC_LANES];
+        for (&i, &aij) in cols.iter().zip(vals) {
+            let base = i as usize * k + start;
+            for (lane, &fv) in lanes.iter_mut().zip(&fd[base..base + ACC_LANES]) {
+                *lane += aij * fv;
             }
         }
-        out.push_row(j, &acc);
+        acc[start..start + ACC_LANES].copy_from_slice(&lanes);
+        start += ACC_LANES;
+    }
+    if start < k {
+        let tail = k - start;
+        let mut lanes = [0.0f32; ACC_LANES];
+        for (&i, &aij) in cols.iter().zip(vals) {
+            let base = i as usize * k + start;
+            for (lane, &fv) in lanes.iter_mut().zip(&fd[base..base + tail]) {
+                *lane += aij * fv;
+            }
+        }
+        acc[start..].copy_from_slice(&lanes[..tail]);
     }
 }
 
@@ -276,15 +365,49 @@ fn concat_rowblocks(rows: usize, k: usize, blocks: Vec<RowBlock>) -> RowBlock {
 }
 
 /// Upper-triangle gram accumulation of rows `lo..hi` in f64.
+///
+/// Rows at least half-dense take a contiguous fast path: the row is
+/// scattered into a k-wide f64 scratch once, then each active column
+/// accumulates against the contiguous tail `scratch[ci..k]` — unit-stride
+/// loads the autovectorizer can chew on — instead of chasing the index
+/// list per pair. The fast path adds explicit products against absent
+/// columns, but those are all `±0.0` in f64 and provably cannot change
+/// any accumulator's bit pattern: every accumulator starts at `+0.0`,
+/// sums of finite nonzero-f32 products in f64 never produce `-0.0`
+/// (underflow is impossible at f64 range and `x + (-x)` rounds to
+/// `+0.0`), and adding `±0.0` to a value that is not `-0.0` is a bitwise
+/// no-op. Rows containing a non-finite or exact-zero stored value fall
+/// back to the all-pairs path (where `NaN·0.0 ≠ absent` and `-0.0`
+/// accumulators become possible), as do sparse rows where the scatter
+/// would dominate. Pinned bitwise against [`reference::gram_ref`].
 fn gram_chunk(x: &Csr, lo: usize, hi: usize) -> Vec<f64> {
     let k = x.cols;
     let mut g = vec![0.0f64; k * k];
+    let mut scratch = vec![0.0f64; k];
     for r in lo..hi {
         let (idx, val) = x.row(r);
-        for p in 0..idx.len() {
-            let (ci, vi) = (idx[p] as usize, val[p] as f64);
-            for q in p..idx.len() {
-                g[ci * k + idx[q] as usize] += vi * val[q] as f64;
+        let dense_ok = idx.len() * 2 >= k && val.iter().all(|v| v.is_finite() && *v != 0.0);
+        if dense_ok {
+            for (&c, &v) in idx.iter().zip(val) {
+                scratch[c as usize] = v as f64;
+            }
+            for (&c, &v) in idx.iter().zip(val) {
+                let ci = c as usize;
+                let vi = v as f64;
+                let grow = &mut g[ci * k + ci..(ci + 1) * k];
+                for (gv, &sv) in grow.iter_mut().zip(&scratch[ci..k]) {
+                    *gv += vi * sv;
+                }
+            }
+            for &c in idx {
+                scratch[c as usize] = 0.0;
+            }
+        } else {
+            for p in 0..idx.len() {
+                let (ci, vi) = (idx[p] as usize, val[p] as f64);
+                for q in p..idx.len() {
+                    g[ci * k + idx[q] as usize] += vi * val[q] as f64;
+                }
             }
         }
     }
@@ -336,6 +459,13 @@ pub fn tr_cross(a: &Csr, u: &Csr, v: &Csr) -> f64 {
 /// the backing storage) cannot change the result bits; resident corpus
 /// memory stays bounded by one chunk (plus the cursor's cached shard for
 /// store-backed sources).
+///
+/// The k-wide scatter scratch holds an all-zero invariant between rows:
+/// each row scatters its U entries in, reads them back through the dots,
+/// and un-scatters the same indices afterwards — O(nnz(U_i)) per row
+/// instead of the old O(k) memset (bit-identical: the scratch contents
+/// at dot time are unchanged; pinned against
+/// [`reference::tr_cross_source_ref`]).
 pub fn tr_cross_source(a: &dyn RowSource, u: &Csr, v: &Csr, chunk_rows: usize) -> f64 {
     assert_eq!(a.rows(), u.rows);
     assert_eq!(a.cols(), v.rows);
@@ -355,7 +485,6 @@ pub fn tr_cross_source(a: &dyn RowSource, u: &Csr, v: &Csr, chunk_rows: usize) -
             if uidx.is_empty() {
                 continue;
             }
-            scratch.iter_mut().for_each(|x| *x = 0.0);
             for (&c, &uv) in uidx.iter().zip(uval) {
                 scratch[c as usize] = uv;
             }
@@ -366,6 +495,10 @@ pub fn tr_cross_source(a: &dyn RowSource, u: &Csr, v: &Csr, chunk_rows: usize) -
                     dot += scratch[c as usize] as f64 * vv as f64;
                 }
                 acc += aij as f64 * dot;
+            }
+            // restore the all-zero invariant at O(nnz) cost
+            for &c in uidx {
+                scratch[c as usize] = 0.0;
             }
         }
     }
@@ -500,6 +633,166 @@ pub fn spmm(a: &Csr, b: &Csr) -> Csr {
         indptr,
         indices,
         values,
+    }
+}
+
+/// Straight-line pre-restructure implementations of the hot kernels.
+///
+/// The restructured kernels in this module's parent are required to be
+/// **bit-identical** to these: they are the oracle the property suite
+/// (`tests/prop_kernels.rs`) pins against, and the "before" side of the
+/// before/after points in `benches/micro_kernels.rs`. They intentionally
+/// preserve the original instruction sequences — full O(k) scratch
+/// clears per row, per-element k-wide memory accumulation in the
+/// dense-factor path, and the all-pairs gram scatter.
+pub mod reference {
+    use super::*;
+
+    /// Pre-restructure [`super::stream_mul_into`]: the original fused
+    /// SpMM/deflation loop with a full O(k) accumulator clear per row.
+    #[allow(clippy::too_many_arguments)]
+    pub fn stream_mul_into_ref(
+        s: &dyn RowSource,
+        f: &Csr,
+        f_dense: Option<&[f32]>,
+        defl: Option<(&Csr, &[f32])>,
+        lo: usize,
+        hi: usize,
+        cur: &mut RowCursor,
+        out: &mut RowBlock,
+    ) {
+        assert_eq!(s.cols(), f.rows, "stream contraction mismatch");
+        if let Some((d, m)) = defl {
+            assert_eq!(d.rows, s.rows(), "deflation row mismatch");
+            assert_eq!(m.len(), d.cols * f.cols, "deflation matrix shape");
+        }
+        out.clear();
+        let k = f.cols;
+        let view = s.load(lo, hi, cur);
+        let mut acc = vec![0.0f32; k];
+        let mut dacc = if defl.is_some() {
+            vec![0.0f32; k]
+        } else {
+            Vec::new()
+        };
+        for j in lo..hi {
+            let (cols, vals) = view.row(j - lo);
+            let mut any = false;
+            if !cols.is_empty() {
+                acc.iter_mut().for_each(|x| *x = 0.0);
+                match f_dense {
+                    Some(fd) => {
+                        for (&i, &aij) in cols.iter().zip(vals) {
+                            let frow = &fd[i as usize * k..(i as usize + 1) * k];
+                            for (slot, &fv) in acc.iter_mut().zip(frow) {
+                                *slot += aij * fv;
+                            }
+                        }
+                        any = acc.iter().any(|&x| x != 0.0);
+                    }
+                    None => {
+                        for (&i, &aij) in cols.iter().zip(vals) {
+                            let (fidx, fval) = f.row(i as usize);
+                            for (&c, &fv) in fidx.iter().zip(fval) {
+                                acc[c as usize] += aij * fv;
+                                any = true;
+                            }
+                        }
+                    }
+                }
+            }
+            let Some((d, m)) = defl else {
+                if any {
+                    out.push_row(j, &acc);
+                }
+                continue;
+            };
+            let (didx, dval) = d.row(j);
+            if didx.is_empty() {
+                if any {
+                    out.push_row(j, &acc);
+                }
+                continue;
+            }
+            dacc.iter_mut().for_each(|x| *x = 0.0);
+            for (&c, &v) in didx.iter().zip(dval) {
+                let mrow = &m[c as usize * k..(c as usize + 1) * k];
+                for (a, &mv) in dacc.iter_mut().zip(mrow) {
+                    *a += v * mv;
+                }
+            }
+            if any {
+                for (a, &dv) in acc.iter_mut().zip(&dacc) {
+                    *a -= dv;
+                }
+            } else {
+                for (a, &dv) in acc.iter_mut().zip(&dacc) {
+                    *a = -dv;
+                }
+            }
+            out.push_row(j, &acc);
+        }
+    }
+
+    /// Pre-restructure serial gram: all-pairs upper-triangle scatter per
+    /// row, fixed [`GRAM_CHUNK_ROWS`] chunks merged in ascending order.
+    pub fn gram_ref(x: &Csr) -> Vec<f32> {
+        let k = x.cols;
+        let partials = pool::fixed_chunks(x.rows, GRAM_CHUNK_ROWS)
+            .into_iter()
+            .map(|(lo, hi)| {
+                let mut g = vec![0.0f64; k * k];
+                for r in lo..hi {
+                    let (idx, val) = x.row(r);
+                    for p in 0..idx.len() {
+                        let (ci, vi) = (idx[p] as usize, val[p] as f64);
+                        for q in p..idx.len() {
+                            g[ci * k + idx[q] as usize] += vi * val[q] as f64;
+                        }
+                    }
+                }
+                g
+            })
+            .collect();
+        gram_merge(partials, k)
+    }
+
+    /// Pre-restructure [`super::tr_cross_source`]: full O(k) scratch
+    /// memset per streamed row.
+    pub fn tr_cross_source_ref(a: &dyn RowSource, u: &Csr, v: &Csr, chunk_rows: usize) -> f64 {
+        assert_eq!(a.rows(), u.rows);
+        assert_eq!(a.cols(), v.rows);
+        assert_eq!(u.cols, v.cols);
+        let k = u.cols;
+        let mut scratch = vec![0.0f32; k];
+        let mut acc = 0.0f64;
+        let mut cur = RowCursor::new();
+        for (lo, hi) in pool::fixed_chunks(a.rows(), chunk_rows) {
+            let view = a.load(lo, hi, &mut cur);
+            for i in lo..hi {
+                let (acols, avals) = view.row(i - lo);
+                if acols.is_empty() {
+                    continue;
+                }
+                let (uidx, uval) = u.row(i);
+                if uidx.is_empty() {
+                    continue;
+                }
+                scratch.iter_mut().for_each(|x| *x = 0.0);
+                for (&c, &uv) in uidx.iter().zip(uval) {
+                    scratch[c as usize] = uv;
+                }
+                for (&j, &aij) in acols.iter().zip(avals) {
+                    let (vidx, vval) = v.row(j as usize);
+                    let mut dot = 0.0f64;
+                    for (&c, &vv) in vidx.iter().zip(vval) {
+                        dot += scratch[c as usize] as f64 * vv as f64;
+                    }
+                    acc += aij as f64 * dot;
+                }
+            }
+        }
+        acc
     }
 }
 
@@ -791,6 +1084,85 @@ mod tests {
                 let got_bits: Vec<u32> = got.data.iter().map(|v| v.to_bits()).collect();
                 let want_bits: Vec<u32> = want.data.iter().map(|v| v.to_bits()).collect();
                 assert_eq!(got_bits, want_bits, "threads {threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn restructured_stream_mul_bit_matches_reference() {
+        // chunked dense accumulators + touched-index sparse clears vs the
+        // straight-line loop, across k widths below/at/above ACC_LANES,
+        // both factor layouts, and the fused deflation path
+        prop::check("stream-mul-vs-ref", 2300, 48, |rng: &mut Rng| {
+            let n = rng.range(1, 25);
+            let m = rng.range(1, 25);
+            let k = rng.range(1, 2 * ACC_LANES + 4);
+            let a = Csr::from_dense(n, m, &prop::gen_sparse_dense(rng, n, m, 0.3));
+            let f = Csr::from_dense(m, k, &prop::gen_sparse_dense(rng, m, k, 0.5));
+            let fd = dense_factor(&f);
+            let d = Csr::from_dense(n, 2, &prop::gen_sparse_dense(rng, n, 2, 0.4));
+            let mm: Vec<f32> = (0..2 * k).map(|_| rng.normal() as f32).collect();
+            for dense in [None, fd.as_deref()] {
+                for defl in [None, Some((&d, &mm[..]))] {
+                    let mut cur = RowCursor::new();
+                    let mut got = RowBlock::new(n, k);
+                    stream_mul_into(&a, &f, dense, defl, 0, n, &mut cur, &mut got);
+                    let mut cur = RowCursor::new();
+                    let mut want = RowBlock::new(n, k);
+                    reference::stream_mul_into_ref(&a, &f, dense, defl, 0, n, &mut cur, &mut want);
+                    assert_eq!(got.row_ids, want.row_ids);
+                    let got_bits: Vec<u32> = got.data.iter().map(|v| v.to_bits()).collect();
+                    let want_bits: Vec<u32> = want.data.iter().map(|v| v.to_bits()).collect();
+                    let case = (dense.is_some(), defl.is_some());
+                    assert_eq!(got_bits, want_bits, "case {case:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn gram_dense_fastpath_bit_matches_reference() {
+        prop::check("gram-vs-ref", 2400, 48, |rng: &mut Rng| {
+            let n = rng.range(1, 30);
+            let k = rng.range(1, 12);
+            // densities straddling the fast-path threshold
+            let density = [0.2, 0.5, 0.9][rng.range(0, 3)];
+            let x = Csr::from_dense(n, k, &prop::gen_sparse_dense(rng, n, k, density));
+            let want: Vec<u32> = reference::gram_ref(&x).iter().map(|v| v.to_bits()).collect();
+            for threads in [1usize, 2, 4, 7] {
+                let got: Vec<u32> = gram_par(&x, threads).iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, want, "threads {threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn gram_nonfinite_rows_fall_back_and_still_match_reference() {
+        // a NaN/inf stored value makes ±0.0 products NaN — the fast path
+        // must refuse such rows and take the all-pairs loop, which the
+        // reference runs unconditionally
+        let mut dense = vec![1.0f32; 12]; // 4 rows × k=3, fully dense
+        dense[1] = f32::NAN;
+        dense[7] = f32::INFINITY;
+        let x = Csr::from_dense(4, 3, &dense);
+        let got: Vec<u32> = gram(&x).iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = reference::gram_ref(&x).iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn tr_cross_touched_clear_bit_matches_reference() {
+        prop::check("tr-cross-vs-ref", 2500, 48, |rng: &mut Rng| {
+            let n = rng.range(1, 25);
+            let m = rng.range(1, 25);
+            let k = rng.range(1, 8);
+            let a = Csr::from_dense(n, m, &prop::gen_sparse_dense(rng, n, m, 0.4));
+            let u = Csr::from_dense(n, k, &prop::gen_sparse_dense(rng, n, k, 0.4));
+            let v = Csr::from_dense(m, k, &prop::gen_sparse_dense(rng, m, k, 0.6));
+            for chunk in [1usize, 3, n + 5] {
+                let got = tr_cross_source(&a, &u, &v, chunk);
+                let want = reference::tr_cross_source_ref(&a, &u, &v, chunk);
+                assert_eq!(got.to_bits(), want.to_bits(), "chunk {chunk}");
             }
         });
     }

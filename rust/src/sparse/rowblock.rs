@@ -8,7 +8,7 @@
 //! being dense keeps the small solve vectorizable.
 
 use super::csr::Csr;
-use super::ops::GRAM_CHUNK_ROWS;
+use super::ops::{ACC_LANES, GRAM_CHUNK_ROWS};
 use crate::coordinator::pool;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -84,6 +84,14 @@ impl RowBlock {
     /// `threads` scoped workers. Each row's product is computed with the
     /// same instruction sequence on any worker, so the result is
     /// bit-identical to serial at every thread count.
+    ///
+    /// The product accumulates through [`ACC_LANES`]-wide register
+    /// partials over contiguous strides of `m` (same restructure as the
+    /// SpMM dense path — see [`super::ops`]). Per output column the
+    /// inputs are still summed in ascending-`i` order, so the bits are
+    /// unchanged; the `ri != 0.0` skip is semantic, not a perf gate — a
+    /// degenerate Gram inverse can carry NaN rows that an explicit-zero
+    /// input row must not touch (`0.0 · NaN = NaN`).
     pub fn matmul_small_par(&mut self, m: &[f32], threads: usize) {
         let k = self.k;
         assert_eq!(m.len(), k * k);
@@ -93,14 +101,32 @@ impl RowBlock {
         pool::scoped_partition_map_mut(threads, &mut self.data, k, |_, piece| {
             let mut scratch = vec![0.0f32; k];
             for row in piece.chunks_exact_mut(k) {
-                scratch.iter_mut().for_each(|x| *x = 0.0);
-                for (i, &ri) in row.iter().enumerate() {
-                    if ri != 0.0 {
-                        let mrow = &m[i * k..(i + 1) * k];
-                        for (s, &mv) in scratch.iter_mut().zip(mrow) {
-                            *s += ri * mv;
+                let mut start = 0usize;
+                while start + ACC_LANES <= k {
+                    let mut lanes = [0.0f32; ACC_LANES];
+                    for (i, &ri) in row.iter().enumerate() {
+                        if ri != 0.0 {
+                            let mrow = &m[i * k + start..i * k + start + ACC_LANES];
+                            for (lane, &mv) in lanes.iter_mut().zip(mrow) {
+                                *lane += ri * mv;
+                            }
                         }
                     }
+                    scratch[start..start + ACC_LANES].copy_from_slice(&lanes);
+                    start += ACC_LANES;
+                }
+                if start < k {
+                    let tail = k - start;
+                    let mut lanes = [0.0f32; ACC_LANES];
+                    for (i, &ri) in row.iter().enumerate() {
+                        if ri != 0.0 {
+                            let mrow = &m[i * k + start..i * k + k];
+                            for (lane, &mv) in lanes.iter_mut().zip(mrow) {
+                                *lane += ri * mv;
+                            }
+                        }
+                    }
+                    scratch[start..].copy_from_slice(&lanes[..tail]);
                 }
                 row.copy_from_slice(&scratch);
             }

@@ -141,6 +141,35 @@ impl TopTSelector {
         self.insert(v);
     }
 
+    /// Bulk [`Self::offer`] over a candidate slice — the select pass of
+    /// every blocked half-step feeds whole scratch rows through here.
+    /// One tight scan with the heap-full rejection test (`v ≤ heap[0]`,
+    /// the overwhelmingly common case once the heap warms up) inlined
+    /// ahead of the insert machinery. Feeding values one at a time
+    /// through [`Self::offer`] produces the identical selector state:
+    /// the cutoff is an order statistic of the offered multiset either
+    /// way.
+    pub fn offer_all(&mut self, vals: &[f32]) {
+        if self.t == 0 {
+            // nothing is ever retained; only the positive count matters
+            self.positives += vals.iter().filter(|&&v| v > 0.0).count();
+            return;
+        }
+        for &v in vals {
+            if v <= 0.0 || v.is_nan() {
+                continue;
+            }
+            self.positives += 1;
+            if self.heap.len() < self.t {
+                self.heap.push(v);
+                self.sift_up(self.heap.len() - 1);
+            } else if v > self.heap[0] {
+                self.heap[0] = v;
+                self.sift_down();
+            }
+        }
+    }
+
     /// Merge a per-block selector built with the same `t`.
     pub fn absorb(&mut self, other: TopTSelector) {
         debug_assert_eq!(self.t, other.t, "selectors must share a budget");
@@ -664,6 +693,37 @@ mod tests {
             }
             left.absorb(right);
             assert_eq!(left.cutoff(), want, "t={t} split={split}");
+        });
+    }
+
+    #[test]
+    fn offer_all_matches_per_element_offers() {
+        prop::check("offer-all-vs-offer", 1900, 64, |rng: &mut Rng| {
+            let n = rng.range(0, 120);
+            let vals: Vec<f32> = (0..n)
+                .map(|_| {
+                    if rng.f64() < 0.2 {
+                        0.0
+                    } else if rng.f64() < 0.1 {
+                        -rng.f32()
+                    } else if rng.f64() < 0.05 {
+                        f32::NAN
+                    } else {
+                        rng.f32() * 10.0
+                    }
+                })
+                .collect();
+            let t = rng.range(0, n + 2);
+            let mut one_by_one = TopTSelector::new(t);
+            for &v in &vals {
+                one_by_one.offer(v);
+            }
+            // fed in two slices to exercise a warm heap mid-stream
+            let split = rng.range(0, n + 1);
+            let mut bulk = TopTSelector::new(t);
+            bulk.offer_all(&vals[..split]);
+            bulk.offer_all(&vals[split..]);
+            assert_eq!(bulk.cutoff(), one_by_one.cutoff(), "t={t} n={n}");
         });
     }
 

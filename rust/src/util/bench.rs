@@ -323,6 +323,64 @@ pub fn metric_regressions(
     out
 }
 
+/// True when a combined trajectory document has no recorded suites at
+/// all — the state of the committed `BENCH_smoke.json` seed before the
+/// first gated bench run. [`metric_regressions`] against such a baseline
+/// is vacuously empty (nothing to compare), so the CLI gate
+/// (`esnmf bench-check`) treats it as an explicit "record and pass":
+/// the current document becomes the trajectory's first real point
+/// instead of silently "passing" a comparison that never happened.
+pub fn trajectory_is_empty(doc: &Json) -> bool {
+    match doc.get("suites") {
+        Some(Json::Obj(suites)) => suites.is_empty(),
+        // absent or non-object: nothing recorded under it either way
+        _ => true,
+    }
+}
+
+/// Before/after markdown table over two combined trajectory documents
+/// (the `BENCH_smoke.json` schema) — the body of `esnmf bench-compare`
+/// and the report `scripts/perf_compare.sh` / `scripts/pgo.sh` emit.
+/// Rows cover every metric of `after` whose name contains any of the
+/// `guards` substrings (pass `["wall_s"]` for the wall-clock story, or
+/// an empty slice for everything); metrics new in `after` are marked
+/// `(new)`. `after/before < 1` means the current build is faster on
+/// lower-is-better metrics.
+pub fn markdown_compare(before: &Json, after: &Json, guards: &[&str]) -> String {
+    let mut out = String::new();
+    out.push_str("| metric | before | after | after/before |\n");
+    out.push_str("|---|---:|---:|---:|\n");
+    let Some(Json::Obj(after_suites)) = after.get("suites") else {
+        return out;
+    };
+    for (slug, suite) in after_suites {
+        let Some(Json::Obj(metrics)) = suite.get("metrics") else {
+            continue;
+        };
+        for (name, value) in metrics {
+            if !guards.is_empty() && !guards.iter().any(|g| name.contains(g)) {
+                continue;
+            }
+            let Some(cur) = value.as_f64() else { continue };
+            let prev = before
+                .get("suites")
+                .and_then(|s| s.get(slug))
+                .and_then(|s| s.get("metrics"))
+                .and_then(|m| m.get(name))
+                .and_then(Json::as_f64);
+            let row = match prev {
+                Some(p) if p > 0.0 => {
+                    format!("| {slug}.{name} | {p:.6} | {cur:.6} | {:.3} |\n", cur / p)
+                }
+                Some(p) => format!("| {slug}.{name} | {p:.6} | {cur:.6} | n/a |\n"),
+                None => format!("| {slug}.{name} | (new) | {cur:.6} | n/a |\n"),
+            };
+            out.push_str(&row);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -432,6 +490,38 @@ mod tests {
         let regs = metric_regressions(&prev, &slow, &["wall_s"], 5.0);
         assert_eq!(regs.len(), 1);
         assert_eq!(regs[0].path, "fig6.wall_s");
+    }
+
+    #[test]
+    fn empty_trajectory_is_detected_in_every_seed_shape() {
+        // the committed seed: schema header, no suites recorded yet
+        let seed = Json::parse(r#"{"schema":"esnmf-bench-smoke-v1","suites":{}}"#).unwrap();
+        assert!(trajectory_is_empty(&seed));
+        // degenerate shapes an old or hand-edited file might carry
+        assert!(trajectory_is_empty(&Json::parse("{}").unwrap()));
+        assert!(trajectory_is_empty(&Json::parse(r#"{"suites":3}"#).unwrap()));
+        // one recorded suite — even metric-less — is a real baseline
+        let recorded = Json::parse(r#"{"suites":{"micro":{"metrics":{}}}}"#).unwrap();
+        assert!(!trajectory_is_empty(&recorded));
+    }
+
+    #[test]
+    fn markdown_compare_reports_ratios_and_new_metrics() {
+        let before_text = r#"{"suites":{"micro":{"metrics":{"wall_s_spmm":2.0,"other":7.0}}}}"#;
+        let after_text =
+            r#"{"suites":{"micro":{"metrics":{"wall_s_spmm":1.0,"wall_s_gram":0.5,"other":9.0}}}}"#;
+        let before = Json::parse(before_text).unwrap();
+        let after = Json::parse(after_text).unwrap();
+        let md = markdown_compare(&before, &after, &["wall_s"]);
+        let spmm_row = "| micro.wall_s_spmm | 2.000000 | 1.000000 | 0.500 |";
+        let gram_row = "| micro.wall_s_gram | (new) | 0.500000 | n/a |";
+        assert!(md.contains(spmm_row), "{md}");
+        assert!(md.contains(gram_row), "{md}");
+        // the unguarded metric stays out of the wall-clock report…
+        assert!(!md.contains("other"), "{md}");
+        // …and an empty guard list includes everything
+        let all = markdown_compare(&before, &after, &[]);
+        assert!(all.contains("| micro.other | 7.000000 | 9.000000 | 1.286 |"), "{all}");
     }
 
     #[test]

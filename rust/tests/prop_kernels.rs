@@ -1,0 +1,179 @@
+//! Property suite for the restructured hot kernels (chunked-accumulator
+//! SpMM, dense-gather gram fast path, touched-index scratch clears):
+//! every kernel is pinned bit-for-bit against its straight-line
+//! reference in [`esnmf::sparse::ops::reference`], and the solver-level
+//! determinism digest is pinned across every in-process execution mode
+//! — threads × block heights × objectives, plus the sequential solver's
+//! thread contract. (The distributed mode's digest equivalence lives in
+//! `integration_distributed.rs` and the CI distributed-smoke job, which
+//! diff the same [`NmfResult::digest`] across worker counts.)
+
+use esnmf::corpus::words;
+use esnmf::corpus::{generate_tdm, CorpusSpec, TopicSpec};
+use esnmf::nmf::{
+    factorize, factorize_sequential, NmfOptions, ObjectiveKind, SequentialOptions, SparsityMode,
+};
+use esnmf::sparse::ops::{self, reference};
+use esnmf::sparse::{Csr, RowBlock, RowCursor};
+use esnmf::util::prop;
+use esnmf::util::rng::Rng;
+
+/// Thread counts the contracts are pinned at: serial, even split,
+/// typical small machine, and a prime that leaves ragged ranges.
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+/// Block heights the blocked streaming contract is pinned at: single
+/// row, a prime (ragged final block), auto, and one-block/unblocked.
+const BLOCK_ROWS: [usize; 4] = [1, 7, 0, usize::MAX];
+
+/// A small random corpus — deliberately tiny so the full execution-mode
+/// cross product stays fast.
+fn tiny_corpus(rng: &mut Rng) -> esnmf::text::TermDocMatrix {
+    let spec = CorpusSpec {
+        name: "prop-kernels".into(),
+        topics: vec![
+            TopicSpec { name: "coffee".into(), seeds: words::COFFEE.to_vec() },
+            TopicSpec { name: "science".into(), seeds: words::SCIENCE.to_vec() },
+        ],
+        n_docs: rng.range(20, 45),
+        doc_len_mean: rng.range(12, 30),
+        topic_tail: rng.range(10, 30),
+        background_tail: rng.range(10, 25),
+        background_frac: 0.2 + rng.f64() * 0.3,
+        mixture: rng.f64() * 0.3,
+        zipf_s: 1.0 + rng.f64() * 0.2,
+    };
+    generate_tdm(&spec, rng.next_u64())
+}
+
+fn bits(data: &[f32]) -> Vec<u32> {
+    data.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn restructured_spmm_bit_matches_reference_at_every_thread_count() {
+    // the chunked-accumulator / touched-clear SpMM, driven through the
+    // public parallel entry point, against the pre-restructure loop:
+    // both factor layouts (sparse scatter and dense gather), with and
+    // without the fused sequential-ALS deflation, at every pinned
+    // thread count — row ids and f32 bit patterns must agree exactly
+    prop::check("prop-kernels-spmm", 0x9A01, 12, |rng: &mut Rng| {
+        let n = rng.range(1, 40);
+        let m = rng.range(1, 30);
+        let k = rng.range(1, 2 * ops::ACC_LANES + 4);
+        let a = Csr::from_dense(n, m, &prop::gen_sparse_dense(rng, n, m, 0.3));
+        let f = Csr::from_dense(m, k, &prop::gen_sparse_dense(rng, m, k, 0.6));
+        let fd = ops::dense_factor(&f);
+        let d = Csr::from_dense(n, 2, &prop::gen_sparse_dense(rng, n, 2, 0.4));
+        let mm: Vec<f32> = (0..2 * k).map(|_| rng.normal() as f32).collect();
+        for dense in [None, fd.as_deref()] {
+            for defl in [None, Some((&d, &mm[..]))] {
+                let mut cur = RowCursor::new();
+                let mut want = RowBlock::new(n, k);
+                reference::stream_mul_into_ref(&a, &f, dense, defl, 0, n, &mut cur, &mut want);
+                let case = (dense.is_some(), defl.is_some());
+                for &threads in &THREAD_COUNTS {
+                    let got = ops::stream_mul_par_with(&a, &f, dense, defl, threads);
+                    assert_eq!(got.row_ids, want.row_ids, "rows {case:?} threads {threads}");
+                    assert_eq!(
+                        bits(&got.data),
+                        bits(&want.data),
+                        "data {case:?} threads {threads}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn restructured_gram_and_error_trace_bit_match_reference() {
+    // the gram dense-gather fast path (and its sparse fallback) against
+    // the all-pairs reference at every thread count, and the
+    // touched-clear error trace against the full-memset reference at
+    // several chunkings — exact f32/f64 bit equality
+    prop::check("prop-kernels-gram-trace", 0x9A02, 12, |rng: &mut Rng| {
+        let n = rng.range(1, 35);
+        let k = rng.range(1, 12);
+        let density = [0.2, 0.5, 0.9][rng.range(0, 3)];
+        let x = Csr::from_dense(n, k, &prop::gen_sparse_dense(rng, n, k, density));
+        let want = bits(&reference::gram_ref(&x));
+        for &threads in &THREAD_COUNTS {
+            let got = bits(&ops::gram_par(&x, threads));
+            assert_eq!(got, want, "gram density {density} threads {threads}");
+        }
+
+        let m = rng.range(1, 25);
+        let a = Csr::from_dense(n, m, &prop::gen_sparse_dense(rng, n, m, 0.4));
+        let u = Csr::from_dense(n, k, &prop::gen_sparse_dense(rng, n, k, 0.5));
+        let v = Csr::from_dense(m, k, &prop::gen_sparse_dense(rng, m, k, 0.5));
+        for chunk_rows in [1, 3, n + 5] {
+            let got = ops::tr_cross_source(&a, &u, &v, chunk_rows);
+            let want = reference::tr_cross_source_ref(&a, &u, &v, chunk_rows);
+            assert_eq!(got.to_bits(), want.to_bits(), "tr_cross chunk {chunk_rows}");
+        }
+    });
+}
+
+#[test]
+fn digest_is_stable_across_every_execution_mode() {
+    // the determinism contract at solver level: one digest per
+    // (corpus, options) no matter how the work is scheduled — every
+    // (threads, block_rows) pair, blocked and unblocked, under both
+    // objectives. This is exactly the value the CI distributed-smoke
+    // job diffs between a single process and an N-worker cluster.
+    prop::check("prop-kernels-digest", 0x9A03, 3, |rng: &mut Rng| {
+        let tdm = tiny_corpus(rng);
+        let k = rng.range(2, 5);
+        let seed = rng.next_u64();
+        let t_u = rng.range(k, 120);
+        let t_v = rng.range(k, 200);
+        for objective in [ObjectiveKind::Frobenius, ObjectiveKind::Kl] {
+            let base = NmfOptions::new(k)
+                .with_iters(3)
+                .with_seed(seed)
+                .with_sparsity(SparsityMode::both(t_u, t_v))
+                .with_objective(objective)
+                .with_track_error(true)
+                .with_threads(1)
+                .with_block_rows(usize::MAX);
+            let want = factorize(&tdm, &base).digest();
+            for &threads in &THREAD_COUNTS[..3] {
+                for &block_rows in &BLOCK_ROWS {
+                    let r = factorize(
+                        &tdm,
+                        &base.clone().with_threads(threads).with_block_rows(block_rows),
+                    );
+                    assert_eq!(
+                        r.digest(),
+                        want,
+                        "objective {objective:?} threads {threads} block_rows {block_rows}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn sequential_solver_digest_is_stable_across_threads_and_blocks() {
+    // the sequential (deflation) solver produces a *different* result
+    // from standard ALS by design, but its own digest must not observe
+    // the thread count or the streaming block height either — this is
+    // the path whose fused deflation SpMM kept the historical loop
+    prop::check("prop-kernels-seq-digest", 0x9A04, 3, |rng: &mut Rng| {
+        let tdm = tiny_corpus(rng);
+        let seed = rng.next_u64();
+        let base = SequentialOptions::new(4, 2).with_budgets(8, 40).with_seed(seed);
+        let want = factorize_sequential(&tdm, &base.clone().with_threads(1)).digest();
+        for &threads in &THREAD_COUNTS[1..] {
+            for &block_rows in &BLOCK_ROWS {
+                let r = factorize_sequential(
+                    &tdm,
+                    &base.clone().with_threads(threads).with_block_rows(block_rows),
+                );
+                assert_eq!(r.digest(), want, "threads {threads} block_rows {block_rows}");
+            }
+        }
+    });
+}

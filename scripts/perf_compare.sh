@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# Before/after markdown report over two bench trajectory documents
+# (BENCH_smoke.json-shaped), via `esnmf bench-compare`.
+#
+#   usage: perf_compare.sh before.json after.json [report.md]
+#
+# Informational only — it reports ratios, `esnmf bench-check` gates.
+# Set ESNMF_BIN to a prebuilt binary to skip the cargo build; set
+# PERF_GUARDS to change the metric filter (default wall_s).
+set -euo pipefail
+
+root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+usage="usage: perf_compare.sh before.json after.json [report.md]"
+before_arg="${1:?$usage}"
+after_arg="${2:?$usage}"
+out_arg="${3:-}"
+
+# absolutize: the cargo fallback below runs from rust/, so relative
+# operands from the caller's directory must be resolved first
+abspath() {
+  case "$1" in
+    /*) printf '%s\n' "$1" ;;
+    *) printf '%s/%s\n' "$(cd "$(dirname "$1")" && pwd)" "$(basename "$1")" ;;
+  esac
+}
+before="$(abspath "$before_arg")"
+after="$(abspath "$after_arg")"
+
+run_esnmf() {
+  if [ -n "${ESNMF_BIN:-}" ]; then
+    "$ESNMF_BIN" "$@"
+  else
+    (cd "$root/rust" && cargo run --release --quiet -- "$@")
+  fi
+}
+
+set -- bench-compare --before "$before" --after "$after" --guards "${PERF_GUARDS:-wall_s}"
+if [ -n "$out_arg" ]; then
+  mkdir -p "$(dirname "$out_arg")"
+  out="$(cd "$(dirname "$out_arg")" && pwd)/$(basename "$out_arg")"
+  run_esnmf "$@" --out "$out"
+else
+  run_esnmf "$@"
+fi

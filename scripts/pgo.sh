@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# PGO build lane for the esnmf hot kernels.
+#
+#   1. baseline:   plain release bench pass        -> pgo-out/before.json
+#   2. instrument: -Cprofile-generate rebuild, profiled on the same
+#                  micro-kernel bench corpus the wall-clock gate runs
+#   3. merge:      llvm-profdata merge             -> pgo-out/esnmf.profdata
+#   4. optimize:   -Cprofile-use rebuild, re-bench -> pgo-out/after.json
+#   5. report:     scripts/perf_compare.sh         -> pgo-out/report.md
+#
+# The report is informational — the CI pgo job is non-blocking; the
+# gated wall-clock trajectory lives in the bench-smoke job. Set
+# BENCH_SMOKE=0 for full-size (slow, more representative) profiling.
+set -euo pipefail
+
+root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$root/rust"
+
+out="${PGO_OUT:-$root/rust/pgo-out}"
+profdir="$out/profraw"
+rm -rf "$out"
+mkdir -p "$profdir"
+
+# locate llvm-profdata: PATH first, then the rustup llvm-tools component
+# inside the active toolchain's sysroot
+llvm_profdata="$(command -v llvm-profdata || true)"
+if [ -z "$llvm_profdata" ]; then
+  sysroot="$(rustc --print sysroot)"
+  llvm_profdata="$(find "$sysroot" -name llvm-profdata -type f 2>/dev/null | head -n1 || true)"
+fi
+if [ -z "$llvm_profdata" ]; then
+  echo "pgo.sh: llvm-profdata not found — install the llvm-tools rustup" >&2
+  echo "        component (rustup component add llvm-tools) or put LLVM on PATH" >&2
+  exit 2
+fi
+
+export BENCH_SMOKE="${BENCH_SMOKE:-1}"
+
+echo "== pgo.sh: baseline bench (plain release) =="
+ESNMF_BENCH_COMBINED="$out/before.json" cargo bench --bench micro_kernels
+# the CLI for the final report, built now so the profile-use rebuild
+# below (which only touches lib + bench targets) can't recompile it
+cargo build --release --quiet
+
+echo "== pgo.sh: instrumented build + profiling pass =="
+RUSTFLAGS="-Cprofile-generate=$profdir" \
+  LLVM_PROFILE_FILE="$profdir/esnmf-%p-%m.profraw" \
+  ESNMF_BENCH_COMBINED="" \
+  cargo bench --bench micro_kernels
+"$llvm_profdata" merge -o "$out/esnmf.profdata" "$profdir"/*.profraw
+
+echo "== pgo.sh: profile-guided rebuild + bench =="
+RUSTFLAGS="-Cprofile-use=$out/esnmf.profdata" \
+  ESNMF_BENCH_COMBINED="$out/after.json" \
+  cargo bench --bench micro_kernels
+
+echo "== pgo.sh: before/after report =="
+ESNMF_BIN="$root/rust/target/release/esnmf" "$root/scripts/perf_compare.sh" \
+  "$out/before.json" "$out/after.json" "$out/report.md"
+echo "pgo.sh: report at $out/report.md"
