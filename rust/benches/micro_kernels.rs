@@ -205,6 +205,35 @@ fn main() {
         .median_s();
     suite.metric("half_step_v.blocked_over_unblocked", half_blocked / half_unblocked);
 
+    // disabled-tracing overhead contract: the same kernel with a trace
+    // span around every call vs without. Tracing stays off, so each span
+    // costs one relaxed counter bump + branch; the CI gate is
+    // `bench-check --absolute trace.overhead_x=1.05`. Measured as the
+    // median of interleaved round ratios (robust to smoke mode's single
+    // suite sample) rather than two far-apart suite timings.
+    assert!(
+        !esnmf::util::trace::enabled(),
+        "overhead_x measures the *disabled* span path"
+    );
+    let mut ratios: Vec<f64> = (0..9)
+        .map(|_| {
+            use std::hint::black_box;
+            let t = std::time::Instant::now();
+            for _ in 0..8 {
+                black_box(ops::gram(black_box(&u)));
+            }
+            let bare = t.elapsed().as_secs_f64();
+            let t = std::time::Instant::now();
+            for _ in 0..8 {
+                let _span = esnmf::util::trace::span("bench_overhead");
+                black_box(ops::gram(black_box(&u)));
+            }
+            t.elapsed().as_secs_f64() / bare.max(f64::MIN_POSITIVE)
+        })
+        .collect();
+    ratios.sort_by(|a, b| a.total_cmp(b));
+    suite.metric("trace.overhead_x", ratios[ratios.len() / 2]);
+
     // serial/parallel speedups at 4 workers — the numbers the parallel
     // hot path exists for (>1.5x expected on the SpMM and enforcement
     // kernels at the PubMed preset size)

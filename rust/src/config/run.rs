@@ -95,6 +95,12 @@ pub struct RunConfig {
     /// seconds to wait for workers to join, and the per-roundtrip read
     /// deadline after which a worker counts as dead (`--dist-timeout`)
     pub dist_timeout_s: u64,
+    /// enable the in-memory trace ring for this run without a file sink
+    /// (`[trace] enabled`); implied by `trace_path`
+    pub trace_enabled: bool,
+    /// stream structured trace events (versioned JSONL) to this file
+    /// during factorization (`--trace` / `[trace] path`)
+    pub trace_path: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -137,6 +143,8 @@ impl Default for RunConfig {
             dist_workers: 2,
             dist_listen: "127.0.0.1:7611".into(),
             dist_timeout_s: 30,
+            trace_enabled: false,
+            trace_path: None,
         }
     }
 }
@@ -259,7 +267,18 @@ impl RunConfig {
         if let Some(v) = f.u64("distributed.timeout_s") {
             self.dist_timeout_s = v;
         }
+        if let Some(v) = f.bool("trace.enabled") {
+            self.trace_enabled = v;
+        }
+        if let Some(v) = f.str("trace.path") {
+            self.trace_path = Some(v.to_string());
+        }
         Ok(())
+    }
+
+    /// Whether this run should record trace events at all.
+    pub fn tracing(&self) -> bool {
+        self.trace_enabled || self.trace_path.is_some()
     }
 
     /// Resolve the distributed-coordinator knobs into [`DistOptions`].
@@ -507,6 +526,23 @@ mod tests {
         let f = ConfigFile::parse("[serve]\nadmin_port = 70000\n").unwrap();
         let mut cfg = RunConfig::default();
         assert!(cfg.apply_file(&f).is_err());
+    }
+
+    #[test]
+    fn trace_knobs_from_file() {
+        let f = ConfigFile::parse("[trace]\npath = run.trace.jsonl\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.trace_path.as_deref(), Some("run.trace.jsonl"));
+        assert!(cfg.tracing(), "a path implies tracing");
+        // ring-only tracing, no sink
+        let f = ConfigFile::parse("[trace]\nenabled = true\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert!(cfg.trace_enabled && cfg.trace_path.is_none());
+        assert!(cfg.tracing());
+        // default: off
+        assert!(!RunConfig::default().tracing());
     }
 
     #[test]

@@ -1,18 +1,30 @@
-//! Localhost admin/observability listener (`esnmf serve --admin-port`).
+//! Localhost admin/observability listener, shared by the serving plane
+//! (`esnmf serve --admin-port`) and the solver plane
+//! (`esnmf factorize --admin-port`).
 //!
-//! A second, operator-facing TCP endpoint that shares the
-//! [`ServerState`] with the data plane but never competes with user
-//! traffic for its worker pool:
+//! A second, operator-facing TCP endpoint that shares process state with
+//! the data plane but never competes with user traffic for its worker
+//! pool:
 //!
 //! ```text
-//! HEALTH          → "OK up generation=<g> requests=<n>"
+//! HEALTH          → "OK up generation=<g> requests=<n>" (serve)
+//!                   "OK up spans_entered=<n>"           (factorize)
 //! READY           → "OK ready generation=<g>" | "ERR not ready: <why>"
 //! METRICS         → Prometheus text exposition, terminated by "# EOF"
+//! PROGRESS        → "OK running iteration=<i>/<n> residual=<r> ..." (any plane)
+//! TRACEDUMP       → trace-ring JSONL snapshot, terminated by "# EOF"
 //! PROVENANCE      → "OK path=... crc32=... digest=... k=... ..." (one line)
 //! RELOAD <path>   → "OK swapped generation=<g> k=<k>" | "ERR reload failed: ..."
 //! PING            → "OK pong"
 //! QUIT            → closes the connection
 //! ```
+//!
+//! Which commands answer depends on the plane: each listener serves an
+//! [`AdminSurface`] that handles its own commands and declines the rest
+//! (`ERR unsupported command on this plane`). `PING`, `PROGRESS`, and
+//! `TRACEDUMP` read process-global state (the trace ring and progress
+//! atomics in [`crate::util::trace`]) and are answered uniformly by the
+//! shared dispatcher before the surface is consulted.
 //!
 //! `READY` tracks [`ServerState::ready`]: it flips false on a recorded
 //! corpus-store fault and recovers on the next successful swap. A failed
@@ -26,8 +38,11 @@
 //! Binding is restricted to loopback by the driver; the listener itself
 //! also refuses non-loopback addresses as defense in depth.
 
+use super::metrics;
 use super::server::ServerState;
+use crate::io::store::ResidentCounter;
 use crate::io::wire::{is_timeout, AdminRequest, LineReader};
+use crate::util::trace;
 use crate::Result;
 use std::io::{ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
@@ -43,77 +58,151 @@ const READ_POLL: Duration = Duration::from_millis(50);
 /// reading gets disconnected instead of wedging the admin thread.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// Answer one admin command line. Pure request → response (no I/O), so
-/// unit tests drive the full command surface without a socket.
-pub fn admin_command(state: &ServerState, line: &str) -> String {
+/// One plane's answers to admin commands. Return `None` for commands
+/// the plane doesn't support; the dispatcher renders the refusal so
+/// every listener declines uniformly.
+pub trait AdminSurface: Send + Sync {
+    fn admin(&self, req: &AdminRequest) -> Option<String>;
+}
+
+/// Answer one admin command line against `surface`. Pure request →
+/// response (no I/O), so unit tests drive the full command surface
+/// without a socket.
+pub fn dispatch_line(surface: &dyn AdminSurface, line: &str) -> String {
     let req = match AdminRequest::parse(line.trim()) {
         Ok(req) => req,
         // a parse failure IS the response line (wire-layer contract)
         Err(err) => return err,
     };
+    // plane-independent commands: these read process-global state and
+    // must answer identically on every listener
     match req {
-        AdminRequest::Health => format!(
-            "OK up generation={} requests={}",
-            state.generation(),
-            state.metrics.counter("server.requests").get()
-        ),
-        AdminRequest::Ready => {
-            if state.ready() {
-                format!("OK ready generation={}", state.generation())
-            } else {
-                let why = state
-                    .fault_message()
-                    .unwrap_or_else(|| "no servable model".into());
-                format!("ERR not ready: {why}")
+        AdminRequest::Ping => return "OK pong".into(),
+        AdminRequest::Progress => return trace::progress::render(),
+        // multi-line: readers consume until the `# EOF` terminator
+        AdminRequest::TraceDump => return format!("{}# EOF", trace::ring_jsonl()),
+        _ => {}
+    }
+    surface
+        .admin(&req)
+        .unwrap_or_else(|| "ERR unsupported command on this plane".into())
+}
+
+/// Serving-plane compatibility wrapper around [`dispatch_line`].
+pub fn admin_command(state: &ServerState, line: &str) -> String {
+    dispatch_line(state, line)
+}
+
+impl AdminSurface for ServerState {
+    fn admin(&self, req: &AdminRequest) -> Option<String> {
+        Some(match req {
+            AdminRequest::Health => format!(
+                "OK up generation={} requests={}",
+                self.generation(),
+                self.metrics.counter("server.requests").get()
+            ),
+            AdminRequest::Ready => {
+                if self.ready() {
+                    format!("OK ready generation={}", self.generation())
+                } else {
+                    let why = self
+                        .fault_message()
+                        .unwrap_or_else(|| "no servable model".into());
+                    format!("ERR not ready: {why}")
+                }
             }
-        }
-        // multi-line: scrapers read until the `# EOF` terminator
-        AdminRequest::Metrics => format!("{}# EOF", state.metrics.prometheus()),
-        AdminRequest::Provenance => {
-            let active = state.active();
-            let p = &active.provenance;
-            fn opt<T: std::fmt::Display>(v: &Option<T>) -> String {
-                v.as_ref().map_or_else(|| "-".into(), |x| x.to_string())
-            }
-            format!(
-                "OK path={} crc32={} digest={} k={} terms={} docs={} \
-                 sparsity={} options={} objective={} foldin_t={} loaded_unix_ms={} generation={}",
-                opt(&p.path),
-                p.file_crc32
-                    .map_or_else(|| "-".into(), |c| format!("{c:#010x}")),
-                p.corpus_digest
-                    .map_or_else(|| "-".into(), |d| format!("{d:#018x}")),
-                p.k,
-                p.n_terms,
-                p.n_docs,
-                p.sparsity,
-                p.options,
-                p.objective,
-                opt(&p.foldin_t),
-                p.loaded_unix_ms,
-                active.generation,
-            )
-        }
-        AdminRequest::Reload { path } => match state.swap_model(std::path::Path::new(&path)) {
-            Ok(active) => {
-                crate::log_info!(
-                    "admin",
-                    "hot-swapped model from {path} (generation {})",
-                    active.generation
-                );
+            // multi-line: scrapers read until the `# EOF` terminator
+            AdminRequest::Metrics => format!("{}# EOF", self.metrics.prometheus()),
+            AdminRequest::Provenance => {
+                let active = self.active();
+                let p = &active.provenance;
+                fn opt<T: std::fmt::Display>(v: &Option<T>) -> String {
+                    v.as_ref().map_or_else(|| "-".into(), |x| x.to_string())
+                }
                 format!(
-                    "OK swapped generation={} k={}",
+                    "OK path={} crc32={} digest={} k={} terms={} docs={} \
+                     sparsity={} options={} objective={} foldin_t={} loaded_unix_ms={} generation={}",
+                    opt(&p.path),
+                    p.file_crc32
+                        .map_or_else(|| "-".into(), |c| format!("{c:#010x}")),
+                    p.corpus_digest
+                        .map_or_else(|| "-".into(), |d| format!("{d:#018x}")),
+                    p.k,
+                    p.n_terms,
+                    p.n_docs,
+                    p.sparsity,
+                    p.options,
+                    p.objective,
+                    opt(&p.foldin_t),
+                    p.loaded_unix_ms,
                     active.generation,
-                    active.model.k()
                 )
             }
-            Err(e) => format!("ERR reload failed: {e}"),
-        },
-        AdminRequest::Ping => "OK pong".into(),
+            AdminRequest::Reload { path } => match self.swap_model(std::path::Path::new(path)) {
+                Ok(active) => {
+                    crate::log_info!(
+                        "admin",
+                        "hot-swapped model from {path} (generation {})",
+                        active.generation
+                    );
+                    format!(
+                        "OK swapped generation={} k={}",
+                        active.generation,
+                        active.model.k()
+                    )
+                }
+                Err(e) => format!("ERR reload failed: {e}"),
+            },
+            AdminRequest::Ping | AdminRequest::Progress | AdminRequest::TraceDump => {
+                return None; // handled by the dispatcher
+            }
+        })
     }
 }
 
-fn admin_conn(stream: TcpStream, state: &ServerState, stop: &AtomicBool) {
+/// Admin surface for a `factorize` run (local or distributed
+/// coordinator). Serves the process-global metrics registry — where the
+/// distributed per-worker counters and kernel telemetry live — plus
+/// out-of-core store gauges sampled from the shared
+/// [`ResidentCounter`] at scrape time.
+pub struct FactorizeAdmin {
+    resident: Option<Arc<ResidentCounter>>,
+}
+
+impl FactorizeAdmin {
+    pub fn new(resident: Option<Arc<ResidentCounter>>) -> Self {
+        FactorizeAdmin { resident }
+    }
+}
+
+impl AdminSurface for FactorizeAdmin {
+    fn admin(&self, req: &AdminRequest) -> Option<String> {
+        match req {
+            AdminRequest::Health => {
+                Some(format!("OK up spans_entered={}", trace::spans_entered()))
+            }
+            AdminRequest::Metrics => {
+                let reg = metrics::global();
+                if let Some(r) = &self.resident {
+                    // sampled at scrape time: the solver never touches
+                    // the registry on its read path
+                    let clamp = |v: u64| v.min(i64::MAX as u64) as i64;
+                    reg.gauge("store.resident_bytes")
+                        .set(clamp(r.current() as u64));
+                    reg.gauge("store.resident_peak_bytes")
+                        .set(clamp(r.peak() as u64));
+                    reg.gauge("store.shard_reads_hit").set(clamp(r.cache_hits()));
+                    reg.gauge("store.shard_reads_miss")
+                        .set(clamp(r.cache_misses()));
+                }
+                Some(format!("{}# EOF", reg.prometheus()))
+            }
+            _ => None,
+        }
+    }
+}
+
+fn admin_conn(stream: TcpStream, surface: &dyn AdminSurface, stop: &AtomicBool) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(READ_POLL));
     let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
@@ -142,7 +231,7 @@ fn admin_conn(stream: TcpStream, state: &ServerState, stop: &AtomicBool) {
             let _ = writeln!(writer, "OK bye");
             return;
         }
-        let response = admin_command(state, line);
+        let response = dispatch_line(surface, line);
         if writeln!(writer, "{response}").is_err() {
             return;
         }
@@ -158,10 +247,15 @@ pub struct AdminServer {
 }
 
 impl AdminServer {
-    /// Bind `addr` (loopback only — e.g. `127.0.0.1:9090`, or port 0 for
-    /// an ephemeral test port) and serve admin commands against `state`
-    /// on one dedicated `esnmf-admin` thread.
+    /// Serving-plane wrapper around [`AdminServer::start_on`].
     pub fn start(addr: &str, state: Arc<ServerState>) -> Result<AdminServer> {
+        AdminServer::start_on(addr, state)
+    }
+
+    /// Bind `addr` (loopback only — e.g. `127.0.0.1:9090`, or port 0 for
+    /// an ephemeral test port) and serve admin commands against
+    /// `surface` on one dedicated `esnmf-admin` thread.
+    pub fn start_on(addr: &str, surface: Arc<dyn AdminSurface>) -> Result<AdminServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         if !local.ip().is_loopback() {
@@ -183,7 +277,7 @@ impl AdminServer {
                             // serial, panic-isolated: one bad admin
                             // connection costs itself, never the listener
                             let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                                || admin_conn(stream, &state, &stop2),
+                                || admin_conn(stream, surface.as_ref(), &stop2),
                             ));
                         }
                         Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -276,6 +370,159 @@ mod tests {
             text.contains("# TYPE esnmf_server_latency_classify_us histogram\n"),
             "{text}"
         );
+    }
+
+    /// Prometheus text-format conformance for the METRICS surface: metric
+    /// name charset, label syntax, histogram bucket monotonicity and
+    /// `+Inf`/`_sum`/`_count` consistency, exactly one trailing `# EOF`.
+    fn assert_prometheus_conformant(text: &str) {
+        assert!(text.ends_with("# EOF"), "missing terminator: {text:?}");
+        assert_eq!(text.matches("# EOF").count(), 1, "multiple EOFs: {text:?}");
+        let body = text.strip_suffix("# EOF").unwrap();
+        fn valid_name(name: &str) -> bool {
+            !name.is_empty()
+                && name.chars().next().is_some_and(|c| {
+                    c.is_ascii_alphabetic() || c == '_' || c == ':'
+                })
+                && name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        }
+        use std::collections::BTreeMap;
+        // histogram name → (buckets in order, sum, count, saw +Inf)
+        let mut hists: BTreeMap<String, (Vec<u64>, Option<f64>, Option<u64>, Option<u64>)> =
+            BTreeMap::new();
+        for line in body.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut parts = rest.split(' ');
+                let name = parts.next().unwrap_or("");
+                let kind = parts.next().unwrap_or("");
+                assert!(valid_name(name), "bad TYPE name: {line}");
+                assert!(
+                    matches!(kind, "counter" | "gauge" | "histogram"),
+                    "bad TYPE kind: {line}"
+                );
+                if kind == "histogram" {
+                    hists.insert(name.to_string(), (Vec::new(), None, None, None));
+                }
+                continue;
+            }
+            assert!(!line.starts_with('#'), "unexpected comment: {line}");
+            let (name_part, value) = line.rsplit_once(' ').expect("name value");
+            assert!(value.parse::<f64>().is_ok(), "bad value: {line}");
+            let (name, labels) = match name_part.split_once('{') {
+                Some((n, l)) => (n, Some(l.strip_suffix('}').expect("closed label set"))),
+                None => (name_part, None),
+            };
+            assert!(valid_name(name), "bad metric name: {line}");
+            if let Some(labels) = labels {
+                for pair in labels.split(',') {
+                    let (k, v) = pair.split_once('=').expect("label k=v");
+                    assert!(valid_name(k), "bad label name: {line}");
+                    assert!(
+                        v.starts_with('"') && v.ends_with('"') && v.len() >= 2,
+                        "unquoted label value: {line}"
+                    );
+                    let inner = &v[1..v.len() - 1];
+                    assert!(
+                        !inner.contains('"') && !inner.contains('\n') && !inner.contains('\\'),
+                        "label value needs escaping we never emit: {line}"
+                    );
+                }
+            }
+            if let Some(base) = name.strip_suffix("_bucket") {
+                let (_, le) = labels
+                    .expect("bucket has le label")
+                    .split_once("le=\"")
+                    .expect("le label");
+                let le = le.strip_suffix('"').unwrap();
+                let cum: u64 = value.parse().unwrap();
+                let h = hists.get_mut(base).expect("bucket after TYPE histogram");
+                if le == "+Inf" {
+                    h.3 = Some(cum);
+                } else {
+                    assert!(le.parse::<f64>().is_ok(), "bad le bound: {line}");
+                    assert!(h.3.is_none(), "+Inf bucket must come last: {line}");
+                    h.0.push(cum);
+                }
+            } else if let Some(base) = name.strip_suffix("_sum") {
+                if let Some(h) = hists.get_mut(base) {
+                    h.1 = Some(value.parse().unwrap());
+                }
+            } else if let Some(base) = name.strip_suffix("_count") {
+                if let Some(h) = hists.get_mut(base) {
+                    h.2 = Some(value.parse().unwrap());
+                }
+            }
+        }
+        assert!(!hists.is_empty(), "conformance run must cover a histogram");
+        for (name, (buckets, sum, count, inf)) in hists {
+            assert!(
+                buckets.windows(2).all(|w| w[0] <= w[1]),
+                "{name}: buckets not monotone: {buckets:?}"
+            );
+            let inf = inf.unwrap_or_else(|| panic!("{name}: missing +Inf bucket"));
+            let count = count.unwrap_or_else(|| panic!("{name}: missing _count"));
+            assert!(sum.is_some(), "{name}: missing _sum");
+            assert_eq!(inf, count, "{name}: +Inf bucket must equal _count");
+            if let Some(&last) = buckets.last() {
+                assert!(last <= inf, "{name}: finite bucket above +Inf");
+            }
+        }
+    }
+
+    #[test]
+    fn serve_metrics_are_prometheus_conformant() {
+        let s = state();
+        let _ = respond(&s, "CLASSIFY coffee");
+        let _ = respond(&s, "TOPICS");
+        assert_prometheus_conformant(&admin_command(&s, "METRICS"));
+    }
+
+    #[test]
+    fn factorize_metrics_are_prometheus_conformant_and_export_store_gauges() {
+        let resident = Arc::new(ResidentCounter::default());
+        let surface = FactorizeAdmin::new(Some(Arc::clone(&resident)));
+        // the global registry needs at least one histogram for the
+        // conformance sweep to exercise bucket checks
+        metrics::global().histogram("dist.roundtrip").observe_us(42);
+        let text = dispatch_line(&surface, "METRICS");
+        assert_prometheus_conformant(&text);
+        assert!(text.contains("esnmf_store_resident_bytes "), "{text}");
+        assert!(text.contains("esnmf_store_resident_peak_bytes "), "{text}");
+        assert!(text.contains("esnmf_store_shard_reads_hit "), "{text}");
+        assert!(text.contains("esnmf_store_shard_reads_miss "), "{text}");
+    }
+
+    #[test]
+    fn factorize_surface_declines_serving_commands() {
+        let surface = FactorizeAdmin::new(None);
+        assert!(dispatch_line(&surface, "HEALTH").starts_with("OK up spans_entered="));
+        assert_eq!(
+            dispatch_line(&surface, "READY"),
+            "ERR unsupported command on this plane"
+        );
+        assert_eq!(
+            dispatch_line(&surface, "RELOAD /tmp/x.esnmf"),
+            "ERR unsupported command on this plane"
+        );
+        assert_eq!(dispatch_line(&surface, "PING"), "OK pong");
+    }
+
+    #[test]
+    fn progress_and_tracedump_answer_on_every_plane() {
+        let s = state();
+        let p = admin_command(&s, "PROGRESS");
+        assert!(p.starts_with("OK "), "{p}");
+        let dump = admin_command(&s, "TRACEDUMP");
+        assert!(dump.ends_with("# EOF"), "{dump}");
+        assert!(
+            dump.lines().next().unwrap().contains("esnmf-trace-"),
+            "{dump}"
+        );
+        let f = FactorizeAdmin::new(None);
+        assert!(dispatch_line(&f, "PROGRESS").starts_with("OK "));
+        assert!(dispatch_line(&f, "TRACEDUMP").ends_with("# EOF"));
     }
 
     #[test]

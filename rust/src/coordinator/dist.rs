@@ -36,7 +36,7 @@
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::pool;
+use crate::coordinator::{metrics, pool};
 use crate::io::wire::{read_msg, write_msg, ComputeReq, PassReq, WorkerMsg, WORKER_PROTOCOL_VERSION};
 use crate::io::CorpusStore;
 use crate::nmf::als::{
@@ -46,6 +46,7 @@ use crate::nmf::als::{
 use crate::nmf::{MemoryTracker, NmfOptions, NmfResult, ObjectiveKind};
 use crate::sparse::source::RowSource;
 use crate::sparse::{ops, topk, Csr, TieMode};
+use crate::util::trace;
 use crate::EsnmfError;
 
 /// Knobs of one distributed run (CLI: `--dist-listen`, `--dist-workers`,
@@ -126,8 +127,54 @@ pub fn run_distributed_on(
         timeout: dopts.timeout,
     };
     let result = als::factorize_corpus_with(store, opts, &mut engine);
+    emit_worker_summaries(&engine.conns);
     engine.shutdown();
     Ok(result)
+}
+
+/// Per-worker telemetry counter under the process-global registry.
+/// `wi` is the worker's stable admission index.
+fn worker_counter(wi: usize, what: &str) -> std::sync::Arc<metrics::Counter> {
+    metrics::global().counter(&format!("dist.worker{wi}.{what}"))
+}
+
+/// Bump one per-worker counter and the matching `dist.<what>` run total
+/// together, so per-worker values always sum to the totals.
+fn count_worker(wi: usize, what: &str, n: u64) {
+    if n == 0 {
+        return;
+    }
+    worker_counter(wi, what).add(n);
+    metrics::global().counter(&format!("dist.{what}")).add(n);
+}
+
+const WORKER_COUNTER_KINDS: [&str; 6] = [
+    "requests",
+    "compute_us",
+    "wait_us",
+    "items",
+    "straggler_rounds",
+    "reassigned_spans",
+];
+
+/// End-of-run telemetry: one `worker_summary` trace event per admitted
+/// worker plus a `dist_totals` event, all read back from the registry —
+/// the CI trace smoke asserts the per-worker events sum to the totals.
+fn emit_worker_summaries(conns: &[WorkerConn]) {
+    for wi in 0..conns.len() {
+        let mut fields: Vec<(&'static str, f64)> = vec![("worker", wi as f64)];
+        for kind in WORKER_COUNTER_KINDS {
+            fields.push((kind, worker_counter(wi, kind).get() as f64));
+        }
+        fields.push(("alive", f64::from(u8::from(conns[wi].alive))));
+        trace::event("worker_summary", &fields);
+    }
+    let mut fields: Vec<(&'static str, f64)> = vec![("workers", conns.len() as f64)];
+    for kind in WORKER_COUNTER_KINDS {
+        let total = metrics::global().counter(&format!("dist.{kind}")).get();
+        fields.push((kind, total as f64));
+    }
+    trace::event("dist_totals", &fields);
 }
 
 /// Accept and handshake workers until `dopts.workers` have joined or the
@@ -339,13 +386,19 @@ impl DistEngine {
             let span_emits = scatter(
                 &mut engine.conns,
                 engine.timeout,
+                "scatter_emit",
                 ctx.n_blocks(),
                 |span| req(span, PassReq::Emit { keep_tag, tau }),
                 |msg, span| parse_fragments(msg, span, &ctx),
                 |span| ctx.emit_span(span.0, span.1, keep),
             );
             let emits: Vec<BlockEmit> = span_emits.into_iter().flatten().collect();
-            ctx.assemble(emits, trim, mem)
+            let mut merge_span = trace::span("merge");
+            merge_span.field("fragments", emits.len() as f64);
+            let csr = ctx.assemble(emits, trim, mem);
+            merge_span.field("nnz", csr.nnz() as f64);
+            drop(merge_span);
+            csr
         };
 
         match enforce {
@@ -364,6 +417,7 @@ impl DistEngine {
                 let selected = scatter(
                     &mut self.conns,
                     self.timeout,
+                    "scatter_select",
                     ctx.n_blocks(),
                     |span| req(span, PassReq::Select { t: t as u64 }),
                     |msg, span| parse_selected(msg, span, t),
@@ -426,6 +480,7 @@ fn parse_selected(
             scratch_lens,
             positives,
             heap,
+            ..
         } => {
             if scratch_lens.len() != span.1 - span.0 {
                 return Err(format!(
@@ -452,7 +507,7 @@ fn parse_fragments(
     span: (usize, usize),
     ctx: &StreamCtx<'_>,
 ) -> Result<Vec<BlockEmit>, String> {
-    let WorkerMsg::Fragments { emits } = msg else {
+    let WorkerMsg::Fragments { emits, .. } = msg else {
         return Err("expected Fragments, got another frame type".to_string());
     };
     if emits.len() != span.1 - span.0 {
@@ -501,6 +556,7 @@ fn parse_fragments(
 fn scatter<R, M, P, L>(
     conns: &mut [WorkerConn],
     timeout: Duration,
+    label: &'static str,
     n_blocks: usize,
     make: M,
     parse: P,
@@ -511,9 +567,13 @@ where
     P: Fn(WorkerMsg, (usize, usize)) -> Result<R, String>,
     L: Fn((usize, usize)) -> R,
 {
+    let mut pass_span = trace::span(label);
     let live = conns.iter().filter(|c| c.alive).count();
+    pass_span.field("n_blocks", n_blocks as f64);
+    pass_span.field("workers", live as f64);
     let spans = pool::split_ranges(n_blocks, live);
     let mut results: Vec<Option<R>> = spans.iter().map(|_| None).collect();
+    let mut rounds = 0u64;
 
     loop {
         let pending: Vec<usize> = results
@@ -532,15 +592,41 @@ where
         if alive.is_empty() {
             break;
         }
+        rounds += 1;
         // one span per live worker per round; leftovers wait for the
         // next round (or for the local fallback)
         let batch: Vec<(usize, usize)> = pending.into_iter().zip(alive).collect();
         let jobs: Vec<(usize, WorkerMsg)> =
             batch.iter().map(|&(si, wi)| (wi, make(spans[si]))).collect();
         let replies = exchange(conns, timeout, jobs);
-        for (&(si, wi), reply) in batch.iter().zip(replies) {
-            match reply.and_then(|msg| parse(msg, spans[si])) {
-                Ok(r) => results[si] = Some(r),
+        // a worker is straggling when another finished the same round's
+        // spans more than twice as fast — counted, never acted on
+        let fastest_ok = replies
+            .iter()
+            .filter(|(r, _)| r.is_ok())
+            .map(|&(_, us)| us)
+            .min();
+        let ok_count = replies.iter().filter(|(r, _)| r.is_ok()).count();
+        for (&(si, wi), (reply, roundtrip_us)) in batch.iter().zip(replies) {
+            let outcome = reply.and_then(|msg| {
+                let summary = msg.summary();
+                parse(msg, spans[si]).map(|r| (r, summary))
+            });
+            match outcome {
+                Ok((r, summary)) => {
+                    results[si] = Some(r);
+                    count_worker(wi, "requests", 1);
+                    if let Some(s) = summary {
+                        count_worker(wi, "compute_us", s.compute_us);
+                        count_worker(wi, "wait_us", roundtrip_us.saturating_sub(s.compute_us));
+                        count_worker(wi, "items", s.items);
+                    }
+                    if let Some(floor) = fastest_ok {
+                        if ok_count >= 2 && roundtrip_us > floor.saturating_mul(2) {
+                            count_worker(wi, "straggler_rounds", 1);
+                        }
+                    }
+                }
                 Err(why) => {
                     crate::log_warn!(
                         "dist",
@@ -549,10 +635,20 @@ where
                         spans[si]
                     );
                     conns[wi].alive = false;
+                    count_worker(wi, "reassigned_spans", 1);
+                    trace::event(
+                        "reassign",
+                        &[
+                            ("worker", wi as f64),
+                            ("span_lo", spans[si].0 as f64),
+                            ("span_hi", spans[si].1 as f64),
+                        ],
+                    );
                 }
             }
         }
     }
+    pass_span.field("rounds", rounds as f64);
 
     // guaranteed completion: the coordinator shares the store, so any
     // span no worker served is computed here with the identical engine
@@ -562,6 +658,11 @@ where
         .map(|(r, span)| {
             r.unwrap_or_else(|| {
                 crate::log_warn!("dist", "computing span {span:?} locally (no live workers)");
+                metrics::global().counter("dist.local_fallback_spans").inc();
+                trace::event(
+                    "local_fallback",
+                    &[("span_lo", span.0 as f64), ("span_hi", span.1 as f64)],
+                );
                 local(span)
             })
         })
@@ -569,26 +670,33 @@ where
 }
 
 /// Run the batch's request/reply exchanges concurrently, one scoped
-/// thread per assigned worker. Reply order matches job order.
+/// thread per assigned worker. Reply order matches job order; each reply
+/// carries its roundtrip wall time in µs (send → parseable frame), the
+/// coordinator-side half of the wait accounting.
 fn exchange(
     conns: &mut [WorkerConn],
     timeout: Duration,
     jobs: Vec<(usize, WorkerMsg)>,
-) -> Vec<Result<WorkerMsg, String>> {
+) -> Vec<(Result<WorkerMsg, String>, u64)> {
     let mut slots: Vec<Option<&mut WorkerConn>> = conns.iter_mut().map(Some).collect();
     std::thread::scope(|s| {
         let handles: Vec<_> = jobs
             .into_iter()
             .map(|(wi, msg)| {
                 let conn = slots[wi].take().expect("one job per worker per exchange");
-                s.spawn(move || conn.roundtrip(&msg, timeout))
+                s.spawn(move || {
+                    let started = Instant::now();
+                    let reply = conn.roundtrip(&msg, timeout);
+                    let us = started.elapsed().as_micros().min(u64::MAX as u128) as u64;
+                    (reply, us)
+                })
             })
             .collect();
         handles
             .into_iter()
             .map(|h| {
                 h.join()
-                    .unwrap_or_else(|_| Err("exchange thread panicked".into()))
+                    .unwrap_or_else(|_| (Err("exchange thread panicked".into()), 0))
             })
             .collect()
     })

@@ -3,8 +3,18 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::time::Duration;
+
+/// The process-global registry backing the factorize/worker planes (the
+/// distributed coordinator's per-worker counters, the out-of-core store
+/// gauges, the factorize admin listener's METRICS command). The serving
+/// plane keeps its own per-instance registry on `ServerState` — replica
+/// tests run several servers in one process and must not share metrics.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
 
 /// Lock `m`, recovering the guard if a previous holder panicked. Every
 /// mutex in the serving plane (registry maps, response cache, scratch

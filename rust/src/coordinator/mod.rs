@@ -22,7 +22,7 @@ pub mod pool;
 pub mod server;
 pub mod worker;
 
-pub use admin::{admin_command, AdminServer};
+pub use admin::{admin_command, dispatch_line, AdminServer, AdminSurface, FactorizeAdmin};
 pub use cache::LruCache;
 pub use dist::{run_distributed, run_distributed_on, DistOptions};
 pub use ingest::{ingest_stream, IngestConfig};

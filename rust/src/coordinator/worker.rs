@@ -21,7 +21,9 @@ use std::net::TcpStream;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use crate::io::wire::{read_msg, write_msg, ComputeReq, PassReq, WorkerMsg, WORKER_PROTOCOL_VERSION};
+use crate::io::wire::{
+    read_msg, write_msg, ComputeReq, PassReq, WorkerMsg, WorkerSummary, WORKER_PROTOCOL_VERSION,
+};
 use crate::io::CorpusStore;
 use crate::nmf::als::{AlsCorpus, BlockCompute, BlockEmit, CandSource, Keep, Solve, StreamCtx};
 use crate::nmf::ObjectiveKind;
@@ -136,6 +138,13 @@ fn connect_with_retry(coordinator: &str) -> Result<TcpStream, EsnmfError> {
     }
 }
 
+fn summary_for(started: Instant, items: u64) -> WorkerSummary {
+    WorkerSummary {
+        compute_us: started.elapsed().as_micros().min(u64::MAX as u128) as u64,
+        items,
+    }
+}
+
 /// Execute one self-contained compute request against the local store
 /// handle. `Err` is the refusal message — every input is validated
 /// before it can panic a kernel.
@@ -232,22 +241,31 @@ fn compute(
             ctx.n_blocks()
         ));
     }
+    // the v3 span summary: wall time inside the pass plus items produced
+    // (candidates offered / nonzeros emitted) — telemetry the coordinator
+    // aggregates, never an input to the factorization
+    let started = Instant::now();
     let reply = match &req.pass {
         PassReq::Select { t } => {
             let (lens, sel) = ctx.select_span(lo, hi, *t as usize);
             let (positives, heap) = sel.into_wire_parts();
+            let items: u64 = lens.iter().map(|&l| l as u64).sum();
             WorkerMsg::Selected {
                 scratch_lens: lens.iter().map(|&l| l as u64).collect(),
                 positives: positives as u64,
                 heap,
+                summary: summary_for(started, items),
             }
         }
         PassReq::Emit { keep_tag, tau } => {
             let keep = Keep::from_wire(*keep_tag, *tau)
                 .ok_or_else(|| format!("bad keep tag {keep_tag}"))?;
             let emits = ctx.emit_span(lo, hi, keep);
+            let wire: Vec<_> = emits.into_iter().map(BlockEmit::into_wire).collect();
+            let items: u64 = wire.iter().map(|e| e.values.len() as u64).sum();
             WorkerMsg::Fragments {
-                emits: emits.into_iter().map(BlockEmit::into_wire).collect(),
+                emits: wire,
+                summary: summary_for(started, items),
             }
         }
     };

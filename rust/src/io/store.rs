@@ -162,6 +162,11 @@ impl From<WireError> for StoreError {
 pub struct ResidentCounter {
     current: AtomicUsize,
     peak: AtomicUsize,
+    /// per-read shard-cache outcomes across every cursor of the store —
+    /// a high miss share means cursors are thrashing shards (block
+    /// geometry misaligned with shard heights)
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl ResidentCounter {
@@ -174,12 +179,30 @@ impl ResidentCounter {
         self.current.fetch_sub(bytes, Ordering::Relaxed);
     }
 
+    fn note_read(&self, hit: bool) {
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     pub fn current(&self) -> usize {
         self.current.load(Ordering::Relaxed)
     }
 
     pub fn peak(&self) -> usize {
         self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Shard reads served from a cursor's cache.
+    pub fn cache_hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Shard reads that went to disk.
+    pub fn cache_misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
     }
 }
 
@@ -319,6 +342,7 @@ impl ShardedMatrix {
             .as_ref()
             .and_then(|b| b.downcast_ref::<CachedShard>())
             .is_some_and(|c| c.key == (self.token, sid));
+        self.resident.note_read(hit);
         if !hit {
             // release the previous shard *before* any new bytes exist, and
             // charge the incoming shard before reading it, so the counter
@@ -744,6 +768,13 @@ impl CorpusStore {
     /// Resident-corpus accounting shared by both orientations' cursors.
     pub fn resident(&self) -> &ResidentCounter {
         &self.resident
+    }
+
+    /// A shared handle to the same accounting, for observers (e.g. the
+    /// factorize admin listener) that outlive or run beside the store's
+    /// borrowers.
+    pub fn resident_shared(&self) -> Arc<ResidentCounter> {
+        Arc::clone(&self.resident)
     }
 
     /// The latched mid-run read failure across both orientations, if

@@ -388,6 +388,12 @@ pub(crate) enum AdminRequest {
     Provenance,
     Reload { path: String },
     Ping,
+    /// Live solver progress (iteration, residual/objective, ETA) — the
+    /// factorize admin surface; serve has no run to report.
+    Progress,
+    /// The in-memory trace ring as versioned JSONL, terminated by
+    /// `# EOF` — feeds `esnmf trace-report --admin-port`.
+    TraceDump,
 }
 
 impl AdminRequest {
@@ -408,6 +414,8 @@ impl AdminRequest {
                 _ => Err("ERR usage: RELOAD <path.esnmf>".into()),
             },
             "PING" => Ok(AdminRequest::Ping),
+            "PROGRESS" => Ok(AdminRequest::Progress),
+            "TRACEDUMP" => Ok(AdminRequest::TraceDump),
             "" => Err("ERR empty command".into()),
             other => Err(format!("ERR unknown admin command {other:?}")),
         }
@@ -427,8 +435,13 @@ pub(crate) const WORKER_MAGIC: [u8; 4] = *b"ESNW";
 /// History: v1 was Frobenius-only (`Hello` carried no objective and
 /// `Compute` shipped a Gram inverse); v2 announces the objective in the
 /// handshake and ships objective-specific auxiliary data plus an
-/// optional previous factor in `Compute`.
-pub(crate) const WORKER_PROTOCOL_VERSION: u16 = 2;
+/// optional previous factor in `Compute`; v3 appends a typed
+/// [`WorkerSummary`] (compute wall time + items produced) to every
+/// `Selected`/`Fragments` reply so the coordinator can aggregate
+/// per-worker compute/wait/straggle telemetry. The handshake refusal
+/// makes cross-version pairs impossible, so the appended section needs
+/// no in-band presence flag.
+pub(crate) const WORKER_PROTOCOL_VERSION: u16 = 3;
 
 /// Defensive cap on one worker frame's payload. Fragment frames carry a
 /// span's surviving nonzeros (u32 index + f32 value each), so a gigabyte
@@ -491,6 +504,18 @@ pub(crate) struct WireEmit {
     pub scratch_len: u64,
 }
 
+/// Span summary a worker attaches to every compute reply (v3):
+/// observational telemetry the coordinator folds into its per-worker
+/// counters and trace events. Never an input to the factorization.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub(crate) struct WorkerSummary {
+    /// wall time the worker spent inside `compute()` for this request
+    pub compute_us: u64,
+    /// items produced: candidate values offered (select pass) or
+    /// surviving nonzeros emitted (emit pass)
+    pub items: u64,
+}
+
 /// Every frame of the worker plane. Directions: workers send `Hello`,
 /// `Selected`, `Fragments`, `Refuse` and `Pong`; coordinators send
 /// `Welcome`, `Compute`, `Ping`, `Shutdown` and `Refuse`.
@@ -516,9 +541,13 @@ pub(crate) enum WorkerMsg {
         scratch_lens: Vec<u64>,
         positives: u64,
         heap: Vec<f32>,
+        summary: WorkerSummary,
     },
     /// Emit-pass reply: one fragment per block, span order.
-    Fragments { emits: Vec<WireEmit> },
+    Fragments {
+        emits: Vec<WireEmit>,
+        summary: WorkerSummary,
+    },
     /// Typed refusal — the peer violated the protocol or the request
     /// could not be served (digest mismatch, bad span, store fault).
     Refuse { message: String },
@@ -529,6 +558,17 @@ pub(crate) enum WorkerMsg {
 }
 
 impl WorkerMsg {
+    /// The span summary attached to compute replies (v3), if this frame
+    /// carries one.
+    pub(crate) fn summary(&self) -> Option<WorkerSummary> {
+        match self {
+            WorkerMsg::Selected { summary, .. } | WorkerMsg::Fragments { summary, .. } => {
+                Some(*summary)
+            }
+            _ => None,
+        }
+    }
+
     fn tag(&self) -> u8 {
         match self {
             WorkerMsg::Hello { .. } => 1,
@@ -592,6 +632,18 @@ fn read_u64s(r: &mut Reader) -> Result<Vec<u64>, WireError> {
     Ok(out)
 }
 
+fn write_summary(out: &mut Vec<u8>, s: &WorkerSummary) {
+    out.extend_from_slice(&s.compute_us.to_le_bytes());
+    out.extend_from_slice(&s.items.to_le_bytes());
+}
+
+fn read_summary(r: &mut Reader) -> Result<WorkerSummary, WireError> {
+    Ok(WorkerSummary {
+        compute_us: r.u64()?,
+        items: r.u64()?,
+    })
+}
+
 /// Decode an objective tag byte; an unknown tag (a future objective) is
 /// a typed refusal, never a silent default.
 fn read_objective(r: &mut Reader) -> Result<ObjectiveKind, WireError> {
@@ -652,12 +704,14 @@ fn encode_payload(msg: &WorkerMsg) -> Vec<u8> {
             scratch_lens,
             positives,
             heap,
+            summary,
         } => {
             write_u64s(&mut out, scratch_lens);
             out.extend_from_slice(&positives.to_le_bytes());
             write_f32s(&mut out, heap);
+            write_summary(&mut out, summary);
         }
-        WorkerMsg::Fragments { emits } => {
+        WorkerMsg::Fragments { emits, summary } => {
             out.extend_from_slice(&(emits.len() as u64).to_le_bytes());
             for e in emits {
                 write_u32s(&mut out, &e.row_nnz);
@@ -665,6 +719,7 @@ fn encode_payload(msg: &WorkerMsg) -> Vec<u8> {
                 write_f32s(&mut out, &e.values);
                 out.extend_from_slice(&e.scratch_len.to_le_bytes());
             }
+            write_summary(&mut out, summary);
         }
         WorkerMsg::Refuse { message } => {
             write_strings(&mut out, std::slice::from_ref(message));
@@ -746,6 +801,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<WorkerMsg, WireError> {
             scratch_lens: read_u64s(&mut r)?,
             positives: r.u64()?,
             heap: read_f32s(&mut r)?,
+            summary: read_summary(&mut r)?,
         },
         5 => {
             // each fragment costs at least its three 8-byte length
@@ -760,7 +816,10 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<WorkerMsg, WireError> {
                     scratch_len: r.u64()?,
                 });
             }
-            WorkerMsg::Fragments { emits }
+            WorkerMsg::Fragments {
+                emits,
+                summary: read_summary(&mut r)?,
+            }
         }
         6 => {
             let mut strings = read_strings(&mut r)?;
@@ -969,6 +1028,37 @@ mod tests {
             AdminRequest::parse("SHUTDOWN").unwrap_err(),
             "ERR unknown admin command \"SHUTDOWN\""
         );
+        assert_eq!(AdminRequest::parse("progress"), Ok(AdminRequest::Progress));
+        assert_eq!(
+            AdminRequest::parse("TRACEDUMP"),
+            Ok(AdminRequest::TraceDump)
+        );
+    }
+
+    #[test]
+    fn v3_replies_refuse_truncated_summaries() {
+        // a v2-shaped Selected (no trailing summary) must decode as
+        // truncated, not silently default — the handshake pins versions,
+        // so a missing summary means a corrupt frame
+        let msg = WorkerMsg::Selected {
+            scratch_lens: vec![3],
+            positives: 2,
+            heap: vec![1.0],
+            summary: WorkerSummary {
+                compute_us: 9,
+                items: 2,
+            },
+        };
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        // strip the 16-byte summary and patch the frame length down
+        let payload_len = buf.len() - 9 - 16;
+        buf.truncate(buf.len() - 16);
+        buf[5..9].copy_from_slice(&(payload_len as u32).to_le_bytes());
+        assert!(matches!(
+            read_msg(&mut &buf[..]),
+            Err(crate::EsnmfError::Wire(WireError::Truncated { .. }))
+        ));
     }
 
     fn roundtrip(msg: &WorkerMsg) -> WorkerMsg {
@@ -1044,6 +1134,10 @@ mod tests {
                 scratch_lens: vec![6, 0, 4],
                 positives: 11,
                 heap: vec![0.5, 1.5, 2.5],
+                summary: WorkerSummary {
+                    compute_us: 1234,
+                    items: 10,
+                },
             },
             WorkerMsg::Fragments {
                 emits: vec![WireEmit {
@@ -1052,6 +1146,10 @@ mod tests {
                     values: vec![1.0, 2.0, 3.0],
                     scratch_len: 6,
                 }],
+                summary: WorkerSummary {
+                    compute_us: u64::MAX,
+                    items: 3,
+                },
             },
             WorkerMsg::Refuse {
                 message: "corpus digest mismatch".to_string(),

@@ -27,7 +27,8 @@ use esnmf::backend::{AlsBackend, BackendKind, NativeBackend, XlaBackend};
 use esnmf::cli::Args;
 use esnmf::config::{Algorithm, ConfigFile, RunConfig};
 use esnmf::coordinator::{
-    watch_model, AdminServer, MetricsRegistry, Provenance, ServerState, TopicModel, TopicServer,
+    watch_model, AdminServer, AdminSurface, FactorizeAdmin, MetricsRegistry, Provenance,
+    ServerState, TopicModel, TopicServer,
 };
 use esnmf::corpus::{self, Scale};
 use esnmf::eval::topics::{format_topic_table, topic_term_table};
@@ -58,7 +59,7 @@ USAGE:
                    [--save-model m.esnmf] [--checkpoint-every N]
                    [--resume ck.esnmf] [--warm-start old.esnmf]
                    [--distributed] [--dist-workers N] [--dist-listen 127.0.0.1:7611]
-                   [--dist-timeout SECS]
+                   [--dist-timeout SECS] [--trace run.trace.jsonl] [--admin-port N]
 
   --objective picks the per-half-step math: frobenius (default — the
   paper's enforced-sparse least-squares ALS) or kl (multiplicative
@@ -86,6 +87,16 @@ USAGE:
   from a prior snapshot aligned by term, for incremental corpora. All
   snapshot digest checks work against a store too (its metadata carries
   the same corpus digest).
+  --trace streams structured run telemetry (one versioned JSONL event
+  per iteration, half-step, selection/emission pass, enforcement pass,
+  checkpoint, and distributed scatter/merge/reassign, with wall time,
+  nnz, tau and residual fields) to the given file; `esnmf trace-report`
+  renders it. Tracing is pure telemetry — the factors digest is
+  byte-identical with it on or off. --admin-port opens the loopback
+  observability listener during the run: HEALTH, METRICS (Prometheus,
+  incl. per-worker distributed counters and out-of-core store gauges),
+  PROGRESS (iteration / residual / ETA), TRACEDUMP (the in-memory
+  trace ring as JSONL).
   --distributed runs the factorization as a coordinator: it listens on
   --dist-listen, waits (up to --dist-timeout seconds) for --dist-workers
   `esnmf worker` processes that opened the *same* .estdm store, and
@@ -135,6 +146,7 @@ USAGE:
   esnmf bench-check --previous prev.json --current BENCH_smoke.json
                    [--tolerance 1.10]
                    [--guards max_intermediate_nnz,resident_corpus,p99_us]
+                   [--absolute trace.overhead_x=1.05,...]
 
   Compares the guarded (lower-is-better) metrics of two merged
   bench-smoke trajectory documents and exits nonzero when any grew
@@ -144,7 +156,16 @@ USAGE:
   empty (the committed BENCH_smoke.json seed), records the current
   document as the baseline and passes. `wall_s` guards the benchmark
   wall-time medians (use a looser --tolerance for those — wall time is
-  noisy in CI).
+  noisy in CI). --absolute adds baseline-free gates: each name=limit
+  pair fails when that metric exceeds the limit in the *current*
+  document, or is missing from it entirely — these fire even on a cold
+  trajectory cache (the disabled-tracing overhead contract rides here).
+  esnmf trace-report <run.trace.jsonl> | --admin-port N
+
+  Renders a trace (a --trace file, or the live in-memory ring fetched
+  from a factorize --admin-port listener via TRACEDUMP) as a markdown
+  report: wall time by span kind, convergence per iteration, sparsity
+  per selection pass, and per-worker compute/wait/straggle counters.
   esnmf bench-compare --before baseline.json --after BENCH_smoke.json
                    [--guards wall_s] [--out report.md]
 
@@ -190,6 +211,7 @@ fn run() -> CliResult {
         Some("artifacts") => cmd_artifacts(&mut args),
         Some("bench-check") => cmd_bench_check(&mut args),
         Some("bench-compare") => cmd_bench_compare(&mut args),
+        Some("trace-report") => cmd_trace_report(&mut args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -302,6 +324,9 @@ fn build_run_config(args: &mut Args) -> CliResult<RunConfig> {
         .map_err(EsnmfError::usage)?
     {
         cfg.dist_timeout_s = v;
+    }
+    if let Some(v) = args.opt_str("trace") {
+        cfg.trace_path = Some(v);
     }
     Ok(cfg)
 }
@@ -581,15 +606,47 @@ fn run_factorization_inner(
 }
 
 fn cmd_factorize(args: &mut Args) -> CliResult {
-    let cfg = build_run_config(args)?;
+    let mut cfg = build_run_config(args)?;
     let top = args.parse_or("top", 5usize).map_err(EsnmfError::usage)?;
+    if let Some(v) = args
+        .opt_parse::<u16>("admin-port")
+        .map_err(EsnmfError::usage)?
+    {
+        cfg.admin_port = Some(v);
+    }
     args.check_unknown().map_err(EsnmfError::usage)?;
     // fail fast on an unknown objective or an incoherent pairing
     // (kl + sequential/xla) before any corpus work happens
     cfg.objective()
         .map_err(|e| EsnmfError::config(format!("{e:#}")))?;
+    if cfg.tracing() {
+        let sink = cfg.trace_path.as_deref().map(std::path::Path::new);
+        esnmf::util::trace::enable(sink).map_err(|e| {
+            EsnmfError::Io(e).context(format!(
+                "opening trace sink {}",
+                cfg.trace_path.as_deref().unwrap_or("<ring only>")
+            ))
+        })?;
+    }
 
     let loaded = load_any_corpus(&cfg)?;
+    // kept alive for the life of the run (the Drop stops its thread)
+    let _admin = match cfg.admin_port {
+        Some(port) => {
+            let resident = match &loaded {
+                LoadedCorpus::Store(store) => Some(store.resident_shared()),
+                LoadedCorpus::Mem(_) => None,
+            };
+            let surface: Arc<dyn AdminSurface> = Arc::new(FactorizeAdmin::new(resident));
+            let admin = AdminServer::start_on(&format!("127.0.0.1:{port}"), surface)?;
+            println!(
+                "admin listener on {} (HEALTH METRICS PROGRESS TRACEDUMP)",
+                admin.addr()
+            );
+            Some(admin)
+        }
+        None => None,
+    };
     let corpus = loaded.as_als();
     let (n_terms, n_docs, a_nnz) = (corpus.n_terms(), corpus.n_docs(), corpus.a_rows().nnz());
     log_info!(
@@ -597,7 +654,16 @@ fn cmd_factorize(args: &mut Args) -> CliResult {
         "{n_terms} terms × {n_docs} docs, nnz(A) = {a_nnz} ({:.2}% sparse)",
         esnmf::eval::sparsity_fraction(n_terms, n_docs, a_nnz) * 100.0
     );
-    let (r, used_opts) = run_factorization(&cfg, &loaded)?;
+    let run = run_factorization(&cfg, &loaded);
+    // flush and close the JSONL sink whether the run succeeded or not —
+    // a partial trace of a failed run is exactly when you want one
+    if cfg.tracing() {
+        esnmf::util::trace::disable();
+        if let Some(path) = &cfg.trace_path {
+            println!("trace written to {path}");
+        }
+    }
+    let (r, used_opts) = run?;
     let corpus = loaded.as_als();
     if let Some(path) = &cfg.save_model {
         save_model(path, &cfg, corpus, &r, used_opts.as_ref())?;
@@ -735,40 +801,27 @@ fn cmd_bench_check(args: &mut Args) -> CliResult {
         .parse_or("tolerance", 1.10f64)
         .map_err(EsnmfError::usage)?;
     let guards = args.str_or("guards", "max_intermediate_nnz,resident_corpus,p99_us");
+    // baseline-free limits: `name=limit[,name=limit...]`, gated against
+    // the current document alone (they fire even on a cold cache)
+    let absolute: Vec<(String, f64)> = match args.opt_str("absolute") {
+        None => Vec::new(),
+        Some(spec) => spec
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(|pair| {
+                let (name, limit) = pair.split_once('=').ok_or_else(|| {
+                    EsnmfError::usage(format!("bad --absolute entry {pair:?} (want name=limit)"))
+                })?;
+                let limit: f64 = limit.parse().map_err(|_| {
+                    EsnmfError::usage(format!("bad --absolute limit in {pair:?}"))
+                })?;
+                Ok((name.trim().to_string(), limit))
+            })
+            .collect::<CliResult<_>>()?,
+    };
     args.check_unknown().map_err(EsnmfError::usage)?;
 
-    // only a genuinely *absent* baseline passes (first run, cold cache);
-    // a baseline that exists but cannot be read or parsed must fail
-    // loudly — swallowing it would silently disable the regression gate
-    let prev = match std::fs::read_to_string(&previous) {
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-            println!(
-                "bench-check: no previous trajectory point at {previous}; nothing to compare"
-            );
-            return Ok(());
-        }
-        Err(e) => {
-            return Err(EsnmfError::Other(format!(
-                "bench-check: cannot read previous trajectory {previous}: {e}"
-            )))
-        }
-        Ok(text) => esnmf::util::json::Json::parse(&text).map_err(|e| {
-            EsnmfError::Other(format!(
-                "bench-check: previous trajectory {previous} is corrupt: {e}"
-            ))
-        })?,
-    };
-    // the committed seed trajectory is `{"suites": {}}` — a baseline
-    // with nothing recorded yet. The first gated run establishes the
-    // baseline: record and pass, explicitly, rather than letting the
-    // comparison succeed vacuously over zero shared metrics
-    if esnmf::util::bench::trajectory_is_empty(&prev) {
-        println!(
-            "bench-check: previous trajectory {previous} has no recorded suites; \
-             {current} becomes the baseline (record and pass)"
-        );
-        return Ok(());
-    }
     let cur = std::fs::read_to_string(&current)
         .map_err(|e| {
             EsnmfError::Other(format!(
@@ -782,24 +835,132 @@ fn cmd_bench_check(args: &mut Args) -> CliResult {
                 ))
             })
         })?;
-    let guard_list: Vec<&str> = guards.split(',').map(str::trim).filter(|g| !g.is_empty()).collect();
-    let regressions =
-        esnmf::util::bench::metric_regressions(&prev, &cur, &guard_list, tolerance);
-    if regressions.is_empty() {
+    let violations = esnmf::util::bench::absolute_violations(&cur, &absolute);
+    for v in &violations {
+        eprintln!("bench-check: ABSOLUTE {v}");
+    }
+    if !absolute.is_empty() && violations.is_empty() {
         println!(
-            "bench-check: guarded metrics within {tolerance}x of the previous trajectory point"
+            "bench-check: {} absolute limit(s) hold in the current trajectory",
+            absolute.len()
         );
+    }
+    // only a genuinely *absent* baseline passes (first run, cold cache);
+    // a baseline that exists but cannot be read or parsed must fail
+    // loudly — swallowing it would silently disable the regression gate
+    let prev = match std::fs::read_to_string(&previous) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            println!(
+                "bench-check: no previous trajectory point at {previous}; nothing to compare"
+            );
+            None
+        }
+        Err(e) => {
+            return Err(EsnmfError::Other(format!(
+                "bench-check: cannot read previous trajectory {previous}: {e}"
+            )))
+        }
+        Ok(text) => Some(esnmf::util::json::Json::parse(&text).map_err(|e| {
+            EsnmfError::Other(format!(
+                "bench-check: previous trajectory {previous} is corrupt: {e}"
+            ))
+        })?),
+    };
+    // the committed seed trajectory is `{"suites": {}}` — a baseline
+    // with nothing recorded yet. The first gated run establishes the
+    // baseline: record and pass, explicitly, rather than letting the
+    // comparison succeed vacuously over zero shared metrics
+    let prev = match prev {
+        Some(p) if esnmf::util::bench::trajectory_is_empty(&p) => {
+            println!(
+                "bench-check: previous trajectory {previous} has no recorded suites; \
+                 {current} becomes the baseline (record and pass)"
+            );
+            None
+        }
+        other => other,
+    };
+    let mut regressed = 0usize;
+    if let Some(prev) = prev {
+        let guard_list: Vec<&str> = guards
+            .split(',')
+            .map(str::trim)
+            .filter(|g| !g.is_empty())
+            .collect();
+        let regressions =
+            esnmf::util::bench::metric_regressions(&prev, &cur, &guard_list, tolerance);
+        for r in &regressions {
+            eprintln!(
+                "bench-check: REGRESSION {}: {} -> {} (> {tolerance}x)",
+                r.path, r.previous, r.current
+            );
+        }
+        if regressions.is_empty() {
+            println!(
+                "bench-check: guarded metrics within {tolerance}x of the previous trajectory point"
+            );
+        }
+        regressed = regressions.len();
+    }
+    if regressed == 0 && violations.is_empty() {
         return Ok(());
     }
-    for r in &regressions {
-        eprintln!(
-            "bench-check: REGRESSION {}: {} -> {} (> {tolerance}x)",
-            r.path, r.previous, r.current
-        );
-    }
     Err(EsnmfError::Other(format!(
-        "{} guarded metric(s) regressed",
-        regressions.len()
+        "{} guarded metric(s) regressed, {} absolute limit(s) violated",
+        regressed,
+        violations.len()
+    )))
+}
+
+/// `esnmf trace-report`: render a trace (a `--trace` JSONL file, or the
+/// live ring fetched from a `factorize --admin-port` listener) as a
+/// markdown per-phase time/convergence/sparsity breakdown.
+fn cmd_trace_report(args: &mut Args) -> CliResult {
+    let admin_port = args
+        .opt_parse::<u16>("admin-port")
+        .map_err(EsnmfError::usage)?;
+    let file = args.positional.first().cloned();
+    args.check_unknown().map_err(EsnmfError::usage)?;
+    let text = match (file, admin_port) {
+        (Some(path), None) => std::fs::read_to_string(&path)
+            .map_err(|e| EsnmfError::Io(e).context(format!("reading trace {path}")))?,
+        (None, Some(port)) => fetch_trace_dump(port)?,
+        (Some(_), Some(_)) => {
+            return Err(EsnmfError::usage(
+                "trace-report takes a trace file OR --admin-port, not both",
+            ))
+        }
+        (None, None) => {
+            return Err(EsnmfError::usage(
+                "trace-report needs <run.trace.jsonl> or --admin-port N",
+            ))
+        }
+    };
+    let events = esnmf::util::trace::parse_trace(&text)
+        .map_err(|e| EsnmfError::Other(format!("trace-report: {e}")))?;
+    print!("{}", esnmf::util::trace::render_report(&events));
+    Ok(())
+}
+
+/// Fetch the in-memory trace ring from a live admin listener: one
+/// `TRACEDUMP` command, body read until its `# EOF` terminator.
+fn fetch_trace_dump(port: u16) -> CliResult<String> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = format!("127.0.0.1:{port}");
+    let mut stream = std::net::TcpStream::connect(&addr)
+        .map_err(|e| EsnmfError::Io(e).context(format!("connecting to admin listener {addr}")))?;
+    stream.write_all(b"TRACEDUMP\n")?;
+    let mut out = String::new();
+    for line in BufReader::new(stream).lines() {
+        let line = line?;
+        if line.trim() == "# EOF" {
+            return Ok(out);
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    Err(EsnmfError::protocol(format!(
+        "admin listener {addr} closed the TRACEDUMP stream before its # EOF terminator"
     )))
 }
 

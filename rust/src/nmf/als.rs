@@ -76,6 +76,7 @@ use crate::sparse::source::{RowCursor, RowSource};
 use crate::sparse::{ops, topk, Csc, Csr, RowBlock, TieMode};
 use crate::text::TermDocMatrix;
 use crate::util::timer::Timer;
+use crate::util::trace;
 
 use super::convergence::rel_residual;
 use super::init::{initial_u, initial_v};
@@ -731,21 +732,32 @@ pub(crate) fn stream_half_step(
         // shape, and the blocked machinery handles it unchanged.
         return unblocked_half_step(ctx, enforce, tie, threads, mem);
     }
+    let emit_traced = |keep: Keep, trim: Option<(f32, usize)>, mem: &mut MemoryTracker| {
+        let mut span = trace::span("emit_pass");
+        span.field("n_blocks", ctx.blocks.len() as f64);
+        let csr = ctx.emit(keep, trim, mem);
+        span.field("nnz", csr.nnz() as f64);
+        csr
+    };
     match enforce {
-        Enforce::No => ctx.emit(Keep::All, None, mem),
-        Enforce::Threshold(tau) => ctx.emit(Keep::FiniteAtLeast(tau), None, mem),
+        Enforce::No => emit_traced(Keep::All, None, mem),
+        Enforce::Threshold(tau) => emit_traced(Keep::FiniteAtLeast(tau), None, mem),
         Enforce::PerColumn(t) => {
             // assemble unenforced, then deliberately go through the CSR
             // column gather — the access-pattern cost the paper
             // attributes to column-wise enforcement
-            let mut csr = ctx.emit(Keep::All, None, mem);
+            let mut csr = emit_traced(Keep::All, None, mem);
             // the gather needs every candidate column at once, so the
             // unenforced CSR is itself a transient intermediate:
             // per-column mode cannot honor the block_rows bound (the
             // paper's point about column-wise enforcement) and the
             // telemetry must say so
             mem.observe_intermediate(csr.nnz());
+            let mut span = trace::span("enforce_percol");
+            span.field("cand_nnz", csr.nnz() as f64);
             topk::enforce_top_t_per_column_par(&mut csr, t, tie, threads);
+            span.field("nnz", csr.nnz() as f64);
+            drop(span);
             csr
         }
         Enforce::Global(t) => {
@@ -753,7 +765,10 @@ pub(crate) fn stream_half_step(
             // selectors to find the cutoff — an order statistic of the
             // candidate multiset, independent of block and worker
             // interleaving
+            let mut select_span = trace::span("select_pass");
+            select_span.field("n_blocks", ctx.blocks.len() as f64);
             let (scratch_lens, selectors) = ctx.select_pass(t);
+            select_span.field("cand_nnz", scratch_lens.iter().sum::<usize>() as f64);
             for len in scratch_lens {
                 mem.observe_intermediate(len);
             }
@@ -761,15 +776,20 @@ pub(crate) fn stream_half_step(
             for part in selectors {
                 sel.absorb(part);
             }
+            let cutoff = sel.cutoff();
+            if let Some((tau, _)) = cutoff {
+                select_span.field("tau", f64::from(tau));
+            }
+            drop(select_span);
             // pass 2: re-stream (compute traded for memory) and emit
-            match sel.cutoff() {
-                None => ctx.emit(Keep::All, None, mem),
+            match cutoff {
+                None => emit_traced(Keep::All, None, mem),
                 Some((tau, above)) => match tie {
-                    TieMode::KeepTies => ctx.emit(Keep::AtLeast(tau), None, mem),
+                    TieMode::KeepTies => emit_traced(Keep::AtLeast(tau), None, mem),
                     // above ≤ t-1 (see TopTSelector::cutoff), so the
                     // budget cannot underflow
                     TieMode::Exact => {
-                        ctx.emit(Keep::AboveOrTie(tau), Some((tau, t - above)), mem)
+                        emit_traced(Keep::AboveOrTie(tau), Some((tau, t - above)), mem)
                     }
                 },
             }
@@ -794,14 +814,19 @@ fn unblocked_half_step(
     let BlockCompute::Solve(solve) = &ctx.compute else {
         unreachable!("the unblocked fast path is Frobenius-only (see stream_half_step)");
     };
+    // one "emit_pass" span covers the whole single-block pipeline, so a
+    // trace reads uniformly whether or not the run was blocked
+    let mut span = trace::span("emit_pass");
+    span.field("n_blocks", 1.0);
     let mut cand = ctx.src.fill_all_par(threads);
     mem.observe_intermediate(cand.stored_len());
+    span.field("cand_nnz", cand.stored_len() as f64);
     // below the per-worker floor, spawn overhead beats the work; the
     // clamp changes nothing but speed
     let threads = pool::effective_workers(cand.stored_len(), threads);
     solve.apply_par(&mut cand, threads);
     cand.project_nonneg_par(threads);
-    match enforce {
+    let csr = match enforce {
         Enforce::No => cand.to_csr(),
         Enforce::Global(t) => {
             topk::enforce_top_t_rowblock_par(&mut cand, t, tie, threads);
@@ -823,7 +848,10 @@ fn unblocked_half_step(
             }
             cand.to_csr()
         }
-    }
+    };
+    span.field("nnz", csr.nnz() as f64);
+    drop(span);
+    csr
 }
 
 /// Steps 1–2 of Algorithm 2: `V = proj₊(Aᵀ U (UᵀU)⁻¹)`, enforced,
@@ -1115,7 +1143,7 @@ pub fn resume_corpus(
         residuals: p.residuals.clone(),
         errors: p.errors.clone(),
         mem: MemoryTracker::from_stats(p.memory),
-        elapsed_base_s: p.elapsed_s,
+        elapsed_base_s: sanitize_elapsed_base(p.elapsed_s),
     };
     // already converged (or the budget is already spent): the stored
     // result IS the final result — do not run an extra iteration the
@@ -1151,6 +1179,21 @@ pub fn resume_options(opts: &NmfOptions, snap: &crate::io::Snapshot) -> NmfOptio
     effective.checkpoint_every = opts.checkpoint_every;
     effective.checkpoint_path = opts.checkpoint_path.clone();
     effective
+}
+
+/// Clamp a wall-time base spliced in from a snapshot file.
+/// `Progress.elapsed_s` is raw f64 bits read from disk, measured by an
+/// earlier process — a corrupt or hand-edited snapshot could splice a
+/// negative or non-finite base into the accumulation. Within a segment
+/// elapsed time is a monotonic [`Timer`] delta added to this base, so
+/// clamping the spliced value keeps the accumulated wall time finite
+/// and monotone non-decreasing across checkpoint/resume segments.
+fn sanitize_elapsed_base(s: f64) -> f64 {
+    if s.is_finite() && s > 0.0 {
+        s
+    } else {
+        0.0
+    }
 }
 
 /// Mid-run solver state — everything an iteration boundary carries.
@@ -1246,15 +1289,28 @@ fn run_loop_with(
     // model — load() serves empty rows instead of panicking)
     let mut store_fault: Option<String> = None;
 
+    trace::progress::begin(start_iter, opts.max_iters);
     for it in start_iter..opts.max_iters {
-        let v_new = engine.v(corpus, &u, &v, opts, &mut mem);
+        let mut iter_span = trace::span("iteration");
+        iter_span.field("iter", (it + 1) as f64);
+        let v_new = {
+            let mut span = trace::span("half_step_v");
+            let v_new = engine.v(corpus, &u, &v, opts, &mut mem);
+            span.field("nnz", v_new.nnz() as f64);
+            v_new
+        };
         if let Some(fault) = corpus.store_error() {
             store_fault = Some(fault);
             break;
         }
         v = v_new;
         mem.observe_pair(u.nnz(), v.nnz());
-        let u_new = engine.u(corpus, &v, &u, opts, &mut mem);
+        let u_new = {
+            let mut span = trace::span("half_step_u");
+            let u_new = engine.u(corpus, &v, &u, opts, &mut mem);
+            span.field("nnz", u_new.nnz() as f64);
+            u_new
+        };
         if let Some(fault) = corpus.store_error() {
             store_fault = Some(fault);
             break;
@@ -1265,6 +1321,7 @@ fn run_loop_with(
         residuals.push(r);
         u = u_new;
         iterations = it + 1;
+        iter_span.field("residual", r);
 
         if opts.track_error {
             // the objective's own fit statistic (relative Frobenius
@@ -1285,13 +1342,17 @@ fn run_loop_with(
                 break;
             }
             errors.push(e);
+            iter_span.field("objective", e);
         }
+        trace::progress::update(iterations, r, errors.last().copied());
         let stopping = opts.tol > 0.0 && r < opts.tol;
         // checkpoint cadence counts absolute iterations so a resumed run
         // checkpoints at the same boundaries the uninterrupted one did;
         // nothing is written on the stopping iteration (the final model
         // is the caller's --save-model, not a checkpoint)
         if !stopping && opts.checkpoint_every > 0 && iterations % opts.checkpoint_every == 0 {
+            let mut span = trace::span("checkpoint");
+            span.field("iter", iterations as f64);
             write_checkpoint(
                 corpus,
                 opts,
@@ -1309,6 +1370,7 @@ fn run_loop_with(
             break;
         }
     }
+    trace::progress::finish();
 
     if let Some(fault) = &store_fault {
         crate::log_warn!(
@@ -1648,6 +1710,79 @@ mod tests {
         let resumed = super::resume(&tdm, &opts, &snap).unwrap();
         assert_same_result(&resumed, &uninterrupted);
         std::fs::remove_file(&ck).unwrap();
+    }
+
+    #[test]
+    fn resumed_wall_time_accumulates_monotonically_across_segments() {
+        let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 53);
+        let ck = std::env::temp_dir().join("esnmf_als_walltime_test.esnmf");
+        let _ = std::fs::remove_file(&ck);
+        let mut opts = NmfOptions::new(3)
+            .with_iters(4)
+            .with_seed(11)
+            .with_checkpoint(&ck, 2);
+        opts.tie_mode = crate::sparse::TieMode::Exact;
+        let seg1 = factorize(&tdm, &opts);
+        assert!(seg1.elapsed_s.is_finite() && seg1.elapsed_s >= 0.0);
+        let snap = crate::io::Snapshot::load(&ck).unwrap();
+        assert_eq!(snap.progress.iterations, 4);
+        let e1 = snap.progress.elapsed_s;
+        assert!(e1.is_finite() && e1 >= 0.0, "{e1}");
+        // resume across a (simulated) process boundary with a larger
+        // budget: the new segment's monotonic clock delta is added to the
+        // spliced base, never rebased to zero
+        let more = opts.clone().with_iters(8);
+        let resumed = super::resume(&tdm, &more, &snap).unwrap();
+        assert!(
+            resumed.elapsed_s.is_finite() && resumed.elapsed_s >= e1,
+            "accumulated wall time went backwards: {} < {e1}",
+            resumed.elapsed_s
+        );
+        // the resumed segment kept checkpointing; each checkpoint's
+        // accumulated wall time stays within [e1, final]
+        let snap2 = crate::io::Snapshot::load(&ck).unwrap();
+        assert_eq!(snap2.progress.iterations, 8);
+        assert!(snap2.progress.elapsed_s >= e1, "{}", snap2.progress.elapsed_s);
+        assert!(
+            snap2.progress.elapsed_s <= resumed.elapsed_s,
+            "checkpoint wall time {} beyond the final {}",
+            snap2.progress.elapsed_s,
+            resumed.elapsed_s
+        );
+        std::fs::remove_file(&ck).unwrap();
+    }
+
+    #[test]
+    fn poisoned_snapshot_elapsed_is_clamped_not_propagated() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -3.0] {
+            assert_eq!(super::sanitize_elapsed_base(bad), 0.0, "{bad}");
+        }
+        assert_eq!(super::sanitize_elapsed_base(2.5), 2.5);
+        // end-to-end: a hand-edited snapshot carrying a poisoned elapsed
+        // resumes with finite, non-negative accumulated wall time
+        let tdm = tiny_tdm();
+        let opts = NmfOptions::new(2).with_iters(3).with_seed(3);
+        let r = factorize(&tdm, &opts);
+        let snap = crate::io::Snapshot::new(
+            opts.clone(),
+            r.u,
+            r.v,
+            &tdm,
+            crate::io::Progress {
+                iterations: r.iterations,
+                residuals: r.residuals,
+                errors: r.errors,
+                memory: r.memory,
+                elapsed_s: f64::NAN,
+            },
+        );
+        let more = opts.clone().with_iters(6);
+        let resumed = super::resume(&tdm, &more, &snap).unwrap();
+        assert!(
+            resumed.elapsed_s.is_finite() && resumed.elapsed_s >= 0.0,
+            "{}",
+            resumed.elapsed_s
+        );
     }
 
     #[test]

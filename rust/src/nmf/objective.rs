@@ -42,6 +42,7 @@
 
 use crate::dense::inverse_spd;
 use crate::sparse::{ops, Csr, RowBlock, RowCursor, RowSource};
+use crate::util::trace;
 
 use super::convergence::{kl_divergence_source, rel_error_source};
 
@@ -215,7 +216,10 @@ impl Objective for Frobenius {
         norm_a_sq: f64,
         chunk_rows: usize,
     ) -> f64 {
-        rel_error_source(a, u, v, norm_a_sq, chunk_rows)
+        let mut span = trace::span("error_pass");
+        let e = rel_error_source(a, u, v, norm_a_sq, chunk_rows);
+        span.field("error", e);
+        e
     }
 
     fn foldin_solve(
@@ -304,7 +308,10 @@ impl Objective for KlDivergence {
         _norm_a_sq: f64,
         chunk_rows: usize,
     ) -> f64 {
-        kl_divergence_source(a, u, v, chunk_rows)
+        let mut span = trace::span("error_pass");
+        let e = kl_divergence_source(a, u, v, chunk_rows);
+        span.field("error", e);
+        e
     }
 
     fn foldin_solve(

@@ -30,6 +30,7 @@ use crate::sparse::source::RowSource;
 use crate::sparse::{ops, Csr, TieMode};
 use crate::text::TermDocMatrix;
 use crate::util::timer::Timer;
+use crate::util::trace;
 
 use super::als::{stream_half_step, AlsCorpus, CandSource, Enforce, Solve, StreamCtx};
 use super::convergence::rel_error_source;
@@ -202,51 +203,80 @@ pub fn factorize_sequential_corpus(
     let mut v1 = Csr::zeros(m, 0);
     let mut residuals = Vec::new();
 
+    trace::progress::begin(0, opts.blocks * opts.iters_per_block);
     for block in 0..opts.blocks {
         let seed = opts.seed.wrapping_add(block as u64 * 0x9E37_79B9);
         let mut u2 = initial_u(n, k2, opts.init_nnz, seed);
         let mut v2 = Csr::zeros(m, k2);
         let mut prev_u2 = u2.clone();
 
-        for _ in 0..opts.iters_per_block {
+        for inner in 0..opts.iters_per_block {
+            // the sequential solver drives its own loop (block × inner,
+            // deflation fused), so it records its own iteration spans —
+            // the enforcement spans come from the shared streamed
+            // machinery under seq_half_step
+            let mut iter_span = trace::span("iteration");
+            let global_iter = block * opts.iters_per_block + inner + 1;
+            iter_span.field("iter", global_iter as f64);
+            iter_span.field("block", block as f64);
+
             // --- V₂ update (Eq. 4.7), deflation fused into the stream ---
             let defl_v = (u1.cols > 0).then(|| (&v1, ops::cross_gram(&u1, &u2)));
-            v2 = seq_half_step(
-                corpus.a_cols(),
-                &u2,
-                defl_v,
-                opts.t_v,
-                opts.tie_mode,
-                threads,
-                block_rows,
-                &mut mem,
-            );
+            v2 = {
+                let mut span = trace::span("half_step_v");
+                let v2 = seq_half_step(
+                    corpus.a_cols(),
+                    &u2,
+                    defl_v,
+                    opts.t_v,
+                    opts.tie_mode,
+                    threads,
+                    block_rows,
+                    &mut mem,
+                );
+                span.field("nnz", v2.nnz() as f64);
+                v2
+            };
             mem.observe_pair(u1.nnz() + u2.nnz(), v1.nnz() + v2.nnz());
 
             // --- U₂ update (Eq. 4.8) ---
             let defl_u = (v1.cols > 0).then(|| (&u1, ops::cross_gram(&v1, &v2)));
-            u2 = seq_half_step(
-                corpus.a_rows(),
-                &v2,
-                defl_u,
-                opts.t_u,
-                opts.tie_mode,
-                threads,
-                block_rows,
-                &mut mem,
-            );
+            u2 = {
+                let mut span = trace::span("half_step_u");
+                let u2 = seq_half_step(
+                    corpus.a_rows(),
+                    &v2,
+                    defl_u,
+                    opts.t_u,
+                    opts.tie_mode,
+                    threads,
+                    block_rows,
+                    &mut mem,
+                );
+                span.field("nnz", u2.nnz() as f64);
+                u2
+            };
             mem.observe_pair(u1.nnz() + u2.nnz(), v1.nnz() + v2.nnz());
 
-            residuals.push(super::convergence::rel_residual(&u2, &prev_u2));
+            let r = super::convergence::rel_residual(&u2, &prev_u2);
+            residuals.push(r);
+            iter_span.field("residual", r);
+            trace::progress::update(global_iter, r, None);
             prev_u2 = u2.clone();
         }
 
         u1 = append_columns(&u1, &u2);
         v1 = append_columns(&v1, &v2);
     }
+    trace::progress::finish();
 
     let norm_a_sq = corpus.norm_a_sq();
-    let final_error = rel_error_source(corpus.a_rows(), &u1, &v1, norm_a_sq, block_rows);
+    let final_error = {
+        let mut span = trace::span("error_pass");
+        let e = rel_error_source(corpus.a_rows(), &u1, &v1, norm_a_sq, block_rows);
+        span.field("error", e);
+        e
+    };
     let iterations = opts.blocks * opts.iters_per_block;
     let memory = mem.finish(u1.nnz(), v1.nnz());
     NmfResult {

@@ -323,6 +323,40 @@ pub fn metric_regressions(
     out
 }
 
+/// Check absolute (baseline-free) metric limits against one trajectory
+/// document: for each `(name, limit)`, every suite carrying a metric of
+/// that exact name must report a value ≤ `limit`, and at least one suite
+/// must carry it at all — a missing metric is a violation, not a pass
+/// (the trace-overhead gate must fail when the bench silently stopped
+/// recording it). Unlike [`metric_regressions`], this needs no previous
+/// point, so it still gates when the trajectory cache is cold.
+pub fn absolute_violations(current: &Json, limits: &[(String, f64)]) -> Vec<String> {
+    let mut out = Vec::new();
+    for (name, limit) in limits {
+        let mut found = false;
+        if let Some(Json::Obj(suites)) = current.get("suites") {
+            for (slug, suite) in suites {
+                let value = suite
+                    .get("metrics")
+                    .and_then(|m| m.get(name))
+                    .and_then(Json::as_f64);
+                if let Some(v) = value {
+                    found = true;
+                    if v > *limit {
+                        out.push(format!("{slug}.{name} = {v} exceeds absolute limit {limit}"));
+                    }
+                }
+            }
+        }
+        if !found {
+            out.push(format!(
+                "{name} missing from the current trajectory (absolute limit {limit} cannot gate)"
+            ));
+        }
+    }
+    out
+}
+
 /// True when a combined trajectory document has no recorded suites at
 /// all — the state of the committed `BENCH_smoke.json` seed before the
 /// first gated bench run. [`metric_regressions`] against such a baseline
@@ -490,6 +524,30 @@ mod tests {
         let regs = metric_regressions(&prev, &slow, &["wall_s"], 5.0);
         assert_eq!(regs.len(), 1);
         assert_eq!(regs[0].path, "fig6.wall_s");
+    }
+
+    #[test]
+    fn absolute_limits_gate_without_a_baseline() {
+        let doc = Json::parse(
+            r#"{"suites":{"micro":{"metrics":{"trace.overhead_x":1.02}},
+                "fig6":{"metrics":{"other":3.0}}}}"#,
+        )
+        .unwrap();
+        let ok = vec![("trace.overhead_x".to_string(), 1.05)];
+        assert!(absolute_violations(&doc, &ok).is_empty());
+        // over the limit → named violation
+        let tight = vec![("trace.overhead_x".to_string(), 1.01)];
+        let v = absolute_violations(&doc, &tight);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("micro.trace.overhead_x"), "{v:?}");
+        // a metric nobody recorded is a violation, not a silent pass
+        let missing = vec![("trace.ghost".to_string(), 1.0)];
+        let v = absolute_violations(&doc, &missing);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("missing"), "{v:?}");
+        // empty seed document: everything is missing
+        let seed = Json::parse(r#"{"suites":{}}"#).unwrap();
+        assert_eq!(absolute_violations(&seed, &ok).len(), 1);
     }
 
     #[test]

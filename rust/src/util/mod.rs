@@ -12,6 +12,7 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod timer;
+pub mod trace;
 
 pub use rng::Rng;
 pub use timer::Timer;

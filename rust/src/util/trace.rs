@@ -1,0 +1,645 @@
+//! The solver-wide tracing plane: structured span timers, a bounded
+//! in-memory event ring, an optional versioned-JSONL file sink, and the
+//! always-on factorization progress gauges behind the admin `PROGRESS`
+//! command.
+//!
+//! # Design constraints
+//!
+//! * **Telemetry, never an input.** Nothing the tracer records feeds
+//!   back into the solver — factors are bit-identical with tracing on or
+//!   off (`tests/integration_trace.rs` pins the digest).
+//! * **Disabled-path cost ≈ zero.** When tracing is off, [`span`]
+//!   compiles down to one relaxed counter increment plus a branch on an
+//!   [`AtomicBool`]; every field/drop call no-ops on a `None`. The
+//!   `trace.overhead_x` metric in `benches/micro_kernels.rs` pins the
+//!   ratio (bench-check gates it ≤ 1.05x).
+//! * **Bounded memory.** The ring keeps the newest [`RING_CAPACITY`]
+//!   events; older ones are dropped (counted in `dropped`). The JSONL
+//!   sink, when attached, sees every event.
+//!
+//! # Trace file schema (`esnmf-trace-v1`)
+//!
+//! Line 1 is a header object: `{"schema":"esnmf-trace-v1"}`. Every later
+//! line is one event object with the reserved keys `seq` (monotone event
+//! ordinal), `t_us` (µs since tracing was enabled, monotonic clock),
+//! `span` (the span kind), `dur_us` (span duration; 0 for instantaneous
+//! events) — all other keys are numeric telemetry fields. Readers MUST
+//! ignore unknown keys (the forward-compatibility rule); writers may add
+//! fields within v1 but never change the meaning of an existing key.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// Version tag written as the first line of every trace file.
+pub const TRACE_SCHEMA: &str = "esnmf-trace-v1";
+
+/// Newest events kept in memory for live snapshots (`TRACEDUMP` over the
+/// admin listener, [`snapshot`]).
+pub const RING_CAPACITY: usize = 8192;
+
+/// The branch every span start takes. Relaxed everywhere: the tracer
+/// tolerates a few events from the enabling/disabling instant landing on
+/// either side.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Spans entered since process start, counted even while disabled — the
+/// "relaxed counter" half of the disabled-path contract, and a cheap
+/// sanity signal ("did the instrumentation run at all?").
+static SPANS_ENTERED: AtomicU64 = AtomicU64::new(0);
+
+/// One recorded span or instantaneous event.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub seq: u64,
+    /// µs since tracing was enabled (monotonic clock).
+    pub t_us: u64,
+    /// Span kind — see the taxonomy in rust/README.md §Observability.
+    pub span: &'static str,
+    /// Wall duration in µs; 0 for instantaneous events.
+    pub dur_us: u64,
+    /// Numeric telemetry (nnz counts, tau, residuals, worker ordinals …).
+    pub fields: Vec<(&'static str, f64)>,
+}
+
+impl TraceEvent {
+    /// The event as one compact JSON object (one JSONL line).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("seq".to_string(), Json::Num(self.seq as f64));
+        obj.insert("t_us".to_string(), Json::Num(self.t_us as f64));
+        obj.insert("span".to_string(), Json::Str(self.span.to_string()));
+        obj.insert("dur_us".to_string(), Json::Num(self.dur_us as f64));
+        for (k, v) in &self.fields {
+            obj.insert(k.to_string(), Json::Num(*v));
+        }
+        Json::Obj(obj)
+    }
+}
+
+struct TracerState {
+    /// Set when tracing was enabled; `t_us` is measured from here.
+    origin: Instant,
+    ring: VecDeque<TraceEvent>,
+    /// Events evicted from the ring since enable (they still reached the
+    /// sink, if one is attached).
+    dropped: u64,
+    seq: u64,
+    sink: Option<BufWriter<File>>,
+}
+
+fn tracer() -> &'static Mutex<Option<TracerState>> {
+    static TRACER: OnceLock<Mutex<Option<TracerState>>> = OnceLock::new();
+    TRACER.get_or_init(|| Mutex::new(None))
+}
+
+fn lock_tracer() -> MutexGuard<'static, Option<TracerState>> {
+    tracer().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Is the tracing plane collecting events right now?
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Total spans entered since process start (counted even while
+/// disabled — the relaxed counter of the overhead contract).
+pub fn spans_entered() -> u64 {
+    SPANS_ENTERED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on. With a path, events additionally stream to that file
+/// as versioned JSONL (the header line is written immediately); without
+/// one, only the in-memory ring collects. Re-enabling resets the ring
+/// and the clock.
+pub fn enable(path: Option<&Path>) -> std::io::Result<()> {
+    let sink = match path {
+        None => None,
+        Some(p) => {
+            let mut w = BufWriter::new(File::create(p)?);
+            let mut header = BTreeMap::new();
+            header.insert("schema".to_string(), Json::Str(TRACE_SCHEMA.to_string()));
+            writeln!(w, "{}", Json::Obj(header))?;
+            Some(w)
+        }
+    };
+    let mut guard = lock_tracer();
+    *guard = Some(TracerState {
+        origin: Instant::now(),
+        ring: VecDeque::with_capacity(RING_CAPACITY.min(1024)),
+        dropped: 0,
+        seq: 0,
+        sink,
+    });
+    ENABLED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Turn tracing off, flushing and closing the sink. The ring survives
+/// (snapshots still work) until the next [`enable`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+    let mut guard = lock_tracer();
+    if let Some(state) = guard.as_mut() {
+        if let Some(sink) = state.sink.take() {
+            drop_flush(sink);
+        }
+    }
+}
+
+fn drop_flush(mut sink: BufWriter<File>) {
+    if let Err(e) = sink.flush() {
+        crate::log_warn!("trace", "flushing trace sink: {e}");
+    }
+}
+
+/// Clone of the current ring contents, oldest first.
+pub fn snapshot() -> Vec<TraceEvent> {
+    lock_tracer()
+        .as_ref()
+        .map(|s| s.ring.iter().cloned().collect())
+        .unwrap_or_default()
+}
+
+/// Events evicted from the ring since tracing was enabled.
+pub fn dropped() -> u64 {
+    lock_tracer().as_ref().map(|s| s.dropped).unwrap_or(0)
+}
+
+/// The ring rendered as trace-file text (header line + one JSONL line
+/// per event) — the body of the admin `TRACEDUMP` command, parseable by
+/// the same reader as a trace file.
+pub fn ring_jsonl() -> String {
+    let mut out = format!("{{\"schema\":\"{TRACE_SCHEMA}\"}}\n");
+    for e in snapshot() {
+        out.push_str(&e.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn record(span: &'static str, started: Option<Instant>, fields: Vec<(&'static str, f64)>) {
+    let mut guard = lock_tracer();
+    let Some(state) = guard.as_mut() else { return };
+    let now = Instant::now();
+    let dur_us = started
+        .map(|s| now.duration_since(s).as_micros().min(u64::MAX as u128) as u64)
+        .unwrap_or(0);
+    let t_us = started.unwrap_or(now).duration_since(state.origin).as_micros() as u64;
+    let event = TraceEvent {
+        seq: state.seq,
+        t_us,
+        span,
+        dur_us,
+        fields,
+    };
+    state.seq += 1;
+    if let Some(sink) = state.sink.as_mut() {
+        // a full disk must never kill a run: drop the sink, keep the ring
+        if writeln!(sink, "{}", event.to_json()).is_err() {
+            crate::log_warn!("trace", "trace sink write failed; disabling the file sink");
+            state.sink = None;
+        }
+    }
+    if state.ring.len() >= RING_CAPACITY {
+        state.ring.pop_front();
+        state.dropped += 1;
+    }
+    state.ring.push_back(event);
+}
+
+/// A live span timer. Created by [`span`]; records one event (with its
+/// wall duration and accumulated fields) when dropped. When tracing is
+/// disabled the struct is inert — every method is a no-op on `None`.
+#[must_use = "a span records on drop; binding it to _ drops immediately"]
+pub struct Span {
+    active: Option<(Instant, &'static str, Vec<(&'static str, f64)>)>,
+}
+
+impl Span {
+    /// Attach a numeric telemetry field (no-op while disabled).
+    pub fn field(&mut self, name: &'static str, value: f64) {
+        if let Some((_, _, fields)) = self.active.as_mut() {
+            fields.push((name, value));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((start, kind, fields)) = self.active.take() {
+            record(kind, Some(start), fields);
+        }
+    }
+}
+
+/// Open a span of the given kind. The hot-path entry point: one relaxed
+/// counter increment plus the enabled branch when tracing is off.
+#[inline]
+pub fn span(kind: &'static str) -> Span {
+    SPANS_ENTERED.fetch_add(1, Ordering::Relaxed);
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Span { active: None };
+    }
+    Span {
+        active: Some((Instant::now(), kind, Vec::new())),
+    }
+}
+
+/// Record an instantaneous event (`dur_us` = 0) with the given fields.
+#[inline]
+pub fn event(kind: &'static str, fields: &[(&'static str, f64)]) {
+    SPANS_ENTERED.fetch_add(1, Ordering::Relaxed);
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    record(kind, None, fields.to_vec());
+}
+
+// ---------------------------------------------------------------------------
+// The always-on progress plane (admin PROGRESS).
+// ---------------------------------------------------------------------------
+
+/// Live factorization progress — a handful of relaxed atomics updated at
+/// every iteration boundary regardless of whether tracing is enabled, so
+/// the factorize admin listener's `PROGRESS` command answers without any
+/// coupling into the solver loop's data. All observational.
+pub mod progress {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::OnceLock;
+    use std::time::Instant;
+
+    static RUNNING: AtomicBool = AtomicBool::new(false);
+    static ITER: AtomicU64 = AtomicU64::new(0);
+    static MAX_ITERS: AtomicU64 = AtomicU64::new(0);
+    /// f64 bit patterns (NaN = "no sample yet")
+    static RESIDUAL_BITS: AtomicU64 = AtomicU64::new(f64::NAN.to_bits());
+    static OBJECTIVE_BITS: AtomicU64 = AtomicU64::new(f64::NAN.to_bits());
+    /// µs since the process origin at which the current run began
+    static STARTED_US: AtomicU64 = AtomicU64::new(0);
+
+    fn origin() -> Instant {
+        static ORIGIN: OnceLock<Instant> = OnceLock::new();
+        *ORIGIN.get_or_init(Instant::now)
+    }
+
+    fn now_us() -> u64 {
+        origin().elapsed().as_micros().min(u64::MAX as u128) as u64
+    }
+
+    /// Mark a run as started (called at the top of the solver loop).
+    /// `start_iter` > 0 on resumed runs.
+    pub fn begin(start_iter: usize, max_iters: usize) {
+        ITER.store(start_iter as u64, Ordering::Relaxed);
+        MAX_ITERS.store(max_iters as u64, Ordering::Relaxed);
+        RESIDUAL_BITS.store(f64::NAN.to_bits(), Ordering::Relaxed);
+        OBJECTIVE_BITS.store(f64::NAN.to_bits(), Ordering::Relaxed);
+        STARTED_US.store(now_us(), Ordering::Relaxed);
+        RUNNING.store(true, Ordering::Relaxed);
+    }
+
+    /// Publish one completed iteration.
+    pub fn update(iterations: usize, residual: f64, objective: Option<f64>) {
+        ITER.store(iterations as u64, Ordering::Relaxed);
+        RESIDUAL_BITS.store(residual.to_bits(), Ordering::Relaxed);
+        if let Some(o) = objective {
+            OBJECTIVE_BITS.store(o.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Mark the run as finished (the last published state survives).
+    pub fn finish() {
+        RUNNING.store(false, Ordering::Relaxed);
+    }
+
+    /// The admin `PROGRESS` response line: iteration counter, newest
+    /// residual/objective samples, elapsed wall time, and a linear ETA
+    /// extrapolated from the completed-iteration rate.
+    pub fn render() -> String {
+        let iter = ITER.load(Ordering::Relaxed);
+        let max = MAX_ITERS.load(Ordering::Relaxed);
+        if max == 0 {
+            return "OK idle".to_string();
+        }
+        let running = RUNNING.load(Ordering::Relaxed);
+        let mut out = format!(
+            "OK {} iteration={iter}/{max}",
+            if running { "running" } else { "done" }
+        );
+        let residual = f64::from_bits(RESIDUAL_BITS.load(Ordering::Relaxed));
+        if !residual.is_nan() {
+            out.push_str(&format!(" residual={residual:.6e}"));
+        }
+        let objective = f64::from_bits(OBJECTIVE_BITS.load(Ordering::Relaxed));
+        if !objective.is_nan() {
+            out.push_str(&format!(" objective={objective:.6e}"));
+        }
+        let elapsed_s =
+            now_us().saturating_sub(STARTED_US.load(Ordering::Relaxed)) as f64 / 1e6;
+        out.push_str(&format!(" elapsed_s={elapsed_s:.3}"));
+        if running && iter > 0 && max > iter {
+            let eta_s = elapsed_s / iter as f64 * (max - iter) as f64;
+            out.push_str(&format!(" eta_s={eta_s:.3}"));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace report: JSONL (file or ring dump) → markdown breakdown.
+// ---------------------------------------------------------------------------
+
+/// Aggregate per-span-kind statistics of parsed trace events.
+#[derive(Default)]
+struct SpanAgg {
+    count: u64,
+    total_us: f64,
+    max_us: f64,
+}
+
+/// Parse trace-file text (or a `TRACEDUMP` body) into event objects,
+/// enforcing the v1 header and ignoring unknown keys per the
+/// forward-compatibility rule. Trailing non-JSON lines (e.g. the admin
+/// dump's `# EOF`) are ignored.
+pub fn parse_trace(text: &str) -> Result<Vec<Json>, String> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or("empty trace")?;
+    let h = Json::parse(header).map_err(|e| format!("trace header: {e}"))?;
+    match h.get("schema").and_then(Json::as_str) {
+        Some(s) if s.starts_with("esnmf-trace-") => {}
+        Some(s) => return Err(format!("not an esnmf trace (schema {s:?})")),
+        None => return Err("trace header has no schema key".to_string()),
+    }
+    let mut events = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.starts_with('#') {
+            continue; // admin-dump terminator / future comments
+        }
+        let e = Json::parse(line).map_err(|e| format!("trace line {}: {e}", i + 2))?;
+        if e.get("span").and_then(Json::as_str).is_none() {
+            return Err(format!("trace line {}: no span key", i + 2));
+        }
+        events.push(e);
+    }
+    Ok(events)
+}
+
+fn field(e: &Json, name: &str) -> Option<f64> {
+    e.get(name).and_then(Json::as_f64)
+}
+
+/// Render the markdown per-phase time / convergence / sparsity breakdown
+/// of `esnmf trace-report` from parsed trace events.
+pub fn render_report(events: &[Json]) -> String {
+    let mut by_kind: BTreeMap<String, SpanAgg> = BTreeMap::new();
+    for e in events {
+        let kind = e.get("span").and_then(Json::as_str).unwrap_or("?");
+        let agg = by_kind.entry(kind.to_string()).or_default();
+        agg.count += 1;
+        let dur = field(e, "dur_us").unwrap_or(0.0);
+        agg.total_us += dur;
+        agg.max_us = agg.max_us.max(dur);
+    }
+    let mut out = String::from("# Trace report\n\n## Time by span kind\n\n");
+    out.push_str("| span | count | total_ms | mean_ms | max_ms |\n");
+    out.push_str("|---|---:|---:|---:|---:|\n");
+    for (kind, a) in &by_kind {
+        out.push_str(&format!(
+            "| {kind} | {} | {:.3} | {:.3} | {:.3} |\n",
+            a.count,
+            a.total_us / 1e3,
+            a.total_us / 1e3 / a.count as f64,
+            a.max_us / 1e3
+        ));
+    }
+
+    let mut iters: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("span").and_then(Json::as_str) == Some("iteration"))
+        .collect();
+    iters.sort_by(|a, b| {
+        field(a, "iter")
+            .partial_cmp(&field(b, "iter"))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    if !iters.is_empty() {
+        out.push_str("\n## Convergence\n\n| iter | residual | objective | ms |\n|---:|---:|---:|---:|\n");
+        for e in &iters {
+            let fmt = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x:.6e}"));
+            out.push_str(&format!(
+                "| {} | {} | {} | {:.3} |\n",
+                field(e, "iter").unwrap_or(0.0),
+                fmt(field(e, "residual")),
+                fmt(field(e, "objective")),
+                field(e, "dur_us").unwrap_or(0.0) / 1e3
+            ));
+        }
+    }
+
+    let selects: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("span").and_then(Json::as_str) == Some("select_pass"))
+        .collect();
+    let emits: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("span").and_then(Json::as_str) == Some("emit_pass"))
+        .collect();
+    if !selects.is_empty() || !emits.is_empty() {
+        out.push_str("\n## Sparsity\n\n");
+        if !selects.is_empty() {
+            let cand: f64 = selects.iter().filter_map(|e| field(e, "cand_nnz")).sum();
+            let taus: Vec<f64> = selects.iter().filter_map(|e| field(e, "tau")).collect();
+            out.push_str(&format!(
+                "- select passes: {} (candidate nnz total {}, mean tau {})\n",
+                selects.len(),
+                cand as u64,
+                if taus.is_empty() {
+                    "-".to_string()
+                } else {
+                    format!("{:.6e}", taus.iter().sum::<f64>() / taus.len() as f64)
+                }
+            ));
+        }
+        if !emits.is_empty() {
+            let kept: f64 = emits.iter().filter_map(|e| field(e, "nnz")).sum();
+            out.push_str(&format!(
+                "- emit passes: {} (post-enforcement nnz total {})\n",
+                emits.len(),
+                kept as u64
+            ));
+        }
+    }
+
+    let workers: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("span").and_then(Json::as_str) == Some("worker_summary"))
+        .collect();
+    if !workers.is_empty() {
+        out.push_str(
+            "\n## Workers\n\n| worker | requests | compute_ms | wait_ms | straggler_rounds | reassigned_spans |\n|---:|---:|---:|---:|---:|---:|\n",
+        );
+        for e in &workers {
+            out.push_str(&format!(
+                "| {} | {} | {:.3} | {:.3} | {} | {} |\n",
+                field(e, "worker").unwrap_or(-1.0),
+                field(e, "requests").unwrap_or(0.0),
+                field(e, "compute_us").unwrap_or(0.0) / 1e3,
+                field(e, "wait_us").unwrap_or(0.0) / 1e3,
+                field(e, "straggler_rounds").unwrap_or(0.0),
+                field(e, "reassigned_spans").unwrap_or(0.0),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tracer is process-global; tests that enable it serialize here.
+    fn trace_lock() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing_but_count() {
+        let _guard = trace_lock();
+        disable();
+        let before = spans_entered();
+        {
+            let mut s = span("test.noop");
+            s.field("x", 1.0);
+        }
+        event("test.noop_event", &[("y", 2.0)]);
+        assert_eq!(spans_entered(), before + 2);
+        assert!(!snapshot().iter().any(|e| e.span.starts_with("test.noop")));
+    }
+
+    #[test]
+    fn ring_collects_spans_with_fields_and_stays_bounded() {
+        let _guard = trace_lock();
+        enable(None).unwrap();
+        {
+            let mut s = span("test.work");
+            s.field("nnz", 42.0);
+        }
+        event("test.mark", &[("iter", 3.0)]);
+        let events = snapshot();
+        let work = events.iter().find(|e| e.span == "test.work").unwrap();
+        assert_eq!(work.fields, vec![("nnz", 42.0)]);
+        let mark = events.iter().find(|e| e.span == "test.mark").unwrap();
+        assert_eq!(mark.dur_us, 0);
+        assert!(mark.seq > work.seq, "seq is monotone");
+        // overflow evicts oldest, never grows past capacity
+        for _ in 0..RING_CAPACITY + 10 {
+            event("test.flood", &[]);
+        }
+        assert_eq!(snapshot().len(), RING_CAPACITY);
+        assert!(dropped() > 0);
+        assert!(!snapshot().iter().any(|e| e.span == "test.work"));
+        disable();
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_the_parser() {
+        let _guard = trace_lock();
+        enable(None).unwrap();
+        {
+            let mut s = span("iteration");
+            s.field("iter", 1.0);
+            s.field("residual", 0.25);
+        }
+        let text = ring_jsonl();
+        let events = parse_trace(&text).unwrap();
+        let it = events
+            .iter()
+            .find(|e| e.get("span").and_then(Json::as_str) == Some("iteration"))
+            .unwrap();
+        assert_eq!(it.get("iter").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(it.get("residual").and_then(Json::as_f64), Some(0.25));
+        assert!(it.get("seq").and_then(Json::as_f64).is_some());
+        assert!(it.get("t_us").and_then(Json::as_f64).is_some());
+        disable();
+    }
+
+    #[test]
+    fn file_sink_writes_versioned_jsonl() {
+        let _guard = trace_lock();
+        let path = std::env::temp_dir().join("esnmf_trace_sink_test.jsonl");
+        let _ = std::fs::remove_file(&path);
+        enable(Some(&path)).unwrap();
+        event("test.file_event", &[("v", 7.0)]);
+        disable();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with(&format!("{{\"schema\":\"{TRACE_SCHEMA}\"}}")));
+        let events = parse_trace(&text).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("v").and_then(Json::as_f64), Some(7.0));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn parser_rejects_wrong_schema_and_ignores_unknown_fields() {
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace("{\"schema\":\"other-v9\"}\n").is_err());
+        assert!(parse_trace("{\"nope\":1}\n").is_err());
+        // forward compatibility: unknown keys and future fields pass through
+        let text = "{\"schema\":\"esnmf-trace-v1\",\"future_header_key\":1}\n\
+                    {\"seq\":0,\"t_us\":1,\"span\":\"x\",\"dur_us\":2,\"new_field\":9}\n\
+                    # EOF\n";
+        let events = parse_trace(text).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("new_field").and_then(Json::as_f64), Some(9.0));
+        // an event line without a span key is corrupt, not ignored
+        assert!(parse_trace("{\"schema\":\"esnmf-trace-v1\"}\n{\"seq\":0}\n").is_err());
+    }
+
+    #[test]
+    fn report_renders_time_convergence_and_sparsity_sections() {
+        let text = "{\"schema\":\"esnmf-trace-v1\"}\n\
+            {\"seq\":0,\"t_us\":0,\"span\":\"iteration\",\"dur_us\":2000,\"iter\":1,\"residual\":0.5,\"objective\":0.9}\n\
+            {\"seq\":1,\"t_us\":2000,\"span\":\"iteration\",\"dur_us\":1000,\"iter\":2,\"residual\":0.25}\n\
+            {\"seq\":2,\"t_us\":100,\"span\":\"select_pass\",\"dur_us\":300,\"cand_nnz\":120,\"tau\":0.125}\n\
+            {\"seq\":3,\"t_us\":500,\"span\":\"emit_pass\",\"dur_us\":200,\"nnz\":60}\n\
+            {\"seq\":4,\"t_us\":3000,\"span\":\"worker_summary\",\"dur_us\":0,\"worker\":0,\"requests\":4,\"compute_us\":900,\"wait_us\":50,\"straggler_rounds\":1,\"reassigned_spans\":0}\n";
+        let events = parse_trace(text).unwrap();
+        let md = render_report(&events);
+        assert!(md.contains("| iteration | 2 | 3.000 | 1.500 | 2.000 |"), "{md}");
+        assert!(md.contains("## Convergence"), "{md}");
+        assert!(md.contains("| 1 | 5.000000e-1 | 9.000000e-1 | 2.000 |"), "{md}");
+        assert!(md.contains("| 2 | 2.500000e-1 | - | 1.000 |"), "{md}");
+        assert!(md.contains("## Sparsity"), "{md}");
+        assert!(md.contains("candidate nnz total 120"), "{md}");
+        assert!(md.contains("post-enforcement nnz total 60"), "{md}");
+        assert!(md.contains("## Workers"), "{md}");
+        assert!(md.contains("| 0 | 4 | 0.900 | 0.050 | 1 | 0 |"), "{md}");
+    }
+
+    #[test]
+    fn progress_renders_iteration_residual_and_eta() {
+        let _guard = trace_lock();
+        progress::begin(0, 10);
+        assert!(progress::render().starts_with("OK running iteration=0/10"));
+        progress::update(4, 0.125, Some(0.5));
+        let line = progress::render();
+        assert!(line.contains("iteration=4/10"), "{line}");
+        assert!(line.contains("residual=1.250000e-1"), "{line}");
+        assert!(line.contains("objective=5.000000e-1"), "{line}");
+        assert!(line.contains("elapsed_s="), "{line}");
+        assert!(line.contains("eta_s="), "{line}");
+        progress::finish();
+        let line = progress::render();
+        assert!(line.starts_with("OK done"), "{line}");
+        assert!(!line.contains("eta_s="), "no ETA once finished: {line}");
+    }
+}

@@ -1,0 +1,264 @@
+//! Tracing-plane acceptance tests: tracing is telemetry, never an input
+//! — factors are bit-identical with tracing on or off — and a traced run
+//! (local blocked, sequential, or distributed) must cover every span
+//! kind of the taxonomy with parseable versioned JSONL that
+//! `trace-report` can render.
+
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Duration;
+
+use esnmf::coordinator::{run_distributed_on, run_worker, DistOptions};
+use esnmf::corpus::{generate_tdm, reuters_sim, Scale};
+use esnmf::io::CorpusStore;
+use esnmf::nmf::{
+    factorize, factorize_corpus, factorize_sequential, NmfOptions, NmfResult, SequentialOptions,
+    SparsityMode,
+};
+use esnmf::sparse::TieMode;
+use esnmf::util::json::Json;
+use esnmf::util::trace;
+
+/// The tracer is process-global; every test that enables it serializes
+/// here (the library's own trace tests have their own lock — different
+/// process, different binary).
+fn trace_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+fn temp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("esnmf_it_trace_{name}"))
+}
+
+/// Global enforcement with block_rows well below the corpus height, so
+/// the run exercises the two-pass select/emit machinery over real
+/// multi-block spans.
+fn enforced_opts() -> NmfOptions {
+    let mut opts = NmfOptions::new(4)
+        .with_iters(3)
+        .with_seed(0x7ace)
+        .with_sparsity(SparsityMode::both(60, 140))
+        .with_threads(2)
+        .with_block_rows(3);
+    opts.tie_mode = TieMode::Exact;
+    opts
+}
+
+fn span_of(e: &Json) -> &str {
+    e.get("span").and_then(Json::as_str).unwrap_or("?")
+}
+
+fn field(e: &Json, name: &str) -> Option<f64> {
+    e.get(name).and_then(Json::as_f64)
+}
+
+fn kinds_of(events: &[Json]) -> Vec<String> {
+    let mut kinds: Vec<String> = events.iter().map(|e| span_of(e).to_string()).collect();
+    kinds.sort();
+    kinds.dedup();
+    kinds
+}
+
+#[test]
+fn traced_run_is_bit_identical_and_covers_every_local_span_kind() {
+    let _guard = trace_lock();
+    trace::disable();
+    let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 0x7ace);
+    let opts = enforced_opts();
+
+    let ck_plain = temp("plain.esnmf");
+    let ck_traced = temp("traced.esnmf");
+    let trace_path = temp("local.trace.jsonl");
+    for p in [&ck_plain, &ck_traced, &trace_path] {
+        let _ = std::fs::remove_file(p);
+    }
+
+    let plain = factorize(&tdm, &opts.clone().with_checkpoint(&ck_plain, 2));
+    trace::enable(Some(&trace_path)).unwrap();
+    let traced = factorize(&tdm, &opts.clone().with_checkpoint(&ck_traced, 2));
+    trace::disable();
+
+    // telemetry, never an input: the traced run is byte-identical
+    assert_eq!(plain.u, traced.u, "U with tracing on vs off");
+    assert_eq!(plain.v, traced.v, "V with tracing on vs off");
+    assert_eq!(plain.residuals, traced.residuals, "residuals");
+    assert_eq!(plain.digest(), traced.digest(), "digest");
+
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let events = trace::parse_trace(&text).expect("trace file parses");
+    let kinds = kinds_of(&events);
+    for want in [
+        "iteration",
+        "half_step_v",
+        "half_step_u",
+        "select_pass",
+        "emit_pass",
+        "error_pass",
+        "checkpoint",
+    ] {
+        assert!(kinds.iter().any(|k| k == want), "missing {want}: {kinds:?}");
+    }
+
+    // iteration spans carry convergence telemetry, one per iteration
+    let iters: Vec<&Json> = events.iter().filter(|e| span_of(e) == "iteration").collect();
+    assert_eq!(iters.len(), traced.iterations, "one iteration span per iter");
+    for e in &iters {
+        assert!(field(e, "iter").is_some(), "iteration has iter field");
+        assert!(field(e, "residual").is_some(), "iteration has residual");
+    }
+
+    // spans nest: every half-step window sits inside some iteration
+    // window (±5 µs for microsecond truncation on both endpoints)
+    for e in events.iter().filter(|e| span_of(e).starts_with("half_step_")) {
+        let t0 = field(e, "t_us").unwrap();
+        let t1 = t0 + field(e, "dur_us").unwrap();
+        let contained = iters.iter().any(|it| {
+            let it0 = field(it, "t_us").unwrap();
+            let it1 = it0 + field(it, "dur_us").unwrap();
+            it0 <= t0 + 5.0 && t1 <= it1 + 5.0
+        });
+        assert!(contained, "{} span outside every iteration window", span_of(e));
+    }
+
+    // select passes record the order-statistic threshold and candidate
+    // volume; emit passes the post-enforcement nnz
+    let select = events.iter().find(|e| span_of(e) == "select_pass").unwrap();
+    assert!(field(select, "cand_nnz").is_some_and(|v| v > 0.0));
+    assert!(field(select, "tau").is_some());
+    let emit = events.iter().find(|e| span_of(e) == "emit_pass").unwrap();
+    assert!(field(emit, "nnz").is_some_and(|v| v > 0.0));
+
+    // and the report renderer accepts the real thing
+    let md = trace::render_report(&events);
+    assert!(md.contains("## Time by span kind"), "{md}");
+    assert!(md.contains("| iteration |"), "{md}");
+    assert!(md.contains("## Convergence"), "{md}");
+    assert!(md.contains("## Sparsity"), "{md}");
+
+    for p in [&ck_plain, &ck_traced, &trace_path] {
+        std::fs::remove_file(p).unwrap();
+    }
+}
+
+#[test]
+fn sequential_run_records_its_own_iteration_spans() {
+    let _guard = trace_lock();
+    let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 0x5e9);
+    let sopts = SequentialOptions::new(2, 2)
+        .with_budgets(40, 90)
+        .with_seed(0x5e9)
+        .with_threads(1)
+        .with_block_rows(4);
+
+    trace::enable(None).unwrap();
+    let r = factorize_sequential(&tdm, &sopts);
+    trace::disable();
+    assert_eq!(r.u.cols, 2, "rank = blocks × block_topics");
+
+    let events = trace::parse_trace(&trace::ring_jsonl()).unwrap();
+    let kinds = kinds_of(&events);
+    for want in ["iteration", "half_step_v", "half_step_u", "error_pass"] {
+        assert!(kinds.iter().any(|k| k == want), "missing {want}: {kinds:?}");
+    }
+    // block × inner loop: 2 blocks × 2 inner iterations
+    let n_iters = events.iter().filter(|e| span_of(e) == "iteration").count();
+    assert_eq!(n_iters, 4, "sequential iteration spans");
+}
+
+/// Spawn in-process workers against an ephemeral loopback listener and
+/// run the coordinator (the integration_distributed idiom).
+fn run_with_workers(
+    store: &CorpusStore,
+    store_path: &Path,
+    opts: &NmfOptions,
+    workers: usize,
+) -> NmfResult {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let objective = opts.objective;
+    let handles: Vec<_> = (0..workers)
+        .map(|_| {
+            let path = store_path.to_path_buf();
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&path, &addr, objective, 1))
+        })
+        .collect();
+    let dopts = DistOptions {
+        listen: addr,
+        workers,
+        timeout: Duration::from_secs(30),
+    };
+    let result = run_distributed_on(listener, store, opts, &dopts).expect("distributed run");
+    for h in handles {
+        h.join().unwrap().expect("worker exits cleanly");
+    }
+    result
+}
+
+#[test]
+fn distributed_trace_covers_scatter_merge_and_worker_totals() {
+    let _guard = trace_lock();
+    let path = temp("dist.estdm");
+    let _ = std::fs::remove_file(&path);
+    let tdm = generate_tdm(&reuters_sim(Scale::Tiny), 0xd7ace);
+    CorpusStore::write(&path, &tdm, 5).unwrap();
+    let store = CorpusStore::open(&path).unwrap();
+    let opts = enforced_opts();
+
+    let baseline = factorize_corpus(&store, &opts);
+    trace::enable(None).unwrap();
+    let dist = run_with_workers(&store, &path, &opts, 2);
+    trace::disable();
+    assert_eq!(baseline.digest(), dist.digest(), "traced distributed digest");
+
+    let events = trace::parse_trace(&trace::ring_jsonl()).unwrap();
+    let kinds = kinds_of(&events);
+    for want in ["scatter_select", "scatter_emit", "merge", "worker_summary", "dist_totals"] {
+        assert!(kinds.iter().any(|k| k == want), "missing {want}: {kinds:?}");
+    }
+
+    // scatter spans record the batch geometry
+    let scatter = events.iter().find(|e| span_of(e) == "scatter_emit").unwrap();
+    assert!(field(scatter, "n_blocks").is_some_and(|v| v > 0.0));
+    assert_eq!(field(scatter, "workers"), Some(2.0));
+    assert!(field(scatter, "rounds").is_some_and(|v| v >= 1.0));
+
+    // per-worker summaries sum to the coordinator totals, counter by
+    // counter — the invariant the CI trace smoke re-checks end-to-end
+    let workers: Vec<&Json> = events
+        .iter()
+        .filter(|e| span_of(e) == "worker_summary")
+        .collect();
+    assert_eq!(workers.len(), 2, "one summary per admitted worker");
+    let totals = events.iter().find(|e| span_of(e) == "dist_totals").unwrap();
+    assert_eq!(field(totals, "workers"), Some(2.0));
+    let counter_kinds = [
+        "requests",
+        "compute_us",
+        "wait_us",
+        "items",
+        "straggler_rounds",
+        "reassigned_spans",
+    ];
+    for kind in counter_kinds {
+        let sum: f64 = workers.iter().filter_map(|e| field(e, kind)).sum();
+        assert_eq!(Some(sum), field(totals, kind), "worker {kind} sums to total");
+    }
+    assert!(
+        field(totals, "requests").is_some_and(|v| v > 0.0),
+        "workers actually served requests"
+    );
+    for w in &workers {
+        assert_eq!(field(w, "alive"), Some(1.0), "no worker died in this run");
+    }
+
+    // the report's worker table renders from the same events
+    let md = trace::render_report(&events);
+    assert!(md.contains("## Workers"), "{md}");
+
+    std::fs::remove_file(&path).unwrap();
+}
